@@ -1,0 +1,79 @@
+//! Design-space exploration: the paper's §5 hardware story — sweep chip
+//! configurations, find the economical ones, and package them on an
+//! interposer.
+//!
+//! ```bash
+//! cargo run --release --example design_space
+//! ```
+
+use memclos::tech::{ChipTech, InterposerTech, MemTech};
+use memclos::topology::{ClosSpec, MeshSpec};
+use memclos::util::table::{f, Table};
+use memclos::vlsi::{ClosFloorplan, InterposerPlan, MeshFloorplan};
+
+fn main() -> anyhow::Result<()> {
+    let chip = ChipTech::default();
+    let ip = InterposerTech::default();
+
+    println!("== single-chip design space (folded Clos vs 2D mesh) ==\n");
+    let mut t = Table::new(&[
+        "tiles", "mem KB", "clos mm^2", "econ", "mesh mm^2", "econ", "clos/mesh",
+    ]);
+    let mut economical = Vec::new();
+    for &tiles in &[64usize, 256, 1024] {
+        for &mem in &[64u32, 128, 256, 512] {
+            let cspec = ClosSpec { tiles, tiles_per_chip: tiles.max(256), ..Default::default() };
+            let c = ClosFloorplan::plan(&cspec, mem, &chip)?;
+            let bx = ((tiles / 16) as f64).sqrt() as usize;
+            let mspec = MeshSpec { tiles, tiles_per_block: 16, chip_blocks_x: bx.max(1) };
+            let m = MeshFloorplan::plan(&mspec, mem, &chip)?;
+            t.row(&[
+                tiles.to_string(),
+                mem.to_string(),
+                f(c.area_mm2, 1),
+                if c.is_economical(&chip) { "*".into() } else { "".into() },
+                f(m.area_mm2, 1),
+                if m.is_economical(&chip) { "*".into() } else { "".into() },
+                f(c.area_mm2 / m.area_mm2, 2),
+            ]);
+            if c.is_economical(&chip) {
+                economical.push((tiles, mem, c));
+            }
+        }
+    }
+    println!("{}", t.render());
+
+    println!("== packaging the economical Clos chips on an interposer ==\n");
+    let mut t2 = Table::new(&[
+        "chip", "chips", "system tiles", "memory MB", "interposer mm^2", "channel %",
+        "wire delay ns",
+    ]);
+    for (tiles, mem, fp) in &economical {
+        for chips in [4usize, 16] {
+            let plan = InterposerPlan::clos(chips, fp, &ip)?;
+            let system_tiles = chips * fp.tiles;
+            t2.row(&[
+                format!("{tiles}t/{mem}KB"),
+                chips.to_string(),
+                system_tiles.to_string(),
+                ((system_tiles as u64 * *mem as u64) / 1024).to_string(),
+                f(plan.area_mm2, 0),
+                f(plan.channel_fraction() * 100.0, 1),
+                format!("{}-{}", f(plan.wire_delay_min_ns, 1), f(plan.wire_delay_max_ns, 1)),
+            ]);
+        }
+    }
+    println!("{}", t2.render());
+
+    println!("== why SRAM tiles (Table 4) ==\n");
+    for m in MemTech::all() {
+        println!(
+            "  {:<11} {:>9.1} KB/mm^2, {:>4.1} ns cycle -> 128 KB costs {:.3} mm^2",
+            m.name(),
+            m.density_kb_per_mm2(),
+            m.cycle_ns(),
+            m.area_for_kb(128.0)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! Quickstart: build one emulated-memory design point and compare it to
+//! the DDR3 baseline.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use memclos::emulation::{EmulationSetup, SequentialMachine, TopologyKind};
+
+fn main() -> anyhow::Result<()> {
+    // A 1,024-tile folded-Clos system (4 chips of 256 tiles on a
+    // silicon interposer), 128 KB of SRAM per tile, emulating one large
+    // memory over 1,023 tiles (the client runs on the remaining tile).
+    let setup = EmulationSetup::default_tech(TopologyKind::Clos, 1024, 128, 1023)?;
+
+    let capacity_mb = 1023 * 128 / 1024;
+    println!("emulated memory: {capacity_mb} MB over 1023 tiles ({} chips)", setup.chips);
+
+    // Average random-access latency from the analytic model (exact
+    // expectation over the address space).
+    let latency = setup.expected_latency();
+
+    // The sequential baseline: the same processor + DDR3 DRAM, measured
+    // by the cycle-level simulator (paper: ~35 ns).
+    let seq = SequentialMachine::with_measured_dram(1);
+
+    println!("emulated access latency : {latency:.1} cycles ({latency:.1} ns at 1 GHz)");
+    println!("DDR3 baseline           : {:.1} ns", seq.dram_ns);
+    println!("absolute latency factor : {:.2}x", latency / seq.dram_ns);
+
+    // What that means for a real program (Dhrystone-like mix).
+    let mix = memclos::workload::DHRYSTONE_MIX;
+    let slowdown = memclos::workload::predict_slowdown(&mix, latency, seq.dram_ns);
+    println!(
+        "Dhrystone-mix slowdown  : {slowdown:.2}x   (paper: \"a factor of only 2 to 3\")"
+    );
+    Ok(())
+}

@@ -1,0 +1,101 @@
+"""AOT lowering: JAX/Pallas model -> HLO text artifacts.
+
+Run once via `make artifacts`:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one `<name>.hlo.txt` per (entry point, batch size) plus a manifest.
+HLO *text* is the interchange format, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.latency import PARAM_SLOTS
+
+# Batch sizes the latency engine is lowered for.  4096 is the kernel
+# block size (single grid step, used by fast tests); 65536 is the default
+# hot-path batch; the larger sizes exist for the §Perf batch-size sweep.
+LATENCY_BATCHES = (4096, 16384, 65536, 262144)
+MIX_POINTS = 256
+
+CONTRACT_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_latency_batch(n: int) -> str:
+    addr = jax.ShapeDtypeStruct((n,), jnp.int32)
+    ip = jax.ShapeDtypeStruct((PARAM_SLOTS,), jnp.int32)
+    fp = jax.ShapeDtypeStruct((PARAM_SLOTS,), jnp.float32)
+    return to_hlo_text(jax.jit(model.latency_batch).lower(addr, ip, fp))
+
+
+def lower_mix_sweep(m: int) -> str:
+    v = jax.ShapeDtypeStruct((m,), jnp.float32)
+    s = jax.ShapeDtypeStruct((1,), jnp.float32)
+    return to_hlo_text(jax.jit(model.mix_sweep).lower(v, v, v, s))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--latency-batches",
+        type=int,
+        nargs="*",
+        default=list(LATENCY_BATCHES),
+        help="batch sizes to lower latency_batch for",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"contract_version": CONTRACT_VERSION, "artifacts": []}
+
+    for n in args.latency_batches:
+        name = f"latency_batch_{n}"
+        text = lower_latency_batch(n)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {"name": name, "inputs": [f"s32[{n}]", f"s32[{PARAM_SLOTS}]", f"f32[{PARAM_SLOTS}]"]}
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    name = f"mix_sweep_{MIX_POINTS}"
+    text = lower_mix_sweep(MIX_POINTS)
+    path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    manifest["artifacts"].append(
+        {
+            "name": name,
+            "inputs": [f"f32[{MIX_POINTS}]"] * 3 + ["f32[1]"],
+        }
+    )
+    print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

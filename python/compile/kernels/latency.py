@@ -1,0 +1,162 @@
+"""L1 — Pallas kernel: per-access emulated-memory round-trip latency.
+
+This is the numeric hot spot of the reproduction: figures 9-11 of the
+paper need the average latency of random accesses to the emulated memory
+for many (topology, system size, emulation size) design points.  The
+kernel evaluates the analytic model of paper §6.3 for a whole batch of
+addresses at once:
+
+    t_closed(s,t) = 2*t_tile + t_serial
+                    + (d(s,t)+1) * (t_open + t_switch*c_cont)
+                    + sum of link latencies on the path
+    round_trip    = 2 * t_closed + t_mem
+
+Topology distances are *arithmetic* in the tile index (proved against BFS
+on the rust side):
+
+* folded Clos (degree-32 switches, 16 tiles/edge switch, 256 tiles/chip):
+  d = 0 (same edge switch), 2 (same chip), 4 (inter-chip, 3-stage);
+* 2D mesh of 16-tile blocks: d = Manhattan distance between blocks, with
+  an extra per-chip-crossing wire penalty.
+
+Parameter encoding (contract v1) is shared with
+`rust/src/runtime/engine.rs` — see the table there.  Inputs are
+`addresses i32[N]`, `iparams i32[16]`, `fparams f32[16]`; output is
+`latency f32[N]` in cycles.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the batch is blocked
+into BLOCK-sized VMEM tiles over a 1-D grid; all control flow is
+`jnp.where` selects so the kernel is divergence-free on the VPU.  On this
+image Pallas must run with `interpret=True` (CPU PJRT cannot execute
+Mosaic custom-calls); the same HLO is what the rust runtime loads.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Addresses per grid step.  f32/i32 working set per step is ~6 vectors of
+# BLOCK elements (~400 KB at 16384) — comfortably inside a TPU core's
+# 16 MB VMEM.  Perf note (EXPERIMENTS.md §Perf): 4096 was the initial
+# choice; 16384 quarters the grid-loop trip count, which dominates the
+# CPU-PJRT execution of the interpret-lowered while loop (+47% batch
+# throughput at 65k, +3.4x at 262k).
+BLOCK = 16384
+
+# iparams slots (contract v1)
+IP_TOPO = 0
+IP_LOG2_WPT = 1
+IP_K = 2
+IP_LOG2_G0 = 3
+IP_LOG2_G1 = 4
+IP_LOG2_BLOCK = 5
+IP_BLOCKS_X = 6
+IP_CHIP_BLOCKS_X = 7
+IP_ROUTE_OPEN = 8
+IP_CLIENT = 9
+IP_TILES = 10
+
+# fparams slots (contract v1)
+FP_T_TILE = 0
+FP_T_SWITCH = 1
+FP_T_OPEN = 2
+FP_C_CONT = 3
+FP_SER_INTRA = 4
+FP_SER_INTER = 5
+FP_T_MEM = 6
+FP_LINK_EDGE_CORE = 7
+FP_LINK_CORE_SYS = 8
+FP_MESH_LINK = 9
+FP_MESH_CROSS_EXTRA = 10
+
+PARAM_SLOTS = 16
+
+
+def _latency_block(addr, ip, fp):
+    """Latency formula over one block of addresses (pure jnp ops).
+
+    `addr` is i32[B]; `ip` i32[16]; `fp` f32[16].  Returns f32[B].
+    Shared between the Pallas kernel body and nothing else — the oracle
+    in ref.py re-derives the same model independently.
+    """
+    i32 = jnp.int32
+    f32 = jnp.float32
+
+    client = ip[IP_CLIENT]
+    # Which memory tile holds the address: block distribution over the k
+    # emulation tiles, allocated in tile-index order starting just after
+    # the client's own tile (so small emulations stay on the client's
+    # switch/block, wherever the client sits).
+    r = jnp.right_shift(addr, ip[IP_LOG2_WPT])
+    m = jnp.remainder(client + i32(1) + r, ip[IP_TILES])
+
+    # --- folded Clos ---------------------------------------------------
+    same_edge = jnp.right_shift(m, ip[IP_LOG2_G0]) == jnp.right_shift(client, ip[IP_LOG2_G0])
+    same_chip = jnp.right_shift(m, ip[IP_LOG2_G1]) == jnp.right_shift(client, ip[IP_LOG2_G1])
+    d_clos = jnp.where(same_edge, i32(0), jnp.where(same_chip, i32(2), i32(4)))
+    link_clos = jnp.where(
+        same_edge,
+        f32(0),
+        jnp.where(
+            same_chip,
+            2.0 * fp[FP_LINK_EDGE_CORE],
+            2.0 * fp[FP_LINK_EDGE_CORE] + 2.0 * fp[FP_LINK_CORE_SYS],
+        ),
+    )
+    ser_clos = jnp.where(same_chip, fp[FP_SER_INTRA], fp[FP_SER_INTER])
+
+    # --- 2D mesh --------------------------------------------------------
+    bm = jnp.right_shift(m, ip[IP_LOG2_BLOCK])
+    bc = jnp.right_shift(client, ip[IP_LOG2_BLOCK])
+    bx = jnp.remainder(bm, ip[IP_BLOCKS_X])
+    by = bm // ip[IP_BLOCKS_X]
+    cx = jnp.remainder(bc, ip[IP_BLOCKS_X])
+    cy = bc // ip[IP_BLOCKS_X]
+    hops = jnp.abs(bx - cx) + jnp.abs(by - cy)
+    cbx = ip[IP_CHIP_BLOCKS_X]
+    cross = jnp.abs(bx // cbx - cx // cbx) + jnp.abs(by // cbx - cy // cbx)
+    link_mesh = hops.astype(f32) * fp[FP_MESH_LINK] + cross.astype(f32) * fp[FP_MESH_CROSS_EXTRA]
+    ser_mesh = jnp.where(cross > 0, fp[FP_SER_INTER], fp[FP_SER_INTRA])
+
+    # --- select topology, apply the §6.3 formula ------------------------
+    is_clos = ip[IP_TOPO] == 0
+    d = jnp.where(is_clos, d_clos, hops).astype(f32)
+    link = jnp.where(is_clos, link_clos, link_mesh)
+    ser = jnp.where(is_clos, ser_clos, ser_mesh)
+
+    t_open_eff = fp[FP_T_OPEN] * (1.0 - ip[IP_ROUTE_OPEN].astype(f32))
+    one_way = (
+        2.0 * fp[FP_T_TILE]
+        + ser
+        + (d + 1.0) * (t_open_eff + fp[FP_T_SWITCH] * fp[FP_C_CONT])
+        + link
+    )
+    return 2.0 * one_way + fp[FP_T_MEM]
+
+
+def _kernel(addr_ref, ip_ref, fp_ref, lat_ref):
+    lat_ref[...] = _latency_block(addr_ref[...], ip_ref[...], fp_ref[...])
+
+
+def latency_pallas(addresses, iparams, fparams):
+    """Per-access round-trip latency (cycles) for a batch of addresses.
+
+    addresses: i32[N] with N a multiple of BLOCK (or N < BLOCK, handled
+    as a single undersized block); iparams/fparams per contract v1.
+    """
+    n = addresses.shape[0]
+    block = min(BLOCK, n)
+    if n % block != 0:
+        raise ValueError(f"batch size {n} not a multiple of block {block}")
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((PARAM_SLOTS,), lambda i: (0,)),
+            pl.BlockSpec((PARAM_SLOTS,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(addresses, iparams, fparams)

@@ -1,0 +1,110 @@
+"""Pure-jnp oracle for the latency kernel.
+
+Independent re-derivation of the paper §6.3 model, used by pytest to
+check the Pallas kernel.  Written in a deliberately different style
+(per-case latency tables assembled first, then gathered by case index)
+so a transcription error in one implementation does not hide in the
+other.
+"""
+
+import jax.numpy as jnp
+
+from . import latency as L
+
+
+def latency_ref(addresses, iparams, fparams):
+    """Reference per-access round-trip latency (cycles), f32[N]."""
+    ip = [int(iparams[i]) for i in range(L.PARAM_SLOTS)]
+    fp = [float(fparams[i]) for i in range(L.PARAM_SLOTS)]
+
+    topo = ip[L.IP_TOPO]
+    client = ip[L.IP_CLIENT]
+    addr = addresses.astype(jnp.int32)
+
+    r = addr >> ip[L.IP_LOG2_WPT]
+    m = (client + 1 + r) % ip[L.IP_TILES]
+
+    if topo == 0:
+        # Folded Clos: classify each access into one of three cases and
+        # build the (d, link, ser) triple per case.
+        case = jnp.where(
+            (m >> ip[L.IP_LOG2_G0]) == (client >> ip[L.IP_LOG2_G0]),
+            0,
+            jnp.where((m >> ip[L.IP_LOG2_G1]) == (client >> ip[L.IP_LOG2_G1]), 1, 2),
+        )
+        d_table = jnp.array([0.0, 2.0, 4.0], dtype=jnp.float32)
+        link_table = jnp.array(
+            [
+                0.0,
+                2.0 * fp[L.FP_LINK_EDGE_CORE],
+                2.0 * fp[L.FP_LINK_EDGE_CORE] + 2.0 * fp[L.FP_LINK_CORE_SYS],
+            ],
+            dtype=jnp.float32,
+        )
+        ser_table = jnp.array(
+            [fp[L.FP_SER_INTRA], fp[L.FP_SER_INTRA], fp[L.FP_SER_INTER]],
+            dtype=jnp.float32,
+        )
+        d = d_table[case]
+        link = link_table[case]
+        ser = ser_table[case]
+    else:
+        # 2D mesh: Manhattan distance between blocks + chip crossings.
+        bw = ip[L.IP_BLOCKS_X]
+        cb = ip[L.IP_CHIP_BLOCKS_X]
+        bm = m >> ip[L.IP_LOG2_BLOCK]
+        bc = client >> ip[L.IP_LOG2_BLOCK]
+        bx, by = bm % bw, bm // bw
+        cx, cy = bc % bw, bc // bw
+        hops = jnp.abs(bx - cx) + jnp.abs(by - cy)
+        cross = jnp.abs(bx // cb - cx // cb) + jnp.abs(by // cb - cy // cb)
+        d = hops.astype(jnp.float32)
+        link = d * fp[L.FP_MESH_LINK] + cross.astype(jnp.float32) * fp[L.FP_MESH_CROSS_EXTRA]
+        ser = jnp.where(cross > 0, fp[L.FP_SER_INTER], fp[L.FP_SER_INTRA])
+
+    t_open_eff = fp[L.FP_T_OPEN] if ip[L.IP_ROUTE_OPEN] == 0 else 0.0
+    one_way = (
+        2.0 * fp[L.FP_T_TILE]
+        + ser
+        + (d + 1.0) * (t_open_eff + fp[L.FP_T_SWITCH] * fp[L.FP_C_CONT])
+        + link
+    )
+    return (2.0 * one_way + fp[L.FP_T_MEM]).astype(jnp.float32)
+
+
+def latency_ref_scalar(addr, iparams, fparams):
+    """Scalar python-float reference for a single address (third opinion
+    for hypothesis tests; no jnp vectorisation involved)."""
+    ip = [int(x) for x in iparams]
+    fp = [float(x) for x in fparams]
+    client = ip[L.IP_CLIENT]
+    r = int(addr) >> ip[L.IP_LOG2_WPT]
+    m = (client + 1 + r) % ip[L.IP_TILES]
+
+    if ip[L.IP_TOPO] == 0:
+        if (m >> ip[L.IP_LOG2_G0]) == (client >> ip[L.IP_LOG2_G0]):
+            d, link, ser = 0, 0.0, fp[L.FP_SER_INTRA]
+        elif (m >> ip[L.IP_LOG2_G1]) == (client >> ip[L.IP_LOG2_G1]):
+            d, link, ser = 2, 2 * fp[L.FP_LINK_EDGE_CORE], fp[L.FP_SER_INTRA]
+        else:
+            d = 4
+            link = 2 * fp[L.FP_LINK_EDGE_CORE] + 2 * fp[L.FP_LINK_CORE_SYS]
+            ser = fp[L.FP_SER_INTER]
+    else:
+        bw, cb = ip[L.IP_BLOCKS_X], ip[L.IP_CHIP_BLOCKS_X]
+        bm, bc = m >> ip[L.IP_LOG2_BLOCK], client >> ip[L.IP_LOG2_BLOCK]
+        bx, by = bm % bw, bm // bw
+        cx, cy = bc % bw, bc // bw
+        d = abs(bx - cx) + abs(by - cy)
+        cross = abs(bx // cb - cx // cb) + abs(by // cb - cy // cb)
+        link = d * fp[L.FP_MESH_LINK] + cross * fp[L.FP_MESH_CROSS_EXTRA]
+        ser = fp[L.FP_SER_INTER] if cross > 0 else fp[L.FP_SER_INTRA]
+
+    t_open_eff = 0.0 if ip[L.IP_ROUTE_OPEN] else fp[L.FP_T_OPEN]
+    one_way = (
+        2.0 * fp[L.FP_T_TILE]
+        + ser
+        + (d + 1.0) * (t_open_eff + fp[L.FP_T_SWITCH] * fp[L.FP_C_CONT])
+        + link
+    )
+    return 2.0 * one_way + fp[L.FP_T_MEM]

@@ -1,0 +1,48 @@
+"""L2 — the JAX compute graph lowered to the AOT artifacts.
+
+Two entry points, both pure functions of fixed-shape arrays (the shapes
+are frozen at lowering time by `aot.py`):
+
+* `latency_batch(addresses, iparams, fparams)` — calls the L1 Pallas
+  kernel for the per-access emulated-memory latency and fuses the batch
+  mean into the same HLO (one device round-trip for the rust hot path).
+
+* `mix_sweep(globals_, locals_, lat_emu, lat_seq)` — the §7.2/Fig 11
+  slowdown surface: expected cycles-per-instruction ratio between the
+  emulated-memory machine and the sequential DDR3 baseline over a vector
+  of instruction mixes.
+
+Python runs only at `make artifacts` time; the rust runtime executes the
+lowered HLO via PJRT.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.latency import latency_pallas
+
+
+def latency_batch(addresses, iparams, fparams):
+    """Per-access latency and its batch mean.
+
+    Returns ``(latency f32[N], mean f32[1])`` in cycles.
+    """
+    lat = latency_pallas(addresses, iparams, fparams)
+    return lat, jnp.mean(lat).reshape((1,))
+
+
+def mix_sweep(globals_, locals_, lat_emu, lat_seq):
+    """Slowdown of the emulation vs the sequential machine per mix.
+
+    ``globals_[i]`` / ``locals_[i]`` are the fractions of global- and
+    local-memory instructions in mix ``i`` (the remainder is non-memory).
+    ``lat_emu[i]`` is the average emulated global-access latency for the
+    design point paired with mix ``i``; ``lat_seq`` (shape ``(1,)``) is
+    the DRAM access latency of the baseline.  Local and non-memory
+    instructions cost one cycle on both machines (paper §6.1).
+
+    Returns ``(slowdown f32[M], cpi_emu f32[M], cpi_seq f32[M])``.
+    """
+    non_mem = 1.0 - globals_ - locals_
+    cpi_emu = non_mem + locals_ + globals_ * lat_emu
+    cpi_seq = non_mem + locals_ + globals_ * lat_seq
+    return cpi_emu / cpi_seq, cpi_emu, cpi_seq

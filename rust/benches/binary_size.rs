@@ -1,0 +1,26 @@
+//! Bench: regenerate the §7.3 binary-size comparison over the miniC
+//! corpus and time full corpus compilation with both backends.
+
+use memclos::cc::{compile, corpus, Backend};
+use memclos::figures::binary_size;
+use memclos::util::bench::Bench;
+
+fn main() {
+    let rows = binary_size::generate().expect("binary_size");
+    println!("{}", binary_size::render(&rows));
+
+    let mut b = Bench::new("binary_size");
+    b.iter("compile-corpus-direct", || {
+        corpus::all()
+            .iter()
+            .map(|p| compile(p.source, Backend::Direct).unwrap().binary_bytes())
+            .sum::<usize>()
+    });
+    b.iter("compile-corpus-emulated", || {
+        corpus::all()
+            .iter()
+            .map(|p| compile(p.source, Backend::Emulated).unwrap().binary_bytes())
+            .sum::<usize>()
+    });
+    b.report();
+}

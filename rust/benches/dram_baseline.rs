@@ -1,0 +1,27 @@
+//! Bench: the §6.1 DDR3 baseline measurement (paper: 35 ns single
+//! rank, 36 ns multi-rank) and the simulator's throughput.
+
+use memclos::dram::{measure_random_latency, DramConfig};
+use memclos::util::bench::Bench;
+
+fn main() {
+    println!("DDR3-1600 random-access latency (one transaction at a time):");
+    for ranks in [1usize, 2, 4, 8, 16] {
+        let m = measure_random_latency(DramConfig::with_ranks(ranks), 20_000, 7).unwrap();
+        println!(
+            "  {ranks:>2} rank(s) / {:>2} GB: {:.2} ns avg (sd {:.2})",
+            m.config.capacity_bytes() >> 30,
+            m.avg_ns,
+            m.stddev_ns
+        );
+    }
+
+    let mut b = Bench::new("dram_baseline");
+    b.iter("20k-accesses-1rank", || {
+        measure_random_latency(DramConfig::with_ranks(1), 20_000, 7).unwrap().avg_ns
+    });
+    b.iter("20k-accesses-4rank", || {
+        measure_random_latency(DramConfig::with_ranks(4), 20_000, 7).unwrap().avg_ns
+    });
+    b.report();
+}

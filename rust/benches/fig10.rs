@@ -1,0 +1,16 @@
+//! Bench: regenerate paper Fig 10 (benchmark slowdown vs emulation
+//! size) and time the sweep.
+
+use memclos::figures::{fig10, FigOpts};
+use memclos::util::bench::Bench;
+
+fn main() {
+    let opts = FigOpts::auto();
+    let rows = fig10::generate(&opts).expect("fig10");
+    println!("{}", fig10::render(&rows));
+
+    let mut b = Bench::new("fig10");
+    let exact = FigOpts::default();
+    b.iter("generate-exact", || fig10::generate(&exact).unwrap());
+    b.report();
+}

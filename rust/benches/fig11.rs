@@ -1,0 +1,16 @@
+//! Bench: regenerate paper Fig 11 (slowdown vs instruction mix) and
+//! time the sweep (uses the AOT mix-sweep artifact when available).
+
+use memclos::figures::{fig11, FigOpts};
+use memclos::util::bench::Bench;
+
+fn main() {
+    let opts = FigOpts::auto();
+    let rows = fig11::generate(&opts).expect("fig11");
+    println!("{}", fig11::render(&rows));
+
+    let mut b = Bench::new("fig11");
+    let exact = FigOpts::default();
+    b.iter("generate-exact", || fig11::generate(&exact).unwrap());
+    b.report();
+}

@@ -1,0 +1,16 @@
+//! Bench: regenerate paper Fig 5 (chip area vs tiles) and time the
+//! floorplan model.
+
+use memclos::figures::fig5;
+use memclos::tech::ChipTech;
+use memclos::util::bench::Bench;
+
+fn main() {
+    let tech = ChipTech::default();
+    let rows = fig5::generate(&tech).expect("fig5");
+    println!("{}", fig5::render(&rows, &tech));
+
+    let mut b = Bench::new("fig5");
+    b.iter("generate", || fig5::generate(&tech).unwrap());
+    b.report();
+}

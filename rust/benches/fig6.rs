@@ -1,0 +1,15 @@
+//! Bench: regenerate paper Fig 6 (component area share) and time it.
+
+use memclos::figures::fig6;
+use memclos::tech::ChipTech;
+use memclos::util::bench::Bench;
+
+fn main() {
+    let tech = ChipTech::default();
+    let rows = fig6::generate(&tech).expect("fig6");
+    println!("{}", fig6::render(&rows));
+
+    let mut b = Bench::new("fig6");
+    b.iter("generate", || fig6::generate(&tech).unwrap());
+    b.report();
+}

@@ -1,0 +1,16 @@
+//! Bench: regenerate paper Fig 7 (interposer area) and time it.
+
+use memclos::figures::fig7;
+use memclos::tech::{ChipTech, InterposerTech};
+use memclos::util::bench::Bench;
+
+fn main() {
+    let chip = ChipTech::default();
+    let ip = InterposerTech::default();
+    let rows = fig7::generate(&chip, &ip).expect("fig7");
+    println!("{}", fig7::render(&rows));
+
+    let mut b = Bench::new("fig7");
+    b.iter("generate", || fig7::generate(&chip, &ip).unwrap());
+    b.report();
+}

@@ -1,0 +1,24 @@
+//! Bench: regenerate paper Fig 9 (absolute emulated-memory latency vs
+//! emulation size) end-to-end — the production path uses the AOT XLA
+//! kernel when `artifacts/` exists; the exact native model otherwise.
+//! Both are timed for comparison.
+
+use memclos::coordinator::EvalMode;
+use memclos::figures::{fig9, FigOpts};
+use memclos::util::bench::Bench;
+
+fn main() {
+    let auto = FigOpts::auto();
+    let fig = fig9::generate(&auto).expect("fig9");
+    println!("{}", fig9::render(&fig));
+    println!("(mode: {:?})\n", auto.mode);
+
+    let mut b = Bench::new("fig9");
+    let exact = FigOpts { mode: EvalMode::Exact, ..FigOpts::default() };
+    b.iter("generate-exact", || fig9::generate(&exact).unwrap());
+    if matches!(auto.mode, EvalMode::XlaMc { .. }) {
+        let xla = FigOpts { mode: EvalMode::XlaMc { samples: 65_536, batch: 16_384 }, ..auto };
+        b.iter("generate-xla-16k-batches", || fig9::generate(&xla).unwrap());
+    }
+    b.report();
+}

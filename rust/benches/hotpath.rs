@@ -1,0 +1,64 @@
+//! Bench: the Monte-Carlo latency hot path — AOT XLA kernel vs the
+//! native rust evaluation, across batch sizes (the §Perf batch-size
+//! sweep in EXPERIMENTS.md comes from this bench).
+
+use memclos::emulation::{EmulationSetup, TopologyKind};
+use memclos::runtime::{ArtifactSet, LatencyEngine};
+use memclos::util::bench::{black_box, Bench};
+use memclos::util::rng::Rng;
+
+fn main() {
+    let setup = EmulationSetup::default_tech(TopologyKind::Clos, 4096, 128, 4095).unwrap();
+    let params = setup.kernel_params();
+    let space = setup.map.space_words();
+    let mut rng = Rng::new(42);
+
+    let mut b = Bench::new("hotpath");
+
+    // Native evaluation at the default batch.
+    let mut addrs = vec![0i32; 65_536];
+    rng.fill_addresses(space, &mut addrs);
+    let mut out = Vec::new();
+    b.iter("native-65536", || {
+        setup.native_batch(&addrs, &mut out);
+        black_box(out.len())
+    });
+    b.iter("exact-closed-form", || black_box(setup.expected_latency()));
+
+    // XLA engine across lowered batch sizes.
+    match ArtifactSet::new() {
+        Ok(set) => {
+            for batch in [4096usize, 16_384, 65_536, 262_144] {
+                let name = format!("latency_batch_{batch}");
+                if !set.available(&name) {
+                    eprintln!("(skipping {name}: artifact missing)");
+                    continue;
+                }
+                let engine = LatencyEngine::load(&set, batch).unwrap();
+                let mut buf = vec![0i32; batch];
+                rng.fill_addresses(space, &mut buf);
+                let label = format!("xla-{batch}");
+                b.iter(&label, || {
+                    let (_, mean) = engine.run(&buf, &params).unwrap();
+                    black_box(mean)
+                });
+                let label = format!("xla-mean-{batch}");
+                b.iter(&label, || black_box(engine.run_mean(&buf, &params).unwrap()));
+            }
+        }
+        Err(e) => eprintln!("(no PJRT client: {e})"),
+    }
+
+    b.report();
+
+    // Throughput summary: addresses per second per path.
+    println!("\nthroughput (addresses/s):");
+    for m in b.results() {
+        let batch: f64 = match m.name.as_str() {
+            "native-65536" => 65_536.0,
+            s if s.starts_with("xla-") => s[4..].parse().unwrap_or(0.0),
+            _ => continue,
+        };
+        println!("  {:<14} {:>12.0}", m.name, batch / m.median.as_secs_f64());
+    }
+}

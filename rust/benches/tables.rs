@@ -1,0 +1,12 @@
+//! Bench: regenerate the paper's parameter tables (Tables 1-5).
+
+use memclos::figures::tables;
+use memclos::util::bench::Bench;
+
+fn main() {
+    print!("{}", tables::render_all());
+
+    let mut b = Bench::new("tables");
+    b.iter("render-all", tables::render_all);
+    b.report();
+}

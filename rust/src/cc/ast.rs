@@ -1,0 +1,106 @@
+//! miniC abstract syntax.
+//!
+//! The language: 64-bit integers only; `global` scalars and arrays live
+//! in the (emulated or DRAM) global memory, `var` locals live on the
+//! tile-local stack.
+
+/// Binary operators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinOp {
+    /// `+`
+    Add,
+    /// `-`
+    Sub,
+    /// `*`
+    Mul,
+    /// `/` (quotient; lowered to a runtime loop-free shift sequence is
+    /// out of scope — codegen emits a helper call)
+    Div,
+    /// `%`
+    Mod,
+    /// `<`
+    Lt,
+    /// `>`
+    Gt,
+    /// `<=`
+    Le,
+    /// `>=`
+    Ge,
+    /// `==`
+    Eq,
+    /// `!=`
+    Ne,
+    /// `&`
+    And,
+    /// `|`
+    Or,
+    /// `^`
+    Xor,
+}
+
+/// Expressions.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    /// Integer literal.
+    Int(i64),
+    /// Local variable or parameter reference.
+    Local(String),
+    /// Global scalar reference.
+    GlobalVar(String),
+    /// Global array element: `name[index]`.
+    GlobalIndex(String, Box<Expr>),
+    /// Binary operation.
+    Bin(BinOp, Box<Expr>, Box<Expr>),
+    /// Function call.
+    Call(String, Vec<Expr>),
+}
+
+/// Statements.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Stmt {
+    /// `var name;` or `var name = expr;`
+    DeclLocal(String, Option<Expr>),
+    /// `name = expr;` (local)
+    AssignLocal(String, Expr),
+    /// `name = expr;` (global scalar)
+    AssignGlobal(String, Expr),
+    /// `name[idx] = expr;`
+    AssignIndex(String, Expr, Expr),
+    /// `if (cond) { .. } else { .. }`
+    If(Expr, Vec<Stmt>, Vec<Stmt>),
+    /// `while (cond) { .. }`
+    While(Expr, Vec<Stmt>),
+    /// `return expr;`
+    Return(Expr),
+    /// Bare call used for effect.
+    ExprStmt(Expr),
+}
+
+/// A function definition.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Function {
+    /// Name.
+    pub name: String,
+    /// Parameter names.
+    pub params: Vec<String>,
+    /// Body.
+    pub body: Vec<Stmt>,
+}
+
+/// A global declaration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GlobalDecl {
+    /// Name.
+    pub name: String,
+    /// Element count (1 for scalars).
+    pub size: u64,
+}
+
+/// A whole program.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Program {
+    /// Global data declarations (allocated in the emulated memory).
+    pub globals: Vec<GlobalDecl>,
+    /// Function definitions; execution starts at `main`.
+    pub functions: Vec<Function>,
+}

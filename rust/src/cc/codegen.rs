@@ -1,0 +1,518 @@
+//! miniC code generation.
+//!
+//! A simple stack-frame compiler: frames live in tile-local memory
+//! (`r14` is the frame pointer), expression temporaries spill to frame
+//! slots, and calls advance the frame by the caller's statically-known
+//! frame size. Global accesses go through the selected [`Backend`]:
+//!
+//! * [`Backend::Direct`] — `LoadGlobal`/`StoreGlobal` (the sequential
+//!   machine);
+//! * [`Backend::Emulated`] — the §2.1 channel sequences (the parallel
+//!   emulation), costing +2 instructions per load site and +3 per
+//!   store site — the source of the §7.3 binary growth.
+//!
+//! Register convention: `r0` return value, `r1` expression result,
+//! `r2`/`r3` scratch, `r5`/`r6` division scratch, `r14` frame pointer.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::ast::*;
+use super::sem::{analyse, Analysis};
+use crate::emulation::controller::{expand_load, expand_store};
+use crate::isa::encode::program_bytes;
+use crate::isa::inst::Inst;
+
+/// Global-memory backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Direct loads/stores (sequential baseline).
+    Direct,
+    /// §2.1 message-passing sequences (emulated memory).
+    Emulated,
+}
+
+/// A compiled program.
+#[derive(Clone, Debug)]
+pub struct CompiledProgram {
+    /// The instructions; execution starts at 0 and ends at `Halt`.
+    pub code: Vec<Inst>,
+    /// Backend used.
+    pub backend: Backend,
+    /// Words of global data the program declares.
+    pub global_words: u64,
+    /// Static count of global load sites.
+    pub load_sites: usize,
+    /// Static count of global store sites.
+    pub store_sites: usize,
+}
+
+impl CompiledProgram {
+    /// Encoded binary size in bytes (§7.3 metric).
+    pub fn binary_bytes(&self) -> usize {
+        program_bytes(&self.code)
+    }
+}
+
+/// Compile an analysed program for a backend.
+pub fn compile_analysis(a: &Analysis, backend: Backend) -> Result<CompiledProgram> {
+    let mut cg = Codegen {
+        backend,
+        layout: &a.global_layout,
+        code: Vec::new(),
+        func_offsets: HashMap::new(),
+        call_fixups: Vec::new(),
+        load_sites: 0,
+        store_sites: 0,
+    };
+
+    // Entry stub: zero the frame pointer, call main, halt.
+    cg.code.push(Inst::LoadImm { d: 14, imm: 0 });
+    cg.call_fixups.push((cg.code.len(), "main".to_string()));
+    cg.code.push(Inst::Call { target: 0 });
+    cg.code.push(Inst::Halt);
+
+    for f in &a.program.functions {
+        cg.function(f)?;
+    }
+
+    // Patch call targets.
+    for (site, name) in std::mem::take(&mut cg.call_fixups) {
+        let Some(&target) = cg.func_offsets.get(&name) else {
+            bail!("unresolved call to `{name}`");
+        };
+        cg.code[site] = Inst::Call { target: target as u32 };
+    }
+
+    Ok(CompiledProgram {
+        code: cg.code,
+        backend,
+        global_words: a.global_words,
+        load_sites: cg.load_sites,
+        store_sites: cg.store_sites,
+    })
+}
+
+/// Parse, analyse and compile a source string.
+pub fn compile(src: &str, backend: Backend) -> Result<CompiledProgram> {
+    let program = super::parser::parse_program(src)?;
+    let analysis = analyse(&program)?;
+    compile_analysis(&analysis, backend)
+}
+
+struct Codegen<'a> {
+    backend: Backend,
+    layout: &'a HashMap<String, u64>,
+    code: Vec<Inst>,
+    func_offsets: HashMap<String, usize>,
+    call_fixups: Vec<(usize, String)>,
+    load_sites: usize,
+    store_sites: usize,
+}
+
+/// Per-function compile state.
+struct Frame {
+    /// name -> frame slot.
+    slots: HashMap<String, i32>,
+    /// Next free local slot.
+    next_slot: i32,
+    /// First temporary slot.
+    temp_base: i32,
+    /// Current temporary depth.
+    temp_depth: i32,
+    /// Total frame size (params + saved fp + locals + temps).
+    frame_size: i32,
+}
+
+impl<'a> Codegen<'a> {
+    fn function(&mut self, f: &Function) -> Result<()> {
+        self.func_offsets.insert(f.name.clone(), self.code.len());
+
+        let nparams = f.params.len() as i32;
+        let nlocals = count_locals(&f.body) as i32;
+        let ntemps = max_temp_depth_block(&f.body) + 2;
+        let mut frame = Frame {
+            slots: HashMap::new(),
+            next_slot: nparams + 1, // locals follow params + saved fp
+            temp_base: nparams + 1 + nlocals,
+            temp_depth: 0,
+            frame_size: nparams + 1 + nlocals + ntemps,
+        };
+        for (i, p) in f.params.iter().enumerate() {
+            frame.slots.insert(p.clone(), i as i32);
+        }
+
+        self.block(&f.body, &mut frame)?;
+        // Implicit `return 0` for functions that fall off the end.
+        self.code.push(Inst::LoadImm { d: 0, imm: 0 });
+        self.code.push(Inst::Ret);
+        Ok(())
+    }
+
+    fn block(&mut self, stmts: &[Stmt], fr: &mut Frame) -> Result<()> {
+        for s in stmts {
+            self.stmt(s, fr)?;
+        }
+        Ok(())
+    }
+
+    fn stmt(&mut self, s: &Stmt, fr: &mut Frame) -> Result<()> {
+        match s {
+            Stmt::DeclLocal(name, init) => {
+                let slot = *fr.slots.entry(name.clone()).or_insert_with(|| {
+                    let sl = fr.next_slot;
+                    fr.next_slot += 1;
+                    sl
+                });
+                if let Some(e) = init {
+                    self.expr(e, fr)?;
+                    self.code.push(Inst::StoreLocal { s: 1, a: 14, off: slot });
+                }
+            }
+            Stmt::AssignLocal(name, e) => {
+                self.expr(e, fr)?;
+                let Some(&slot) = fr.slots.get(name) else { bail!("unknown local `{name}`") };
+                self.code.push(Inst::StoreLocal { s: 1, a: 14, off: slot });
+            }
+            Stmt::AssignGlobal(name, e) => {
+                self.expr(e, fr)?;
+                let addr = self.layout[name];
+                self.code.push(Inst::LoadImm { d: 3, imm: addr as i32 });
+                self.emit_global_store();
+            }
+            Stmt::AssignIndex(name, idx, e) => {
+                self.expr(idx, fr)?;
+                let t = self.push_temp(fr);
+                self.expr(e, fr)?;
+                self.pop_temp(fr, t, 2);
+                let base = self.layout[name];
+                self.code.push(Inst::LoadImm { d: 3, imm: base as i32 });
+                self.code.push(Inst::Add { d: 3, a: 3, b: 2 });
+                self.emit_global_store();
+            }
+            Stmt::If(cond, then_b, else_b) => {
+                self.expr(cond, fr)?;
+                let jz = self.emit_placeholder();
+                self.block(then_b, fr)?;
+                if else_b.is_empty() {
+                    let here = self.code.len();
+                    self.code[jz] =
+                        Inst::BranchZ { c: 1, offset: (here as i64 - jz as i64) as i32 };
+                } else {
+                    let jend = self.emit_placeholder();
+                    let else_start = self.code.len();
+                    self.code[jz] =
+                        Inst::BranchZ { c: 1, offset: (else_start as i64 - jz as i64) as i32 };
+                    self.block(else_b, fr)?;
+                    let end = self.code.len();
+                    self.code[jend] =
+                        Inst::Jump { offset: (end as i64 - jend as i64) as i32 };
+                }
+            }
+            Stmt::While(cond, body) => {
+                let loop_start = self.code.len();
+                self.expr(cond, fr)?;
+                let jz = self.emit_placeholder();
+                self.block(body, fr)?;
+                let back = self.code.len();
+                self.code.push(Inst::Jump {
+                    offset: (loop_start as i64 - back as i64) as i32,
+                });
+                let end = self.code.len();
+                self.code[jz] = Inst::BranchZ { c: 1, offset: (end as i64 - jz as i64) as i32 };
+            }
+            Stmt::Return(e) => {
+                self.expr(e, fr)?;
+                self.code.push(Inst::Mov { d: 0, s: 1 });
+                self.code.push(Inst::Ret);
+            }
+            Stmt::ExprStmt(e) => {
+                self.expr(e, fr)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Evaluate an expression into `r1`.
+    fn expr(&mut self, e: &Expr, fr: &mut Frame) -> Result<()> {
+        match e {
+            Expr::Int(v) => {
+                if *v > i32::MAX as i64 || *v < i32::MIN as i64 {
+                    bail!("literal {v} exceeds 32 bits");
+                }
+                self.code.push(Inst::LoadImm { d: 1, imm: *v as i32 });
+            }
+            Expr::Local(name) => {
+                let Some(&slot) = fr.slots.get(name) else { bail!("unknown local `{name}`") };
+                self.code.push(Inst::LoadLocal { d: 1, a: 14, off: slot });
+            }
+            Expr::GlobalVar(name) => {
+                let addr = self.layout[name];
+                self.code.push(Inst::LoadImm { d: 3, imm: addr as i32 });
+                self.emit_global_load();
+            }
+            Expr::GlobalIndex(name, idx) => {
+                self.expr(idx, fr)?;
+                let base = self.layout[name];
+                self.code.push(Inst::LoadImm { d: 3, imm: base as i32 });
+                self.code.push(Inst::Add { d: 3, a: 3, b: 1 });
+                self.emit_global_load();
+            }
+            Expr::Bin(op, l, r) => {
+                self.expr(l, fr)?;
+                let t = self.push_temp(fr);
+                self.expr(r, fr)?;
+                self.pop_temp(fr, t, 2); // left -> r2, right in r1
+                self.emit_binop(*op);
+            }
+            Expr::Call(name, args) => {
+                // Args go to the callee's parameter slots, which start
+                // at this frame's end.
+                for (i, a) in args.iter().enumerate() {
+                    self.expr(a, fr)?;
+                    self.code.push(Inst::StoreLocal {
+                        s: 1,
+                        a: 14,
+                        off: fr.frame_size + i as i32,
+                    });
+                }
+                // Save FP in the callee's saved-FP slot, advance FP.
+                self.code.push(Inst::StoreLocal {
+                    s: 14,
+                    a: 14,
+                    off: fr.frame_size + args.len() as i32,
+                });
+                self.code.push(Inst::AddI { d: 14, a: 14, imm: fr.frame_size });
+                self.call_fixups.push((self.code.len(), name.clone()));
+                self.code.push(Inst::Call { target: 0 });
+                // Restore FP from the callee frame's saved slot.
+                self.code.push(Inst::LoadLocal { d: 14, a: 14, off: args.len() as i32 });
+                self.code.push(Inst::Mov { d: 1, s: 0 });
+            }
+        }
+        Ok(())
+    }
+
+    fn emit_binop(&mut self, op: BinOp) {
+        use Inst::*;
+        // left = r2, right = r1, result -> r1
+        match op {
+            BinOp::Add => self.code.push(Add { d: 1, a: 2, b: 1 }),
+            BinOp::Sub => self.code.push(Sub { d: 1, a: 2, b: 1 }),
+            BinOp::Mul => self.code.push(Mul { d: 1, a: 2, b: 1 }),
+            BinOp::And => self.code.push(And { d: 1, a: 2, b: 1 }),
+            BinOp::Or => self.code.push(Or { d: 1, a: 2, b: 1 }),
+            BinOp::Xor => self.code.push(Xor { d: 1, a: 2, b: 1 }),
+            BinOp::Lt => self.code.push(Lt { d: 1, a: 2, b: 1 }),
+            BinOp::Gt => self.code.push(Lt { d: 1, a: 1, b: 2 }),
+            BinOp::Eq => self.code.push(Eq { d: 1, a: 2, b: 1 }),
+            BinOp::Ne => {
+                self.code.push(Eq { d: 1, a: 2, b: 1 });
+                self.code.push(LoadImm { d: 3, imm: 0 });
+                self.code.push(Eq { d: 1, a: 1, b: 3 });
+            }
+            BinOp::Le => {
+                // !(right < left)
+                self.code.push(Lt { d: 1, a: 1, b: 2 });
+                self.code.push(LoadImm { d: 3, imm: 0 });
+                self.code.push(Eq { d: 1, a: 1, b: 3 });
+            }
+            BinOp::Ge => {
+                // !(left < right)
+                self.code.push(Lt { d: 1, a: 2, b: 1 });
+                self.code.push(LoadImm { d: 3, imm: 0 });
+                self.code.push(Eq { d: 1, a: 1, b: 3 });
+            }
+            BinOp::Div | BinOp::Mod => {
+                // Non-negative division by repeated subtraction
+                // (corpus divisors are small constants).
+                // r3 = remainder, r5 = quotient, r6 = divisor.
+                self.code.push(Mov { d: 6, s: 1 });
+                self.code.push(Mov { d: 3, s: 2 });
+                self.code.push(LoadImm { d: 5, imm: 0 });
+                // loop: r1 = rem < div ; if r1 goto end
+                self.code.push(Lt { d: 1, a: 3, b: 6 });
+                self.code.push(BranchNZ { c: 1, offset: 4 });
+                self.code.push(Sub { d: 3, a: 3, b: 6 });
+                self.code.push(AddI { d: 5, a: 5, imm: 1 });
+                self.code.push(Jump { offset: -4 });
+                // end:
+                if op == BinOp::Div {
+                    self.code.push(Mov { d: 1, s: 5 });
+                } else {
+                    self.code.push(Mov { d: 1, s: 3 });
+                }
+            }
+        }
+    }
+
+    /// Global load: address in `r3`, result in `r1`.
+    fn emit_global_load(&mut self) {
+        self.load_sites += 1;
+        match self.backend {
+            Backend::Direct => self.code.push(Inst::LoadGlobal { d: 1, a: 3 }),
+            Backend::Emulated => self.code.extend(expand_load(1, 3)),
+        }
+    }
+
+    /// Global store: address in `r3`, value in `r1`.
+    fn emit_global_store(&mut self) {
+        self.store_sites += 1;
+        match self.backend {
+            Backend::Direct => self.code.push(Inst::StoreGlobal { s: 1, a: 3 }),
+            Backend::Emulated => self.code.extend(expand_store(1, 3)),
+        }
+    }
+
+    fn emit_placeholder(&mut self) -> usize {
+        self.code.push(Inst::Nop);
+        self.code.len() - 1
+    }
+
+    fn push_temp(&mut self, fr: &mut Frame) -> i32 {
+        let slot = fr.temp_base + fr.temp_depth;
+        fr.temp_depth += 1;
+        self.code.push(Inst::StoreLocal { s: 1, a: 14, off: slot });
+        slot
+    }
+
+    fn pop_temp(&mut self, fr: &mut Frame, slot: i32, dest: u8) {
+        fr.temp_depth -= 1;
+        self.code.push(Inst::LoadLocal { d: dest, a: 14, off: slot });
+    }
+}
+
+fn count_locals(stmts: &[Stmt]) -> usize {
+    stmts
+        .iter()
+        .map(|s| match s {
+            Stmt::DeclLocal(..) => 1,
+            Stmt::If(_, t, e) => count_locals(t) + count_locals(e),
+            Stmt::While(_, b) => count_locals(b),
+            _ => 0,
+        })
+        .sum()
+}
+
+fn max_temp_depth_expr(e: &Expr) -> i32 {
+    match e {
+        Expr::Int(_) | Expr::Local(_) | Expr::GlobalVar(_) => 0,
+        Expr::GlobalIndex(_, i) => max_temp_depth_expr(i),
+        Expr::Bin(_, l, r) => (max_temp_depth_expr(l)).max(1 + max_temp_depth_expr(r)),
+        Expr::Call(_, args) => args.iter().map(max_temp_depth_expr).max().unwrap_or(0),
+    }
+}
+
+fn max_temp_depth_block(stmts: &[Stmt]) -> i32 {
+    stmts
+        .iter()
+        .map(|s| match s {
+            Stmt::DeclLocal(_, Some(e))
+            | Stmt::AssignLocal(_, e)
+            | Stmt::AssignGlobal(_, e)
+            | Stmt::Return(e)
+            | Stmt::ExprStmt(e) => max_temp_depth_expr(e),
+            Stmt::DeclLocal(_, None) => 0,
+            Stmt::AssignIndex(_, i, e) => {
+                max_temp_depth_expr(i).max(1 + max_temp_depth_expr(e))
+            }
+            Stmt::If(c, t, el) => max_temp_depth_expr(c)
+                .max(max_temp_depth_block(t))
+                .max(max_temp_depth_block(el)),
+            Stmt::While(c, b) => max_temp_depth_expr(c).max(max_temp_depth_block(b)),
+        })
+        .max()
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::emulation::{EmulationSetup, SequentialMachine, TopologyKind};
+    use crate::isa::interp::{DirectMemory, EmulatedChannelMemory, Machine};
+
+    fn run_direct(src: &str) -> i64 {
+        let p = compile(src, Backend::Direct).unwrap();
+        let mut mem = DirectMemory::new(SequentialMachine::paper_figures(false), 1 << 20);
+        let mut m = Machine::new(&mut mem, 4096);
+        m.run(&p.code).unwrap();
+        m.reg(0)
+    }
+
+    fn run_both(src: &str) -> (i64, i64) {
+        let d = run_direct(src);
+        let p = compile(src, Backend::Emulated).unwrap();
+        let setup = EmulationSetup::default_tech(TopologyKind::Clos, 1024, 128, 255).unwrap();
+        let mut mem = EmulatedChannelMemory::new(setup);
+        let mut m = Machine::new(&mut mem, 4096);
+        m.run(&p.code).unwrap();
+        (d, m.reg(0))
+    }
+
+    #[test]
+    fn arithmetic() {
+        assert_eq!(run_direct("fn main() { return 2 + 3 * 4; }"), 14);
+        assert_eq!(run_direct("fn main() { return (2 + 3) * 4; }"), 20);
+        assert_eq!(run_direct("fn main() { return 10 - 2 - 3; }"), 5);
+        assert_eq!(run_direct("fn main() { return 17 / 5; }"), 3);
+        assert_eq!(run_direct("fn main() { return 17 % 5; }"), 2);
+        assert_eq!(run_direct("fn main() { return -5 + 8; }"), 3);
+    }
+
+    #[test]
+    fn comparisons() {
+        assert_eq!(run_direct("fn main() { return 3 < 4; }"), 1);
+        assert_eq!(run_direct("fn main() { return 4 <= 4; }"), 1);
+        assert_eq!(run_direct("fn main() { return 5 <= 4; }"), 0);
+        assert_eq!(run_direct("fn main() { return 5 > 4; }"), 1);
+        assert_eq!(run_direct("fn main() { return 5 >= 6; }"), 0);
+        assert_eq!(run_direct("fn main() { return 5 != 6; }"), 1);
+        assert_eq!(run_direct("fn main() { return 5 == 5; }"), 1);
+    }
+
+    #[test]
+    fn control_flow_and_locals() {
+        let src = "fn main() { var s = 0; var i = 1; while (i <= 10) { s = s + i; i = i + 1; } return s; }";
+        assert_eq!(run_direct(src), 55);
+        let src2 = "fn main() { var x = 7; if (x > 5) { return 1; } else { return 2; } }";
+        assert_eq!(run_direct(src2), 1);
+    }
+
+    #[test]
+    fn functions_and_recursion() {
+        let src = "fn fib(n) { if (n < 2) { return n; } return fib(n-1) + fib(n-2); }\n\
+                   fn main() { return fib(12); }";
+        assert_eq!(run_direct(src), 144);
+    }
+
+    #[test]
+    fn globals_match_across_backends() {
+        let src = "global acc; global data[32];\n\
+                   fn main() { var i = 0; while (i < 32) { data[i] = i * i; i = i + 1; }\n\
+                   acc = 0; i = 0; while (i < 32) { acc = acc + data[i]; i = i + 1; }\n\
+                   return acc; }";
+        let (d, e) = run_both(src);
+        assert_eq!(d, (0..32).map(|i| i * i).sum::<i64>());
+        assert_eq!(d, e, "backends must compute identical results");
+    }
+
+    #[test]
+    fn emulated_binary_is_larger() {
+        let src = "global a[64]; fn main() { var i = 0; while (i < 64) { a[i] = i; i = i + 1; } return a[63]; }";
+        let d = compile(src, Backend::Direct).unwrap();
+        let e = compile(src, Backend::Emulated).unwrap();
+        assert!(e.binary_bytes() > d.binary_bytes());
+        assert_eq!(e.load_sites, d.load_sites);
+        assert_eq!(e.store_sites, d.store_sites);
+        // exact growth: loads +2, stores +3 instructions, 4 bytes each
+        let expect = d.binary_bytes() + 4 * (2 * d.load_sites + 3 * d.store_sites);
+        assert_eq!(e.binary_bytes(), expect);
+    }
+
+    #[test]
+    fn deep_expressions_spill_correctly() {
+        let src = "fn main() { return ((1+2)*(3+4)) + ((5+6)*(7+8)); }";
+        assert_eq!(run_direct(src), 21 + 165);
+    }
+}

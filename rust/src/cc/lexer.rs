@@ -1,0 +1,206 @@
+//! miniC lexer.
+
+use anyhow::{bail, Result};
+
+/// A token with its source line (for error messages).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Token {
+    /// The token kind/payload.
+    pub kind: Tok,
+    /// 1-based source line.
+    pub line: usize,
+}
+
+/// Token kinds.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Tok {
+    /// Integer literal.
+    Int(i64),
+    /// Identifier.
+    Ident(String),
+    /// `fn`
+    Fn,
+    /// `global`
+    Global,
+    /// `var`
+    Var,
+    /// `if`
+    If,
+    /// `else`
+    Else,
+    /// `while`
+    While,
+    /// `return`
+    Return,
+    /// `(`
+    LParen,
+    /// `)`
+    RParen,
+    /// `{`
+    LBrace,
+    /// `}`
+    RBrace,
+    /// `[`
+    LBracket,
+    /// `]`
+    RBracket,
+    /// `;`
+    Semi,
+    /// `,`
+    Comma,
+    /// `=`
+    Assign,
+    /// `+`
+    Plus,
+    /// `-`
+    Minus,
+    /// `*`
+    Star,
+    /// `%`  (lowered to repeated subtraction-free mul/sub sequence)
+    Percent,
+    /// `/`
+    Slash,
+    /// `<`
+    Lt,
+    /// `>`
+    Gt,
+    /// `<=`
+    Le,
+    /// `>=`
+    Ge,
+    /// `==`
+    EqEq,
+    /// `!=`
+    Ne,
+    /// `&`
+    Amp,
+    /// `|`
+    Pipe,
+    /// `^`
+    Caret,
+    /// End of input.
+    Eof,
+}
+
+/// Tokenise miniC source.
+pub fn lex(src: &str) -> Result<Vec<Token>> {
+    let mut out = Vec::new();
+    let b: Vec<char> = src.chars().collect();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            ' ' | '\t' | '\r' => i += 1,
+            '#' => {
+                while i < b.len() && b[i] != '\n' {
+                    i += 1;
+                }
+            }
+            '0'..='9' => {
+                let start = i;
+                while i < b.len() && b[i].is_ascii_digit() {
+                    i += 1;
+                }
+                let text: String = b[start..i].iter().collect();
+                out.push(Token { kind: Tok::Int(text.parse()?), line });
+            }
+            'a'..='z' | 'A'..='Z' | '_' => {
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                let text: String = b[start..i].iter().collect();
+                let kind = match text.as_str() {
+                    "fn" => Tok::Fn,
+                    "global" => Tok::Global,
+                    "var" => Tok::Var,
+                    "if" => Tok::If,
+                    "else" => Tok::Else,
+                    "while" => Tok::While,
+                    "return" => Tok::Return,
+                    _ => Tok::Ident(text),
+                };
+                out.push(Token { kind, line });
+            }
+            _ => {
+                let two = if i + 1 < b.len() { Some((b[i], b[i + 1])) } else { None };
+                let (kind, len) = match two {
+                    Some(('=', '=')) => (Tok::EqEq, 2),
+                    Some(('!', '=')) => (Tok::Ne, 2),
+                    Some(('<', '=')) => (Tok::Le, 2),
+                    Some(('>', '=')) => (Tok::Ge, 2),
+                    _ => {
+                        let k = match c {
+                            '(' => Tok::LParen,
+                            ')' => Tok::RParen,
+                            '{' => Tok::LBrace,
+                            '}' => Tok::RBrace,
+                            '[' => Tok::LBracket,
+                            ']' => Tok::RBracket,
+                            ';' => Tok::Semi,
+                            ',' => Tok::Comma,
+                            '=' => Tok::Assign,
+                            '+' => Tok::Plus,
+                            '-' => Tok::Minus,
+                            '*' => Tok::Star,
+                            '/' => Tok::Slash,
+                            '%' => Tok::Percent,
+                            '<' => Tok::Lt,
+                            '>' => Tok::Gt,
+                            '&' => Tok::Amp,
+                            '|' => Tok::Pipe,
+                            '^' => Tok::Caret,
+                            other => bail!("line {line}: unexpected character `{other}`"),
+                        };
+                        (k, 1)
+                    }
+                };
+                out.push(Token { kind, line });
+                i += len;
+            }
+        }
+    }
+    out.push(Token { kind: Tok::Eof, line });
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexes_program() {
+        let toks = lex("fn main() { var x; x = 1 + 2; return x; }").unwrap();
+        assert_eq!(toks[0].kind, Tok::Fn);
+        assert_eq!(toks[1].kind, Tok::Ident("main".into()));
+        assert!(toks.iter().any(|t| t.kind == Tok::Int(2)));
+        assert_eq!(toks.last().unwrap().kind, Tok::Eof);
+    }
+
+    #[test]
+    fn two_char_operators() {
+        let toks = lex("a <= b == c != d >= e").unwrap();
+        let kinds: Vec<&Tok> = toks.iter().map(|t| &t.kind).collect();
+        assert!(kinds.contains(&&Tok::Le));
+        assert!(kinds.contains(&&Tok::EqEq));
+        assert!(kinds.contains(&&Tok::Ne));
+        assert!(kinds.contains(&&Tok::Ge));
+    }
+
+    #[test]
+    fn comments_and_lines() {
+        let toks = lex("# comment\nx").unwrap();
+        assert_eq!(toks[0].kind, Tok::Ident("x".into()));
+        assert_eq!(toks[0].line, 2);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(lex("a $ b").is_err());
+    }
+}

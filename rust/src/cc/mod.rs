@@ -1,0 +1,28 @@
+//! The compiler benchmark (paper §6.2, §7.3): a small C-like language
+//! ("miniC") compiled to the tile ISA with two memory backends.
+//!
+//! The paper uses "a modified version of the compiler [that] emits
+//! message-passing sequences in place of global memory accesses"; the
+//! measured artefacts are (a) the executed instruction mix (Fig 8b) and
+//! (b) the binary-size growth of the emulated-memory version (≈8%,
+//! §7.3). This module reproduces both with a real compiler over a real
+//! corpus:
+//!
+//! * [`lexer`] / [`parser`] / [`ast`] — front end;
+//! * [`sem`] — semantic checks (declarations, arity);
+//! * [`codegen`] — stack-machine code generation with the
+//!   [`codegen::Backend::Direct`] (LOAD/STORE) and
+//!   [`codegen::Backend::Emulated`] (§2.1 channel sequences) backends;
+//! * [`corpus`] — realistic miniC programs (sorts, matrix kernels,
+//!   hash tables, a miniC lexer written in miniC) used as the
+//!   compile-and-run benchmark suite.
+
+pub mod ast;
+pub mod codegen;
+pub mod corpus;
+pub mod lexer;
+pub mod parser;
+pub mod sem;
+
+pub use codegen::{compile, Backend, CompiledProgram};
+pub use parser::parse_program;

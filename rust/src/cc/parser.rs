@@ -1,0 +1,368 @@
+//! miniC recursive-descent parser.
+//!
+//! Grammar (EBNF):
+//!
+//! ```text
+//! program   := (globaldecl | function)*
+//! globaldecl:= "global" ident ("[" int "]")? ";"
+//! function  := "fn" ident "(" params? ")" block
+//! block     := "{" stmt* "}"
+//! stmt      := "var" ident ("=" expr)? ";"
+//!            | "if" "(" expr ")" block ("else" block)?
+//!            | "while" "(" expr ")" block
+//!            | "return" expr ";"
+//!            | ident "=" expr ";"
+//!            | ident "[" expr "]" "=" expr ";"
+//!            | expr ";"
+//! expr      := cmp (("&"|"|"|"^") cmp)*
+//! cmp       := sum (("<"|">"|"<="|">="|"=="|"!=") sum)?
+//! sum       := term (("+"|"-") term)*
+//! term      := atom (("*"|"/"|"%") atom)*
+//! atom      := int | ident | ident "(" args ")" | ident "[" expr "]"
+//!            | "(" expr ")" | "-" atom
+//! ```
+//!
+//! Whether a bare identifier is local or global is resolved by the
+//! semantic pass ([`super::sem`]); the parser emits `Local` and
+//! rewrites later.
+
+use anyhow::{bail, Result};
+
+use super::ast::*;
+use super::lexer::{lex, Tok, Token};
+
+struct Parser {
+    toks: Vec<Token>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> &Tok {
+        &self.toks[self.pos].kind
+    }
+
+    fn line(&self) -> usize {
+        self.toks[self.pos].line
+    }
+
+    fn next(&mut self) -> Tok {
+        let t = self.toks[self.pos].kind.clone();
+        self.pos += 1;
+        t
+    }
+
+    fn expect(&mut self, t: Tok) -> Result<()> {
+        if *self.peek() == t {
+            self.pos += 1;
+            Ok(())
+        } else {
+            bail!("line {}: expected {:?}, found {:?}", self.line(), t, self.peek())
+        }
+    }
+
+    fn ident(&mut self) -> Result<String> {
+        match self.next() {
+            Tok::Ident(s) => Ok(s),
+            other => bail!("expected identifier, found {other:?}"),
+        }
+    }
+
+    fn program(&mut self) -> Result<Program> {
+        let mut p = Program::default();
+        loop {
+            match self.peek() {
+                Tok::Eof => break,
+                Tok::Global => {
+                    self.next();
+                    let name = self.ident()?;
+                    let size = if *self.peek() == Tok::LBracket {
+                        self.next();
+                        let Tok::Int(n) = self.next() else { bail!("array size must be literal") };
+                        self.expect(Tok::RBracket)?;
+                        if n <= 0 {
+                            bail!("array size must be positive");
+                        }
+                        n as u64
+                    } else {
+                        1
+                    };
+                    self.expect(Tok::Semi)?;
+                    p.globals.push(GlobalDecl { name, size });
+                }
+                Tok::Fn => {
+                    self.next();
+                    let name = self.ident()?;
+                    self.expect(Tok::LParen)?;
+                    let mut params = Vec::new();
+                    if *self.peek() != Tok::RParen {
+                        loop {
+                            params.push(self.ident()?);
+                            if *self.peek() == Tok::Comma {
+                                self.next();
+                            } else {
+                                break;
+                            }
+                        }
+                    }
+                    self.expect(Tok::RParen)?;
+                    let body = self.block()?;
+                    p.functions.push(Function { name, params, body });
+                }
+                other => bail!("line {}: expected `global` or `fn`, found {other:?}", self.line()),
+            }
+        }
+        Ok(p)
+    }
+
+    fn block(&mut self) -> Result<Vec<Stmt>> {
+        self.expect(Tok::LBrace)?;
+        let mut stmts = Vec::new();
+        while *self.peek() != Tok::RBrace {
+            stmts.push(self.stmt()?);
+        }
+        self.expect(Tok::RBrace)?;
+        Ok(stmts)
+    }
+
+    fn stmt(&mut self) -> Result<Stmt> {
+        match self.peek().clone() {
+            Tok::Var => {
+                self.next();
+                let name = self.ident()?;
+                let init = if *self.peek() == Tok::Assign {
+                    self.next();
+                    Some(self.expr()?)
+                } else {
+                    None
+                };
+                self.expect(Tok::Semi)?;
+                Ok(Stmt::DeclLocal(name, init))
+            }
+            Tok::If => {
+                self.next();
+                self.expect(Tok::LParen)?;
+                let cond = self.expr()?;
+                self.expect(Tok::RParen)?;
+                let then = self.block()?;
+                let els = if *self.peek() == Tok::Else {
+                    self.next();
+                    self.block()?
+                } else {
+                    Vec::new()
+                };
+                Ok(Stmt::If(cond, then, els))
+            }
+            Tok::While => {
+                self.next();
+                self.expect(Tok::LParen)?;
+                let cond = self.expr()?;
+                self.expect(Tok::RParen)?;
+                let body = self.block()?;
+                Ok(Stmt::While(cond, body))
+            }
+            Tok::Return => {
+                self.next();
+                let e = self.expr()?;
+                self.expect(Tok::Semi)?;
+                Ok(Stmt::Return(e))
+            }
+            Tok::Ident(name) => {
+                // Lookahead: assignment, indexed assignment, or call.
+                let save = self.pos;
+                self.next();
+                match self.peek().clone() {
+                    Tok::Assign => {
+                        self.next();
+                        let e = self.expr()?;
+                        self.expect(Tok::Semi)?;
+                        // local vs global resolved in sem.
+                        Ok(Stmt::AssignLocal(name, e))
+                    }
+                    Tok::LBracket => {
+                        self.next();
+                        let idx = self.expr()?;
+                        self.expect(Tok::RBracket)?;
+                        if *self.peek() == Tok::Assign {
+                            self.next();
+                            let e = self.expr()?;
+                            self.expect(Tok::Semi)?;
+                            Ok(Stmt::AssignIndex(name, idx, e))
+                        } else {
+                            // indexed read used as expression statement
+                            self.pos = save;
+                            let e = self.expr()?;
+                            self.expect(Tok::Semi)?;
+                            Ok(Stmt::ExprStmt(e))
+                        }
+                    }
+                    _ => {
+                        self.pos = save;
+                        let e = self.expr()?;
+                        self.expect(Tok::Semi)?;
+                        Ok(Stmt::ExprStmt(e))
+                    }
+                }
+            }
+            other => bail!("line {}: unexpected token {other:?} in statement", self.line()),
+        }
+    }
+
+    fn expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.cmp()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Amp => BinOp::And,
+                Tok::Pipe => BinOp::Or,
+                Tok::Caret => BinOp::Xor,
+                _ => break,
+            };
+            self.next();
+            let rhs = self.cmp()?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn cmp(&mut self) -> Result<Expr> {
+        let lhs = self.sum()?;
+        let op = match self.peek() {
+            Tok::Lt => BinOp::Lt,
+            Tok::Gt => BinOp::Gt,
+            Tok::Le => BinOp::Le,
+            Tok::Ge => BinOp::Ge,
+            Tok::EqEq => BinOp::Eq,
+            Tok::Ne => BinOp::Ne,
+            _ => return Ok(lhs),
+        };
+        self.next();
+        let rhs = self.sum()?;
+        Ok(Expr::Bin(op, Box::new(lhs), Box::new(rhs)))
+    }
+
+    fn sum(&mut self) -> Result<Expr> {
+        let mut lhs = self.term()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Plus => BinOp::Add,
+                Tok::Minus => BinOp::Sub,
+                _ => break,
+            };
+            self.next();
+            let rhs = self.term()?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn term(&mut self) -> Result<Expr> {
+        let mut lhs = self.atom()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Star => BinOp::Mul,
+                Tok::Slash => BinOp::Div,
+                Tok::Percent => BinOp::Mod,
+                _ => break,
+            };
+            self.next();
+            let rhs = self.atom()?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn atom(&mut self) -> Result<Expr> {
+        match self.next() {
+            Tok::Int(v) => Ok(Expr::Int(v)),
+            Tok::Minus => {
+                let e = self.atom()?;
+                Ok(Expr::Bin(BinOp::Sub, Box::new(Expr::Int(0)), Box::new(e)))
+            }
+            Tok::LParen => {
+                let e = self.expr()?;
+                self.expect(Tok::RParen)?;
+                Ok(e)
+            }
+            Tok::Ident(name) => match self.peek() {
+                Tok::LParen => {
+                    self.next();
+                    let mut args = Vec::new();
+                    if *self.peek() != Tok::RParen {
+                        loop {
+                            args.push(self.expr()?);
+                            if *self.peek() == Tok::Comma {
+                                self.next();
+                            } else {
+                                break;
+                            }
+                        }
+                    }
+                    self.expect(Tok::RParen)?;
+                    Ok(Expr::Call(name, args))
+                }
+                Tok::LBracket => {
+                    self.next();
+                    let idx = self.expr()?;
+                    self.expect(Tok::RBracket)?;
+                    Ok(Expr::GlobalIndex(name, Box::new(idx)))
+                }
+                _ => Ok(Expr::Local(name)),
+            },
+            other => bail!("unexpected token {other:?} in expression"),
+        }
+    }
+}
+
+/// Parse a miniC source string.
+pub fn parse_program(src: &str) -> Result<Program> {
+    let toks = lex(src)?;
+    let mut p = Parser { toks, pos: 0 };
+    p.program()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_function_and_globals() {
+        let p = parse_program(
+            "global total; global data[64];\n\
+             fn main() { var i = 0; while (i < 64) { data[i] = i; i = i + 1; } return total; }",
+        )
+        .unwrap();
+        assert_eq!(p.globals.len(), 2);
+        assert_eq!(p.globals[1].size, 64);
+        assert_eq!(p.functions[0].name, "main");
+        assert_eq!(p.functions[0].body.len(), 3);
+    }
+
+    #[test]
+    fn precedence() {
+        let p = parse_program("fn f() { return 1 + 2 * 3; }").unwrap();
+        let Stmt::Return(e) = &p.functions[0].body[0] else { panic!() };
+        // 1 + (2*3)
+        match e {
+            Expr::Bin(BinOp::Add, l, r) => {
+                assert_eq!(**l, Expr::Int(1));
+                assert!(matches!(**r, Expr::Bin(BinOp::Mul, _, _)));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn calls_and_unary_minus() {
+        let p = parse_program("fn f(a, b) { return f(a - 1, -b); }").unwrap();
+        assert_eq!(p.functions[0].params.len(), 2);
+        let Stmt::Return(Expr::Call(name, args)) = &p.functions[0].body[0] else { panic!() };
+        assert_eq!(name, "f");
+        assert_eq!(args.len(), 2);
+    }
+
+    #[test]
+    fn rejects_syntax_errors() {
+        assert!(parse_program("fn f( { }").is_err());
+        assert!(parse_program("global x").is_err());
+        assert!(parse_program("fn f() { if x { } }").is_err());
+    }
+}

@@ -1,0 +1,193 @@
+//! Semantic analysis: resolve identifiers to locals vs globals, check
+//! declarations and call arities, and compute the global data layout.
+
+use std::collections::{HashMap, HashSet};
+
+use anyhow::{bail, Result};
+
+use super::ast::*;
+
+/// Result of semantic analysis.
+#[derive(Clone, Debug)]
+pub struct Analysis {
+    /// The program with identifier references resolved
+    /// (`Local` vs `GlobalVar`).
+    pub program: Program,
+    /// Word address of each global.
+    pub global_layout: HashMap<String, u64>,
+    /// Total global words.
+    pub global_words: u64,
+}
+
+/// Analyse a parsed program.
+pub fn analyse(program: &Program) -> Result<Analysis> {
+    // Global layout: sequential word allocation.
+    let mut layout = HashMap::new();
+    let mut next = 0u64;
+    for g in &program.globals {
+        if layout.insert(g.name.clone(), next).is_some() {
+            bail!("global `{}` declared twice", g.name);
+        }
+        next += g.size;
+    }
+    let sizes: HashMap<String, u64> =
+        program.globals.iter().map(|g| (g.name.clone(), g.size)).collect();
+    let arities: HashMap<String, usize> =
+        program.functions.iter().map(|f| (f.name.clone(), f.params.len())).collect();
+    if !arities.contains_key("main") {
+        bail!("no `main` function");
+    }
+
+    let mut resolved = Program { globals: program.globals.clone(), functions: Vec::new() };
+    for f in &program.functions {
+        let mut scope: HashSet<String> = f.params.iter().cloned().collect();
+        let body = resolve_block(&f.body, &mut scope, &sizes, &arities)?;
+        resolved.functions.push(Function { name: f.name.clone(), params: f.params.clone(), body });
+    }
+    Ok(Analysis { program: resolved, global_layout: layout, global_words: next })
+}
+
+fn resolve_block(
+    stmts: &[Stmt],
+    scope: &mut HashSet<String>,
+    globals: &HashMap<String, u64>,
+    arities: &HashMap<String, usize>,
+) -> Result<Vec<Stmt>> {
+    let mut out = Vec::with_capacity(stmts.len());
+    for s in stmts {
+        out.push(match s {
+            Stmt::DeclLocal(name, init) => {
+                let init = init.as_ref().map(|e| resolve_expr(e, scope, globals, arities)).transpose()?;
+                if globals.contains_key(name) {
+                    bail!("local `{name}` shadows a global");
+                }
+                scope.insert(name.clone());
+                Stmt::DeclLocal(name.clone(), init)
+            }
+            // The parser only emits AssignLocal; re-analysis of an
+            // already-resolved tree keeps the resolution.
+            Stmt::AssignGlobal(name, e) => {
+                Stmt::AssignGlobal(name.clone(), resolve_expr(e, scope, globals, arities)?)
+            }
+            Stmt::AssignLocal(name, e) => {
+                let e = resolve_expr(e, scope, globals, arities)?;
+                if scope.contains(name) {
+                    Stmt::AssignLocal(name.clone(), e)
+                } else if let Some(&size) = globals.get(name) {
+                    if size != 1 {
+                        bail!("assigning array `{name}` without an index");
+                    }
+                    Stmt::AssignGlobal(name.clone(), e)
+                } else {
+                    bail!("assignment to undeclared `{name}`");
+                }
+            }
+            Stmt::AssignIndex(name, idx, e) => {
+                if !globals.contains_key(name) {
+                    bail!("indexed assignment to non-global `{name}`");
+                }
+                Stmt::AssignIndex(
+                    name.clone(),
+                    resolve_expr(idx, scope, globals, arities)?,
+                    resolve_expr(e, scope, globals, arities)?,
+                )
+            }
+            Stmt::If(c, t, e) => {
+                let c = resolve_expr(c, scope, globals, arities)?;
+                let t = resolve_block(t, &mut scope.clone(), globals, arities)?;
+                let e = resolve_block(e, &mut scope.clone(), globals, arities)?;
+                Stmt::If(c, t, e)
+            }
+            Stmt::While(c, b) => Stmt::While(
+                resolve_expr(c, scope, globals, arities)?,
+                resolve_block(b, &mut scope.clone(), globals, arities)?,
+            ),
+            Stmt::Return(e) => Stmt::Return(resolve_expr(e, scope, globals, arities)?),
+            Stmt::ExprStmt(e) => Stmt::ExprStmt(resolve_expr(e, scope, globals, arities)?),
+        });
+    }
+    Ok(out)
+}
+
+fn resolve_expr(
+    e: &Expr,
+    scope: &HashSet<String>,
+    globals: &HashMap<String, u64>,
+    arities: &HashMap<String, usize>,
+) -> Result<Expr> {
+    Ok(match e {
+        Expr::Int(v) => Expr::Int(*v),
+        Expr::Local(name) | Expr::GlobalVar(name) => {
+            if scope.contains(name) {
+                Expr::Local(name.clone())
+            } else if globals.contains_key(name) {
+                Expr::GlobalVar(name.clone())
+            } else {
+                bail!("undeclared identifier `{name}`")
+            }
+        }
+        Expr::GlobalIndex(name, idx) => {
+            if !globals.contains_key(name) {
+                bail!("indexing non-global `{name}`");
+            }
+            Expr::GlobalIndex(name.clone(), Box::new(resolve_expr(idx, scope, globals, arities)?))
+        }
+        Expr::Bin(op, l, r) => Expr::Bin(
+            *op,
+            Box::new(resolve_expr(l, scope, globals, arities)?),
+            Box::new(resolve_expr(r, scope, globals, arities)?),
+        ),
+        Expr::Call(name, args) => {
+            let Some(&arity) = arities.get(name) else { bail!("call to undefined `{name}`") };
+            if arity != args.len() {
+                bail!("`{name}` expects {arity} args, got {}", args.len());
+            }
+            Expr::Call(
+                name.clone(),
+                args.iter()
+                    .map(|a| resolve_expr(a, scope, globals, arities))
+                    .collect::<Result<_>>()?,
+            )
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cc::parser::parse_program;
+
+    #[test]
+    fn resolves_locals_and_globals() {
+        let p = parse_program(
+            "global g; fn main() { var x = 1; g = x; x = g + 1; return x; }",
+        )
+        .unwrap();
+        let a = analyse(&p).unwrap();
+        let body = &a.program.functions[0].body;
+        assert!(matches!(body[1], Stmt::AssignGlobal(..)));
+        assert!(matches!(body[2], Stmt::AssignLocal(..)));
+        assert_eq!(a.global_words, 1);
+    }
+
+    #[test]
+    fn layout_is_sequential() {
+        let p = parse_program("global a; global b[10]; global c; fn main() { return 0; }")
+            .unwrap();
+        let a = analyse(&p).unwrap();
+        assert_eq!(a.global_layout["a"], 0);
+        assert_eq!(a.global_layout["b"], 1);
+        assert_eq!(a.global_layout["c"], 11);
+        assert_eq!(a.global_words, 12);
+    }
+
+    #[test]
+    fn errors() {
+        let bad = |src: &str| analyse(&parse_program(src).unwrap()).is_err();
+        assert!(bad("fn main() { return x; }"));
+        assert!(bad("fn f() { return 0; }")); // no main
+        assert!(bad("fn main() { return f(1); } fn f(a, b) { return a; }"));
+        assert!(bad("global g[4]; fn main() { g = 1; return 0; }"));
+        assert!(bad("fn main() { x = 1; return 0; }"));
+    }
+}

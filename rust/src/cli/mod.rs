@@ -1,0 +1,120 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//!
+//! Grammar: `memclos <command> [positional...] [--flag [value]]...`.
+//! Flags may repeat (`--set a=1 --set b=2`). `--help` is handled by the
+//! binary.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// The subcommand (first non-flag argument).
+    pub command: String,
+    /// Positional arguments after the command.
+    pub positional: Vec<String>,
+    /// Flag values; flags without a value get "true".
+    flags: HashMap<String, Vec<String>>,
+}
+
+/// Flags that take no value.
+const BOOLEAN_FLAGS: &[&str] = &["help", "quick", "tsv", "no-plot", "verbose"];
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else if BOOLEAN_FLAGS.contains(&name) {
+                    out.flags.entry(name.to_string()).or_default().push("true".into());
+                } else {
+                    let v = it
+                        .next()
+                        .with_context(|| format!("flag --{name} expects a value"))?;
+                    out.flags.entry(name.to_string()).or_default().push(v);
+                }
+            } else if out.command.is_empty() {
+                out.command = arg;
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Last value of a flag.
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All values of a repeatable flag.
+    pub fn flag_all(&self, name: &str) -> Vec<String> {
+        self.flags.get(name).cloned().unwrap_or_default()
+    }
+
+    /// Boolean flag presence.
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    /// Typed flag with default.
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| anyhow::anyhow!("flag --{name}: cannot parse `{v}`")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn command_and_flags() {
+        let a = parse("figure 9 --topo clos --samples 100000 --tsv");
+        assert_eq!(a.command, "figure");
+        assert_eq!(a.positional, vec!["9"]);
+        assert_eq!(a.flag("topo"), Some("clos"));
+        assert_eq!(a.get::<usize>("samples", 0).unwrap(), 100000);
+        assert!(a.has("tsv"));
+    }
+
+    #[test]
+    fn repeated_set_flags() {
+        let a = parse("latency --set a=1 --set net.t_open=0");
+        assert_eq!(a.flag_all("set"), vec!["a=1", "net.t_open=0"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("area --tiles=256");
+        assert_eq!(a.flag("tiles"), Some("256"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(["x".into(), "--topo".into()]).is_err());
+    }
+
+    #[test]
+    fn typed_default() {
+        let a = parse("dram");
+        assert_eq!(a.get::<usize>("ranks", 1).unwrap(), 1);
+    }
+}

@@ -1,0 +1,52 @@
+//! Configuration system: a TOML-subset document ([`Doc`]) plus typed
+//! extraction helpers used by every subsystem's `from_doc` constructor.
+//!
+//! Precedence (lowest to highest): built-in defaults (the paper's
+//! parameters, Tables 1–5) → config file (`--config path`) → CLI
+//! overrides (`--set key=value`).
+
+mod value;
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+pub use value::{Doc, ParseError, Value};
+
+/// Load a config file and apply `--set` overrides on top.
+pub fn load(path: Option<&Path>, overrides: &[String]) -> Result<Doc> {
+    let mut doc = match path {
+        Some(p) => {
+            let text = std::fs::read_to_string(p)
+                .with_context(|| format!("reading config {}", p.display()))?;
+            Doc::parse(&text).with_context(|| format!("parsing config {}", p.display()))?
+        }
+        None => Doc::new(),
+    };
+    for ov in overrides {
+        doc.set_str(ov).with_context(|| format!("applying override `{ov}`"))?;
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_defaults_when_no_file() {
+        let doc = load(None, &[]).unwrap();
+        assert!(doc.is_empty());
+    }
+
+    #[test]
+    fn overrides_apply_without_file() {
+        let doc = load(None, &["a.b=3".to_string()]).unwrap();
+        assert_eq!(doc.int("a.b", 0), 3);
+    }
+
+    #[test]
+    fn bad_override_is_error() {
+        assert!(load(None, &["no-equals".to_string()]).is_err());
+    }
+}

@@ -1,0 +1,361 @@
+//! A TOML-subset parser (offline image: no serde/toml crates).
+//!
+//! Supported syntax — everything the memclos config files need:
+//!
+//! ```toml
+//! # comment
+//! [section.subsection]
+//! int_key = 42
+//! float_key = 3.5
+//! bool_key = true
+//! string_key = "text"
+//! array_key = [1, 2, 3]
+//! ```
+//!
+//! Keys are flattened to dotted paths (`section.subsection.int_key`).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use thiserror::Error;
+
+/// A parsed configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    /// Integer literal.
+    Int(i64),
+    /// Float literal.
+    Float(f64),
+    /// Boolean literal.
+    Bool(bool),
+    /// Quoted string.
+    Str(String),
+    /// Homogeneous or heterogeneous array.
+    Array(Vec<Value>),
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Int(v) => write!(f, "{v}"),
+            Value::Float(v) => write!(f, "{v}"),
+            Value::Bool(v) => write!(f, "{v}"),
+            Value::Str(v) => write!(f, "\"{v}\""),
+            Value::Array(vs) => {
+                write!(f, "[")?;
+                for (i, v) in vs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// Parse errors with line information.
+#[derive(Debug, Error)]
+pub enum ParseError {
+    /// Malformed line (no `=`, bad section header, ...).
+    #[error("line {line}: {msg}")]
+    Syntax {
+        /// 1-based line number.
+        line: usize,
+        /// Description.
+        msg: String,
+    },
+}
+
+/// A flat dotted-key -> value map.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Doc {
+    map: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    /// Empty document.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse a TOML-subset document.
+    pub fn parse(text: &str) -> Result<Self, ParseError> {
+        let mut doc = Doc::new();
+        let mut section = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let inner = rest.strip_suffix(']').ok_or_else(|| ParseError::Syntax {
+                    line: lineno,
+                    msg: "unterminated section header".into(),
+                })?;
+                let name = inner.trim();
+                if name.is_empty() || !name.chars().all(is_key_char_or_dot) {
+                    return Err(ParseError::Syntax {
+                        line: lineno,
+                        msg: format!("bad section name `{name}`"),
+                    });
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| ParseError::Syntax {
+                line: lineno,
+                msg: "expected `key = value`".into(),
+            })?;
+            let key = line[..eq].trim();
+            if key.is_empty() || !key.chars().all(is_key_char) {
+                return Err(ParseError::Syntax { line: lineno, msg: format!("bad key `{key}`") });
+            }
+            let value = parse_value(line[eq + 1..].trim(), lineno)?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            doc.map.insert(full, value);
+        }
+        Ok(doc)
+    }
+
+    /// Insert / override a value at a dotted path.
+    pub fn set(&mut self, key: &str, value: Value) {
+        self.map.insert(key.to_string(), value);
+    }
+
+    /// Apply a `key=value` override (CLI `--set`); the value is parsed
+    /// with the same literal grammar as the file format.
+    pub fn set_str(&mut self, assignment: &str) -> Result<(), ParseError> {
+        let eq = assignment.find('=').ok_or_else(|| ParseError::Syntax {
+            line: 0,
+            msg: format!("override `{assignment}` is not key=value"),
+        })?;
+        let key = assignment[..eq].trim().to_string();
+        let value = parse_value(assignment[eq + 1..].trim(), 0)?;
+        self.map.insert(key, value);
+        Ok(())
+    }
+
+    /// Raw lookup.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    /// Integer at `key`, or `default`.
+    pub fn int(&self, key: &str, default: i64) -> i64 {
+        match self.map.get(key) {
+            Some(Value::Int(v)) => *v,
+            Some(Value::Float(v)) => *v as i64,
+            _ => default,
+        }
+    }
+
+    /// Float at `key`, or `default` (ints coerce).
+    pub fn float(&self, key: &str, default: f64) -> f64 {
+        match self.map.get(key) {
+            Some(Value::Float(v)) => *v,
+            Some(Value::Int(v)) => *v as f64,
+            _ => default,
+        }
+    }
+
+    /// Bool at `key`, or `default`.
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        match self.map.get(key) {
+            Some(Value::Bool(v)) => *v,
+            _ => default,
+        }
+    }
+
+    /// String at `key`, or `default`.
+    pub fn str(&self, key: &str, default: &str) -> String {
+        match self.map.get(key) {
+            Some(Value::Str(v)) => v.clone(),
+            _ => default.to_string(),
+        }
+    }
+
+    /// Integer array at `key`, or `default`.
+    pub fn ints(&self, key: &str, default: &[i64]) -> Vec<i64> {
+        match self.map.get(key) {
+            Some(Value::Array(vs)) => vs
+                .iter()
+                .filter_map(|v| match v {
+                    Value::Int(i) => Some(*i),
+                    Value::Float(f) => Some(*f as i64),
+                    _ => None,
+                })
+                .collect(),
+            Some(Value::Int(i)) => vec![*i],
+            _ => default.to_vec(),
+        }
+    }
+
+    /// All keys (sorted).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+
+    /// Number of entries.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when no entries.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+fn is_key_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_' || c == '-'
+}
+
+fn is_key_char_or_dot(c: char) -> bool {
+    is_key_char(c) || c == '.'
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, line: usize) -> Result<Value, ParseError> {
+    let t = text.trim();
+    if t.is_empty() {
+        return Err(ParseError::Syntax { line, msg: "empty value".into() });
+    }
+    if let Some(rest) = t.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or_else(|| ParseError::Syntax {
+            line,
+            msg: "unterminated array".into(),
+        })?;
+        let mut items = Vec::new();
+        let inner = inner.trim();
+        if !inner.is_empty() {
+            for part in inner.split(',') {
+                let p = part.trim();
+                if p.is_empty() {
+                    continue; // tolerate trailing comma
+                }
+                items.push(parse_value(p, line)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Some(rest) = t.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or_else(|| ParseError::Syntax {
+            line,
+            msg: "unterminated string".into(),
+        })?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match t {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = t.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    // Bare words are accepted as strings (ergonomic for --set topo=mesh).
+    if t.chars().all(is_key_char) {
+        return Ok(Value::Str(t.to_string()));
+    }
+    Err(ParseError::Syntax { line, msg: format!("cannot parse value `{t}`") })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = Doc::parse(
+            r#"
+            # top comment
+            top = 1
+            [system]
+            tiles = 1024            # inline comment
+            topo = "clos"
+            [system.net]
+            t_switch = 2.0
+            open = false
+            caps = [64, 128, 256]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.int("top", 0), 1);
+        assert_eq!(doc.int("system.tiles", 0), 1024);
+        assert_eq!(doc.str("system.topo", ""), "clos");
+        assert_eq!(doc.float("system.net.t_switch", 0.0), 2.0);
+        assert!(!doc.bool("system.net.open", true));
+        assert_eq!(doc.ints("system.net.caps", &[]), vec![64, 128, 256]);
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let doc = Doc::parse("").unwrap();
+        assert_eq!(doc.int("nope", 7), 7);
+        assert_eq!(doc.float("nope", 1.5), 1.5);
+        assert_eq!(doc.str("nope", "d"), "d");
+        assert!(doc.is_empty());
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        let doc = Doc::parse("x = 3").unwrap();
+        assert_eq!(doc.float("x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn set_str_overrides() {
+        let mut doc = Doc::parse("a = 1").unwrap();
+        doc.set_str("a=2").unwrap();
+        doc.set_str("b.c=clos").unwrap();
+        assert_eq!(doc.int("a", 0), 2);
+        assert_eq!(doc.str("b.c", ""), "clos");
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = Doc::parse(r##"s = "a#b""##).unwrap();
+        assert_eq!(doc.str("s", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Doc::parse("ok = 1\nbroken").unwrap_err();
+        assert!(err.to_string().contains("line 2"));
+    }
+
+    #[test]
+    fn rejects_bad_section() {
+        assert!(Doc::parse("[bad section]").is_err());
+        assert!(Doc::parse("[unterminated").is_err());
+    }
+
+    #[test]
+    fn empty_and_trailing_comma_arrays() {
+        let doc = Doc::parse("a = []\nb = [1, 2,]").unwrap();
+        assert_eq!(doc.ints("a", &[9]), Vec::<i64>::new());
+        assert_eq!(doc.ints("b", &[]), vec![1, 2]);
+    }
+}

@@ -1,0 +1,11 @@
+//! L3 coordination: the sweep engine that drives the AOT-compiled
+//! latency kernel (or the native model) across a worker pool.
+//!
+//! * [`queue`] — bounded work queue with backpressure.
+//! * [`sweep`] — leader/worker sweep execution over design points.
+
+pub mod queue;
+pub mod sweep;
+
+pub use queue::WorkQueue;
+pub use sweep::{run_sweep, EvalMode, PointResult, SweepPoint};

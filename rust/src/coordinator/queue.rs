@@ -1,0 +1,154 @@
+//! A bounded multi-producer/multi-consumer work queue with
+//! backpressure (no external crates: Mutex + Condvar).
+//!
+//! Producers block in `push` when the queue is full (backpressure);
+//! consumers block in `pop` until an item arrives or the queue is
+//! closed and drained.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// The bounded queue.
+pub struct WorkQueue<T> {
+    state: Mutex<State<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+impl<T> WorkQueue<T> {
+    /// Queue with the given capacity (>= 1).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            state: Mutex::new(State { items: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Push an item, blocking while the queue is full. Returns `false`
+    /// if the queue was closed (item dropped).
+    pub fn push(&self, item: T) -> bool {
+        let mut st = self.state.lock().unwrap();
+        while st.items.len() >= self.capacity && !st.closed {
+            st = self.not_full.wait(st).unwrap();
+        }
+        if st.closed {
+            return false;
+        }
+        st.items.push_back(item);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Pop an item, blocking until one is available; `None` once the
+    /// queue is closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Close the queue: producers fail, consumers drain then get None.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Items currently queued.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    /// True when no items are queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_single_thread() {
+        let q = WorkQueue::new(4);
+        assert!(q.push(1));
+        assert!(q.push(2));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        q.close();
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn backpressure_blocks_producer() {
+        let q = Arc::new(WorkQueue::new(2));
+        q.push(1);
+        q.push(2);
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.push(3)); // blocks
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert_eq!(q.len(), 2, "third push must be blocked");
+        assert_eq!(q.pop(), Some(1));
+        t.join().unwrap();
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn producers_and_consumers() {
+        let q = Arc::new(WorkQueue::new(8));
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..100 {
+                        q.push(p * 100 + i);
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..4)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = q.pop() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let total: usize = consumers.into_iter().map(|c| c.join().unwrap().len()).sum();
+        assert_eq!(total, 400);
+    }
+
+    #[test]
+    fn push_after_close_fails() {
+        let q = WorkQueue::new(2);
+        q.close();
+        assert!(!q.push(1));
+    }
+}

@@ -1,0 +1,225 @@
+//! The sweep coordinator: evaluate many emulation design points across
+//! a worker pool, with the XLA hot path when artifacts are available.
+//!
+//! The leader enumerates [`SweepPoint`]s into a bounded [`WorkQueue`]
+//! (backpressure keeps memory flat on huge sweeps); each worker thread
+//! owns its own PJRT client + compiled artifact (the xla handles are
+//! not `Send`), draws its own address stream, and returns a
+//! [`PointResult`] over a channel.
+//!
+//! Three evaluation modes, proven equivalent by tests:
+//!
+//! * [`EvalMode::Exact`] — closed-form expectation (O(k) native);
+//! * [`EvalMode::NativeMc`] — native Monte-Carlo (oracle for the XLA
+//!   path);
+//! * [`EvalMode::XlaMc`] — Monte-Carlo on the AOT-compiled kernel
+//!   (the production hot path).
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::queue::WorkQueue;
+use crate::emulation::{EmulationSetup, TopologyKind};
+use crate::runtime::{ArtifactSet, LatencyEngine};
+use crate::util::rng::Rng;
+
+/// One design point to evaluate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SweepPoint {
+    /// Interconnect.
+    pub kind: TopologyKind,
+    /// System tiles.
+    pub tiles: usize,
+    /// Tile memory (KB).
+    pub mem_kb: u32,
+    /// Emulation size (memory tiles).
+    pub k: usize,
+}
+
+/// Result of one design point.
+#[derive(Clone, Copy, Debug)]
+pub struct PointResult {
+    /// The point evaluated.
+    pub point: SweepPoint,
+    /// Mean access latency, cycles (== ns at 1 GHz).
+    pub mean_cycles: f64,
+    /// Samples behind the estimate (0 for the exact mode).
+    pub samples: usize,
+}
+
+/// How to evaluate points.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvalMode {
+    /// Closed-form expectation.
+    Exact,
+    /// Native Monte-Carlo with `samples` addresses.
+    NativeMc {
+        /// Addresses per point.
+        samples: usize,
+    },
+    /// AOT-kernel Monte-Carlo with `samples` addresses in batches of
+    /// `batch`.
+    XlaMc {
+        /// Addresses per point.
+        samples: usize,
+        /// Artifact batch size (must match a lowered artifact).
+        batch: usize,
+    },
+}
+
+impl EvalMode {
+    /// The production default: XLA if artifacts exist, else exact.
+    pub fn auto(samples: usize, batch: usize) -> EvalMode {
+        let set = ArtifactSet::new();
+        match set {
+            Ok(s) if s.available(&format!("latency_batch_{batch}")) => {
+                EvalMode::XlaMc { samples, batch }
+            }
+            _ => EvalMode::Exact,
+        }
+    }
+}
+
+/// Evaluate one point in the given mode (worker body).
+fn eval_point(
+    point: SweepPoint,
+    mode: EvalMode,
+    engine: Option<&LatencyEngine>,
+    rng: &mut Rng,
+    addr_buf: &mut Vec<i32>,
+) -> Result<PointResult> {
+    let setup = EmulationSetup::default_tech(point.kind, point.tiles, point.mem_kb, point.k)?;
+    let (mean, samples) = match mode {
+        EvalMode::Exact => (setup.expected_latency(), 0),
+        EvalMode::NativeMc { samples } => (setup.mc_latency(samples, rng.next_u64()), samples),
+        EvalMode::XlaMc { samples, batch } => {
+            let engine = engine.context("XLA mode requires an engine")?;
+            let params = setup.kernel_params();
+            let space = setup.map.space_words();
+            addr_buf.resize(batch, 0);
+            let mut sum = 0.0;
+            let mut n = 0usize;
+            while n < samples {
+                rng.fill_addresses(space, addr_buf);
+                let mean = engine.run_mean(addr_buf, &params)?;
+                sum += mean as f64 * batch as f64;
+                n += batch;
+            }
+            (sum / n as f64, n)
+        }
+    };
+    Ok(PointResult { point, mean_cycles: mean, samples })
+}
+
+/// Run a sweep over `points` with `workers` threads.
+///
+/// Results are returned in completion order; sort by point if needed.
+pub fn run_sweep(
+    points: &[SweepPoint],
+    mode: EvalMode,
+    workers: usize,
+    seed: u64,
+) -> Result<Vec<PointResult>> {
+    let workers = workers.max(1).min(points.len().max(1));
+    let queue = Arc::new(WorkQueue::<SweepPoint>::new(2 * workers));
+    let (tx, rx) = mpsc::channel::<Result<PointResult>>();
+
+    std::thread::scope(|scope| -> Result<Vec<PointResult>> {
+        for w in 0..workers {
+            let queue = Arc::clone(&queue);
+            let tx = tx.clone();
+            scope.spawn(move || {
+                // Each worker owns its own PJRT client/executable; the
+                // xla handles are not Send.
+                let engine = match mode {
+                    EvalMode::XlaMc { batch, .. } => {
+                        match ArtifactSet::new().and_then(|s| LatencyEngine::load(&s, batch)) {
+                            Ok(e) => Some(e),
+                            Err(err) => {
+                                let _ = tx.send(Err(err));
+                                return;
+                            }
+                        }
+                    }
+                    _ => None,
+                };
+                let mut rng = Rng::new(seed ^ (0x9E37_79B9 * (w as u64 + 1)));
+                let mut buf = Vec::new();
+                while let Some(point) = queue.pop() {
+                    let res = eval_point(point, mode, engine.as_ref(), &mut rng, &mut buf);
+                    if tx.send(res).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(tx);
+
+        // Leader: feed the queue (blocks on backpressure), then close.
+        for &p in points {
+            if !queue.push(p) {
+                break;
+            }
+        }
+        queue.close();
+
+        let mut results = Vec::with_capacity(points.len());
+        for res in rx {
+            results.push(res?);
+        }
+        Ok(results)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn points() -> Vec<SweepPoint> {
+        [15usize, 255, 1023]
+            .iter()
+            .map(|&k| SweepPoint { kind: TopologyKind::Clos, tiles: 1024, mem_kb: 128, k })
+            .collect()
+    }
+
+    #[test]
+    fn exact_sweep_multithreaded() {
+        let res = run_sweep(&points(), EvalMode::Exact, 3, 1).unwrap();
+        assert_eq!(res.len(), 3);
+        let mut by_k: Vec<_> = res.iter().map(|r| (r.point.k, r.mean_cycles)).collect();
+        by_k.sort_unstable_by_key(|&(k, _)| k);
+        assert_eq!(by_k[0].1, 19.0); // same-switch emulation
+        assert!(by_k[2].1 > by_k[1].1, "latency grows with k");
+    }
+
+    #[test]
+    fn native_mc_agrees_with_exact() {
+        let pts = points();
+        let exact = run_sweep(&pts, EvalMode::Exact, 2, 2).unwrap();
+        let mc = run_sweep(&pts, EvalMode::NativeMc { samples: 40_000 }, 2, 2).unwrap();
+        for e in &exact {
+            let m = mc.iter().find(|r| r.point == e.point).unwrap();
+            let rel = (e.mean_cycles - m.mean_cycles).abs() / e.mean_cycles;
+            assert!(rel < 0.02, "k={}: exact {} vs mc {}", e.point.k, e.mean_cycles, m.mean_cycles);
+        }
+    }
+
+    #[test]
+    fn results_cover_all_points() {
+        let pts: Vec<SweepPoint> = (1..32)
+            .map(|i| SweepPoint {
+                kind: if i % 2 == 0 { TopologyKind::Clos } else { TopologyKind::Mesh },
+                tiles: 1024,
+                mem_kb: 128,
+                k: 32 * i,
+            })
+            .collect();
+        let res = run_sweep(&pts, EvalMode::Exact, 4, 3).unwrap();
+        assert_eq!(res.len(), pts.len());
+        for p in &pts {
+            assert!(res.iter().any(|r| r.point == *p), "missing {p:?}");
+        }
+    }
+}

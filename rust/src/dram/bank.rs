@@ -1,0 +1,145 @@
+//! DRAM bank state machine.
+//!
+//! A bank is idle, activating a row, active, or precharging. Command
+//! legality is expressed as earliest-issue times derived from the JEDEC
+//! parameters; the controller advances time and issues commands when
+//! they become legal.
+
+use super::timing::DdrTiming;
+
+/// Bank state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BankState {
+    /// No open row.
+    Idle,
+    /// Row open (value = row id).
+    Active(u32),
+}
+
+/// One DRAM bank with its timing bookkeeping (times in device cycles).
+#[derive(Clone, Debug)]
+pub struct Bank {
+    state: BankState,
+    /// Earliest cycle an ACTIVATE may issue.
+    next_act: u64,
+    /// Earliest cycle a READ/WRITE may issue (after tRCD).
+    next_cas: u64,
+    /// Earliest cycle a PRECHARGE may issue.
+    next_pre: u64,
+    /// Cycle of the last ACTIVATE (for tRC accounting).
+    last_act: u64,
+}
+
+impl Default for Bank {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bank {
+    /// A fresh idle bank.
+    pub fn new() -> Self {
+        Self { state: BankState::Idle, next_act: 0, next_cas: 0, next_pre: 0, last_act: 0 }
+    }
+
+    /// Current state.
+    pub fn state(&self) -> BankState {
+        self.state
+    }
+
+    /// Earliest cycle an ACTIVATE may issue.
+    pub fn next_activate(&self) -> u64 {
+        self.next_act
+    }
+
+    /// Issue ACTIVATE at `now` (must be legal). The bank can accept a
+    /// CAS command tRCD later, a precharge tRAS later, and another
+    /// activate tRC later.
+    pub fn activate(&mut self, now: u64, row: u32, t: &DdrTiming) {
+        debug_assert!(now >= self.next_act, "ACT at {now} before legal {}", self.next_act);
+        debug_assert_eq!(self.state, BankState::Idle, "ACT on non-idle bank");
+        self.state = BankState::Active(row);
+        self.last_act = now;
+        self.next_cas = now + t.t_rcd as u64;
+        self.next_pre = now + t.t_ras as u64;
+        self.next_act = now + t.t_rc as u64; // same-bank ACT-to-ACT
+    }
+
+    /// Earliest cycle a READ/WRITE may issue.
+    pub fn next_cas(&self) -> u64 {
+        self.next_cas
+    }
+
+    /// Issue READ with auto-precharge at `now`. Returns the cycle the
+    /// last data beat is on the bus.
+    pub fn read_ap(&mut self, now: u64, t: &DdrTiming) -> u64 {
+        debug_assert!(now >= self.next_cas);
+        debug_assert!(matches!(self.state, BankState::Active(_)));
+        let data_end = now + (t.t_cl + t.t_burst()) as u64;
+        // Auto-precharge starts at max(now + tRTP, activate + tRAS).
+        let pre_start = (now + t.t_rtp as u64).max(self.next_pre);
+        self.state = BankState::Idle;
+        self.next_act = self.next_act.max(pre_start + t.t_rp as u64);
+        data_end
+    }
+
+    /// Issue WRITE with auto-precharge at `now`. Returns the cycle the
+    /// last data beat has been written (write completion as seen by the
+    /// controller: CWL + burst).
+    pub fn write_ap(&mut self, now: u64, t: &DdrTiming) -> u64 {
+        debug_assert!(now >= self.next_cas);
+        debug_assert!(matches!(self.state, BankState::Active(_)));
+        let data_end = now + (t.t_cwl + t.t_burst()) as u64;
+        // Precharge may start tWR after the last data beat.
+        let pre_start = (data_end + t.t_wr as u64).max(self.next_pre);
+        self.state = BankState::Idle;
+        self.next_act = self.next_act.max(pre_start + t.t_rp as u64);
+        data_end
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> DdrTiming {
+        DdrTiming::ddr3_1600()
+    }
+
+    #[test]
+    fn activate_read_cycle() {
+        let t = t();
+        let mut b = Bank::new();
+        b.activate(0, 42, &t);
+        assert_eq!(b.state(), BankState::Active(42));
+        assert_eq!(b.next_cas(), t.t_rcd as u64);
+        let data_end = b.read_ap(t.t_rcd as u64, &t);
+        assert_eq!(data_end, (t.t_rcd + t.t_cl + t.t_burst()) as u64);
+        assert_eq!(b.state(), BankState::Idle);
+    }
+
+    #[test]
+    fn trc_enforced_between_activates() {
+        let t = t();
+        let mut b = Bank::new();
+        b.activate(0, 1, &t);
+        b.read_ap(t.t_rcd as u64, &t);
+        // Earliest next ACT: max(tRC, pre_start + tRP); with tRTP after
+        // the read this is tRCD + tRTP + tRP = 28 < tRC=39 when tRAS
+        // dominates: pre_start = max(rcd+rtp, ras) = 28, +rp = 39 = tRC.
+        assert_eq!(b.next_activate(), t.t_rc as u64);
+    }
+
+    #[test]
+    fn write_recovery_delays_next_activate() {
+        let t = t();
+        let mut b = Bank::new();
+        b.activate(0, 1, &t);
+        let end = b.write_ap(t.t_rcd as u64, &t);
+        assert_eq!(end, (t.t_rcd + t.t_cwl + t.t_burst()) as u64);
+        // pre at end + tWR, then + tRP
+        let expect = end + (t.t_wr + t.t_rp) as u64;
+        assert_eq!(b.next_activate(), expect.max(t.t_rc as u64));
+        assert!(b.next_activate() > t.t_rc as u64, "writes are slower to turn around");
+    }
+}

@@ -1,0 +1,230 @@
+//! DDR3 memory controller: closed-page policy, one transaction at a
+//! time (the paper's measurement mode, §6.1).
+
+use anyhow::{bail, Result};
+
+use super::rank::Rank;
+use super::timing::DdrTiming;
+use crate::config::Doc;
+
+/// Transaction kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransactionKind {
+    /// Read one burst.
+    Read,
+    /// Write one burst.
+    Write,
+}
+
+/// One memory transaction.
+#[derive(Clone, Copy, Debug)]
+pub struct Transaction {
+    /// Byte address.
+    pub addr: u64,
+    /// Read or write.
+    pub kind: TransactionKind,
+}
+
+/// DRAM organisation (defaults: 1 GB rank of 8 x 1 Gb x8 devices).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DramConfig {
+    /// Ranks on the channel (1 rank = 1 GB).
+    pub ranks: usize,
+    /// Banks per rank (8 for DDR3).
+    pub banks: usize,
+    /// Rows per bank.
+    pub rows: u32,
+    /// Column bytes per row (page size x devices = 1 KB x 8 = 8 KB).
+    pub row_bytes: u32,
+    /// Data-bus width in bytes (64-bit channel).
+    pub bus_bytes: u32,
+}
+
+impl Default for DramConfig {
+    fn default() -> Self {
+        Self { ranks: 1, banks: 8, rows: 16384, row_bytes: 8192, bus_bytes: 8 }
+    }
+}
+
+impl DramConfig {
+    /// Config with `ranks` ranks and defaults otherwise.
+    pub fn with_ranks(ranks: usize) -> Self {
+        Self { ranks, ..Self::default() }
+    }
+
+    /// Build from a config doc (keys under `dram.`).
+    pub fn from_doc(doc: &Doc) -> Self {
+        let d = Self::default();
+        Self {
+            ranks: doc.int("dram.ranks", d.ranks as i64) as usize,
+            banks: doc.int("dram.banks", d.banks as i64) as usize,
+            rows: doc.int("dram.rows", d.rows as i64) as u32,
+            row_bytes: doc.int("dram.row_bytes", d.row_bytes as i64) as u32,
+            bus_bytes: doc.int("dram.bus_bytes", d.bus_bytes as i64) as u32,
+        }
+    }
+
+    /// Total capacity in bytes.
+    pub fn capacity_bytes(&self) -> u64 {
+        self.ranks as u64 * self.banks as u64 * self.rows as u64 * self.row_bytes as u64
+    }
+
+    /// Decompose a byte address into (rank, bank, row) — column bits
+    /// low, then bank (bank interleaving), then rank, then row.
+    pub fn map(&self, addr: u64) -> (usize, usize, u32) {
+        let a = addr % self.capacity_bytes();
+        let col_shift = self.row_bytes.trailing_zeros();
+        let after_col = a >> col_shift;
+        let bank = (after_col % self.banks as u64) as usize;
+        let after_bank = after_col / self.banks as u64;
+        let rank = (after_bank % self.ranks as u64) as usize;
+        let row = (after_bank / self.ranks as u64) as u32 % self.rows;
+        (rank, bank, row)
+    }
+}
+
+/// The controller: owns the ranks, issues ACT/RD/WR with auto-precharge
+/// under a closed-page policy, one transaction in flight at a time.
+#[derive(Clone, Debug)]
+pub struct DramController {
+    config: DramConfig,
+    timing: DdrTiming,
+    ranks: Vec<Rank>,
+    /// Rank of the previous CAS command (bus turnaround penalty).
+    last_rank: Option<usize>,
+    /// Device-cycle clock.
+    now: u64,
+}
+
+impl DramController {
+    /// New controller; validates the timing set.
+    pub fn new(config: DramConfig, timing: DdrTiming) -> Result<Self> {
+        if let Err(e) = timing.validate() {
+            bail!("invalid DDR timing: {e}");
+        }
+        if config.ranks == 0 || config.banks == 0 {
+            bail!("need at least one rank and bank");
+        }
+        if !config.row_bytes.is_power_of_two() {
+            bail!("row_bytes must be a power of two");
+        }
+        let ranks = (0..config.ranks).map(|_| Rank::new(config.banks)).collect();
+        Ok(Self { config, timing, ranks, last_rank: None, now: 0 })
+    }
+
+    /// The organisation.
+    pub fn config(&self) -> &DramConfig {
+        &self.config
+    }
+
+    /// Current device-cycle time.
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Process one transaction to completion; returns its latency in
+    /// nanoseconds (request issue to last data beat).
+    ///
+    /// The request is issued at the current time (the paper issues each
+    /// access only after the previous completed).
+    pub fn access(&mut self, tx: Transaction) -> f64 {
+        let t = self.timing;
+        let (rank_i, bank_i, row) = self.config.map(tx.addr);
+        let request_time = self.now;
+
+        // Command bus: one cycle to present the ACT.
+        let mut act_at = request_time + t.t_cmd as u64;
+        // Respect bank/rank activation constraints (closed page: the
+        // bank was auto-precharged after its previous access).
+        act_at = act_at.max(self.ranks[rank_i].next_activate(bank_i, &t));
+        self.ranks[rank_i].activate(bank_i, act_at, row, &t);
+
+        // CAS when legal; crossing ranks pays the bus turnaround.
+        let mut cas_at = self.ranks[rank_i].bank(bank_i).next_cas();
+        if let Some(last) = self.last_rank {
+            if last != rank_i {
+                cas_at += t.t_rtrs as u64;
+            }
+        }
+        self.last_rank = Some(rank_i);
+
+        let data_end = match tx.kind {
+            TransactionKind::Read => self.ranks[rank_i].bank_mut(bank_i).read_ap(cas_at, &t),
+            TransactionKind::Write => self.ranks[rank_i].bank_mut(bank_i).write_ap(cas_at, &t),
+        };
+
+        self.now = data_end;
+        t.to_ns(data_end - request_time)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl(ranks: usize) -> DramController {
+        DramController::new(DramConfig::with_ranks(ranks), DdrTiming::ddr3_1600()).unwrap()
+    }
+
+    #[test]
+    fn single_read_latency_is_ideal() {
+        let mut c = ctl(1);
+        let ns = c.access(Transaction { addr: 0x1234_5678, kind: TransactionKind::Read });
+        assert!((ns - c.timing.ideal_read_ns()).abs() < 1e-9, "ns={ns}");
+    }
+
+    #[test]
+    fn same_bank_back_to_back_pays_trc() {
+        let mut c = ctl(1);
+        let a = Transaction { addr: 0, kind: TransactionKind::Read };
+        c.access(a);
+        let ns = c.access(a); // same bank, same row -> closed page reopens
+        // The second ACT waits for tRC from the first: latency grows.
+        assert!(ns > c.timing.ideal_read_ns(), "ns={ns}");
+    }
+
+    #[test]
+    fn different_banks_hide_precharge() {
+        let mut c = ctl(1);
+        c.access(Transaction { addr: 0, kind: TransactionKind::Read });
+        // Next bank: addr + row_bytes maps to bank 1.
+        let ns = c.access(Transaction { addr: 8192, kind: TransactionKind::Read });
+        assert!((ns - c.timing.ideal_read_ns()).abs() < 1e-9, "ns={ns}");
+    }
+
+    #[test]
+    fn rank_switch_pays_turnaround() {
+        let mut c = ctl(2);
+        c.access(Transaction { addr: 0, kind: TransactionKind::Read });
+        // rank bit sits above the bank bits: banks=8 -> addr with
+        // after_col % 8 == 0 and (after_col/8) % 2 == 1.
+        let addr = 8192u64 * 8; // bank 0, rank 1
+        assert_eq!(c.config.map(addr), (1, 0, 0));
+        let ns = c.access(Transaction { addr, kind: TransactionKind::Read });
+        let expect = c.timing.ideal_read_ns() + c.timing.to_ns(c.timing.t_rtrs as u64);
+        assert!((ns - expect).abs() < 1e-9, "ns={ns} expect={expect}");
+    }
+
+    #[test]
+    fn address_map_is_total_and_in_range() {
+        let cfg = DramConfig::with_ranks(4);
+        for addr in [0u64, 1, 8191, 8192, 1 << 20, u64::MAX - 7] {
+            let (r, b, row) = cfg.map(addr);
+            assert!(r < 4 && b < 8 && row < cfg.rows);
+        }
+    }
+
+    #[test]
+    fn capacity_1gb_per_rank() {
+        assert_eq!(DramConfig::with_ranks(1).capacity_bytes(), 1 << 30);
+        assert_eq!(DramConfig::with_ranks(16).capacity_bytes(), 16 << 30);
+    }
+
+    #[test]
+    fn writes_complete() {
+        let mut c = ctl(1);
+        let ns = c.access(Transaction { addr: 64, kind: TransactionKind::Write });
+        // cmd + tRCD + CWL + burst = 1 + 11 + 8 + 4 = 24 cycles = 30 ns
+        assert!((ns - 30.0).abs() < 1e-9, "ns={ns}");
+    }
+}

@@ -1,0 +1,25 @@
+//! Cycle-level DDR3 DRAM simulator — the DRAMSim2-equivalent substrate
+//! for the paper's sequential baseline (§6.1).
+//!
+//! The paper measures the baseline with DRAMSim2: uniformly random
+//! reads/writes, one transaction in flight at a time (the controller
+//! waits for each access to complete before issuing the next), yielding
+//! an average random-access latency of **35 ns** for a single-rank 1 GB
+//! DDR3 system and **36 ns** for 2–16 GB multi-rank systems.
+//!
+//! This module reimplements that measurement: JEDEC DDR3-1600 command
+//! timing from the Micron MT41J 1 Gb datasheet ([`timing`]), per-bank
+//! state machines with tRRD/tFAW rank constraints ([`bank`], [`rank`]),
+//! a closed-page controller with rank-switch penalties
+//! ([`controller`]), and the random-access measurement harness
+//! ([`sim`]).
+
+pub mod bank;
+pub mod controller;
+pub mod rank;
+pub mod sim;
+pub mod timing;
+
+pub use controller::{DramConfig, DramController, Transaction, TransactionKind};
+pub use sim::{measure_random_latency, DramMeasurement};
+pub use timing::DdrTiming;

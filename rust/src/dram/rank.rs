@@ -1,0 +1,89 @@
+//! DRAM rank: a set of banks sharing tRRD / tFAW activation windows.
+
+use super::bank::Bank;
+use super::timing::DdrTiming;
+
+/// One rank (8 banks for DDR3) with rank-level activation constraints.
+#[derive(Clone, Debug)]
+pub struct Rank {
+    banks: Vec<Bank>,
+    /// Cycles of the last four ACTIVATEs (tFAW window), most recent last.
+    recent_acts: [u64; 4],
+    /// Total ACTIVATEs issued (tFAW applies once four are recorded).
+    acts_issued: u64,
+    /// Earliest next ACT due to tRRD.
+    next_act_rrd: u64,
+}
+
+impl Rank {
+    /// A rank with `banks` banks.
+    pub fn new(banks: usize) -> Self {
+        Self { banks: vec![Bank::new(); banks], recent_acts: [0; 4], acts_issued: 0, next_act_rrd: 0 }
+    }
+
+    /// Number of banks.
+    pub fn num_banks(&self) -> usize {
+        self.banks.len()
+    }
+
+    /// Access a bank.
+    pub fn bank(&self, i: usize) -> &Bank {
+        &self.banks[i]
+    }
+
+    /// Mutable access to a bank.
+    pub fn bank_mut(&mut self, i: usize) -> &mut Bank {
+        &mut self.banks[i]
+    }
+
+    /// Earliest cycle an ACTIVATE to `bank` may issue, considering the
+    /// bank's own timers plus rank-level tRRD and tFAW.
+    pub fn next_activate(&self, bank: usize, t: &DdrTiming) -> u64 {
+        // tFAW bounds the 5th ACT by the time of the 4th-most-recent.
+        let faw_bound = if self.acts_issued >= 4 {
+            self.recent_acts[0] + t.t_faw as u64
+        } else {
+            0
+        };
+        self.banks[bank].next_activate().max(self.next_act_rrd).max(faw_bound)
+    }
+
+    /// Issue ACTIVATE to `bank` at `now`.
+    pub fn activate(&mut self, bank: usize, now: u64, row: u32, t: &DdrTiming) {
+        debug_assert!(now >= self.next_activate(bank, t));
+        self.banks[bank].activate(now, row, t);
+        self.recent_acts.rotate_left(1);
+        self.recent_acts[3] = now;
+        self.acts_issued += 1;
+        self.next_act_rrd = now + t.t_rrd as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trrd_spaces_activates_across_banks() {
+        let t = DdrTiming::ddr3_1600();
+        let mut r = Rank::new(8);
+        r.activate(0, 0, 1, &t);
+        assert_eq!(r.next_activate(1, &t), t.t_rrd as u64);
+        // same bank still bounded by tRC
+        assert_eq!(r.next_activate(0, &t), t.t_rc as u64);
+    }
+
+    #[test]
+    fn tfaw_limits_burst_of_activates() {
+        let t = DdrTiming::ddr3_1600();
+        let mut r = Rank::new(8);
+        let mut now = 0;
+        for b in 0..4 {
+            now = r.next_activate(b, &t);
+            r.activate(b, now, 0, &t);
+        }
+        // The 5th activate must wait for the tFAW window from the 1st.
+        let fifth = r.next_activate(4, &t);
+        assert!(fifth >= t.t_faw as u64, "fifth ACT at {fifth} < tFAW {}", t.t_faw);
+    }
+}

@@ -1,0 +1,95 @@
+//! Random-access latency measurement (the paper's §6.1 methodology).
+//!
+//! Reads and writes to uniformly random addresses, one transaction at a
+//! time; the fixed baseline latency is the average. Expected results
+//! (validated in tests): ~35 ns for one rank, ~36 ns for 2–16 ranks.
+
+use anyhow::Result;
+
+use super::controller::{DramConfig, DramController, Transaction, TransactionKind};
+use super::timing::DdrTiming;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+/// Result of a random-access measurement.
+#[derive(Clone, Debug)]
+pub struct DramMeasurement {
+    /// Organisation measured.
+    pub config: DramConfig,
+    /// Number of accesses.
+    pub accesses: u64,
+    /// Average latency, ns.
+    pub avg_ns: f64,
+    /// Min/max observed latency, ns.
+    pub min_ns: f64,
+    /// Max observed latency, ns.
+    pub max_ns: f64,
+    /// Standard deviation, ns.
+    pub stddev_ns: f64,
+}
+
+/// Measure average random-access latency over `n` accesses (half reads,
+/// half writes, shuffled), seeded deterministically.
+pub fn measure_random_latency(
+    config: DramConfig,
+    n: u64,
+    seed: u64,
+) -> Result<DramMeasurement> {
+    let mut ctl = DramController::new(config, DdrTiming::ddr3_1600())?;
+    let mut rng = Rng::new(seed);
+    let capacity = config.capacity_bytes();
+    let mut stats = Summary::new();
+    for _ in 0..n {
+        let addr = rng.below(capacity) & !7; // burst-aligned
+        let kind = if rng.chance(0.5) { TransactionKind::Read } else { TransactionKind::Write };
+        let ns = ctl.access(Transaction { addr, kind });
+        stats.add(ns);
+    }
+    Ok(DramMeasurement {
+        config,
+        accesses: n,
+        avg_ns: stats.mean(),
+        min_ns: stats.min(),
+        max_ns: stats.max(),
+        stddev_ns: stats.stddev(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_rank_near_35ns() {
+        // Paper §6.1: 35 ns average for a 1 GB single-rank system.
+        let m = measure_random_latency(DramConfig::with_ranks(1), 20_000, 1).unwrap();
+        assert!((m.avg_ns - 35.0).abs() < 2.0, "avg={}", m.avg_ns);
+    }
+
+    #[test]
+    fn multi_rank_near_36ns_and_slower_than_single() {
+        // Paper §6.1: 36 ns for 2-16 GB multi-rank systems.
+        let single = measure_random_latency(DramConfig::with_ranks(1), 20_000, 2).unwrap();
+        for ranks in [2usize, 4, 16] {
+            let m = measure_random_latency(DramConfig::with_ranks(ranks), 20_000, 2).unwrap();
+            assert!((m.avg_ns - 36.0).abs() < 2.0, "ranks={ranks} avg={}", m.avg_ns);
+            assert!(m.avg_ns > single.avg_ns, "rank switching must cost");
+        }
+    }
+
+    #[test]
+    fn latency_floor_is_ideal_read() {
+        let m = measure_random_latency(DramConfig::with_ranks(1), 5_000, 3).unwrap();
+        let ideal = DdrTiming::ddr3_1600().ideal_read_ns();
+        // Writes complete faster (CWL < CL); floor is the write time.
+        assert!(m.min_ns >= 29.9, "min={}", m.min_ns);
+        assert!(m.avg_ns >= ideal - 4.0);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = measure_random_latency(DramConfig::with_ranks(2), 2_000, 42).unwrap();
+        let b = measure_random_latency(DramConfig::with_ranks(2), 2_000, 42).unwrap();
+        assert_eq!(a.avg_ns, b.avg_ns);
+    }
+}

@@ -1,0 +1,121 @@
+//! JEDEC DDR3 command timing (Micron MT41J128M8JP-125, DDR3-1600).
+//!
+//! All parameters are stored in device clock cycles (tCK = 1.25 ns at
+//! 800 MHz; data is transferred on both edges, so a burst of 8 occupies
+//! 4 clocks).
+
+/// DDR3 timing parameter set, in device clock cycles.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DdrTiming {
+    /// Device clock period, ns.
+    pub t_ck_ns: f64,
+    /// CAS latency (READ to first data).
+    pub t_cl: u32,
+    /// RAS-to-CAS delay (ACTIVATE to READ/WRITE).
+    pub t_rcd: u32,
+    /// Row precharge time (PRECHARGE to ACTIVATE).
+    pub t_rp: u32,
+    /// Row active time (ACTIVATE to PRECHARGE, minimum).
+    pub t_ras: u32,
+    /// Row cycle time (ACTIVATE to ACTIVATE, same bank).
+    pub t_rc: u32,
+    /// ACTIVATE to ACTIVATE, different banks, same rank.
+    pub t_rrd: u32,
+    /// Four-activate window, same rank.
+    pub t_faw: u32,
+    /// READ to PRECHARGE delay.
+    pub t_rtp: u32,
+    /// Write recovery time (end of write data to PRECHARGE).
+    pub t_wr: u32,
+    /// Write latency (WRITE to first data).
+    pub t_cwl: u32,
+    /// Burst length in beats (8 for DDR3).
+    pub burst_len: u32,
+    /// Rank-to-rank switch penalty (bus turnaround), cycles.
+    pub t_rtrs: u32,
+    /// Command/address bus transfer time, cycles.
+    pub t_cmd: u32,
+}
+
+impl DdrTiming {
+    /// DDR3-1600 CL11 (Micron MT41J...-125 speed grade; paper §6.1).
+    pub fn ddr3_1600() -> Self {
+        Self {
+            t_ck_ns: 1.25,
+            t_cl: 11,   // 13.75 ns
+            t_rcd: 11,  // 13.75 ns
+            t_rp: 11,   // 13.75 ns
+            t_ras: 28,  // 35 ns
+            t_rc: 39,   // 48.75 ns
+            t_rrd: 5,   // 6.25 ns (x8, 1KB page)
+            t_faw: 24,  // 30 ns
+            t_rtp: 6,   // 7.5 ns
+            t_wr: 12,   // 15 ns
+            t_cwl: 8,   // 10 ns
+            burst_len: 8,
+            t_rtrs: 4,  // 5 ns bus turnaround + ODT switch (DRAMSim2-like)
+            t_cmd: 1,
+        }
+    }
+
+    /// Burst transfer time in clock cycles (double data rate).
+    pub fn t_burst(&self) -> u32 {
+        self.burst_len / 2
+    }
+
+    /// Convert device cycles to nanoseconds.
+    pub fn to_ns(&self, cycles: u64) -> f64 {
+        cycles as f64 * self.t_ck_ns
+    }
+
+    /// Check JEDEC self-consistency invariants.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.t_rc < self.t_ras + self.t_rp {
+            return Err(format!(
+                "tRC ({}) must be >= tRAS + tRP ({})",
+                self.t_rc,
+                self.t_ras + self.t_rp
+            ));
+        }
+        if self.t_faw < self.t_rrd {
+            return Err("tFAW must cover at least one tRRD".into());
+        }
+        if self.burst_len % 2 != 0 {
+            return Err("burst length must be even (DDR)".into());
+        }
+        Ok(())
+    }
+
+    /// Idealised closed-page read latency (command + tRCD + CL + burst
+    /// midpoint), ns — the floor the simulator should approach on
+    /// bank-conflict-free streams.
+    pub fn ideal_read_ns(&self) -> f64 {
+        self.to_ns((self.t_cmd + self.t_rcd + self.t_cl + self.t_burst()) as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ddr3_1600_is_valid() {
+        DdrTiming::ddr3_1600().validate().unwrap();
+    }
+
+    #[test]
+    fn key_latencies_in_ns() {
+        let t = DdrTiming::ddr3_1600();
+        assert!((t.to_ns(t.t_cl as u64) - 13.75).abs() < 1e-9);
+        assert!((t.to_ns(t.t_rc as u64) - 48.75).abs() < 1e-9);
+        // ideal random read ~ 1.25 + 13.75 + 13.75 + 5 = 33.75 ns
+        assert!((t.ideal_read_ns() - 33.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validation_catches_inconsistency() {
+        let mut t = DdrTiming::ddr3_1600();
+        t.t_rc = 10;
+        assert!(t.validate().is_err());
+    }
+}

@@ -1,0 +1,111 @@
+//! Emulated-memory address map: block distribution of the address range
+//! over the memory tiles.
+//!
+//! Memory tile rank `r` holds words `[r*W, (r+1)*W)`; rank `r` is
+//! physical tile `(client + 1 + r) mod tiles`, so small emulations stay
+//! on the client's switch/block wherever the client sits. This mapping
+//! is mirrored by the AOT kernel (contract v1) — the
+//! `native_matches_kernel_params` tests prove the two agree.
+
+/// Address-to-tile mapping for one emulation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AddressMap {
+    /// log2 of the words each memory tile holds.
+    pub log2_words_per_tile: u32,
+    /// Number of memory tiles.
+    pub k: usize,
+    /// Client tile index (excluded from the memory pool).
+    pub client: usize,
+    /// Total system tiles.
+    pub tiles: usize,
+}
+
+impl AddressMap {
+    /// New map; `k` must leave room for the client.
+    pub fn new(log2_words_per_tile: u32, k: usize, client: usize, tiles: usize) -> Self {
+        assert!(k < tiles, "k={k} must leave the client tile free (tiles={tiles})");
+        assert!(client < tiles);
+        Self { log2_words_per_tile, k, client, tiles }
+    }
+
+    /// Size of the emulated address space in words.
+    pub fn space_words(&self) -> u64 {
+        (self.k as u64) << self.log2_words_per_tile
+    }
+
+    /// Memory-tile rank holding a word address.
+    pub fn rank_of(&self, addr: u64) -> usize {
+        debug_assert!(addr < self.space_words());
+        (addr >> self.log2_words_per_tile) as usize
+    }
+
+    /// Physical tile holding a word address.
+    pub fn tile_of(&self, addr: u64) -> usize {
+        (self.client + 1 + self.rank_of(addr)) % self.tiles
+    }
+
+    /// Physical tile of a memory rank.
+    pub fn tile_of_rank(&self, r: usize) -> usize {
+        debug_assert!(r < self.k);
+        (self.client + 1 + r) % self.tiles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn block_distribution() {
+        let m = AddressMap::new(14, 255, 0, 1024);
+        assert_eq!(m.space_words(), 255 << 14);
+        assert_eq!(m.tile_of(0), 1);
+        assert_eq!(m.tile_of((1 << 14) - 1), 1);
+        assert_eq!(m.tile_of(1 << 14), 2);
+        assert_eq!(m.tile_of((255u64 << 14) - 1), 255);
+    }
+
+    #[test]
+    fn client_tile_never_used() {
+        check(
+            |r: &mut Rng| {
+                let tiles = 1usize << r.range(4, 11);
+                let client = r.below(tiles as u64) as usize;
+                let k = 1 + r.below((tiles - 1) as u64) as usize;
+                let map = AddressMap::new(12, k, client, tiles);
+                let addr = r.below(map.space_words());
+                (map, addr)
+            },
+            |&(map, addr)| {
+                let t = map.tile_of(addr);
+                ensure(t != map.client, format!("tile {t} == client"))?;
+                ensure(t < map.tiles, "tile out of range")
+            },
+        );
+    }
+
+    #[test]
+    fn ranks_map_to_distinct_tiles() {
+        let m = AddressMap::new(12, 100, 57, 128);
+        let mut seen = std::collections::HashSet::new();
+        for r in 0..m.k {
+            assert!(seen.insert(m.tile_of_rank(r)), "duplicate tile for rank {r}");
+        }
+        assert!(!seen.contains(&57));
+    }
+
+    #[test]
+    fn wraps_around_client() {
+        let m = AddressMap::new(10, 7, 6, 8);
+        let tiles: Vec<usize> = (0..7).map(|r| m.tile_of_rank(r)).collect();
+        assert_eq!(tiles, vec![7, 0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "must leave the client tile free")]
+    fn k_equal_tiles_rejected() {
+        AddressMap::new(10, 8, 0, 8);
+    }
+}

@@ -1,0 +1,70 @@
+//! Communication-sequence semantics of emulated memory accesses
+//! (paper §2.1) and the resulting instruction expansion (§7.3).
+//!
+//! A load from the emulated memory becomes
+//!
+//! ```text
+//! LOAD dest, addr  ->  SEND c, READ ; SEND c, addr ; RECV c, dest
+//! ```
+//!
+//! (two extra instructions) and a store becomes
+//!
+//! ```text
+//! STORE value, addr  ->  SEND c, WRITE ; SEND c, addr ; SEND c, value
+//! ```
+//!
+//! (plus a completion acknowledgement; three extra instructions of
+//! binary growth per §7.3).
+
+use crate::isa::inst::Inst;
+
+/// Extra instructions an emulated load costs over a direct load (§7.3).
+pub const LOAD_EXTRA_INSTRS: usize = 2;
+
+/// Extra instructions an emulated store costs over a direct store.
+pub const STORE_EXTRA_INSTRS: usize = 3;
+
+/// Message tag for a read request.
+pub const MSG_READ: u32 = 0;
+
+/// Message tag for a write request.
+pub const MSG_WRITE: u32 = 1;
+
+/// Expand a global load `dest <- [addr]` into its communication
+/// sequence.
+pub fn expand_load(dest: u8, addr_reg: u8) -> Vec<Inst> {
+    vec![
+        Inst::SendImm { chan: 0, value: MSG_READ },
+        Inst::Send { chan: 0, src: addr_reg },
+        Inst::Recv { chan: 0, dest },
+    ]
+}
+
+/// Expand a global store `[addr] <- src` into its communication
+/// sequence (the final receive is the write acknowledgement that keeps
+/// the memory sequentially consistent).
+pub fn expand_store(src: u8, addr_reg: u8) -> Vec<Inst> {
+    vec![
+        Inst::SendImm { chan: 0, value: MSG_WRITE },
+        Inst::Send { chan: 0, src: addr_reg },
+        Inst::Send { chan: 0, src },
+        Inst::RecvAck { chan: 0 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_expansion_overhead() {
+        // 1 direct LOAD -> 3 instructions: +2 (§7.3).
+        assert_eq!(expand_load(1, 2).len(), 1 + LOAD_EXTRA_INSTRS);
+    }
+
+    #[test]
+    fn store_expansion_overhead() {
+        // 1 direct STORE -> 4 instructions: +3 (§7.3).
+        assert_eq!(expand_store(1, 2).len(), 1 + STORE_EXTRA_INSTRS);
+    }
+}

@@ -1,0 +1,324 @@
+//! One emulated-memory design point (paper §2.1 + §6.3 + §4/§5).
+//!
+//! [`EmulationSetup`] glues the stack together: it builds the topology,
+//! floorplans the chip, packages it on the interposer, derives the
+//! per-link-class latencies, places the client and the memory tiles,
+//! and exposes three equivalent evaluations of the per-access latency:
+//!
+//! 1. `access_cycles` / `native_batch` — native rust (the fallback and
+//!    the oracle for the XLA path);
+//! 2. `expected_latency` — the exact expectation over uniform
+//!    addresses (closed form, O(k));
+//! 3. `kernel_params` — the contract-v1 encoding executed by
+//!    [`crate::runtime::LatencyEngine`] on the AOT artifact.
+
+use anyhow::Result;
+
+use super::address_map::AddressMap;
+use crate::netmodel::{KernelParams, LatencyModel, LinkLatencies, NetParams};
+use crate::tech::{ChipTech, InterposerTech};
+use crate::topology::{ClosSpec, FoldedClos, Mesh2D, MeshSpec, Topology};
+use crate::util::rng::Rng;
+use crate::vlsi::{ClosFloorplan, MeshFloorplan, PackagedSystem};
+
+/// Which interconnect the system uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// Folded Clos (the paper's proposal).
+    Clos,
+    /// 2D mesh (the paper's baseline).
+    Mesh,
+}
+
+impl TopologyKind {
+    /// Parse from a config string.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "clos" => Ok(TopologyKind::Clos),
+            "mesh" => Ok(TopologyKind::Mesh),
+            other => anyhow::bail!("unknown topology `{other}` (clos|mesh)"),
+        }
+    }
+}
+
+/// A fully-instantiated design point.
+#[derive(Clone, Debug)]
+pub struct EmulationSetup {
+    /// The explicit network.
+    pub topo: Topology,
+    /// Tile memory capacity, KB.
+    pub mem_kb: u32,
+    /// Address map over the memory tiles.
+    pub map: AddressMap,
+    /// The analytic latency model with floorplan-derived links.
+    pub model: LatencyModel,
+    /// Chip count of the system.
+    pub chips: usize,
+}
+
+impl EmulationSetup {
+    /// Build a design point: a `system_tiles` system with `mem_kb` of
+    /// SRAM per tile, emulating a memory over `k` tiles.
+    ///
+    /// The client runs on tile 0 for the Clos (the network is
+    /// symmetric) and on the centre block for the mesh (the natural
+    /// placement; see DESIGN.md).
+    pub fn build(
+        kind: TopologyKind,
+        system_tiles: usize,
+        mem_kb: u32,
+        k: usize,
+        net: NetParams,
+        chip_tech: &ChipTech,
+        ip_tech: &InterposerTech,
+    ) -> Result<Self> {
+        anyhow::ensure!(k >= 1 && k < system_tiles, "1 <= k < tiles required (k={k})");
+        // Words are 32-bit: mem_kb KB = mem_kb * 256 words.
+        let log2_wpt = (mem_kb as u64 * 256).trailing_zeros();
+        anyhow::ensure!(
+            (mem_kb as u64 * 256).is_power_of_two(),
+            "tile capacity must be a power of two ({mem_kb} KB)"
+        );
+
+        let (topo, links, client, chips) = match kind {
+            TopologyKind::Clos => {
+                let spec = ClosSpec::with_tiles(system_tiles);
+                let fp = ClosFloorplan::plan(&spec, mem_kb, chip_tech)?;
+                let pkg = PackagedSystem::clos(spec.chips(), &fp, chip_tech, ip_tech)?;
+                let links = LinkLatencies {
+                    tile: fp.cycles.tile as f64,
+                    edge_core: fp.cycles.edge_core as f64,
+                    // chip pad run + interposer channel + remote pad run
+                    core_sys: (2 * fp.cycles.core_pad + pkg.interposer_cycles) as f64,
+                    mesh_hop: 0.0,
+                    mesh_cross_extra: 0.0,
+                };
+                let topo = Topology::Clos(FoldedClos::build(spec)?);
+                (topo, links, 0usize, spec.chips())
+            }
+            TopologyKind::Mesh => {
+                let spec = MeshSpec::with_tiles(system_tiles);
+                let fp = MeshFloorplan::plan(&spec, mem_kb, chip_tech)?;
+                let pkg = PackagedSystem::mesh(spec.chips(), &fp, chip_tech, ip_tech)?;
+                let links = LinkLatencies {
+                    tile: fp.cycles.tile as f64,
+                    edge_core: 0.0,
+                    core_sys: 0.0,
+                    mesh_hop: fp.cycles.mesh_hop as f64,
+                    mesh_cross_extra: pkg.interposer_cycles as f64,
+                };
+                let mesh = Mesh2D::build(spec)?;
+                // Client at the centre block's first tile.
+                let bx = spec.blocks_x();
+                let centre_block = (bx / 2) * bx + bx / 2;
+                let client = centre_block * spec.tiles_per_block;
+                (Topology::Mesh(mesh), links, client, spec.chips())
+            }
+        };
+
+        let map = AddressMap::new(log2_wpt, k, client, system_tiles);
+        let model = LatencyModel::new(net, links);
+        Ok(Self { topo, mem_kb, map, model, chips })
+    }
+
+    /// Convenience: build with default technology and Table 5 params.
+    pub fn default_tech(
+        kind: TopologyKind,
+        system_tiles: usize,
+        mem_kb: u32,
+        k: usize,
+    ) -> Result<Self> {
+        Self::build(
+            kind,
+            system_tiles,
+            mem_kb,
+            k,
+            NetParams::default(),
+            &ChipTech::default(),
+            &InterposerTech::default(),
+        )
+    }
+
+    /// Round-trip latency (cycles) of one access to a word address.
+    pub fn access_cycles(&self, addr: u64) -> f64 {
+        let tile = self.map.tile_of(addr);
+        self.model.access(&self.topo, self.map.client, tile)
+    }
+
+    /// Native evaluation of a batch of addresses (mirrors the AOT
+    /// kernel bit-for-bit in f32).
+    pub fn native_batch(&self, addresses: &[i32], out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(addresses.len());
+        for &a in addresses {
+            out.push(self.access_cycles(a as u64) as f32);
+        }
+    }
+
+    /// Exact expected access latency over uniform addresses: every
+    /// memory rank is equally likely, so this is the mean over ranks.
+    pub fn expected_latency(&self) -> f64 {
+        let mut sum = 0.0;
+        for r in 0..self.map.k {
+            let tile = self.map.tile_of_rank(r);
+            sum += self.model.access(&self.topo, self.map.client, tile);
+        }
+        sum / self.map.k as f64
+    }
+
+    /// Monte-Carlo estimate of the expected latency (native path).
+    pub fn mc_latency(&self, n: usize, seed: u64) -> f64 {
+        let mut rng = Rng::new(seed);
+        let space = self.map.space_words();
+        let mut sum = 0.0;
+        for _ in 0..n {
+            sum += self.access_cycles(rng.below(space));
+        }
+        sum / n as f64
+    }
+
+    /// Contract-v1 encoding for the AOT kernel.
+    pub fn kernel_params(&self) -> KernelParams {
+        let mut ip = [0i32; 16];
+        let mut fp = [0f32; 16];
+        let net = &self.model.net;
+        let links = &self.model.links;
+
+        ip[KernelParams::IP_LOG2_WPT] = self.map.log2_words_per_tile as i32;
+        ip[KernelParams::IP_K] = self.map.k as i32;
+        ip[KernelParams::IP_ROUTE_OPEN] = net.route_open as i32;
+        ip[KernelParams::IP_CLIENT] = self.map.client as i32;
+        ip[KernelParams::IP_TILES] = self.map.tiles as i32;
+        match &self.topo {
+            Topology::Clos(c) => {
+                let spec = c.spec();
+                ip[KernelParams::IP_TOPO] = 0;
+                ip[KernelParams::IP_LOG2_G0] = spec.tiles_per_edge.trailing_zeros() as i32;
+                ip[KernelParams::IP_LOG2_G1] =
+                    spec.tiles_per_chip.min(spec.tiles).trailing_zeros() as i32;
+                // Mesh fields unused but must be non-zero for the
+                // kernel's divisions.
+                ip[KernelParams::IP_LOG2_BLOCK] = 4;
+                ip[KernelParams::IP_BLOCKS_X] = 1;
+                ip[KernelParams::IP_CHIP_BLOCKS_X] = 1;
+            }
+            Topology::Mesh(m) => {
+                let spec = m.spec();
+                ip[KernelParams::IP_TOPO] = 1;
+                ip[KernelParams::IP_LOG2_BLOCK] = spec.tiles_per_block.trailing_zeros() as i32;
+                ip[KernelParams::IP_BLOCKS_X] = spec.blocks_x() as i32;
+                ip[KernelParams::IP_CHIP_BLOCKS_X] =
+                    spec.chip_blocks_x.min(spec.blocks_x()) as i32;
+                ip[KernelParams::IP_LOG2_G0] = 4;
+                ip[KernelParams::IP_LOG2_G1] = 8;
+            }
+        }
+
+        fp[KernelParams::FP_T_TILE] = links.tile as f32;
+        fp[KernelParams::FP_T_SWITCH] = net.t_switch as f32;
+        fp[KernelParams::FP_T_OPEN] = net.t_open as f32;
+        fp[KernelParams::FP_C_CONT] = net.c_cont as f32;
+        fp[KernelParams::FP_SER_INTRA] = net.t_serial_intra as f32;
+        fp[KernelParams::FP_SER_INTER] = net.t_serial_inter as f32;
+        fp[KernelParams::FP_T_MEM] = net.t_mem as f32;
+        fp[KernelParams::FP_LINK_EDGE_CORE] = links.edge_core as f32;
+        fp[KernelParams::FP_LINK_CORE_SYS] = links.core_sys as f32;
+        fp[KernelParams::FP_MESH_LINK] = links.mesh_hop as f32;
+        fp[KernelParams::FP_MESH_CROSS_EXTRA] = links.mesh_cross_extra as f32;
+
+        KernelParams { iparams: ip, fparams: fp }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clos_small_emulation_is_fast() {
+        // <=15 tiles on the client's edge switch: single-switch round
+        // trips, faster than the 35 ns DDR3 baseline (paper §7.2).
+        let e = EmulationSetup::default_tech(TopologyKind::Clos, 1024, 128, 15).unwrap();
+        let lat = e.expected_latency();
+        assert!(lat < 35.0, "latency {lat}");
+        assert_eq!(lat, 19.0); // d=0 everywhere with 1-cycle tile links
+    }
+
+    #[test]
+    fn clos_latency_grows_with_k() {
+        let mut prev = 0.0;
+        for k in [15usize, 255, 1023, 2047] {
+            let e = EmulationSetup::default_tech(TopologyKind::Clos, 4096, 128, k).unwrap();
+            let lat = e.expected_latency();
+            assert!(lat >= prev, "latency must grow with k ({lat} < {prev})");
+            prev = lat;
+        }
+    }
+
+    #[test]
+    fn clos_full_emulation_in_paper_band() {
+        // §7.1: absolute latency within factor 2-5 of the 35 ns DDR3.
+        for tiles in [1024usize, 4096] {
+            let e =
+                EmulationSetup::default_tech(TopologyKind::Clos, tiles, 128, tiles - 1).unwrap();
+            let lat = e.expected_latency();
+            assert!(
+                lat > 2.0 * 35.0 && lat < 5.0 * 35.0,
+                "tiles={tiles}: latency {lat} outside 2-5x DDR3"
+            );
+        }
+    }
+
+    #[test]
+    fn mesh_client_at_centre() {
+        let e = EmulationSetup::default_tech(TopologyKind::Mesh, 1024, 128, 1023).unwrap();
+        assert_eq!(e.map.client, (4 * 8 + 4) * 16);
+        // Small mesh emulation also fast (client's own block first).
+        let small = EmulationSetup::default_tech(TopologyKind::Mesh, 1024, 128, 15).unwrap();
+        assert_eq!(small.expected_latency(), 19.0);
+    }
+
+    #[test]
+    fn mesh_worse_than_clos_at_scale() {
+        // §7.1: mesh incurs 30-40% overhead at larger multi-chip sizes
+        // (we accept a broad band; exact client placement differs).
+        let clos = EmulationSetup::default_tech(TopologyKind::Clos, 4096, 128, 4095).unwrap();
+        let mesh = EmulationSetup::default_tech(TopologyKind::Mesh, 4096, 128, 4095).unwrap();
+        let ratio = mesh.expected_latency() / clos.expected_latency();
+        assert!(ratio > 1.1, "mesh/clos = {ratio}");
+    }
+
+    #[test]
+    fn expected_matches_monte_carlo() {
+        let e = EmulationSetup::default_tech(TopologyKind::Clos, 1024, 128, 767).unwrap();
+        let exact = e.expected_latency();
+        let mc = e.mc_latency(40_000, 99);
+        assert!((exact - mc).abs() / exact < 0.01, "exact={exact} mc={mc}");
+    }
+
+    #[test]
+    fn native_batch_matches_scalar() {
+        let e = EmulationSetup::default_tech(TopologyKind::Mesh, 1024, 64, 900).unwrap();
+        let addrs: Vec<i32> = (0..512).map(|i| (i * 7919) % (900 << 14)).collect();
+        let mut out = Vec::new();
+        e.native_batch(&addrs, &mut out);
+        for (i, &a) in addrs.iter().enumerate() {
+            assert_eq!(out[i], e.access_cycles(a as u64) as f32);
+        }
+    }
+
+    #[test]
+    fn kernel_params_encoding() {
+        let e = EmulationSetup::default_tech(TopologyKind::Clos, 1024, 128, 1023).unwrap();
+        let p = e.kernel_params();
+        assert_eq!(p.iparams[KernelParams::IP_TOPO], 0);
+        assert_eq!(p.iparams[KernelParams::IP_LOG2_WPT], 15);
+        assert_eq!(p.iparams[KernelParams::IP_K], 1023);
+        assert_eq!(p.iparams[KernelParams::IP_TILES], 1024);
+        assert_eq!(p.fparams[KernelParams::FP_T_SWITCH], 2.0);
+        let m = EmulationSetup::default_tech(TopologyKind::Mesh, 256, 64, 100).unwrap();
+        let q = m.kernel_params();
+        assert_eq!(q.iparams[KernelParams::IP_TOPO], 1);
+        assert_eq!(q.iparams[KernelParams::IP_BLOCKS_X], 4);
+    }
+}

@@ -1,0 +1,22 @@
+//! The paper's contribution: emulating a large memory with a collection
+//! of small ones (§2.1), plus the sequential baseline machine (§6.1).
+//!
+//! * [`address_map`] — distributes the emulated address range over the
+//!   memory tiles (mirrors the AOT kernel's mapping exactly).
+//! * [`machine`] — [`EmulationSetup`]: one design point (topology,
+//!   floorplan-derived link latencies, emulation size), with native
+//!   evaluation of per-access latency, the exact expected latency, and
+//!   the `KernelParams` encoding for the XLA hot path.
+//! * [`sequential`] — the baseline: same processor, DDR3 memory.
+//! * [`controller`] — the communication-sequence semantics of emulated
+//!   loads/stores (instruction expansion, §2.1 / §7.3).
+
+pub mod address_map;
+pub mod controller;
+pub mod machine;
+pub mod sequential;
+
+pub use address_map::AddressMap;
+pub use controller::{LOAD_EXTRA_INSTRS, STORE_EXTRA_INSTRS};
+pub use machine::{EmulationSetup, TopologyKind};
+pub use sequential::SequentialMachine;

@@ -1,0 +1,94 @@
+//! The sequential baseline machine (paper §6.1): the same 1 GHz
+//! processor connected to a DDR3 DRAM system. Local accesses cost one
+//! cycle (equivalently: a fast cache with the benchmarks' 80–90% hit
+//! rate); global accesses cost the measured DRAM random-access latency.
+
+use once_cell::sync::Lazy;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::dram::{measure_random_latency, DramConfig};
+
+/// Cache of measured DRAM latencies per rank count (the measurement is
+/// deterministic, so memoising is sound).
+static DRAM_CACHE: Lazy<Mutex<HashMap<usize, f64>>> = Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// The sequential baseline machine.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SequentialMachine {
+    /// Average DRAM random-access latency, ns.
+    pub dram_ns: f64,
+    /// Clock rate, GHz (1 GHz in the paper, so cycles == ns).
+    pub clock_ghz: f64,
+}
+
+impl SequentialMachine {
+    /// Baseline with a measured DDR3 latency for `ranks` ranks
+    /// (1 rank = 1 GB). The measurement is run once and cached.
+    pub fn with_measured_dram(ranks: usize) -> Self {
+        let mut cache = DRAM_CACHE.lock().unwrap();
+        let ns = *cache.entry(ranks).or_insert_with(|| {
+            measure_random_latency(DramConfig::with_ranks(ranks), 20_000, 0xD3A)
+                .expect("default DDR3 config is valid")
+                .avg_ns
+        });
+        Self { dram_ns: ns, clock_ghz: 1.0 }
+    }
+
+    /// Baseline with the paper's quoted figures (35 ns single rank,
+    /// 36 ns multi-rank) without running the simulator.
+    pub fn paper_figures(multi_rank: bool) -> Self {
+        Self { dram_ns: if multi_rank { 36.0 } else { 35.0 }, clock_ghz: 1.0 }
+    }
+
+    /// Cycles per global (DRAM) access.
+    pub fn global_access_cycles(&self) -> f64 {
+        self.dram_ns * self.clock_ghz
+    }
+
+    /// Cycles per local access (program/stack/constants).
+    pub fn local_access_cycles(&self) -> f64 {
+        1.0
+    }
+
+    /// Cycles per non-memory instruction.
+    pub fn alu_cycles(&self) -> f64 {
+        1.0
+    }
+
+    /// Expected cycles per instruction for a (global, local) mix.
+    pub fn cpi(&self, global_frac: f64, local_frac: f64) -> f64 {
+        let non_mem = 1.0 - global_frac - local_frac;
+        non_mem * self.alu_cycles()
+            + local_frac * self.local_access_cycles()
+            + global_frac * self.global_access_cycles()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measured_dram_near_paper() {
+        let m = SequentialMachine::with_measured_dram(1);
+        assert!((m.dram_ns - 35.0).abs() < 2.0, "dram={}", m.dram_ns);
+        let multi = SequentialMachine::with_measured_dram(4);
+        assert!(multi.dram_ns > m.dram_ns);
+        assert!((multi.dram_ns - 36.0).abs() < 2.0);
+    }
+
+    #[test]
+    fn measurement_is_cached() {
+        let a = SequentialMachine::with_measured_dram(2);
+        let b = SequentialMachine::with_measured_dram(2);
+        assert_eq!(a.dram_ns, b.dram_ns);
+    }
+
+    #[test]
+    fn cpi_dhrystone_mix() {
+        // 15% global, 20% local at 35 ns: 0.65 + 0.20 + 0.15*35 = 6.1
+        let m = SequentialMachine::paper_figures(false);
+        assert!((m.cpi(0.15, 0.20) - 6.1).abs() < 1e-12);
+    }
+}

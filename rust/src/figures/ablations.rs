@@ -1,0 +1,258 @@
+//! Ablations of the paper's design choices — experiments the paper
+//! discusses qualitatively but does not plot:
+//!
+//! * **Held-open routes** (§6.3): how much of the latency is the
+//!   `t_open` route-setup cost?
+//! * **Clock scaling** (§7.1): "an increase in clock speed for the
+//!   parallel system would improve latency because the network would
+//!   operate faster" — while the DRAM's intrinsic latency is fixed.
+//! * **Switch degree** (§2): degree-64 switches halve the stage count
+//!   sooner but quadruple the crossbar area.
+//! * **eDRAM tiles** (§3.2/§5.0.3): the memory technology the paper
+//!   rejected on manufacturing-cost grounds — denser tiles, slower
+//!   access.
+
+use anyhow::Result;
+
+use crate::emulation::{EmulationSetup, SequentialMachine, TopologyKind};
+use crate::netmodel::{LatencyModel, NetParams};
+use crate::tech::{ChipTech, InterposerTech, MemTech};
+use crate::topology::{ClosSpec, FoldedClos, Topology};
+use crate::util::table::{f, Table};
+
+/// One ablation data point.
+#[derive(Clone, Debug)]
+pub struct Row {
+    /// Experiment name.
+    pub experiment: &'static str,
+    /// Variant label.
+    pub variant: String,
+    /// Full-emulation mean access latency, ns.
+    pub latency_ns: f64,
+    /// Dhrystone-mix slowdown vs the DDR3 sequential machine.
+    pub slowdown: f64,
+    /// Note (area cost etc.).
+    pub note: String,
+}
+
+fn slowdown(latency: f64, dram_ns: f64) -> f64 {
+    crate::workload::predict_slowdown(&crate::workload::DHRYSTONE_MIX, latency, dram_ns)
+}
+
+/// Ablation 1: pay `t_open` per access vs hold routes open.
+pub fn route_open(dram_ns: f64) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for (label, open) in [("closed routes (paper)", false), ("routes held open", true)] {
+        let net = NetParams { route_open: open, ..NetParams::default() };
+        let setup = EmulationSetup::build(
+            TopologyKind::Clos,
+            4096,
+            128,
+            4095,
+            net,
+            &ChipTech::default(),
+            &InterposerTech::default(),
+        )?;
+        let lat = setup.expected_latency();
+        rows.push(Row {
+            experiment: "route_open",
+            variant: label.to_string(),
+            latency_ns: lat,
+            slowdown: slowdown(lat, dram_ns),
+            note: if open { "requires per-client circuit reservation".into() } else { String::new() },
+        });
+    }
+    Ok(rows)
+}
+
+/// Ablation 2: clock the parallel machine at 1/2/4 GHz while the DRAM
+/// baseline keeps its intrinsic latency.
+pub fn clock_scaling(dram_ns: f64) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for ghz in [1.0f64, 2.0, 4.0] {
+        let chip = ChipTech { clock_ghz: ghz, ..ChipTech::default() };
+        let setup = EmulationSetup::build(
+            TopologyKind::Clos,
+            4096,
+            128,
+            4095,
+            NetParams::default(),
+            &chip,
+            &InterposerTech::default(),
+        )?;
+        // Cycles shrink in wall-clock as the clock rises; wire spans
+        // re-pipeline to more cycles automatically via the floorplan.
+        let lat_ns = setup.expected_latency() / ghz;
+        rows.push(Row {
+            experiment: "clock_scaling",
+            variant: format!("{ghz} GHz network"),
+            latency_ns: lat_ns,
+            slowdown: slowdown(lat_ns, dram_ns),
+            note: "DRAM latency is intrinsic (unchanged)".into(),
+        });
+    }
+    Ok(rows)
+}
+
+/// Ablation 3: degree-64 switches (32 tiles/edge switch, 1,024
+/// tiles/chip — exceeds the economical die, as §2 notes).
+pub fn switch_degree(dram_ns: f64) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    // Baseline: degree-32 (the paper's design).
+    let base = EmulationSetup::default_tech(TopologyKind::Clos, 4096, 128, 4095)?;
+    let lat32 = base.expected_latency();
+    rows.push(Row {
+        experiment: "switch_degree",
+        variant: "degree-32 (paper)".into(),
+        latency_ns: lat32,
+        slowdown: slowdown(lat32, dram_ns),
+        note: "256-tile chips fit the economical band".into(),
+    });
+
+    // Degree-64: a crossbar is ~O(degree^2) area.
+    let spec = ClosSpec { tiles: 4096, tiles_per_edge: 32, tiles_per_chip: 1024, degree: 64 };
+    let chip64 = ChipTech { switch_area_mm2: 0.20, ..ChipTech::default() };
+    let fp = crate::vlsi::ClosFloorplan::plan(&spec, 128, &chip64)?;
+    let pkg = crate::vlsi::PackagedSystem::clos(spec.chips(), &fp, &chip64, &InterposerTech::default())?;
+    let links = crate::netmodel::LinkLatencies {
+        tile: fp.cycles.tile as f64,
+        edge_core: fp.cycles.edge_core as f64,
+        core_sys: (2 * fp.cycles.core_pad + pkg.interposer_cycles) as f64,
+        mesh_hop: 0.0,
+        mesh_cross_extra: 0.0,
+    };
+    let topo = Topology::Clos(FoldedClos::build(spec)?);
+    let model = LatencyModel::new(NetParams::default(), links);
+    let map = crate::emulation::AddressMap::new(15, 4095, 0, 4096);
+    let mut sum = 0.0;
+    for r in 0..map.k {
+        sum += model.access(&topo, map.client, map.tile_of_rank(r));
+    }
+    let lat64 = sum / map.k as f64;
+    rows.push(Row {
+        experiment: "switch_degree",
+        variant: "degree-64".into(),
+        latency_ns: lat64,
+        slowdown: slowdown(lat64, dram_ns),
+        note: format!("chip {} mm^2 — far beyond the economical band", f(fp.area_mm2, 0)),
+    });
+    Ok(rows)
+}
+
+/// Ablation 4: eDRAM tile memories — ~2.4x denser (smaller chips,
+/// shorter wires) but 1.3 ns access (2 cycles) and costlier process.
+pub fn edram_tiles(dram_ns: f64) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    let base = EmulationSetup::default_tech(TopologyKind::Clos, 4096, 128, 4095)?;
+    let lat_sram = base.expected_latency();
+    rows.push(Row {
+        experiment: "edram_tiles",
+        variant: "SRAM 128 KB (paper)".into(),
+        latency_ns: lat_sram,
+        slowdown: slowdown(lat_sram, dram_ns),
+        note: String::new(),
+    });
+
+    // Same capacity in eDRAM: the tile shrinks by the density ratio;
+    // model it as an effectively smaller SRAM capacity for the
+    // floorplan, with t_mem = 2 cycles.
+    let density_ratio = MemTech::Edram.density_kb_per_mm2() / MemTech::Sram.density_kb_per_mm2();
+    let equiv_kb = (128.0 / density_ratio).round() as u32; // area-equivalent SRAM
+    let net = NetParams { t_mem: MemTech::Edram.cycle_ns().ceil(), ..NetParams::default() };
+    let setup = EmulationSetup::build(
+        TopologyKind::Clos,
+        4096,
+        equiv_kb.max(64),
+        4095,
+        net,
+        &ChipTech::default(),
+        &InterposerTech::default(),
+    )?;
+    let lat = setup.expected_latency();
+    rows.push(Row {
+        experiment: "edram_tiles",
+        variant: format!("eDRAM 128 KB (footprint of {equiv_kb} KB SRAM)"),
+        latency_ns: lat,
+        slowdown: slowdown(lat, dram_ns),
+        note: "2.4x density; +3-6 process steps (cost)".into(),
+    });
+    Ok(rows)
+}
+
+/// All ablations.
+pub fn generate() -> Result<Vec<Row>> {
+    let dram = SequentialMachine::with_measured_dram(1).dram_ns;
+    let mut rows = Vec::new();
+    rows.extend(route_open(dram)?);
+    rows.extend(clock_scaling(dram)?);
+    rows.extend(switch_degree(dram)?);
+    rows.extend(edram_tiles(dram)?);
+    Ok(rows)
+}
+
+/// Render the ablation table.
+pub fn render(rows: &[Row]) -> String {
+    let mut t = Table::new(&["experiment", "variant", "latency ns", "slowdown", "note"])
+        .with_title("Ablations (4,096-tile folded Clos, full emulation, Dhrystone mix)");
+    for r in rows {
+        t.row(&[
+            r.experiment.to_string(),
+            r.variant.clone(),
+            f(r.latency_ns, 1),
+            format!("{}x", f(r.slowdown, 2)),
+            r.note.clone(),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn route_open_helps() {
+        let rows = route_open(35.0).unwrap();
+        assert!(rows[1].latency_ns < rows[0].latency_ns);
+        // exactly 2 * t_open * (d+1) saved per access class; on average
+        // the gap is 30-70 cycles.
+        let gap = rows[0].latency_ns - rows[1].latency_ns;
+        assert!(gap > 20.0 && gap < 80.0, "gap {gap}");
+    }
+
+    #[test]
+    fn faster_network_clock_improves_factor() {
+        let rows = clock_scaling(35.0).unwrap();
+        // Wires re-pipeline into more cycles at higher clocks, so the
+        // gain is sublinear but substantial.
+        assert!(rows[1].latency_ns < rows[0].latency_ns * 0.75);
+        assert!(rows[2].latency_ns < rows[1].latency_ns);
+        assert!(rows[2].slowdown < rows[0].slowdown * 0.6);
+        // §7.1: the DRAM cannot be clocked out of its latency — the
+        // 4 GHz network emulation approaches parity.
+        assert!(rows[2].slowdown < 1.6, "4 GHz slowdown {}", rows[2].slowdown);
+    }
+
+    #[test]
+    fn degree64_trades_area_for_latency() {
+        let rows = switch_degree(35.0).unwrap();
+        // Fewer tiles cross chips (1,024-tile chips) but the die grows
+        // ~4x and its wires lengthen — the net latency change is small
+        // (within 30% either way), supporting the paper's degree-32
+        // choice on economic grounds.
+        let rel = rows[1].latency_ns / rows[0].latency_ns;
+        assert!((0.7..=1.3).contains(&rel), "degree-64/degree-32 = {rel}");
+        // ...and the note records the uneconomical chip.
+        assert!(rows[1].note.contains("economical"));
+    }
+
+    #[test]
+    fn edram_denser_but_slower_cells() {
+        let rows = edram_tiles(35.0).unwrap();
+        assert_eq!(rows.len(), 2);
+        // Denser tiles shorten wires; t_mem grows by 1 cycle. Net
+        // effect is small either way — assert within 15%.
+        let rel = (rows[1].latency_ns - rows[0].latency_ns).abs() / rows[0].latency_ns;
+        assert!(rel < 0.15, "rel {rel}");
+    }
+}

@@ -1,0 +1,160 @@
+//! Fig 10: Dhrystone and compiler benchmark slowdown (relative to the
+//! sequential machine) vs emulation size, 1,024- and 4,096-tile
+//! systems.
+
+use anyhow::Result;
+
+use super::fig9::{k_points, MEM_KB, SYSTEMS};
+use super::FigOpts;
+use crate::coordinator::{run_sweep, SweepPoint};
+use crate::emulation::{SequentialMachine, TopologyKind};
+use crate::util::plot::Plot;
+use crate::util::table::{f, Table};
+use crate::workload::{predict_slowdown, InstructionMix, COMPILER_MIX, DHRYSTONE_MIX};
+
+/// One data point.
+#[derive(Clone, Copy, Debug)]
+pub struct Row {
+    /// System tiles.
+    pub system: usize,
+    /// "clos" or "mesh".
+    pub topo: &'static str,
+    /// "dhrystone" or "compiler".
+    pub benchmark: &'static str,
+    /// Emulation size.
+    pub k: usize,
+    /// Slowdown vs the sequential machine.
+    pub slowdown: f64,
+}
+
+/// Generate the Fig 10 dataset.
+pub fn generate(opts: &FigOpts) -> Result<Vec<Row>> {
+    let mut points = Vec::new();
+    for &system in SYSTEMS {
+        for kind in [TopologyKind::Clos, TopologyKind::Mesh] {
+            for k in k_points(system) {
+                points.push(SweepPoint { kind, tiles: system, mem_kb: MEM_KB, k });
+            }
+        }
+    }
+    let results = run_sweep(&points, opts.mode, opts.workers, opts.seed)?;
+    let dram = SequentialMachine::with_measured_dram(1).dram_ns;
+
+    let benches: [(&'static str, InstructionMix); 2] =
+        [("dhrystone", DHRYSTONE_MIX), ("compiler", COMPILER_MIX)];
+    let mut rows = Vec::new();
+    for r in &results {
+        for (name, mix) in benches {
+            rows.push(Row {
+                system: r.point.tiles,
+                topo: match r.point.kind {
+                    TopologyKind::Clos => "clos",
+                    TopologyKind::Mesh => "mesh",
+                },
+                benchmark: name,
+                k: r.point.k,
+                slowdown: predict_slowdown(&mix, r.mean_cycles, dram),
+            });
+        }
+    }
+    rows.sort_by_key(|r| (r.system, r.topo, r.benchmark, r.k));
+    Ok(rows)
+}
+
+/// Render the dataset.
+pub fn render(rows: &[Row]) -> String {
+    let mut out = String::new();
+    let mut t = Table::new(&["system", "topo", "benchmark", "k tiles", "slowdown"])
+        .with_title("Fig 10: benchmark slowdown vs sequential machine");
+    for r in rows {
+        t.row(&[
+            r.system.to_string(),
+            r.topo.to_string(),
+            r.benchmark.to_string(),
+            r.k.to_string(),
+            f(r.slowdown, 3),
+        ]);
+    }
+    out.push_str(&t.render());
+    for &system in SYSTEMS {
+        let mut plot = Plot::new(
+            &format!("Fig 10 ({system}-tile system): slowdown vs emulation tiles (log2)"),
+            "emulation tiles",
+            "slowdown",
+        );
+        for topo in ["clos", "mesh"] {
+            for bench in ["dhrystone", "compiler"] {
+                let pts: Vec<(f64, f64)> = rows
+                    .iter()
+                    .filter(|r| r.system == system && r.topo == topo && r.benchmark == bench)
+                    .map(|r| (r.k as f64, r.slowdown))
+                    .collect();
+                plot.series(&format!("{topo}-{bench}"), &pts);
+            }
+        }
+        plot.hline(1.0, "parity");
+        out.push('\n');
+        out.push_str(&plot.render());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_shape_holds() {
+        let rows = generate(&FigOpts::default()).unwrap();
+
+        // §7.2: up to 16 tiles the emulation is FASTER than the
+        // sequential machine (slowdown < 1).
+        let small = rows
+            .iter()
+            .find(|r| r.system == 1024 && r.topo == "clos" && r.benchmark == "dhrystone" && r.k == 16)
+            .unwrap();
+        assert!(small.slowdown < 1.0, "small-k slowdown {}", small.slowdown);
+
+        // §7.2: folded-Clos slowdown ~2-3 up to 4,096 tiles.
+        for &system in SYSTEMS {
+            for bench in ["dhrystone", "compiler"] {
+                let full = rows
+                    .iter()
+                    .filter(|r| r.system == system && r.topo == "clos" && r.benchmark == bench)
+                    .last()
+                    .unwrap();
+                // Paper: "approximately 2 to 3"; our interposer model
+                // is slightly more conservative at 16 chips, so accept
+                // up to 3.3 (measured values recorded in
+                // EXPERIMENTS.md).
+                assert!(
+                    full.slowdown > 1.5 && full.slowdown < 3.3,
+                    "{bench}@{system}: slowdown {}",
+                    full.slowdown
+                );
+            }
+        }
+
+        // §7.2: Dhrystone is less efficient (higher global fraction).
+        let d = rows
+            .iter()
+            .find(|r| r.system == 4096 && r.topo == "clos" && r.benchmark == "dhrystone" && r.k == 4095)
+            .unwrap();
+        let c = rows
+            .iter()
+            .find(|r| r.system == 4096 && r.topo == "clos" && r.benchmark == "compiler" && r.k == 4095)
+            .unwrap();
+        assert!(d.slowdown > c.slowdown);
+
+        // §7.2: mesh tracks clos at small k, deteriorates at scale.
+        let mesh_small = rows
+            .iter()
+            .find(|r| r.system == 1024 && r.topo == "mesh" && r.benchmark == "compiler" && r.k == 64)
+            .unwrap();
+        let clos_small = rows
+            .iter()
+            .find(|r| r.system == 1024 && r.topo == "clos" && r.benchmark == "compiler" && r.k == 64)
+            .unwrap();
+        assert!((mesh_small.slowdown / clos_small.slowdown - 1.0).abs() < 0.35);
+    }
+}

@@ -1,0 +1,137 @@
+//! Fig 5: total chip area vs number of tiles, folded Clos and 2D mesh,
+//! for 64–512 KB tile memories, against the 80–140 mm^2 economical
+//! band.
+
+use anyhow::Result;
+
+use crate::tech::ChipTech;
+use crate::topology::{ClosSpec, MeshSpec};
+use crate::util::plot::Plot;
+use crate::util::table::{f, Table};
+use crate::vlsi::{ClosFloorplan, MeshFloorplan};
+
+/// One data point.
+#[derive(Clone, Copy, Debug)]
+pub struct Row {
+    /// "clos" or "mesh".
+    pub topo: &'static str,
+    /// Tiles on the (single) chip.
+    pub tiles: usize,
+    /// Tile memory, KB.
+    pub mem_kb: u32,
+    /// Total chip area, mm^2.
+    pub area_mm2: f64,
+    /// Falls in the economical band.
+    pub economical: bool,
+}
+
+/// Tile counts plotted (square grids so the mesh is constructible).
+pub const TILE_POINTS: &[usize] = &[16, 64, 256, 1024];
+
+/// Memory capacities plotted.
+pub const MEM_POINTS: &[u32] = &[64, 128, 256, 512];
+
+/// Generate the Fig 5 dataset.
+pub fn generate(tech: &ChipTech) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for &mem in MEM_POINTS {
+        for &tiles in TILE_POINTS {
+            // Single-chip layouts: the figure studies how much fits on
+            // one die.
+            let clos_spec =
+                ClosSpec { tiles, tiles_per_chip: tiles.max(256), ..ClosSpec::default() };
+            let clos = ClosFloorplan::plan(&clos_spec, mem, tech)?;
+            rows.push(Row {
+                topo: "clos",
+                tiles,
+                mem_kb: mem,
+                area_mm2: clos.area_mm2,
+                economical: clos.is_economical(tech),
+            });
+            let bx = ((tiles / 16) as f64).sqrt() as usize;
+            let mesh_spec = MeshSpec { tiles, tiles_per_block: 16, chip_blocks_x: bx.max(1) };
+            let mesh = MeshFloorplan::plan(&mesh_spec, mem, tech)?;
+            rows.push(Row {
+                topo: "mesh",
+                tiles,
+                mem_kb: mem,
+                area_mm2: mesh.area_mm2,
+                economical: mesh.is_economical(tech),
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// Render the dataset as a table + the paper's log-linear plot.
+pub fn render(rows: &[Row], tech: &ChipTech) -> String {
+    let mut t = Table::new(&["topo", "tiles", "mem KB", "area mm^2", "economical"])
+        .with_title("Fig 5: total chip area vs tiles");
+    for r in rows {
+        t.row(&[
+            r.topo.to_string(),
+            r.tiles.to_string(),
+            r.mem_kb.to_string(),
+            f(r.area_mm2, 1),
+            if r.economical { "yes".into() } else { "".into() },
+        ]);
+    }
+    let mut plot = Plot::new("Fig 5: chip area (mm^2) vs tiles (log2)", "tiles", "mm^2");
+    for &mem in MEM_POINTS {
+        for topo in ["clos", "mesh"] {
+            let pts: Vec<(f64, f64)> = rows
+                .iter()
+                .filter(|r| r.topo == topo && r.mem_kb == mem)
+                .map(|r| (r.tiles as f64, r.area_mm2))
+                .collect();
+            plot.series(&format!("{topo}-{mem}KB"), &pts);
+        }
+    }
+    plot.hline(tech.econ_min_mm2, "Min economical");
+    plot.hline(tech.econ_max_mm2, "Max economical");
+    format!("{}\n{}", t.render(), plot.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_matches_paper() {
+        let tech = ChipTech::default();
+        let rows = generate(&tech).unwrap();
+        assert_eq!(rows.len(), TILE_POINTS.len() * MEM_POINTS.len() * 2);
+        // Clos >= mesh at every shared point; monotone in tiles & mem.
+        for &mem in MEM_POINTS {
+            for &tiles in TILE_POINTS {
+                let clos = rows
+                    .iter()
+                    .find(|r| r.topo == "clos" && r.tiles == tiles && r.mem_kb == mem)
+                    .unwrap();
+                let mesh = rows
+                    .iter()
+                    .find(|r| r.topo == "mesh" && r.tiles == tiles && r.mem_kb == mem)
+                    .unwrap();
+                assert!(
+                    clos.area_mm2 >= mesh.area_mm2 * 0.95,
+                    "clos {} < mesh {} at tiles={tiles} mem={mem}",
+                    clos.area_mm2,
+                    mesh.area_mm2
+                );
+            }
+        }
+        // Some configurations land in the economical band (the paper's
+        // candidate designs) and some exceed it.
+        assert!(rows.iter().any(|r| r.economical));
+        assert!(rows.iter().any(|r| r.area_mm2 > tech.econ_max_mm2));
+    }
+
+    #[test]
+    fn renders() {
+        let tech = ChipTech::default();
+        let rows = generate(&tech).unwrap();
+        let s = render(&rows, &tech);
+        assert!(s.contains("Fig 5"));
+        assert!(s.contains("Min economical"));
+    }
+}

@@ -1,0 +1,120 @@
+//! Fig 6: switch, wire and I/O area as a percentage of the die, vs
+//! number of tiles (256 KB tile memories).
+
+use anyhow::Result;
+
+use crate::tech::ChipTech;
+use crate::topology::{ClosSpec, MeshSpec};
+use crate::util::plot::Plot;
+use crate::util::table::{f, Table};
+use crate::vlsi::{ClosFloorplan, MeshFloorplan};
+
+/// One data point.
+#[derive(Clone, Copy, Debug)]
+pub struct Row {
+    /// "clos" or "mesh".
+    pub topo: &'static str,
+    /// Tiles on the chip.
+    pub tiles: usize,
+    /// Switch-group share of the die.
+    pub switch_pct: f64,
+    /// Wiring-channel share of the die.
+    pub wire_pct: f64,
+    /// I/O share of the die.
+    pub io_pct: f64,
+}
+
+/// Tile memory used by the figure.
+pub const MEM_KB: u32 = 256;
+
+/// Generate the Fig 6 dataset.
+pub fn generate(tech: &ChipTech) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for &tiles in super::fig5::TILE_POINTS {
+        let spec = ClosSpec { tiles, tiles_per_chip: tiles.max(256), ..ClosSpec::default() };
+        let c = ClosFloorplan::plan(&spec, MEM_KB, tech)?;
+        rows.push(Row {
+            topo: "clos",
+            tiles,
+            switch_pct: 100.0 * c.switch_area_mm2 / c.area_mm2,
+            wire_pct: 100.0 * c.wire_area_mm2 / c.area_mm2,
+            io_pct: 100.0 * c.io_area_mm2 / c.area_mm2,
+        });
+        let bx = ((tiles / 16) as f64).sqrt() as usize;
+        let mspec = MeshSpec { tiles, tiles_per_block: 16, chip_blocks_x: bx.max(1) };
+        let m = MeshFloorplan::plan(&mspec, MEM_KB, tech)?;
+        rows.push(Row {
+            topo: "mesh",
+            tiles,
+            switch_pct: 100.0 * m.switch_area_mm2 / m.area_mm2,
+            wire_pct: 100.0 * m.wire_area_mm2 / m.area_mm2,
+            io_pct: 100.0 * m.io_area_mm2 / m.area_mm2,
+        });
+    }
+    Ok(rows)
+}
+
+/// Render the dataset.
+pub fn render(rows: &[Row]) -> String {
+    let mut t = Table::new(&["topo", "tiles", "switch %", "wire %", "I/O %", "interconnect %"])
+        .with_title("Fig 6: component area share (256 KB tile memory)");
+    for r in rows {
+        t.row(&[
+            r.topo.to_string(),
+            r.tiles.to_string(),
+            f(r.switch_pct, 2),
+            f(r.wire_pct, 2),
+            f(r.io_pct, 2),
+            f(r.switch_pct + r.wire_pct, 2),
+        ]);
+    }
+    let mut plot =
+        Plot::new("Fig 6: interconnect area share (%) vs tiles (log2)", "tiles", "% of die");
+    for topo in ["clos", "mesh"] {
+        let pts: Vec<(f64, f64)> = rows
+            .iter()
+            .filter(|r| r.topo == topo)
+            .map(|r| (r.tiles as f64, r.switch_pct + r.wire_pct))
+            .collect();
+        plot.series(&format!("{topo} switch+wire"), &pts);
+        let io: Vec<(f64, f64)> =
+            rows.iter().filter(|r| r.topo == topo).map(|r| (r.tiles as f64, r.io_pct)).collect();
+        plot.series(&format!("{topo} io"), &io);
+    }
+    format!("{}\n{}", t.render(), plot.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clos_interconnect_exceeds_mesh() {
+        // §5.1.2: Clos interconnect ~5-8% vs mesh 2-3% on economical
+        // dies; at minimum Clos > mesh everywhere at >=64 tiles.
+        let rows = generate(&ChipTech::default()).unwrap();
+        for &tiles in super::super::fig5::TILE_POINTS {
+            if tiles < 64 {
+                continue;
+            }
+            let c = rows.iter().find(|r| r.topo == "clos" && r.tiles == tiles).unwrap();
+            let m = rows.iter().find(|r| r.topo == "mesh" && r.tiles == tiles).unwrap();
+            let ci = c.switch_pct + c.wire_pct;
+            let mi = m.switch_pct + m.wire_pct;
+            assert!(ci > mi, "tiles={tiles}: clos {ci} <= mesh {mi}");
+        }
+    }
+
+    #[test]
+    fn clos_io_share_substantial() {
+        // I/O dominates small-memory Clos chips; at 256 KB it is still
+        // a double-digit share at 256 tiles (paper Fig 6).
+        let rows = generate(&ChipTech::default()).unwrap();
+        let c256 = rows.iter().find(|r| r.topo == "clos" && r.tiles == 256).unwrap();
+        assert!(c256.io_pct > 10.0, "io {}%", c256.io_pct);
+        // Mesh I/O share shrinks with tiles.
+        let m64 = rows.iter().find(|r| r.topo == "mesh" && r.tiles == 64).unwrap();
+        let m1024 = rows.iter().find(|r| r.topo == "mesh" && r.tiles == 1024).unwrap();
+        assert!(m1024.io_pct < m64.io_pct);
+    }
+}

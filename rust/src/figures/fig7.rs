@@ -1,0 +1,133 @@
+//! Fig 7: total interposer area for multi-chip configurations.
+
+use anyhow::Result;
+
+use crate::tech::{ChipTech, InterposerTech};
+use crate::topology::{ClosSpec, MeshSpec};
+use crate::util::plot::Plot;
+use crate::util::table::{f, Table};
+use crate::vlsi::{ClosFloorplan, InterposerPlan, MeshFloorplan};
+
+/// One data point.
+#[derive(Clone, Copy, Debug)]
+pub struct Row {
+    /// "clos" or "mesh".
+    pub topo: &'static str,
+    /// Chips on the interposer.
+    pub chips: usize,
+    /// Tile memory, KB.
+    pub mem_kb: u32,
+    /// System tiles (chips x 256).
+    pub tiles: usize,
+    /// Interposer area, mm^2.
+    pub interposer_mm2: f64,
+    /// Wiring-channel share (Clos only).
+    pub channel_pct: f64,
+    /// Min..max inter-chip wire delay, ns.
+    pub wire_delay_ns: (f64, f64),
+}
+
+/// Chip counts plotted.
+pub const CHIP_POINTS: &[usize] = &[2, 4, 8, 16];
+
+/// Generate the Fig 7 dataset.
+pub fn generate(chip_tech: &ChipTech, ip_tech: &InterposerTech) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for &mem in &[64u32, 128] {
+        for &chips in CHIP_POINTS {
+            let tiles = chips * 256;
+            let cspec = ClosSpec::with_tiles(tiles);
+            let cfp = ClosFloorplan::plan(&cspec, mem, chip_tech)?;
+            let cip = InterposerPlan::clos(chips, &cfp, ip_tech)?;
+            rows.push(Row {
+                topo: "clos",
+                chips,
+                mem_kb: mem,
+                tiles,
+                interposer_mm2: cip.area_mm2,
+                channel_pct: 100.0 * cip.channel_fraction(),
+                wire_delay_ns: (cip.wire_delay_min_ns, cip.wire_delay_max_ns),
+            });
+            // Mesh systems must form square chip grids.
+            if (chips as f64).sqrt().fract() == 0.0 {
+                let mspec = MeshSpec::with_tiles(tiles);
+                let mfp = MeshFloorplan::plan(&mspec, mem, chip_tech)?;
+                let mip = InterposerPlan::mesh(chips, &mfp, ip_tech)?;
+                rows.push(Row {
+                    topo: "mesh",
+                    chips,
+                    mem_kb: mem,
+                    tiles,
+                    interposer_mm2: mip.area_mm2,
+                    channel_pct: 0.0,
+                    wire_delay_ns: (mip.wire_delay_min_ns, mip.wire_delay_max_ns),
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// Render the dataset.
+pub fn render(rows: &[Row]) -> String {
+    let mut t = Table::new(&[
+        "topo",
+        "chips",
+        "mem KB",
+        "tiles",
+        "interposer mm^2",
+        "channel %",
+        "wire delay ns",
+    ])
+    .with_title("Fig 7: interposer area for multi-chip systems");
+    for r in rows {
+        t.row(&[
+            r.topo.to_string(),
+            r.chips.to_string(),
+            r.mem_kb.to_string(),
+            r.tiles.to_string(),
+            f(r.interposer_mm2, 0),
+            f(r.channel_pct, 1),
+            format!("{}-{}", f(r.wire_delay_ns.0, 2), f(r.wire_delay_ns.1, 2)),
+        ]);
+    }
+    let mut plot = Plot::new("Fig 7: interposer area (mm^2) vs chips (log2)", "chips", "mm^2");
+    for &mem in &[64u32, 128] {
+        for topo in ["clos", "mesh"] {
+            let pts: Vec<(f64, f64)> = rows
+                .iter()
+                .filter(|r| r.topo == topo && r.mem_kb == mem)
+                .map(|r| (r.chips as f64, r.interposer_mm2))
+                .collect();
+            if !pts.is_empty() {
+                plot.series(&format!("{topo}-{mem}KB"), &pts);
+            }
+        }
+    }
+    format!("{}\n{}", t.render(), plot.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn area_grows_with_chips_and_channel_share_rises() {
+        let rows = generate(&ChipTech::default(), &InterposerTech::default()).unwrap();
+        let clos128: Vec<&Row> =
+            rows.iter().filter(|r| r.topo == "clos" && r.mem_kb == 128).collect();
+        for w in clos128.windows(2) {
+            assert!(w[1].interposer_mm2 > w[0].interposer_mm2);
+            assert!(w[1].channel_pct >= w[0].channel_pct - 1.0);
+        }
+        // §5.1.3: Clos inter-chip delay roughly 1-8 ns; mesh ~0.09 ns.
+        for r in &rows {
+            match r.topo {
+                "clos" => {
+                    assert!(r.wire_delay_ns.0 > 0.2 && r.wire_delay_ns.1 < 14.0, "{r:?}")
+                }
+                _ => assert!((r.wire_delay_ns.1 - 0.089).abs() < 0.02, "{r:?}"),
+            }
+        }
+    }
+}

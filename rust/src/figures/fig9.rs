@@ -1,0 +1,155 @@
+//! Fig 9: absolute emulated-memory random-access latency vs emulation
+//! size, for 1,024- and 4,096-tile systems, against the DDR3 baseline.
+
+use anyhow::Result;
+
+use super::FigOpts;
+use crate::coordinator::{run_sweep, SweepPoint};
+use crate::emulation::{SequentialMachine, TopologyKind};
+use crate::util::plot::Plot;
+use crate::util::table::{f, Table};
+
+/// One data point.
+#[derive(Clone, Copy, Debug)]
+pub struct Row {
+    /// System tiles.
+    pub system: usize,
+    /// "clos" or "mesh".
+    pub topo: &'static str,
+    /// Emulation size (memory tiles).
+    pub k: usize,
+    /// Mean random-access latency, ns (cycles at 1 GHz).
+    pub latency_ns: f64,
+}
+
+/// Fig 9 dataset plus the measured DDR3 baseline.
+#[derive(Clone, Debug)]
+pub struct Fig9 {
+    /// Data rows.
+    pub rows: Vec<Row>,
+    /// Measured DDR3 random-access latency, ns.
+    pub ddr3_ns: f64,
+}
+
+/// Systems plotted.
+pub const SYSTEMS: &[usize] = &[1024, 4096];
+
+/// Tile memory used.
+pub const MEM_KB: u32 = 128;
+
+/// Emulation sizes: powers of two up to the system size.
+pub fn k_points(system: usize) -> Vec<usize> {
+    let mut ks: Vec<usize> = (4..)
+        .map(|i| 1usize << i)
+        .take_while(|&k| k < system)
+        .collect();
+    ks.push(system - 1); // full emulation
+    ks
+}
+
+/// Generate the Fig 9 dataset.
+pub fn generate(opts: &FigOpts) -> Result<Fig9> {
+    let mut points = Vec::new();
+    for &system in SYSTEMS {
+        for kind in [TopologyKind::Clos, TopologyKind::Mesh] {
+            for k in k_points(system) {
+                points.push(SweepPoint { kind, tiles: system, mem_kb: MEM_KB, k });
+            }
+        }
+    }
+    let results = run_sweep(&points, opts.mode, opts.workers, opts.seed)?;
+    let mut rows: Vec<Row> = results
+        .iter()
+        .map(|r| Row {
+            system: r.point.tiles,
+            topo: match r.point.kind {
+                TopologyKind::Clos => "clos",
+                TopologyKind::Mesh => "mesh",
+            },
+            k: r.point.k,
+            latency_ns: r.mean_cycles,
+        })
+        .collect();
+    rows.sort_by_key(|r| (r.system, r.topo, r.k));
+    let ddr3_ns = SequentialMachine::with_measured_dram(1).dram_ns;
+    Ok(Fig9 { rows, ddr3_ns })
+}
+
+/// Render the dataset.
+pub fn render(fig: &Fig9) -> String {
+    let mut out = String::new();
+    let mut t = Table::new(&["system", "topo", "k tiles", "latency ns", "vs DDR3"])
+        .with_title("Fig 9: absolute memory latency");
+    for r in &fig.rows {
+        t.row(&[
+            r.system.to_string(),
+            r.topo.to_string(),
+            r.k.to_string(),
+            f(r.latency_ns, 1),
+            format!("{}x", f(r.latency_ns / fig.ddr3_ns, 2)),
+        ]);
+    }
+    out.push_str(&t.render());
+    for &system in SYSTEMS {
+        let mut plot = Plot::new(
+            &format!("Fig 9 ({system}-tile system): latency (ns) vs emulation tiles (log2)"),
+            "emulation tiles",
+            "ns",
+        );
+        for topo in ["clos", "mesh"] {
+            let pts: Vec<(f64, f64)> = fig
+                .rows
+                .iter()
+                .filter(|r| r.system == system && r.topo == topo)
+                .map(|r| (r.k as f64, r.latency_ns))
+                .collect();
+            plot.series(topo, &pts);
+        }
+        plot.hline(fig.ddr3_ns, "DDR3 baseline");
+        out.push('\n');
+        out.push_str(&plot.render());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_shape_holds() {
+        let fig = generate(&FigOpts::default()).unwrap();
+        // DDR3 baseline ~35 ns.
+        assert!((fig.ddr3_ns - 35.0).abs() < 2.0);
+
+        for &system in SYSTEMS {
+            let clos: Vec<&Row> =
+                fig.rows.iter().filter(|r| r.system == system && r.topo == "clos").collect();
+            // monotone nondecreasing in k
+            for w in clos.windows(2) {
+                assert!(w[1].latency_ns >= w[0].latency_ns - 1e-9);
+            }
+            // small emulations beat DDR3 (§7.2: speedup up to 16 tiles)
+            assert!(clos[0].latency_ns < fig.ddr3_ns, "{}", clos[0].latency_ns);
+            // full emulation within factor 2-5 of DDR3 (§7.1)
+            let full = clos.last().unwrap();
+            let ratio = full.latency_ns / fig.ddr3_ns;
+            assert!((2.0..5.0).contains(&ratio), "system={system}: ratio {ratio}");
+        }
+
+        // mesh deteriorates relative to clos at the large multi-chip
+        // system (§7.1: 30-40% overhead; we accept >10%).
+        let clos4k = fig
+            .rows
+            .iter()
+            .find(|r| r.system == 4096 && r.topo == "clos" && r.k == 4095)
+            .unwrap();
+        let mesh4k = fig
+            .rows
+            .iter()
+            .find(|r| r.system == 4096 && r.topo == "mesh" && r.k == 4095)
+            .unwrap();
+        let overhead = mesh4k.latency_ns / clos4k.latency_ns;
+        assert!(overhead > 1.1, "mesh/clos = {overhead}");
+    }
+}

@@ -1,0 +1,53 @@
+//! Generators for every table and figure in the paper's evaluation
+//! (§5.1, §7). Each module produces the data rows (used by the benches
+//! and tests) and renders them as an ASCII table + plot matching the
+//! paper's axes.
+//!
+//! | module | reproduces |
+//! |--------|------------|
+//! | [`tables`] | Tables 1–5 |
+//! | [`fig5`] | Fig 5 — chip area vs tiles |
+//! | [`fig6`] | Fig 6 — switch/wire/I-O area share |
+//! | [`fig7`] | Fig 7 — interposer area |
+//! | [`fig9`] | Fig 9 — absolute emulated-memory latency |
+//! | [`fig10`] | Fig 10 — benchmark slowdown vs emulation size |
+//! | [`fig11`] | Fig 11 — slowdown vs global-access fraction |
+//! | [`binary_size`] | §7.3 — program binary growth |
+//! | [`ablations`] | design-choice ablations (route-open, clock, switch degree, eDRAM) |
+
+pub mod ablations;
+pub mod binary_size;
+pub mod fig10;
+pub mod fig11;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig9;
+pub mod tables;
+
+use crate::coordinator::EvalMode;
+
+/// Shared options for figure generation.
+#[derive(Clone, Copy, Debug)]
+pub struct FigOpts {
+    /// Evaluation mode for latency points.
+    pub mode: EvalMode,
+    /// Worker threads for sweeps.
+    pub workers: usize,
+    /// Base seed.
+    pub seed: u64,
+}
+
+impl Default for FigOpts {
+    fn default() -> Self {
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self { mode: EvalMode::Exact, workers, seed: 0xC105 }
+    }
+}
+
+impl FigOpts {
+    /// Production defaults: XLA hot path when artifacts exist.
+    pub fn auto() -> Self {
+        Self { mode: EvalMode::auto(65_536, 16_384), ..Self::default() }
+    }
+}

@@ -1,0 +1,166 @@
+//! Regenerate the paper's parameter tables (Tables 1–5).
+
+use crate::netmodel::NetParams;
+use crate::tech::{itrs, ChipTech, InterposerTech, MemTech};
+use crate::util::table::{f, Table};
+
+/// Table 1: processing-chip implementation parameters.
+pub fn table1(tech: &ChipTech) -> Table {
+    let mut t = Table::new(&["Parameter", "Value"]).with_title("Table 1: processing chip (28 nm)");
+    t.row_strs(&["Process geometry", &format!("{} nm", tech.process_nm)]);
+    t.row_strs(&["FO4 delay", &format!("{} ps", f(tech.fo4_ps, 1))]);
+    t.row_strs(&[
+        "Economical chip sizes",
+        &format!("{}-{} mm^2", tech.econ_min_mm2, tech.econ_max_mm2),
+    ]);
+    t.row_strs(&["Metal layers", &tech.metal_layers.to_string()]);
+    t.row_strs(&["Interconnect wire pitch", &format!("{} nm", tech.wire_pitch_nm)]);
+    t.row_strs(&["Repeated wire delay", &format!("{} ps/mm", tech.wire_delay_ps_per_mm)]);
+    t.row_strs(&["Processor area", &format!("{} mm^2", tech.processor_area_mm2)]);
+    t.row_strs(&["Switch area", &format!("{} mm^2", tech.switch_area_mm2)]);
+    t.row_strs(&[
+        "I/O pad dimensions",
+        &format!("{}x{} um", tech.io_pad_w_um, tech.io_pad_h_um),
+    ]);
+    t.row_strs(&["Wires per link", &tech.wires_per_link.to_string()]);
+    t.row_strs(&[
+        "Power and ground I/Os",
+        &format!("{}%", (tech.power_ground_fraction * 100.0) as u32),
+    ]);
+    t.row_strs(&["Clock rate", &format!("{} GHz", tech.clock_ghz)]);
+    t
+}
+
+/// Table 2: interposer implementation parameters.
+pub fn table2(tech: &InterposerTech) -> Table {
+    let mut t = Table::new(&["Parameter", "Value"]).with_title("Table 2: interposer (65 nm)");
+    t.row_strs(&["Process geometry", &format!("{} nm", tech.process_nm)]);
+    t.row_strs(&["FO4 delay", &format!("{} ps", f(tech.fo4_ps, 1))]);
+    t.row_strs(&["Metal layers", &tech.metal_layers.to_string()]);
+    t.row_strs(&[
+        "Interconnect wire pitch",
+        &format!("{} um ({}/mm half-shielded)", tech.wire_pitch_um, f(tech.shielded_wires_per_mm(), 0)),
+    ]);
+    t.row_strs(&["Repeated wire delay", &format!("{} ps/mm", tech.wire_delay_ps_per_mm)]);
+    t.row_strs(&[
+        "Microbump pitch",
+        &format!("{} um ({} bumps/mm^2)", tech.microbump_pitch_um, f(tech.microbumps_per_mm2(), 2)),
+    ]);
+    t.row_strs(&["TSV pitch", &format!("{} um", tech.tsv_pitch_um)]);
+    t.row_strs(&["C4 bump pitch", &format!("{} um", tech.c4_pitch_um)]);
+    t.row_strs(&["Wires per link", &tech.wires_per_link.to_string()]);
+    t
+}
+
+/// Table 3: ITRS global-wire data with the derived repeated-wire
+/// delays.
+pub fn table3() -> Table {
+    let mut t = Table::new(&[
+        "Geometry (nm)",
+        "Min pitch (nm)",
+        "RC (ps/mm)",
+        "Edition",
+        "tau (ps/mm)",
+    ])
+    .with_title("Table 3: ITRS global wires + derived repeated-wire delay");
+    for row in itrs::TABLE3 {
+        let tau = row
+            .rc_ps_per_mm
+            .map(|rc| f(itrs::repeated_wire_delay_ps_per_mm(itrs::fo4_ps(row.geometry_nm), rc), 0))
+            .unwrap_or_else(|| "-".into());
+        t.row(&[
+            f(row.geometry_nm, 2),
+            f(row.min_pitch_nm, 0),
+            row.rc_ps_per_mm.map(|v| f(v, 0)).unwrap_or_else(|| "-".into()),
+            row.edition.to_string(),
+            tau,
+        ]);
+    }
+    t
+}
+
+/// Table 4: memory-technology comparison.
+pub fn table4() -> Table {
+    let mut t = Table::new(&[
+        "Type",
+        "Capacity (MB)",
+        "Area factor (F^2)",
+        "Efficiency",
+        "Process (nm)",
+        "Density (KB/mm^2)",
+        "Cycle (ns)",
+    ])
+    .with_title("Table 4: memory technologies (ITRS SYSD3b)");
+    for m in MemTech::all() {
+        let (lo, hi) = m.typical_capacity_mb();
+        let cap = match (lo, hi) {
+            (None, Some(h)) => format!("<{h}"),
+            (Some(l), Some(h)) => format!("{l}-{h}"),
+            (Some(l), None) => format!(">{l}"),
+            _ => "-".into(),
+        };
+        t.row(&[
+            m.name().to_string(),
+            cap,
+            f(m.cell_area_factor(), 0),
+            format!("{}%", (m.area_efficiency() * 100.0) as u32),
+            f(m.process_nm(), 0),
+            f(m.density_kb_per_mm2(), 2),
+            f(m.cycle_ns(), 1),
+        ]);
+    }
+    t
+}
+
+/// Table 5: network performance-model parameters.
+pub fn table5(p: &NetParams) -> Table {
+    let mut t = Table::new(&["Parameter", "Value (cycles)"])
+        .with_title("Table 5: network model parameters (XMP-64 fitted)");
+    t.row_strs(&["Switch latency (t_switch)", &f(p.t_switch, 0)]);
+    t.row_strs(&["Latency to open a route (t_open)", &f(p.t_open, 0)]);
+    t.row_strs(&["Contention factor (c_cont)", &f(p.c_cont, 1)]);
+    t.row_strs(&["Serialisation intra-chip", &f(p.t_serial_intra, 0)]);
+    t.row_strs(&["Serialisation inter-chip", &f(p.t_serial_inter, 0)]);
+    t.row_strs(&["Tile memory access (t_mem)", &f(p.t_mem, 0)]);
+    t.row_strs(&["Tile link latency (t_tile)", "see floorplan (1-2)"]);
+    t
+}
+
+/// All five tables rendered.
+pub fn render_all() -> String {
+    let chip = ChipTech::default();
+    let ip = InterposerTech::default();
+    let net = NetParams::default();
+    [
+        table1(&chip).render(),
+        table2(&ip).render(),
+        table3().render(),
+        table4().render(),
+        table5(&net).render(),
+    ]
+    .join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_render_nonempty() {
+        let all = render_all();
+        for needle in ["Table 1", "Table 2", "Table 3", "Table 4", "Table 5"] {
+            assert!(all.contains(needle), "missing {needle}");
+        }
+        assert!(all.contains("155"), "chip wire delay");
+        assert!(all.contains("778.51"), "SRAM density");
+    }
+
+    #[test]
+    fn table3_derived_delays_near_quoted() {
+        let t = table3();
+        assert_eq!(t.len(), itrs::TABLE3.len());
+        let rendered = t.render();
+        // 26.76 nm row gives ~152-156 ps/mm; 68 nm row ~94 ps/mm.
+        assert!(rendered.contains("1115"));
+    }
+}

@@ -1,0 +1,206 @@
+//! Fixed 32-bit instruction encoding.
+//!
+//! Layout: `[opcode:8][a:4][b:4][imm:16]` — immediates wider than 16
+//! bits take an extension word (a second 32-bit word), as on real
+//! compact RISC encodings. The §7.3 binary-size measurement counts
+//! encoded bytes, so immediate width matters.
+
+use anyhow::{bail, Result};
+
+use super::inst::Inst;
+
+// Opcode numbers (stable across encode/decode).
+const OP_ADD: u8 = 0x01;
+const OP_SUB: u8 = 0x02;
+const OP_MUL: u8 = 0x03;
+const OP_AND: u8 = 0x04;
+const OP_OR: u8 = 0x05;
+const OP_XOR: u8 = 0x06;
+const OP_LT: u8 = 0x07;
+const OP_EQ: u8 = 0x08;
+const OP_ADDI: u8 = 0x09;
+const OP_LDI: u8 = 0x0A;
+const OP_MOV: u8 = 0x0B;
+const OP_JUMP: u8 = 0x0C;
+const OP_BRZ: u8 = 0x0D;
+const OP_BRNZ: u8 = 0x0E;
+const OP_CALL: u8 = 0x0F;
+const OP_RET: u8 = 0x10;
+const OP_LDL: u8 = 0x11;
+const OP_STL: u8 = 0x12;
+const OP_LDG: u8 = 0x13;
+const OP_STG: u8 = 0x14;
+const OP_SEND: u8 = 0x15;
+const OP_SENDI: u8 = 0x16;
+const OP_RECV: u8 = 0x17;
+const OP_RECVA: u8 = 0x18;
+const OP_HALT: u8 = 0x19;
+const OP_NOP: u8 = 0x1A;
+
+fn fits16(v: i32) -> bool {
+    (-(1 << 15)..(1 << 15)).contains(&v)
+}
+
+fn word(op: u8, a: u8, b: u8, imm16: u16) -> u32 {
+    (op as u32) << 24 | ((a as u32 & 0xF) << 20) | ((b as u32 & 0xF) << 16) | imm16 as u32
+}
+
+/// Encode one instruction into one or two 32-bit words.
+pub fn encode(inst: &Inst) -> Vec<u32> {
+    use Inst::*;
+    let rrr = |op: u8, d: u8, a: u8, b: u8| vec![word(op, d, a, b as u16)];
+    let imm_enc = |op: u8, d: u8, a: u8, imm: i32| -> Vec<u32> {
+        if fits16(imm) {
+            vec![word(op, d, a, imm as u16)]
+        } else {
+            // extension word carries the full 32-bit immediate; the
+            // high bit of the first register field + imm16 == 0xFFFF
+            // flags the extension (register operands of immediate
+            // instructions are restricted to r0-r7).
+            debug_assert!(d < 8, "imm instructions use r0-r7");
+            vec![word(op, d | 0x8, a, 0xFFFF), imm as u32]
+        }
+    };
+    match *inst {
+        Add { d, a, b } => rrr(OP_ADD, d, a, b),
+        Sub { d, a, b } => rrr(OP_SUB, d, a, b),
+        Mul { d, a, b } => rrr(OP_MUL, d, a, b),
+        And { d, a, b } => rrr(OP_AND, d, a, b),
+        Or { d, a, b } => rrr(OP_OR, d, a, b),
+        Xor { d, a, b } => rrr(OP_XOR, d, a, b),
+        Lt { d, a, b } => rrr(OP_LT, d, a, b),
+        Eq { d, a, b } => rrr(OP_EQ, d, a, b),
+        AddI { d, a, imm } => imm_enc(OP_ADDI, d, a, imm),
+        LoadImm { d, imm } => imm_enc(OP_LDI, d, 0, imm),
+        Mov { d, s } => rrr(OP_MOV, d, s, 0),
+        Jump { offset } => imm_enc(OP_JUMP, 0, 0, offset),
+        BranchZ { c, offset } => imm_enc(OP_BRZ, c, 0, offset),
+        BranchNZ { c, offset } => imm_enc(OP_BRNZ, c, 0, offset),
+        Call { target } => imm_enc(OP_CALL, 0, 0, target as i32),
+        Ret => vec![word(OP_RET, 0, 0, 0)],
+        LoadLocal { d, a, off } => imm_enc(OP_LDL, d, a, off),
+        StoreLocal { s, a, off } => imm_enc(OP_STL, s, a, off),
+        LoadGlobal { d, a } => rrr(OP_LDG, d, a, 0),
+        StoreGlobal { s, a } => rrr(OP_STG, s, a, 0),
+        Send { chan, src } => rrr(OP_SEND, chan, src, 0),
+        SendImm { chan, value } => imm_enc(OP_SENDI, chan, 0, value as i32),
+        Recv { chan, dest } => rrr(OP_RECV, chan, dest, 0),
+        RecvAck { chan } => rrr(OP_RECVA, chan, 0, 0),
+        Halt => vec![word(OP_HALT, 0, 0, 0)],
+        Nop => vec![word(OP_NOP, 0, 0, 0)],
+    }
+}
+
+/// Decode the instruction at `words[0..]`; returns it and the number of
+/// words consumed.
+pub fn decode(words: &[u32]) -> Result<(Inst, usize)> {
+    use Inst::*;
+    let Some(&w) = words.first() else { bail!("empty stream") };
+    let op = (w >> 24) as u8;
+    let a = ((w >> 20) & 0xF) as u8;
+    let b = ((w >> 16) & 0xF) as u8;
+    let imm16 = (w & 0xFFFF) as u16;
+    // Extension-word immediates: flag bit in `a`'s high bit + 0xFFFF.
+    let (imm, used) = if (a & 0x8) != 0 && imm16 == 0xFFFF {
+        let Some(&ext) = words.get(1) else { bail!("truncated extension word") };
+        (ext as i32, 2usize)
+    } else {
+        (imm16 as i16 as i32, 1usize)
+    };
+    let a_clean = a & 0x7;
+    let inst = match op {
+        OP_ADD => Add { d: a, a: b, b: imm16 as u8 },
+        OP_SUB => Sub { d: a, a: b, b: imm16 as u8 },
+        OP_MUL => Mul { d: a, a: b, b: imm16 as u8 },
+        OP_AND => And { d: a, a: b, b: imm16 as u8 },
+        OP_OR => Or { d: a, a: b, b: imm16 as u8 },
+        OP_XOR => Xor { d: a, a: b, b: imm16 as u8 },
+        OP_LT => Lt { d: a, a: b, b: imm16 as u8 },
+        OP_EQ => Eq { d: a, a: b, b: imm16 as u8 },
+        OP_ADDI => AddI { d: a_clean, a: b, imm },
+        OP_LDI => LoadImm { d: a_clean, imm },
+        OP_MOV => Mov { d: a, s: b },
+        OP_JUMP => Jump { offset: imm },
+        OP_BRZ => BranchZ { c: a_clean, offset: imm },
+        OP_BRNZ => BranchNZ { c: a_clean, offset: imm },
+        OP_CALL => Call { target: imm as u32 },
+        OP_RET => Ret,
+        OP_LDL => LoadLocal { d: a_clean, a: b, off: imm },
+        OP_STL => StoreLocal { s: a_clean, a: b, off: imm },
+        OP_LDG => LoadGlobal { d: a, a: b },
+        OP_STG => StoreGlobal { s: a, a: b },
+        OP_SEND => Send { chan: a, src: b },
+        OP_SENDI => SendImm { chan: a_clean, value: imm as u32 },
+        OP_RECV => Recv { chan: a, dest: b },
+        OP_RECVA => RecvAck { chan: a },
+        OP_HALT => Halt,
+        OP_NOP => Nop,
+        other => bail!("bad opcode {other:#x}"),
+    };
+    Ok((inst, used))
+}
+
+/// Total encoded size of a program in bytes (the §7.3 metric).
+pub fn program_bytes(program: &[Inst]) -> usize {
+    program.iter().map(|i| encode(i).len() * 4).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure};
+    use crate::util::rng::Rng;
+
+    fn arbitrary_inst(r: &mut Rng) -> Inst {
+        use Inst::*;
+        let reg = |r: &mut Rng| r.below(8) as u8;
+        match r.below(14) {
+            0 => Add { d: reg(r), a: reg(r), b: reg(r) },
+            1 => Sub { d: reg(r), a: reg(r), b: reg(r) },
+            2 => AddI { d: reg(r), a: reg(r), imm: r.range_i64(-40000, 40000) as i32 },
+            3 => LoadImm { d: reg(r), imm: r.range_i64(-(1 << 30), 1 << 30) as i32 },
+            4 => Mov { d: reg(r), s: reg(r) },
+            5 => Jump { offset: r.range_i64(-100, 100) as i32 },
+            6 => BranchZ { c: reg(r), offset: r.range_i64(-100, 100) as i32 },
+            7 => LoadLocal { d: reg(r), a: reg(r), off: r.range_i64(0, 1000) as i32 },
+            8 => StoreLocal { s: reg(r), a: reg(r), off: r.range_i64(0, 1000) as i32 },
+            9 => LoadGlobal { d: reg(r), a: reg(r) },
+            10 => StoreGlobal { s: reg(r), a: reg(r) },
+            11 => Send { chan: reg(r), src: reg(r) },
+            12 => Recv { chan: reg(r), dest: reg(r) },
+            _ => Halt,
+        }
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        check(arbitrary_inst, |inst| {
+            let words = encode(inst);
+            let (decoded, used) = decode(&words).map_err(|e| e.to_string())?;
+            ensure(used == words.len(), format!("used {used} != {}", words.len()))?;
+            ensure(decoded == *inst, format!("{decoded:?} != {inst:?}"))
+        });
+    }
+
+    #[test]
+    fn small_immediates_are_one_word() {
+        assert_eq!(encode(&Inst::LoadImm { d: 1, imm: 1000 }).len(), 1);
+        assert_eq!(encode(&Inst::LoadImm { d: 1, imm: 1 << 20 }).len(), 2);
+    }
+
+    #[test]
+    fn program_size_counts_extensions() {
+        let p = vec![
+            Inst::LoadImm { d: 0, imm: 5 },
+            Inst::LoadImm { d: 1, imm: 1 << 20 },
+            Inst::Halt,
+        ];
+        assert_eq!(program_bytes(&p), 4 + 8 + 4);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(decode(&[0xFF00_0000]).is_err());
+        assert!(decode(&[]).is_err());
+    }
+}

@@ -1,0 +1,103 @@
+//! The instruction set.
+//!
+//! Registers are `r0..r15` (64-bit). Global addresses are word
+//! addresses into the emulated/DRAM address space; local addresses
+//! index the tile-local data memory.
+
+/// One instruction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Inst {
+    /// `rd <- ra + rb`
+    Add { d: u8, a: u8, b: u8 },
+    /// `rd <- ra - rb`
+    Sub { d: u8, a: u8, b: u8 },
+    /// `rd <- ra * rb`
+    Mul { d: u8, a: u8, b: u8 },
+    /// `rd <- ra & rb`
+    And { d: u8, a: u8, b: u8 },
+    /// `rd <- ra | rb`
+    Or { d: u8, a: u8, b: u8 },
+    /// `rd <- ra ^ rb`
+    Xor { d: u8, a: u8, b: u8 },
+    /// `rd <- ra < rb` (signed, 0/1)
+    Lt { d: u8, a: u8, b: u8 },
+    /// `rd <- ra == rb` (0/1)
+    Eq { d: u8, a: u8, b: u8 },
+    /// `rd <- ra + imm`
+    AddI { d: u8, a: u8, imm: i32 },
+    /// `rd <- imm`
+    LoadImm { d: u8, imm: i32 },
+    /// `rd <- rs`
+    Mov { d: u8, s: u8 },
+    /// Unconditional relative branch.
+    Jump { offset: i32 },
+    /// Branch if `rc == 0`.
+    BranchZ { c: u8, offset: i32 },
+    /// Branch if `rc != 0`.
+    BranchNZ { c: u8, offset: i32 },
+    /// Call absolute target (pushes return pc on the call stack).
+    Call { target: u32 },
+    /// Return.
+    Ret,
+    /// `rd <- local[ra + off]`
+    LoadLocal { d: u8, a: u8, off: i32 },
+    /// `local[ra + off] <- rs`
+    StoreLocal { s: u8, a: u8, off: i32 },
+    /// `rd <- global[ra]` (direct-memory backend)
+    LoadGlobal { d: u8, a: u8 },
+    /// `global[ra] <- rs` (direct-memory backend)
+    StoreGlobal { s: u8, a: u8 },
+    /// Send a register's value on a channel.
+    Send { chan: u8, src: u8 },
+    /// Send an immediate on a channel.
+    SendImm { chan: u8, value: u32 },
+    /// Receive into a register (blocks for the response).
+    Recv { chan: u8, dest: u8 },
+    /// Receive and discard an acknowledgement.
+    RecvAck { chan: u8 },
+    /// Stop.
+    Halt,
+    /// No operation.
+    Nop,
+}
+
+/// Instruction class for mix accounting (paper Fig 8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum InstClass {
+    /// Arithmetic, branches, moves, immediates.
+    NonMemory,
+    /// Local loads/stores (program, stack, constants).
+    LocalMemory,
+    /// Global accesses: direct loads/stores, or the channel
+    /// instructions implementing them.
+    GlobalMemory,
+}
+
+impl Inst {
+    /// Classify for instruction-mix accounting. Channel instructions
+    /// count as global-memory work (they exist only to implement the
+    /// emulated accesses).
+    pub fn class(&self) -> InstClass {
+        use Inst::*;
+        match self {
+            LoadLocal { .. } | StoreLocal { .. } => InstClass::LocalMemory,
+            LoadGlobal { .. } | StoreGlobal { .. } | Send { .. } | SendImm { .. }
+            | Recv { .. } | RecvAck { .. } => InstClass::GlobalMemory,
+            _ => InstClass::NonMemory,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classification() {
+        assert_eq!(Inst::Add { d: 0, a: 1, b: 2 }.class(), InstClass::NonMemory);
+        assert_eq!(Inst::LoadLocal { d: 0, a: 1, off: 0 }.class(), InstClass::LocalMemory);
+        assert_eq!(Inst::LoadGlobal { d: 0, a: 1 }.class(), InstClass::GlobalMemory);
+        assert_eq!(Inst::Recv { chan: 0, dest: 1 }.class(), InstClass::GlobalMemory);
+        assert_eq!(Inst::Jump { offset: -1 }.class(), InstClass::NonMemory);
+    }
+}

@@ -1,0 +1,427 @@
+//! Costed interpreter (paper §6.1 cost model).
+//!
+//! Every instruction costs one cycle; global-memory traffic adds the
+//! memory system's latency. Two memory systems implement the paper's
+//! two machines:
+//!
+//! * [`DirectMemory`] — the sequential baseline: `LoadGlobal` /
+//!   `StoreGlobal` cost the DRAM random-access latency.
+//! * [`EmulatedChannelMemory`] — the parallel emulation: the §2.1
+//!   channel protocol (`SEND tag; SEND addr; [SEND value;] RECV`) is
+//!   executed against an [`EmulationSetup`]; the blocking receive pays
+//!   the network round trip.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::inst::{Inst, InstClass};
+use crate::emulation::controller::{MSG_READ, MSG_WRITE};
+use crate::emulation::{EmulationSetup, SequentialMachine};
+
+/// A global memory system with a cost model.
+pub trait MemorySystem {
+    /// Read a word; returns (value, latency in cycles charged to the
+    /// completing instruction).
+    fn read(&mut self, addr: u64) -> (i64, f64);
+    /// Write a word; returns the latency charged.
+    fn write(&mut self, addr: u64, value: i64) -> f64;
+    /// Size of the address space in words.
+    fn space_words(&self) -> u64;
+}
+
+/// The sequential baseline's DRAM-backed global memory.
+pub struct DirectMemory {
+    machine: SequentialMachine,
+    store: HashMap<u64, i64>,
+    space: u64,
+}
+
+impl DirectMemory {
+    /// DRAM memory with `space` words and the given baseline machine.
+    pub fn new(machine: SequentialMachine, space: u64) -> Self {
+        Self { machine, store: HashMap::new(), space }
+    }
+}
+
+impl MemorySystem for DirectMemory {
+    fn read(&mut self, addr: u64) -> (i64, f64) {
+        (*self.store.get(&addr).unwrap_or(&0), self.machine.global_access_cycles())
+    }
+
+    fn write(&mut self, addr: u64, value: i64) -> f64 {
+        self.store.insert(addr, value);
+        self.machine.global_access_cycles()
+    }
+
+    fn space_words(&self) -> u64 {
+        self.space
+    }
+}
+
+/// The emulated memory reached through the channel protocol.
+pub struct EmulatedChannelMemory {
+    setup: EmulationSetup,
+    store: HashMap<u64, i64>,
+}
+
+impl EmulatedChannelMemory {
+    /// Channel memory over an emulation design point.
+    pub fn new(setup: EmulationSetup) -> Self {
+        Self { setup, store: HashMap::new() }
+    }
+
+    /// The underlying design point.
+    pub fn setup(&self) -> &EmulationSetup {
+        &self.setup
+    }
+}
+
+impl MemorySystem for EmulatedChannelMemory {
+    fn read(&mut self, addr: u64) -> (i64, f64) {
+        // The round trip includes request, SRAM access and response;
+        // the two SEND instructions that preceded the RECV were charged
+        // their own single cycles.
+        (*self.store.get(&addr).unwrap_or(&0), self.setup.access_cycles(addr))
+    }
+
+    fn write(&mut self, addr: u64, value: i64) -> f64 {
+        self.store.insert(addr, value);
+        self.setup.access_cycles(addr)
+    }
+
+    fn space_words(&self) -> u64 {
+        self.setup.map.space_words()
+    }
+}
+
+/// Execution statistics (the quantities Figs 8/10/11 are built from).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RunStats {
+    /// Instructions executed.
+    pub instructions: u64,
+    /// Total cycles (1/instruction + memory latencies).
+    pub cycles: f64,
+    /// Non-memory instructions executed.
+    pub non_memory: u64,
+    /// Local-memory instructions executed.
+    pub local_memory: u64,
+    /// Global-memory instructions executed (incl. channel protocol).
+    pub global_memory: u64,
+    /// Completed global accesses (loads + stores).
+    pub global_accesses: u64,
+}
+
+impl RunStats {
+    /// Fraction of executed instructions in each class
+    /// (non-memory, local, global).
+    pub fn mix(&self) -> (f64, f64, f64) {
+        let n = self.instructions.max(1) as f64;
+        (self.non_memory as f64 / n, self.local_memory as f64 / n, self.global_memory as f64 / n)
+    }
+
+    /// Cycles per instruction.
+    pub fn cpi(&self) -> f64 {
+        self.cycles / self.instructions.max(1) as f64
+    }
+}
+
+/// Channel-protocol progress on the controller channel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ChannelState {
+    Idle,
+    GotTag(u32),
+    GotAddr { tag: u32, addr: u64 },
+    /// Write data sent; the pending ack completes the store.
+    WrotePending,
+    /// Read request complete; value ready for RECV.
+    ReadPending { addr: u64 },
+}
+
+/// The interpreter: registers, local memory, call stack, and a global
+/// memory system.
+pub struct Machine<'m> {
+    regs: [i64; 16],
+    local: Vec<i64>,
+    call_stack: Vec<usize>,
+    mem: &'m mut dyn MemorySystem,
+    chan: ChannelState,
+    /// Safety limit on executed instructions.
+    pub max_steps: u64,
+}
+
+impl<'m> Machine<'m> {
+    /// New machine with `local_words` of tile-local memory.
+    pub fn new(mem: &'m mut dyn MemorySystem, local_words: usize) -> Self {
+        Self {
+            regs: [0; 16],
+            local: vec![0; local_words],
+            call_stack: Vec::new(),
+            mem,
+            chan: ChannelState::Idle,
+            max_steps: 200_000_000,
+        }
+    }
+
+    /// Read a register (for assertions in tests/examples).
+    pub fn reg(&self, i: u8) -> i64 {
+        self.regs[i as usize]
+    }
+
+    /// Set a register before running.
+    pub fn set_reg(&mut self, i: u8, v: i64) {
+        self.regs[i as usize] = v;
+    }
+
+    fn global_addr(&self, v: i64) -> u64 {
+        (v as u64) % self.mem.space_words().max(1)
+    }
+
+    /// Run a program to `Halt` (or error); returns the statistics.
+    pub fn run(&mut self, program: &[Inst]) -> Result<RunStats> {
+        use Inst::*;
+        let mut stats = RunStats::default();
+        let mut pc = 0usize;
+        while pc < program.len() {
+            if stats.instructions >= self.max_steps {
+                bail!("step limit exceeded ({})", self.max_steps);
+            }
+            let inst = program[pc];
+            stats.instructions += 1;
+            match inst.class() {
+                InstClass::NonMemory => stats.non_memory += 1,
+                InstClass::LocalMemory => stats.local_memory += 1,
+                InstClass::GlobalMemory => stats.global_memory += 1,
+            }
+            let mut cost = 1.0; // every instruction issues in a cycle
+            let mut next = pc + 1;
+            match inst {
+                Add { d, a, b } => self.regs[d as usize] = self.regs[a as usize].wrapping_add(self.regs[b as usize]),
+                Sub { d, a, b } => self.regs[d as usize] = self.regs[a as usize].wrapping_sub(self.regs[b as usize]),
+                Mul { d, a, b } => self.regs[d as usize] = self.regs[a as usize].wrapping_mul(self.regs[b as usize]),
+                And { d, a, b } => self.regs[d as usize] = self.regs[a as usize] & self.regs[b as usize],
+                Or { d, a, b } => self.regs[d as usize] = self.regs[a as usize] | self.regs[b as usize],
+                Xor { d, a, b } => self.regs[d as usize] = self.regs[a as usize] ^ self.regs[b as usize],
+                Lt { d, a, b } => self.regs[d as usize] = (self.regs[a as usize] < self.regs[b as usize]) as i64,
+                Eq { d, a, b } => self.regs[d as usize] = (self.regs[a as usize] == self.regs[b as usize]) as i64,
+                AddI { d, a, imm } => self.regs[d as usize] = self.regs[a as usize].wrapping_add(imm as i64),
+                LoadImm { d, imm } => self.regs[d as usize] = imm as i64,
+                Mov { d, s } => self.regs[d as usize] = self.regs[s as usize],
+                Jump { offset } => next = offset_pc(pc, offset)?,
+                BranchZ { c, offset } => {
+                    if self.regs[c as usize] == 0 {
+                        next = offset_pc(pc, offset)?;
+                    }
+                }
+                BranchNZ { c, offset } => {
+                    if self.regs[c as usize] != 0 {
+                        next = offset_pc(pc, offset)?;
+                    }
+                }
+                Call { target } => {
+                    self.call_stack.push(pc + 1);
+                    next = target as usize;
+                }
+                Ret => {
+                    let Some(r) = self.call_stack.pop() else { bail!("ret with empty stack") };
+                    next = r;
+                }
+                LoadLocal { d, a, off } => {
+                    let idx = local_index(self.regs[a as usize], off, self.local.len())?;
+                    self.regs[d as usize] = self.local[idx];
+                }
+                StoreLocal { s, a, off } => {
+                    let idx = local_index(self.regs[a as usize], off, self.local.len())?;
+                    self.local[idx] = self.regs[s as usize];
+                }
+                LoadGlobal { d, a } => {
+                    let addr = self.global_addr(self.regs[a as usize]);
+                    let (v, lat) = self.mem.read(addr);
+                    self.regs[d as usize] = v;
+                    cost += lat;
+                    stats.global_accesses += 1;
+                }
+                StoreGlobal { s, a } => {
+                    let addr = self.global_addr(self.regs[a as usize]);
+                    cost += self.mem.write(addr, self.regs[s as usize]);
+                    stats.global_accesses += 1;
+                }
+                Send { chan: _, src } => self.channel_send(self.regs[src as usize], &mut stats)?,
+                SendImm { chan: _, value } => self.channel_send(value as i64, &mut stats)?,
+                Recv { chan: _, dest } => {
+                    let ChannelState::ReadPending { addr } = self.chan else {
+                        bail!("RECV with no pending read");
+                    };
+                    let (v, lat) = self.mem.read(addr);
+                    self.regs[dest as usize] = v;
+                    cost += lat;
+                    stats.global_accesses += 1;
+                    self.chan = ChannelState::Idle;
+                }
+                RecvAck { chan: _ } => {
+                    let ChannelState::WrotePending = self.chan else {
+                        bail!("RECVACK with no pending write");
+                    };
+                    // Latency was charged on the data SEND completing
+                    // the write; the ack arrives with it.
+                    self.chan = ChannelState::Idle;
+                }
+                Halt => {
+                    stats.cycles += cost;
+                    return Ok(stats);
+                }
+                Nop => {}
+            }
+            stats.cycles += cost;
+            pc = next;
+        }
+        bail!("fell off the end of the program (missing Halt)")
+    }
+
+    /// Advance the §2.1 channel protocol by one sent word.
+    fn channel_send(&mut self, value: i64, stats: &mut RunStats) -> Result<()> {
+        self.chan = match self.chan {
+            ChannelState::Idle => {
+                let tag = value as u32;
+                if tag != MSG_READ && tag != MSG_WRITE {
+                    bail!("bad channel tag {tag}");
+                }
+                ChannelState::GotTag(tag)
+            }
+            ChannelState::GotTag(tag) => {
+                let addr = self.global_addr(value);
+                if tag == MSG_READ {
+                    ChannelState::ReadPending { addr }
+                } else {
+                    ChannelState::GotAddr { tag, addr }
+                }
+            }
+            ChannelState::GotAddr { tag: _, addr } => {
+                // Write data word: the store is performed; the ack costs
+                // the round trip and is collected by RECVACK.
+                let lat = self.mem.write(addr, value);
+                stats.cycles += lat;
+                stats.global_accesses += 1;
+                ChannelState::WrotePending
+            }
+            ChannelState::WrotePending | ChannelState::ReadPending { .. } => {
+                bail!("SEND while a transaction is pending")
+            }
+        };
+        Ok(())
+    }
+}
+
+fn offset_pc(pc: usize, offset: i32) -> Result<usize> {
+    let target = pc as i64 + offset as i64;
+    if target < 0 {
+        bail!("branch to negative pc");
+    }
+    Ok(target as usize)
+}
+
+fn local_index(base: i64, off: i32, len: usize) -> Result<usize> {
+    let idx = base + off as i64;
+    if idx < 0 || idx as usize >= len {
+        bail!("local access out of bounds ({idx} / {len})");
+    }
+    Ok(idx as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::emulation::controller::{expand_load, expand_store};
+    use crate::emulation::TopologyKind;
+    use Inst::*;
+
+    fn direct(space: u64) -> DirectMemory {
+        DirectMemory::new(SequentialMachine::paper_figures(false), space)
+    }
+
+    #[test]
+    fn arithmetic_and_branches() {
+        // sum 1..=10 via a loop
+        let prog = vec![
+            LoadImm { d: 0, imm: 0 },  // acc
+            LoadImm { d: 1, imm: 10 }, // i
+            // loop:
+            Add { d: 0, a: 0, b: 1 },
+            AddI { d: 1, a: 1, imm: -1 },
+            BranchNZ { c: 1, offset: -2 },
+            Halt,
+        ];
+        let mut mem = direct(1024);
+        let mut m = Machine::new(&mut mem, 16);
+        let stats = m.run(&prog).unwrap();
+        assert_eq!(m.reg(0), 55);
+        assert_eq!(stats.instructions, 2 + 3 * 10 + 1);
+        assert_eq!(stats.cycles, stats.instructions as f64); // no memory
+    }
+
+    #[test]
+    fn direct_global_costs_dram() {
+        let prog = vec![
+            LoadImm { d: 1, imm: 100 },
+            LoadImm { d: 2, imm: 7 },
+            StoreGlobal { s: 2, a: 1 },
+            LoadGlobal { d: 3, a: 1 },
+            Halt,
+        ];
+        let mut mem = direct(1024);
+        let mut m = Machine::new(&mut mem, 16);
+        let stats = m.run(&prog).unwrap();
+        assert_eq!(m.reg(3), 7);
+        assert_eq!(stats.global_accesses, 2);
+        // 5 issue cycles + 2 x 35 ns
+        assert!((stats.cycles - (5.0 + 70.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn emulated_channel_roundtrip() {
+        let setup = EmulationSetup::default_tech(TopologyKind::Clos, 1024, 128, 255).unwrap();
+        let rt = setup.access_cycles(100);
+        let mut mem = EmulatedChannelMemory::new(setup);
+        let mut prog = vec![LoadImm { d: 1, imm: 100 }, LoadImm { d: 2, imm: 42 }];
+        prog.extend(expand_store(2, 1));
+        prog.extend(expand_load(3, 1));
+        prog.push(Halt);
+        let mut m = Machine::new(&mut mem, 16);
+        let stats = m.run(&prog).unwrap();
+        assert_eq!(m.reg(3), 42);
+        assert_eq!(stats.global_accesses, 2);
+        // 2 + 4 + 3 + 1 issue cycles + 2 round trips
+        let expect = 10.0 + 2.0 * rt;
+        assert!((stats.cycles - expect).abs() < 1e-9, "{} vs {expect}", stats.cycles);
+        // channel instructions counted as global-memory work
+        assert_eq!(stats.global_memory, 7);
+    }
+
+    #[test]
+    fn protocol_violations_are_errors() {
+        let setup = EmulationSetup::default_tech(TopologyKind::Clos, 256, 64, 100).unwrap();
+        let mut mem = EmulatedChannelMemory::new(setup);
+        let mut m = Machine::new(&mut mem, 4);
+        assert!(m.run(&[Recv { chan: 0, dest: 0 }, Halt]).is_err());
+        let mut mem2 = EmulatedChannelMemory::new(
+            EmulationSetup::default_tech(TopologyKind::Clos, 256, 64, 100).unwrap(),
+        );
+        let mut m2 = Machine::new(&mut mem2, 4);
+        assert!(m2.run(&[SendImm { chan: 0, value: 9 }, Halt]).is_err());
+    }
+
+    #[test]
+    fn step_limit_catches_infinite_loops() {
+        let mut mem = direct(16);
+        let mut m = Machine::new(&mut mem, 4);
+        m.max_steps = 1000;
+        assert!(m.run(&[Jump { offset: 0 }]).is_err());
+    }
+
+    #[test]
+    fn local_bounds_checked() {
+        let mut mem = direct(16);
+        let mut m = Machine::new(&mut mem, 4);
+        assert!(m.run(&[LoadLocal { d: 0, a: 0, off: 100 }, Halt]).is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! Benchmark substrate: a tiny XCore-flavoured RISC ISA with channel
+//! communication (paper §2.1, §3.4, §6.2).
+//!
+//! * [`inst`] — the instruction set (ALU, branches, local memory,
+//!   direct global memory, channel send/receive).
+//! * [`encode`] — fixed 32-bit binary encoding (for the §7.3 binary
+//!   size measurements).
+//! * [`interp`] — a costed interpreter: 1 cycle per instruction, plus
+//!   the memory system's latency for global accesses; the channel
+//!   protocol of §2.1 is executed against the emulated memory.
+
+pub mod encode;
+pub mod inst;
+pub mod interp;
+
+pub use encode::{decode, encode, program_bytes};
+pub use inst::Inst;
+pub use interp::{DirectMemory, EmulatedChannelMemory, Machine, MemorySystem, RunStats};

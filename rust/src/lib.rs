@@ -1,0 +1,47 @@
+//! # memclos
+//!
+//! Reproduction of *"Emulating a large memory with a collection of smaller
+//! ones"* (James Hanlon): a general-purpose parallel architecture of
+//! processor+SRAM tiles on a folded-Clos interconnect that emulates a
+//! large sequential memory with a 2–3x slowdown versus a conventional
+//! processor + DDR3 machine.
+//!
+//! The crate contains the complete modelling stack:
+//!
+//! * [`tech`] — ITRS-derived technology database (paper Tables 1–4) and
+//!   the repeated-wire delay model.
+//! * [`topology`] — folded-Clos and 2D-mesh network generators with
+//!   shortest-path routing (paper Fig 1).
+//! * [`vlsi`] — chip floorplans (H-tree Clos layout, mesh layout), I/O
+//!   and silicon-interposer models (paper §4, Figs 2–7).
+//! * [`dram`] — a cycle-level DDR3 simulator standing in for DRAMSim2
+//!   (paper §6.1 baseline: ~35 ns average random access).
+//! * [`netmodel`] — the analytic message-latency model (paper §6.3).
+//! * [`sim`] — a message-level discrete-event simulator that
+//!   cross-validates [`netmodel`].
+//! * [`emulation`] — the paper's contribution: the emulated-memory
+//!   machine and the sequential baseline machine.
+//! * [`isa`], [`workload`], [`cc`] — benchmark substrate: a tiny RISC
+//!   ISA + interpreter, synthetic instruction mixes (Fig 8), and a miniC
+//!   compiler with direct and emulated-memory backends (§6.2, §7.3).
+//! * [`runtime`], [`coordinator`] — the PJRT runtime that executes the
+//!   AOT-compiled JAX/Pallas latency kernel and the multi-threaded sweep
+//!   coordinator that drives it.
+//! * [`figures`] — generators for every table and figure in the paper.
+
+pub mod cc;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dram;
+pub mod emulation;
+pub mod figures;
+pub mod isa;
+pub mod netmodel;
+pub mod runtime;
+pub mod sim;
+pub mod tech;
+pub mod topology;
+pub mod util;
+pub mod vlsi;
+pub mod workload;

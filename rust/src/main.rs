@@ -1,0 +1,335 @@
+//! `memclos` — reproduce "Emulating a large memory with a collection of
+//! smaller ones" from the command line.
+//!
+//! Every table and figure of the paper has a subcommand; `selfcheck`
+//! proves the XLA artifact and the native model agree bit-for-bit.
+
+use anyhow::{bail, Context, Result};
+
+use memclos::cc::{compile, Backend};
+use memclos::cli::Args;
+use memclos::config;
+use memclos::coordinator::{run_sweep, EvalMode, SweepPoint};
+use memclos::dram::{measure_random_latency, DramConfig};
+use memclos::emulation::{EmulationSetup, SequentialMachine, TopologyKind};
+use memclos::figures::{self, FigOpts};
+use memclos::isa::interp::{DirectMemory, EmulatedChannelMemory, Machine};
+use memclos::netmodel::NetParams;
+use memclos::runtime::{ArtifactSet, LatencyEngine};
+use memclos::sim::network::run_contention;
+use memclos::tech::{ChipTech, InterposerTech};
+use memclos::topology::{ClosSpec, MeshSpec};
+use memclos::util::rng::Rng;
+use memclos::vlsi::{ClosFloorplan, MeshFloorplan};
+
+const HELP: &str = "\
+memclos — emulating a large memory with a collection of smaller ones
+
+USAGE: memclos <command> [options]
+
+COMMANDS
+  tables [--which 1..5]         regenerate the paper's parameter tables
+  figure <5|6|7|9|10|11|bsize|ablations>  regenerate a figure / extension
+  dram [--ranks N]              measure DDR3 random-access latency
+  area --topo clos|mesh [--tiles N --mem KB]   floorplan one chip
+  latency --topo clos|mesh [--tiles N --mem KB --k N]
+                                emulated-memory latency for one point
+  run <program> [--topo ...]    compile+run a corpus program on both machines
+  contention [--clients N]      DES contention experiment (c_cont)
+  selfcheck                     prove XLA artifact == native model
+  sweep --tiles N --mem KB      latency sweep over emulation sizes
+
+COMMON OPTIONS
+  --mode exact|native|xla       evaluation mode (default: auto)
+  --samples N                   Monte-Carlo samples (default 65536)
+  --workers N                   sweep worker threads (default 4)
+  --seed N                      RNG seed
+  --set key=value               config override (repeatable)
+  --config PATH                 config file (TOML subset)
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn eval_mode(args: &Args) -> Result<EvalMode> {
+    let samples: usize = args.get("samples", 65_536)?;
+    Ok(match args.flag("mode") {
+        None | Some("auto") => EvalMode::auto(samples, 16_384),
+        Some("exact") => EvalMode::Exact,
+        Some("native") => EvalMode::NativeMc { samples },
+        Some("xla") => EvalMode::XlaMc { samples, batch: 16_384 },
+        Some(other) => bail!("unknown --mode {other}"),
+    })
+}
+
+fn fig_opts(args: &Args) -> Result<FigOpts> {
+    Ok(FigOpts {
+        mode: eval_mode(args)?,
+        workers: args.get("workers", std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4))?,
+        seed: args.get("seed", 0xC105)?,
+    })
+}
+
+fn topo_kind(args: &Args) -> Result<TopologyKind> {
+    TopologyKind::parse(args.flag("topo").unwrap_or("clos"))
+}
+
+fn run(raw: Vec<String>) -> Result<()> {
+    let args = Args::parse(raw)?;
+    if args.command.is_empty() || args.has("help") || args.command == "help" {
+        println!("{HELP}");
+        return Ok(());
+    }
+    let doc = config::load(
+        args.flag("config").map(std::path::Path::new),
+        &args.flag_all("set"),
+    )?;
+    let chip = ChipTech::from_doc(&doc);
+    let ip = InterposerTech::from_doc(&doc);
+    let net = NetParams::from_doc(&doc);
+
+    match args.command.as_str() {
+        "tables" => {
+            let which = args.flag("which");
+            match which {
+                None => print!("{}", figures::tables::render_all()),
+                Some("1") => print!("{}", figures::tables::table1(&chip).render()),
+                Some("2") => print!("{}", figures::tables::table2(&ip).render()),
+                Some("3") => print!("{}", figures::tables::table3().render()),
+                Some("4") => print!("{}", figures::tables::table4().render()),
+                Some("5") => print!("{}", figures::tables::table5(&net).render()),
+                Some(o) => bail!("no table {o}"),
+            }
+        }
+        "figure" => {
+            let which = args.positional.first().context("figure number required")?;
+            let opts = fig_opts(&args)?;
+            match which.as_str() {
+                "5" => print!("{}", figures::fig5::render(&figures::fig5::generate(&chip)?, &chip)),
+                "6" => print!("{}", figures::fig6::render(&figures::fig6::generate(&chip)?)),
+                "7" => print!("{}", figures::fig7::render(&figures::fig7::generate(&chip, &ip)?)),
+                "9" => print!("{}", figures::fig9::render(&figures::fig9::generate(&opts)?)),
+                "10" => print!("{}", figures::fig10::render(&figures::fig10::generate(&opts)?)),
+                "11" => print!("{}", figures::fig11::render(&figures::fig11::generate(&opts)?)),
+                "bsize" => print!("{}", figures::binary_size::render(&figures::binary_size::generate()?)),
+                "ablations" => {
+                    print!("{}", figures::ablations::render(&figures::ablations::generate()?))
+                }
+                o => bail!("no figure {o} (5|6|7|9|10|11|bsize|ablations)"),
+            }
+        }
+        "dram" => {
+            let ranks: usize = args.get("ranks", 1)?;
+            let n: u64 = args.get("samples", 20_000u64)?;
+            let m = measure_random_latency(DramConfig::with_ranks(ranks), n, args.get("seed", 7)?)?;
+            println!(
+                "DDR3-1600 {} rank(s), {} GB: avg {:.2} ns (min {:.2}, max {:.2}, sd {:.2}) over {} accesses",
+                ranks,
+                m.config.capacity_bytes() >> 30,
+                m.avg_ns,
+                m.min_ns,
+                m.max_ns,
+                m.stddev_ns,
+                m.accesses
+            );
+        }
+        "area" => {
+            let tiles: usize = args.get("tiles", 256)?;
+            let mem: u32 = args.get("mem", 128)?;
+            match topo_kind(&args)? {
+                TopologyKind::Clos => {
+                    let fp = ClosFloorplan::plan(&ClosSpec::with_tiles(tiles), mem, &chip)?;
+                    println!(
+                        "folded-Clos chip: {} tiles x {} KB\n  area {:.1} mm^2 ({:.1} x {:.1}), I/O {:.1} mm^2, switches {:.2} mm^2, wires {:.2} mm^2\n  wires: tile {:.2} mm ({} cy), edge-core {:.2} mm ({} cy), core-pad {:.2} mm ({} cy)\n  economical: {}",
+                        fp.tiles, fp.mem_kb, fp.area_mm2, fp.chip_w_mm, fp.chip_h_mm,
+                        fp.io_area_mm2, fp.switch_area_mm2, fp.wire_area_mm2,
+                        fp.wire_tile_mm, fp.cycles.tile,
+                        fp.wire_edge_core_mm, fp.cycles.edge_core,
+                        fp.wire_core_pad_mm, fp.cycles.core_pad,
+                        fp.is_economical(&chip),
+                    );
+                }
+                TopologyKind::Mesh => {
+                    let fp = MeshFloorplan::plan(&MeshSpec::with_tiles(tiles), mem, &chip)?;
+                    println!(
+                        "2D-mesh chip: {} tiles x {} KB\n  area {:.1} mm^2 (side {:.1}), I/O {:.1} mm^2, switches {:.2} mm^2, wires {:.2} mm^2\n  wires: tile {:.2} mm ({} cy), hop {:.2} mm ({} cy)\n  economical: {}",
+                        fp.tiles, fp.mem_kb, fp.area_mm2, fp.chip_side_mm,
+                        fp.io_area_mm2, fp.switch_area_mm2, fp.wire_area_mm2,
+                        fp.wire_tile_mm, fp.cycles.tile, fp.wire_hop_mm, fp.cycles.mesh_hop,
+                        fp.is_economical(&chip),
+                    );
+                }
+            }
+        }
+        "latency" => {
+            let tiles: usize = args.get("tiles", 1024)?;
+            let mem: u32 = args.get("mem", 128)?;
+            let k: usize = args.get("k", tiles - 1)?;
+            let kind = topo_kind(&args)?;
+            let setup = EmulationSetup::build(kind, tiles, mem, k, net, &chip, &ip)?;
+            let exact = setup.expected_latency();
+            let seq = SequentialMachine::with_measured_dram(1);
+            println!(
+                "{:?} {tiles}-tile system, {mem} KB/tile, k={k}: {exact:.2} cycles/access ({:.2}x DDR3 {:.1} ns)",
+                kind, exact / seq.dram_ns, seq.dram_ns
+            );
+            if let EvalMode::XlaMc { samples, batch } = eval_mode(&args)? {
+                let set = ArtifactSet::new()?;
+                let engine = LatencyEngine::load(&set, batch)?;
+                let params = setup.kernel_params();
+                let mut rng = Rng::new(args.get("seed", 1u64)?);
+                let mut buf = vec![0i32; batch];
+                let mut sum = 0.0;
+                let mut n = 0;
+                while n < samples {
+                    rng.fill_addresses(setup.map.space_words(), &mut buf);
+                    let (_, mean) = engine.run(&buf, &params)?;
+                    sum += mean as f64;
+                    n += batch;
+                }
+                println!("  XLA hot path: {:.2} cycles/access ({n} samples)", sum / (n / batch) as f64);
+            }
+        }
+        "run" => {
+            let name = args.positional.first().context("program name required")?;
+            let prog = memclos::cc::corpus::all()
+                .into_iter()
+                .find(|p| p.name == *name)
+                .with_context(|| {
+                    let names: Vec<&str> =
+                        memclos::cc::corpus::all().iter().map(|p| p.name).collect();
+                    format!("unknown program `{name}` (available: {})", names.join(", "))
+                })?;
+            let tiles: usize = args.get("tiles", 1024)?;
+            let mem: u32 = args.get("mem", 128)?;
+            let k: usize = args.get("k", 255)?;
+            let kind = topo_kind(&args)?;
+
+            let direct = compile(prog.source, Backend::Direct)?;
+            let emulated = compile(prog.source, Backend::Emulated)?;
+
+            let mut dmem = DirectMemory::new(SequentialMachine::with_measured_dram(1), 1 << 24);
+            let mut dm = Machine::new(&mut dmem, 1 << 16);
+            let dstats = dm.run(&direct.code)?;
+            let dres = dm.reg(0);
+
+            let setup = EmulationSetup::build(kind, tiles, mem, k, net, &chip, &ip)?;
+            let mut emem = EmulatedChannelMemory::new(setup);
+            let mut em = Machine::new(&mut emem, 1 << 16);
+            let estats = em.run(&emulated.code)?;
+            let eres = em.reg(0);
+
+            println!("program `{}`:", prog.name);
+            println!(
+                "  sequential: result {dres}, {} insts, {:.0} cycles (binary {} B)",
+                dstats.instructions, dstats.cycles, direct.binary_bytes()
+            );
+            println!(
+                "  emulated  : result {eres}, {} insts, {:.0} cycles (binary {} B, +{:.1}%)",
+                estats.instructions,
+                estats.cycles,
+                emulated.binary_bytes(),
+                100.0 * (emulated.binary_bytes() as f64 / direct.binary_bytes() as f64 - 1.0)
+            );
+            println!("  slowdown  : {:.2}x", estats.cycles / dstats.cycles);
+            if dres != eres {
+                bail!("machines disagree: {dres} vs {eres}");
+            }
+        }
+        "contention" => {
+            let tiles: usize = args.get("tiles", 256)?;
+            let clients: usize = args.get("clients", 4)?;
+            let accesses: usize = args.get("samples", 500)?;
+            let setup = EmulationSetup::build(
+                topo_kind(&args)?,
+                tiles,
+                args.get("mem", 128)?,
+                tiles - 1,
+                net,
+                &chip,
+                &ip,
+            )?;
+            let r = run_contention(&setup, clients, accesses, args.get("seed", 5)?);
+            println!(
+                "{clients} clients x {accesses} accesses: mean {:.1} cy (inflation {:.3} over zero-load)",
+                r.latency.mean(),
+                r.inflation
+            );
+        }
+        "selfcheck" => selfcheck(&args, net, &chip, &ip)?,
+        "sweep" => {
+            let tiles: usize = args.get("tiles", 1024)?;
+            let mem: u32 = args.get("mem", 128)?;
+            let kind = topo_kind(&args)?;
+            let mut points = Vec::new();
+            let mut k = 16usize;
+            while k < tiles {
+                points.push(SweepPoint { kind, tiles, mem_kb: mem, k });
+                k *= 2;
+            }
+            points.push(SweepPoint { kind, tiles, mem_kb: mem, k: tiles - 1 });
+            let opts = fig_opts(&args)?;
+            let mut results = run_sweep(&points, opts.mode, opts.workers, opts.seed)?;
+            results.sort_by_key(|r| r.point.k);
+            println!("k tiles  latency (cycles)");
+            for r in &results {
+                println!("{:>7}  {:.2}", r.point.k, r.mean_cycles);
+            }
+        }
+        other => bail!("unknown command `{other}` (try --help)"),
+    }
+    Ok(())
+}
+
+/// Prove the three evaluation paths agree: exact expectation, native
+/// Monte-Carlo, and the AOT XLA kernel.
+fn selfcheck(args: &Args, net: NetParams, chip: &ChipTech, ip: &InterposerTech) -> Result<()> {
+    let set = ArtifactSet::new()?;
+    println!("PJRT platform: {}", set.platform());
+    if !set.available("latency_batch_4096") {
+        bail!("artifacts missing — run `make artifacts` first");
+    }
+    let engine = LatencyEngine::load(&set, 4096)?;
+    let mut rng = Rng::new(args.get("seed", 0xABCD)?);
+    let mut worst = 0f32;
+    let mut checked = 0usize;
+    for kind in [TopologyKind::Clos, TopologyKind::Mesh] {
+        for &(tiles, mem) in &[(256usize, 64u32), (1024, 128), (4096, 128)] {
+            for &k in &[15usize, 255, 1023] {
+                if k >= tiles {
+                    continue;
+                }
+                let setup = EmulationSetup::build(kind, tiles, mem, k, net, chip, ip)?;
+                let params = setup.kernel_params();
+                let mut addrs = vec![0i32; 4096];
+                rng.fill_addresses(setup.map.space_words(), &mut addrs);
+                let (xla_lat, _) = engine.run(&addrs, &params)?;
+                let mut native = Vec::new();
+                setup.native_batch(&addrs, &mut native);
+                for i in 0..addrs.len() {
+                    let diff = (xla_lat[i] - native[i]).abs();
+                    worst = worst.max(diff);
+                    if diff > 1e-4 {
+                        bail!(
+                            "MISMATCH {kind:?} tiles={tiles} mem={mem} k={k} addr={}: xla {} native {}",
+                            addrs[i],
+                            xla_lat[i],
+                            native[i]
+                        );
+                    }
+                }
+                checked += addrs.len();
+            }
+        }
+    }
+    println!("selfcheck OK: {checked} accesses across 16 design points, worst |xla-native| = {worst}");
+    Ok(())
+}

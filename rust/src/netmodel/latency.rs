@@ -1,0 +1,156 @@
+//! The analytic message-latency model (paper §6.3).
+//!
+//! ```text
+//! t_closed(s,t) = 2*t_tile + t_serial
+//!                 + (d(s,t)+1) * (t_open + t_switch*c_cont)
+//!                 + sum over links l in p(s,t) of t_link(l)
+//! ```
+//!
+//! (with `t_open` elided when the route is already open). A memory
+//! access is a request/response round trip plus the remote tile's SRAM
+//! access: `2 * t_closed + t_mem`.
+//!
+//! Per-link latencies come from the VLSI floorplan ([`LinkLatencies`]);
+//! the model is evaluated either natively (here) or by the AOT-compiled
+//! kernel ([`crate::runtime::LatencyEngine`]) — a test proves both agree
+//! bit-for-bit.
+
+use super::params::NetParams;
+use crate::topology::{Route, Topology};
+
+/// Per-link-class latencies in cycles, derived from the floorplan and
+/// interposer models.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkLatencies {
+    /// Tile <-> switch link.
+    pub tile: f64,
+    /// Clos edge <-> chip-core link (on-chip).
+    pub edge_core: f64,
+    /// Clos chip-core <-> system-core link (chip pad run + interposer
+    /// channel + remote pad run).
+    pub core_sys: f64,
+    /// Mesh hop (on-chip).
+    pub mesh_hop: f64,
+    /// Extra cycles when a mesh hop crosses chips.
+    pub mesh_cross_extra: f64,
+}
+
+impl LinkLatencies {
+    /// Single-cycle links everywhere (the XMP-64-like abstract machine).
+    pub fn unit() -> Self {
+        Self { tile: 1.0, edge_core: 1.0, core_sys: 1.0, mesh_hop: 1.0, mesh_cross_extra: 0.0 }
+    }
+}
+
+/// The analytic latency model for one emulation design point.
+#[derive(Clone, Debug)]
+pub struct LatencyModel {
+    /// Network parameters (Table 5).
+    pub net: NetParams,
+    /// Per-link-class latencies (floorplan-derived).
+    pub links: LinkLatencies,
+}
+
+impl LatencyModel {
+    /// Construct from parameters.
+    pub fn new(net: NetParams, links: LinkLatencies) -> Self {
+        Self { net, links }
+    }
+
+    /// Total link latency along a route.
+    pub fn link_sum(&self, r: &Route) -> f64 {
+        r.edge_core_links as f64 * self.links.edge_core
+            + r.core_sys_links as f64 * self.links.core_sys
+            + r.mesh_hops as f64 * self.links.mesh_hop
+            + r.chip_crossings as f64 * (self.links.mesh_hop + self.links.mesh_cross_extra)
+    }
+
+    /// One-way message latency over a route (t_closed / t_open of §6.3).
+    pub fn one_way(&self, r: &Route) -> f64 {
+        let ser = if r.inter_chip { self.net.t_serial_inter } else { self.net.t_serial_intra };
+        2.0 * self.links.tile + ser + r.switches() as f64 * self.net.per_switch() + self.link_sum(r)
+    }
+
+    /// Round-trip memory access latency: request + SRAM + response.
+    pub fn round_trip(&self, r: &Route) -> f64 {
+        2.0 * self.one_way(r) + self.net.t_mem
+    }
+
+    /// Round trip between two tiles of a topology.
+    pub fn access(&self, topo: &Topology, client: usize, tile: usize) -> f64 {
+        self.round_trip(&topo.route(client, tile))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{ClosSpec, FoldedClos, Mesh2D, MeshSpec};
+
+    fn model() -> LatencyModel {
+        let links = LinkLatencies {
+            tile: 1.0,
+            edge_core: 2.0,
+            core_sys: 8.0,
+            mesh_hop: 1.0,
+            mesh_cross_extra: 1.0,
+        };
+        LatencyModel::new(NetParams::default(), links)
+    }
+
+    #[test]
+    fn clos_same_edge_is_19_cycles() {
+        let topo = Topology::Clos(FoldedClos::build(ClosSpec::with_tiles(1024)).unwrap());
+        let m = model();
+        // d=0: one way = 2*1 + 0 + 1*7 = 9; round trip = 19.
+        assert_eq!(m.access(&topo, 0, 5), 19.0);
+    }
+
+    #[test]
+    fn clos_same_chip_is_55_cycles() {
+        let topo = Topology::Clos(FoldedClos::build(ClosSpec::with_tiles(1024)).unwrap());
+        // d=2: one way = 2 + 0 + 3*7 + 2*2 = 27; rt = 55.
+        assert_eq!(model().access(&topo, 0, 17), 55.0);
+    }
+
+    #[test]
+    fn clos_inter_chip_is_119_cycles() {
+        let topo = Topology::Clos(FoldedClos::build(ClosSpec::with_tiles(1024)).unwrap());
+        // d=4: one way = 2 + 2 + 5*7 + (2*2+2*8) = 59; rt = 119.
+        assert_eq!(model().access(&topo, 0, 300), 119.0);
+    }
+
+    #[test]
+    fn mesh_hop_gradient() {
+        let topo = Topology::Mesh(Mesh2D::build(MeshSpec::with_tiles(1024)).unwrap());
+        let m = model();
+        let same_block = m.access(&topo, 0, 5);
+        let one_hop = m.access(&topo, 0, 16); // block (1,0)
+        let two_hops = m.access(&topo, 0, 2 * 16);
+        assert_eq!(same_block, 19.0);
+        // +1 switch (7) + 1 hop link (1) each way => +16
+        assert_eq!(one_hop, 35.0);
+        assert_eq!(two_hops, 51.0);
+    }
+
+    #[test]
+    fn mesh_crossing_pays_serialisation_and_extra() {
+        let topo = Topology::Mesh(Mesh2D::build(MeshSpec::with_tiles(1024)).unwrap());
+        let m = model();
+        let inside = m.access(&topo, 0, 3 * 16); // block (3,0): 3 hops
+        let across = m.access(&topo, 0, 4 * 16); // block (4,0): crosses chips
+        // +1 switch+link (8) + crossing extra (1) + ser 2, each way
+        assert_eq!(across - inside, 2.0 * (8.0 + 1.0 + 2.0));
+    }
+
+    #[test]
+    fn route_open_saves_topen_per_switch() {
+        let topo = Topology::Clos(FoldedClos::build(ClosSpec::with_tiles(1024)).unwrap());
+        let closed = model();
+        let mut opened = model();
+        opened.net.route_open = true;
+        let r = topo.route(0, 300);
+        let diff = closed.round_trip(&r) - opened.round_trip(&r);
+        assert_eq!(diff, 2.0 * 5.0 * r.switches() as f64);
+    }
+}

@@ -1,0 +1,13 @@
+//! Analytic network performance model (paper §6.3, Table 5).
+//!
+//! [`LatencyModel`] evaluates the paper's `t_closed`/`t_open` message
+//! latency over routes from [`crate::topology`], with per-link-class
+//! latencies ([`LinkLatencies`]) derived from the VLSI floorplans.
+//! [`KernelParams`] is the encoding of one design point for the
+//! AOT-compiled kernel (contract v1).
+
+mod latency;
+mod params;
+
+pub use latency::{LatencyModel, LinkLatencies};
+pub use params::{KernelParams, NetParams};

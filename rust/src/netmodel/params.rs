@@ -1,0 +1,149 @@
+//! Network performance-model parameters (paper §6.3, Table 5) and the
+//! parameter vectors shared with the AOT kernel.
+
+use crate::config::Doc;
+
+/// Table 5: switch-level latency parameters, in cycles (fitted to
+/// XMP-64 measurements by the paper).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetParams {
+    /// Switch traversal latency.
+    pub t_switch: f64,
+    /// Additional latency to open a route through a switch.
+    pub t_open: f64,
+    /// Switch contention factor (1.0 at zero load).
+    pub c_cont: f64,
+    /// Serialisation latency, intra-chip messages.
+    pub t_serial_intra: f64,
+    /// Serialisation latency, inter-chip messages (half-width links).
+    pub t_serial_inter: f64,
+    /// Tile memory (SRAM) access latency in cycles.
+    pub t_mem: f64,
+    /// If true, routes are held open between accesses (t_open elided).
+    pub route_open: bool,
+}
+
+impl Default for NetParams {
+    fn default() -> Self {
+        Self {
+            t_switch: 2.0,
+            t_open: 5.0,
+            c_cont: 1.0,
+            t_serial_intra: 0.0,
+            t_serial_inter: 2.0,
+            t_mem: 1.0, // 0.5 ns SRAM at 1 GHz, rounded up to a cycle
+            route_open: false,
+        }
+    }
+}
+
+impl NetParams {
+    /// Build from a config doc (keys under `net.`), defaulting to
+    /// Table 5.
+    pub fn from_doc(doc: &Doc) -> Self {
+        let d = Self::default();
+        Self {
+            t_switch: doc.float("net.t_switch", d.t_switch),
+            t_open: doc.float("net.t_open", d.t_open),
+            c_cont: doc.float("net.c_cont", d.c_cont),
+            t_serial_intra: doc.float("net.t_serial_intra", d.t_serial_intra),
+            t_serial_inter: doc.float("net.t_serial_inter", d.t_serial_inter),
+            t_mem: doc.float("net.t_mem", d.t_mem),
+            route_open: doc.bool("net.route_open", d.route_open),
+        }
+    }
+
+    /// Per-switch latency including route opening (the `t_open +
+    /// t_switch * c_cont` term of the §6.3 model).
+    pub fn per_switch(&self) -> f64 {
+        let open = if self.route_open { 0.0 } else { self.t_open };
+        open + self.t_switch * self.c_cont
+    }
+}
+
+/// Encoded parameters for one latency-kernel invocation (contract v1 —
+/// see `runtime::engine` for the slot layout, which is mirrored by
+/// `python/compile/kernels/latency.py`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct KernelParams {
+    /// Integer parameters (topology discriminator, shifts, counts).
+    pub iparams: [i32; 16],
+    /// Float parameters (per-stage latencies in cycles).
+    pub fparams: [f32; 16],
+}
+
+impl KernelParams {
+    /// iparams: topology discriminator (0 = Clos, 1 = mesh).
+    pub const IP_TOPO: usize = 0;
+    /// iparams: log2 words per tile.
+    pub const IP_LOG2_WPT: usize = 1;
+    /// iparams: memory tiles in the emulation.
+    pub const IP_K: usize = 2;
+    /// iparams: Clos log2 tiles per edge switch.
+    pub const IP_LOG2_G0: usize = 3;
+    /// iparams: Clos log2 tiles per chip.
+    pub const IP_LOG2_G1: usize = 4;
+    /// iparams: mesh log2 tiles per block.
+    pub const IP_LOG2_BLOCK: usize = 5;
+    /// iparams: mesh system blocks per row.
+    pub const IP_BLOCKS_X: usize = 6;
+    /// iparams: mesh blocks per row per chip.
+    pub const IP_CHIP_BLOCKS_X: usize = 7;
+    /// iparams: routes pre-opened flag.
+    pub const IP_ROUTE_OPEN: usize = 8;
+    /// iparams: client tile index.
+    pub const IP_CLIENT: usize = 9;
+    /// iparams: total system tiles.
+    pub const IP_TILES: usize = 10;
+
+    /// fparams: tile<->switch link latency.
+    pub const FP_T_TILE: usize = 0;
+    /// fparams: switch traversal.
+    pub const FP_T_SWITCH: usize = 1;
+    /// fparams: route-opening latency.
+    pub const FP_T_OPEN: usize = 2;
+    /// fparams: contention factor.
+    pub const FP_C_CONT: usize = 3;
+    /// fparams: intra-chip serialisation.
+    pub const FP_SER_INTRA: usize = 4;
+    /// fparams: inter-chip serialisation.
+    pub const FP_SER_INTER: usize = 5;
+    /// fparams: tile memory access.
+    pub const FP_T_MEM: usize = 6;
+    /// fparams: Clos edge<->core link.
+    pub const FP_LINK_EDGE_CORE: usize = 7;
+    /// fparams: Clos core<->system-core link.
+    pub const FP_LINK_CORE_SYS: usize = 8;
+    /// fparams: mesh per-hop link.
+    pub const FP_MESH_LINK: usize = 9;
+    /// fparams: mesh per-chip-crossing extra.
+    pub const FP_MESH_CROSS_EXTRA: usize = 10;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table5() {
+        let p = NetParams::default();
+        assert_eq!(p.t_switch, 2.0);
+        assert_eq!(p.t_open, 5.0);
+        assert_eq!(p.t_serial_inter, 2.0);
+        assert_eq!(p.per_switch(), 7.0);
+    }
+
+    #[test]
+    fn route_open_elides_topen() {
+        let p = NetParams { route_open: true, ..Default::default() };
+        assert_eq!(p.per_switch(), 2.0);
+    }
+
+    #[test]
+    fn config_override() {
+        let doc = Doc::parse("[net]\nt_switch = 3.0\nroute_open = true").unwrap();
+        let p = NetParams::from_doc(&doc);
+        assert_eq!(p.t_switch, 3.0);
+        assert!(p.route_open);
+    }
+}

@@ -1,0 +1,97 @@
+//! Artifact loading: HLO text file -> PJRT executable.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Default artifact directory: `$MEMCLOS_ARTIFACTS` or `artifacts/` under
+/// the crate root (falling back to the current directory at runtime).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("MEMCLOS_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    // When run via cargo (tests, benches, examples) the manifest dir is
+    // the repo root; otherwise fall back to ./artifacts.
+    if let Ok(dir) = std::env::var("CARGO_MANIFEST_DIR") {
+        return Path::new(&dir).join("artifacts");
+    }
+    PathBuf::from("artifacts")
+}
+
+/// One AOT-compiled computation: HLO text loaded from disk, compiled on a
+/// PJRT client, ready to execute.
+pub struct Artifact {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Load `<dir>/<name>.hlo.txt` and compile it on `client`.
+    pub fn load(client: &xla::PjRtClient, dir: &Path, name: &str) -> Result<Self> {
+        let path = dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("loading HLO text from {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact `{name}`"))?;
+        Ok(Self { name: name.to_string(), exe })
+    }
+
+    /// Artifact name (file stem).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with the given literals; returns the elements of the
+    /// result tuple (aot.py lowers with `return_tuple=True`; non-tuple
+    /// results come back as a single-element vector).
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let mut result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let elems = result.decompose_tuple()?;
+        if elems.is_empty() {
+            Ok(vec![result])
+        } else {
+            Ok(elems)
+        }
+    }
+}
+
+/// A set of artifacts sharing one PJRT client.
+pub struct ArtifactSet {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+}
+
+impl ArtifactSet {
+    /// Create a CPU PJRT client rooted at the default artifact directory.
+    pub fn new() -> Result<Self> {
+        Self::with_dir(artifacts_dir())
+    }
+
+    /// Create a CPU PJRT client rooted at `dir`.
+    pub fn with_dir(dir: PathBuf) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, dir })
+    }
+
+    /// Platform name of the underlying PJRT client (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Directory artifacts are loaded from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// True if `<dir>/<name>.hlo.txt` exists.
+    pub fn available(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    /// Load and compile artifact `name`.
+    pub fn load(&self, name: &str) -> Result<Artifact> {
+        Artifact::load(&self.client, &self.dir, name)
+    }
+}

@@ -1,0 +1,152 @@
+//! The XLA-accelerated latency hot path.
+//!
+//! [`LatencyEngine`] executes the AOT-compiled JAX/Pallas kernel
+//! (`artifacts/latency_batch_<N>.hlo.txt`) that evaluates the per-access
+//! emulated-memory round-trip latency over a batch of addresses.
+//!
+//! ## Cross-layer contract (v1)
+//!
+//! The parameter encoding is shared with
+//! `python/compile/kernels/latency.py` — any change must be made in both
+//! places and bumped in [`CONTRACT_VERSION`]. The artifact takes three
+//! inputs and returns a 2-tuple:
+//!
+//! ```text
+//! inputs:  addresses i32[N], iparams i32[16], fparams f32[16]
+//! outputs: (latency f32[N], mean f32[1])   -- cycles per access
+//! ```
+//!
+//! `iparams` layout (integer-valued):
+//!
+//! | idx | field | meaning |
+//! |-----|-------|---------|
+//! | 0 | `topo` | 0 = folded Clos, 1 = 2D mesh |
+//! | 1 | `log2_words_per_tile` | address-to-tile block distribution shift |
+//! | 2 | `k` | number of memory tiles in the emulation |
+//! | 3 | `log2_g0` | Clos: tiles per edge switch (log2) |
+//! | 4 | `log2_g1` | Clos: tiles per chip (log2) |
+//! | 5 | `log2_block` | mesh: tiles per block (log2) |
+//! | 6 | `blocks_x` | mesh: system blocks per row |
+//! | 7 | `chip_blocks_x` | mesh: blocks per row on one chip |
+//! | 8 | `route_open` | 1 = routes pre-opened (t_open elided) |
+//! | 9 | `client_tile` | tile index of the client processor |
+//! | 10 | `tiles` | total system tiles (memory tile `r` maps to index `(client+1+r) mod tiles`) |
+//! | 11..15 | reserved | must be 0 |
+//!
+//! `fparams` layout (cycles unless noted):
+//!
+//! | idx | field |
+//! |-----|-------|
+//! | 0 | `t_tile` (tile-to-switch link) |
+//! | 1 | `t_switch` |
+//! | 2 | `t_open` |
+//! | 3 | `c_cont` (contention factor, dimensionless) |
+//! | 4 | `t_serial_intra` |
+//! | 5 | `t_serial_inter` |
+//! | 6 | `t_mem` (tile SRAM access) |
+//! | 7 | `link_edge_core` (Clos on-chip stage-1<->2 link) |
+//! | 8 | `link_core_sys` (Clos inter-chip stage-2<->3 link) |
+//! | 9 | `mesh_link` (per hop) |
+//! | 10 | `mesh_cross_extra` (per chip crossing) |
+//! | 11..15 | reserved, 0 |
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::{Artifact, ArtifactSet};
+use crate::netmodel::KernelParams;
+
+/// Version of the artifact parameter contract described in the module docs.
+pub const CONTRACT_VERSION: u32 = 1;
+
+/// Number of slots in each parameter vector.
+pub const PARAM_SLOTS: usize = 16;
+
+/// Executes the AOT latency kernel for one fixed batch size.
+pub struct LatencyEngine {
+    artifact: Artifact,
+    batch: usize,
+}
+
+impl LatencyEngine {
+    /// Load `latency_batch_<batch>` from `set`.
+    pub fn load(set: &ArtifactSet, batch: usize) -> Result<Self> {
+        let name = format!("latency_batch_{batch}");
+        let artifact = set
+            .load(&name)
+            .with_context(|| format!("loading latency engine artifact `{name}`"))?;
+        Ok(Self { artifact, batch })
+    }
+
+    /// The fixed batch size the artifact was lowered for.
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Evaluate per-access latency for exactly `batch_size` addresses.
+    ///
+    /// Returns (per-access latency in cycles, mean over the whole batch).
+    pub fn run(&self, addresses: &[i32], params: &KernelParams) -> Result<(Vec<f32>, f32)> {
+        if addresses.len() != self.batch {
+            bail!(
+                "latency engine lowered for batch {}, got {} addresses",
+                self.batch,
+                addresses.len()
+            );
+        }
+        let addr = xla::Literal::vec1(addresses);
+        let ip = xla::Literal::vec1(&params.iparams[..]);
+        let fp = xla::Literal::vec1(&params.fparams[..]);
+        let outs = self.artifact.execute(&[addr, ip, fp])?;
+        if outs.len() != 2 {
+            bail!("latency artifact returned {} outputs, expected 2", outs.len());
+        }
+        let lat = outs[0].to_vec::<f32>()?;
+        let mean = outs[1].to_vec::<f32>()?;
+        Ok((lat, mean[0]))
+    }
+
+    /// Evaluate exactly `batch_size` addresses and return only the
+    /// batch mean — skips materialising the 4·batch-byte latency vector
+    /// on the host (the Monte-Carlo sweep hot path; see EXPERIMENTS.md
+    /// §Perf).
+    pub fn run_mean(&self, addresses: &[i32], params: &KernelParams) -> Result<f32> {
+        if addresses.len() != self.batch {
+            bail!(
+                "latency engine lowered for batch {}, got {} addresses",
+                self.batch,
+                addresses.len()
+            );
+        }
+        let addr = xla::Literal::vec1(addresses);
+        let ip = xla::Literal::vec1(&params.iparams[..]);
+        let fp = xla::Literal::vec1(&params.fparams[..]);
+        let outs = self.artifact.execute(&[addr, ip, fp])?;
+        if outs.len() != 2 {
+            bail!("latency artifact returned {} outputs, expected 2", outs.len());
+        }
+        Ok(outs[1].to_vec::<f32>()?[0])
+    }
+
+    /// Evaluate a slice of any length by padding the final partial batch;
+    /// the mean is recomputed over the true `addresses.len()` prefix.
+    pub fn run_any(&self, addresses: &[i32], params: &KernelParams) -> Result<(Vec<f32>, f64)> {
+        let mut out = Vec::with_capacity(addresses.len());
+        let mut buf = vec![0i32; self.batch];
+        for chunk in addresses.chunks(self.batch) {
+            if chunk.len() == self.batch {
+                let (lat, _) = self.run(chunk, params)?;
+                out.extend_from_slice(&lat);
+            } else {
+                buf[..chunk.len()].copy_from_slice(chunk);
+                // Pad with the first address; padding lanes are discarded.
+                for slot in buf[chunk.len()..].iter_mut() {
+                    *slot = chunk.first().copied().unwrap_or(0);
+                }
+                let (lat, _) = self.run(&buf, params)?;
+                out.extend_from_slice(&lat[..chunk.len()]);
+            }
+        }
+        let mean = out.iter().map(|&x| x as f64).sum::<f64>() / out.len().max(1) as f64;
+        Ok((out, mean))
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! The Python side (`python/compile/aot.py`) lowers the JAX/Pallas model
+//! to **HLO text** under `artifacts/`. This module wraps the `xla` crate
+//! (PJRT C API): an [`ArtifactSet`] owns one CPU client, an
+//! [`Artifact`] owns one compiled executable, loaded once and reused for
+//! the whole sweep. Python never runs at request time.
+//!
+//! Interchange is HLO *text*, not a serialized `HloModuleProto`: jax ≥ 0.5
+//! emits protos with 64-bit instruction ids which xla_extension 0.5.1
+//! rejects; the text parser reassigns ids and round-trips cleanly.
+
+mod artifact;
+mod engine;
+
+pub use artifact::{artifacts_dir, Artifact, ArtifactSet};
+pub use engine::{LatencyEngine, CONTRACT_VERSION, PARAM_SLOTS};

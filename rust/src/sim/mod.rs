@@ -1,0 +1,19 @@
+//! Message-level discrete-event simulation of the interconnect.
+//!
+//! The paper's results come from the analytic §6.3 model; this DES is
+//! the double-entry bookkeeping: it simulates individual messages
+//! hop-by-hop over the explicit switch graph, with per-output-port
+//! occupancy, and is proven to agree with the analytic model exactly at
+//! zero load (the operating point of a sequential program, §2). Under
+//! contention it measures what the analytic model abstracts as
+//! `c_cont`.
+//!
+//! * [`event`] — the event queue.
+//! * [`network`] — the network simulator and the emulated-memory access
+//!   round trip.
+
+pub mod event;
+pub mod network;
+
+pub use event::EventQueue;
+pub use network::NetworkSim;

@@ -1,0 +1,234 @@
+//! Hop-by-hop network simulation over the explicit switch graph.
+//!
+//! Message timing decomposes exactly as the analytic model does —
+//! tile injection, per-switch route-opening + traversal, per-link wire
+//! latency, ejection, and one serialisation term — but is accumulated
+//! by walking the actual shortest path and reserving switch output
+//! ports. At zero load the result is *identical* to
+//! [`LatencyModel::round_trip`] (proved by the `des_matches_analytic`
+//! tests); under load, port contention queues messages and the measured
+//! inflation is what §6.3 abstracts as `c_cont`.
+
+use std::collections::HashMap;
+
+use crate::emulation::EmulationSetup;
+use crate::netmodel::LatencyModel;
+use crate::sim::event::EventQueue;
+use crate::topology::{LinkClass, NodeId, Topology};
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+/// Words in a read/write request message (tag + address [+ value]).
+pub const REQUEST_WORDS: u64 = 3;
+
+/// Words in a response message (value or ack).
+pub const RESPONSE_WORDS: u64 = 1;
+
+/// The network simulator.
+pub struct NetworkSim<'a> {
+    topo: &'a Topology,
+    model: &'a LatencyModel,
+    /// Busy-until time per directed switch port.
+    port_busy: HashMap<(NodeId, NodeId), u64>,
+    /// Memoized switch paths.
+    paths: HashMap<(NodeId, NodeId), Vec<NodeId>>,
+}
+
+impl<'a> NetworkSim<'a> {
+    /// New simulator over a topology and its latency model.
+    pub fn new(topo: &'a Topology, model: &'a LatencyModel) -> Self {
+        Self { topo, model, port_busy: HashMap::new(), paths: HashMap::new() }
+    }
+
+    fn path(&mut self, a: NodeId, b: NodeId) -> &[NodeId] {
+        self.paths.entry((a, b)).or_insert_with(|| {
+            self.topo.graph().bfs_path(a, b).expect("network is connected")
+        })
+    }
+
+    fn link_cycles(&self, class: LinkClass) -> u64 {
+        let l = &self.model.links;
+        let c = match class {
+            LinkClass::Tile => l.tile,
+            LinkClass::EdgeCore => l.edge_core,
+            LinkClass::CoreSys => l.core_sys,
+            LinkClass::MeshHop => l.mesh_hop,
+            LinkClass::MeshChipCross => l.mesh_hop + l.mesh_cross_extra,
+        };
+        c.round() as u64
+    }
+
+    /// Simulate one message from `src_tile` to `dst_tile`, departing at
+    /// `now`; returns its arrival time. Switch output ports are held
+    /// for the message's serialised length, so concurrent messages
+    /// contend.
+    pub fn one_way(&mut self, src_tile: usize, dst_tile: usize, now: u64, words: u64) -> u64 {
+        let model = self.model;
+        let net = &model.net;
+        let s = self.topo.tile_switch(src_tile);
+        let d = self.topo.tile_switch(dst_tile);
+        let path = self.path(s, d).to_vec();
+
+        let mut t = now + model.links.tile.round() as u64; // tile -> switch
+        let mut inter_chip = false;
+        let per_switch = net.per_switch().round() as u64;
+
+        for (i, &sw) in path.iter().enumerate() {
+            // Traverse the switch.
+            t += per_switch;
+            if i + 1 < path.len() {
+                let next = path[i + 1];
+                // Wait for the output port, then hold it for the
+                // message's serialised length.
+                let busy = self.port_busy.entry((sw, next)).or_insert(0);
+                if *busy > t {
+                    t = *busy;
+                }
+                let class = self.topo.graph().link_class(sw, next).expect("adjacent");
+                if matches!(class, LinkClass::CoreSys | LinkClass::MeshChipCross) {
+                    inter_chip = true;
+                }
+                let occupancy = words.max(1);
+                *busy = t + occupancy;
+                t += self.link_cycles(class);
+            }
+        }
+        t += model.links.tile.round() as u64; // switch -> tile
+        let ser =
+            if inter_chip { net.t_serial_inter } else { net.t_serial_intra }.round() as u64;
+        t + ser
+    }
+
+    /// Simulate one emulated-memory access round trip (request to the
+    /// tile, SRAM access, response back); returns the completion time.
+    pub fn access(&mut self, client: usize, tile: usize, now: u64) -> u64 {
+        let req = self.one_way(client, tile, now, REQUEST_WORDS);
+        let served = req + self.model.net.t_mem.round() as u64;
+        self.one_way(tile, client, served, RESPONSE_WORDS)
+    }
+
+    /// Reset port occupancy (fresh zero-load state).
+    pub fn reset(&mut self) {
+        self.port_busy.clear();
+    }
+}
+
+/// Result of a multi-client contention run.
+#[derive(Clone, Debug)]
+pub struct ContentionResult {
+    /// Per-access latency statistics (cycles).
+    pub latency: Summary,
+    /// Number of clients.
+    pub clients: usize,
+    /// Fitted contention factor: mean latency over zero-load latency.
+    pub inflation: f64,
+}
+
+/// Run `clients` synthetic clients, each performing `accesses`
+/// back-to-back random accesses over an emulation's address space, and
+/// measure contention (the `c_cont` abstraction of §6.3).
+pub fn run_contention(
+    setup: &EmulationSetup,
+    clients: usize,
+    accesses: usize,
+    seed: u64,
+) -> ContentionResult {
+    let mut sim = NetworkSim::new(&setup.topo, &setup.model);
+    let mut rng = Rng::new(seed);
+    let space = setup.map.space_words();
+    let tiles = setup.map.tiles;
+
+    // Zero-load reference: the client's own expected latency.
+    let zero_load = setup.expected_latency();
+
+    // Each client is a distinct tile issuing dependent accesses.
+    #[derive(Debug)]
+    struct NextAccess {
+        client_tile: usize,
+        remaining: usize,
+    }
+    let mut q = EventQueue::new();
+    for c in 0..clients {
+        // Spread clients over tiles (skip the primary client's tile).
+        let tile = (setup.map.client + c * (tiles / clients.max(1)).max(1)) % tiles;
+        q.push(0, NextAccess { client_tile: tile, remaining: accesses });
+    }
+
+    let mut latency = Summary::new();
+    while let Some((now, ev)) = q.pop() {
+        let addr = rng.below(space);
+        let target = setup.map.tile_of(addr);
+        if target == ev.client_tile {
+            // Local to this client: unit cost, reissue immediately.
+            if ev.remaining > 1 {
+                q.push(now + 1, NextAccess { remaining: ev.remaining - 1, ..ev });
+            }
+            continue;
+        }
+        let done = sim.access(ev.client_tile, target, now);
+        latency.add((done - now) as f64);
+        if ev.remaining > 1 {
+            q.push(done, NextAccess { remaining: ev.remaining - 1, ..ev });
+        }
+    }
+
+    let inflation = latency.mean() / zero_load;
+    ContentionResult { latency, clients, inflation }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::emulation::TopologyKind;
+
+    fn setup(kind: TopologyKind, tiles: usize, k: usize) -> EmulationSetup {
+        EmulationSetup::default_tech(kind, tiles, 128, k).unwrap()
+    }
+
+    #[test]
+    fn des_matches_analytic_clos() {
+        let e = setup(TopologyKind::Clos, 1024, 1023);
+        let mut sim = NetworkSim::new(&e.topo, &e.model);
+        for tile in [1usize, 5, 17, 100, 300, 777, 1023] {
+            sim.reset();
+            let des = sim.access(e.map.client, tile, 0);
+            let analytic = e.model.access(&e.topo, e.map.client, tile);
+            assert_eq!(des as f64, analytic, "tile {tile}: des={des} analytic={analytic}");
+        }
+    }
+
+    #[test]
+    fn des_matches_analytic_mesh() {
+        let e = setup(TopologyKind::Mesh, 1024, 1023);
+        let mut sim = NetworkSim::new(&e.topo, &e.model);
+        for tile in [1usize, 20, 100, 500, 1000] {
+            if tile == e.map.client {
+                continue;
+            }
+            sim.reset();
+            let des = sim.access(e.map.client, tile, 0);
+            let analytic = e.model.access(&e.topo, e.map.client, tile);
+            assert_eq!(des as f64, analytic, "tile {tile}");
+        }
+    }
+
+    #[test]
+    fn sequential_accesses_do_not_contend() {
+        // A single client's dependent accesses never queue (§2: a
+        // sequential program induces no concurrent traffic).
+        let e = setup(TopologyKind::Clos, 256, 255);
+        let r = run_contention(&e, 1, 500, 3);
+        assert!((r.inflation - 1.0).abs() < 0.05, "inflation={}", r.inflation);
+    }
+
+    #[test]
+    fn many_clients_contend() {
+        let e = setup(TopologyKind::Clos, 256, 255);
+        let solo = run_contention(&e, 1, 300, 4);
+        let crowd = run_contention(&e, 16, 300, 4);
+        assert!(
+            crowd.latency.mean() >= solo.latency.mean(),
+            "contention should not speed things up"
+        );
+    }
+}

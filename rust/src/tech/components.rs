@@ -1,0 +1,78 @@
+//! Processor and switch component areas with process scaling
+//! (paper §5.0.2).
+
+/// Scale a component area from process `g` (nm) to process `h` (nm),
+/// `A_h = A_g / (g/h)^2` with `g >= h` (shrinks quadratically).
+pub fn scale_area(area_mm2: f64, from_nm: f64, to_nm: f64) -> f64 {
+    assert!(from_nm >= to_nm, "scaling only shrinks ({from_nm} -> {to_nm})");
+    let ratio = from_nm / to_nm;
+    area_mm2 / (ratio * ratio)
+}
+
+/// XMOS XCore processor area on a 90 nm process (conservative, mm^2).
+pub const XCORE_AREA_90NM_MM2: f64 = 1.0;
+
+/// INMOS C104 32x32 switch area on a 1 um process (mm^2).
+pub const C104_AREA_1UM_MM2: f64 = 40.0;
+
+/// ARM Cortex-M0 area on a 40 nm process (mm^2) — consistency check.
+pub const CORTEX_M0_AREA_40NM_MM2: f64 = 0.01;
+
+/// SWIFT 32x32 switch area on a 65 nm process (mm^2) — consistency check.
+pub const SWIFT_AREA_65NM_MM2: f64 = 0.35;
+
+/// XCore area scaled to a target process.
+pub fn xcore_area_mm2(process_nm: f64) -> f64 {
+    scale_area(XCORE_AREA_90NM_MM2, 90.0, process_nm)
+}
+
+/// C104 switch area scaled to a target process.
+pub fn c104_area_mm2(process_nm: f64) -> f64 {
+    scale_area(C104_AREA_1UM_MM2, 1000.0, process_nm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xcore_at_28nm_matches_paper() {
+        // Paper: ~0.10 mm^2 at 28 nm.
+        let a = xcore_area_mm2(28.0);
+        assert!((a - 0.0968).abs() < 1e-3, "a={a}");
+    }
+
+    #[test]
+    fn c104_at_28nm_matches_paper() {
+        // Paper: ~0.03 mm^2 at 28 nm.
+        let a = c104_area_mm2(28.0);
+        assert!((a - 0.03136).abs() < 1e-4, "a={a}");
+    }
+
+    #[test]
+    fn swift_cross_check() {
+        // Paper: SWIFT 0.35 mm^2 at 65 nm -> ~0.06 mm^2 at 28 nm.
+        let a = scale_area(SWIFT_AREA_65NM_MM2, 65.0, 28.0);
+        assert!((a - 0.065).abs() < 0.005, "a={a}");
+    }
+
+    #[test]
+    fn cortex_m0_cross_check() {
+        // Paper: M0 0.01 mm^2 at 40 nm -> ~0.003 mm^2 (actually 0.0049
+        // by pure quadratic scaling; the paper quotes 0.003 with design
+        // shrink) — assert the order of magnitude.
+        let a = scale_area(CORTEX_M0_AREA_40NM_MM2, 40.0, 28.0);
+        assert!(a > 0.002 && a < 0.006, "a={a}");
+    }
+
+    #[test]
+    fn identity_scaling() {
+        assert_eq!(scale_area(1.5, 28.0, 28.0), 1.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "scaling only shrinks")]
+    fn rejects_upscaling() {
+        scale_area(1.0, 28.0, 90.0);
+    }
+}

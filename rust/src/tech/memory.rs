@@ -1,0 +1,153 @@
+//! Memory technology comparison (paper §5.0.3, Table 4; ITRS SYSD3b).
+//!
+//! Only SRAM is used for tile memories in the implementation model (the
+//! paper rejects eDRAM on manufacturing-cost grounds); commodity DRAM
+//! parameterises the sequential baseline.
+
+/// A memory technology with its Table 4 characteristics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MemTech {
+    /// 6T static RAM, integrated directly with logic (28 nm).
+    Sram,
+    /// Embedded DRAM, 1T1C with extra process steps (28 nm).
+    Edram,
+    /// Commodity DDR DRAM on its own specialised process (40 nm).
+    CommodityDram,
+}
+
+impl MemTech {
+    /// Cell area factor in multiples of F^2 (square half-pitch units).
+    pub fn cell_area_factor(self) -> f64 {
+        match self {
+            MemTech::Sram => 140.0,
+            MemTech::Edram => 50.0,
+            MemTech::CommodityDram => 6.0,
+        }
+    }
+
+    /// Proportion of array area occupied by storage cells.
+    pub fn area_efficiency(self) -> f64 {
+        match self {
+            MemTech::Sram => 0.70,
+            MemTech::Edram => 0.60,
+            MemTech::CommodityDram => 0.60,
+        }
+    }
+
+    /// Process geometry the Table 4 figures are quoted at (nm).
+    pub fn process_nm(self) -> f64 {
+        match self {
+            MemTech::Sram | MemTech::Edram => 28.0,
+            MemTech::CommodityDram => 40.0,
+        }
+    }
+
+    /// Density in KB/mm^2 at the quoted process (Table 4).
+    pub fn density_kb_per_mm2(self) -> f64 {
+        match self {
+            MemTech::Sram => 778.51,
+            MemTech::Edram => 1_868.42,
+            MemTech::CommodityDram => 7_629.39,
+        }
+    }
+
+    /// Random cycle time in ns (Table 4; DRAM t_RC from the Micron 1 Gb
+    /// DDR3 datasheet).
+    pub fn cycle_ns(self) -> f64 {
+        match self {
+            MemTech::Sram => 0.5,
+            MemTech::Edram => 1.3,
+            MemTech::CommodityDram => 30.0,
+        }
+    }
+
+    /// Area in mm^2 for a memory of `kb` kilobytes at the quoted process.
+    pub fn area_for_kb(self, kb: f64) -> f64 {
+        kb / self.density_kb_per_mm2()
+    }
+
+    /// Density derived from first principles (cell area factor, area
+    /// efficiency, process geometry) — used as a cross-check of the
+    /// quoted Table 4 densities.
+    pub fn derived_density_kb_per_mm2(self) -> f64 {
+        let f_mm = self.process_nm() * 1e-6; // nm -> mm
+        let cell_mm2 = self.cell_area_factor() * f_mm * f_mm;
+        let bits_per_mm2 = self.area_efficiency() / cell_mm2;
+        bits_per_mm2 / 8.0 / 1024.0
+    }
+
+    /// Human-readable name.
+    pub fn name(self) -> &'static str {
+        match self {
+            MemTech::Sram => "SRAM",
+            MemTech::Edram => "eDRAM",
+            MemTech::CommodityDram => "Comm. DRAM",
+        }
+    }
+
+    /// Typical capacity band from Table 4 (MB, inclusive bounds;
+    /// `None` = unbounded).
+    pub fn typical_capacity_mb(self) -> (Option<f64>, Option<f64>) {
+        match self {
+            MemTech::Sram => (None, Some(8.0)),
+            MemTech::Edram => (Some(1.0), Some(64.0)),
+            MemTech::CommodityDram => (Some(64.0), None),
+        }
+    }
+
+    /// All technologies in Table 4 order.
+    pub fn all() -> [MemTech; 3] {
+        [MemTech::Sram, MemTech::Edram, MemTech::CommodityDram]
+    }
+}
+
+/// The tile memory capacities studied in the paper (§5.0.3): similar
+/// area to the 0.08–0.10 mm^2 processor.
+pub const TILE_CAPACITIES_KB: &[u32] = &[64, 128, 256, 512];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_densities() {
+        assert!((MemTech::Sram.density_kb_per_mm2() - 778.51).abs() < 1e-9);
+        assert!((MemTech::Edram.density_kb_per_mm2() - 1868.42).abs() < 1e-9);
+        assert!((MemTech::CommodityDram.density_kb_per_mm2() - 7629.39).abs() < 1e-9);
+    }
+
+    #[test]
+    fn derived_density_matches_quoted_within_noise() {
+        // The ITRS density figures follow from area factor * efficiency;
+        // allow 15% for rounding in the published table.
+        for t in MemTech::all() {
+            let q = t.density_kb_per_mm2();
+            let d = t.derived_density_kb_per_mm2();
+            assert!((d - q).abs() / q < 0.15, "{}: derived {d} vs quoted {q}", t.name());
+        }
+    }
+
+    #[test]
+    fn edram_between_sram_and_dram() {
+        // Paper: eDRAM is 2-3x denser than SRAM, 4-5x less than DRAM.
+        let r1 = MemTech::Edram.density_kb_per_mm2() / MemTech::Sram.density_kb_per_mm2();
+        let r2 = MemTech::CommodityDram.density_kb_per_mm2() / MemTech::Edram.density_kb_per_mm2();
+        assert!((2.0..=3.0).contains(&r1), "eDRAM/SRAM = {r1}");
+        assert!((4.0..=5.0).contains(&r2), "DRAM/eDRAM = {r2}");
+    }
+
+    #[test]
+    fn tile_memory_area_comparable_to_processor() {
+        // §5.0.3: the selected capacities have similar area to the
+        // 0.10 mm^2 processor; 64 KB SRAM is 0.082 mm^2.
+        let a = MemTech::Sram.area_for_kb(64.0);
+        assert!((a - 0.0822).abs() < 1e-3, "area={a}");
+        assert!(MemTech::Sram.area_for_kb(512.0) < 0.7);
+    }
+
+    #[test]
+    fn sram_fastest() {
+        assert!(MemTech::Sram.cycle_ns() < MemTech::Edram.cycle_ns());
+        assert!(MemTech::Edram.cycle_ns() < MemTech::CommodityDram.cycle_ns());
+    }
+}

@@ -1,0 +1,19 @@
+//! Implementation-technology database (paper §5, Tables 1–4).
+//!
+//! * [`itrs`] — ITRS global-wire data (Table 3), the FO4 heuristic and
+//!   the optimally-repeated wire-delay estimate.
+//! * [`chip`] — the 28 nm processing-chip parameters (Table 1) and the
+//!   65 nm silicon-interposer parameters (Table 2).
+//! * [`memory`] — memory technology comparison (Table 4) and tile-memory
+//!   sizing.
+//! * [`components`] — processor/switch component areas and the
+//!   `A_h = A_g/(g/h)^2` process-scaling rule (§5.0.2).
+
+pub mod chip;
+pub mod components;
+pub mod itrs;
+pub mod memory;
+
+pub use chip::{ChipTech, InterposerTech};
+pub use components::scale_area;
+pub use memory::MemTech;

@@ -1,0 +1,357 @@
+//! Folded Clos network construction (paper §2, Fig 1; §4.2).
+//!
+//! Built from degree-32 switches:
+//!
+//! * **edge switches** (stage 1) connect 16 tiles and have 16 uplinks;
+//! * **chip-core switches** (stage 2): on a single-chip system they use
+//!   all 32 links downward (8 cores per 256 tiles, Fig 1b); in a
+//!   multi-chip system half the links go up to the system core, so a
+//!   chip carries 16 cores (Fig 1c "twice the number of core switches");
+//! * **system-core switches** (stage 3) use all 32 links downward; each
+//!   chip contributes a bank of `tiles_per_chip / degree` of them
+//!   (8 per 256-tile chip), for `tiles / degree` in total.
+//!
+//! Tile-to-tile switch-path length (`d(s,t)` of the §6.3 model) is 0
+//! within an edge switch, 2 within a chip, and 4 between chips — an
+//! arithmetic function of the tile indices that `distance` exposes and a
+//! property test proves equal to BFS on the explicit graph.
+
+use anyhow::{bail, Result};
+
+use super::graph::{Graph, LinkClass, NodeId};
+
+/// Parameters of a folded Clos system.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ClosSpec {
+    /// Total tiles in the system (power of two).
+    pub tiles: usize,
+    /// Tiles per edge switch (16 for degree-32 switches).
+    pub tiles_per_edge: usize,
+    /// Tiles per chip (256 fits the economical die, Fig 1b).
+    pub tiles_per_chip: usize,
+    /// Switch degree (32, after the INMOS C104).
+    pub degree: usize,
+}
+
+impl Default for ClosSpec {
+    fn default() -> Self {
+        Self { tiles: 256, tiles_per_edge: 16, tiles_per_chip: 256, degree: 32 }
+    }
+}
+
+impl ClosSpec {
+    /// Spec with a given tile count and paper defaults otherwise.
+    pub fn with_tiles(tiles: usize) -> Self {
+        Self { tiles, ..Self::default() }
+    }
+
+    /// Number of chips (1 for `tiles <= tiles_per_chip`).
+    pub fn chips(&self) -> usize {
+        self.tiles.div_ceil(self.tiles_per_chip)
+    }
+
+    /// Number of switch stages (1, 2 or 3).
+    pub fn stages(&self) -> usize {
+        if self.tiles <= self.tiles_per_edge {
+            1
+        } else if self.chips() == 1 {
+            2
+        } else {
+            3
+        }
+    }
+
+    /// Validate structural constraints.
+    pub fn validate(&self) -> Result<()> {
+        if !self.tiles.is_power_of_two() {
+            bail!("tiles {} must be a power of two", self.tiles);
+        }
+        if self.tiles_per_edge * 2 != self.degree {
+            bail!("edge switches use half their links for tiles (degree {})", self.degree);
+        }
+        if self.tiles_per_chip % self.tiles_per_edge != 0 {
+            bail!("tiles_per_chip must be a multiple of tiles_per_edge");
+        }
+        if self.tiles > self.tiles_per_chip && self.tiles % self.tiles_per_chip != 0 {
+            bail!("multi-chip systems must use whole chips");
+        }
+        if self.chips() > self.degree {
+            bail!("at most {} chips (system-core switch degree)", self.degree);
+        }
+        Ok(())
+    }
+}
+
+/// A constructed folded Clos network.
+#[derive(Clone, Debug)]
+pub struct FoldedClos {
+    spec: ClosSpec,
+    graph: Graph,
+    /// Edge-switch node of each tile.
+    edge_of_tile: Vec<NodeId>,
+    num_edge: usize,
+    num_chip_core: usize,
+    num_sys_core: usize,
+}
+
+impl FoldedClos {
+    /// Build the explicit switch graph for `spec`.
+    pub fn build(spec: ClosSpec) -> Result<Self> {
+        spec.validate()?;
+        let mut graph = Graph::new();
+        let chips = spec.chips();
+        let tiles_per_chip = spec.tiles.min(spec.tiles_per_chip);
+        let edges_per_chip = tiles_per_chip / spec.tiles_per_edge;
+
+        // Stage-2 core switches per chip: none if the chip is a single
+        // switch; `tiles/degree` using all links down on a single-chip
+        // system; twice that (half links up) on multi-chip systems.
+        let cores_per_chip = if spec.stages() < 2 {
+            0
+        } else if chips == 1 {
+            tiles_per_chip / spec.degree
+        } else {
+            2 * (tiles_per_chip / spec.degree)
+        };
+        // Stage-3 system cores: all `degree` links down.
+        let sys_cores = if chips > 1 { spec.tiles / spec.degree } else { 0 };
+
+        // Node layout: per chip [edges..][cores..], then all sys cores.
+        let mut edge_nodes = Vec::with_capacity(chips * edges_per_chip);
+        let mut core_nodes = Vec::with_capacity(chips * cores_per_chip);
+        for _chip in 0..chips {
+            for _ in 0..edges_per_chip {
+                edge_nodes.push(graph.add_node());
+            }
+            for _ in 0..cores_per_chip {
+                core_nodes.push(graph.add_node());
+            }
+        }
+        let mut sys_nodes = Vec::with_capacity(sys_cores);
+        for _ in 0..sys_cores {
+            sys_nodes.push(graph.add_node());
+        }
+
+        // Tiles onto edge switches, in index order.
+        let mut edge_of_tile = Vec::with_capacity(spec.tiles);
+        for t in 0..spec.tiles {
+            let e = t / spec.tiles_per_edge;
+            let tile = graph.attach_tile(edge_nodes[e]);
+            debug_assert_eq!(tile, t);
+            edge_of_tile.push(edge_nodes[e]);
+        }
+
+        // Edge <-> chip-core: every edge switch connects to every core
+        // switch of its chip (uplink multiplicity is irrelevant for
+        // distance; bandwidth is modelled analytically).
+        for chip in 0..chips {
+            for e in 0..edges_per_chip {
+                let en = edge_nodes[chip * edges_per_chip + e];
+                for c in 0..cores_per_chip {
+                    let cn = core_nodes[chip * cores_per_chip + c];
+                    graph.add_link(en, cn, LinkClass::EdgeCore);
+                }
+            }
+        }
+
+        // Chip-core <-> system-core: each system core spends
+        // `degree / chips` downlinks per chip, spread over that chip's
+        // cores so every system core reaches every chip (d = 4 between
+        // any two chips).
+        if chips > 1 {
+            let links_per_chip = spec.degree / chips;
+            for (s, &sn) in sys_nodes.iter().enumerate() {
+                for chip in 0..chips {
+                    for i in 0..links_per_chip {
+                        let c = (s * links_per_chip + i) % cores_per_chip;
+                        let cn = core_nodes[chip * cores_per_chip + c];
+                        graph.add_link(sn, cn, LinkClass::CoreSys);
+                    }
+                }
+            }
+        }
+
+        Ok(Self {
+            spec,
+            graph,
+            edge_of_tile,
+            num_edge: edge_nodes.len(),
+            num_chip_core: core_nodes.len(),
+            num_sys_core: sys_nodes.len(),
+        })
+    }
+
+    /// The spec this network was built from.
+    pub fn spec(&self) -> &ClosSpec {
+        &self.spec
+    }
+
+    /// The explicit switch graph.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// Edge switch of a tile.
+    pub fn edge_switch(&self, tile: usize) -> NodeId {
+        self.edge_of_tile[tile]
+    }
+
+    /// Edge / chip-core / system-core switch counts.
+    pub fn switch_counts(&self) -> (usize, usize, usize) {
+        (self.num_edge, self.num_chip_core, self.num_sys_core)
+    }
+
+    /// Chip index of a tile.
+    pub fn chip_of(&self, tile: usize) -> usize {
+        tile / self.spec.tiles_per_chip.min(self.spec.tiles)
+    }
+
+    /// Arithmetic switch-path length between two tiles' edge switches:
+    /// 0 (same edge switch), 2 (same chip), 4 (different chips).
+    ///
+    /// This is the function the AOT kernel evaluates; the
+    /// `clos_distance_matches_bfs` property test proves it equals BFS
+    /// distance on the explicit graph.
+    pub fn distance(&self, a: usize, b: usize) -> u32 {
+        if a / self.spec.tiles_per_edge == b / self.spec.tiles_per_edge {
+            0
+        } else if self.chip_of(a) == self.chip_of(b) {
+            2
+        } else {
+            4
+        }
+    }
+
+    /// Per-stage link counts crossed by a shortest route between two
+    /// tiles: (edge-core links, core-sys links).
+    pub fn link_counts(&self, a: usize, b: usize) -> (u32, u32) {
+        match self.distance(a, b) {
+            0 => (0, 0),
+            2 => (2, 0),
+            _ => (2, 2),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fig1a_64_tiles() {
+        // 64-tile network: 4 edge switches, 2 core switches (Fig 1a).
+        let c = FoldedClos::build(ClosSpec::with_tiles(64)).unwrap();
+        assert_eq!(c.switch_counts(), (4, 2, 0));
+        assert_eq!(c.spec().stages(), 2);
+        assert_eq!(c.graph().num_tiles(), 64);
+    }
+
+    #[test]
+    fn fig1b_256_tiles() {
+        // 256-tile network: 16 edge switches, 8 core switches (Fig 1b).
+        let c = FoldedClos::build(ClosSpec::with_tiles(256)).unwrap();
+        assert_eq!(c.switch_counts(), (16, 8, 0));
+        assert_eq!(c.spec().chips(), 1);
+        // Core switches use all 32 links down: degree 16+16... each of
+        // the 16 edges links once to each of 8 cores -> core degree 16.
+        // (Multiplicity-2 links are collapsed; bandwidth is analytic.)
+        assert_eq!(c.spec().stages(), 2);
+    }
+
+    #[test]
+    fn fig1c_1024_tiles() {
+        // 1,024-tile network: 4 chips, twice the core switches per chip
+        // (16), connected by 32 system cores; three stages (Fig 1c).
+        let c = FoldedClos::build(ClosSpec::with_tiles(1024)).unwrap();
+        let (e, cc, sc) = c.switch_counts();
+        assert_eq!(e, 64);
+        assert_eq!(cc, 4 * 16);
+        assert_eq!(sc, 32);
+        assert_eq!(c.spec().stages(), 3);
+        assert_eq!(c.spec().chips(), 4);
+    }
+
+    #[test]
+    fn four_k_tiles() {
+        let c = FoldedClos::build(ClosSpec::with_tiles(4096)).unwrap();
+        let (e, cc, sc) = c.switch_counts();
+        assert_eq!((e, cc, sc), (256, 256, 128));
+        assert_eq!(c.spec().chips(), 16);
+    }
+
+    #[test]
+    fn distances_by_construction() {
+        let c = FoldedClos::build(ClosSpec::with_tiles(1024)).unwrap();
+        assert_eq!(c.distance(0, 5), 0); // same edge switch
+        assert_eq!(c.distance(0, 17), 2); // same chip, different edge
+        assert_eq!(c.distance(0, 300), 4); // different chip
+        assert_eq!(c.distance(300, 0), 4); // symmetric
+    }
+
+    #[test]
+    fn logarithmic_diameter() {
+        // Fig 1: diameter 2 for <=256 tiles, 3 for 1,024 (in *stages*;
+        // in switch-graph links: 2 and 4).
+        let small = FoldedClos::build(ClosSpec::with_tiles(256)).unwrap();
+        assert_eq!(small.graph().diameter(), 2);
+        let large = FoldedClos::build(ClosSpec::with_tiles(1024)).unwrap();
+        assert_eq!(large.graph().diameter(), 4);
+    }
+
+    #[test]
+    fn clos_distance_matches_bfs() {
+        for tiles in [16usize, 64, 256, 1024, 2048] {
+            let c = FoldedClos::build(ClosSpec::with_tiles(tiles)).unwrap();
+            check(
+                |r: &mut Rng| {
+                    (r.below(tiles as u64) as usize, r.below(tiles as u64) as usize)
+                },
+                |&(a, b)| {
+                    let bfs = c
+                        .graph()
+                        .bfs_distance(c.edge_switch(a), c.edge_switch(b))
+                        .expect("connected");
+                    ensure(
+                        bfs == c.distance(a, b),
+                        format!("tiles={tiles} a={a} b={b}: bfs={bfs} arith={}", c.distance(a, b)),
+                    )
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(FoldedClos::build(ClosSpec::with_tiles(100)).is_err()); // not pow2
+        let mut s = ClosSpec::with_tiles(256);
+        s.tiles_per_edge = 10;
+        assert!(FoldedClos::build(s).is_err());
+        // > 32 chips exceeds system-core degree
+        assert!(FoldedClos::build(ClosSpec::with_tiles(16384)).is_err());
+    }
+
+    #[test]
+    fn every_sys_core_reaches_every_chip() {
+        let c = FoldedClos::build(ClosSpec::with_tiles(4096)).unwrap();
+        let spec = c.spec();
+        let chips = spec.chips();
+        let (e, cc, _sc) = c.switch_counts();
+        let first_sys = e + cc; // node ids: chips' edges+cores first
+        // recompute layout: per chip edges then cores
+        let edges_per_chip = 16;
+        let cores_per_chip = 16;
+        let per_chip = edges_per_chip + cores_per_chip;
+        for s in 0..c.switch_counts().2 {
+            let sn = NodeId(first_sys + s);
+            let mut seen = vec![false; chips];
+            for &(v, class) in c.graph().neighbours(sn) {
+                assert_eq!(class, LinkClass::CoreSys);
+                let chip = v.0 / per_chip;
+                seen[chip] = true;
+            }
+            assert!(seen.iter().all(|&x| x), "sys core {s} misses a chip");
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Switch-graph substrate: nodes are switches, edges are bidirectional
+//! links tagged with a [`LinkClass`]; tiles attach to switches.
+
+use std::collections::VecDeque;
+
+/// Index of a switch node in a [`Graph`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+
+/// Physical class of a link — the floorplan assigns each class a wire
+/// length, and hence a pipelined cycle count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LinkClass {
+    /// Tile <-> edge switch (inside a leaf cell / block).
+    Tile,
+    /// Clos stage-1 <-> stage-2, on chip.
+    EdgeCore,
+    /// Clos stage-2 <-> stage-3 (system core), crossing the interposer.
+    CoreSys,
+    /// Mesh hop between adjacent blocks on the same chip.
+    MeshHop,
+    /// Mesh hop crossing a chip boundary over the interposer.
+    MeshChipCross,
+}
+
+/// An undirected multigraph of switches with attached tiles.
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    adj: Vec<Vec<(NodeId, LinkClass)>>,
+    tile_home: Vec<NodeId>,
+}
+
+impl Graph {
+    /// Empty graph.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a switch node; returns its id.
+    pub fn add_node(&mut self) -> NodeId {
+        self.adj.push(Vec::new());
+        NodeId(self.adj.len() - 1)
+    }
+
+    /// Add `n` switch nodes; returns the id of the first.
+    pub fn add_nodes(&mut self, n: usize) -> NodeId {
+        let first = NodeId(self.adj.len());
+        for _ in 0..n {
+            self.adj.push(Vec::new());
+        }
+        first
+    }
+
+    /// Add a bidirectional link between two switches.
+    pub fn add_link(&mut self, a: NodeId, b: NodeId, class: LinkClass) {
+        assert!(a.0 < self.adj.len() && b.0 < self.adj.len());
+        self.adj[a.0].push((b, class));
+        self.adj[b.0].push((a, class));
+    }
+
+    /// Attach the next tile (index = current tile count) to a switch.
+    pub fn attach_tile(&mut self, switch: NodeId) -> usize {
+        self.tile_home.push(switch);
+        self.tile_home.len() - 1
+    }
+
+    /// Switch a tile is attached to.
+    pub fn tile_switch(&self, tile: usize) -> NodeId {
+        self.tile_home[tile]
+    }
+
+    /// Number of switches.
+    pub fn num_switches(&self) -> usize {
+        self.adj.len()
+    }
+
+    /// Number of attached tiles.
+    pub fn num_tiles(&self) -> usize {
+        self.tile_home.len()
+    }
+
+    /// Degree of a switch (tiles not counted).
+    pub fn degree(&self, n: NodeId) -> usize {
+        self.adj[n.0].len()
+    }
+
+    /// Neighbours of a switch.
+    pub fn neighbours(&self, n: NodeId) -> &[(NodeId, LinkClass)] {
+        &self.adj[n.0]
+    }
+
+    /// BFS shortest-path distance in links between two switches.
+    pub fn bfs_distance(&self, from: NodeId, to: NodeId) -> Option<u32> {
+        if from == to {
+            return Some(0);
+        }
+        let mut dist = vec![u32::MAX; self.adj.len()];
+        let mut q = VecDeque::new();
+        dist[from.0] = 0;
+        q.push_back(from);
+        while let Some(u) = q.pop_front() {
+            for &(v, _) in &self.adj[u.0] {
+                if dist[v.0] == u32::MAX {
+                    dist[v.0] = dist[u.0] + 1;
+                    if v == to {
+                        return Some(dist[v.0]);
+                    }
+                    q.push_back(v);
+                }
+            }
+        }
+        None
+    }
+
+    /// BFS shortest path as a node sequence (inclusive of endpoints).
+    pub fn bfs_path(&self, from: NodeId, to: NodeId) -> Option<Vec<NodeId>> {
+        if from == to {
+            return Some(vec![from]);
+        }
+        let mut prev = vec![usize::MAX; self.adj.len()];
+        let mut q = VecDeque::new();
+        prev[from.0] = from.0;
+        q.push_back(from);
+        'outer: while let Some(u) = q.pop_front() {
+            for &(v, _) in &self.adj[u.0] {
+                if prev[v.0] == usize::MAX {
+                    prev[v.0] = u.0;
+                    if v == to {
+                        break 'outer;
+                    }
+                    q.push_back(v);
+                }
+            }
+        }
+        if prev[to.0] == usize::MAX {
+            return None;
+        }
+        let mut path = vec![to];
+        let mut cur = to.0;
+        while cur != from.0 {
+            cur = prev[cur];
+            path.push(NodeId(cur));
+        }
+        path.reverse();
+        Some(path)
+    }
+
+    /// Network diameter in links (max over switch pairs; O(V*E) BFS —
+    /// used in tests and reports only).
+    pub fn diameter(&self) -> u32 {
+        let mut max = 0;
+        for s in 0..self.adj.len() {
+            let mut dist = vec![u32::MAX; self.adj.len()];
+            let mut q = VecDeque::new();
+            dist[s] = 0;
+            q.push_back(NodeId(s));
+            while let Some(u) = q.pop_front() {
+                for &(v, _) in &self.adj[u.0] {
+                    if dist[v.0] == u32::MAX {
+                        dist[v.0] = dist[u.0] + 1;
+                        max = max.max(dist[v.0]);
+                        q.push_back(v);
+                    }
+                }
+            }
+        }
+        max
+    }
+
+    /// The class of a link between two adjacent switches.
+    pub fn link_class(&self, a: NodeId, b: NodeId) -> Option<LinkClass> {
+        self.adj[a.0].iter().find(|&&(v, _)| v == b).map(|&(_, c)| c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line_graph(n: usize) -> Graph {
+        let mut g = Graph::new();
+        let first = g.add_nodes(n);
+        for i in 0..n - 1 {
+            g.add_link(NodeId(first.0 + i), NodeId(first.0 + i + 1), LinkClass::MeshHop);
+        }
+        g
+    }
+
+    #[test]
+    fn bfs_distance_on_line() {
+        let g = line_graph(5);
+        assert_eq!(g.bfs_distance(NodeId(0), NodeId(4)), Some(4));
+        assert_eq!(g.bfs_distance(NodeId(2), NodeId(2)), Some(0));
+    }
+
+    #[test]
+    fn bfs_path_endpoints_and_adjacency() {
+        let g = line_graph(4);
+        let p = g.bfs_path(NodeId(0), NodeId(3)).unwrap();
+        assert_eq!(p.first(), Some(&NodeId(0)));
+        assert_eq!(p.last(), Some(&NodeId(3)));
+        assert_eq!(p.len(), 4);
+        for w in p.windows(2) {
+            assert!(g.link_class(w[0], w[1]).is_some(), "path edges exist");
+        }
+    }
+
+    #[test]
+    fn disconnected_returns_none() {
+        let mut g = Graph::new();
+        g.add_nodes(2);
+        assert_eq!(g.bfs_distance(NodeId(0), NodeId(1)), None);
+        assert!(g.bfs_path(NodeId(0), NodeId(1)).is_none());
+    }
+
+    #[test]
+    fn tiles_attach_in_order() {
+        let mut g = Graph::new();
+        let s = g.add_node();
+        assert_eq!(g.attach_tile(s), 0);
+        assert_eq!(g.attach_tile(s), 1);
+        assert_eq!(g.tile_switch(1), s);
+        assert_eq!(g.num_tiles(), 2);
+    }
+
+    #[test]
+    fn diameter_of_line() {
+        assert_eq!(line_graph(6).diameter(), 5);
+    }
+}

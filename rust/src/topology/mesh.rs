@@ -1,0 +1,226 @@
+//! 2D-mesh network construction (paper §4.3, Fig 2b).
+//!
+//! Tiles are grouped into blocks; each block connects to one switch and
+//! switches link to their four neighbours. Multi-chip systems tile the
+//! mesh directly across chip boundaries on the interposer (§4.4), so a
+//! chip crossing is just a hop whose wire runs off chip.
+//!
+//! Tile-to-tile distance is the Manhattan distance between blocks — an
+//! arithmetic function proved equal to BFS by a property test.
+
+use anyhow::{bail, Result};
+
+use super::graph::{Graph, LinkClass, NodeId};
+
+/// Parameters of a 2D-mesh system.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MeshSpec {
+    /// Total tiles (must give a square grid of blocks).
+    pub tiles: usize,
+    /// Tiles per block/switch (16, matching the Clos edge switches).
+    pub tiles_per_block: usize,
+    /// Blocks per chip row/column (a 256-tile chip is 4x4 blocks).
+    pub chip_blocks_x: usize,
+}
+
+impl Default for MeshSpec {
+    fn default() -> Self {
+        Self { tiles: 256, tiles_per_block: 16, chip_blocks_x: 4 }
+    }
+}
+
+impl MeshSpec {
+    /// Spec with a given tile count and paper defaults otherwise.
+    pub fn with_tiles(tiles: usize) -> Self {
+        Self { tiles, ..Self::default() }
+    }
+
+    /// Blocks per grid row (and column — the grid is square).
+    pub fn blocks_x(&self) -> usize {
+        ((self.tiles / self.tiles_per_block) as f64).sqrt().round() as usize
+    }
+
+    /// Number of chips.
+    pub fn chips(&self) -> usize {
+        let chips_x = self.blocks_x().div_ceil(self.chip_blocks_x);
+        chips_x * chips_x
+    }
+
+    /// Validate structural constraints.
+    pub fn validate(&self) -> Result<()> {
+        let blocks = self.tiles / self.tiles_per_block;
+        let bx = self.blocks_x();
+        if self.tiles % self.tiles_per_block != 0 || bx * bx != blocks {
+            bail!("tiles {} do not form a square grid of {}-tile blocks", self.tiles, self.tiles_per_block);
+        }
+        if bx > self.chip_blocks_x && bx % self.chip_blocks_x != 0 {
+            bail!("grid of {bx} blocks does not tile into {}-block chips", self.chip_blocks_x);
+        }
+        Ok(())
+    }
+}
+
+/// A constructed 2D mesh.
+#[derive(Clone, Debug)]
+pub struct Mesh2D {
+    spec: MeshSpec,
+    graph: Graph,
+    switch_of_block: Vec<NodeId>,
+}
+
+impl Mesh2D {
+    /// Build the explicit switch graph for `spec`.
+    pub fn build(spec: MeshSpec) -> Result<Self> {
+        spec.validate()?;
+        let bx = spec.blocks_x();
+        let mut graph = Graph::new();
+        let mut switch_of_block = Vec::with_capacity(bx * bx);
+        for _ in 0..bx * bx {
+            switch_of_block.push(graph.add_node());
+        }
+        // Tiles in block-major order: tile t lives in block t / tpb.
+        for t in 0..spec.tiles {
+            graph.attach_tile(switch_of_block[t / spec.tiles_per_block]);
+        }
+        // Links to east and south neighbours; crossing a chip boundary
+        // gets the interposer link class.
+        for y in 0..bx {
+            for x in 0..bx {
+                let b = y * bx + x;
+                if x + 1 < bx {
+                    let class = if (x + 1) % spec.chip_blocks_x == 0 {
+                        LinkClass::MeshChipCross
+                    } else {
+                        LinkClass::MeshHop
+                    };
+                    graph.add_link(switch_of_block[b], switch_of_block[b + 1], class);
+                }
+                if y + 1 < bx {
+                    let class = if (y + 1) % spec.chip_blocks_x == 0 {
+                        LinkClass::MeshChipCross
+                    } else {
+                        LinkClass::MeshHop
+                    };
+                    graph.add_link(switch_of_block[b], switch_of_block[b + bx], class);
+                }
+            }
+        }
+        Ok(Self { spec, graph, switch_of_block })
+    }
+
+    /// The spec this network was built from.
+    pub fn spec(&self) -> &MeshSpec {
+        &self.spec
+    }
+
+    /// The explicit switch graph.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// Block coordinates of a tile.
+    pub fn block_of(&self, tile: usize) -> (usize, usize) {
+        let b = tile / self.spec.tiles_per_block;
+        let bx = self.spec.blocks_x();
+        (b % bx, b / bx)
+    }
+
+    /// Switch node of a tile.
+    pub fn switch_of(&self, tile: usize) -> NodeId {
+        self.switch_of_block[tile / self.spec.tiles_per_block]
+    }
+
+    /// Arithmetic distance: Manhattan distance between blocks.
+    pub fn distance(&self, a: usize, b: usize) -> u32 {
+        let (ax, ay) = self.block_of(a);
+        let (bx, by) = self.block_of(b);
+        (ax.abs_diff(bx) + ay.abs_diff(by)) as u32
+    }
+
+    /// Number of chip-boundary crossings on a dimension-order route.
+    pub fn chip_crossings(&self, a: usize, b: usize) -> u32 {
+        let (ax, ay) = self.block_of(a);
+        let (bx, by) = self.block_of(b);
+        let c = self.spec.chip_blocks_x;
+        ((ax / c).abs_diff(bx / c) + (ay / c).abs_diff(by / c)) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn structure_256() {
+        let m = Mesh2D::build(MeshSpec::with_tiles(256)).unwrap();
+        assert_eq!(m.spec().blocks_x(), 4);
+        assert_eq!(m.graph().num_switches(), 16);
+        assert_eq!(m.graph().num_tiles(), 256);
+        assert_eq!(m.spec().chips(), 1);
+    }
+
+    #[test]
+    fn structure_1024_multichip() {
+        let m = Mesh2D::build(MeshSpec::with_tiles(1024)).unwrap();
+        assert_eq!(m.spec().blocks_x(), 8);
+        assert_eq!(m.spec().chips(), 4);
+        // 2x2 chips of 4x4 blocks: crossing between block x=3 and x=4.
+        let t_left = 3 * 16; // block (3,0)
+        let t_right = 4 * 16; // block (4,0)
+        assert_eq!(m.distance(t_left, t_right), 1);
+        assert_eq!(m.chip_crossings(t_left, t_right), 1);
+        assert_eq!(
+            m.graph().link_class(m.switch_of(t_left), m.switch_of(t_right)),
+            Some(LinkClass::MeshChipCross)
+        );
+    }
+
+    #[test]
+    fn diameter_linear() {
+        // Paper: 2D-mesh diameter does not scale well — 2(sqrt(B)-1).
+        let m = Mesh2D::build(MeshSpec::with_tiles(1024)).unwrap();
+        assert_eq!(m.graph().diameter(), 14); // 2*(8-1)
+    }
+
+    #[test]
+    fn mesh_distance_matches_bfs() {
+        for tiles in [16usize, 64, 256, 1024] {
+            let m = Mesh2D::build(MeshSpec::with_tiles(tiles)).unwrap();
+            check(
+                |r: &mut Rng| {
+                    (r.below(tiles as u64) as usize, r.below(tiles as u64) as usize)
+                },
+                |&(a, b)| {
+                    let bfs =
+                        m.graph().bfs_distance(m.switch_of(a), m.switch_of(b)).expect("connected");
+                    ensure(
+                        bfs == m.distance(a, b),
+                        format!("tiles={tiles} a={a} b={b}: bfs={bfs} arith={}", m.distance(a, b)),
+                    )
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn crossings_bounded_by_distance() {
+        let m = Mesh2D::build(MeshSpec::with_tiles(4096)).unwrap();
+        check(
+            |r: &mut Rng| (r.below(4096) as usize, r.below(4096) as usize),
+            |&(a, b)| {
+                ensure(
+                    m.chip_crossings(a, b) <= m.distance(a, b),
+                    "crossings exceed hop count",
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        assert!(Mesh2D::build(MeshSpec::with_tiles(128)).is_err());
+        assert!(Mesh2D::build(MeshSpec::with_tiles(100)).is_err());
+    }
+}

@@ -1,0 +1,22 @@
+//! Interconnection-network topologies (paper §2, §4.3, Fig 1).
+//!
+//! * [`graph`] — the switch-graph substrate with BFS shortest paths.
+//! * [`clos`] — folded Clos networks built from degree-32 switches
+//!   (16 tiles per edge switch, 256 tiles per chip, 2 or 3 stages).
+//! * [`mesh`] — 2D meshes of 16-tile blocks, extended across chips.
+//! * [`routing`] — shortest-path routes annotated with link classes,
+//!   consumed by the analytic latency model and the DES.
+//!
+//! Both topologies expose *arithmetic* tile-to-tile distance functions
+//! (what the AOT kernel evaluates); property tests prove them equal to
+//! BFS distances on the explicit graph.
+
+pub mod clos;
+pub mod graph;
+pub mod mesh;
+pub mod routing;
+
+pub use clos::{ClosSpec, FoldedClos};
+pub use graph::{Graph, LinkClass, NodeId};
+pub use mesh::{Mesh2D, MeshSpec};
+pub use routing::{Route, Topology};

@@ -1,0 +1,210 @@
+//! Shortest-path routes over either topology, summarised as the link
+//! counts the §6.3 latency model needs.
+
+use super::clos::FoldedClos;
+use super::graph::LinkClass;
+use super::mesh::Mesh2D;
+
+/// A shortest route between two tiles, summarised for the latency model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Route {
+    /// Switch-path length `d(s,t)` (links between switches).
+    pub distance: u32,
+    /// Clos edge<->core links crossed (on-chip).
+    pub edge_core_links: u32,
+    /// Clos core<->system-core links crossed (interposer).
+    pub core_sys_links: u32,
+    /// Mesh on-chip hops.
+    pub mesh_hops: u32,
+    /// Mesh chip-boundary crossings (interposer hops).
+    pub chip_crossings: u32,
+    /// True if the route leaves the source chip (inter-chip
+    /// serialisation applies).
+    pub inter_chip: bool,
+}
+
+impl Route {
+    /// Number of switches traversed (`d + 1` in the paper's model).
+    pub fn switches(&self) -> u32 {
+        self.distance + 1
+    }
+}
+
+/// Either network, presenting a uniform routing interface.
+#[derive(Clone, Debug)]
+pub enum Topology {
+    /// Folded Clos (paper's proposal).
+    Clos(FoldedClos),
+    /// 2D mesh (paper's baseline).
+    Mesh(Mesh2D),
+}
+
+impl Topology {
+    /// Total tiles.
+    pub fn tiles(&self) -> usize {
+        match self {
+            Topology::Clos(c) => c.graph().num_tiles(),
+            Topology::Mesh(m) => m.graph().num_tiles(),
+        }
+    }
+
+    /// Number of chips the system spans.
+    pub fn chips(&self) -> usize {
+        match self {
+            Topology::Clos(c) => c.spec().chips(),
+            Topology::Mesh(m) => m.spec().chips(),
+        }
+    }
+
+    /// Short name for reports ("clos" / "mesh").
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::Clos(_) => "clos",
+            Topology::Mesh(_) => "mesh",
+        }
+    }
+
+    /// Shortest-route summary between two tiles.
+    pub fn route(&self, a: usize, b: usize) -> Route {
+        match self {
+            Topology::Clos(c) => {
+                let distance = c.distance(a, b);
+                let (edge_core_links, core_sys_links) = c.link_counts(a, b);
+                Route {
+                    distance,
+                    edge_core_links,
+                    core_sys_links,
+                    mesh_hops: 0,
+                    chip_crossings: 0,
+                    inter_chip: core_sys_links > 0,
+                }
+            }
+            Topology::Mesh(m) => {
+                let distance = m.distance(a, b);
+                let chip_crossings = m.chip_crossings(a, b);
+                Route {
+                    distance,
+                    edge_core_links: 0,
+                    core_sys_links: 0,
+                    mesh_hops: distance - chip_crossings,
+                    chip_crossings,
+                    inter_chip: chip_crossings > 0,
+                }
+            }
+        }
+    }
+
+    /// The underlying graph (for the DES and validation).
+    pub fn graph(&self) -> &super::graph::Graph {
+        match self {
+            Topology::Clos(c) => c.graph(),
+            Topology::Mesh(m) => m.graph(),
+        }
+    }
+
+    /// The switch a tile attaches to.
+    pub fn tile_switch(&self, tile: usize) -> super::graph::NodeId {
+        match self {
+            Topology::Clos(c) => c.edge_switch(tile),
+            Topology::Mesh(m) => m.switch_of(tile),
+        }
+    }
+
+    /// Count links of each class on a BFS path between two tiles'
+    /// switches — slow, for cross-validation in tests.
+    pub fn bfs_route(&self, a: usize, b: usize) -> Route {
+        let g = self.graph();
+        let path = g.bfs_path(self.tile_switch(a), self.tile_switch(b)).expect("connected");
+        let mut r = Route {
+            distance: (path.len() - 1) as u32,
+            edge_core_links: 0,
+            core_sys_links: 0,
+            mesh_hops: 0,
+            chip_crossings: 0,
+            inter_chip: false,
+        };
+        for w in path.windows(2) {
+            match g.link_class(w[0], w[1]).expect("adjacent") {
+                LinkClass::EdgeCore => r.edge_core_links += 1,
+                LinkClass::CoreSys => r.core_sys_links += 1,
+                LinkClass::MeshHop => r.mesh_hops += 1,
+                LinkClass::MeshChipCross => r.chip_crossings += 1,
+                LinkClass::Tile => {}
+            }
+        }
+        r.inter_chip = r.core_sys_links > 0 || r.chip_crossings > 0;
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{ClosSpec, MeshSpec};
+    use crate::util::prop::{check, ensure};
+    use crate::util::rng::Rng;
+
+    fn clos(tiles: usize) -> Topology {
+        Topology::Clos(FoldedClos::build(ClosSpec::with_tiles(tiles)).unwrap())
+    }
+
+    fn mesh(tiles: usize) -> Topology {
+        Topology::Mesh(Mesh2D::build(MeshSpec::with_tiles(tiles)).unwrap())
+    }
+
+    #[test]
+    fn clos_route_summary() {
+        let t = clos(1024);
+        let r = t.route(0, 300);
+        assert_eq!(r.distance, 4);
+        assert_eq!(r.edge_core_links, 2);
+        assert_eq!(r.core_sys_links, 2);
+        assert!(r.inter_chip);
+        assert_eq!(r.switches(), 5);
+    }
+
+    #[test]
+    fn mesh_route_summary() {
+        let t = mesh(1024);
+        // tile 0 (block 0,0) -> block (5,0): 5 hops, 1 crossing.
+        let r = t.route(0, 5 * 16);
+        assert_eq!(r.distance, 5);
+        assert_eq!(r.mesh_hops, 4);
+        assert_eq!(r.chip_crossings, 1);
+        assert!(r.inter_chip);
+    }
+
+    #[test]
+    fn arithmetic_route_matches_bfs_route() {
+        // The BFS route must agree with the arithmetic summary in
+        // distance; per-class counts must agree where the route is
+        // unique in class profile (clos), and for the mesh the total.
+        for topo in [clos(1024), mesh(1024)] {
+            check(
+                |r: &mut Rng| (r.below(1024) as usize, r.below(1024) as usize),
+                |&(a, b)| {
+                    let fast = topo.route(a, b);
+                    let slow = topo.bfs_route(a, b);
+                    ensure(
+                        fast.distance == slow.distance
+                            && fast.edge_core_links == slow.edge_core_links
+                            && fast.core_sys_links == slow.core_sys_links
+                            && fast.distance - fast.chip_crossings
+                                == slow.distance - slow.chip_crossings
+                            && fast.inter_chip == slow.inter_chip,
+                        format!("{}: {a}->{b}: {fast:?} vs bfs {slow:?}", topo.name()),
+                    )
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn self_route_is_zero() {
+        for topo in [clos(256), mesh(256)] {
+            let r = topo.route(7, 7);
+            assert_eq!(r.distance, 0);
+            assert!(!r.inter_chip);
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! A criterion-style micro-benchmark harness for the `harness = false`
+//! bench binaries (criterion itself is not available offline).
+//!
+//! Usage inside a bench binary:
+//!
+//! ```no_run
+//! use memclos::util::bench::Bench;
+//! let mut b = Bench::new("fig9");
+//! b.iter("clos-1024", || { /* work */ });
+//! b.report();
+//! ```
+//!
+//! Each case is warmed up, then timed over enough iterations to reach a
+//! target measurement time; median and median-absolute-deviation of the
+//! per-iteration times are reported.
+
+use std::time::{Duration, Instant};
+
+/// One measured case.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    /// Case label.
+    pub name: String,
+    /// Median per-iteration time.
+    pub median: Duration,
+    /// Median absolute deviation.
+    pub mad: Duration,
+    /// Iterations measured.
+    pub iters: u64,
+}
+
+/// Bench harness accumulating measurements for one group.
+pub struct Bench {
+    group: String,
+    warmup: Duration,
+    target: Duration,
+    min_samples: usize,
+    results: Vec<Measurement>,
+}
+
+impl Bench {
+    /// New group with default timing budget (0.3 s warmup, 1 s measure).
+    pub fn new(group: &str) -> Self {
+        // `cargo bench -- --quick` style override via env var.
+        let quick = std::env::var("MEMCLOS_BENCH_QUICK").is_ok();
+        Self {
+            group: group.to_string(),
+            warmup: if quick { Duration::from_millis(20) } else { Duration::from_millis(300) },
+            target: if quick { Duration::from_millis(100) } else { Duration::from_secs(1) },
+            min_samples: 10,
+            results: Vec::new(),
+        }
+    }
+
+    /// Override the measurement budget.
+    pub fn budget(mut self, warmup: Duration, target: Duration) -> Self {
+        self.warmup = warmup;
+        self.target = target;
+        self
+    }
+
+    /// Measure a closure; its return value is black-boxed.
+    pub fn iter<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &Measurement {
+        // Warmup and estimate per-iteration cost.
+        let start = Instant::now();
+        let mut warm_iters = 0u64;
+        while start.elapsed() < self.warmup || warm_iters == 0 {
+            black_box(f());
+            warm_iters += 1;
+        }
+        let per_iter = start.elapsed() / warm_iters.max(1) as u32;
+
+        // Choose a sample count targeting the measurement budget.
+        let samples = if per_iter.is_zero() {
+            1000
+        } else {
+            ((self.target.as_nanos() / per_iter.as_nanos().max(1)) as usize)
+                .clamp(self.min_samples, 100_000)
+        };
+
+        let mut times: Vec<f64> = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let t0 = Instant::now();
+            black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = times[times.len() / 2];
+        let mut devs: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = devs[devs.len() / 2];
+
+        self.results.push(Measurement {
+            name: name.to_string(),
+            median: Duration::from_secs_f64(median),
+            mad: Duration::from_secs_f64(mad),
+            iters: samples as u64,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Print the report table for the group.
+    pub fn report(&self) {
+        println!("\n== bench group: {} ==", self.group);
+        let wname = self.results.iter().map(|m| m.name.len()).max().unwrap_or(4).max(4);
+        println!("{:<wname$}  {:>14}  {:>12}  {:>8}", "case", "median", "+/- mad", "iters");
+        for m in &self.results {
+            println!(
+                "{:<wname$}  {:>14}  {:>12}  {:>8}",
+                m.name,
+                fmt_duration(m.median),
+                fmt_duration(m.mad),
+                m.iters
+            );
+        }
+    }
+
+    /// Access the accumulated measurements.
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Opaque value sink preventing the optimizer from deleting the work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Human duration formatting (ns/us/ms/s).
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("MEMCLOS_BENCH_QUICK", "1");
+        let mut b = Bench::new("test").budget(Duration::from_millis(1), Duration::from_millis(5));
+        let m = b.iter("noop-ish", || (0..100).sum::<u64>());
+        assert!(m.iters >= 10);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(Duration::from_nanos(500)), "500 ns");
+        assert_eq!(fmt_duration(Duration::from_micros(1500)), "1.50 ms");
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with(" s"));
+    }
+}

@@ -1,0 +1,17 @@
+//! Utility substrates built in-repo (the image is offline; no external
+//! crates beyond the xla stack are available).
+//!
+//! * [`rng`] — splitmix64 / xoshiro256** PRNG.
+//! * [`stats`] — summary statistics, histograms.
+//! * [`table`] — ASCII table rendering for the figure/table generators.
+//! * [`plot`] — ASCII line plots (log-linear, matching the paper's axes).
+//! * [`prop`] — a minimal property-based testing harness.
+//! * [`bench`] — a criterion-style micro-benchmark harness for the
+//!   `harness = false` bench binaries.
+
+pub mod bench;
+pub mod plot;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

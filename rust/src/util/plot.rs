@@ -1,0 +1,201 @@
+//! ASCII line plots.
+//!
+//! The paper's figures are log-linear plots (log2 x-axis of tile counts,
+//! linear y-axis of area/latency/slowdown). [`Plot`] renders multiple
+//! series on a character grid so every `memclos figure N` command shows
+//! the same shape the paper does, directly in the terminal.
+
+/// X-axis scaling.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum XScale {
+    /// Linear x-axis.
+    Linear,
+    /// log2 x-axis (the paper's tile-count axes).
+    Log2,
+}
+
+/// One named series of (x, y) points.
+#[derive(Clone, Debug)]
+pub struct Series {
+    /// Legend label.
+    pub label: String,
+    /// Data points (x ascending is not required but typical).
+    pub points: Vec<(f64, f64)>,
+    /// Glyph used for this series.
+    pub glyph: char,
+}
+
+/// A multi-series ASCII plot.
+#[derive(Clone, Debug)]
+pub struct Plot {
+    title: String,
+    x_label: String,
+    y_label: String,
+    width: usize,
+    height: usize,
+    xscale: XScale,
+    series: Vec<Series>,
+    hlines: Vec<(f64, String)>,
+}
+
+const GLYPHS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&'];
+
+impl Plot {
+    /// New plot with the given title and axis labels.
+    pub fn new(title: &str, x_label: &str, y_label: &str) -> Self {
+        Self {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            y_label: y_label.to_string(),
+            width: 72,
+            height: 20,
+            xscale: XScale::Log2,
+            series: Vec::new(),
+            hlines: Vec::new(),
+        }
+    }
+
+    /// Set the character-grid size.
+    pub fn size(mut self, width: usize, height: usize) -> Self {
+        self.width = width.max(16);
+        self.height = height.max(6);
+        self
+    }
+
+    /// Set the x-axis scale.
+    pub fn xscale(mut self, s: XScale) -> Self {
+        self.xscale = s;
+        self
+    }
+
+    /// Add a series; glyphs are assigned in order.
+    pub fn series(&mut self, label: &str, points: &[(f64, f64)]) -> &mut Self {
+        let glyph = GLYPHS[self.series.len() % GLYPHS.len()];
+        self.series.push(Series { label: label.to_string(), points: points.to_vec(), glyph });
+        self
+    }
+
+    /// Add a labelled horizontal reference line (the paper's economical
+    /// chip-size band, the DDR3 baseline, ...).
+    pub fn hline(&mut self, y: f64, label: &str) -> &mut Self {
+        self.hlines.push((y, label.to_string()));
+        self
+    }
+
+    fn xmap(&self, x: f64) -> f64 {
+        match self.xscale {
+            XScale::Linear => x,
+            XScale::Log2 => x.max(f64::MIN_POSITIVE).log2(),
+        }
+    }
+
+    /// Render to a string.
+    pub fn render(&self) -> String {
+        let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+        for s in &self.series {
+            for &(x, y) in &s.points {
+                let xm = self.xmap(x);
+                xmin = xmin.min(xm);
+                xmax = xmax.max(xm);
+                ymin = ymin.min(y);
+                ymax = ymax.max(y);
+            }
+        }
+        for &(y, _) in &self.hlines {
+            ymin = ymin.min(y);
+            ymax = ymax.max(y);
+        }
+        if !xmin.is_finite() || !ymin.is_finite() {
+            return format!("{} (no data)\n", self.title);
+        }
+        if (xmax - xmin).abs() < 1e-12 {
+            xmax = xmin + 1.0;
+        }
+        if (ymax - ymin).abs() < 1e-12 {
+            ymax = ymin + 1.0;
+        }
+        // pad the y range slightly so extremes are visible
+        let ypad = (ymax - ymin) * 0.05;
+        ymin -= ypad;
+        ymax += ypad;
+
+        let w = self.width;
+        let h = self.height;
+        let mut grid = vec![vec![' '; w]; h];
+
+        for &(y, _) in &self.hlines {
+            let r = ((ymax - y) / (ymax - ymin) * (h - 1) as f64).round() as usize;
+            if r < h {
+                for c in grid[r].iter_mut() {
+                    *c = '-';
+                }
+            }
+        }
+        for s in &self.series {
+            for &(x, y) in &s.points {
+                let cx = ((self.xmap(x) - xmin) / (xmax - xmin) * (w - 1) as f64).round() as usize;
+                let cy = ((ymax - y) / (ymax - ymin) * (h - 1) as f64).round() as usize;
+                if cx < w && cy < h {
+                    grid[cy][cx] = s.glyph;
+                }
+            }
+        }
+
+        let mut out = String::new();
+        out.push_str(&format!("{}\n", self.title));
+        out.push_str(&format!("  y: {}\n", self.y_label));
+        for (r, row) in grid.iter().enumerate() {
+            let yv = ymax - (ymax - ymin) * r as f64 / (h - 1) as f64;
+            out.push_str(&format!("{yv:>10.2} |"));
+            out.extend(row.iter());
+            out.push('\n');
+        }
+        out.push_str(&format!("{:>10} +{}\n", "", "-".repeat(w)));
+        let xl = match self.xscale {
+            XScale::Linear => format!("{:.0} .. {:.0}", xmin, xmax),
+            XScale::Log2 => format!("{:.0} .. {:.0} (log2)", 2f64.powf(xmin), 2f64.powf(xmax)),
+        };
+        out.push_str(&format!("{:>11} x: {} [{}]\n", "", self.x_label, xl));
+        for s in &self.series {
+            out.push_str(&format!("{:>11} {} {}\n", "", s.glyph, s.label));
+        }
+        for (y, label) in &self.hlines {
+            out.push_str(&format!("{:>11} - {} (y={y:.1})\n", "", label));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_series_and_legend() {
+        let mut p = Plot::new("t", "tiles", "ns");
+        p.series("clos", &[(16.0, 19.0), (256.0, 55.0), (1024.0, 119.0)]);
+        p.series("mesh", &[(16.0, 19.0), (256.0, 80.0), (1024.0, 200.0)]);
+        p.hline(35.0, "DDR3");
+        let s = p.render();
+        assert!(s.contains("clos"));
+        assert!(s.contains("mesh"));
+        assert!(s.contains("DDR3"));
+        assert!(s.contains('*'));
+        assert!(s.contains('o'));
+    }
+
+    #[test]
+    fn empty_plot_does_not_panic() {
+        let p = Plot::new("empty", "x", "y");
+        assert!(p.render().contains("no data"));
+    }
+
+    #[test]
+    fn constant_series_ok() {
+        let mut p = Plot::new("c", "x", "y");
+        p.series("flat", &[(1.0, 5.0), (2.0, 5.0)]);
+        let s = p.render();
+        assert!(s.contains('*'));
+    }
+}

@@ -1,0 +1,113 @@
+//! A minimal property-based testing harness (proptest is unavailable in
+//! this offline image, so the invariant tests use this instead).
+//!
+//! A property runs `cases` times against values drawn from a generator
+//! closure; on failure the case index, seed and a debug rendering of the
+//! failing input are reported so the case can be replayed exactly.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: u32,
+    /// Base seed; case `i` uses seed `base_seed + i`.
+    pub base_seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 128, base_seed: 0x5EED_CAFE }
+    }
+}
+
+/// Run `prop` against `cases` values drawn by `gen`.
+///
+/// Panics with a replayable report on the first falsified case.
+pub fn forall<T, G, P>(config: Config, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..config.cases {
+        let seed = config.base_seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let value = gen(&mut rng);
+        if let Err(msg) = prop(&value) {
+            panic!(
+                "property falsified (case {case}/{}, seed {seed:#x}):\n  input: {value:?}\n  {msg}",
+                config.cases
+            );
+        }
+    }
+}
+
+/// `forall` with the default configuration.
+pub fn check<T, G, P>(gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    forall(Config::default(), gen, prop)
+}
+
+/// Convenience: assert-style helper turning a bool into the Result the
+/// property expects.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            Config { cases: 50, base_seed: 1 },
+            |r| r.below(100),
+            |&v| {
+                count += 1;
+                ensure(v < 100, "in range")
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property falsified")]
+    fn failing_property_reports() {
+        check(|r| r.below(10), |&v| ensure(v < 5, format!("{v} >= 5")));
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first = Vec::new();
+        forall(
+            Config { cases: 10, base_seed: 9 },
+            |r| r.next_u64(),
+            |&v| {
+                first.push(v);
+                Ok(())
+            },
+        );
+        let mut second = Vec::new();
+        forall(
+            Config { cases: 10, base_seed: 9 },
+            |r| r.next_u64(),
+            |&v| {
+                second.push(v);
+                Ok(())
+            },
+        );
+        assert_eq!(first, second);
+    }
+}

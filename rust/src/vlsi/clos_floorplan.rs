@@ -1,0 +1,295 @@
+//! Folded-Clos chip floorplan (paper §4.2, Fig 2a; results §5.1.1–5.1.2).
+//!
+//! The layout is the paper's H-tree organisation:
+//!
+//! * a **leaf cell** holds one edge switch and its 16 tiles;
+//! * leaves are arranged in a (near-)square grid, recursively split into
+//!   quadrants with H-tree wiring channels between them carrying the
+//!   uplinks toward the chip centre;
+//! * the **core region** — the chip's stage-2 switches plus the
+//!   contributed bank of stage-3 system-core switches — is a staggered
+//!   switch group strip across the centre;
+//! * the **I/O strip** (pads + drivers for the 2N off-chip links) runs
+//!   along the right-hand edge, facing the interposer wiring channel.
+//!
+//! Outputs: total/breakdown areas (Figs 5–6) and per-link-class wire
+//! lengths, pipelined into cycles (consumed by `netmodel`).
+
+use anyhow::Result;
+
+use super::io::IoPlan;
+use super::LinkCycles;
+use crate::tech::{ChipTech, MemTech};
+use crate::topology::ClosSpec;
+
+/// Calibration constant: switch-group packing inefficiency per sqrt of
+/// group size (staggered sets waste area on internal wiring; §5.1.2
+/// notes group area grows faster than switch count).
+const GROUP_INEFFICIENCY: f64 = 0.15;
+
+/// Calibration constant: overall floorplan packing overhead (quadrant
+/// alignment, repeater banks, clock spines) applied to the final
+/// bounding box. Calibrated against the paper's 132.9 mm^2 anchor for
+/// the 256-tile / 128 KB chip.
+const PACKING_OVERHEAD: f64 = 1.06;
+
+/// A floorplanned folded-Clos processing chip.
+#[derive(Clone, Debug)]
+pub struct ClosFloorplan {
+    /// Tiles on this chip.
+    pub tiles: usize,
+    /// Tile memory capacity (KB).
+    pub mem_kb: u32,
+    /// Side of one leaf cell (16 tiles + edge switch), mm.
+    pub leaf_side_mm: f64,
+    /// Tile-array extent (leaves + H-tree channels), mm.
+    pub array_w_mm: f64,
+    /// Tile-array extent (leaves + H-tree channels), mm.
+    pub array_h_mm: f64,
+    /// Core switch-group strip height, mm.
+    pub core_strip_h_mm: f64,
+    /// I/O strip width along the right edge, mm.
+    pub io_strip_w_mm: f64,
+    /// Chip bounding box, mm.
+    pub chip_w_mm: f64,
+    /// Chip bounding box, mm.
+    pub chip_h_mm: f64,
+    /// Total chip area (bounding box x packing overhead), mm^2.
+    pub area_mm2: f64,
+    /// Area of all switch groups (edge switches + core groups), mm^2.
+    pub switch_area_mm2: f64,
+    /// Area of the H-tree wiring channels, mm^2.
+    pub wire_area_mm2: f64,
+    /// I/O pads + drivers area, mm^2.
+    pub io_area_mm2: f64,
+    /// Tile (processor + memory) area, mm^2.
+    pub tile_area_mm2: f64,
+    /// Longest tile -> edge-switch wire, mm.
+    pub wire_tile_mm: f64,
+    /// Longest edge-switch -> core wire (H-tree run to centre), mm.
+    pub wire_edge_core_mm: f64,
+    /// Longest core -> I/O pad wire, mm.
+    pub wire_core_pad_mm: f64,
+    /// Off-chip link count (2N).
+    pub io_links: u32,
+    /// Pipelined link latencies in cycles.
+    pub cycles: LinkCycles,
+}
+
+impl ClosFloorplan {
+    /// Floorplan the chip of a (possibly multi-chip) folded-Clos system.
+    ///
+    /// `spec.tiles` is the *system* size; the chip holds
+    /// `min(tiles, tiles_per_chip)` tiles. Multi-chip-capable chips
+    /// carry twice the stage-2 switches plus the stage-3 bank (§4.2).
+    pub fn plan(spec: &ClosSpec, mem_kb: u32, tech: &ChipTech) -> Result<Self> {
+        spec.validate()?;
+        let n = spec.tiles.min(spec.tiles_per_chip);
+        let g0 = spec.tiles_per_edge;
+        let leaves = n.div_ceil(g0);
+        let multi_chip = spec.chips() > 1;
+
+        let tile_area = tech.processor_area_mm2 + MemTech::Sram.area_for_kb(mem_kb as f64);
+        let leaf_area = g0.min(n) as f64 * tile_area + tech.switch_area_mm2;
+        let leaf_side = leaf_area.sqrt();
+
+        // Leaf grid dimensions: near-square power-of-two factors.
+        let (gx, gy) = grid_dims(leaves);
+
+        // H-tree channels: between adjacent leaf columns/rows a channel
+        // carries the uplinks of the leaves outboard of it, headed for
+        // the centre. Summed per axis this is bounded by the full
+        // uplink count; we charge each axis half the total plus the
+        // off-chip wires that ride along to the I/O edge.
+        let uplink_wires = n as f64 * tech.wires_per_link as f64;
+        let offchip_wires = (2 * n) as f64 * tech.wires_per_offchip_link as f64;
+        let chan_w_x = tech.channel_width_mm((uplink_wires / 2.0) as u32);
+        let chan_w_y = tech.channel_width_mm(((uplink_wires + offchip_wires) / 2.0) as u32);
+        let array_w = gx as f64 * leaf_side + chan_w_x * (gx as f64 - 1.0).max(0.0);
+        let array_h = gy as f64 * leaf_side + chan_w_y * (gy as f64 - 1.0).max(0.0);
+
+        // Core region: stage-2 switches (+ stage-3 bank on multi-chip
+        // capable parts) as a staggered group strip across the centre.
+        let stage2 = if n <= g0 {
+            0
+        } else if multi_chip {
+            2 * n / spec.degree
+        } else {
+            n / spec.degree
+        };
+        let stage3_bank = if multi_chip { n / spec.degree } else { 0 };
+        let core_switches = stage2 + stage3_bank;
+        let core_group_area = group_area(core_switches, tech);
+        let core_strip_h = if core_switches > 0 { core_group_area / array_w } else { 0.0 };
+
+        // I/O strip along the right-hand edge.
+        let io_links = IoPlan::clos_links(n);
+        let io = IoPlan::for_links(io_links, tech);
+        let chip_h = array_h + core_strip_h;
+        let io_strip_w = io.strip_width_mm(chip_h, tech);
+
+        let chip_w = array_w + io_strip_w;
+        let area = chip_w * chip_h * PACKING_OVERHEAD;
+
+        // Wire lengths (Manhattan, §4.1): tile to its leaf's edge switch
+        // (within the leaf cell); leaf centre to chip centre along the
+        // H-tree; core to the far corner of the I/O strip.
+        let wire_tile = 0.75 * leaf_side;
+        let wire_edge_core = (array_w - leaf_side) / 2.0 + (array_h - leaf_side) / 2.0
+            + core_strip_h / 2.0;
+        let wire_core_pad = array_w / 2.0 + io_strip_w / 2.0 + chip_h / 4.0;
+
+        let edge_switch_area = leaves as f64 * tech.switch_area_mm2;
+        let wire_area = chan_w_x * array_h * (gx as f64 - 1.0).max(0.0)
+            + chan_w_y * array_w * (gy as f64 - 1.0).max(0.0);
+
+        let cycles = LinkCycles {
+            tile: tech.wire_cycles(wire_tile),
+            edge_core: tech.wire_cycles(wire_edge_core),
+            core_pad: tech.wire_cycles(wire_core_pad),
+            mesh_hop: 0,
+        };
+
+        Ok(Self {
+            tiles: n,
+            mem_kb,
+            leaf_side_mm: leaf_side,
+            array_w_mm: array_w,
+            array_h_mm: array_h,
+            core_strip_h_mm: core_strip_h,
+            io_strip_w_mm: io_strip_w,
+            chip_w_mm: chip_w,
+            chip_h_mm: chip_h,
+            area_mm2: area,
+            switch_area_mm2: edge_switch_area + core_group_area,
+            wire_area_mm2: wire_area,
+            io_area_mm2: io.area_mm2,
+            tile_area_mm2: n as f64 * tile_area,
+            wire_tile_mm: wire_tile,
+            wire_edge_core_mm: wire_edge_core,
+            wire_core_pad_mm: wire_core_pad,
+            io_links,
+            cycles,
+        })
+    }
+
+    /// Interconnect (switch groups + wiring channels) share of the die.
+    pub fn interconnect_fraction(&self) -> f64 {
+        (self.switch_area_mm2 + self.wire_area_mm2) / self.area_mm2
+    }
+
+    /// True if the chip falls in the economical band (§5.0.1).
+    pub fn is_economical(&self, tech: &ChipTech) -> bool {
+        self.area_mm2 >= tech.econ_min_mm2 && self.area_mm2 <= tech.econ_max_mm2
+    }
+}
+
+/// Near-square power-of-two grid dimensions for `leaves` cells.
+fn grid_dims(leaves: usize) -> (usize, usize) {
+    let mut gx = 1usize;
+    let mut gy = 1usize;
+    while gx * gy < leaves {
+        if gx <= gy {
+            gx *= 2;
+        } else {
+            gy *= 2;
+        }
+    }
+    (gx, gy)
+}
+
+/// Area of a staggered group of `m` degree-32 switches: the switches
+/// plus a packing inefficiency that grows with group size (§5.1.2).
+fn group_area(m: usize, tech: &ChipTech) -> f64 {
+    if m == 0 {
+        return 0.0;
+    }
+    m as f64 * tech.switch_area_mm2 * (1.0 + GROUP_INEFFICIENCY * (m as f64).sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(tiles: usize, mem_kb: u32) -> ClosFloorplan {
+        let tech = ChipTech::default();
+        ClosFloorplan::plan(&ClosSpec::with_tiles(tiles), mem_kb, &tech).unwrap()
+    }
+
+    #[test]
+    fn paper_anchor_256_tiles_128kb() {
+        // §5.1.1: largest folded-Clos chip — 256 tiles, 128 KB —
+        // occupies 132.9 mm^2, of which 44.6 mm^2 is I/O.
+        let fp = plan(1024, 128); // multi-chip system: chip holds 256
+        assert_eq!(fp.tiles, 256);
+        assert!((fp.area_mm2 - 132.9).abs() / 132.9 < 0.12, "area={}", fp.area_mm2);
+        assert!((fp.io_area_mm2 - 44.6).abs() / 44.6 < 0.06, "io={}", fp.io_area_mm2);
+    }
+
+    #[test]
+    fn wire_classes_match_section_5_1_1() {
+        // Tile-to-switch wires < 5.5 mm (single cycle) except the
+        // 128-tile/512 KB configuration; all others <= 11.2 mm (2 cy).
+        for &(tiles, mem) in
+            &[(256usize, 64u32), (256, 128), (1024, 128), (1024, 256), (4096, 128)]
+        {
+            let fp = plan(tiles, mem);
+            assert!(fp.wire_tile_mm < 5.5, "tile wire {} (t={tiles} m={mem})", fp.wire_tile_mm);
+            assert_eq!(fp.cycles.tile, 1);
+            assert!(
+                fp.wire_edge_core_mm <= 11.2,
+                "edge-core wire {} (t={tiles} m={mem})",
+                fp.wire_edge_core_mm
+            );
+            assert!(fp.cycles.edge_core <= 2);
+        }
+    }
+
+    #[test]
+    fn interconnect_share_in_paper_band() {
+        // §5.1.2: interconnect occupies ~5-8% of economical dies.
+        let tech = ChipTech::default();
+        for &(tiles, mem) in &[(1024usize, 128u32), (1024, 256), (256, 256)] {
+            let fp = plan(tiles, mem);
+            if fp.is_economical(&tech) {
+                let f = fp.interconnect_fraction();
+                assert!((0.02..=0.10).contains(&f), "interconnect {f} (t={tiles} m={mem})");
+            }
+        }
+    }
+
+    #[test]
+    fn area_scales_with_tiles_and_memory() {
+        let a = plan(64, 128).area_mm2;
+        let b = plan(256, 128).area_mm2;
+        let c = plan(256, 256).area_mm2;
+        assert!(b > 2.5 * a, "4x tiles ~> 3-4x area ({a} -> {b})");
+        assert!(c > b * 1.2, "more memory -> more area ({b} -> {c})");
+    }
+
+    #[test]
+    fn io_fraction_large_for_small_memories() {
+        // §5.1.2: I/O ~40% of the die for 64 KB memories.
+        let fp = plan(1024, 64);
+        let f = fp.io_area_mm2 / fp.area_mm2;
+        assert!((0.30..=0.50).contains(&f), "io fraction {f}");
+    }
+
+    #[test]
+    fn grid_dims_near_square() {
+        assert_eq!(grid_dims(16), (4, 4));
+        assert_eq!(grid_dims(8), (4, 2));
+        assert_eq!(grid_dims(1), (1, 1));
+        assert_eq!(grid_dims(4), (2, 2));
+    }
+
+    #[test]
+    fn multichip_chip_larger_than_single() {
+        // The multi-chip-capable chip carries 2x stage-2 switches plus
+        // the stage-3 bank, so it is slightly larger.
+        let single = plan(256, 128);
+        let multi = plan(1024, 128);
+        assert!(multi.area_mm2 > single.area_mm2);
+        assert_eq!(single.tiles, multi.tiles);
+    }
+}

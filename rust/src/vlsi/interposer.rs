@@ -1,0 +1,253 @@
+//! Silicon-interposer packaging model (paper §3.1, §4.4, Figs 3–4;
+//! results §5.1.3 / Fig 7).
+//!
+//! * **Folded Clos**: chips sit in two rows either side of a wiring
+//!   channel. The channel carries a common wire for every connection
+//!   between two chips; its height is bounded by twice the total pitch
+//!   of one chip's connecting wires. Inter-chip wire delay spans from
+//!   the channel height (adjacent chips) up to the row width plus the
+//!   channel height (diagonally opposite chips).
+//! * **2D mesh**: chips tile a grid and adjacent edges connect
+//!   directly; the crossing wire is just the inter-chip gap
+//!   (~1 mm -> ~0.09 ns).
+
+use anyhow::Result;
+
+use super::clos_floorplan::ClosFloorplan;
+use super::mesh_floorplan::MeshFloorplan;
+use crate::tech::{ChipTech, InterposerTech};
+
+/// Gap between adjacent chips on the interposer, mm (assembly margin).
+const CHIP_GAP_MM: f64 = 1.0;
+
+/// Interposer-level plan for a multi-chip system.
+#[derive(Clone, Debug)]
+pub struct InterposerPlan {
+    /// Number of processing chips.
+    pub chips: usize,
+    /// Interposer width, mm.
+    pub width_mm: f64,
+    /// Interposer height, mm.
+    pub height_mm: f64,
+    /// Total interposer area, mm^2.
+    pub area_mm2: f64,
+    /// Area of the inter-chip wiring channel, mm^2 (0 for mesh).
+    pub channel_area_mm2: f64,
+    /// Shortest inter-chip wire delay, ns.
+    pub wire_delay_min_ns: f64,
+    /// Longest inter-chip wire delay, ns.
+    pub wire_delay_max_ns: f64,
+    /// Average inter-chip wire delay, ns (uniform chip pairs).
+    pub wire_delay_avg_ns: f64,
+}
+
+impl InterposerPlan {
+    /// Channel share of the interposer area.
+    pub fn channel_fraction(&self) -> f64 {
+        self.channel_area_mm2 / self.area_mm2
+    }
+
+    /// Average inter-chip wire delay in chip clock cycles.
+    pub fn wire_cycles_avg(&self, tech: &ChipTech) -> u32 {
+        ((self.wire_delay_avg_ns * 1000.0) / tech.cycle_ps()).ceil().max(1.0) as u32
+    }
+
+    /// Plan a folded-Clos package: `chips` copies of `chip` in two rows
+    /// around the wiring channel (Fig 4a).
+    pub fn clos(chips: usize, chip: &ClosFloorplan, interposer: &InterposerTech) -> Result<Self> {
+        anyhow::ensure!(chips >= 1, "at least one chip");
+        if chips == 1 {
+            // Single-chip systems need no interposer channel.
+            return Ok(Self {
+                chips,
+                width_mm: chip.chip_w_mm,
+                height_mm: chip.chip_h_mm,
+                area_mm2: chip.chip_w_mm * chip.chip_h_mm,
+                channel_area_mm2: 0.0,
+                wire_delay_min_ns: 0.0,
+                wire_delay_max_ns: 0.0,
+                wire_delay_avg_ns: 0.0,
+            });
+        }
+        let per_row = chips.div_ceil(2);
+        let row_w = per_row as f64 * (chip.chip_w_mm + CHIP_GAP_MM);
+
+        // Each chip connects 2N off-chip links x 5 wires. The channel
+        // carries a common wire for every chip-to-chip connection
+        // (§4.4): its cross-section must fit at least twice one chip's
+        // wire pitch (the paper's per-pair bound) and, with many chips,
+        // the average cut occupancy of all common wires (C*W/2 common
+        // wires, half crossing an average cut).
+        let wires_per_chip = chip.io_links as f64 * interposer.wires_per_link as f64 / 2.0;
+        let wires_per_mm =
+            interposer.shielded_wires_per_mm() * interposer.wiring_layers as f64;
+        let pair_bound = 2.0 * wires_per_chip / wires_per_mm;
+        let cut_bound = chips as f64 * wires_per_chip / 4.0 / wires_per_mm;
+        let channel_h = pair_bound.max(cut_bound);
+
+        let height = 2.0 * chip.chip_h_mm + channel_h;
+        let width = row_w;
+        let area = width * height;
+        let channel_area = channel_h * width;
+
+        // Wire spans: adjacent chips cross the channel (height); the
+        // farthest pair also runs the row width. The average over
+        // uniformly-chosen chip pairs has E|dx| = row/3.
+        let min_len = channel_h;
+        let max_len = channel_h + (row_w - chip.chip_w_mm - CHIP_GAP_MM).max(0.0);
+        let avg_len = channel_h + (max_len - min_len) / 3.0;
+        let to_ns = |mm: f64| interposer.wire_delay_ps(mm) / 1000.0;
+
+        Ok(Self {
+            chips,
+            width_mm: width,
+            height_mm: height,
+            area_mm2: area,
+            channel_area_mm2: channel_area,
+            wire_delay_min_ns: to_ns(min_len),
+            wire_delay_max_ns: to_ns(max_len),
+            wire_delay_avg_ns: to_ns(avg_len),
+        })
+    }
+
+    /// Plan a 2D-mesh package: chips tiled in a grid, adjacent edges
+    /// bridged by short interposer wires (Fig 4b).
+    pub fn mesh(chips: usize, chip: &MeshFloorplan, interposer: &InterposerTech) -> Result<Self> {
+        anyhow::ensure!(chips >= 1, "at least one chip");
+        let grid = (chips as f64).sqrt().ceil() as usize;
+        let side = grid as f64 * (chip.chip_side_mm + CHIP_GAP_MM);
+        let cross_ns = interposer.wire_delay_ps(CHIP_GAP_MM) / 1000.0;
+        let (min, max, avg) =
+            if chips == 1 { (0.0, 0.0, 0.0) } else { (cross_ns, cross_ns, cross_ns) };
+        Ok(Self {
+            chips,
+            width_mm: side,
+            height_mm: side,
+            area_mm2: side * side,
+            channel_area_mm2: 0.0,
+            wire_delay_min_ns: min,
+            wire_delay_max_ns: max,
+            wire_delay_avg_ns: avg,
+        })
+    }
+}
+
+/// A fully packaged system: chip floorplan + interposer plan, with the
+/// derived inter-chip link latency in cycles.
+#[derive(Clone, Debug)]
+pub struct PackagedSystem {
+    /// Number of chips.
+    pub chips: usize,
+    /// Interposer plan.
+    pub interposer: InterposerPlan,
+    /// Inter-chip link latency contribution of the interposer run, in
+    /// chip cycles (average over chip pairs).
+    pub interposer_cycles: u32,
+}
+
+impl PackagedSystem {
+    /// Package a Clos system.
+    pub fn clos(
+        chips: usize,
+        chip: &ClosFloorplan,
+        chip_tech: &ChipTech,
+        ip_tech: &InterposerTech,
+    ) -> Result<Self> {
+        let interposer = InterposerPlan::clos(chips, chip, ip_tech)?;
+        let cycles = if chips > 1 { interposer.wire_cycles_avg(chip_tech) } else { 0 };
+        Ok(Self { chips, interposer, interposer_cycles: cycles })
+    }
+
+    /// Package a mesh system.
+    pub fn mesh(
+        chips: usize,
+        chip: &MeshFloorplan,
+        chip_tech: &ChipTech,
+        ip_tech: &InterposerTech,
+    ) -> Result<Self> {
+        let interposer = InterposerPlan::mesh(chips, chip, ip_tech)?;
+        let cycles = if chips > 1 { interposer.wire_cycles_avg(chip_tech) } else { 0 };
+        Ok(Self { chips, interposer, interposer_cycles: cycles })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{ClosSpec, MeshSpec};
+
+    fn clos_chip(system_tiles: usize, mem: u32) -> ClosFloorplan {
+        ClosFloorplan::plan(&ClosSpec::with_tiles(system_tiles), mem, &ChipTech::default())
+            .unwrap()
+    }
+
+    #[test]
+    fn clos_channel_grows_with_chips() {
+        let ip = InterposerTech::default();
+        let chip = clos_chip(1024, 128);
+        let p4 = InterposerPlan::clos(4, &chip, &ip).unwrap();
+        let p16 = InterposerPlan::clos(16, &chip, &ip).unwrap();
+        assert!(p16.channel_fraction() >= p4.channel_fraction() * 0.8);
+        assert!(p16.area_mm2 > p4.area_mm2 * 2.0);
+    }
+
+    #[test]
+    fn clos_channel_fraction_in_paper_band() {
+        // §5.1.3 quotes 2% (2 small chips) to 42% (16 large chips); the
+        // paper's absolute numbers do not reconcile with its own chip
+        // areas (see EXPERIMENTS.md), so we assert the qualitative
+        // claims: the share grows with chip count and the large-system
+        // share lands in the upper band.
+        let ip = InterposerTech::default();
+        let small = InterposerPlan::clos(2, &clos_chip(512, 64), &ip).unwrap();
+        let large = InterposerPlan::clos(16, &clos_chip(4096, 128), &ip).unwrap();
+        assert!(small.channel_fraction() < large.channel_fraction());
+        assert!(
+            (0.10..=0.50).contains(&large.channel_fraction()),
+            "large {}",
+            large.channel_fraction()
+        );
+    }
+
+    #[test]
+    fn clos_wire_delays_in_paper_band() {
+        // §5.1.3: inter-chip wire delays range ~1 ns to ~8 ns.
+        let ip = InterposerTech::default();
+        for chips in [2usize, 4, 8, 16] {
+            let sys = (chips * 256).max(512);
+            let p = InterposerPlan::clos(chips, &clos_chip(sys, 128), &ip).unwrap();
+            assert!(
+                p.wire_delay_min_ns > 0.2 && p.wire_delay_min_ns < 3.0,
+                "min {} at {chips} chips",
+                p.wire_delay_min_ns
+            );
+            assert!(
+                p.wire_delay_max_ns < 12.0,
+                "max {} at {chips} chips",
+                p.wire_delay_max_ns
+            );
+        }
+    }
+
+    #[test]
+    fn mesh_crossing_is_fast_and_constant() {
+        // §5.1.3: mesh inter-chip wire delay is a constant ~0.09 ns.
+        let ip = InterposerTech::default();
+        let chip =
+            MeshFloorplan::plan(&MeshSpec::with_tiles(1024), 128, &ChipTech::default()).unwrap();
+        for chips in [4usize, 16] {
+            let p = InterposerPlan::mesh(chips, &chip, &ip).unwrap();
+            assert!((p.wire_delay_avg_ns - 0.089).abs() < 0.01, "{}", p.wire_delay_avg_ns);
+        }
+    }
+
+    #[test]
+    fn packaged_cycles() {
+        let ct = ChipTech::default();
+        let ip = InterposerTech::default();
+        let sys = PackagedSystem::clos(4, &clos_chip(1024, 128), &ct, &ip).unwrap();
+        assert!(sys.interposer_cycles >= 1 && sys.interposer_cycles <= 8);
+        let single = PackagedSystem::clos(1, &clos_chip(256, 128), &ct, &ip).unwrap();
+        assert_eq!(single.interposer_cycles, 0);
+    }
+}

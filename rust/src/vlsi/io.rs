@@ -1,0 +1,103 @@
+//! Chip I/O model (paper §4.2–4.3, §5.0.1).
+//!
+//! Every off-chip link needs pads for its 5 wires (1 control + 4 data
+//! per direction at half the on-chip width); 40% of all package I/Os are
+//! power and ground (ITRS ORTC-4). Pads (45 x 225 um including driver
+//! circuitry) sit along chip edges: one edge for the folded Clos (the
+//! interposer wiring channel runs along that edge), all four for the
+//! mesh.
+
+use crate::tech::ChipTech;
+
+/// Wires (and hence signal pads) per off-chip link *per direction*.
+pub const PADS_PER_LINK: u32 = 5;
+
+/// I/O requirements of one chip.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IoPlan {
+    /// Off-chip links.
+    pub links: u32,
+    /// Signal pads (links x 5 wires).
+    pub signal_pads: u32,
+    /// Total pads including the power/ground fraction.
+    pub total_pads: u32,
+    /// Total pad + driver area, mm^2.
+    pub area_mm2: f64,
+}
+
+impl IoPlan {
+    /// Plan I/O for `links` off-chip links.
+    pub fn for_links(links: u32, tech: &ChipTech) -> Self {
+        let signal_pads = links * PADS_PER_LINK;
+        // signal = (1 - pg) * total  =>  total = signal / (1 - pg)
+        let total_pads =
+            (signal_pads as f64 / (1.0 - tech.power_ground_fraction)).ceil() as u32;
+        let area_mm2 = total_pads as f64 * tech.io_pad_area_mm2();
+        Self { links, signal_pads, total_pads, area_mm2 }
+    }
+
+    /// Width of a pad strip along one chip edge of height `edge_mm`
+    /// (pads stack in columns of depth 225 um).
+    pub fn strip_width_mm(&self, edge_mm: f64, tech: &ChipTech) -> f64 {
+        let pads_per_column = (edge_mm / (tech.io_pad_w_um * 1e-3)).floor().max(1.0);
+        let columns = (self.total_pads as f64 / pads_per_column).ceil();
+        columns * tech.io_pad_h_um * 1e-3
+    }
+
+    /// Off-chip links required by a folded-Clos chip of `n` tiles: `n`
+    /// core-switch uplinks plus `n` links from the contributed bank of
+    /// system-core switches (§4.2).
+    pub fn clos_links(n: usize) -> u32 {
+        2 * n as u32
+    }
+
+    /// Off-chip links required by a 2D-mesh chip of `n` tiles:
+    /// `4*sqrt(n) - 4` (§4.3).
+    pub fn mesh_links(n: usize) -> u32 {
+        let s = (n as f64).sqrt().round() as u32;
+        4 * s - 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clos_256_io_area_matches_paper() {
+        // §5.1.1: the 256-tile folded-Clos chip has 44.6 mm^2 of I/O.
+        let tech = ChipTech::default();
+        let plan = IoPlan::for_links(IoPlan::clos_links(256), &tech);
+        assert_eq!(plan.links, 512);
+        assert_eq!(plan.signal_pads, 2560);
+        // 2560 / 0.6 = 4267 pads -> 43.2 mm^2 (paper: 44.6, within 4%).
+        assert!((plan.area_mm2 - 44.6).abs() / 44.6 < 0.05, "area={}", plan.area_mm2);
+    }
+
+    #[test]
+    fn mesh_link_formula() {
+        assert_eq!(IoPlan::mesh_links(256), 60);
+        assert_eq!(IoPlan::mesh_links(1024), 124);
+    }
+
+    #[test]
+    fn mesh_io_much_smaller_than_clos() {
+        let tech = ChipTech::default();
+        let clos = IoPlan::for_links(IoPlan::clos_links(256), &tech);
+        let mesh = IoPlan::for_links(IoPlan::mesh_links(256), &tech);
+        assert!(mesh.area_mm2 < clos.area_mm2 / 6.0);
+    }
+
+    #[test]
+    fn strip_width_reasonable() {
+        let tech = ChipTech::default();
+        let plan = IoPlan::for_links(512, &tech);
+        let w = plan.strip_width_mm(9.0, &tech);
+        // 4267 pads / (9mm / 45um = 200 per column) = 22 columns
+        // x 0.225 mm = ~4.8 mm.
+        assert!(w > 4.0 && w < 6.0, "w={w}");
+        // halving the edge roughly doubles the strip width
+        let w2 = plan.strip_width_mm(4.5, &tech);
+        assert!(w2 > w * 1.8 && w2 < w * 2.2);
+    }
+}

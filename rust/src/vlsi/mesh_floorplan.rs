@@ -1,0 +1,198 @@
+//! 2D-mesh chip floorplan (paper §4.3, Fig 2b).
+//!
+//! Blocks of 16 tiles are arrayed in a grid; each block's switch sits at
+//! its corner and the blocks are separated by wiring channels that
+//! accommodate the switch footprint. Adjacent switches connect directly,
+//! so inter-switch wires span one block pitch (the paper's 1.7–3.5 mm).
+//! I/O pads ring the chip so the mesh extends directly to the
+//! neighbouring chips on the interposer.
+
+use anyhow::Result;
+
+use super::io::IoPlan;
+use super::LinkCycles;
+use crate::tech::{ChipTech, MemTech};
+use crate::topology::MeshSpec;
+
+/// A floorplanned 2D-mesh processing chip.
+#[derive(Clone, Debug)]
+pub struct MeshFloorplan {
+    /// Tiles on this chip.
+    pub tiles: usize,
+    /// Tile memory capacity (KB).
+    pub mem_kb: u32,
+    /// Side of one block (16 tiles), mm.
+    pub block_side_mm: f64,
+    /// Inter-block channel width (switch footprint), mm.
+    pub channel_w_mm: f64,
+    /// Core array extent (blocks + channels), mm.
+    pub array_side_mm: f64,
+    /// I/O ring width, mm.
+    pub io_ring_w_mm: f64,
+    /// Chip bounding box side, mm.
+    pub chip_side_mm: f64,
+    /// Total chip area, mm^2.
+    pub area_mm2: f64,
+    /// Switch area, mm^2.
+    pub switch_area_mm2: f64,
+    /// Wiring-channel area, mm^2.
+    pub wire_area_mm2: f64,
+    /// I/O pads + drivers area, mm^2.
+    pub io_area_mm2: f64,
+    /// Tile (processor + memory) area, mm^2.
+    pub tile_area_mm2: f64,
+    /// Tile -> block-switch wire, mm.
+    pub wire_tile_mm: f64,
+    /// Switch -> adjacent-switch wire (one block pitch), mm.
+    pub wire_hop_mm: f64,
+    /// Off-chip link count (4*sqrt(n) - 4).
+    pub io_links: u32,
+    /// Pipelined link latencies in cycles.
+    pub cycles: LinkCycles,
+}
+
+impl MeshFloorplan {
+    /// Floorplan one chip of a (possibly multi-chip) 2D-mesh system.
+    pub fn plan(spec: &MeshSpec, mem_kb: u32, tech: &ChipTech) -> Result<Self> {
+        spec.validate()?;
+        let bx_system = spec.blocks_x();
+        let bx = bx_system.min(spec.chip_blocks_x);
+        let n = bx * bx * spec.tiles_per_block;
+
+        let tile_area = tech.processor_area_mm2 + MemTech::Sram.area_for_kb(mem_kb as f64);
+        let block_area = spec.tiles_per_block as f64 * tile_area;
+        let block_side = block_area.sqrt();
+        let switch_side = tech.switch_area_mm2.sqrt();
+
+        // Blocks separated by channels the width of a switch (§4.3).
+        let channel_w = switch_side;
+        let array_side = bx as f64 * block_side + bx as f64 * channel_w;
+
+        let io_links = IoPlan::mesh_links(n);
+        let io = IoPlan::for_links(io_links, tech);
+        // Pads ring the chip: ring width from total pad area over the
+        // perimeter.
+        let perimeter = 4.0 * array_side;
+        let io_ring_w = if io.area_mm2 > 0.0 { io.area_mm2 / perimeter } else { 0.0 };
+
+        let chip_side = array_side + 2.0 * io_ring_w;
+        let area = chip_side * chip_side;
+
+        let wire_tile = 0.75 * block_side;
+        let wire_hop = block_side + channel_w;
+
+        let switch_area = (bx * bx) as f64 * tech.switch_area_mm2;
+        // Wire area: only the inter-switch and switch-to-I/O wires are
+        // accounted (§4.1.4); they run inside the block channels.
+        let wire_w = tech.wires_per_link as f64 * tech.shielded_pitch_mm();
+        let inter_switch_wires = 2.0 * (bx * (bx - 1)) as f64 * wire_w * wire_hop;
+        let io_wire_w = tech.wires_per_offchip_link as f64 * tech.shielded_pitch_mm();
+        let io_wires = io_links as f64 * io_wire_w * (io_ring_w + channel_w);
+        let wire_area = inter_switch_wires + io_wires;
+
+        let cycles = LinkCycles {
+            tile: tech.wire_cycles(wire_tile),
+            edge_core: 0,
+            core_pad: 1, // boundary switch sits adjacent to its pads
+            mesh_hop: tech.wire_cycles(wire_hop),
+        };
+
+        Ok(Self {
+            tiles: n,
+            mem_kb,
+            block_side_mm: block_side,
+            channel_w_mm: channel_w,
+            array_side_mm: array_side,
+            io_ring_w_mm: io_ring_w,
+            chip_side_mm: chip_side,
+            area_mm2: area,
+            switch_area_mm2: switch_area,
+            wire_area_mm2: wire_area.max(0.0),
+            io_area_mm2: io.area_mm2,
+            tile_area_mm2: n as f64 * tile_area,
+            wire_tile_mm: wire_tile,
+            wire_hop_mm: wire_hop,
+            io_links,
+            cycles,
+        })
+    }
+
+    /// Interconnect (switches + channels) share of the die.
+    pub fn interconnect_fraction(&self) -> f64 {
+        (self.switch_area_mm2 + self.wire_area_mm2) / self.area_mm2
+    }
+
+    /// True if the chip falls in the economical band (§5.0.1).
+    pub fn is_economical(&self, tech: &ChipTech) -> bool {
+        self.area_mm2 >= tech.econ_min_mm2 && self.area_mm2 <= tech.econ_max_mm2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(tiles: usize, mem_kb: u32) -> MeshFloorplan {
+        let tech = ChipTech::default();
+        MeshFloorplan::plan(&MeshSpec::with_tiles(tiles), mem_kb, &tech).unwrap()
+    }
+
+    #[test]
+    fn paper_anchor_256_tiles_128kb() {
+        // §5.1.1: the 256-tile 2D-mesh chip occupies 87.9 mm^2.
+        let fp = plan(256, 128);
+        assert!((fp.area_mm2 - 87.9).abs() / 87.9 < 0.12, "area={}", fp.area_mm2);
+    }
+
+    #[test]
+    fn hop_wires_in_paper_band() {
+        // §5.1.1: inter-switch wires 1.7–3.5 mm, single cycle.
+        for &mem in &[64u32, 128, 256, 512] {
+            let fp = plan(256, mem);
+            assert!(
+                fp.wire_hop_mm >= 1.6 && fp.wire_hop_mm <= 3.8,
+                "hop wire {} at {mem} KB",
+                fp.wire_hop_mm
+            );
+            assert_eq!(fp.cycles.mesh_hop, 1);
+        }
+    }
+
+    #[test]
+    fn interconnect_share_small() {
+        // §5.1.2: mesh interconnect ~2-3% of economical dies (our wire
+        // accounting is a little leaner; assert the <=5% claim and that
+        // it sits well below the Clos 5-8% band).
+        for &mem in &[128u32, 256] {
+            let fp = plan(256, mem);
+            let f = fp.interconnect_fraction();
+            assert!((0.005..=0.05).contains(&f), "interconnect {f} at {mem} KB");
+        }
+    }
+
+    #[test]
+    fn clos_chip_larger_than_mesh() {
+        // §5.1.1: the Clos chip needs 13-43% more area than the mesh
+        // with the same tiles and memory.
+        let tech = ChipTech::default();
+        for &mem in &[64u32, 128, 256] {
+            let clos = crate::vlsi::ClosFloorplan::plan(
+                &crate::topology::ClosSpec::with_tiles(256),
+                mem,
+                &tech,
+            )
+            .unwrap();
+            let mesh = plan(256, mem);
+            let ratio = clos.area_mm2 / mesh.area_mm2;
+            // Paper quotes +13-43% in §5.1.1 but its own anchor pair
+            // (132.9 vs 87.9 mm^2) is +51%; accept the union.
+            assert!((1.05..=1.75).contains(&ratio), "clos/mesh = {ratio} at {mem} KB");
+        }
+    }
+
+    #[test]
+    fn multichip_spec_plans_single_chip() {
+        let fp = plan(1024, 128);
+        assert_eq!(fp.tiles, 256, "chip holds one 4x4-block tile quadrant");
+    }
+}

@@ -1,0 +1,33 @@
+//! VLSI implementation model (paper §4): chip floorplans for both
+//! networks, the I/O pad model, and the silicon-interposer packaging
+//! model. Produces the area figures (Figs 5–7) and the per-link-class
+//! wire lengths/cycle counts the latency model consumes.
+//!
+//! The model follows §4.1's simplifications: square component
+//! footprints, half-shielded repeated wires routed in dedicated
+//! channels, pads with fixed driver circuitry along the chip edge, and
+//! chip area as the smallest enclosing rectangle.
+
+pub mod clos_floorplan;
+pub mod interposer;
+pub mod io;
+pub mod mesh_floorplan;
+
+pub use clos_floorplan::ClosFloorplan;
+pub use interposer::{InterposerPlan, PackagedSystem};
+pub use io::IoPlan;
+pub use mesh_floorplan::MeshFloorplan;
+
+/// Per-link-class wire latencies of one floorplanned chip, in cycles at
+/// the chip clock (the contract between the VLSI model and `netmodel`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LinkCycles {
+    /// Tile <-> edge switch (Clos) or tile <-> block switch (mesh).
+    pub tile: u32,
+    /// Clos stage-1 <-> stage-2 (on-chip H-tree run). 0 for meshes.
+    pub edge_core: u32,
+    /// On-chip portion of an inter-chip link: switch <-> I/O pad.
+    pub core_pad: u32,
+    /// Mesh hop between adjacent blocks. 0 for Clos.
+    pub mesh_hop: u32,
+}

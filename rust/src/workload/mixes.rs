@@ -1,0 +1,80 @@
+//! Instruction-mix data (paper Fig 8).
+//!
+//! The paper characterises sequential programs by the proportions of
+//! non-memory, local-memory and global-memory instructions. Fig 8 gives
+//! the two benchmark mixes; §6.2 fixes local accesses at 20% for the
+//! synthetic sweeps, and §6.1 notes global accesses constitute 10–20%
+//! of executed instructions across the benchmarks.
+
+/// A (non-memory, local, global) instruction mix.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct InstructionMix {
+    /// Fraction of non-memory instructions (arithmetic, branches).
+    pub non_memory: f64,
+    /// Fraction of local-memory instructions (program, stack, constants).
+    pub local: f64,
+    /// Fraction of global-memory instructions (static data, heap).
+    pub global: f64,
+}
+
+impl InstructionMix {
+    /// Mix with the given local/global fractions.
+    pub fn new(local: f64, global: f64) -> Self {
+        assert!(local >= 0.0 && global >= 0.0 && local + global <= 1.0);
+        Self { non_memory: 1.0 - local - global, local, global }
+    }
+
+    /// Validate the fractions sum to 1.
+    pub fn is_valid(&self) -> bool {
+        (self.non_memory + self.local + self.global - 1.0).abs() < 1e-9
+            && self.non_memory >= 0.0
+            && self.local >= 0.0
+            && self.global >= 0.0
+    }
+}
+
+/// The Dhrystone benchmark mix (Fig 8a): the higher-global of the two
+/// benchmarks (§7.2), read from the figure as 20% global, 20% local.
+pub const DHRYSTONE_MIX: InstructionMix =
+    InstructionMix { non_memory: 0.60, local: 0.20, global: 0.20 };
+
+/// The compiler benchmark mix (Fig 8b): ~10% global, 20% local.
+pub const COMPILER_MIX: InstructionMix =
+    InstructionMix { non_memory: 0.70, local: 0.20, global: 0.10 };
+
+/// The Fig 11 sweep: global fraction 0..=50% with local fixed at 20%.
+pub fn fig11_grid(points: usize) -> Vec<InstructionMix> {
+    (0..points)
+        .map(|i| {
+            let g = 0.5 * i as f64 / (points - 1).max(1) as f64;
+            InstructionMix::new(0.20, g)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn benchmark_mixes_valid() {
+        assert!(DHRYSTONE_MIX.is_valid());
+        assert!(COMPILER_MIX.is_valid());
+        // §6.1: global accesses are 10-20% in the benchmarks.
+        for m in [DHRYSTONE_MIX, COMPILER_MIX] {
+            assert!((0.10..=0.20).contains(&m.global));
+            assert!((m.local - 0.20).abs() < 1e-9);
+        }
+        // §7.2: Dhrystone has the higher global proportion.
+        assert!(DHRYSTONE_MIX.global > COMPILER_MIX.global);
+    }
+
+    #[test]
+    fn fig11_grid_spans_0_to_50() {
+        let g = fig11_grid(11);
+        assert_eq!(g.len(), 11);
+        assert!((g[0].global - 0.0).abs() < 1e-12);
+        assert!((g[10].global - 0.5).abs() < 1e-12);
+        assert!(g.iter().all(|m| m.is_valid() && (m.local - 0.2).abs() < 1e-12));
+    }
+}

@@ -1,0 +1,13 @@
+//! Benchmark workloads (paper §6.2, Fig 8).
+//!
+//! * [`mixes`] — the instruction-mix points of Fig 8 (Dhrystone and the
+//!   compiler benchmark) and the Fig 11 sweep grid.
+//! * [`synthetic`] — the synthetic instruction-sequence generator: a
+//!   program with a target (non-memory, local, global) mix for either
+//!   memory backend, plus the closed-form slowdown predictions.
+
+pub mod mixes;
+pub mod synthetic;
+
+pub use mixes::{InstructionMix, COMPILER_MIX, DHRYSTONE_MIX};
+pub use synthetic::{predict_slowdown, SyntheticProgram};

@@ -1,0 +1,106 @@
+//! Integration across the whole modelling stack: floorplan -> latency
+//! model -> emulation machine -> interpreter -> paper claims.
+
+use memclos::cc::{compile, corpus, Backend};
+use memclos::emulation::{EmulationSetup, SequentialMachine, TopologyKind};
+use memclos::isa::interp::{DirectMemory, EmulatedChannelMemory, Machine};
+use memclos::workload::{predict_slowdown, SyntheticProgram, DHRYSTONE_MIX};
+
+/// §7.2 headline: executing a general-purpose program against the
+/// emulated memory is a factor ~2-3 slower than the sequential machine,
+/// measured end-to-end through the interpreter (not the closed form).
+#[test]
+fn headline_slowdown_measured_by_execution() {
+    let seq = SequentialMachine::with_measured_dram(1);
+    let k = 1023usize;
+    let setup = EmulationSetup::default_tech(TopologyKind::Clos, 1024, 128, k).unwrap();
+    let space = setup.map.space_words();
+    let emu_lat = setup.expected_latency();
+
+    let prog = SyntheticProgram::generate(DHRYSTONE_MIX, 30_000, space, 11);
+
+    let mut dmem = DirectMemory::new(seq, space);
+    let mut dm = Machine::new(&mut dmem, 64);
+    let dstats = dm.run(&prog.direct).unwrap();
+
+    let mut emem = EmulatedChannelMemory::new(setup);
+    let mut em = Machine::new(&mut emem, 64);
+    let estats = em.run(&prog.emulated).unwrap();
+
+    let slowdown = estats.cycles / dstats.cycles;
+    assert!(
+        slowdown > 1.5 && slowdown < 3.3,
+        "measured slowdown {slowdown} outside the paper band"
+    );
+
+    // The closed-form prediction and the measured execution agree
+    // (the executed mix differs slightly from the target because of
+    // address-setup instructions; allow 15%).
+    let (_, _, g) = dstats.mix();
+    let mix = memclos::workload::InstructionMix::new(0.2 / (1.0 + 0.2), g);
+    let predicted = predict_slowdown(&mix, emu_lat, seq.dram_ns);
+    let rel = (slowdown - predicted).abs() / predicted;
+    assert!(rel < 0.15, "measured {slowdown} vs predicted {predicted}");
+}
+
+/// Every corpus program computes identical results on both machines at
+/// several design points, and the emulated run is never faster than
+/// free (sanity: slowdown >= 0.5) nor absurd (<= 6x).
+#[test]
+fn corpus_runs_at_multiple_design_points() {
+    let seq = SequentialMachine::with_measured_dram(1);
+    for (kind, tiles, k) in [
+        (TopologyKind::Clos, 256usize, 255usize),
+        (TopologyKind::Clos, 4096, 4095),
+        (TopologyKind::Mesh, 1024, 1023),
+    ] {
+        for prog in [corpus::SUM_SQUARES, corpus::SIEVE, corpus::HASHTAB] {
+            let direct = compile(prog.source, Backend::Direct).unwrap();
+            let emulated = compile(prog.source, Backend::Emulated).unwrap();
+
+            let mut dmem = DirectMemory::new(seq, 1 << 22);
+            let mut dm = Machine::new(&mut dmem, 1 << 16);
+            let ds = dm.run(&direct.code).unwrap();
+            let dres = dm.reg(0);
+
+            let setup = EmulationSetup::default_tech(kind, tiles, 128, k).unwrap();
+            let mut emem = EmulatedChannelMemory::new(setup);
+            let mut em = Machine::new(&mut emem, 1 << 16);
+            let es = em.run(&emulated.code).unwrap();
+            let eres = em.reg(0);
+
+            assert_eq!(dres, eres, "{} at {kind:?}/{tiles}", prog.name);
+            let slowdown = es.cycles / ds.cycles;
+            assert!(
+                (0.5..=6.0).contains(&slowdown),
+                "{} at {kind:?}/{tiles}: slowdown {slowdown}",
+                prog.name
+            );
+        }
+    }
+}
+
+/// Small emulations (single switch) BEAT the sequential machine —
+/// the §7.2 "speedup up to 16 tiles" observation, end to end.
+#[test]
+fn small_emulation_speedup_end_to_end() {
+    let seq = SequentialMachine::with_measured_dram(1);
+    let setup = EmulationSetup::default_tech(TopologyKind::Clos, 1024, 128, 15).unwrap();
+    let space = setup.map.space_words();
+    let prog = SyntheticProgram::generate(DHRYSTONE_MIX, 20_000, space, 5);
+
+    let mut dmem = DirectMemory::new(seq, space);
+    let mut dm = Machine::new(&mut dmem, 64);
+    let dstats = dm.run(&prog.direct).unwrap();
+
+    let mut emem = EmulatedChannelMemory::new(setup);
+    let mut em = Machine::new(&mut emem, 64);
+    let estats = em.run(&prog.emulated).unwrap();
+
+    assert!(
+        estats.cycles < dstats.cycles,
+        "single-switch emulation should beat DRAM ({} vs {})",
+        estats.cycles,
+        dstats.cycles
+    );
+}

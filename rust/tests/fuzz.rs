@@ -1,0 +1,111 @@
+//! Failure injection / fuzzing: malformed inputs must produce errors,
+//! never panics, across the public front ends (config parser, miniC
+//! compiler, instruction decoder, interpreter).
+
+use memclos::cc::{compile, Backend};
+use memclos::config::Doc;
+use memclos::emulation::{EmulationSetup, SequentialMachine, TopologyKind};
+use memclos::isa::interp::{DirectMemory, Machine};
+use memclos::isa::{decode, Inst};
+use memclos::util::prop::{forall, Config};
+use memclos::util::rng::Rng;
+
+fn random_text(r: &mut Rng, alphabet: &[u8], max_len: usize) -> String {
+    let len = r.below(max_len as u64 + 1) as usize;
+    (0..len).map(|_| *r.choose(alphabet) as char).collect()
+}
+
+#[test]
+fn config_parser_never_panics() {
+    let alphabet: Vec<u8> =
+        b"abz_09.=[]#\" \n\t-+xtrue".iter().copied().collect();
+    forall(
+        Config { cases: 2000, base_seed: 0xF0 },
+        |r| random_text(r, &alphabet, 120),
+        |text| {
+            let _ = Doc::parse(text); // Ok or Err, never panic
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn minic_frontend_never_panics() {
+    let alphabet: Vec<u8> =
+        b"fnvarwhileifreturnglobal(){}[];=+-*/%<>&|^ \n09azmain,".iter().copied().collect();
+    forall(
+        Config { cases: 1500, base_seed: 0xF1 },
+        |r| random_text(r, &alphabet, 200),
+        |src| {
+            let _ = compile(src, Backend::Direct);
+            let _ = compile(src, Backend::Emulated);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn decoder_never_panics_on_random_words() {
+    forall(
+        Config { cases: 5000, base_seed: 0xF2 },
+        |r| [r.next_u64() as u32, r.next_u64() as u32],
+        |words| {
+            let _ = decode(words);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn interpreter_contains_random_programs() {
+    // Random instruction streams either halt, error out, or hit the
+    // step limit — never panic, never escape the sandboxed memories.
+    forall(
+        Config { cases: 300, base_seed: 0xF3 },
+        |r| {
+            let n = 4 + r.below(60) as usize;
+            let mut prog: Vec<Inst> = (0..n).map(|_| random_inst(r)).collect();
+            prog.push(Inst::Halt);
+            prog
+        },
+        |prog| {
+            let mut mem = DirectMemory::new(SequentialMachine::paper_figures(false), 1 << 16);
+            let mut m = Machine::new(&mut mem, 256);
+            m.max_steps = 20_000;
+            let _ = m.run(prog);
+            Ok(())
+        },
+    );
+}
+
+fn random_inst(r: &mut Rng) -> Inst {
+    let reg = |r: &mut Rng| r.below(16) as u8;
+    match r.below(16) {
+        0 => Inst::Add { d: reg(r), a: reg(r), b: reg(r) },
+        1 => Inst::Sub { d: reg(r), a: reg(r), b: reg(r) },
+        2 => Inst::Mul { d: reg(r), a: reg(r), b: reg(r) },
+        3 => Inst::AddI { d: r.below(8) as u8, a: reg(r), imm: r.range_i64(-1000, 1000) as i32 },
+        4 => Inst::LoadImm { d: r.below(8) as u8, imm: r.range_i64(-70000, 70000) as i32 },
+        5 => Inst::Jump { offset: r.range_i64(-20, 20) as i32 },
+        6 => Inst::BranchZ { c: r.below(8) as u8, offset: r.range_i64(-20, 20) as i32 },
+        7 => Inst::BranchNZ { c: r.below(8) as u8, offset: r.range_i64(-20, 20) as i32 },
+        8 => Inst::LoadLocal { d: r.below(8) as u8, a: reg(r), off: r.range_i64(-10, 300) as i32 },
+        9 => Inst::StoreLocal { s: r.below(8) as u8, a: reg(r), off: r.range_i64(-10, 300) as i32 },
+        10 => Inst::LoadGlobal { d: reg(r), a: reg(r) },
+        11 => Inst::StoreGlobal { s: reg(r), a: reg(r) },
+        12 => Inst::Send { chan: 0, src: reg(r) },
+        13 => Inst::Recv { chan: 0, dest: reg(r) },
+        14 => Inst::Call { target: r.below(60) as u32 },
+        _ => Inst::Ret,
+    }
+}
+
+#[test]
+fn emulation_setup_rejects_bad_points_gracefully() {
+    // k out of range, non-square meshes, non-power-of-two capacities.
+    assert!(EmulationSetup::default_tech(TopologyKind::Clos, 1024, 128, 0).is_err());
+    assert!(EmulationSetup::default_tech(TopologyKind::Clos, 1024, 128, 1024).is_err());
+    assert!(EmulationSetup::default_tech(TopologyKind::Mesh, 128, 128, 64).is_err());
+    assert!(EmulationSetup::default_tech(TopologyKind::Clos, 1000, 128, 64).is_err());
+    assert!(EmulationSetup::default_tech(TopologyKind::Clos, 1024, 96, 64).is_err());
+}

@@ -1,0 +1,80 @@
+//! Integration: the AOT XLA kernel and the native rust model agree
+//! exactly across randomly-drawn design points (the property-test
+//! version of `memclos selfcheck`).
+//!
+//! Skipped gracefully when `artifacts/` has not been built.
+
+use memclos::emulation::{EmulationSetup, TopologyKind};
+use memclos::runtime::{ArtifactSet, LatencyEngine};
+use memclos::util::rng::Rng;
+
+fn engine() -> Option<(ArtifactSet, LatencyEngine)> {
+    let set = ArtifactSet::new().ok()?;
+    if !set.available("latency_batch_4096") {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    let engine = LatencyEngine::load(&set, 4096).ok()?;
+    Some((set, engine))
+}
+
+#[test]
+fn xla_equals_native_over_random_design_points() {
+    let Some((_set, engine)) = engine() else { return };
+    let mut rng = Rng::new(0xFACE);
+    let mut native = Vec::new();
+    let mut addrs = vec![0i32; 4096];
+
+    for case in 0..24 {
+        let kind = if rng.chance(0.5) { TopologyKind::Clos } else { TopologyKind::Mesh };
+        let tiles = match kind {
+            TopologyKind::Clos => *rng.choose(&[64usize, 256, 512, 1024, 2048, 4096]),
+            TopologyKind::Mesh => *rng.choose(&[64usize, 256, 1024, 4096]),
+        };
+        let mem = *rng.choose(&[64u32, 128, 256, 512]);
+        let k = 1 + rng.below((tiles - 1) as u64) as usize;
+        let setup = EmulationSetup::default_tech(kind, tiles, mem, k)
+            .unwrap_or_else(|e| panic!("case {case}: setup {kind:?}/{tiles}/{mem}/{k}: {e}"));
+        let params = setup.kernel_params();
+        rng.fill_addresses(setup.map.space_words(), &mut addrs);
+
+        let (xla, xla_mean) = engine.run(&addrs, &params).expect("xla run");
+        setup.native_batch(&addrs, &mut native);
+
+        for i in 0..addrs.len() {
+            assert_eq!(
+                xla[i], native[i],
+                "case {case} ({kind:?} tiles={tiles} mem={mem} k={k}) addr {}: xla {} native {}",
+                addrs[i], xla[i], native[i]
+            );
+        }
+        let native_mean = native.iter().map(|&x| x as f64).sum::<f64>() / native.len() as f64;
+        assert!(
+            (xla_mean as f64 - native_mean).abs() < 1e-3,
+            "case {case}: mean mismatch {xla_mean} vs {native_mean}"
+        );
+    }
+}
+
+#[test]
+fn xla_mean_matches_exact_expectation() {
+    let Some((set, _)) = engine() else { return };
+    let engine = LatencyEngine::load(&set, 65_536).expect("65k artifact");
+    let setup = EmulationSetup::default_tech(TopologyKind::Clos, 1024, 128, 1023).unwrap();
+    let params = setup.kernel_params();
+    let exact = setup.expected_latency();
+
+    let mut rng = Rng::new(3);
+    let mut addrs = vec![0i32; 65_536];
+    let mut sum = 0.0;
+    for _ in 0..4 {
+        rng.fill_addresses(setup.map.space_words(), &mut addrs);
+        let (_, mean) = engine.run(&addrs, &params).unwrap();
+        sum += mean as f64;
+    }
+    let mc = sum / 4.0;
+    assert!(
+        (mc - exact).abs() / exact < 0.005,
+        "MC {mc} vs exact {exact} (262k samples should be within 0.5%)"
+    );
+}

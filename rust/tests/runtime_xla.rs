@@ -1,0 +1,120 @@
+//! Integration: the AOT artifacts produced by `make artifacts` load,
+//! compile and execute on the PJRT CPU client from rust, and the numbers
+//! agree with the kernel contract.
+//!
+//! Requires `artifacts/` to exist (run `make artifacts` first); the tests
+//! are skipped with a message otherwise so `cargo test` stays green in a
+//! fresh checkout.
+
+use memclos::netmodel::KernelParams;
+use memclos::runtime::{ArtifactSet, LatencyEngine};
+
+fn params_same_edge() -> KernelParams {
+    // 15 memory tiles on the client's edge switch, 4 KiB-word tiles.
+    let mut ip = [0i32; 16];
+    let mut fp = [0f32; 16];
+    ip[0] = 0; // clos
+    ip[1] = 12; // log2 words/tile
+    ip[2] = 15; // k
+    ip[3] = 4; // log2 g0
+    ip[4] = 8; // log2 g1
+    ip[5] = 4; // mesh block (unused)
+    ip[6] = 8;
+    ip[7] = 4;
+    ip[10] = 1024; // system tiles
+    fp[0] = 1.0; // t_tile
+    fp[1] = 2.0; // t_switch
+    fp[2] = 5.0; // t_open
+    fp[3] = 1.0; // c_cont
+    fp[4] = 0.0; // ser intra
+    fp[5] = 2.0; // ser inter
+    fp[6] = 1.0; // t_mem
+    fp[7] = 2.0; // link edge-core
+    fp[8] = 8.0; // link core-sys
+    fp[9] = 1.0; // mesh link
+    fp[10] = 1.0; // mesh cross extra
+    KernelParams { iparams: ip, fparams: fp }
+}
+
+fn artifacts_ready() -> Option<ArtifactSet> {
+    let set = ArtifactSet::new().expect("PJRT CPU client");
+    if set.available("latency_batch_4096") {
+        Some(set)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn latency_batch_same_edge_constant() {
+    let Some(set) = artifacts_ready() else { return };
+    let engine = LatencyEngine::load(&set, 4096).expect("load latency_batch_4096");
+    let params = params_same_edge();
+    // All addresses map to tiles 1..=15 on the client's switch: d=0,
+    // one_way = 2*1 + 0 + 1*(5+2) = 9, round trip = 19 cycles.
+    let addresses: Vec<i32> = (0..4096).map(|i| (i * 13) % (15 << 12)).collect();
+    let (lat, mean) = engine.run(&addresses, &params).expect("execute");
+    assert_eq!(lat.len(), 4096);
+    assert!(lat.iter().all(|&l| l == 19.0), "expected constant 19.0");
+    assert!((mean - 19.0).abs() < 1e-5, "mean={mean}");
+}
+
+#[test]
+fn latency_batch_interchip_constant() {
+    let Some(set) = artifacts_ready() else { return };
+    let engine = LatencyEngine::load(&set, 4096).expect("load");
+    let mut params = params_same_edge();
+    params.iparams[2] = 1023; // k: spread over 4 chips
+    // Addresses on tiles >= 256 (other chips): d=4,
+    // one_way = 2 + 2 + 5*(5+2) + (2*2 + 2*8) = 59, rt = 119.
+    let base: i64 = 256 << 12;
+    let addresses: Vec<i32> =
+        (0..4096).map(|i| (base + (i * 7919) % ((1023i64 - 256) << 12)) as i32).collect();
+    let (lat, _) = engine.run(&addresses, &params).expect("execute");
+    assert!(lat.iter().all(|&l| l == 119.0), "expected constant 119.0, got {}", lat[0]);
+}
+
+#[test]
+fn run_any_pads_and_averages() {
+    let Some(set) = artifacts_ready() else { return };
+    let engine = LatencyEngine::load(&set, 4096).expect("load");
+    let params = params_same_edge();
+    let addresses: Vec<i32> = (0..5000).map(|i| (i * 31) % (15 << 12)).collect();
+    let (lat, mean) = engine.run_any(&addresses, &params).expect("execute");
+    assert_eq!(lat.len(), 5000);
+    assert!((mean - 19.0).abs() < 1e-9);
+}
+
+#[test]
+fn mix_sweep_artifact_executes() {
+    let Some(set) = artifacts_ready() else { return };
+    if !set.available("mix_sweep_256") {
+        return;
+    }
+    let art = set.load("mix_sweep_256").expect("load mix_sweep_256");
+    let m = 256usize;
+    let g: Vec<f32> = (0..m).map(|i| 0.5 * i as f32 / m as f32).collect();
+    let l = vec![0.2f32; m];
+    let lat_emu = vec![119.0f32; m];
+    let lat_seq = vec![35.0f32];
+    let outs = art
+        .execute(&[
+            xla::Literal::vec1(&g),
+            xla::Literal::vec1(&l),
+            xla::Literal::vec1(&lat_emu),
+            xla::Literal::vec1(&lat_seq),
+        ])
+        .expect("execute");
+    assert_eq!(outs.len(), 3);
+    let slowdown = outs[0].to_vec::<f32>().expect("slowdown");
+    // g=0 -> parity; monotone nondecreasing in g
+    assert!((slowdown[0] - 1.0).abs() < 1e-6);
+    for w in slowdown.windows(2) {
+        assert!(w[1] >= w[0] - 1e-6);
+    }
+    // paper §7.2 band: generous 1.5-2.5 worst-case at g=0.5... our point
+    // check: at g=0.15 (dhrystone-ish) slowdown is within 2-3.
+    let i = (0.15 / 0.5 * m as f64) as usize;
+    assert!(slowdown[i] > 1.5 && slowdown[i] < 3.5, "slowdown={}", slowdown[i]);
+}
