@@ -1,29 +1,44 @@
-//! Bench: the Monte-Carlo latency hot path — AOT XLA kernel vs the
-//! native rust evaluation, across batch sizes (the §Perf batch-size
-//! sweep in EXPERIMENTS.md comes from this bench).
+//! Bench: the emulated-memory access hot path across every layer that
+//! serves it — rank-LUT batch vs the seed's route-per-access
+//! reference, the exact closed form, the DES (next-hop + port-arena
+//! walk), the interpreter's channel-protocol loads, and the AOT XLA
+//! kernel across lowered batch sizes.
+//!
+//! Writes the machine-readable perf trajectory to `BENCH_hotpath.json`
+//! (override the path with `--json PATH`; schema in
+//! [`memclos::util::bench::Bench::to_json`]) and then enforces the
+//! throughput floors: the LUT path must be >= 10x the routed reference
+//! at the 65,536-address batch on the 4,096-tile Clos design point.
+//!
+//! Quick smoke mode: set `MEMCLOS_BENCH_QUICK=1` (what
+//! `rust/scripts/bench_hotpath.sh` does).
 
-use memclos::emulation::{EmulationSetup, TopologyKind};
+use std::path::PathBuf;
+
+use memclos::figures::hotpath;
 use memclos::runtime::{ArtifactSet, LatencyEngine};
-use memclos::util::bench::{black_box, Bench};
+use memclos::util::bench::black_box;
 use memclos::util::rng::Rng;
 
+fn json_path() -> PathBuf {
+    let args: Vec<String> = std::env::args().collect();
+    for w in args.windows(2) {
+        if w[0] == "--json" {
+            return PathBuf::from(&w[1]);
+        }
+    }
+    PathBuf::from("BENCH_hotpath.json")
+}
+
 fn main() {
-    let setup = EmulationSetup::default_tech(TopologyKind::Clos, 4096, 128, 4095).unwrap();
-    let params = setup.kernel_params();
+    let setup = hotpath::design_point().unwrap();
     let space = setup.map.space_words();
+    let params = setup.kernel_params();
     let mut rng = Rng::new(42);
 
-    let mut b = Bench::new("hotpath");
-
-    // Native evaluation at the default batch.
-    let mut addrs = vec![0i32; 65_536];
-    rng.fill_addresses(space, &mut addrs);
-    let mut out = Vec::new();
-    b.iter("native-65536", || {
-        setup.native_batch(&addrs, &mut out);
-        black_box(out.len())
-    });
-    b.iter("exact-closed-form", || black_box(setup.expected_latency()));
+    // Native + DES + interpreter paths (shared with `memclos
+    // bench-hotpath`).
+    let mut b = hotpath::measure(&setup);
 
     // XLA engine across lowered batch sizes.
     match ArtifactSet::new() {
@@ -38,12 +53,14 @@ fn main() {
                 let mut buf = vec![0i32; batch];
                 rng.fill_addresses(space, &mut buf);
                 let label = format!("xla-{batch}");
-                b.iter(&label, || {
+                b.iter_items(&label, batch as u64, || {
                     let (_, mean) = engine.run(&buf, &params).unwrap();
                     black_box(mean)
                 });
                 let label = format!("xla-mean-{batch}");
-                b.iter(&label, || black_box(engine.run_mean(&buf, &params).unwrap()));
+                b.iter_items(&label, batch as u64, || {
+                    black_box(engine.run_mean(&buf, &params).unwrap())
+                });
             }
         }
         Err(e) => eprintln!("(no PJRT client: {e})"),
@@ -54,11 +71,18 @@ fn main() {
     // Throughput summary: addresses per second per path.
     println!("\nthroughput (addresses/s):");
     for m in b.results() {
-        let batch: f64 = match m.name.as_str() {
-            "native-65536" => 65_536.0,
-            s if s.starts_with("xla-") => s[4..].parse().unwrap_or(0.0),
-            _ => continue,
-        };
-        println!("  {:<14} {:>12.0}", m.name, batch / m.median.as_secs_f64());
+        if m.items > 0 {
+            println!("  {:<16} {:>14.0}", m.name, m.throughput());
+        }
     }
+    println!("\n{}", hotpath::render(&setup, &b));
+
+    // Perf trajectory lands on disk before the assertions run, so a
+    // regression still records its numbers.
+    let path = json_path();
+    b.write_json(&path).expect("write bench json");
+    println!("wrote {}", path.display());
+
+    hotpath::assert_hotpath(&b).expect("hot-path throughput floors");
+    println!("throughput assertions OK (LUT {:.1}x routed)", hotpath::lut_speedup(&b).unwrap());
 }

@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Quick-smoke run of the access-hot-path bench; writes the
+# machine-readable perf trajectory to BENCH_hotpath.json at the repo
+# root so successive PRs can diff throughput.
+#
+# Schema: {"bench": "hotpath",
+#          "results": [{"name", "median_ns", "addrs_per_s"}]}
+#
+# Usage: rust/scripts/bench_hotpath.sh [--full]
+#   --full   use the full measurement budget instead of the smoke one
+
+set -euo pipefail
+
+RUST_DIR="$(cd "$(dirname "$0")/.." && pwd)"
+REPO_ROOT="$(cd "$RUST_DIR/.." && pwd)"
+OUT="$REPO_ROOT/BENCH_hotpath.json"
+
+if [[ "${1:-}" != "--full" ]]; then
+    export MEMCLOS_BENCH_QUICK=1
+fi
+
+cd "$RUST_DIR"
+
+# Prefer the bench binary (covers the XLA paths too); fall back to the
+# CLI subcommand, which measures the native/DES/interpreter paths only.
+if cargo bench --bench hotpath -- --json "$OUT"; then
+    :
+else
+    echo "(cargo bench failed; falling back to the CLI bench-hotpath)" >&2
+    cargo run --release --bin memclos -- bench-hotpath --out "$OUT"
+fi
+
+echo "perf trajectory written to $OUT"

@@ -11,6 +11,31 @@
 //!    addresses (closed form, O(k));
 //! 3. `kernel_params` — the contract-v1 encoding executed by
 //!    [`crate::runtime::LatencyEngine`] on the AOT artifact.
+//!
+//! # Hot path
+//!
+//! An emulation has only `k` distinct per-rank latencies, so `build`
+//! materialises a rank-indexed LUT (`rank_latency`, `Vec<f64>` of
+//! length `k`) via [`LatencyModel::access_lut`] and stores its mean:
+//!
+//! * `access_cycles(addr)` is one shift + one dense-array load
+//!   (`rank_latency[addr >> log2_words_per_tile]`) — no route is ever
+//!   recomputed per access;
+//! * `native_batch` / `mc_latency` are tight loops over that load (the
+//!   batch loop autovectorises);
+//! * `expected_latency` returns the stored mean (computed with the
+//!   same left-to-right summation as the LUT, so it is bit-identical
+//!   to the seed's loop).
+//!
+//! `access_cycles_routed` keeps the seed's route-per-access evaluation
+//! as the reference oracle: `lut_matches_routed_reference` proves the
+//! two agree bit-for-bit over random design points, and the hotpath
+//! bench measures the speedup between them.
+//!
+//! Invariant: `rank_latency[r] == model.access(&topo, map.client,
+//! map.tile_of_rank(r))` for every rank `r`; any mutation of `topo`,
+//! `map` or `model` requires rebuilding the LUT (no such mutation is
+//! exposed — design points are immutable once built).
 
 use anyhow::Result;
 
@@ -54,6 +79,11 @@ pub struct EmulationSetup {
     pub model: LatencyModel,
     /// Chip count of the system.
     pub chips: usize,
+    /// Rank-indexed access-latency LUT: `rank_latency[r]` is the round
+    /// trip to `map.tile_of_rank(r)` (see the module's Hot path notes).
+    rank_latency: Vec<f64>,
+    /// Mean of `rank_latency` (the exact expected latency).
+    mean_latency: f64,
 }
 
 impl EmulationSetup {
@@ -118,7 +148,9 @@ impl EmulationSetup {
 
         let map = AddressMap::new(log2_wpt, k, client, system_tiles);
         let model = LatencyModel::new(net, links);
-        Ok(Self { topo, mem_kb, map, model, chips })
+        let rank_latency = model.access_lut(&topo, client, (0..k).map(|r| map.tile_of_rank(r)));
+        let mean_latency = rank_latency.iter().sum::<f64>() / k as f64;
+        Ok(Self { topo, mem_kb, map, model, chips, rank_latency, mean_latency })
     }
 
     /// Convenience: build with default technology and Table 5 params.
@@ -139,40 +171,66 @@ impl EmulationSetup {
         )
     }
 
-    /// Round-trip latency (cycles) of one access to a word address.
+    /// Round-trip latency (cycles) of one access to a word address:
+    /// one shift + one LUT load. `addr` must lie in the emulated space
+    /// (`addr < map.space_words()`); out-of-range addresses panic.
+    #[inline]
     pub fn access_cycles(&self, addr: u64) -> f64 {
+        self.rank_latency[(addr >> self.map.log2_words_per_tile) as usize]
+    }
+
+    /// Route-per-access reference evaluation (the seed's hot path):
+    /// recomputes the shortest route on every call. Kept as the oracle
+    /// the LUT is property-tested against and as the slow side of the
+    /// hotpath bench — do not use in hot loops.
+    pub fn access_cycles_routed(&self, addr: u64) -> f64 {
         let tile = self.map.tile_of(addr);
         self.model.access(&self.topo, self.map.client, tile)
     }
 
+    /// The rank-indexed latency LUT (entry `r` is the round trip to
+    /// `map.tile_of_rank(r)`).
+    pub fn rank_latencies(&self) -> &[f64] {
+        &self.rank_latency
+    }
+
     /// Native evaluation of a batch of addresses (mirrors the AOT
-    /// kernel bit-for-bit in f32).
+    /// kernel bit-for-bit in f32). A tight, autovectorisable loop over
+    /// the rank LUT.
     pub fn native_batch(&self, addresses: &[i32], out: &mut Vec<f32>) {
         out.clear();
         out.reserve(addresses.len());
+        let shift = self.map.log2_words_per_tile;
+        let lut = &self.rank_latency;
+        out.extend(addresses.iter().map(|&a| lut[(a as u64 >> shift) as usize] as f32));
+    }
+
+    /// Route-per-access evaluation of a batch (the seed's hot path;
+    /// bench reference only).
+    pub fn native_batch_routed(&self, addresses: &[i32], out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(addresses.len());
         for &a in addresses {
-            out.push(self.access_cycles(a as u64) as f32);
+            out.push(self.access_cycles_routed(a as u64) as f32);
         }
     }
 
     /// Exact expected access latency over uniform addresses: every
-    /// memory rank is equally likely, so this is the mean over ranks.
+    /// memory rank is equally likely, so this is the mean over ranks
+    /// (precomputed at build time).
     pub fn expected_latency(&self) -> f64 {
-        let mut sum = 0.0;
-        for r in 0..self.map.k {
-            let tile = self.map.tile_of_rank(r);
-            sum += self.model.access(&self.topo, self.map.client, tile);
-        }
-        sum / self.map.k as f64
+        self.mean_latency
     }
 
     /// Monte-Carlo estimate of the expected latency (native path).
     pub fn mc_latency(&self, n: usize, seed: u64) -> f64 {
         let mut rng = Rng::new(seed);
         let space = self.map.space_words();
+        let shift = self.map.log2_words_per_tile;
+        let lut = &self.rank_latency;
         let mut sum = 0.0;
         for _ in 0..n {
-            sum += self.access_cycles(rng.below(space));
+            sum += lut[(rng.below(space) >> shift) as usize];
         }
         sum / n as f64
     }
@@ -305,6 +363,46 @@ mod tests {
         for (i, &a) in addrs.iter().enumerate() {
             assert_eq!(out[i], e.access_cycles(a as u64) as f32);
         }
+        // The routed batch path is the same numbers the slow way.
+        let mut routed = Vec::new();
+        e.native_batch_routed(&addrs, &mut routed);
+        assert_eq!(out, routed);
+    }
+
+    #[test]
+    fn lut_matches_routed_reference() {
+        // Satellite oracle: the O(1) LUT path must agree bit-for-bit
+        // with the seed's route-per-access evaluation across random
+        // design points and addresses.
+        use crate::util::prop::{check, ensure};
+        use crate::util::rng::Rng;
+        check(
+            |r: &mut Rng| {
+                let kind =
+                    if r.chance(0.5) { TopologyKind::Clos } else { TopologyKind::Mesh };
+                let tiles = *r.choose(&[256usize, 1024]);
+                let mem_kb = *r.choose(&[64u32, 128]);
+                let k = 1 + r.below((tiles - 1) as u64) as usize;
+                (kind, tiles, mem_kb, k, r.next_u64())
+            },
+            |&(kind, tiles, mem_kb, k, raw)| {
+                let e = EmulationSetup::default_tech(kind, tiles, mem_kb, k).unwrap();
+                let addr = raw % e.map.space_words();
+                let lut = e.access_cycles(addr);
+                let routed = e.access_cycles_routed(addr);
+                ensure(
+                    lut.to_bits() == routed.to_bits(),
+                    format!(
+                        "{kind:?} tiles={tiles} mem={mem_kb} k={k} addr={addr}: \
+                         lut {lut} != routed {routed}"
+                    ),
+                )?;
+                let exp = e.expected_latency();
+                let mean =
+                    e.rank_latencies().iter().sum::<f64>() / e.rank_latencies().len() as f64;
+                ensure(exp.to_bits() == mean.to_bits(), "stored mean != LUT mean")
+            },
+        );
     }
 
     #[test]

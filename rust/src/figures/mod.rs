@@ -14,6 +14,7 @@
 //! | [`fig11`] | Fig 11 — slowdown vs global-access fraction |
 //! | [`binary_size`] | §7.3 — program binary growth |
 //! | [`ablations`] | design-choice ablations (route-open, clock, switch degree, eDRAM) |
+//! | [`hotpath`] | (not in the paper) the repo's own access-hot-path perf trajectory |
 
 pub mod ablations;
 pub mod binary_size;
@@ -23,6 +24,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod fig9;
+pub mod hotpath;
 pub mod tables;
 
 use crate::coordinator::EvalMode;

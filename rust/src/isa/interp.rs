@@ -10,14 +10,20 @@
 //!   channel protocol (`SEND tag; SEND addr; [SEND value;] RECV`) is
 //!   executed against an [`EmulationSetup`]; the blocking receive pays
 //!   the network round trip.
-
-use std::collections::HashMap;
+//!
+//! Both memories back their words with the shared
+//! [`PagedStore`](crate::util::paged::PagedStore) (pages allocated on
+//! first write, unwritten words read zero), and the emulated memory's
+//! latency charge goes through [`EmulationSetup::access_cycles`]'s
+//! rank LUT — the interpreter's global-access path performs no hashing
+//! and no per-access allocation.
 
 use anyhow::{bail, Result};
 
 use super::inst::{Inst, InstClass};
 use crate::emulation::controller::{MSG_READ, MSG_WRITE};
 use crate::emulation::{EmulationSetup, SequentialMachine};
+use crate::util::paged::PagedStore;
 
 /// A global memory system with a cost model.
 pub trait MemorySystem {
@@ -33,24 +39,24 @@ pub trait MemorySystem {
 /// The sequential baseline's DRAM-backed global memory.
 pub struct DirectMemory {
     machine: SequentialMachine,
-    store: HashMap<u64, i64>,
+    store: PagedStore,
     space: u64,
 }
 
 impl DirectMemory {
     /// DRAM memory with `space` words and the given baseline machine.
     pub fn new(machine: SequentialMachine, space: u64) -> Self {
-        Self { machine, store: HashMap::new(), space }
+        Self { machine, store: PagedStore::with_capacity_words(space), space }
     }
 }
 
 impl MemorySystem for DirectMemory {
     fn read(&mut self, addr: u64) -> (i64, f64) {
-        (*self.store.get(&addr).unwrap_or(&0), self.machine.global_access_cycles())
+        (self.store.read(addr), self.machine.global_access_cycles())
     }
 
     fn write(&mut self, addr: u64, value: i64) -> f64 {
-        self.store.insert(addr, value);
+        self.store.write(addr, value);
         self.machine.global_access_cycles()
     }
 
@@ -62,13 +68,14 @@ impl MemorySystem for DirectMemory {
 /// The emulated memory reached through the channel protocol.
 pub struct EmulatedChannelMemory {
     setup: EmulationSetup,
-    store: HashMap<u64, i64>,
+    store: PagedStore,
 }
 
 impl EmulatedChannelMemory {
     /// Channel memory over an emulation design point.
     pub fn new(setup: EmulationSetup) -> Self {
-        Self { setup, store: HashMap::new() }
+        let store = PagedStore::with_capacity_words(setup.map.space_words());
+        Self { setup, store }
     }
 
     /// The underlying design point.
@@ -81,12 +88,12 @@ impl MemorySystem for EmulatedChannelMemory {
     fn read(&mut self, addr: u64) -> (i64, f64) {
         // The round trip includes request, SRAM access and response;
         // the two SEND instructions that preceded the RECV were charged
-        // their own single cycles.
-        (*self.store.get(&addr).unwrap_or(&0), self.setup.access_cycles(addr))
+        // their own single cycles. The latency is one rank-LUT load.
+        (self.store.read(addr), self.setup.access_cycles(addr))
     }
 
     fn write(&mut self, addr: u64, value: i64) -> f64 {
-        self.store.insert(addr, value);
+        self.store.write(addr, value);
         self.setup.access_cycles(addr)
     }
 

@@ -38,6 +38,7 @@ COMMANDS
   contention [--clients N]      DES contention experiment (c_cont)
   selfcheck                     prove XLA artifact == native model
   sweep --tiles N --mem KB      latency sweep over emulation sizes
+  bench-hotpath [--out PATH]    measure the access hot path, write BENCH_hotpath.json
 
 COMMON OPTIONS
   --mode exact|native|xla       evaluation mode (default: auto)
@@ -265,6 +266,20 @@ fn run(raw: Vec<String>) -> Result<()> {
             );
         }
         "selfcheck" => selfcheck(&args, net, &chip, &ip)?,
+        "bench-hotpath" => {
+            let setup = figures::hotpath::design_point()?;
+            let b = figures::hotpath::measure(&setup);
+            print!("{}", figures::hotpath::render(&setup, &b));
+            let out = args.flag("out").unwrap_or("BENCH_hotpath.json");
+            b.write_json(std::path::Path::new(out))
+                .with_context(|| format!("writing {out}"))?;
+            println!("wrote {out}");
+            figures::hotpath::assert_hotpath(&b)?;
+            println!(
+                "throughput assertions OK (LUT {:.1}x routed)",
+                figures::hotpath::lut_speedup(&b)?
+            );
+        }
         "sweep" => {
             let tiles: usize = args.get("tiles", 1024)?;
             let mem: u32 = args.get("mem", 128)?;

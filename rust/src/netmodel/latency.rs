@@ -80,6 +80,19 @@ impl LatencyModel {
     pub fn access(&self, topo: &Topology, client: usize, tile: usize) -> f64 {
         self.round_trip(&topo.route(client, tile))
     }
+
+    /// Materialise the per-rank access-latency LUT for a client: one
+    /// `access` evaluation per rank tile, in rank order. This is the
+    /// only place routes are computed on the emulation access path —
+    /// everything downstream indexes the returned table.
+    pub fn access_lut(
+        &self,
+        topo: &Topology,
+        client: usize,
+        rank_tiles: impl Iterator<Item = usize>,
+    ) -> Vec<f64> {
+        rank_tiles.map(|tile| self.access(topo, client, tile)).collect()
+    }
 }
 
 #[cfg(test)]
@@ -141,6 +154,18 @@ mod tests {
         let across = m.access(&topo, 0, 4 * 16); // block (4,0): crosses chips
         // +1 switch+link (8) + crossing extra (1) + ser 2, each way
         assert_eq!(across - inside, 2.0 * (8.0 + 1.0 + 2.0));
+    }
+
+    #[test]
+    fn access_lut_matches_per_rank_access() {
+        let topo = Topology::Clos(FoldedClos::build(ClosSpec::with_tiles(1024)).unwrap());
+        let m = model();
+        let tiles = [5usize, 17, 300, 999];
+        let lut = m.access_lut(&topo, 0, tiles.iter().copied());
+        assert_eq!(lut.len(), tiles.len());
+        for (i, &t) in tiles.iter().enumerate() {
+            assert_eq!(lut[i].to_bits(), m.access(&topo, 0, t).to_bits());
+        }
     }
 
     #[test]

@@ -8,13 +8,32 @@
 //! [`LatencyModel::round_trip`] (proved by the `des_matches_analytic`
 //! tests); under load, port contention queues messages and the measured
 //! inflation is what §6.3 abstracts as `c_cont`.
-
-use std::collections::HashMap;
+//!
+//! # Hot path
+//!
+//! [`NetworkSim::one_way`] is the inner loop of every DES experiment
+//! and does **zero hashing and zero heap allocation** in steady state:
+//!
+//! * routes come from a [`RoutingTable`] built once in
+//!   [`NetworkSim::new`] — each hop is one dense-array load (`next
+//!   edge toward the destination switch`), never a BFS and never a
+//!   memoised `Vec` path;
+//! * per-port busy-until times live in a flat arena (`Vec<u64>`)
+//!   indexed by the table's CSR directed-port ids, sized once at
+//!   construction — never a `HashMap<(NodeId, NodeId), u64>` probe;
+//! * the walked path's per-link-class counts are proven equal to the
+//!   arithmetic [`crate::topology::Route`] summary
+//!   (`routing_table_walk_matches_route`), which is what keeps the DES
+//!   bit-identical to the analytic model at zero load.
+//!
+//! Invariants: the routing table and port arena always correspond to
+//! `topo.graph()` (both are rebuilt only in `new`); `reset` clears the
+//! arena in place and never changes its size.
 
 use crate::emulation::EmulationSetup;
-use crate::netmodel::LatencyModel;
+use crate::netmodel::{LatencyModel, LinkLatencies};
 use crate::sim::event::EventQueue;
-use crate::topology::{LinkClass, NodeId, Topology};
+use crate::topology::{LinkClass, RoutingTable, Topology, NO_HOP};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
@@ -28,34 +47,35 @@ pub const RESPONSE_WORDS: u64 = 1;
 pub struct NetworkSim<'a> {
     topo: &'a Topology,
     model: &'a LatencyModel,
-    /// Busy-until time per directed switch port.
-    port_busy: HashMap<(NodeId, NodeId), u64>,
-    /// Memoized switch paths.
-    paths: HashMap<(NodeId, NodeId), Vec<NodeId>>,
+    /// Precomputed next hops + directed-port layout (built once).
+    routes: RoutingTable,
+    /// Busy-until time per directed switch port, indexed by the
+    /// routing table's CSR port id. Sized once; never grows.
+    port_busy: Vec<u64>,
+}
+
+/// Wire cycles of one link of `class` (rounded to whole cycles, as the
+/// DES advances an integer clock).
+#[inline]
+fn link_cycles(links: &LinkLatencies, class: LinkClass) -> u64 {
+    let c = match class {
+        LinkClass::Tile => links.tile,
+        LinkClass::EdgeCore => links.edge_core,
+        LinkClass::CoreSys => links.core_sys,
+        LinkClass::MeshHop => links.mesh_hop,
+        LinkClass::MeshChipCross => links.mesh_hop + links.mesh_cross_extra,
+    };
+    c.round() as u64
 }
 
 impl<'a> NetworkSim<'a> {
-    /// New simulator over a topology and its latency model.
+    /// New simulator over a topology and its latency model. Builds the
+    /// routing table and port arena up front; all subsequent message
+    /// simulation is allocation-free.
     pub fn new(topo: &'a Topology, model: &'a LatencyModel) -> Self {
-        Self { topo, model, port_busy: HashMap::new(), paths: HashMap::new() }
-    }
-
-    fn path(&mut self, a: NodeId, b: NodeId) -> &[NodeId] {
-        self.paths.entry((a, b)).or_insert_with(|| {
-            self.topo.graph().bfs_path(a, b).expect("network is connected")
-        })
-    }
-
-    fn link_cycles(&self, class: LinkClass) -> u64 {
-        let l = &self.model.links;
-        let c = match class {
-            LinkClass::Tile => l.tile,
-            LinkClass::EdgeCore => l.edge_core,
-            LinkClass::CoreSys => l.core_sys,
-            LinkClass::MeshHop => l.mesh_hop,
-            LinkClass::MeshChipCross => l.mesh_hop + l.mesh_cross_extra,
-        };
-        c.round() as u64
+        let routes = topo.routing_table();
+        let port_busy = vec![0u64; routes.num_ports()];
+        Self { topo, model, routes, port_busy }
     }
 
     /// Simulate one message from `src_tile` to `dst_tile`, departing at
@@ -63,37 +83,41 @@ impl<'a> NetworkSim<'a> {
     /// for the message's serialised length, so concurrent messages
     /// contend.
     pub fn one_way(&mut self, src_tile: usize, dst_tile: usize, now: u64, words: u64) -> u64 {
-        let model = self.model;
-        let net = &model.net;
-        let s = self.topo.tile_switch(src_tile);
+        let links = self.model.links;
+        let net = &self.model.net;
+        let g = self.topo.graph();
         let d = self.topo.tile_switch(dst_tile);
-        let path = self.path(s, d).to_vec();
 
-        let mut t = now + model.links.tile.round() as u64; // tile -> switch
+        let mut t = now + links.tile.round() as u64; // tile -> switch
         let mut inter_chip = false;
         let per_switch = net.per_switch().round() as u64;
+        let occupancy = words.max(1);
 
-        for (i, &sw) in path.iter().enumerate() {
+        let mut u = self.topo.tile_switch(src_tile);
+        loop {
             // Traverse the switch.
             t += per_switch;
-            if i + 1 < path.len() {
-                let next = path[i + 1];
-                // Wait for the output port, then hold it for the
-                // message's serialised length.
-                let busy = self.port_busy.entry((sw, next)).or_insert(0);
-                if *busy > t {
-                    t = *busy;
-                }
-                let class = self.topo.graph().link_class(sw, next).expect("adjacent");
-                if matches!(class, LinkClass::CoreSys | LinkClass::MeshChipCross) {
-                    inter_chip = true;
-                }
-                let occupancy = words.max(1);
-                *busy = t + occupancy;
-                t += self.link_cycles(class);
+            if u == d {
+                break;
             }
+            let e = self.routes.next_edge(u, d);
+            assert_ne!(e, NO_HOP, "network is connected ({u:?} -> {d:?})");
+            let (next, class) = g.neighbours(u)[e as usize];
+            // Wait for the output port, then hold it for the message's
+            // serialised length.
+            let port = self.routes.port_id(u, e);
+            let busy = self.port_busy[port];
+            if busy > t {
+                t = busy;
+            }
+            self.port_busy[port] = t + occupancy;
+            if matches!(class, LinkClass::CoreSys | LinkClass::MeshChipCross) {
+                inter_chip = true;
+            }
+            t += link_cycles(&links, class);
+            u = next;
         }
-        t += model.links.tile.round() as u64; // switch -> tile
+        t += links.tile.round() as u64; // switch -> tile
         let ser =
             if inter_chip { net.t_serial_inter } else { net.t_serial_intra }.round() as u64;
         t + ser
@@ -107,9 +131,10 @@ impl<'a> NetworkSim<'a> {
         self.one_way(tile, client, served, RESPONSE_WORDS)
     }
 
-    /// Reset port occupancy (fresh zero-load state).
+    /// Reset port occupancy (fresh zero-load state). Clears the arena
+    /// in place — no allocation.
     pub fn reset(&mut self) {
-        self.port_busy.clear();
+        self.port_busy.fill(0);
     }
 }
 
@@ -122,6 +147,18 @@ pub struct ContentionResult {
     pub clients: usize,
     /// Fitted contention factor: mean latency over zero-load latency.
     pub inflation: f64,
+}
+
+/// Tiles hosting `clients` synthetic clients: spread evenly over the
+/// `tiles - 1` tiles that are *not* the primary client's (the memory
+/// pool lives there too, but a synthetic client only issues traffic).
+/// Never lands on `client`; placements are distinct whenever
+/// `clients <= tiles - 1`.
+fn spread_clients(client: usize, tiles: usize, clients: usize) -> Vec<usize> {
+    debug_assert!(tiles >= 2);
+    let slots = tiles - 1;
+    let step = (slots / clients.max(1)).max(1);
+    (0..clients).map(|c| (client + 1 + (c * step) % slots) % tiles).collect()
 }
 
 /// Run `clients` synthetic clients, each performing `accesses`
@@ -148,9 +185,7 @@ pub fn run_contention(
         remaining: usize,
     }
     let mut q = EventQueue::new();
-    for c in 0..clients {
-        // Spread clients over tiles (skip the primary client's tile).
-        let tile = (setup.map.client + c * (tiles / clients.max(1)).max(1)) % tiles;
+    for tile in spread_clients(setup.map.client, tiles, clients) {
         q.push(0, NextAccess { client_tile: tile, remaining: accesses });
     }
 
@@ -213,6 +248,22 @@ mod tests {
     }
 
     #[test]
+    fn one_way_is_allocation_free_steady_state() {
+        // The port arena is sized once in `new`; simulating traffic
+        // must never grow it (no rehash, no path memoisation).
+        let e = setup(TopologyKind::Clos, 1024, 1023);
+        let mut sim = NetworkSim::new(&e.topo, &e.model);
+        let ports = sim.port_busy.len();
+        assert_eq!(ports, sim.routes.num_ports());
+        let mut now = 0;
+        for tile in 1..512 {
+            now = sim.access(e.map.client, tile, now);
+        }
+        assert_eq!(sim.port_busy.len(), ports);
+        assert_eq!(sim.port_busy.capacity(), ports);
+    }
+
+    #[test]
     fn sequential_accesses_do_not_contend() {
         // A single client's dependent accesses never queue (§2: a
         // sequential program induces no concurrent traffic).
@@ -230,5 +281,28 @@ mod tests {
             crowd.latency.mean() >= solo.latency.mean(),
             "contention should not speed things up"
         );
+    }
+
+    #[test]
+    fn spread_skips_primary_client_tile() {
+        // Regression: the seed placed synthetic client 0 exactly on
+        // `setup.map.client` despite claiming to skip it.
+        for (client, tiles, clients) in
+            [(0usize, 256usize, 1usize), (0, 256, 16), (57, 128, 8), (510, 1024, 64), (5, 8, 12)]
+        {
+            let placed = spread_clients(client, tiles, clients);
+            assert_eq!(placed.len(), clients);
+            assert!(
+                placed.iter().all(|&t| t != client),
+                "client={client} tiles={tiles} n={clients}: {placed:?}"
+            );
+            assert!(placed.iter().all(|&t| t < tiles));
+            if clients <= tiles - 1 {
+                let mut uniq = placed.clone();
+                uniq.sort_unstable();
+                uniq.dedup();
+                assert_eq!(uniq.len(), clients, "placements must be distinct");
+            }
+        }
     }
 }

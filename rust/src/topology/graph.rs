@@ -1,5 +1,10 @@
 //! Switch-graph substrate: nodes are switches, edges are bidirectional
 //! links tagged with a [`LinkClass`]; tiles attach to switches.
+//!
+//! [`RoutingTable`] precomputes, for every destination switch, a dense
+//! next-hop row over all switches, plus a CSR layout of the graph's
+//! directed ports — the hot-path substrate the DES walks without any
+//! hashing, searching or allocation.
 
 use std::collections::VecDeque;
 
@@ -173,6 +178,125 @@ impl Graph {
     }
 }
 
+/// Sentinel in a [`RoutingTable`] row: no next hop exists (the node is
+/// the destination itself, or the destination is unreachable).
+pub const NO_HOP: u32 = u32::MAX;
+
+/// Precomputed shortest-path next hops plus a CSR directed-port layout.
+///
+/// * `next_edge(u, d)` is the index into `Graph::neighbours(u)` of the
+///   first hop from `u` toward destination `d`, so a message walks
+///   `u -> adj[u][next_edge(u, d)].0 -> ...` until it reaches `d` —
+///   one array load per hop, no BFS, no hashing, no allocation.
+/// * `port_id(u, e)` maps the *directed* port `(u, e)` (the `e`-th
+///   adjacency entry of `u`) to a stable index in `[0, num_ports())`,
+///   so per-port state (e.g. the DES busy-until times) lives in a flat
+///   arena instead of a `HashMap<(NodeId, NodeId), _>`.
+///
+/// Rows are built by BFS from each destination, taking at every node
+/// the first adjacency entry one step closer to the destination. Any
+/// such choice is a shortest path; the
+/// `routing_table_walk_matches_route` property test (in
+/// [`super::routing`]) proves the walked per-link-class counts equal
+/// the arithmetic [`super::Route`] summary on both topologies, which
+/// is what keeps the DES bit-identical to the analytic model.
+#[derive(Clone, Debug)]
+pub struct RoutingTable {
+    switches: usize,
+    /// `next_edge[d * switches + u]`: adjacency index of the hop from
+    /// `u` toward `d`, or [`NO_HOP`].
+    next_edge: Vec<u32>,
+    /// CSR port offsets, length `switches + 1`: directed port `(u, e)`
+    /// has arena index `port_offset[u] + e`.
+    port_offset: Vec<u32>,
+}
+
+impl RoutingTable {
+    /// Build the full table: O(V^2) memory, O(V * (V + E)) time.
+    pub fn build(g: &Graph) -> Self {
+        let n = g.num_switches();
+        let mut port_offset = Vec::with_capacity(n + 1);
+        let mut total = 0u32;
+        for u in 0..n {
+            port_offset.push(total);
+            total += g.degree(NodeId(u)) as u32;
+        }
+        port_offset.push(total);
+
+        let mut next_edge = vec![NO_HOP; n * n];
+        let mut dist = vec![u32::MAX; n];
+        let mut q = VecDeque::new();
+        for dest in 0..n {
+            for d in dist.iter_mut() {
+                *d = u32::MAX;
+            }
+            q.clear();
+            dist[dest] = 0;
+            q.push_back(dest);
+            while let Some(u) = q.pop_front() {
+                for &(v, _) in g.neighbours(NodeId(u)) {
+                    if dist[v.0] == u32::MAX {
+                        dist[v.0] = dist[u] + 1;
+                        q.push_back(v.0);
+                    }
+                }
+            }
+            let row = &mut next_edge[dest * n..(dest + 1) * n];
+            for u in 0..n {
+                if u == dest || dist[u] == u32::MAX {
+                    continue;
+                }
+                for (e, &(v, _)) in g.neighbours(NodeId(u)).iter().enumerate() {
+                    if dist[v.0] == dist[u] - 1 {
+                        row[u] = e as u32;
+                        break;
+                    }
+                }
+            }
+        }
+        Self { switches: n, next_edge, port_offset }
+    }
+
+    /// Number of switches the table covers.
+    pub fn switches(&self) -> usize {
+        self.switches
+    }
+
+    /// Total directed ports — the arena size per-port state needs.
+    pub fn num_ports(&self) -> usize {
+        self.port_offset[self.switches] as usize
+    }
+
+    /// Adjacency index of the next hop from `from` toward `dest`
+    /// ([`NO_HOP`] when `from == dest` or unreachable).
+    #[inline]
+    pub fn next_edge(&self, from: NodeId, dest: NodeId) -> u32 {
+        self.next_edge[dest.0 * self.switches + from.0]
+    }
+
+    /// Arena index of the directed port `(from, edge_idx)`.
+    #[inline]
+    pub fn port_id(&self, from: NodeId, edge_idx: u32) -> usize {
+        self.port_offset[from.0] as usize + edge_idx as usize
+    }
+
+    /// Hop count of the walked path `from -> dest` (tests/validation;
+    /// `None` if the destination is unreachable).
+    pub fn walk_distance(&self, g: &Graph, from: NodeId, dest: NodeId) -> Option<u32> {
+        let mut u = from;
+        let mut hops = 0u32;
+        while u != dest {
+            let e = self.next_edge(u, dest);
+            if e == NO_HOP || hops as usize > self.switches {
+                return None;
+            }
+            u = g.neighbours(u)[e as usize].0;
+            hops += 1;
+        }
+        Some(hops)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -226,5 +350,45 @@ mod tests {
     #[test]
     fn diameter_of_line() {
         assert_eq!(line_graph(6).diameter(), 5);
+    }
+
+    #[test]
+    fn routing_table_walk_matches_bfs_distance() {
+        let g = line_graph(7);
+        let rt = RoutingTable::build(&g);
+        for a in 0..7 {
+            for b in 0..7 {
+                let walked = rt.walk_distance(&g, NodeId(a), NodeId(b));
+                assert_eq!(walked, g.bfs_distance(NodeId(a), NodeId(b)), "{a}->{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn routing_table_self_and_unreachable_are_no_hop() {
+        let mut g = line_graph(3);
+        let isolated = g.add_node();
+        let rt = RoutingTable::build(&g);
+        assert_eq!(rt.next_edge(NodeId(1), NodeId(1)), NO_HOP);
+        assert_eq!(rt.next_edge(NodeId(0), isolated), NO_HOP);
+        assert_eq!(rt.walk_distance(&g, NodeId(0), isolated), None);
+    }
+
+    #[test]
+    fn port_ids_are_a_bijection_over_directed_ports() {
+        let g = line_graph(5);
+        let rt = RoutingTable::build(&g);
+        // A 5-node line has 4 undirected links = 8 directed ports.
+        assert_eq!(rt.num_ports(), 8);
+        let mut seen = vec![false; rt.num_ports()];
+        for u in 0..g.num_switches() {
+            for e in 0..g.degree(NodeId(u)) {
+                let p = rt.port_id(NodeId(u), e as u32);
+                assert!(p < rt.num_ports());
+                assert!(!seen[p], "port ({u},{e}) collides at {p}");
+                seen[p] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
     }
 }

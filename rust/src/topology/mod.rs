@@ -1,6 +1,8 @@
 //! Interconnection-network topologies (paper §2, §4.3, Fig 1).
 //!
-//! * [`graph`] — the switch-graph substrate with BFS shortest paths.
+//! * [`graph`] — the switch-graph substrate with BFS shortest paths
+//!   and the precomputed [`RoutingTable`] (next hops + directed-port
+//!   arena) the DES hot path walks allocation-free.
 //! * [`clos`] — folded Clos networks built from degree-32 switches
 //!   (16 tiles per edge switch, 256 tiles per chip, 2 or 3 stages).
 //! * [`mesh`] — 2D meshes of 16-tile blocks, extended across chips.
@@ -17,6 +19,6 @@ pub mod mesh;
 pub mod routing;
 
 pub use clos::{ClosSpec, FoldedClos};
-pub use graph::{Graph, LinkClass, NodeId};
+pub use graph::{Graph, LinkClass, NodeId, RoutingTable, NO_HOP};
 pub use mesh::{Mesh2D, MeshSpec};
 pub use routing::{Route, Topology};

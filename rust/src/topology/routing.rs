@@ -110,6 +110,12 @@ impl Topology {
         }
     }
 
+    /// Precompute the next-hop routing table + directed-port layout for
+    /// the underlying switch graph (the DES hot-path substrate).
+    pub fn routing_table(&self) -> super::graph::RoutingTable {
+        super::graph::RoutingTable::build(self.graph())
+    }
+
     /// Count links of each class on a BFS path between two tiles'
     /// switches — slow, for cross-validation in tests.
     pub fn bfs_route(&self, a: usize, b: usize) -> Route {
@@ -205,6 +211,60 @@ mod tests {
             let r = topo.route(7, 7);
             assert_eq!(r.distance, 0);
             assert!(!r.inter_chip);
+        }
+    }
+
+    /// Walk a precomputed next-hop table between two tiles and count the
+    /// links of each class — the exact accumulation the DES performs.
+    fn walk_route(topo: &Topology, rt: &crate::topology::RoutingTable, a: usize, b: usize) -> Route {
+        let g = topo.graph();
+        let dest = topo.tile_switch(b);
+        let mut u = topo.tile_switch(a);
+        let mut r = Route {
+            distance: 0,
+            edge_core_links: 0,
+            core_sys_links: 0,
+            mesh_hops: 0,
+            chip_crossings: 0,
+            inter_chip: false,
+        };
+        while u != dest {
+            let e = rt.next_edge(u, dest);
+            assert_ne!(e, crate::topology::NO_HOP, "connected");
+            let (v, class) = g.neighbours(u)[e as usize];
+            match class {
+                LinkClass::EdgeCore => r.edge_core_links += 1,
+                LinkClass::CoreSys => r.core_sys_links += 1,
+                LinkClass::MeshHop => r.mesh_hops += 1,
+                LinkClass::MeshChipCross => r.chip_crossings += 1,
+                LinkClass::Tile => {}
+            }
+            r.distance += 1;
+            u = v;
+            assert!(r.distance as usize <= rt.switches(), "next-hop walk cycles");
+        }
+        r.inter_chip = r.core_sys_links > 0 || r.chip_crossings > 0;
+        r
+    }
+
+    #[test]
+    fn routing_table_walk_matches_route() {
+        // The DES walks the precomputed table; the analytic model uses
+        // the arithmetic summary. Their per-class link counts must be
+        // identical for the two to stay bit-exact (des_matches_analytic).
+        for topo in [clos(1024), mesh(1024)] {
+            let rt = topo.routing_table();
+            check(
+                |r: &mut Rng| (r.below(1024) as usize, r.below(1024) as usize),
+                |&(a, b)| {
+                    let walked = walk_route(&topo, &rt, a, b);
+                    let arith = topo.route(a, b);
+                    ensure(
+                        walked == arith,
+                        format!("{}: {a}->{b}: walked {walked:?} vs {arith:?}", topo.name()),
+                    )
+                },
+            );
         }
     }
 }

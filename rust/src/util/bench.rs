@@ -27,6 +27,20 @@ pub struct Measurement {
     pub mad: Duration,
     /// Iterations measured.
     pub iters: u64,
+    /// Items (e.g. addresses) processed per iteration; 0 when the case
+    /// has no meaningful throughput.
+    pub items: u64,
+}
+
+impl Measurement {
+    /// Items per second (0.0 when `items` is 0).
+    pub fn throughput(&self) -> f64 {
+        if self.items == 0 || self.median.is_zero() {
+            0.0
+        } else {
+            self.items as f64 / self.median.as_secs_f64()
+        }
+    }
 }
 
 /// Bench harness accumulating measurements for one group.
@@ -60,7 +74,18 @@ impl Bench {
     }
 
     /// Measure a closure; its return value is black-boxed.
-    pub fn iter<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &Measurement {
+    pub fn iter<T, F: FnMut() -> T>(&mut self, name: &str, f: F) -> &Measurement {
+        self.iter_items(name, 0, f)
+    }
+
+    /// Measure a closure that processes `items` items per iteration
+    /// (recorded for throughput reporting / the JSON schema).
+    pub fn iter_items<T, F: FnMut() -> T>(
+        &mut self,
+        name: &str,
+        items: u64,
+        mut f: F,
+    ) -> &Measurement {
         // Warmup and estimate per-iteration cost.
         let start = Instant::now();
         let mut warm_iters = 0u64;
@@ -95,6 +120,7 @@ impl Bench {
             median: Duration::from_secs_f64(median),
             mad: Duration::from_secs_f64(mad),
             iters: samples as u64,
+            items,
         });
         self.results.last().unwrap()
     }
@@ -118,6 +144,38 @@ impl Bench {
     /// Access the accumulated measurements.
     pub fn results(&self) -> &[Measurement] {
         &self.results
+    }
+
+    /// Look up a measurement by case name.
+    pub fn get(&self, name: &str) -> Option<&Measurement> {
+        self.results.iter().find(|m| m.name == name)
+    }
+
+    /// Render the group in the machine-readable perf-trajectory schema:
+    /// `{"bench": <group>, "results": [{"name", "median_ns",
+    /// "addrs_per_s"}]}` (`addrs_per_s` is 0 for cases without a
+    /// per-item throughput). Case names are plain ASCII identifiers, so
+    /// no JSON escaping is required.
+    pub fn to_json(&self) -> String {
+        let mut s = format!("{{\"bench\": \"{}\", \"results\": [", self.group);
+        for (i, m) in self.results.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!(
+                "{{\"name\": \"{}\", \"median_ns\": {:.1}, \"addrs_per_s\": {:.0}}}",
+                m.name,
+                m.median.as_secs_f64() * 1e9,
+                m.throughput(),
+            ));
+        }
+        s.push_str("]}");
+        s
+    }
+
+    /// Write [`Bench::to_json`] to `path`.
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json() + "\n")
     }
 }
 
@@ -159,5 +217,27 @@ mod tests {
         assert_eq!(fmt_duration(Duration::from_nanos(500)), "500 ns");
         assert_eq!(fmt_duration(Duration::from_micros(1500)), "1.50 ms");
         assert!(fmt_duration(Duration::from_secs(2)).ends_with(" s"));
+    }
+
+    #[test]
+    fn items_give_throughput_and_json_schema() {
+        let mut b = Bench::new("hotpath").budget(Duration::from_millis(1), Duration::from_millis(5));
+        b.iter_items("native-65536", 65_536, || (0..1000).sum::<u64>());
+        b.iter("exact-closed-form", || 1 + 1);
+        let m = b.get("native-65536").unwrap();
+        assert_eq!(m.items, 65_536);
+        assert!(m.throughput() > 0.0);
+        assert_eq!(b.get("exact-closed-form").unwrap().throughput(), 0.0);
+        assert!(b.get("missing").is_none());
+
+        let json = b.to_json();
+        assert!(json.starts_with("{\"bench\": \"hotpath\", \"results\": ["));
+        assert!(json.contains("\"name\": \"native-65536\""));
+        assert!(json.contains("\"median_ns\": "));
+        assert!(json.contains("\"addrs_per_s\": "));
+        assert!(json.ends_with("]}"));
+        // The schema must parse as JSON (spot-check balance).
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
     }
 }

@@ -2,6 +2,8 @@
 //! crates beyond the xla stack are available).
 //!
 //! * [`rng`] — splitmix64 / xoshiro256** PRNG.
+//! * [`paged`] — paged flat word store (the interpreter memories'
+//!   zero-hash backing).
 //! * [`stats`] — summary statistics, histograms.
 //! * [`table`] — ASCII table rendering for the figure/table generators.
 //! * [`plot`] — ASCII line plots (log-linear, matching the paper's axes).
@@ -10,6 +12,7 @@
 //!   `harness = false` bench binaries.
 
 pub mod bench;
+pub mod paged;
 pub mod plot;
 pub mod prop;
 pub mod rng;
