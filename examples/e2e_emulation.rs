@@ -17,10 +17,11 @@
 //! make artifacts && cargo run --release --example e2e_emulation
 //! ```
 
+use memclos::api::{DesignPoint, Mode, Tech};
 use memclos::cc::{compile, corpus, Backend};
-use memclos::coordinator::{run_sweep, EvalMode, SweepPoint};
+use memclos::coordinator::{run_sweep, SweepPoint};
 use memclos::dram::{measure_random_latency, DramConfig};
-use memclos::emulation::{EmulationSetup, SequentialMachine, TopologyKind};
+use memclos::emulation::{SequentialMachine, TopologyKind};
 use memclos::isa::interp::{DirectMemory, EmulatedChannelMemory, Machine};
 use memclos::sim::NetworkSim;
 use memclos::util::table::{f, Table};
@@ -38,7 +39,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ---- 2+3. latency sweep over the AOT kernel ----------------------
-    let mode = EvalMode::auto(65_536, 16_384);
+    let mode = Mode::Auto { samples: 65_536, batch: 16_384 };
     println!("[2/5] latency sweep, mode {mode:?}");
     let mut points = Vec::new();
     for kind in [TopologyKind::Clos, TopologyKind::Mesh] {
@@ -51,7 +52,7 @@ fn main() -> anyhow::Result<()> {
             points.push(SweepPoint { kind, tiles: system, mem_kb: 128, k: system - 1 });
         }
     }
-    let mut results = run_sweep(&points, mode, 4, 0xE2E)?;
+    let mut results = run_sweep(&points, mode, &Tech::default(), 4, 0xE2E)?;
     results.sort_by_key(|r| (r.point.tiles, format!("{:?}", r.point.kind), r.point.k));
     let mut t = Table::new(&["system", "topo", "k", "latency ns", "vs DDR3"]);
     for r in &results {
@@ -67,7 +68,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---- 4. DES cross-check ------------------------------------------
     println!("[3/5] DES cross-check (hop-by-hop vs analytic, zero load)");
-    let setup = EmulationSetup::default_tech(TopologyKind::Clos, 1024, 128, 1023)?;
+    let setup = DesignPoint::clos(1024).mem_kb(128).k(1023).build()?;
     let mut sim = NetworkSim::new(&setup.topo, &setup.model);
     let mut checked = 0;
     for tile in (1..1024).step_by(37) {
@@ -90,7 +91,7 @@ fn main() -> anyhow::Result<()> {
         let mut dmem = DirectMemory::new(seq, 1 << 22);
         let mut dm = Machine::new(&mut dmem, 1 << 16);
         let ds = dm.run(&direct.code)?;
-        let es_setup = EmulationSetup::default_tech(TopologyKind::Clos, 1024, 128, 255)?;
+        let es_setup = DesignPoint::clos(1024).mem_kb(128).k(255).build()?;
         let mut emem = EmulatedChannelMemory::new(es_setup);
         let mut em = Machine::new(&mut emem, 1 << 16);
         let es = em.run(&emulated.code)?;

@@ -1,19 +1,20 @@
 //! Bench: design-choice ablations (route-open, clock scaling, switch
 //! degree, eDRAM tiles) + the multi-client contention extension.
 
-use memclos::emulation::{EmulationSetup, TopologyKind};
+use memclos::api::{DesignPoint, Tech};
 use memclos::figures::ablations;
 use memclos::sim::network::run_contention;
 use memclos::util::bench::Bench;
 use memclos::util::table::{f, Table};
 
 fn main() {
-    let rows = ablations::generate().expect("ablations");
+    let tech = Tech::default();
+    let rows = ablations::generate(&tech).expect("ablations");
     println!("{}", ablations::render(&rows));
 
     // Contention extension: latency inflation vs concurrent clients
     // (what §6.3 abstracts as c_cont; zero load == sequential program).
-    let setup = EmulationSetup::default_tech(TopologyKind::Clos, 256, 128, 255).unwrap();
+    let setup = DesignPoint::clos(256).mem_kb(128).k(255).build().unwrap();
     let mut t = Table::new(&["clients", "mean latency cy", "inflation"])
         .with_title("Contention extension (256-tile folded Clos, random accesses)");
     for clients in [1usize, 2, 4, 8, 16, 32] {
@@ -27,7 +28,7 @@ fn main() {
     println!("{}", t.render());
 
     let mut b = Bench::new("ablations");
-    b.iter("generate-all", || ablations::generate().unwrap());
+    b.iter("generate-all", || ablations::generate(&tech).unwrap());
     b.iter("contention-16x400", || run_contention(&setup, 16, 400, 9).inflation);
     b.report();
 }

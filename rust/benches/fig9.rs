@@ -1,9 +1,9 @@
 //! Bench: regenerate paper Fig 9 (absolute emulated-memory latency vs
 //! emulation size) end-to-end — the production path uses the AOT XLA
-//! kernel when `artifacts/` exists; the exact native model otherwise.
-//! Both are timed for comparison.
+//! kernel when `artifacts/` exists; native Monte-Carlo otherwise.
+//! Both are timed against the exact closed form.
 
-use memclos::coordinator::EvalMode;
+use memclos::api::{xla_ready, Mode};
 use memclos::figures::{fig9, FigOpts};
 use memclos::util::bench::Bench;
 
@@ -11,13 +11,14 @@ fn main() {
     let auto = FigOpts::auto();
     let fig = fig9::generate(&auto).expect("fig9");
     println!("{}", fig9::render(&fig));
-    println!("(mode: {:?})\n", auto.mode);
+    let resolved = if xla_ready(16_384) { "xla" } else { "native" };
+    println!("(mode: {:?} -> {resolved})\n", auto.mode);
 
     let mut b = Bench::new("fig9");
-    let exact = FigOpts { mode: EvalMode::Exact, ..FigOpts::default() };
+    let exact = FigOpts { mode: Mode::Exact, ..FigOpts::default() };
     b.iter("generate-exact", || fig9::generate(&exact).unwrap());
-    if matches!(auto.mode, EvalMode::XlaMc { .. }) {
-        let xla = FigOpts { mode: EvalMode::XlaMc { samples: 65_536, batch: 16_384 }, ..auto };
+    if xla_ready(16_384) {
+        let xla = FigOpts { mode: Mode::Xla { samples: 65_536, batch: 16_384 }, ..auto };
         b.iter("generate-xla-16k-batches", || fig9::generate(&xla).unwrap());
     }
     b.report();

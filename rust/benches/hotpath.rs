@@ -2,7 +2,8 @@
 //! serves it — rank-LUT batch vs the seed's route-per-access
 //! reference, the exact closed form, the DES (next-hop + port-arena
 //! walk), the interpreter's channel-protocol loads, and the AOT XLA
-//! kernel across lowered batch sizes.
+//! kernel across lowered batch sizes (driven through the
+//! `memclos::api` backends).
 //!
 //! Writes the machine-readable perf trajectory to `BENCH_hotpath.json`
 //! (override the path with `--json PATH`; schema in
@@ -15,8 +16,8 @@
 
 use std::path::PathBuf;
 
+use memclos::api::{AddrStream, LatencyBackend, XlaBackend};
 use memclos::figures::hotpath;
-use memclos::runtime::{ArtifactSet, LatencyEngine};
 use memclos::util::bench::black_box;
 use memclos::util::rng::Rng;
 
@@ -32,38 +33,38 @@ fn json_path() -> PathBuf {
 
 fn main() {
     let setup = hotpath::design_point().unwrap();
-    let space = setup.map.space_words();
-    let params = setup.kernel_params();
     let mut rng = Rng::new(42);
 
     // Native + DES + interpreter paths (shared with `memclos
     // bench-hotpath`).
     let mut b = hotpath::measure(&setup);
 
-    // XLA engine across lowered batch sizes.
-    match ArtifactSet::new() {
-        Ok(set) => {
-            for batch in [4096usize, 16_384, 65_536, 262_144] {
-                let name = format!("latency_batch_{batch}");
-                if !set.available(&name) {
-                    eprintln!("(skipping {name}: artifact missing)");
-                    continue;
-                }
-                let engine = LatencyEngine::load(&set, batch).unwrap();
-                let mut buf = vec![0i32; batch];
-                rng.fill_addresses(space, &mut buf);
-                let label = format!("xla-{batch}");
-                b.iter_items(&label, batch as u64, || {
-                    let (_, mean) = engine.run(&buf, &params).unwrap();
-                    black_box(mean)
-                });
-                let label = format!("xla-mean-{batch}");
-                b.iter_items(&label, batch as u64, || {
-                    black_box(engine.run_mean(&buf, &params).unwrap())
-                });
+    // XLA backend across lowered batch sizes: the mean path (what the
+    // sweep hot loop runs) and the full per-address latency vector.
+    for batch in [4096usize, 16_384, 65_536, 262_144] {
+        let backend = match XlaBackend::load(batch) {
+            Ok(be) => be,
+            Err(e) => {
+                eprintln!("(skipping xla batch {batch}: {e})");
+                continue;
             }
-        }
-        Err(e) => eprintln!("(no PJRT client: {e})"),
+        };
+        // NOTE: `xla-eval-{batch}` times the full api path (address
+        // generation + run_mean), deliberately NOT named `xla-{batch}`
+        // so it cannot be diffed against a differently-scoped case.
+        let seed = rng.next_u64();
+        b.iter_items(&format!("xla-eval-{batch}"), batch as u64, || {
+            let eval = backend
+                .evaluate(&setup, &AddrStream::new(batch, seed))
+                .expect("xla evaluate");
+            black_box(eval.mean_cycles)
+        });
+        let mut buf = vec![0i32; batch];
+        rng.fill_addresses(setup.map.space_words(), &mut buf);
+        b.iter_items(&format!("xla-latencies-{batch}"), batch as u64, || {
+            let (lat, mean) = backend.batch_latencies(&setup, &buf).expect("xla batch");
+            black_box((lat.len(), mean))
+        });
     }
 
     b.report();
@@ -72,7 +73,7 @@ fn main() {
     println!("\nthroughput (addresses/s):");
     for m in b.results() {
         if m.items > 0 {
-            println!("  {:<16} {:>14.0}", m.name, m.throughput());
+            println!("  {:<20} {:>14.0}", m.name, m.throughput());
         }
     }
     println!("\n{}", hotpath::render(&setup, &b));

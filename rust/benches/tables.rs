@@ -1,12 +1,14 @@
 //! Bench: regenerate the paper's parameter tables (Tables 1-5).
 
+use memclos::api::Tech;
 use memclos::figures::tables;
 use memclos::util::bench::Bench;
 
 fn main() {
-    print!("{}", tables::render_all());
+    let tech = Tech::default();
+    print!("{}", tables::render_all(&tech));
 
     let mut b = Bench::new("tables");
-    b.iter("render-all", tables::render_all);
+    b.iter("render-all", || tables::render_all(&tech));
     b.report();
 }

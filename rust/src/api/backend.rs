@@ -1,0 +1,492 @@
+//! One [`LatencyBackend`] trait for every evaluation path, plus the
+//! [`Evaluator`] that owns backend auto-selection.
+//!
+//! The four backends are proven equivalent elsewhere in the crate
+//! (`selfcheck`, `des_matches_analytic`, `native_mc_agrees_with_exact`):
+//!
+//! | backend | path | cost |
+//! |---------|------|------|
+//! | [`ExactBackend`] | closed-form expectation | O(k), no sampling |
+//! | [`NativeMcBackend`] | native rank-LUT Monte-Carlo | O(samples) |
+//! | [`XlaBackend`] | AOT-compiled PJRT kernel | O(samples), batched |
+//! | [`DesBackend`] | discrete-event simulation | O(samples x hops) |
+//!
+//! [`Mode`] is the `Copy`/`Send` description of which backend to use
+//! (what crosses thread boundaries in the sweep coordinator);
+//! [`Evaluator::new`] turns it into a live backend, resolving
+//! [`Mode::Auto`] to XLA when the lowered artifact exists and to
+//! native Monte-Carlo otherwise.
+
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::emulation::EmulationSetup;
+use crate::runtime::{artifacts_dir, ArtifactSet, LatencyEngine};
+use crate::sim::NetworkSim;
+use crate::util::rng::Rng;
+
+/// Description of the random address stream a backend should draw:
+/// `samples` uniform addresses over the emulated space, seeded
+/// deterministically. The exact backend ignores it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AddrStream {
+    /// Number of addresses to evaluate.
+    pub samples: usize,
+    /// RNG seed (same seed, same stream).
+    pub seed: u64,
+}
+
+impl AddrStream {
+    /// A stream of `samples` addresses from `seed`.
+    pub fn new(samples: usize, seed: u64) -> Self {
+        Self { samples, seed }
+    }
+}
+
+/// Result of evaluating one design point.
+#[derive(Clone, Debug)]
+pub struct Evaluation {
+    /// Which backend produced it (`"exact"`, `"native"`, `"xla"`,
+    /// `"des"`).
+    pub backend: &'static str,
+    /// Mean access latency in cycles (== ns at 1 GHz).
+    pub mean_cycles: f64,
+    /// Samples behind the estimate (0 for the closed form).
+    pub samples: usize,
+    /// Per-rank round-trip latencies, when the backend materialises
+    /// them (the closed form does; sampling backends leave it empty).
+    pub per_rank: Vec<f64>,
+}
+
+/// One evaluation path for the emulated-memory access latency.
+pub trait LatencyBackend {
+    /// Short stable name (used in reports and JSON output).
+    fn name(&self) -> &'static str;
+
+    /// Evaluate the mean access latency of `setup` over `addrs`.
+    fn evaluate(&self, setup: &EmulationSetup, addrs: &AddrStream) -> Result<Evaluation>;
+}
+
+/// Closed-form expectation over uniform addresses (O(k), exact).
+pub struct ExactBackend;
+
+impl LatencyBackend for ExactBackend {
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+
+    fn evaluate(&self, setup: &EmulationSetup, _addrs: &AddrStream) -> Result<Evaluation> {
+        Ok(Evaluation {
+            backend: self.name(),
+            mean_cycles: setup.expected_latency(),
+            samples: 0,
+            per_rank: setup.rank_latencies().to_vec(),
+        })
+    }
+}
+
+/// Native Monte-Carlo over the rank-latency LUT.
+pub struct NativeMcBackend;
+
+impl LatencyBackend for NativeMcBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn evaluate(&self, setup: &EmulationSetup, addrs: &AddrStream) -> Result<Evaluation> {
+        anyhow::ensure!(addrs.samples > 0, "native backend needs samples > 0");
+        Ok(Evaluation {
+            backend: self.name(),
+            mean_cycles: setup.mc_latency(addrs.samples, addrs.seed),
+            samples: addrs.samples,
+            per_rank: Vec::new(),
+        })
+    }
+}
+
+/// Monte-Carlo on the AOT-compiled XLA kernel (the production hot
+/// path). Holds one PJRT executable lowered for a fixed batch size
+/// plus a reusable address buffer, so repeated `evaluate` calls are
+/// allocation-free after the first; PJRT handles are not `Send`, so
+/// construct one per thread.
+pub struct XlaBackend {
+    engine: LatencyEngine,
+    platform: String,
+    /// Scratch address batch, reused across `evaluate` calls.
+    buf: RefCell<Vec<i32>>,
+}
+
+impl XlaBackend {
+    /// Load the `latency_batch_<batch>` artifact from the default
+    /// artifact directory (`$MEMCLOS_ARTIFACTS` or `artifacts/`).
+    pub fn load(batch: usize) -> Result<Self> {
+        let set = ArtifactSet::new()?;
+        Self::load_from(&set, batch)
+    }
+
+    /// Load from an explicit [`ArtifactSet`].
+    pub fn load_from(set: &ArtifactSet, batch: usize) -> Result<Self> {
+        Ok(Self {
+            engine: LatencyEngine::load(set, batch)?,
+            platform: set.platform(),
+            buf: RefCell::new(Vec::new()),
+        })
+    }
+
+    /// The fixed batch size the kernel was lowered for.
+    pub fn batch_size(&self) -> usize {
+        self.engine.batch_size()
+    }
+
+    /// PJRT platform name (e.g. "cpu").
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    /// Per-address latencies for exactly [`Self::batch_size`]
+    /// addresses, plus the batch mean — the raw kernel contract, used
+    /// by `selfcheck` to compare against the native model bit by bit.
+    pub fn batch_latencies(
+        &self,
+        setup: &EmulationSetup,
+        addresses: &[i32],
+    ) -> Result<(Vec<f32>, f32)> {
+        self.engine.run(addresses, &setup.kernel_params())
+    }
+}
+
+impl LatencyBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn evaluate(&self, setup: &EmulationSetup, addrs: &AddrStream) -> Result<Evaluation> {
+        anyhow::ensure!(addrs.samples > 0, "xla backend needs samples > 0");
+        let batch = self.engine.batch_size();
+        let params = setup.kernel_params();
+        let space = setup.map.space_words();
+        let mut rng = Rng::new(addrs.seed);
+        let mut buf = self.buf.borrow_mut();
+        buf.resize(batch, 0);
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        while n < addrs.samples {
+            rng.fill_addresses(space, &mut buf);
+            let mean = self.engine.run_mean(&buf, &params)?;
+            sum += mean as f64 * batch as f64;
+            n += batch;
+        }
+        Ok(Evaluation {
+            backend: self.name(),
+            mean_cycles: sum / n as f64,
+            samples: n,
+            per_rank: Vec::new(),
+        })
+    }
+}
+
+/// Monte-Carlo through the discrete-event network simulator: each
+/// sampled address becomes a full request/response round trip over the
+/// explicit switch graph (integer clock, zero load — a single client's
+/// dependent accesses never contend).
+pub struct DesBackend;
+
+impl LatencyBackend for DesBackend {
+    fn name(&self) -> &'static str {
+        "des"
+    }
+
+    fn evaluate(&self, setup: &EmulationSetup, addrs: &AddrStream) -> Result<Evaluation> {
+        anyhow::ensure!(addrs.samples > 0, "des backend needs samples > 0");
+        let mut sim = NetworkSim::new(&setup.topo, &setup.model);
+        let mut rng = Rng::new(addrs.seed);
+        let space = setup.map.space_words();
+        let client = setup.map.client;
+        let mut now = 0u64;
+        let mut sum = 0.0;
+        for _ in 0..addrs.samples {
+            let tile = setup.map.tile_of(rng.below(space));
+            let done = sim.access(client, tile, now);
+            sum += (done - now) as f64;
+            now = done;
+        }
+        Ok(Evaluation {
+            backend: self.name(),
+            mean_cycles: sum / addrs.samples as f64,
+            samples: addrs.samples,
+            per_rank: Vec::new(),
+        })
+    }
+}
+
+/// Which backend to evaluate with. `Copy` + `Send`: this is what
+/// crosses thread boundaries (each sweep worker turns it into its own
+/// [`Evaluator`], because PJRT handles are not `Send`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// XLA when the lowered artifact exists and the PJRT runtime can
+    /// load it, native Monte-Carlo otherwise (the production default —
+    /// see [`Evaluator::with_artifacts`] for the fallback rule).
+    Auto {
+        /// Addresses per point.
+        samples: usize,
+        /// Artifact batch size (must match a lowered artifact).
+        batch: usize,
+    },
+    /// Closed-form expectation.
+    Exact,
+    /// Native Monte-Carlo.
+    Native {
+        /// Addresses per point.
+        samples: usize,
+    },
+    /// AOT-kernel Monte-Carlo.
+    Xla {
+        /// Addresses per point.
+        samples: usize,
+        /// Artifact batch size (must match a lowered artifact).
+        batch: usize,
+    },
+    /// Discrete-event simulation.
+    Des {
+        /// Round trips per point.
+        samples: usize,
+    },
+}
+
+impl Mode {
+    /// Parse a `--mode` flag value (`None` means auto).
+    pub fn parse(flag: Option<&str>, samples: usize, batch: usize) -> Result<Mode> {
+        Ok(match flag {
+            None | Some("auto") => Mode::Auto { samples, batch },
+            Some("exact") => Mode::Exact,
+            Some("native") => Mode::Native { samples },
+            Some("xla") => Mode::Xla { samples, batch },
+            Some("des") => Mode::Des { samples },
+            Some(other) => bail!("unknown --mode {other} (auto|exact|native|xla|des)"),
+        })
+    }
+
+    /// Resolve [`Mode::Auto`] against artifact availability; every
+    /// other mode is already concrete.
+    pub fn resolve(self, xla_available: bool) -> Mode {
+        match self {
+            Mode::Auto { samples, batch } if xla_available => Mode::Xla { samples, batch },
+            Mode::Auto { samples, .. } => Mode::Native { samples },
+            concrete => concrete,
+        }
+    }
+
+    /// Addresses the mode draws per point (0 for the closed form).
+    pub fn samples(self) -> usize {
+        match self {
+            Mode::Exact => 0,
+            Mode::Auto { samples, .. }
+            | Mode::Native { samples }
+            | Mode::Xla { samples, .. }
+            | Mode::Des { samples } => samples,
+        }
+    }
+}
+
+/// True when the lowered `latency_batch_<batch>` artifact exists in
+/// `dir` (or the default artifact directory). A plain file probe — no
+/// PJRT client is created.
+fn xla_artifact_available(dir: Option<&Path>, batch: usize) -> bool {
+    let dir = dir.map(Path::to_path_buf).unwrap_or_else(artifacts_dir);
+    dir.join(format!("latency_batch_{batch}.hlo.txt")).exists()
+}
+
+/// Cheap probe: the `latency_batch_<batch>` artifact exists *and* a
+/// PJRT client can be created (no kernel is compiled). Use to decide
+/// whether the XLA path is worth attempting; [`Mode::Auto`] performs
+/// the equivalent check (plus a full load, falling back to native on
+/// any failure) internally.
+pub fn xla_ready(batch: usize) -> bool {
+    xla_artifact_available(None, batch) && ArtifactSet::new().is_ok()
+}
+
+/// A resolved [`Mode`]: the live backend plus the sampling defaults,
+/// ready to evaluate design points.
+pub struct Evaluator {
+    mode: Mode,
+    backend: Box<dyn LatencyBackend>,
+}
+
+impl Evaluator {
+    /// Instantiate the backend for `mode`, resolving [`Mode::Auto`]
+    /// against the default artifact directory.
+    pub fn new(mode: Mode) -> Result<Self> {
+        Self::with_artifacts(mode, None)
+    }
+
+    /// Like [`Evaluator::new`] with an explicit artifact directory
+    /// (tests use this to force the auto-selection branches).
+    ///
+    /// [`Mode::Auto`] never fails over to an error: when the artifact
+    /// file is missing, *or* it exists but the PJRT runtime cannot
+    /// load it (no xla shared library, compile failure), the evaluator
+    /// falls back to the native Monte-Carlo backend. An explicit
+    /// [`Mode::Xla`] reports the load error instead.
+    pub fn with_artifacts(mode: Mode, dir: Option<PathBuf>) -> Result<Self> {
+        if let Mode::Auto { samples, batch } = mode {
+            if xla_artifact_available(dir.as_deref(), batch) {
+                if let Ok(backend) = Self::load_xla(dir, batch) {
+                    return Ok(Self {
+                        mode: Mode::Xla { samples, batch },
+                        backend: Box::new(backend),
+                    });
+                }
+            }
+            return Ok(Self { mode: Mode::Native { samples }, backend: Box::new(NativeMcBackend) });
+        }
+        let backend: Box<dyn LatencyBackend> = match mode {
+            Mode::Exact => Box::new(ExactBackend),
+            Mode::Native { .. } => Box::new(NativeMcBackend),
+            Mode::Des { .. } => Box::new(DesBackend),
+            Mode::Xla { batch, .. } => Box::new(
+                Self::load_xla(dir, batch)
+                    .with_context(|| format!("xla backend, batch {batch}"))?,
+            ),
+            Mode::Auto { .. } => unreachable!("handled above"),
+        };
+        Ok(Self { mode, backend })
+    }
+
+    fn load_xla(dir: Option<PathBuf>, batch: usize) -> Result<XlaBackend> {
+        let set = match dir {
+            Some(d) => ArtifactSet::with_dir(d)?,
+            None => ArtifactSet::new()?,
+        };
+        XlaBackend::load_from(&set, batch)
+    }
+
+    /// The resolved mode (never [`Mode::Auto`]).
+    pub fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    /// The live backend's name.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// An address stream sized to the mode's sample count.
+    pub fn stream(&self, seed: u64) -> AddrStream {
+        AddrStream::new(self.mode.samples(), seed)
+    }
+
+    /// Evaluate one design point.
+    pub fn evaluate(&self, setup: &EmulationSetup, addrs: &AddrStream) -> Result<Evaluation> {
+        self.backend.evaluate(setup, addrs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::DesignPoint;
+
+    fn small_setup() -> EmulationSetup {
+        DesignPoint::clos(256).mem_kb(64).k(255).build().unwrap()
+    }
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(Mode::parse(None, 10, 4).unwrap(), Mode::Auto { samples: 10, batch: 4 });
+        assert_eq!(Mode::parse(Some("auto"), 10, 4).unwrap(), Mode::Auto { samples: 10, batch: 4 });
+        assert_eq!(Mode::parse(Some("exact"), 10, 4).unwrap(), Mode::Exact);
+        assert_eq!(Mode::parse(Some("native"), 10, 4).unwrap(), Mode::Native { samples: 10 });
+        assert_eq!(Mode::parse(Some("xla"), 10, 4).unwrap(), Mode::Xla { samples: 10, batch: 4 });
+        assert_eq!(Mode::parse(Some("des"), 10, 4).unwrap(), Mode::Des { samples: 10 });
+        assert!(Mode::parse(Some("banana"), 10, 4).is_err());
+    }
+
+    #[test]
+    fn auto_selection_prefers_xla_when_artifacts_exist() {
+        // The pure resolution rule: artifacts present -> XLA, absent ->
+        // native; concrete modes pass through.
+        let auto = Mode::Auto { samples: 8, batch: 4 };
+        assert_eq!(auto.resolve(true), Mode::Xla { samples: 8, batch: 4 });
+        assert_eq!(auto.resolve(false), Mode::Native { samples: 8 });
+        assert_eq!(Mode::Exact.resolve(true), Mode::Exact);
+        assert_eq!(Mode::Des { samples: 8 }.resolve(true), Mode::Des { samples: 8 });
+    }
+
+    #[test]
+    fn auto_selection_falls_back_to_native_without_artifacts() {
+        // An artifact directory that cannot exist: auto must resolve to
+        // the native Monte-Carlo backend without touching PJRT.
+        let dir = std::env::temp_dir().join("memclos-no-artifacts-here");
+        let ev = Evaluator::with_artifacts(
+            Mode::Auto { samples: 1000, batch: 4096 },
+            Some(dir),
+        )
+        .unwrap();
+        assert_eq!(ev.backend_name(), "native");
+        assert_eq!(ev.mode(), Mode::Native { samples: 1000 });
+        assert_eq!(ev.stream(7), AddrStream::new(1000, 7));
+    }
+
+    #[test]
+    fn auto_falls_back_when_artifact_is_unloadable() {
+        // The artifact file exists but is not valid HLO (stand-in for
+        // "present artifact, unusable XLA runtime"): auto must fall
+        // back to native instead of failing, while an explicit xla
+        // mode reports the error.
+        let dir = std::env::temp_dir().join("memclos-bad-artifact-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("latency_batch_4096.hlo.txt"), "not an hlo module").unwrap();
+        let auto = Mode::Auto { samples: 10, batch: 4096 };
+        let ev = Evaluator::with_artifacts(auto, Some(dir.clone())).unwrap();
+        assert_eq!(ev.backend_name(), "native");
+        assert!(Evaluator::with_artifacts(
+            Mode::Xla { samples: 10, batch: 4096 },
+            Some(dir)
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn exact_mode_forces_the_closed_form() {
+        let ev = Evaluator::new(Mode::Exact).unwrap();
+        assert_eq!(ev.backend_name(), "exact");
+        let setup = small_setup();
+        let e = ev.evaluate(&setup, &ev.stream(0)).unwrap();
+        assert_eq!(e.mean_cycles, setup.expected_latency());
+        assert_eq!(e.samples, 0);
+        assert_eq!(e.per_rank, setup.rank_latencies());
+    }
+
+    #[test]
+    fn native_backend_agrees_with_exact() {
+        let setup = small_setup();
+        let e = NativeMcBackend.evaluate(&setup, &AddrStream::new(40_000, 9)).unwrap();
+        assert_eq!(e.backend, "native");
+        assert_eq!(e.samples, 40_000);
+        let exact = setup.expected_latency();
+        assert!((e.mean_cycles - exact).abs() / exact < 0.02, "{} vs {exact}", e.mean_cycles);
+    }
+
+    #[test]
+    fn des_backend_agrees_with_exact() {
+        // Default-tech latencies are integral, so the DES's integer
+        // clock introduces no rounding; the only error is sampling.
+        let setup = small_setup();
+        let e = DesBackend.evaluate(&setup, &AddrStream::new(4_000, 11)).unwrap();
+        assert_eq!(e.backend, "des");
+        let exact = setup.expected_latency();
+        assert!((e.mean_cycles - exact).abs() / exact < 0.05, "{} vs {exact}", e.mean_cycles);
+    }
+
+    #[test]
+    fn sampling_backends_reject_empty_streams() {
+        let setup = small_setup();
+        let empty = AddrStream::new(0, 0);
+        assert!(NativeMcBackend.evaluate(&setup, &empty).is_err());
+        assert!(DesBackend.evaluate(&setup, &empty).is_err());
+        assert!(ExactBackend.evaluate(&setup, &empty).is_ok());
+    }
+}

@@ -1,0 +1,333 @@
+//! The typed [`DesignPoint`] builder — the only constructor of
+//! [`EmulationSetup`]s outside `emulation/` itself.
+//!
+//! Defaults are the paper's: 128 KB tiles, a full emulation
+//! (`k = tiles - 1`), Table 1/2/5 technology. Every field has a setter,
+//! [`DesignPoint::with_doc`] layers `--set`/`--config` overrides on
+//! top, and [`DesignPoint::validate`] reports errors that name the
+//! offending field.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::config::Doc;
+use crate::emulation::{EmulationSetup, TopologyKind};
+use crate::netmodel::NetParams;
+use crate::tech::{ChipTech, InterposerTech};
+use crate::topology::{ClosSpec, MeshSpec};
+
+/// The technology/model parameter bundle behind one design point:
+/// Table 1 (processing chip), Table 2 (interposer) and Table 5
+/// (network model).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Tech {
+    /// Network performance-model parameters (Table 5).
+    pub net: NetParams,
+    /// Processing-chip technology (Table 1).
+    pub chip: ChipTech,
+    /// Interposer technology (Table 2).
+    pub ip: InterposerTech,
+}
+
+impl Tech {
+    /// Build from a config doc (`net.*`, `chip.*`, `interposer.*`
+    /// keys), defaulting to the paper's tables.
+    pub fn from_doc(doc: &Doc) -> Self {
+        Self {
+            net: NetParams::from_doc(doc),
+            chip: ChipTech::from_doc(doc),
+            ip: InterposerTech::from_doc(doc),
+        }
+    }
+}
+
+/// A design point under construction: topology, scale, emulation size
+/// and technology, with the paper's parameters as defaults.
+///
+/// See the [module docs](crate::api) for a worked example.
+#[derive(Clone, Debug)]
+pub struct DesignPoint {
+    kind: TopologyKind,
+    tiles: usize,
+    mem_kb: u32,
+    k: Option<usize>,
+    clos_spec: Option<ClosSpec>,
+    net: NetParams,
+    chip: ChipTech,
+    ip: InterposerTech,
+}
+
+impl DesignPoint {
+    /// A folded-Clos system of `tiles` tiles (the paper's proposal).
+    pub fn clos(tiles: usize) -> Self {
+        Self::new(TopologyKind::Clos, tiles)
+    }
+
+    /// A 2D-mesh system of `tiles` tiles (the paper's baseline).
+    pub fn mesh(tiles: usize) -> Self {
+        Self::new(TopologyKind::Mesh, tiles)
+    }
+
+    /// A system of `tiles` tiles on the given interconnect, with paper
+    /// defaults for everything else.
+    pub fn new(kind: TopologyKind, tiles: usize) -> Self {
+        Self {
+            kind,
+            tiles,
+            mem_kb: 128,
+            k: None,
+            clos_spec: None,
+            net: NetParams::default(),
+            chip: ChipTech::default(),
+            ip: InterposerTech::default(),
+        }
+    }
+
+    /// Paper defaults overridden by a config doc: `system.topo`,
+    /// `system.tiles`, `system.mem_kb`, `system.k` plus the `net.*`,
+    /// `chip.*` and `interposer.*` technology keys.
+    pub fn from_doc(doc: &Doc) -> Result<Self> {
+        Self::new(TopologyKind::Clos, 1024).with_doc(doc)
+    }
+
+    /// Layer a config doc's overrides on top of this point. Structure
+    /// keys (`system.*`) replace only what the doc sets; technology
+    /// parameters are rebuilt as doc-over-paper-default, so call
+    /// `with_doc` *before* any explicit `net`/`chip`/`interposer`
+    /// setter you want to win.
+    pub fn with_doc(mut self, doc: &Doc) -> Result<Self> {
+        if doc.get("system.topo").is_some() {
+            self.kind = TopologyKind::parse(&doc.str("system.topo", ""))
+                .map_err(|e| anyhow!("field `topo`: {e}"))?;
+        }
+        self.tiles = doc.int("system.tiles", self.tiles as i64) as usize;
+        self.mem_kb = doc.int("system.mem_kb", self.mem_kb as i64) as u32;
+        if doc.get("system.k").is_some() {
+            self.k = Some(doc.int("system.k", 0) as usize);
+        }
+        self.net = NetParams::from_doc(doc);
+        self.chip = ChipTech::from_doc(doc);
+        self.ip = InterposerTech::from_doc(doc);
+        Ok(self)
+    }
+
+    /// Set the interconnect.
+    pub fn topology(mut self, kind: TopologyKind) -> Self {
+        self.kind = kind;
+        self
+    }
+
+    /// Set the system tile count.
+    pub fn tiles(mut self, tiles: usize) -> Self {
+        self.tiles = tiles;
+        self
+    }
+
+    /// Set the per-tile memory capacity in KB (default 128).
+    pub fn mem_kb(mut self, mem_kb: u32) -> Self {
+        self.mem_kb = mem_kb;
+        self
+    }
+
+    /// Set the emulation size in memory tiles (default `tiles - 1`,
+    /// the full emulation).
+    pub fn k(mut self, k: usize) -> Self {
+        self.k = Some(k);
+        self
+    }
+
+    /// Use a custom folded-Clos spec (e.g. degree-64 switches) instead
+    /// of the paper's degree-32 layout. Clos systems only.
+    pub fn clos_spec(mut self, spec: ClosSpec) -> Self {
+        self.clos_spec = Some(spec);
+        self
+    }
+
+    /// Set the network-model parameters (Table 5).
+    pub fn net(mut self, net: NetParams) -> Self {
+        self.net = net;
+        self
+    }
+
+    /// Set the processing-chip technology (Table 1).
+    pub fn chip(mut self, chip: ChipTech) -> Self {
+        self.chip = chip;
+        self
+    }
+
+    /// Set the interposer technology (Table 2).
+    pub fn interposer(mut self, ip: InterposerTech) -> Self {
+        self.ip = ip;
+        self
+    }
+
+    /// Set all three technology bundles at once.
+    pub fn tech(mut self, tech: &Tech) -> Self {
+        self.net = tech.net;
+        self.chip = tech.chip.clone();
+        self.ip = tech.ip.clone();
+        self
+    }
+
+    /// The interconnect this point uses.
+    pub fn kind(&self) -> TopologyKind {
+        self.kind
+    }
+
+    /// The system tile count.
+    pub fn system_tiles(&self) -> usize {
+        self.tiles
+    }
+
+    /// The per-tile memory capacity in KB.
+    pub fn tile_mem_kb(&self) -> u32 {
+        self.mem_kb
+    }
+
+    /// The effective emulation size (`k` or the full-emulation
+    /// default).
+    pub fn emulation_tiles(&self) -> usize {
+        self.k.unwrap_or_else(|| self.tiles.saturating_sub(1))
+    }
+
+    /// Check every field, reporting the first offender by name.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.tiles >= 2,
+            "field `tiles`: need at least 2 tiles (client + memory), got {}",
+            self.tiles
+        );
+        match self.kind {
+            TopologyKind::Clos => {
+                let spec = self.clos_spec.unwrap_or_else(|| ClosSpec::with_tiles(self.tiles));
+                ensure!(
+                    spec.tiles == self.tiles,
+                    "field `clos_spec`: spec covers {} tiles but the design point has {}",
+                    spec.tiles,
+                    self.tiles
+                );
+                spec.validate().map_err(|e| anyhow!("field `tiles`: {e}"))?;
+            }
+            TopologyKind::Mesh => {
+                if self.clos_spec.is_some() {
+                    bail!("field `clos_spec`: only valid for Clos topologies");
+                }
+                MeshSpec::with_tiles(self.tiles)
+                    .validate()
+                    .map_err(|e| anyhow!("field `tiles`: {e}"))?;
+            }
+        }
+        ensure!(
+            self.mem_kb >= 1 && self.mem_kb.is_power_of_two(),
+            "field `mem_kb`: tile capacity must be a power of two KB, got {}",
+            self.mem_kb
+        );
+        let k = self.emulation_tiles();
+        ensure!(
+            k >= 1 && k < self.tiles,
+            "field `k`: need 1 <= k < tiles (tiles = {}), got {k}",
+            self.tiles
+        );
+        Ok(())
+    }
+
+    /// Validate and instantiate the design point.
+    pub fn build(&self) -> Result<EmulationSetup> {
+        self.validate()?;
+        EmulationSetup::assemble(
+            self.kind,
+            self.tiles,
+            self.mem_kb,
+            self.emulation_tiles(),
+            self.net,
+            &self.chip,
+            &self.ip,
+            self.clos_spec,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults() {
+        let dp = DesignPoint::clos(1024);
+        assert_eq!(dp.system_tiles(), 1024);
+        assert_eq!(dp.emulation_tiles(), 1023);
+        let setup = dp.build().unwrap();
+        assert_eq!(setup.mem_kb, 128);
+        assert_eq!(setup.map.k, 1023);
+    }
+
+    #[test]
+    fn validation_names_the_offending_field() {
+        for (dp, field) in [
+            (DesignPoint::clos(1024).k(0), "`k`"),
+            (DesignPoint::clos(1024).k(1024), "`k`"),
+            (DesignPoint::clos(1000), "`tiles`"),
+            (DesignPoint::mesh(128), "`tiles`"),
+            (DesignPoint::clos(1024).mem_kb(96), "`mem_kb`"),
+            (DesignPoint::mesh(256).clos_spec(ClosSpec::default()), "`clos_spec`"),
+            (DesignPoint::clos(1024).clos_spec(ClosSpec::with_tiles(256)), "`clos_spec`"),
+        ] {
+            let err = dp.build().unwrap_err().to_string();
+            assert!(err.contains(field), "error `{err}` does not name {field}");
+        }
+    }
+
+    #[test]
+    fn doc_overrides_flow_to_the_setup() {
+        let doc = Doc::parse(
+            "[system]\ntopo = \"mesh\"\ntiles = 256\nmem_kb = 64\nk = 100\n[net]\nt_mem = 3.0",
+        )
+        .unwrap();
+        let dp = DesignPoint::from_doc(&doc).unwrap();
+        assert_eq!(dp.kind(), TopologyKind::Mesh);
+        let setup = dp.build().unwrap();
+        assert_eq!(setup.map.tiles, 256);
+        assert_eq!(setup.mem_kb, 64);
+        assert_eq!(setup.map.k, 100);
+        assert_eq!(setup.model.net.t_mem, 3.0);
+    }
+
+    #[test]
+    fn doc_t_mem_override_changes_latency() {
+        let base = DesignPoint::clos(1024).build().unwrap().expected_latency();
+        let doc = Doc::parse("[net]\nt_mem = 50.0").unwrap();
+        let slow =
+            DesignPoint::clos(1024).with_doc(&doc).unwrap().build().unwrap().expected_latency();
+        assert!(
+            (slow - (base + 49.0)).abs() < 1e-9,
+            "t_mem grows every access by the same amount: {slow} vs {base} + 49"
+        );
+    }
+
+    #[test]
+    fn custom_clos_spec_is_honoured() {
+        let spec = ClosSpec { tiles: 4096, tiles_per_edge: 32, tiles_per_chip: 1024, degree: 64 };
+        let setup = DesignPoint::clos(4096).clos_spec(spec).build().unwrap();
+        match &setup.topo {
+            crate::topology::Topology::Clos(c) => assert_eq!(c.spec().degree, 64),
+            other => panic!("expected Clos, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tech_bundle_round_trips() {
+        // tech() must be equivalent to setting the three bundles
+        // individually (the legacy-shim equivalence property test
+        // lives in tests/api_shim.rs).
+        let doc = Doc::parse("[net]\nt_switch = 3.0\n[chip]\nclock_ghz = 2.0").unwrap();
+        let tech = Tech::from_doc(&doc);
+        let a = DesignPoint::clos(1024).tech(&tech).build().unwrap();
+        let b = DesignPoint::clos(1024)
+            .net(tech.net)
+            .chip(tech.chip.clone())
+            .interposer(tech.ip.clone())
+            .build()
+            .unwrap();
+        assert_eq!(a.expected_latency().to_bits(), b.expected_latency().to_bits());
+        assert_eq!(a.model.net.t_switch, 3.0);
+    }
+}

@@ -1,0 +1,75 @@
+//! # `memclos::api` — the one way to build and evaluate design points
+//!
+//! Every other layer of the crate (CLI, figures, sweep coordinator,
+//! benches) constructs emulated-memory design points and evaluates
+//! their access latency through this module. Two pieces:
+//!
+//! * [`DesignPoint`] — a typed builder over the paper's defaults.
+//!   [`EmulationSetup::build`]'s seven positional arguments survive
+//!   only as a thin shim delegating here; validation errors name the
+//!   offending field (`` field `k`: need 1 <= k < tiles ``).
+//! * [`LatencyBackend`] — one trait for every evaluation path:
+//!   [`ExactBackend`] (closed-form expectation), [`NativeMcBackend`]
+//!   (native Monte-Carlo), [`XlaBackend`] (the AOT-compiled PJRT
+//!   kernel) and [`DesBackend`] (the discrete-event simulator).
+//!   [`Evaluator`] owns backend auto-selection: [`Mode::Auto`]
+//!   resolves to XLA when the lowered artifact exists *and* the PJRT
+//!   runtime loads it, and to the native Monte-Carlo path otherwise.
+//!
+//! [`Tech`] bundles the technology/model parameters (Tables 1, 2 and
+//! 5) and [`Tech::from_doc`] / [`DesignPoint::from_doc`] make
+//! `--set`/`--config` overrides flow to every consumer. [`Report`]
+//! renders results in the same machine-diffable JSON schema family as
+//! `BENCH_hotpath.json`.
+//!
+//! ## Worked example
+//!
+//! Evaluate the paper's headline design point — a 4,096-tile folded
+//! Clos emulating one large memory over 4,095 tiles of 128 KB — with
+//! whatever backend is available, then force the closed form:
+//!
+//! ```no_run
+//! use memclos::api::{AddrStream, DesignPoint, Evaluator, Mode};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let setup = DesignPoint::clos(4096).mem_kb(128).k(4095).build()?;
+//!
+//! // Auto: XLA when `artifacts/` holds the lowered kernel, else
+//! // native Monte-Carlo.
+//! let auto = Evaluator::new(Mode::Auto { samples: 65_536, batch: 16_384 })?;
+//! let mc = auto.evaluate(&setup, &auto.stream(42))?;
+//! println!("{}: {:.2} cycles/access ({} samples)", mc.backend, mc.mean_cycles, mc.samples);
+//!
+//! // Exact closed form (O(k), no sampling).
+//! let exact = Evaluator::new(Mode::Exact)?;
+//! let e = exact.evaluate(&setup, &AddrStream::new(0, 0))?;
+//! assert!((e.mean_cycles - mc.mean_cycles).abs() / e.mean_cycles < 0.01);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Config overrides reach the same builder through
+//! [`DesignPoint::from_doc`]:
+//!
+//! ```
+//! use memclos::api::DesignPoint;
+//! use memclos::config::Doc;
+//!
+//! let doc = Doc::parse("[system]\ntopo = \"mesh\"\ntiles = 1024\n[net]\nt_mem = 2.0").unwrap();
+//! let setup = DesignPoint::from_doc(&doc).unwrap().build().unwrap();
+//! assert_eq!(setup.map.tiles, 1024);
+//! assert_eq!(setup.model.net.t_mem, 2.0);
+//! ```
+//!
+//! [`EmulationSetup::build`]: crate::emulation::EmulationSetup::build
+
+pub mod backend;
+pub mod design;
+pub mod report;
+
+pub use backend::{
+    xla_ready, AddrStream, DesBackend, Evaluation, Evaluator, ExactBackend, LatencyBackend,
+    Mode, NativeMcBackend, XlaBackend,
+};
+pub use design::{DesignPoint, Tech};
+pub use report::{Report, Row};

@@ -1,0 +1,165 @@
+//! Machine-diffable JSON reports in the same schema family as
+//! `BENCH_hotpath.json`:
+//!
+//! ```json
+//! {"bench": "<name>", "results": [{"name": "...", "...": ...}, ...]}
+//! ```
+//!
+//! Every row starts with a `name` and carries flat scalar fields, so
+//! the perf trajectory, sweeps and figure data diff cleanly across
+//! PRs. Numbers render with a fixed precision to keep diffs stable.
+
+use std::fmt::Write as _;
+
+/// One result row: a name plus flat scalar fields, in insertion order.
+#[derive(Clone, Debug)]
+pub struct Row {
+    fields: Vec<(String, String)>,
+}
+
+impl Row {
+    /// A row named `name` (the first field of every result object).
+    pub fn new(name: &str) -> Self {
+        let mut row = Self { fields: Vec::new() };
+        row.push("name", json_string(name));
+        row
+    }
+
+    fn push(&mut self, key: &str, rendered: String) {
+        self.fields.push((key.to_string(), rendered));
+    }
+
+    /// Add a string field.
+    pub fn str(mut self, key: &str, value: &str) -> Self {
+        self.push(key, json_string(value));
+        self
+    }
+
+    /// Add a numeric field (fixed 4-decimal rendering; non-finite
+    /// values render as `null`).
+    pub fn num(mut self, key: &str, value: f64) -> Self {
+        let rendered =
+            if value.is_finite() { format!("{value:.4}") } else { "null".to_string() };
+        self.push(key, rendered);
+        self
+    }
+
+    /// Add an integer field.
+    pub fn int(mut self, key: &str, value: u64) -> Self {
+        self.push(key, value.to_string());
+        self
+    }
+
+    fn render(&self) -> String {
+        let mut s = String::from("{");
+        for (i, (k, v)) in self.fields.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            let _ = write!(s, "{}: {v}", json_string(k));
+        }
+        s.push('}');
+        s
+    }
+}
+
+/// A named report: `{"bench": <name>, "results": [...]}`.
+#[derive(Clone, Debug)]
+pub struct Report {
+    bench: String,
+    rows: Vec<Row>,
+}
+
+impl Report {
+    /// New empty report for `bench`.
+    pub fn new(bench: &str) -> Self {
+        Self { bench: bench.to_string(), rows: Vec::new() }
+    }
+
+    /// Append a row.
+    pub fn push(&mut self, row: Row) {
+        self.rows.push(row);
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when no rows have been added.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render the document (single line + trailing newline).
+    pub fn render(&self) -> String {
+        let mut s = format!("{{\"bench\": {}, \"results\": [", json_string(&self.bench));
+        for (i, row) in self.rows.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&row.render());
+        }
+        s.push_str("]}\n");
+        s
+    }
+
+    /// Write the rendered document to `path`.
+    pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.render())
+    }
+}
+
+fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schema_matches_bench_family() {
+        let mut r = Report::new("latency");
+        r.push(
+            Row::new("clos-1024-k1023")
+                .str("backend", "exact")
+                .num("mean_cycles", 187.0 + 1.0 / 3.0)
+                .int("samples", 0),
+        );
+        let s = r.render();
+        assert!(s.starts_with("{\"bench\": \"latency\", \"results\": ["));
+        assert!(s.contains("\"name\": \"clos-1024-k1023\""));
+        assert!(s.contains("\"backend\": \"exact\""));
+        assert!(s.contains("\"mean_cycles\": 187.3333"));
+        assert!(s.contains("\"samples\": 0"));
+        assert!(s.ends_with("]}\n"));
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
+        assert_eq!(r.len(), 1);
+        assert!(!r.is_empty());
+    }
+
+    #[test]
+    fn strings_are_escaped_and_nonfinite_is_null() {
+        let mut r = Report::new("x");
+        r.push(Row::new("a\"b\\c\n").num("v", f64::NAN));
+        let s = r.render();
+        assert!(s.contains("\"a\\\"b\\\\c\\n\""));
+        assert!(s.contains("\"v\": null"));
+    }
+}

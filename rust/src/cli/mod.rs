@@ -20,7 +20,7 @@ pub struct Args {
 }
 
 /// Flags that take no value.
-const BOOLEAN_FLAGS: &[&str] = &["help", "quick", "tsv", "no-plot", "verbose"];
+const BOOLEAN_FLAGS: &[&str] = &["help", "quick", "tsv", "no-plot", "verbose", "json"];
 
 impl Args {
     /// Parse from an iterator of arguments (without argv[0]).
@@ -83,6 +83,13 @@ mod tests {
 
     fn parse(s: &str) -> Args {
         Args::parse(s.split_whitespace().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn json_is_boolean() {
+        let a = parse("latency --json --tiles 1024");
+        assert!(a.has("json"));
+        assert_eq!(a.get::<usize>("tiles", 0).unwrap(), 1024);
     }
 
     #[test]

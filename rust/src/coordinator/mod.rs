@@ -1,11 +1,13 @@
-//! L3 coordination: the sweep engine that drives the AOT-compiled
-//! latency kernel (or the native model) across a worker pool.
+//! L3 coordination: the sweep engine that drives any
+//! [`crate::api::LatencyBackend`] across a worker pool.
 //!
 //! * [`queue`] — bounded work queue with backpressure.
-//! * [`sweep`] — leader/worker sweep execution over design points.
+//! * [`sweep`] — leader/worker sweep execution over design points;
+//!   backend selection is a [`crate::api::Mode`], resolved to a live
+//!   [`crate::api::Evaluator`] per worker.
 
 pub mod queue;
 pub mod sweep;
 
 pub use queue::WorkQueue;
-pub use sweep::{run_sweep, EvalMode, PointResult, SweepPoint};
+pub use sweep::{run_sweep, PointResult, SweepPoint};

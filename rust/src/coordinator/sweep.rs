@@ -1,28 +1,26 @@
 //! The sweep coordinator: evaluate many emulation design points across
-//! a worker pool, with the XLA hot path when artifacts are available.
+//! a worker pool, with whichever [`crate::api`] backend the caller's
+//! [`Mode`] selects.
 //!
 //! The leader enumerates [`SweepPoint`]s into a bounded [`WorkQueue`]
 //! (backpressure keeps memory flat on huge sweeps); each worker thread
-//! owns its own PJRT client + compiled artifact (the xla handles are
-//! not `Send`), draws its own address stream, and returns a
+//! owns its own [`Evaluator`] — and therefore its own PJRT client +
+//! compiled artifact when the mode resolves to XLA (the xla handles
+//! are not `Send`) — draws its own address stream, and returns a
 //! [`PointResult`] over a channel.
 //!
-//! Three evaluation modes, proven equivalent by tests:
-//!
-//! * [`EvalMode::Exact`] — closed-form expectation (O(k) native);
-//! * [`EvalMode::NativeMc`] — native Monte-Carlo (oracle for the XLA
-//!   path);
-//! * [`EvalMode::XlaMc`] — Monte-Carlo on the AOT-compiled kernel
-//!   (the production hot path).
+//! Design points are built through [`DesignPoint`] with the caller's
+//! [`Tech`] bundle, so `--set`/`--config` overrides reach every
+//! worker.
 
 use std::sync::mpsc;
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use super::queue::WorkQueue;
-use crate::emulation::{EmulationSetup, TopologyKind};
-use crate::runtime::{ArtifactSet, LatencyEngine};
+use crate::api::{xla_ready, DesignPoint, Evaluator, Mode, Tech};
+use crate::emulation::TopologyKind;
 use crate::util::rng::Rng;
 
 /// One design point to evaluate.
@@ -47,81 +45,50 @@ pub struct PointResult {
     pub mean_cycles: f64,
     /// Samples behind the estimate (0 for the exact mode).
     pub samples: usize,
+    /// Backend that produced the estimate.
+    pub backend: &'static str,
 }
 
-/// How to evaluate points.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum EvalMode {
-    /// Closed-form expectation.
-    Exact,
-    /// Native Monte-Carlo with `samples` addresses.
-    NativeMc {
-        /// Addresses per point.
-        samples: usize,
-    },
-    /// AOT-kernel Monte-Carlo with `samples` addresses in batches of
-    /// `batch`.
-    XlaMc {
-        /// Addresses per point.
-        samples: usize,
-        /// Artifact batch size (must match a lowered artifact).
-        batch: usize,
-    },
-}
-
-impl EvalMode {
-    /// The production default: XLA if artifacts exist, else exact.
-    pub fn auto(samples: usize, batch: usize) -> EvalMode {
-        let set = ArtifactSet::new();
-        match set {
-            Ok(s) if s.available(&format!("latency_batch_{batch}")) => {
-                EvalMode::XlaMc { samples, batch }
-            }
-            _ => EvalMode::Exact,
-        }
-    }
-}
-
-/// Evaluate one point in the given mode (worker body).
+/// Evaluate one point (worker body).
 fn eval_point(
     point: SweepPoint,
-    mode: EvalMode,
-    engine: Option<&LatencyEngine>,
+    tech: &Tech,
+    evaluator: &Evaluator,
     rng: &mut Rng,
-    addr_buf: &mut Vec<i32>,
 ) -> Result<PointResult> {
-    let setup = EmulationSetup::default_tech(point.kind, point.tiles, point.mem_kb, point.k)?;
-    let (mean, samples) = match mode {
-        EvalMode::Exact => (setup.expected_latency(), 0),
-        EvalMode::NativeMc { samples } => (setup.mc_latency(samples, rng.next_u64()), samples),
-        EvalMode::XlaMc { samples, batch } => {
-            let engine = engine.context("XLA mode requires an engine")?;
-            let params = setup.kernel_params();
-            let space = setup.map.space_words();
-            addr_buf.resize(batch, 0);
-            let mut sum = 0.0;
-            let mut n = 0usize;
-            while n < samples {
-                rng.fill_addresses(space, addr_buf);
-                let mean = engine.run_mean(addr_buf, &params)?;
-                sum += mean as f64 * batch as f64;
-                n += batch;
-            }
-            (sum / n as f64, n)
-        }
-    };
-    Ok(PointResult { point, mean_cycles: mean, samples })
+    let setup = DesignPoint::new(point.kind, point.tiles)
+        .mem_kb(point.mem_kb)
+        .k(point.k)
+        .tech(tech)
+        .build()?;
+    let eval = evaluator.evaluate(&setup, &evaluator.stream(rng.next_u64()))?;
+    Ok(PointResult {
+        point,
+        mean_cycles: eval.mean_cycles,
+        samples: eval.samples,
+        backend: eval.backend,
+    })
 }
 
-/// Run a sweep over `points` with `workers` threads.
+/// Run a sweep over `points` with `workers` threads, evaluating with
+/// the backend `mode` selects and building every point from `tech`.
 ///
 /// Results are returned in completion order; sort by point if needed.
 pub fn run_sweep(
     points: &[SweepPoint],
-    mode: EvalMode,
+    mode: Mode,
+    tech: &Tech,
     workers: usize,
     seed: u64,
 ) -> Result<Vec<PointResult>> {
+    // Resolve auto-selection ONCE, before the pool spawns: every
+    // worker must run the same backend (a per-worker fallback would
+    // silently mix xla and native results in one sweep). A worker
+    // whose resolved backend then fails to load aborts the sweep.
+    let mode = match mode {
+        Mode::Auto { batch, .. } => mode.resolve(xla_ready(batch)),
+        concrete => concrete,
+    };
     let workers = workers.max(1).min(points.len().max(1));
     let queue = Arc::new(WorkQueue::<SweepPoint>::new(2 * workers));
     let (tx, rx) = mpsc::channel::<Result<PointResult>>();
@@ -131,24 +98,19 @@ pub fn run_sweep(
             let queue = Arc::clone(&queue);
             let tx = tx.clone();
             scope.spawn(move || {
-                // Each worker owns its own PJRT client/executable; the
-                // xla handles are not Send.
-                let engine = match mode {
-                    EvalMode::XlaMc { batch, .. } => {
-                        match ArtifactSet::new().and_then(|s| LatencyEngine::load(&s, batch)) {
-                            Ok(e) => Some(e),
-                            Err(err) => {
-                                let _ = tx.send(Err(err));
-                                return;
-                            }
-                        }
+                // Each worker owns its own Evaluator; when the mode
+                // resolves to XLA that means its own PJRT
+                // client/executable (the xla handles are not Send).
+                let evaluator = match Evaluator::new(mode) {
+                    Ok(e) => e,
+                    Err(err) => {
+                        let _ = tx.send(Err(err));
+                        return;
                     }
-                    _ => None,
                 };
                 let mut rng = Rng::new(seed ^ (0x9E37_79B9 * (w as u64 + 1)));
-                let mut buf = Vec::new();
                 while let Some(point) = queue.pop() {
-                    let res = eval_point(point, mode, engine.as_ref(), &mut rng, &mut buf);
+                    let res = eval_point(point, tech, &evaluator, &mut rng);
                     if tx.send(res).is_err() {
                         break;
                     }
@@ -186,8 +148,9 @@ mod tests {
 
     #[test]
     fn exact_sweep_multithreaded() {
-        let res = run_sweep(&points(), EvalMode::Exact, 3, 1).unwrap();
+        let res = run_sweep(&points(), Mode::Exact, &Tech::default(), 3, 1).unwrap();
         assert_eq!(res.len(), 3);
+        assert!(res.iter().all(|r| r.backend == "exact"));
         let mut by_k: Vec<_> = res.iter().map(|r| (r.point.k, r.mean_cycles)).collect();
         by_k.sort_unstable_by_key(|&(k, _)| k);
         assert_eq!(by_k[0].1, 19.0); // same-switch emulation
@@ -197,12 +160,31 @@ mod tests {
     #[test]
     fn native_mc_agrees_with_exact() {
         let pts = points();
-        let exact = run_sweep(&pts, EvalMode::Exact, 2, 2).unwrap();
-        let mc = run_sweep(&pts, EvalMode::NativeMc { samples: 40_000 }, 2, 2).unwrap();
+        let tech = Tech::default();
+        let exact = run_sweep(&pts, Mode::Exact, &tech, 2, 2).unwrap();
+        let mc = run_sweep(&pts, Mode::Native { samples: 40_000 }, &tech, 2, 2).unwrap();
         for e in &exact {
             let m = mc.iter().find(|r| r.point == e.point).unwrap();
             let rel = (e.mean_cycles - m.mean_cycles).abs() / e.mean_cycles;
             assert!(rel < 0.02, "k={}: exact {} vs mc {}", e.point.k, e.mean_cycles, m.mean_cycles);
+        }
+    }
+
+    #[test]
+    fn tech_overrides_reach_every_worker() {
+        let pts = points();
+        let base = run_sweep(&pts, Mode::Exact, &Tech::default(), 2, 2).unwrap();
+        let doc = crate::config::Doc::parse("[net]\nt_mem = 11.0").unwrap();
+        let slow = run_sweep(&pts, Mode::Exact, &Tech::from_doc(&doc), 2, 2).unwrap();
+        for b in &base {
+            let s = slow.iter().find(|r| r.point == b.point).unwrap();
+            assert!(
+                (s.mean_cycles - (b.mean_cycles + 10.0)).abs() < 1e-9,
+                "k={}: {} vs {} + 10",
+                b.point.k,
+                s.mean_cycles,
+                b.mean_cycles
+            );
         }
     }
 
@@ -216,7 +198,7 @@ mod tests {
                 k: 32 * i,
             })
             .collect();
-        let res = run_sweep(&pts, EvalMode::Exact, 4, 3).unwrap();
+        let res = run_sweep(&pts, Mode::Exact, &Tech::default(), 4, 3).unwrap();
         assert_eq!(res.len(), pts.len());
         for p in &pts {
             assert!(res.iter().any(|r| r.point == *p), "missing {p:?}");

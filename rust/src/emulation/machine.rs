@@ -87,12 +87,11 @@ pub struct EmulationSetup {
 }
 
 impl EmulationSetup {
-    /// Build a design point: a `system_tiles` system with `mem_kb` of
-    /// SRAM per tile, emulating a memory over `k` tiles.
-    ///
-    /// The client runs on tile 0 for the Clos (the network is
-    /// symmetric) and on the centre block for the mesh (the natural
-    /// placement; see DESIGN.md).
+    /// Legacy positional constructor, kept as a thin shim delegating to
+    /// the typed [`crate::api::DesignPoint`] builder — which is the one
+    /// supported way to construct design points (it adds paper
+    /// defaults, `--set`/`--config` threading and field-named
+    /// validation errors).
     pub fn build(
         kind: TopologyKind,
         system_tiles: usize,
@@ -101,6 +100,35 @@ impl EmulationSetup {
         net: NetParams,
         chip_tech: &ChipTech,
         ip_tech: &InterposerTech,
+    ) -> Result<Self> {
+        crate::api::DesignPoint::new(kind, system_tiles)
+            .mem_kb(mem_kb)
+            .k(k)
+            .net(net)
+            .chip(chip_tech.clone())
+            .interposer(ip_tech.clone())
+            .build()
+    }
+
+    /// Instantiate a design point: a `system_tiles` system with
+    /// `mem_kb` of SRAM per tile, emulating a memory over `k` tiles,
+    /// optionally on a custom Clos spec. Crate-internal — reachable
+    /// only through [`crate::api::DesignPoint::build`], which validates
+    /// first.
+    ///
+    /// The client runs on tile 0 for the Clos (the network is
+    /// symmetric) and on the centre block for the mesh (the natural
+    /// placement; see DESIGN.md).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn assemble(
+        kind: TopologyKind,
+        system_tiles: usize,
+        mem_kb: u32,
+        k: usize,
+        net: NetParams,
+        chip_tech: &ChipTech,
+        ip_tech: &InterposerTech,
+        clos_spec: Option<crate::topology::ClosSpec>,
     ) -> Result<Self> {
         anyhow::ensure!(k >= 1 && k < system_tiles, "1 <= k < tiles required (k={k})");
         // Words are 32-bit: mem_kb KB = mem_kb * 256 words.
@@ -112,7 +140,12 @@ impl EmulationSetup {
 
         let (topo, links, client, chips) = match kind {
             TopologyKind::Clos => {
-                let spec = ClosSpec::with_tiles(system_tiles);
+                let spec = clos_spec.unwrap_or_else(|| ClosSpec::with_tiles(system_tiles));
+                anyhow::ensure!(
+                    spec.tiles == system_tiles,
+                    "clos spec covers {} tiles, design point has {system_tiles}",
+                    spec.tiles
+                );
                 let fp = ClosFloorplan::plan(&spec, mem_kb, chip_tech)?;
                 let pkg = PackagedSystem::clos(spec.chips(), &fp, chip_tech, ip_tech)?;
                 let links = LinkLatencies {

@@ -11,13 +11,18 @@
 //! * **eDRAM tiles** (§3.2/§5.0.3): the memory technology the paper
 //!   rejected on manufacturing-cost grounds — denser tiles, slower
 //!   access.
+//!
+//! Every variant is a [`DesignPoint`] perturbation of the caller's
+//! [`Tech`] bundle, so `--set`/`--config` overrides flow into the
+//! baselines as well as the ablated legs.
 
 use anyhow::Result;
 
-use crate::emulation::{EmulationSetup, SequentialMachine, TopologyKind};
-use crate::netmodel::{LatencyModel, NetParams};
-use crate::tech::{ChipTech, InterposerTech, MemTech};
-use crate::topology::{ClosSpec, FoldedClos, Topology};
+use crate::api::{DesignPoint, Tech};
+use crate::emulation::SequentialMachine;
+use crate::netmodel::NetParams;
+use crate::tech::{ChipTech, MemTech};
+use crate::topology::ClosSpec;
 use crate::util::table::{f, Table};
 
 /// One ablation data point.
@@ -39,21 +44,21 @@ fn slowdown(latency: f64, dram_ns: f64) -> f64 {
     crate::workload::predict_slowdown(&crate::workload::DHRYSTONE_MIX, latency, dram_ns)
 }
 
+/// Tile memory of the experiments' common design point (KB).
+const MEM_KB: u32 = 128;
+
+/// The experiments' common design point: the paper's largest system,
+/// fully emulated.
+fn headline(tech: &Tech) -> DesignPoint {
+    DesignPoint::clos(4096).mem_kb(MEM_KB).k(4095).tech(tech)
+}
+
 /// Ablation 1: pay `t_open` per access vs hold routes open.
-pub fn route_open(dram_ns: f64) -> Result<Vec<Row>> {
+pub fn route_open(tech: &Tech, dram_ns: f64) -> Result<Vec<Row>> {
     let mut rows = Vec::new();
     for (label, open) in [("closed routes (paper)", false), ("routes held open", true)] {
-        let net = NetParams { route_open: open, ..NetParams::default() };
-        let setup = EmulationSetup::build(
-            TopologyKind::Clos,
-            4096,
-            128,
-            4095,
-            net,
-            &ChipTech::default(),
-            &InterposerTech::default(),
-        )?;
-        let lat = setup.expected_latency();
+        let net = NetParams { route_open: open, ..tech.net };
+        let lat = headline(tech).net(net).build()?.expected_latency();
         rows.push(Row {
             experiment: "route_open",
             variant: label.to_string(),
@@ -67,19 +72,11 @@ pub fn route_open(dram_ns: f64) -> Result<Vec<Row>> {
 
 /// Ablation 2: clock the parallel machine at 1/2/4 GHz while the DRAM
 /// baseline keeps its intrinsic latency.
-pub fn clock_scaling(dram_ns: f64) -> Result<Vec<Row>> {
+pub fn clock_scaling(tech: &Tech, dram_ns: f64) -> Result<Vec<Row>> {
     let mut rows = Vec::new();
     for ghz in [1.0f64, 2.0, 4.0] {
-        let chip = ChipTech { clock_ghz: ghz, ..ChipTech::default() };
-        let setup = EmulationSetup::build(
-            TopologyKind::Clos,
-            4096,
-            128,
-            4095,
-            NetParams::default(),
-            &chip,
-            &InterposerTech::default(),
-        )?;
+        let chip = ChipTech { clock_ghz: ghz, ..tech.chip.clone() };
+        let setup = headline(tech).chip(chip).build()?;
         // Cycles shrink in wall-clock as the clock rises; wire spans
         // re-pipeline to more cycles automatically via the floorplan.
         let lat_ns = setup.expected_latency() / ghz;
@@ -96,11 +93,10 @@ pub fn clock_scaling(dram_ns: f64) -> Result<Vec<Row>> {
 
 /// Ablation 3: degree-64 switches (32 tiles/edge switch, 1,024
 /// tiles/chip — exceeds the economical die, as §2 notes).
-pub fn switch_degree(dram_ns: f64) -> Result<Vec<Row>> {
+pub fn switch_degree(tech: &Tech, dram_ns: f64) -> Result<Vec<Row>> {
     let mut rows = Vec::new();
     // Baseline: degree-32 (the paper's design).
-    let base = EmulationSetup::default_tech(TopologyKind::Clos, 4096, 128, 4095)?;
-    let lat32 = base.expected_latency();
+    let lat32 = headline(tech).build()?.expected_latency();
     rows.push(Row {
         experiment: "switch_degree",
         variant: "degree-32 (paper)".into(),
@@ -111,43 +107,27 @@ pub fn switch_degree(dram_ns: f64) -> Result<Vec<Row>> {
 
     // Degree-64: a crossbar is ~O(degree^2) area.
     let spec = ClosSpec { tiles: 4096, tiles_per_edge: 32, tiles_per_chip: 1024, degree: 64 };
-    let chip64 = ChipTech { switch_area_mm2: 0.20, ..ChipTech::default() };
-    let fp = crate::vlsi::ClosFloorplan::plan(&spec, 128, &chip64)?;
-    let pkg = crate::vlsi::PackagedSystem::clos(spec.chips(), &fp, &chip64, &InterposerTech::default())?;
-    let links = crate::netmodel::LinkLatencies {
-        tile: fp.cycles.tile as f64,
-        edge_core: fp.cycles.edge_core as f64,
-        core_sys: (2 * fp.cycles.core_pad + pkg.interposer_cycles) as f64,
-        mesh_hop: 0.0,
-        mesh_cross_extra: 0.0,
-    };
-    let topo = Topology::Clos(FoldedClos::build(spec)?);
-    let model = LatencyModel::new(NetParams::default(), links);
-    let map = crate::emulation::AddressMap::new(15, 4095, 0, 4096);
-    let mut sum = 0.0;
-    for r in 0..map.k {
-        sum += model.access(&topo, map.client, map.tile_of_rank(r));
-    }
-    let lat64 = sum / map.k as f64;
+    let chip64 = ChipTech { switch_area_mm2: 0.20, ..tech.chip.clone() };
+    let area = crate::vlsi::ClosFloorplan::plan(&spec, MEM_KB, &chip64)?.area_mm2;
+    let lat64 = headline(tech).clos_spec(spec).chip(chip64).build()?.expected_latency();
     rows.push(Row {
         experiment: "switch_degree",
         variant: "degree-64".into(),
         latency_ns: lat64,
         slowdown: slowdown(lat64, dram_ns),
-        note: format!("chip {} mm^2 — far beyond the economical band", f(fp.area_mm2, 0)),
+        note: format!("chip {} mm^2 — far beyond the economical band", f(area, 0)),
     });
     Ok(rows)
 }
 
 /// Ablation 4: eDRAM tile memories — ~2.4x denser (smaller chips,
 /// shorter wires) but 1.3 ns access (2 cycles) and costlier process.
-pub fn edram_tiles(dram_ns: f64) -> Result<Vec<Row>> {
+pub fn edram_tiles(tech: &Tech, dram_ns: f64) -> Result<Vec<Row>> {
     let mut rows = Vec::new();
-    let base = EmulationSetup::default_tech(TopologyKind::Clos, 4096, 128, 4095)?;
-    let lat_sram = base.expected_latency();
+    let lat_sram = headline(tech).build()?.expected_latency();
     rows.push(Row {
         experiment: "edram_tiles",
-        variant: "SRAM 128 KB (paper)".into(),
+        variant: format!("SRAM {MEM_KB} KB (paper)"),
         latency_ns: lat_sram,
         slowdown: slowdown(lat_sram, dram_ns),
         note: String::new(),
@@ -157,21 +137,13 @@ pub fn edram_tiles(dram_ns: f64) -> Result<Vec<Row>> {
     // model it as an effectively smaller SRAM capacity for the
     // floorplan, with t_mem = 2 cycles.
     let density_ratio = MemTech::Edram.density_kb_per_mm2() / MemTech::Sram.density_kb_per_mm2();
-    let equiv_kb = (128.0 / density_ratio).round() as u32; // area-equivalent SRAM
-    let net = NetParams { t_mem: MemTech::Edram.cycle_ns().ceil(), ..NetParams::default() };
-    let setup = EmulationSetup::build(
-        TopologyKind::Clos,
-        4096,
-        equiv_kb.max(64),
-        4095,
-        net,
-        &ChipTech::default(),
-        &InterposerTech::default(),
-    )?;
-    let lat = setup.expected_latency();
+    let equiv_kb = (MEM_KB as f64 / density_ratio).round() as u32; // area-equivalent SRAM
+    let net = NetParams { t_mem: MemTech::Edram.cycle_ns().ceil(), ..tech.net };
+    let lat =
+        headline(tech).mem_kb(equiv_kb.max(64)).net(net).build()?.expected_latency();
     rows.push(Row {
         experiment: "edram_tiles",
-        variant: format!("eDRAM 128 KB (footprint of {equiv_kb} KB SRAM)"),
+        variant: format!("eDRAM {MEM_KB} KB (footprint of {equiv_kb} KB SRAM)"),
         latency_ns: lat,
         slowdown: slowdown(lat, dram_ns),
         note: "2.4x density; +3-6 process steps (cost)".into(),
@@ -179,14 +151,14 @@ pub fn edram_tiles(dram_ns: f64) -> Result<Vec<Row>> {
     Ok(rows)
 }
 
-/// All ablations.
-pub fn generate() -> Result<Vec<Row>> {
+/// All ablations against a technology bundle.
+pub fn generate(tech: &Tech) -> Result<Vec<Row>> {
     let dram = SequentialMachine::with_measured_dram(1).dram_ns;
     let mut rows = Vec::new();
-    rows.extend(route_open(dram)?);
-    rows.extend(clock_scaling(dram)?);
-    rows.extend(switch_degree(dram)?);
-    rows.extend(edram_tiles(dram)?);
+    rows.extend(route_open(tech, dram)?);
+    rows.extend(clock_scaling(tech, dram)?);
+    rows.extend(switch_degree(tech, dram)?);
+    rows.extend(edram_tiles(tech, dram)?);
     Ok(rows)
 }
 
@@ -212,7 +184,7 @@ mod tests {
 
     #[test]
     fn route_open_helps() {
-        let rows = route_open(35.0).unwrap();
+        let rows = route_open(&Tech::default(), 35.0).unwrap();
         assert!(rows[1].latency_ns < rows[0].latency_ns);
         // exactly 2 * t_open * (d+1) saved per access class; on average
         // the gap is 30-70 cycles.
@@ -222,7 +194,7 @@ mod tests {
 
     #[test]
     fn faster_network_clock_improves_factor() {
-        let rows = clock_scaling(35.0).unwrap();
+        let rows = clock_scaling(&Tech::default(), 35.0).unwrap();
         // Wires re-pipeline into more cycles at higher clocks, so the
         // gain is sublinear but substantial.
         assert!(rows[1].latency_ns < rows[0].latency_ns * 0.75);
@@ -235,7 +207,7 @@ mod tests {
 
     #[test]
     fn degree64_trades_area_for_latency() {
-        let rows = switch_degree(35.0).unwrap();
+        let rows = switch_degree(&Tech::default(), 35.0).unwrap();
         // Fewer tiles cross chips (1,024-tile chips) but the die grows
         // ~4x and its wires lengthen — the net latency change is small
         // (within 30% either way), supporting the paper's degree-32
@@ -248,11 +220,21 @@ mod tests {
 
     #[test]
     fn edram_denser_but_slower_cells() {
-        let rows = edram_tiles(35.0).unwrap();
+        let rows = edram_tiles(&Tech::default(), 35.0).unwrap();
         assert_eq!(rows.len(), 2);
         // Denser tiles shorten wires; t_mem grows by 1 cycle. Net
         // effect is small either way — assert within 15%.
         let rel = (rows[1].latency_ns - rows[0].latency_ns).abs() / rows[0].latency_ns;
         assert!(rel < 0.15, "rel {rel}");
+    }
+
+    #[test]
+    fn overrides_flow_into_the_baselines() {
+        // The route_open baseline must honour a t_switch override (the
+        // seed hard-coded NetParams::default() here).
+        let doc = crate::config::Doc::parse("[net]\nt_switch = 4.0").unwrap();
+        let base = route_open(&Tech::default(), 35.0).unwrap();
+        let slow = route_open(&Tech::from_doc(&doc), 35.0).unwrap();
+        assert!(slow[0].latency_ns > base[0].latency_ns);
     }
 }

@@ -37,7 +37,7 @@ pub fn generate(opts: &FigOpts) -> Result<Vec<Row>> {
             }
         }
     }
-    let results = run_sweep(&points, opts.mode, opts.workers, opts.seed)?;
+    let results = run_sweep(&points, opts.mode, &opts.tech, opts.workers, opts.seed)?;
     let dram = SequentialMachine::with_measured_dram(1).dram_ns;
 
     let benches: [(&'static str, InstructionMix); 2] =

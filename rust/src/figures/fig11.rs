@@ -43,7 +43,7 @@ pub fn generate(opts: &FigOpts) -> Result<Vec<Row>> {
             points.push(SweepPoint { kind, tiles: system, mem_kb: MEM_KB, k: system - 1 });
         }
     }
-    let results = run_sweep(&points, opts.mode, opts.workers, opts.seed)?;
+    let results = run_sweep(&points, opts.mode, &opts.tech, opts.workers, opts.seed)?;
     let dram = SequentialMachine::with_measured_dram(1).dram_ns;
     let grid = fig11_grid(GRID);
 

@@ -48,8 +48,10 @@ pub fn generate(tech: &ChipTech) -> Result<Vec<Row>> {
                 area_mm2: clos.area_mm2,
                 economical: clos.is_economical(tech),
             });
-            let bx = ((tiles / 16) as f64).sqrt() as usize;
-            let mesh_spec = MeshSpec { tiles, tiles_per_block: 16, chip_blocks_x: bx.max(1) };
+            // Integer-validated single-chip grid: the seed's
+            // `(tiles/16) as f64).sqrt() as usize` silently truncated
+            // at non-power-of-4 tile counts.
+            let mesh_spec = MeshSpec::single_chip(tiles)?;
             let mesh = MeshFloorplan::plan(&mesh_spec, mem, tech)?;
             rows.push(Row {
                 topo: "mesh",

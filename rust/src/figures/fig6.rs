@@ -40,8 +40,7 @@ pub fn generate(tech: &ChipTech) -> Result<Vec<Row>> {
             wire_pct: 100.0 * c.wire_area_mm2 / c.area_mm2,
             io_pct: 100.0 * c.io_area_mm2 / c.area_mm2,
         });
-        let bx = ((tiles / 16) as f64).sqrt() as usize;
-        let mspec = MeshSpec { tiles, tiles_per_block: 16, chip_blocks_x: bx.max(1) };
+        let mspec = MeshSpec::single_chip(tiles)?;
         let m = MeshFloorplan::plan(&mspec, MEM_KB, tech)?;
         rows.push(Row {
             topo: "mesh",

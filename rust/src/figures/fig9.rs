@@ -57,7 +57,7 @@ pub fn generate(opts: &FigOpts) -> Result<Fig9> {
             }
         }
     }
-    let results = run_sweep(&points, opts.mode, opts.workers, opts.seed)?;
+    let results = run_sweep(&points, opts.mode, &opts.tech, opts.workers, opts.seed)?;
     let mut rows: Vec<Row> = results
         .iter()
         .map(|r| Row {
@@ -151,5 +151,27 @@ mod tests {
             .unwrap();
         let overhead = mesh4k.latency_ns / clos4k.latency_ns;
         assert!(overhead > 1.1, "mesh/clos = {overhead}");
+    }
+
+    #[test]
+    fn config_overrides_reach_the_figure() {
+        // Regression: `figure 9 --set net.t_mem=...` used to be
+        // silently dropped — figures hard-coded default tech. A t_mem
+        // override must now shift every latency row by the same amount.
+        let base = generate(&FigOpts::default()).unwrap();
+        let doc = crate::config::Doc::parse("[net]\nt_mem = 21.0").unwrap();
+        let tweaked = generate(&FigOpts::from_doc(&doc)).unwrap();
+        assert_eq!(base.rows.len(), tweaked.rows.len());
+        for (b, t) in base.rows.iter().zip(&tweaked.rows) {
+            assert_eq!((b.system, b.topo, b.k), (t.system, t.topo, t.k));
+            assert!(
+                (t.latency_ns - (b.latency_ns + 20.0)).abs() < 1e-9,
+                "k={} {}: {} vs {} + 20",
+                b.k,
+                b.topo,
+                t.latency_ns,
+                b.latency_ns
+            );
+        }
     }
 }

@@ -20,8 +20,9 @@
 
 use anyhow::{Context, Result};
 
+use crate::api::DesignPoint;
 use crate::emulation::controller::expand_load;
-use crate::emulation::{EmulationSetup, TopologyKind};
+use crate::emulation::EmulationSetup;
 use crate::isa::inst::Inst;
 use crate::isa::interp::{EmulatedChannelMemory, Machine};
 use crate::sim::NetworkSim;
@@ -41,7 +42,7 @@ const INTERP_LOADS: usize = 1024;
 /// The design point the hot path is measured on (4,096-tile Clos
 /// emulating over k = 4,095 tiles, 128 KB each).
 pub fn design_point() -> Result<EmulationSetup> {
-    EmulationSetup::default_tech(TopologyKind::Clos, 4096, 128, 4095)
+    DesignPoint::clos(4096).mem_kb(128).k(4095).build()
 }
 
 /// Measure the native, DES and interpreter hot paths; honours
@@ -159,8 +160,7 @@ mod tests {
         // exercised by the bench binary, not here — unit tests run
         // unoptimised.)
         std::env::set_var("MEMCLOS_BENCH_QUICK", "1");
-        let setup =
-            EmulationSetup::default_tech(TopologyKind::Clos, 256, 64, 255).unwrap();
+        let setup = DesignPoint::clos(256).mem_kb(64).k(255).build().unwrap();
         let b = measure(&setup);
         for case in
             ["native-65536", "routed-65536", "exact-closed-form", "des-access", "interp-load"]

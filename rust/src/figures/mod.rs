@@ -27,29 +27,40 @@ pub mod fig9;
 pub mod hotpath;
 pub mod tables;
 
-use crate::coordinator::EvalMode;
+use crate::api::{Mode, Tech};
+use crate::config::Doc;
 
-/// Shared options for figure generation.
-#[derive(Clone, Copy, Debug)]
+/// Shared options for figure generation: backend selection, sweep
+/// parallelism and the technology bundle every design point is built
+/// from (so `--set`/`--config` overrides reach the figures).
+#[derive(Clone, Debug)]
 pub struct FigOpts {
     /// Evaluation mode for latency points.
-    pub mode: EvalMode,
+    pub mode: Mode,
     /// Worker threads for sweeps.
     pub workers: usize,
     /// Base seed.
     pub seed: u64,
+    /// Technology/model parameters (Tables 1, 2 and 5).
+    pub tech: Tech,
 }
 
 impl Default for FigOpts {
     fn default() -> Self {
         let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-        Self { mode: EvalMode::Exact, workers, seed: 0xC105 }
+        Self { mode: Mode::Exact, workers, seed: 0xC105, tech: Tech::default() }
     }
 }
 
 impl FigOpts {
-    /// Production defaults: XLA hot path when artifacts exist.
+    /// Production defaults: XLA hot path when artifacts exist, native
+    /// Monte-Carlo otherwise.
     pub fn auto() -> Self {
-        Self { mode: EvalMode::auto(65_536, 16_384), ..Self::default() }
+        Self { mode: Mode::Auto { samples: 65_536, batch: 16_384 }, ..Self::default() }
+    }
+
+    /// Exact mode with the technology overrides of a config doc.
+    pub fn from_doc(doc: &Doc) -> Self {
+        Self { tech: Tech::from_doc(doc), ..Self::default() }
     }
 }

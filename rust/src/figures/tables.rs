@@ -126,17 +126,15 @@ pub fn table5(p: &NetParams) -> Table {
     t
 }
 
-/// All five tables rendered.
-pub fn render_all() -> String {
-    let chip = ChipTech::default();
-    let ip = InterposerTech::default();
-    let net = NetParams::default();
+/// All five tables rendered from a technology bundle (so
+/// `--set`/`--config` overrides show up in the regenerated tables).
+pub fn render_all(tech: &crate::api::Tech) -> String {
     [
-        table1(&chip).render(),
-        table2(&ip).render(),
+        table1(&tech.chip).render(),
+        table2(&tech.ip).render(),
         table3().render(),
         table4().render(),
-        table5(&net).render(),
+        table5(&tech.net).render(),
     ]
     .join("\n")
 }
@@ -147,7 +145,7 @@ mod tests {
 
     #[test]
     fn tables_render_nonempty() {
-        let all = render_all();
+        let all = render_all(&crate::api::Tech::default());
         for needle in ["Table 1", "Table 2", "Table 3", "Table 4", "Table 5"] {
             assert!(all.contains(needle), "missing {needle}");
         }

@@ -27,8 +27,13 @@
 //! * [`runtime`], [`coordinator`] — the PJRT runtime that executes the
 //!   AOT-compiled JAX/Pallas latency kernel and the multi-threaded sweep
 //!   coordinator that drives it.
+//! * [`api`] — the programming surface: the typed [`api::DesignPoint`]
+//!   builder and the [`api::LatencyBackend`] trait unifying the four
+//!   evaluation paths (exact, native MC, XLA, DES) behind one
+//!   [`api::Evaluator`].
 //! * [`figures`] — generators for every table and figure in the paper.
 
+pub mod api;
 pub mod cc;
 pub mod cli;
 pub mod config;

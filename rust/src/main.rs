@@ -3,23 +3,25 @@
 //!
 //! Every table and figure of the paper has a subcommand; `selfcheck`
 //! proves the XLA artifact and the native model agree bit-for-bit.
+//!
+//! All commands build design points and evaluate latency through
+//! [`memclos::api`]: [`DesignPoint`] (paper defaults + `--set`/
+//! `--config` overrides + CLI flags, in that precedence order) and
+//! [`Evaluator`] (backend selection via `--mode`).
 
 use anyhow::{bail, Context, Result};
 
+use memclos::api::{DesignPoint, Evaluator, Mode, Report, Row, Tech, XlaBackend};
 use memclos::cc::{compile, Backend};
 use memclos::cli::Args;
-use memclos::config;
-use memclos::coordinator::{run_sweep, EvalMode, SweepPoint};
+use memclos::config::{self, Doc};
+use memclos::coordinator::{run_sweep, SweepPoint};
 use memclos::dram::{measure_random_latency, DramConfig};
-use memclos::emulation::{EmulationSetup, SequentialMachine, TopologyKind};
+use memclos::emulation::{SequentialMachine, TopologyKind};
 use memclos::figures::{self, FigOpts};
 use memclos::isa::interp::{DirectMemory, EmulatedChannelMemory, Machine};
-use memclos::netmodel::NetParams;
-use memclos::runtime::{ArtifactSet, LatencyEngine};
 use memclos::sim::network::run_contention;
-use memclos::tech::{ChipTech, InterposerTech};
 use memclos::topology::{ClosSpec, MeshSpec};
-use memclos::util::rng::Rng;
 use memclos::vlsi::{ClosFloorplan, MeshFloorplan};
 
 const HELP: &str = "\
@@ -32,21 +34,35 @@ COMMANDS
   figure <5|6|7|9|10|11|bsize|ablations>  regenerate a figure / extension
   dram [--ranks N]              measure DDR3 random-access latency
   area --topo clos|mesh [--tiles N --mem KB]   floorplan one chip
-  latency --topo clos|mesh [--tiles N --mem KB --k N]
-                                emulated-memory latency for one point
+  latency [--topo ... --tiles N --mem KB --k N]
+                                emulated-memory latency for one point,
+                                evaluated on the selected backend
   run <program> [--topo ...]    compile+run a corpus program on both machines
   contention [--clients N]      DES contention experiment (c_cont)
   selfcheck                     prove XLA artifact == native model
   sweep --tiles N --mem KB      latency sweep over emulation sizes
   bench-hotpath [--out PATH]    measure the access hot path, write BENCH_hotpath.json
 
+BACKENDS (--mode, default auto)
+  auto     XLA when artifacts/ holds the lowered kernel, else native MC
+  exact    closed-form expectation (O(k), no sampling)
+  native   native Monte-Carlo over the rank-latency LUT
+  xla      Monte-Carlo on the AOT-compiled PJRT kernel
+  des      Monte-Carlo through the discrete-event network simulator
+
 COMMON OPTIONS
-  --mode exact|native|xla       evaluation mode (default: auto)
+  --mode auto|exact|native|xla|des   evaluation backend (see above)
   --samples N                   Monte-Carlo samples (default 65536)
+  --batch N                     XLA artifact batch size (default 16384)
   --workers N                   sweep worker threads (default 4)
   --seed N                      RNG seed
-  --set key=value               config override (repeatable)
+  --set key=value               config override (repeatable); system.*,
+                                net.*, chip.*, interposer.* reach every
+                                command, including the figures
   --config PATH                 config file (TOML subset)
+  --json                        latency/sweep/contention: emit the
+                                BENCH_hotpath.json schema family instead
+                                of tables
 ";
 
 fn main() {
@@ -60,27 +76,58 @@ fn main() {
     }
 }
 
-fn eval_mode(args: &Args) -> Result<EvalMode> {
+fn eval_mode(args: &Args) -> Result<Mode> {
     let samples: usize = args.get("samples", 65_536)?;
-    Ok(match args.flag("mode") {
-        None | Some("auto") => EvalMode::auto(samples, 16_384),
-        Some("exact") => EvalMode::Exact,
-        Some("native") => EvalMode::NativeMc { samples },
-        Some("xla") => EvalMode::XlaMc { samples, batch: 16_384 },
-        Some(other) => bail!("unknown --mode {other}"),
-    })
+    let batch: usize = args.get("batch", 16_384)?;
+    Mode::parse(args.flag("mode"), samples, batch)
 }
 
-fn fig_opts(args: &Args) -> Result<FigOpts> {
+fn fig_opts(args: &Args, doc: &Doc) -> Result<FigOpts> {
     Ok(FigOpts {
         mode: eval_mode(args)?,
-        workers: args.get("workers", std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4))?,
+        workers: args.get(
+            "workers",
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        )?,
         seed: args.get("seed", 0xC105)?,
+        tech: Tech::from_doc(doc),
     })
 }
 
-fn topo_kind(args: &Args) -> Result<TopologyKind> {
-    TopologyKind::parse(args.flag("topo").unwrap_or("clos"))
+fn kind_str(kind: TopologyKind) -> &'static str {
+    match kind {
+        TopologyKind::Clos => "clos",
+        TopologyKind::Mesh => "mesh",
+    }
+}
+
+/// One design point from (in rising precedence) per-command defaults,
+/// the config doc and explicit CLI flags.
+fn design_point(
+    args: &Args,
+    doc: &Doc,
+    default_tiles: usize,
+    default_k: Option<usize>,
+) -> Result<DesignPoint> {
+    let mut dp = DesignPoint::clos(default_tiles).with_doc(doc)?;
+    if let Some(k) = default_k {
+        if doc.get("system.k").is_none() {
+            dp = dp.k(k);
+        }
+    }
+    if let Some(t) = args.flag("topo") {
+        dp = dp.topology(TopologyKind::parse(t)?);
+    }
+    if args.flag("tiles").is_some() {
+        dp = dp.tiles(args.get("tiles", 0usize)?);
+    }
+    if args.flag("mem").is_some() {
+        dp = dp.mem_kb(args.get("mem", 0u32)?);
+    }
+    if args.flag("k").is_some() {
+        dp = dp.k(args.get("k", 0usize)?);
+    }
+    Ok(dp)
 }
 
 fn run(raw: Vec<String>) -> Result<()> {
@@ -93,36 +140,40 @@ fn run(raw: Vec<String>) -> Result<()> {
         args.flag("config").map(std::path::Path::new),
         &args.flag_all("set"),
     )?;
-    let chip = ChipTech::from_doc(&doc);
-    let ip = InterposerTech::from_doc(&doc);
-    let net = NetParams::from_doc(&doc);
+    let tech = Tech::from_doc(&doc);
 
     match args.command.as_str() {
         "tables" => {
             let which = args.flag("which");
             match which {
-                None => print!("{}", figures::tables::render_all()),
-                Some("1") => print!("{}", figures::tables::table1(&chip).render()),
-                Some("2") => print!("{}", figures::tables::table2(&ip).render()),
+                None => print!("{}", figures::tables::render_all(&tech)),
+                Some("1") => print!("{}", figures::tables::table1(&tech.chip).render()),
+                Some("2") => print!("{}", figures::tables::table2(&tech.ip).render()),
                 Some("3") => print!("{}", figures::tables::table3().render()),
                 Some("4") => print!("{}", figures::tables::table4().render()),
-                Some("5") => print!("{}", figures::tables::table5(&net).render()),
+                Some("5") => print!("{}", figures::tables::table5(&tech.net).render()),
                 Some(o) => bail!("no table {o}"),
             }
         }
         "figure" => {
             let which = args.positional.first().context("figure number required")?;
-            let opts = fig_opts(&args)?;
+            let opts = fig_opts(&args, &doc)?;
             match which.as_str() {
-                "5" => print!("{}", figures::fig5::render(&figures::fig5::generate(&chip)?, &chip)),
-                "6" => print!("{}", figures::fig6::render(&figures::fig6::generate(&chip)?)),
-                "7" => print!("{}", figures::fig7::render(&figures::fig7::generate(&chip, &ip)?)),
+                "5" => print!(
+                    "{}",
+                    figures::fig5::render(&figures::fig5::generate(&opts.tech.chip)?, &opts.tech.chip)
+                ),
+                "6" => print!("{}", figures::fig6::render(&figures::fig6::generate(&opts.tech.chip)?)),
+                "7" => print!(
+                    "{}",
+                    figures::fig7::render(&figures::fig7::generate(&opts.tech.chip, &opts.tech.ip)?)
+                ),
                 "9" => print!("{}", figures::fig9::render(&figures::fig9::generate(&opts)?)),
                 "10" => print!("{}", figures::fig10::render(&figures::fig10::generate(&opts)?)),
                 "11" => print!("{}", figures::fig11::render(&figures::fig11::generate(&opts)?)),
                 "bsize" => print!("{}", figures::binary_size::render(&figures::binary_size::generate()?)),
                 "ablations" => {
-                    print!("{}", figures::ablations::render(&figures::ablations::generate()?))
+                    print!("{}", figures::ablations::render(&figures::ablations::generate(&opts.tech)?))
                 }
                 o => bail!("no figure {o} (5|6|7|9|10|11|bsize|ablations)"),
             }
@@ -143,11 +194,12 @@ fn run(raw: Vec<String>) -> Result<()> {
             );
         }
         "area" => {
-            let tiles: usize = args.get("tiles", 256)?;
-            let mem: u32 = args.get("mem", 128)?;
-            match topo_kind(&args)? {
+            let dp = design_point(&args, &doc, 256, None)?;
+            let tiles = dp.system_tiles();
+            let mem = dp.tile_mem_kb();
+            match dp.kind() {
                 TopologyKind::Clos => {
-                    let fp = ClosFloorplan::plan(&ClosSpec::with_tiles(tiles), mem, &chip)?;
+                    let fp = ClosFloorplan::plan(&ClosSpec::with_tiles(tiles), mem, &tech.chip)?;
                     println!(
                         "folded-Clos chip: {} tiles x {} KB\n  area {:.1} mm^2 ({:.1} x {:.1}), I/O {:.1} mm^2, switches {:.2} mm^2, wires {:.2} mm^2\n  wires: tile {:.2} mm ({} cy), edge-core {:.2} mm ({} cy), core-pad {:.2} mm ({} cy)\n  economical: {}",
                         fp.tiles, fp.mem_kb, fp.area_mm2, fp.chip_w_mm, fp.chip_h_mm,
@@ -155,48 +207,52 @@ fn run(raw: Vec<String>) -> Result<()> {
                         fp.wire_tile_mm, fp.cycles.tile,
                         fp.wire_edge_core_mm, fp.cycles.edge_core,
                         fp.wire_core_pad_mm, fp.cycles.core_pad,
-                        fp.is_economical(&chip),
+                        fp.is_economical(&tech.chip),
                     );
                 }
                 TopologyKind::Mesh => {
-                    let fp = MeshFloorplan::plan(&MeshSpec::with_tiles(tiles), mem, &chip)?;
+                    let fp = MeshFloorplan::plan(&MeshSpec::with_tiles(tiles), mem, &tech.chip)?;
                     println!(
                         "2D-mesh chip: {} tiles x {} KB\n  area {:.1} mm^2 (side {:.1}), I/O {:.1} mm^2, switches {:.2} mm^2, wires {:.2} mm^2\n  wires: tile {:.2} mm ({} cy), hop {:.2} mm ({} cy)\n  economical: {}",
                         fp.tiles, fp.mem_kb, fp.area_mm2, fp.chip_side_mm,
                         fp.io_area_mm2, fp.switch_area_mm2, fp.wire_area_mm2,
                         fp.wire_tile_mm, fp.cycles.tile, fp.wire_hop_mm, fp.cycles.mesh_hop,
-                        fp.is_economical(&chip),
+                        fp.is_economical(&tech.chip),
                     );
                 }
             }
         }
         "latency" => {
-            let tiles: usize = args.get("tiles", 1024)?;
-            let mem: u32 = args.get("mem", 128)?;
-            let k: usize = args.get("k", tiles - 1)?;
-            let kind = topo_kind(&args)?;
-            let setup = EmulationSetup::build(kind, tiles, mem, k, net, &chip, &ip)?;
+            let dp = design_point(&args, &doc, 1024, None)?;
+            let setup = dp.build()?;
+            let (tiles, mem, k) = (setup.map.tiles, setup.mem_kb, setup.map.k);
             let exact = setup.expected_latency();
             let seq = SequentialMachine::with_measured_dram(1);
-            println!(
-                "{:?} {tiles}-tile system, {mem} KB/tile, k={k}: {exact:.2} cycles/access ({:.2}x DDR3 {:.1} ns)",
-                kind, exact / seq.dram_ns, seq.dram_ns
-            );
-            if let EvalMode::XlaMc { samples, batch } = eval_mode(&args)? {
-                let set = ArtifactSet::new()?;
-                let engine = LatencyEngine::load(&set, batch)?;
-                let params = setup.kernel_params();
-                let mut rng = Rng::new(args.get("seed", 1u64)?);
-                let mut buf = vec![0i32; batch];
-                let mut sum = 0.0;
-                let mut n = 0;
-                while n < samples {
-                    rng.fill_addresses(setup.map.space_words(), &mut buf);
-                    let (_, mean) = engine.run(&buf, &params)?;
-                    sum += mean as f64;
-                    n += batch;
+            let evaluator = Evaluator::new(eval_mode(&args)?)?;
+            let eval = evaluator.evaluate(&setup, &evaluator.stream(args.get("seed", 1u64)?))?;
+            let name = format!("{}-{tiles}x{mem}-k{k}", kind_str(dp.kind()));
+            if args.has("json") {
+                let mut report = Report::new("latency");
+                report.push(
+                    Row::new(&name)
+                        .str("backend", eval.backend)
+                        .num("mean_cycles", eval.mean_cycles)
+                        .int("samples", eval.samples as u64)
+                        .num("exact_cycles", exact)
+                        .num("vs_ddr3", eval.mean_cycles / seq.dram_ns),
+                );
+                print!("{}", report.render());
+            } else {
+                println!(
+                    "{:?} {tiles}-tile system, {mem} KB/tile, k={k}: {exact:.2} cycles/access ({:.2}x DDR3 {:.1} ns)",
+                    dp.kind(), exact / seq.dram_ns, seq.dram_ns
+                );
+                if eval.backend != "exact" {
+                    println!(
+                        "  {} backend: {:.2} cycles/access ({} samples)",
+                        eval.backend, eval.mean_cycles, eval.samples
+                    );
                 }
-                println!("  XLA hot path: {:.2} cycles/access ({n} samples)", sum / (n / batch) as f64);
             }
         }
         "run" => {
@@ -209,10 +265,7 @@ fn run(raw: Vec<String>) -> Result<()> {
                         memclos::cc::corpus::all().iter().map(|p| p.name).collect();
                     format!("unknown program `{name}` (available: {})", names.join(", "))
                 })?;
-            let tiles: usize = args.get("tiles", 1024)?;
-            let mem: u32 = args.get("mem", 128)?;
-            let k: usize = args.get("k", 255)?;
-            let kind = topo_kind(&args)?;
+            let dp = design_point(&args, &doc, 1024, Some(255))?;
 
             let direct = compile(prog.source, Backend::Direct)?;
             let emulated = compile(prog.source, Backend::Emulated)?;
@@ -222,8 +275,7 @@ fn run(raw: Vec<String>) -> Result<()> {
             let dstats = dm.run(&direct.code)?;
             let dres = dm.reg(0);
 
-            let setup = EmulationSetup::build(kind, tiles, mem, k, net, &chip, &ip)?;
-            let mut emem = EmulatedChannelMemory::new(setup);
+            let mut emem = EmulatedChannelMemory::new(dp.build()?);
             let mut em = Machine::new(&mut emem, 1 << 16);
             let estats = em.run(&emulated.code)?;
             let eres = em.reg(0);
@@ -246,26 +298,34 @@ fn run(raw: Vec<String>) -> Result<()> {
             }
         }
         "contention" => {
-            let tiles: usize = args.get("tiles", 256)?;
             let clients: usize = args.get("clients", 4)?;
             let accesses: usize = args.get("samples", 500)?;
-            let setup = EmulationSetup::build(
-                topo_kind(&args)?,
-                tiles,
-                args.get("mem", 128)?,
-                tiles - 1,
-                net,
-                &chip,
-                &ip,
-            )?;
+            let dp = design_point(&args, &doc, 256, None)?;
+            let setup = dp.build()?;
             let r = run_contention(&setup, clients, accesses, args.get("seed", 5)?);
-            println!(
-                "{clients} clients x {accesses} accesses: mean {:.1} cy (inflation {:.3} over zero-load)",
-                r.latency.mean(),
-                r.inflation
-            );
+            if args.has("json") {
+                let mut report = Report::new("contention");
+                report.push(
+                    Row::new(&format!(
+                        "{}-{}-clients{clients}",
+                        kind_str(dp.kind()),
+                        setup.map.tiles
+                    ))
+                    .int("clients", clients as u64)
+                    .int("accesses", accesses as u64)
+                    .num("mean_cycles", r.latency.mean())
+                    .num("inflation", r.inflation),
+                );
+                print!("{}", report.render());
+            } else {
+                println!(
+                    "{clients} clients x {accesses} accesses: mean {:.1} cy (inflation {:.3} over zero-load)",
+                    r.latency.mean(),
+                    r.inflation
+                );
+            }
         }
-        "selfcheck" => selfcheck(&args, net, &chip, &ip)?,
+        "selfcheck" => selfcheck(&args, &tech)?,
         "bench-hotpath" => {
             let setup = figures::hotpath::design_point()?;
             let b = figures::hotpath::measure(&setup);
@@ -281,9 +341,9 @@ fn run(raw: Vec<String>) -> Result<()> {
             );
         }
         "sweep" => {
-            let tiles: usize = args.get("tiles", 1024)?;
-            let mem: u32 = args.get("mem", 128)?;
-            let kind = topo_kind(&args)?;
+            let dp = design_point(&args, &doc, 1024, None)?;
+            let (kind, tiles) = (dp.kind(), dp.system_tiles());
+            let mem = dp.tile_mem_kb();
             let mut points = Vec::new();
             let mut k = 16usize;
             while k < tiles {
@@ -291,12 +351,26 @@ fn run(raw: Vec<String>) -> Result<()> {
                 k *= 2;
             }
             points.push(SweepPoint { kind, tiles, mem_kb: mem, k: tiles - 1 });
-            let opts = fig_opts(&args)?;
-            let mut results = run_sweep(&points, opts.mode, opts.workers, opts.seed)?;
+            let opts = fig_opts(&args, &doc)?;
+            let mut results = run_sweep(&points, opts.mode, &opts.tech, opts.workers, opts.seed)?;
             results.sort_by_key(|r| r.point.k);
-            println!("k tiles  latency (cycles)");
-            for r in &results {
-                println!("{:>7}  {:.2}", r.point.k, r.mean_cycles);
+            if args.has("json") {
+                let mut report = Report::new("sweep");
+                for r in &results {
+                    report.push(
+                        Row::new(&format!("{}-{tiles}-k{}", kind_str(kind), r.point.k))
+                            .int("k", r.point.k as u64)
+                            .str("backend", r.backend)
+                            .num("mean_cycles", r.mean_cycles)
+                            .int("samples", r.samples as u64),
+                    );
+                }
+                print!("{}", report.render());
+            } else {
+                println!("k tiles  latency (cycles)");
+                for r in &results {
+                    println!("{:>7}  {:.2}", r.point.k, r.mean_cycles);
+                }
             }
         }
         other => bail!("unknown command `{other}` (try --help)"),
@@ -304,16 +378,16 @@ fn run(raw: Vec<String>) -> Result<()> {
     Ok(())
 }
 
-/// Prove the three evaluation paths agree: exact expectation, native
-/// Monte-Carlo, and the AOT XLA kernel.
-fn selfcheck(args: &Args, net: NetParams, chip: &ChipTech, ip: &InterposerTech) -> Result<()> {
-    let set = ArtifactSet::new()?;
+/// Prove the evaluation paths agree: exact expectation, native
+/// Monte-Carlo batches, and the AOT XLA kernel, via the api backends.
+fn selfcheck(args: &Args, tech: &Tech) -> Result<()> {
+    let set = memclos::runtime::ArtifactSet::new()?;
     println!("PJRT platform: {}", set.platform());
     if !set.available("latency_batch_4096") {
         bail!("artifacts missing — run `make artifacts` first");
     }
-    let engine = LatencyEngine::load(&set, 4096)?;
-    let mut rng = Rng::new(args.get("seed", 0xABCD)?);
+    let backend = XlaBackend::load_from(&set, 4096)?;
+    let mut rng = memclos::util::rng::Rng::new(args.get("seed", 0xABCD)?);
     let mut worst = 0f32;
     let mut checked = 0usize;
     for kind in [TopologyKind::Clos, TopologyKind::Mesh] {
@@ -322,11 +396,14 @@ fn selfcheck(args: &Args, net: NetParams, chip: &ChipTech, ip: &InterposerTech) 
                 if k >= tiles {
                     continue;
                 }
-                let setup = EmulationSetup::build(kind, tiles, mem, k, net, chip, ip)?;
-                let params = setup.kernel_params();
+                let setup = DesignPoint::new(kind, tiles)
+                    .mem_kb(mem)
+                    .k(k)
+                    .tech(tech)
+                    .build()?;
                 let mut addrs = vec![0i32; 4096];
                 rng.fill_addresses(setup.map.space_words(), &mut addrs);
-                let (xla_lat, _) = engine.run(&addrs, &params)?;
+                let (xla_lat, _) = backend.batch_latencies(&setup, &addrs)?;
                 let mut native = Vec::new();
                 setup.native_batch(&addrs, &mut native);
                 for i in 0..addrs.len() {

@@ -29,15 +29,62 @@ impl Default for MeshSpec {
     }
 }
 
+/// Integer square root (largest `r` with `r*r <= n`) — the mesh-grid
+/// arithmetic must not round through `f64`, which silently truncates
+/// at non-power-of-4 tile counts.
+fn isqrt(n: usize) -> usize {
+    if n < 2 {
+        return n;
+    }
+    let n = n as u128;
+    let mut r = (n as f64).sqrt() as u128; // seed only; corrected below
+    while r * r > n {
+        r -= 1;
+    }
+    while (r + 1) * (r + 1) <= n {
+        r += 1;
+    }
+    r as usize
+}
+
 impl MeshSpec {
     /// Spec with a given tile count and paper defaults otherwise.
     pub fn with_tiles(tiles: usize) -> Self {
         Self { tiles, ..Self::default() }
     }
 
-    /// Blocks per grid row (and column — the grid is square).
+    /// Blocks per row of a square grid of `tiles` over
+    /// `tiles_per_block`-tile blocks; errors (naming the counts) when
+    /// the tiles do not form such a grid.
+    pub fn grid_side(tiles: usize, tiles_per_block: usize) -> Result<usize> {
+        if tiles_per_block == 0 || tiles % tiles_per_block != 0 {
+            bail!("tiles {tiles} do not split into {tiles_per_block}-tile blocks");
+        }
+        let blocks = tiles / tiles_per_block;
+        let bx = isqrt(blocks);
+        if bx * bx != blocks {
+            bail!(
+                "tiles {tiles} give {blocks} blocks of {tiles_per_block}, \
+                 which is not a square grid ({bx}^2 = {})",
+                bx * bx
+            );
+        }
+        Ok(bx)
+    }
+
+    /// A single-chip spec: the whole (square) grid on one die, with the
+    /// paper's 16-tile blocks. Rejects tile counts that do not form a
+    /// square grid instead of silently truncating.
+    pub fn single_chip(tiles: usize) -> Result<Self> {
+        let d = Self::default();
+        let bx = Self::grid_side(tiles, d.tiles_per_block)?;
+        Ok(Self { tiles, tiles_per_block: d.tiles_per_block, chip_blocks_x: bx.max(1) })
+    }
+
+    /// Blocks per grid row (and column — the grid is square; use
+    /// [`MeshSpec::validate`] to reject non-square counts).
     pub fn blocks_x(&self) -> usize {
-        ((self.tiles / self.tiles_per_block) as f64).sqrt().round() as usize
+        isqrt(self.tiles / self.tiles_per_block)
     }
 
     /// Number of chips.
@@ -222,5 +269,38 @@ mod tests {
     fn rejects_non_square() {
         assert!(Mesh2D::build(MeshSpec::with_tiles(128)).is_err());
         assert!(Mesh2D::build(MeshSpec::with_tiles(100)).is_err());
+    }
+
+    #[test]
+    fn grid_side_is_exact_integer_arithmetic() {
+        assert_eq!(MeshSpec::grid_side(16, 16).unwrap(), 1);
+        assert_eq!(MeshSpec::grid_side(1024, 16).unwrap(), 8);
+        assert_eq!(MeshSpec::grid_side(9 * 16, 16).unwrap(), 3);
+        // Non-square block counts are rejected, not truncated: 2048
+        // tiles give 128 blocks, whose f64 sqrt (11.31..) used to be
+        // cast straight to 11.
+        let err = MeshSpec::grid_side(2048, 16).unwrap_err().to_string();
+        assert!(err.contains("not a square grid"), "{err}");
+        assert!(MeshSpec::grid_side(512, 16).is_err());
+        assert!(MeshSpec::grid_side(100, 16).is_err());
+        assert!(MeshSpec::grid_side(100, 0).is_err());
+    }
+
+    #[test]
+    fn single_chip_spec_at_non_square_point_errors() {
+        let spec = MeshSpec::single_chip(1024).unwrap();
+        assert_eq!(spec.chip_blocks_x, 8);
+        assert_eq!(spec.chips(), 1);
+        assert!(MeshSpec::single_chip(2048).is_err());
+        assert!(MeshSpec::single_chip(8).is_err());
+    }
+
+    #[test]
+    fn isqrt_matches_definition() {
+        for n in 0..10_000usize {
+            let r = isqrt(n);
+            assert!(r * r <= n && (r + 1) * (r + 1) > n, "isqrt({n}) = {r}");
+        }
+        assert_eq!(isqrt(usize::MAX), (1usize << 32) - 1);
     }
 }

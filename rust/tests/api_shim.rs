@@ -1,0 +1,101 @@
+//! The `memclos::api` shim contract: the typed [`DesignPoint`] builder
+//! must be **bit-identical** to the legacy `EmulationSetup::build`
+//! positional constructor across random design points — same rank
+//! LUT, same expected latency, same kernel-parameter encoding — so
+//! call sites could migrate without any numeric drift.
+
+use memclos::api::{AddrStream, DesignPoint, Evaluator, LatencyBackend, Mode, NativeMcBackend};
+use memclos::emulation::{EmulationSetup, TopologyKind};
+use memclos::netmodel::NetParams;
+use memclos::tech::{ChipTech, InterposerTech};
+use memclos::util::prop::{check, ensure};
+use memclos::util::rng::Rng;
+
+#[test]
+fn builder_is_bit_identical_to_legacy_build() {
+    check(
+        |r: &mut Rng| {
+            let kind = if r.chance(0.5) { TopologyKind::Clos } else { TopologyKind::Mesh };
+            let tiles = *r.choose(&[256usize, 1024]);
+            let mem_kb = *r.choose(&[64u32, 128, 256]);
+            let k = 1 + r.below((tiles - 1) as u64) as usize;
+            // Perturb the tech so equality is not just "both used the
+            // paper defaults".
+            let t_mem = 1.0 + r.below(4) as f64;
+            let t_switch = 1.0 + r.below(3) as f64;
+            let route_open = r.chance(0.3);
+            (kind, tiles, mem_kb, k, t_mem, t_switch, route_open)
+        },
+        |&(kind, tiles, mem_kb, k, t_mem, t_switch, route_open)| {
+            let net = NetParams { t_mem, t_switch, route_open, ..NetParams::default() };
+            let chip = ChipTech::default();
+            let ip = InterposerTech::default();
+
+            let legacy =
+                EmulationSetup::build(kind, tiles, mem_kb, k, net, &chip, &ip).unwrap();
+            let built = DesignPoint::new(kind, tiles)
+                .mem_kb(mem_kb)
+                .k(k)
+                .net(net)
+                .chip(chip)
+                .interposer(ip)
+                .build()
+                .unwrap();
+
+            ensure(built.map == legacy.map, "address maps differ")?;
+            ensure(
+                built.rank_latencies().len() == legacy.rank_latencies().len(),
+                "LUT lengths differ",
+            )?;
+            for (r, (a, b)) in
+                built.rank_latencies().iter().zip(legacy.rank_latencies()).enumerate()
+            {
+                ensure(
+                    a.to_bits() == b.to_bits(),
+                    format!("rank {r}: builder {a} != legacy {b}"),
+                )?;
+            }
+            ensure(
+                built.expected_latency().to_bits() == legacy.expected_latency().to_bits(),
+                "expected latency differs",
+            )?;
+            ensure(
+                built.kernel_params() == legacy.kernel_params(),
+                "kernel params differ",
+            )
+        },
+    );
+}
+
+#[test]
+fn full_emulation_is_the_default_k() {
+    // The builder's paper default (`k = tiles - 1`) matches an explicit
+    // full emulation through the legacy shim.
+    for tiles in [256usize, 1024] {
+        let dp = DesignPoint::clos(tiles).build().unwrap();
+        let legacy = EmulationSetup::build(
+            TopologyKind::Clos,
+            tiles,
+            128,
+            tiles - 1,
+            NetParams::default(),
+            &ChipTech::default(),
+            &InterposerTech::default(),
+        )
+        .unwrap();
+        assert_eq!(dp.expected_latency().to_bits(), legacy.expected_latency().to_bits());
+    }
+}
+
+#[test]
+fn evaluator_backends_agree_on_one_point() {
+    // Exact through the Evaluator == EmulationSetup::expected_latency,
+    // and the native MC backend lands within sampling error of it.
+    let setup = DesignPoint::clos(1024).k(767).build().unwrap();
+    let exact = Evaluator::new(Mode::Exact).unwrap();
+    let e = exact.evaluate(&setup, &exact.stream(0)).unwrap();
+    assert_eq!(e.mean_cycles.to_bits(), setup.expected_latency().to_bits());
+
+    let mc = NativeMcBackend.evaluate(&setup, &AddrStream::new(50_000, 3)).unwrap();
+    assert!((mc.mean_cycles - e.mean_cycles).abs() / e.mean_cycles < 0.02);
+}
