@@ -44,9 +44,9 @@ fn main() -> anyhow::Result<()> {
             prog.name.to_string(),
             result.to_string(),
             ds.instructions.to_string(),
-            f(ds.cycles, 0),
-            f(es.cycles, 0),
-            format!("{}x", f(es.cycles / ds.cycles, 2)),
+            f(ds.cycles as f64, 0),
+            f(es.cycles as f64, 0),
+            format!("{}x", f(es.cycles as f64 / ds.cycles as f64, 2)),
             direct.binary_bytes().to_string(),
             emulated.binary_bytes().to_string(),
             f(

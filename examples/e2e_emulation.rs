@@ -96,7 +96,7 @@ fn main() -> anyhow::Result<()> {
         let mut em = Machine::new(&mut emem, 1 << 16);
         let es = em.run(&emulated.code)?;
         assert_eq!(dm.reg(0), em.reg(0), "{} backends disagree", prog.name);
-        let sd = es.cycles / ds.cycles;
+        let sd = es.cycles as f64 / ds.cycles as f64;
         slowdowns.push(sd);
         bt.row(&[
             prog.name.to_string(),

@@ -1,0 +1,52 @@
+//! Bench: whole-program interpretation — the pre-decoded
+//! direct-threaded loop ([`memclos::isa::decode::FastMachine`]) vs the
+//! legacy enum-match loop ([`memclos::isa::interp::Machine`]) over the
+//! full cc corpus on both memory systems, plus the decode-once cost.
+//!
+//! Writes the machine-readable perf trajectory to `BENCH_interp.json`
+//! (override the path with `--json PATH`; same schema family as
+//! `BENCH_hotpath.json`) and then enforces the floor: the decoded
+//! interpreter must be >= 5x the legacy loop on the emulated corpus.
+//!
+//! Quick smoke mode: set `MEMCLOS_BENCH_QUICK=1` (what
+//! `rust/scripts/bench_hotpath.sh` does).
+
+use std::path::PathBuf;
+
+use memclos::figures::interp_bench;
+
+fn json_path() -> PathBuf {
+    let args: Vec<String> = std::env::args().collect();
+    for w in args.windows(2) {
+        if w[0] == "--json" {
+            return PathBuf::from(&w[1]);
+        }
+    }
+    PathBuf::from("BENCH_interp.json")
+}
+
+fn main() {
+    let w = interp_bench::workload().expect("corpus compiles + predecodes");
+    println!(
+        "corpus: {} programs, {} direct / {} emulated instructions per pass",
+        w.corpus.programs.len(),
+        w.direct_insts,
+        w.emulated_insts
+    );
+
+    let b = interp_bench::measure(&w);
+    b.report();
+    println!("\n{}", interp_bench::render(&b));
+
+    // Perf trajectory lands on disk before the assertions run, so a
+    // regression still records its numbers.
+    let path = json_path();
+    b.write_json(&path).expect("write bench json");
+    println!("wrote {}", path.display());
+
+    interp_bench::assert_interp(&b).expect("interpreter throughput floors");
+    println!(
+        "interp assertions OK (decoded {:.1}x legacy on the emulated corpus)",
+        interp_bench::speedup(&b).unwrap()
+    );
+}

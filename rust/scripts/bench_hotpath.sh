@@ -1,9 +1,12 @@
 #!/usr/bin/env bash
-# Quick-smoke run of the access-hot-path bench; writes the
-# machine-readable perf trajectory to BENCH_hotpath.json at the repo
-# root so successive PRs can diff throughput.
+# Quick-smoke run of the perf-trajectory benches; writes the
+# machine-readable results to the repo root so successive PRs can diff
+# throughput:
 #
-# Schema: {"bench": "hotpath",
+#   BENCH_hotpath.json — the emulated-memory access hot path
+#   BENCH_interp.json  — decoded-vs-legacy whole-program interpretation
+#
+# Schema (both files): {"bench": <group>,
 #          "results": [{"name", "median_ns", "addrs_per_s"}]}
 #
 # Usage: rust/scripts/bench_hotpath.sh [--full]
@@ -14,6 +17,7 @@ set -euo pipefail
 RUST_DIR="$(cd "$(dirname "$0")/.." && pwd)"
 REPO_ROOT="$(cd "$RUST_DIR/.." && pwd)"
 OUT="$REPO_ROOT/BENCH_hotpath.json"
+INTERP_OUT="$REPO_ROOT/BENCH_interp.json"
 
 if [[ "${1:-}" != "--full" ]]; then
     export MEMCLOS_BENCH_QUICK=1
@@ -21,8 +25,9 @@ fi
 
 cd "$RUST_DIR"
 
-# Prefer the bench binary (covers the XLA paths too); fall back to the
-# CLI subcommand, which measures the native/DES/interpreter paths only.
+# Prefer the bench binaries (hotpath covers the XLA paths too); fall
+# back to the CLI subcommands, which measure the native/DES/interpreter
+# paths only.
 if cargo bench --bench hotpath -- --json "$OUT"; then
     :
 else
@@ -31,3 +36,12 @@ else
 fi
 
 echo "perf trajectory written to $OUT"
+
+if cargo bench --bench interp -- --json "$INTERP_OUT"; then
+    :
+else
+    echo "(cargo bench interp failed; falling back to the CLI bench-interp)" >&2
+    cargo run --release --bin memclos -- bench-interp --out "$INTERP_OUT"
+fi
+
+echo "interp trajectory written to $INTERP_OUT"

@@ -318,8 +318,10 @@ mod tests {
     use super::*;
     use crate::cc::codegen::{compile, Backend};
     use crate::emulation::{EmulationSetup, SequentialMachine, TopologyKind};
+    use crate::isa::decode::{predecode, FastMachine};
     use crate::isa::interp::{DirectMemory, EmulatedChannelMemory, Machine, RunStats};
 
+    /// Run one corpus program on the legacy interpreter.
     fn run(prog: &CorpusProgram, backend: Backend) -> (i64, RunStats) {
         let p = compile(prog.source, backend).unwrap();
         match backend {
@@ -341,17 +343,46 @@ mod tests {
         }
     }
 
+    /// Run one corpus program on the pre-decoded fast interpreter.
+    fn run_decoded(prog: &CorpusProgram, backend: Backend) -> (i64, RunStats) {
+        let p = compile(prog.source, backend).unwrap();
+        let decoded = predecode(&p.code).unwrap();
+        match backend {
+            Backend::Direct => {
+                let mut mem =
+                    DirectMemory::new(SequentialMachine::paper_figures(false), 1 << 20);
+                let mut m = FastMachine::new(&mut mem, 1 << 16);
+                let stats = m.run(&decoded).unwrap();
+                (m.reg(0), stats)
+            }
+            Backend::Emulated => {
+                let setup =
+                    EmulationSetup::default_tech(TopologyKind::Clos, 1024, 128, 255).unwrap();
+                let mut mem = EmulatedChannelMemory::new(setup);
+                let mut m = FastMachine::new(&mut mem, 1 << 16);
+                let stats = m.run(&decoded).unwrap();
+                (m.reg(0), stats)
+            }
+        }
+    }
+
     #[test]
     fn corpus_compiles_and_backends_agree() {
         for prog in all() {
-            let (d, _) = run(&prog, Backend::Direct);
-            let (e, _) = run(&prog, Backend::Emulated);
+            let (d, ds) = run(&prog, Backend::Direct);
+            let (e, es) = run(&prog, Backend::Emulated);
             assert_eq!(d, e, "{}: backends disagree", prog.name);
             if let Some(want) = prog.expected {
                 assert_eq!(d, want, "{}: wrong result", prog.name);
             } else {
                 assert_ne!(d, 0, "{}: degenerate zero result", prog.name);
             }
+            // The decoded fast loop is bit-identical to the legacy
+            // oracle on every corpus program, both backends.
+            let (fd, fds) = run_decoded(&prog, Backend::Direct);
+            let (fe, fes) = run_decoded(&prog, Backend::Emulated);
+            assert_eq!((d, ds), (fd, fds), "{}: direct decoded diverges", prog.name);
+            assert_eq!((e, es), (fe, fes), "{}: emulated decoded diverges", prog.name);
         }
     }
 

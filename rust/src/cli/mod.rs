@@ -20,7 +20,7 @@ pub struct Args {
 }
 
 /// Flags that take no value.
-const BOOLEAN_FLAGS: &[&str] = &["help", "quick", "tsv", "no-plot", "verbose", "json"];
+const BOOLEAN_FLAGS: &[&str] = &["help", "quick", "tsv", "no-plot", "verbose", "json", "legacy"];
 
 impl Args {
     /// Parse from an iterator of arguments (without argv[0]).
@@ -90,6 +90,13 @@ mod tests {
         let a = parse("latency --json --tiles 1024");
         assert!(a.has("json"));
         assert_eq!(a.get::<usize>("tiles", 0).unwrap(), 1024);
+    }
+
+    #[test]
+    fn legacy_is_boolean() {
+        let a = parse("run sieve --legacy --topo clos");
+        assert!(a.has("legacy"));
+        assert_eq!(a.flag("topo"), Some("clos"));
     }
 
     #[test]

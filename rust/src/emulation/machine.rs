@@ -227,6 +227,14 @@ impl EmulationSetup {
         &self.rank_latency
     }
 
+    /// Whole-cycle copy of the rank LUT for the interpreters' integer
+    /// cycle accounting (entry `r` = `rank_latencies()[r]` rounded to
+    /// the nearest cycle; exact for the paper's integral link/switch
+    /// parameters).
+    pub fn rank_cycles(&self) -> Vec<u64> {
+        self.rank_latency.iter().map(|&l| l.round() as u64).collect()
+    }
+
     /// Native evaluation of a batch of addresses (mirrors the AOT
     /// kernel bit-for-bit in f32). A tight, autovectorisable loop over
     /// the rank LUT.
@@ -436,6 +444,18 @@ mod tests {
                 ensure(exp.to_bits() == mean.to_bits(), "stored mean != LUT mean")
             },
         );
+    }
+
+    #[test]
+    fn rank_cycles_round_the_lut() {
+        let e = EmulationSetup::default_tech(TopologyKind::Clos, 1024, 128, 767).unwrap();
+        let cy = e.rank_cycles();
+        assert_eq!(cy.len(), e.rank_latencies().len());
+        for (c, l) in cy.iter().zip(e.rank_latencies()) {
+            assert_eq!(*c, l.round() as u64);
+            // default tech is integral, so rounding is exact
+            assert_eq!(*c as f64, *l);
+        }
     }
 
     #[test]

@@ -1,15 +1,30 @@
-//! Fig 10: Dhrystone and compiler benchmark slowdown (relative to the
-//! sequential machine) vs emulation size, 1,024- and 4,096-tile
-//! systems.
+//! Fig 10: benchmark slowdown (relative to the sequential machine) vs
+//! emulation size, 1,024- and 4,096-tile systems.
+//!
+//! Two kinds of rows, labelled in the `source` column:
+//!
+//! * **`analytic`** — the Dhrystone/compiler instruction-mix rows,
+//!   computed with the closed-form [`predict_slowdown`] formula at
+//!   every sweep point. These are *predictions from Fig 8's mixes*,
+//!   not executions; they survive as the oracle the measurement is
+//!   sanity-checked against.
+//! * **`measured`** — the full `cc` corpus compiled, predecoded and
+//!   **executed end-to-end** on both machines
+//!   ([`crate::workload::measured`]) at the full-emulation point of
+//!   each system/topology, one row per program plus the cycle-weighted
+//!   `corpus` aggregate. This is the paper's §7.2 methodology: the
+//!   slowdown is what the costed interpreter actually charges.
 
 use anyhow::Result;
 
 use super::fig9::{k_points, MEM_KB, SYSTEMS};
 use super::FigOpts;
+use crate::api::DesignPoint;
 use crate::coordinator::{run_sweep, SweepPoint};
 use crate::emulation::{SequentialMachine, TopologyKind};
 use crate::util::plot::Plot;
 use crate::util::table::{f, Table};
+use crate::workload::measured::CompiledCorpus;
 use crate::workload::{predict_slowdown, InstructionMix, COMPILER_MIX, DHRYSTONE_MIX};
 
 /// One data point.
@@ -19,15 +34,26 @@ pub struct Row {
     pub system: usize,
     /// "clos" or "mesh".
     pub topo: &'static str,
-    /// "dhrystone" or "compiler".
+    /// "dhrystone"/"compiler" (analytic) or a corpus program name /
+    /// "corpus" aggregate (measured).
     pub benchmark: &'static str,
     /// Emulation size.
     pub k: usize,
     /// Slowdown vs the sequential machine.
     pub slowdown: f64,
+    /// "analytic" (mix formula) or "measured" (executed corpus).
+    pub source: &'static str,
 }
 
-/// Generate the Fig 10 dataset.
+fn topo_str(kind: TopologyKind) -> &'static str {
+    match kind {
+        TopologyKind::Clos => "clos",
+        TopologyKind::Mesh => "mesh",
+    }
+}
+
+/// Generate the Fig 10 dataset: the analytic sweep plus measured corpus
+/// rows at the full-emulation point of every system/topology.
 pub fn generate(opts: &FigOpts) -> Result<Vec<Row>> {
     let mut points = Vec::new();
     for &system in SYSTEMS {
@@ -47,35 +73,73 @@ pub fn generate(opts: &FigOpts) -> Result<Vec<Row>> {
         for (name, mix) in benches {
             rows.push(Row {
                 system: r.point.tiles,
-                topo: match r.point.kind {
-                    TopologyKind::Clos => "clos",
-                    TopologyKind::Mesh => "mesh",
-                },
+                topo: topo_str(r.point.kind),
                 benchmark: name,
                 k: r.point.k,
                 slowdown: predict_slowdown(&mix, r.mean_cycles, dram),
+                source: "analytic",
             });
         }
     }
-    rows.sort_by_key(|r| (r.system, r.topo, r.benchmark, r.k));
+
+    // Measured rows: run the corpus through the decoded interpreter at
+    // the full-emulation point of every system/topology.
+    let corpus = CompiledCorpus::compile()?;
+    let seq = SequentialMachine::with_measured_dram(1);
+    for &system in SYSTEMS {
+        for kind in [TopologyKind::Clos, TopologyKind::Mesh] {
+            let k = system - 1;
+            let setup = DesignPoint::new(kind, system)
+                .mem_kb(MEM_KB)
+                .k(k)
+                .tech(&opts.tech)
+                .build()?;
+            let m = corpus.measure(&setup, seq)?;
+            for run in &m.runs {
+                rows.push(Row {
+                    system,
+                    topo: topo_str(kind),
+                    benchmark: run.name,
+                    k,
+                    slowdown: run.slowdown(),
+                    source: "measured",
+                });
+            }
+            rows.push(Row {
+                system,
+                topo: topo_str(kind),
+                benchmark: "corpus",
+                k,
+                slowdown: m.slowdown(),
+                source: "measured",
+            });
+        }
+    }
+
+    rows.sort_by_key(|r| (r.system, r.topo, r.source, r.benchmark, r.k));
     Ok(rows)
 }
 
 /// Render the dataset.
 pub fn render(rows: &[Row]) -> String {
     let mut out = String::new();
-    let mut t = Table::new(&["system", "topo", "benchmark", "k tiles", "slowdown"])
+    let mut t = Table::new(&["system", "topo", "benchmark", "source", "k tiles", "slowdown"])
         .with_title("Fig 10: benchmark slowdown vs sequential machine");
     for r in rows {
         t.row(&[
             r.system.to_string(),
             r.topo.to_string(),
             r.benchmark.to_string(),
+            r.source.to_string(),
             r.k.to_string(),
             f(r.slowdown, 3),
         ]);
     }
     out.push_str(&t.render());
+    out.push_str(
+        "\nanalytic rows: closed-form mix prediction (oracle); measured rows: \
+         the cc corpus executed end-to-end on both machines.\n",
+    );
     for &system in SYSTEMS {
         let mut plot = Plot::new(
             &format!("Fig 10 ({system}-tile system): slowdown vs emulation tiles (log2)"),
@@ -86,15 +150,31 @@ pub fn render(rows: &[Row]) -> String {
             for bench in ["dhrystone", "compiler"] {
                 let pts: Vec<(f64, f64)> = rows
                     .iter()
-                    .filter(|r| r.system == system && r.topo == topo && r.benchmark == bench)
+                    .filter(|r| {
+                        r.system == system
+                            && r.topo == topo
+                            && r.benchmark == bench
+                            && r.source == "analytic"
+                    })
                     .map(|r| (r.k as f64, r.slowdown))
                     .collect();
-                plot.series(&format!("{topo}-{bench}"), &pts);
+                plot.series(&format!("{topo}-{bench} (analytic)"), &pts);
             }
         }
         plot.hline(1.0, "parity");
         out.push('\n');
         out.push_str(&plot.render());
+        for topo in ["clos", "mesh"] {
+            if let Some(r) = rows.iter().find(|r| {
+                r.system == system && r.topo == topo && r.benchmark == "corpus"
+            }) {
+                out.push_str(&format!(
+                    "measured corpus slowdown ({topo}, k={}): {}x\n",
+                    r.k,
+                    f(r.slowdown, 2)
+                ));
+            }
+        }
     }
     out
 }
@@ -156,5 +236,80 @@ mod tests {
             .find(|r| r.system == 1024 && r.topo == "clos" && r.benchmark == "compiler" && r.k == 64)
             .unwrap();
         assert!((mesh_small.slowdown / clos_small.slowdown - 1.0).abs() < 0.35);
+    }
+
+    #[test]
+    fn measured_rows_cover_the_corpus() {
+        let rows = generate(&FigOpts::default()).unwrap();
+        // Every row is labelled.
+        assert!(rows.iter().all(|r| r.source == "analytic" || r.source == "measured"));
+        // Measured rows at the full-emulation point of both systems
+        // and both topologies, with the per-program + aggregate rows.
+        let n_corpus = crate::cc::corpus::all().len();
+        for &system in SYSTEMS {
+            for topo in ["clos", "mesh"] {
+                let measured: Vec<&Row> = rows
+                    .iter()
+                    .filter(|r| r.system == system && r.topo == topo && r.source == "measured")
+                    .collect();
+                assert_eq!(measured.len(), n_corpus + 1, "{topo}@{system}");
+                assert!(measured.iter().all(|r| r.k == system - 1));
+                let agg = measured.iter().find(|r| r.benchmark == "corpus").unwrap();
+                // Full emulation: slower than the sequential machine
+                // but within the paper's broad band.
+                assert!(
+                    agg.slowdown > 1.0 && agg.slowdown < 6.0,
+                    "{topo}@{system}: measured corpus slowdown {}",
+                    agg.slowdown
+                );
+            }
+        }
+        // The analytic compiler-mix prediction and the measured corpus
+        // aggregate tell the same story at the 4,096-tile Clos point.
+        let analytic = rows
+            .iter()
+            .find(|r| {
+                r.system == 4096 && r.topo == "clos" && r.benchmark == "compiler" && r.k == 4095
+            })
+            .unwrap();
+        let measured = rows
+            .iter()
+            .find(|r| {
+                r.system == 4096 && r.topo == "clos" && r.benchmark == "corpus" && r.k == 4095
+            })
+            .unwrap();
+        let rel = (measured.slowdown / analytic.slowdown - 1.0).abs();
+        assert!(
+            rel < 0.6,
+            "measured {} vs analytic {} diverge by {rel}",
+            measured.slowdown,
+            analytic.slowdown
+        );
+    }
+
+    #[test]
+    fn render_labels_sources() {
+        let rows = vec![
+            Row {
+                system: 1024,
+                topo: "clos",
+                benchmark: "dhrystone",
+                k: 16,
+                slowdown: 0.9,
+                source: "analytic",
+            },
+            Row {
+                system: 1024,
+                topo: "clos",
+                benchmark: "corpus",
+                k: 1023,
+                slowdown: 2.4,
+                source: "measured",
+            },
+        ];
+        let s = render(&rows);
+        assert!(s.contains("source"));
+        assert!(s.contains("analytic"));
+        assert!(s.contains("measured corpus slowdown (clos, k=1023)"));
     }
 }

@@ -15,6 +15,7 @@
 //! | [`binary_size`] | §7.3 — program binary growth |
 //! | [`ablations`] | design-choice ablations (route-open, clock, switch degree, eDRAM) |
 //! | [`hotpath`] | (not in the paper) the repo's own access-hot-path perf trajectory |
+//! | [`interp_bench`] | (not in the paper) decoded-vs-legacy interpreter perf trajectory |
 
 pub mod ablations;
 pub mod binary_size;
@@ -25,6 +26,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig9;
 pub mod hotpath;
+pub mod interp_bench;
 pub mod tables;
 
 use crate::api::{Mode, Tech};

@@ -1,0 +1,918 @@
+//! Decode-once / execute-fast interpretation (the split production
+//! interpreters use, cf. wasmtime's Pulley): [`predecode`] validates a
+//! program **once** into a dense [`DecodedProgram`], and
+//! [`FastMachine::run`] executes it with a direct-threaded dispatch
+//! loop that carries no `Result` in the steady state.
+//!
+//! What predecoding buys the hot loop:
+//!
+//! * **branch targets resolved to absolute pcs** — no per-branch signed
+//!   arithmetic or range check; targets past the end resolve to a
+//!   [`DecodedOp::FellOff`] sentinel appended after the last
+//!   instruction, which reproduces the legacy interpreter's
+//!   "fell off the end" error without a per-step bounds test;
+//! * **register indices checked** — every operand is proven `< 16`, so
+//!   the loop indexes the register file with a mask instead of a
+//!   panicking bounds check;
+//! * **local offsets bounds-prepared** — offsets are pre-widened; only
+//!   the (dynamic-base) range test remains, and it traps out of the
+//!   loop instead of threading `Result` through every arm;
+//! * **§2.1 channel sequences fused** — the canonical
+//!   `SEND tag; SEND addr; RECV` and `SEND tag; SEND addr; SEND val;
+//!   RECVACK` expansions become single [`DecodedOp::EmuLoad`] /
+//!   [`DecodedOp::EmuStore`] macro-ops that hit the memory system's
+//!   whole-cycle rank LUT directly (one dispatch instead of 3–4, no
+//!   channel state machine);
+//! * **integer cycle accounting** — cycles accumulate in a `u64`
+//!   (f64 only at the [`RunStats`] reporting boundary), and a
+//!   precomputed power-of-two address mask replaces the per-access `%`
+//!   whenever the address space allows it.
+//!
+//! The legacy enum-match loop ([`super::interp::Machine`]) survives as
+//! the bit-identity oracle: on any program both loops accept, the
+//! [`RunStats`] and register file agree **exactly** (see the property
+//! tests here and `benches/interp.rs` for the measured speedup).
+//!
+//! Predecoding is strictly *pre*-validation: programs the legacy
+//! interpreter would reject at runtime (non-canonical channel
+//! sequences, out-of-range registers, negative branch targets, branches
+//! into the middle of a fused sequence) are rejected by [`predecode`]
+//! up front.
+
+use anyhow::{bail, ensure, Result};
+
+use super::inst::Inst;
+use super::interp::{MemorySystem, RunStats};
+use crate::emulation::controller::{MSG_READ, MSG_WRITE};
+
+/// One pre-validated, pre-resolved operation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodedOp {
+    /// `rd <- ra + rb`
+    Add { d: u8, a: u8, b: u8 },
+    /// `rd <- ra - rb`
+    Sub { d: u8, a: u8, b: u8 },
+    /// `rd <- ra * rb`
+    Mul { d: u8, a: u8, b: u8 },
+    /// `rd <- ra & rb`
+    And { d: u8, a: u8, b: u8 },
+    /// `rd <- ra | rb`
+    Or { d: u8, a: u8, b: u8 },
+    /// `rd <- ra ^ rb`
+    Xor { d: u8, a: u8, b: u8 },
+    /// `rd <- ra < rb` (signed, 0/1)
+    Lt { d: u8, a: u8, b: u8 },
+    /// `rd <- ra == rb` (0/1)
+    Eq { d: u8, a: u8, b: u8 },
+    /// `rd <- ra + imm`
+    AddI { d: u8, a: u8, imm: i32 },
+    /// `rd <- imm`
+    LoadImm { d: u8, imm: i32 },
+    /// `rd <- rs`
+    Mov { d: u8, s: u8 },
+    /// Unconditional branch to an absolute decoded pc.
+    Jump { target: u32 },
+    /// Branch to `target` if `rc == 0`.
+    BranchZ { c: u8, target: u32 },
+    /// Branch to `target` if `rc != 0`.
+    BranchNZ { c: u8, target: u32 },
+    /// Call an absolute decoded pc (pushes the return pc).
+    Call { target: u32 },
+    /// Return.
+    Ret,
+    /// `rd <- local[ra + off]`
+    LoadLocal { d: u8, a: u8, off: i32 },
+    /// `local[ra + off] <- rs`
+    StoreLocal { s: u8, a: u8, off: i32 },
+    /// `rd <- global[ra]` (direct-memory backend)
+    LoadGlobal { d: u8, a: u8 },
+    /// `global[ra] <- rs` (direct-memory backend)
+    StoreGlobal { s: u8, a: u8 },
+    /// Fused `SEND READ; SEND addr; RECV`: one emulated load
+    /// (3 instructions, 3 issue cycles + the round trip).
+    EmuLoad { d: u8, a: u8 },
+    /// Fused `SEND WRITE; SEND addr; SEND val; RECVACK`: one emulated
+    /// store (4 instructions, 4 issue cycles + the round trip).
+    EmuStore { s: u8, a: u8 },
+    /// Stop.
+    Halt,
+    /// No operation.
+    Nop,
+    /// Sentinel past the last instruction: reaching it reproduces the
+    /// legacy "fell off the end of the program" error.
+    FellOff,
+}
+
+/// A predecoded program: dense ops with a trailing [`DecodedOp::FellOff`]
+/// sentinel, every branch target a valid index into `ops`.
+#[derive(Clone, Debug)]
+pub struct DecodedProgram {
+    ops: Vec<DecodedOp>,
+    source_len: usize,
+}
+
+impl DecodedProgram {
+    /// The decoded operations (sentinel included).
+    pub fn ops(&self) -> &[DecodedOp] {
+        &self.ops
+    }
+
+    /// Number of decoded operations, sentinel excluded (fusion makes
+    /// this smaller than the source instruction count).
+    pub fn len(&self) -> usize {
+        self.ops.len() - 1
+    }
+
+    /// True for an empty source program.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Source-program instruction count.
+    pub fn source_len(&self) -> usize {
+        self.source_len
+    }
+}
+
+fn reg_ok(pc: usize, r: u8) -> Result<()> {
+    ensure!(r < 16, "pc {pc}: register r{r} out of range");
+    Ok(())
+}
+
+/// Pre-validate and pre-resolve a program (see the module docs for the
+/// checks performed). The returned [`DecodedProgram`] runs on
+/// [`FastMachine`] with no per-step validation.
+pub fn predecode(program: &[Inst]) -> Result<DecodedProgram> {
+    use Inst as I;
+    let n = program.len();
+    ensure!(n < u32::MAX as usize - 1, "program too long ({n} instructions)");
+
+    // Pass 1: fuse + validate operands, recording where every original
+    // pc landed (u32::MAX marks the interior of a fused sequence).
+    let mut ops: Vec<DecodedOp> = Vec::with_capacity(n + 1);
+    let mut pc_map = vec![u32::MAX; n + 1];
+    // (decoded index, original target pc) fixups for branches/calls.
+    let mut fixups: Vec<(usize, usize)> = Vec::new();
+    let mut pc = 0usize;
+    while pc < n {
+        pc_map[pc] = ops.len() as u32;
+        let span = match program[pc] {
+            I::SendImm { value, .. } if value == MSG_READ => {
+                match (program.get(pc + 1), program.get(pc + 2)) {
+                    (Some(&I::Send { src, .. }), Some(&I::Recv { dest, .. })) => {
+                        reg_ok(pc, src)?;
+                        reg_ok(pc, dest)?;
+                        ops.push(DecodedOp::EmuLoad { d: dest, a: src });
+                        3
+                    }
+                    _ => bail!(
+                        "pc {pc}: SEND READ not followed by the canonical \
+                         `SEND addr; RECV` sequence"
+                    ),
+                }
+            }
+            I::SendImm { value, .. } if value == MSG_WRITE => {
+                match (program.get(pc + 1), program.get(pc + 2), program.get(pc + 3)) {
+                    (
+                        Some(&I::Send { src: addr, .. }),
+                        Some(&I::Send { src: val, .. }),
+                        Some(&I::RecvAck { .. }),
+                    ) => {
+                        reg_ok(pc, addr)?;
+                        reg_ok(pc, val)?;
+                        ops.push(DecodedOp::EmuStore { s: val, a: addr });
+                        4
+                    }
+                    _ => bail!(
+                        "pc {pc}: SEND WRITE not followed by the canonical \
+                         `SEND addr; SEND val; RECVACK` sequence"
+                    ),
+                }
+            }
+            I::SendImm { value, .. } => bail!("pc {pc}: bad channel tag {value}"),
+            I::Send { .. } | I::Recv { .. } | I::RecvAck { .. } => {
+                bail!("pc {pc}: channel instruction outside a canonical §2.1 sequence")
+            }
+            I::Add { d, a, b } => {
+                reg_ok(pc, d)?;
+                reg_ok(pc, a)?;
+                reg_ok(pc, b)?;
+                ops.push(DecodedOp::Add { d, a, b });
+                1
+            }
+            I::Sub { d, a, b } => {
+                reg_ok(pc, d)?;
+                reg_ok(pc, a)?;
+                reg_ok(pc, b)?;
+                ops.push(DecodedOp::Sub { d, a, b });
+                1
+            }
+            I::Mul { d, a, b } => {
+                reg_ok(pc, d)?;
+                reg_ok(pc, a)?;
+                reg_ok(pc, b)?;
+                ops.push(DecodedOp::Mul { d, a, b });
+                1
+            }
+            I::And { d, a, b } => {
+                reg_ok(pc, d)?;
+                reg_ok(pc, a)?;
+                reg_ok(pc, b)?;
+                ops.push(DecodedOp::And { d, a, b });
+                1
+            }
+            I::Or { d, a, b } => {
+                reg_ok(pc, d)?;
+                reg_ok(pc, a)?;
+                reg_ok(pc, b)?;
+                ops.push(DecodedOp::Or { d, a, b });
+                1
+            }
+            I::Xor { d, a, b } => {
+                reg_ok(pc, d)?;
+                reg_ok(pc, a)?;
+                reg_ok(pc, b)?;
+                ops.push(DecodedOp::Xor { d, a, b });
+                1
+            }
+            I::Lt { d, a, b } => {
+                reg_ok(pc, d)?;
+                reg_ok(pc, a)?;
+                reg_ok(pc, b)?;
+                ops.push(DecodedOp::Lt { d, a, b });
+                1
+            }
+            I::Eq { d, a, b } => {
+                reg_ok(pc, d)?;
+                reg_ok(pc, a)?;
+                reg_ok(pc, b)?;
+                ops.push(DecodedOp::Eq { d, a, b });
+                1
+            }
+            I::AddI { d, a, imm } => {
+                reg_ok(pc, d)?;
+                reg_ok(pc, a)?;
+                ops.push(DecodedOp::AddI { d, a, imm });
+                1
+            }
+            I::LoadImm { d, imm } => {
+                reg_ok(pc, d)?;
+                ops.push(DecodedOp::LoadImm { d, imm });
+                1
+            }
+            I::Mov { d, s } => {
+                reg_ok(pc, d)?;
+                reg_ok(pc, s)?;
+                ops.push(DecodedOp::Mov { d, s });
+                1
+            }
+            I::Jump { offset } => {
+                fixups.push((ops.len(), resolve_target(pc, offset, n)?));
+                ops.push(DecodedOp::Jump { target: 0 });
+                1
+            }
+            I::BranchZ { c, offset } => {
+                reg_ok(pc, c)?;
+                fixups.push((ops.len(), resolve_target(pc, offset, n)?));
+                ops.push(DecodedOp::BranchZ { c, target: 0 });
+                1
+            }
+            I::BranchNZ { c, offset } => {
+                reg_ok(pc, c)?;
+                fixups.push((ops.len(), resolve_target(pc, offset, n)?));
+                ops.push(DecodedOp::BranchNZ { c, target: 0 });
+                1
+            }
+            I::Call { target } => {
+                // Targets past the end behave as falling off (legacy
+                // exits its loop and errors), i.e. the sentinel.
+                fixups.push((ops.len(), (target as usize).min(n)));
+                ops.push(DecodedOp::Call { target: 0 });
+                1
+            }
+            I::Ret => {
+                ops.push(DecodedOp::Ret);
+                1
+            }
+            I::LoadLocal { d, a, off } => {
+                reg_ok(pc, d)?;
+                reg_ok(pc, a)?;
+                ops.push(DecodedOp::LoadLocal { d, a, off });
+                1
+            }
+            I::StoreLocal { s, a, off } => {
+                reg_ok(pc, s)?;
+                reg_ok(pc, a)?;
+                ops.push(DecodedOp::StoreLocal { s, a, off });
+                1
+            }
+            I::LoadGlobal { d, a } => {
+                reg_ok(pc, d)?;
+                reg_ok(pc, a)?;
+                ops.push(DecodedOp::LoadGlobal { d, a });
+                1
+            }
+            I::StoreGlobal { s, a } => {
+                reg_ok(pc, s)?;
+                reg_ok(pc, a)?;
+                ops.push(DecodedOp::StoreGlobal { s, a });
+                1
+            }
+            I::Halt => {
+                ops.push(DecodedOp::Halt);
+                1
+            }
+            I::Nop => {
+                ops.push(DecodedOp::Nop);
+                1
+            }
+        };
+        pc += span;
+    }
+    pc_map[n] = ops.len() as u32; // the sentinel
+    ops.push(DecodedOp::FellOff);
+
+    // Pass 2: resolve branch/call targets to decoded indices.
+    for (idx, orig) in fixups {
+        let mapped = pc_map[orig];
+        ensure!(
+            mapped != u32::MAX,
+            "branch/call targets the interior of a fused channel sequence (pc {orig})"
+        );
+        match &mut ops[idx] {
+            DecodedOp::Jump { target }
+            | DecodedOp::BranchZ { target, .. }
+            | DecodedOp::BranchNZ { target, .. }
+            | DecodedOp::Call { target } => *target = mapped,
+            other => unreachable!("fixup on non-branch op {other:?}"),
+        }
+    }
+
+    Ok(DecodedProgram { ops, source_len: n })
+}
+
+/// Original-pc branch target; negative targets are rejected (the legacy
+/// interpreter errors when such a branch is *taken*; predecoding
+/// rejects the program up front), targets past the end resolve to the
+/// sentinel.
+fn resolve_target(pc: usize, offset: i32, n: usize) -> Result<usize> {
+    let target = pc as i64 + offset as i64;
+    ensure!(target >= 0, "pc {pc}: branch to negative pc");
+    Ok((target as usize).min(n))
+}
+
+/// How a run left the dispatch loop.
+enum Exit {
+    Halted,
+    StepLimit,
+    RetEmptyStack,
+    LocalOob(i64),
+    FellOff,
+}
+
+/// The direct-threaded machine: registers, local memory, call stack and
+/// a *monomorphised* global memory system (no virtual dispatch on the
+/// access path).
+pub struct FastMachine<'m, M: MemorySystem> {
+    regs: [i64; 16],
+    local: Vec<i64>,
+    call_stack: Vec<u32>,
+    mem: &'m mut M,
+    /// Address-space size in words.
+    space: u64,
+    /// `space - 1` when `space` is a power of two (the common direct
+    /// space); replaces the per-access `%`.
+    addr_mask: u64,
+    mask_exact: bool,
+    /// Safety limit on executed instructions.
+    pub max_steps: u64,
+}
+
+impl<'m, M: MemorySystem> FastMachine<'m, M> {
+    /// New machine with `local_words` of tile-local memory.
+    pub fn new(mem: &'m mut M, local_words: usize) -> Self {
+        let space = mem.space_words().max(1);
+        let mask_exact = space.is_power_of_two();
+        Self {
+            regs: [0; 16],
+            local: vec![0; local_words],
+            call_stack: Vec::new(),
+            mem,
+            space,
+            addr_mask: if mask_exact { space - 1 } else { 0 },
+            mask_exact,
+            max_steps: 200_000_000,
+        }
+    }
+
+    /// Read a register (for assertions in tests/examples).
+    pub fn reg(&self, i: u8) -> i64 {
+        self.regs[i as usize]
+    }
+
+    /// Set a register before running.
+    pub fn set_reg(&mut self, i: u8, v: i64) {
+        self.regs[i as usize] = v;
+    }
+
+    /// The full register file (for exact legacy/decoded comparisons).
+    pub fn regs(&self) -> &[i64; 16] {
+        &self.regs
+    }
+
+    #[inline(always)]
+    fn global_addr(&self, v: i64) -> u64 {
+        let u = v as u64;
+        if self.mask_exact {
+            u & self.addr_mask
+        } else {
+            u % self.space
+        }
+    }
+
+    #[inline(always)]
+    fn r(&self, i: u8) -> i64 {
+        // Predecoding proved i < 16, so the mask is an identity that
+        // lets the compiler drop the bounds check.
+        self.regs[(i & 15) as usize]
+    }
+
+    #[inline(always)]
+    fn set(&mut self, i: u8, v: i64) {
+        self.regs[(i & 15) as usize] = v;
+    }
+
+    /// Run a predecoded program to `Halt` (or error); returns the
+    /// statistics. The steady state carries no `Result`: violations
+    /// trap out of the dispatch loop and are converted at this
+    /// boundary, with the legacy interpreter's error messages.
+    pub fn run(&mut self, prog: &DecodedProgram) -> Result<RunStats> {
+        use DecodedOp::*;
+        let ops = prog.ops();
+        let max_steps = self.max_steps;
+        let mut insts: u64 = 0;
+        let mut cycles: u64 = 0;
+        let mut non_mem: u64 = 0;
+        let mut local_mem: u64 = 0;
+        let mut global_mem: u64 = 0;
+        let mut accesses: u64 = 0;
+        let mut pc: usize = 0;
+
+        let exit = loop {
+            if insts >= max_steps {
+                break Exit::StepLimit;
+            }
+            match ops[pc] {
+                Add { d, a, b } => {
+                    self.set(d, self.r(a).wrapping_add(self.r(b)));
+                    insts += 1;
+                    non_mem += 1;
+                    cycles += 1;
+                    pc += 1;
+                }
+                Sub { d, a, b } => {
+                    self.set(d, self.r(a).wrapping_sub(self.r(b)));
+                    insts += 1;
+                    non_mem += 1;
+                    cycles += 1;
+                    pc += 1;
+                }
+                Mul { d, a, b } => {
+                    self.set(d, self.r(a).wrapping_mul(self.r(b)));
+                    insts += 1;
+                    non_mem += 1;
+                    cycles += 1;
+                    pc += 1;
+                }
+                And { d, a, b } => {
+                    self.set(d, self.r(a) & self.r(b));
+                    insts += 1;
+                    non_mem += 1;
+                    cycles += 1;
+                    pc += 1;
+                }
+                Or { d, a, b } => {
+                    self.set(d, self.r(a) | self.r(b));
+                    insts += 1;
+                    non_mem += 1;
+                    cycles += 1;
+                    pc += 1;
+                }
+                Xor { d, a, b } => {
+                    self.set(d, self.r(a) ^ self.r(b));
+                    insts += 1;
+                    non_mem += 1;
+                    cycles += 1;
+                    pc += 1;
+                }
+                Lt { d, a, b } => {
+                    self.set(d, (self.r(a) < self.r(b)) as i64);
+                    insts += 1;
+                    non_mem += 1;
+                    cycles += 1;
+                    pc += 1;
+                }
+                Eq { d, a, b } => {
+                    self.set(d, (self.r(a) == self.r(b)) as i64);
+                    insts += 1;
+                    non_mem += 1;
+                    cycles += 1;
+                    pc += 1;
+                }
+                AddI { d, a, imm } => {
+                    self.set(d, self.r(a).wrapping_add(imm as i64));
+                    insts += 1;
+                    non_mem += 1;
+                    cycles += 1;
+                    pc += 1;
+                }
+                LoadImm { d, imm } => {
+                    self.set(d, imm as i64);
+                    insts += 1;
+                    non_mem += 1;
+                    cycles += 1;
+                    pc += 1;
+                }
+                Mov { d, s } => {
+                    self.set(d, self.r(s));
+                    insts += 1;
+                    non_mem += 1;
+                    cycles += 1;
+                    pc += 1;
+                }
+                Jump { target } => {
+                    insts += 1;
+                    non_mem += 1;
+                    cycles += 1;
+                    pc = target as usize;
+                }
+                BranchZ { c, target } => {
+                    insts += 1;
+                    non_mem += 1;
+                    cycles += 1;
+                    pc = if self.r(c) == 0 { target as usize } else { pc + 1 };
+                }
+                BranchNZ { c, target } => {
+                    insts += 1;
+                    non_mem += 1;
+                    cycles += 1;
+                    pc = if self.r(c) != 0 { target as usize } else { pc + 1 };
+                }
+                Call { target } => {
+                    self.call_stack.push(pc as u32 + 1);
+                    insts += 1;
+                    non_mem += 1;
+                    cycles += 1;
+                    pc = target as usize;
+                }
+                Ret => {
+                    let Some(ret) = self.call_stack.pop() else {
+                        break Exit::RetEmptyStack;
+                    };
+                    insts += 1;
+                    non_mem += 1;
+                    cycles += 1;
+                    pc = ret as usize;
+                }
+                LoadLocal { d, a, off } => {
+                    let idx = self.r(a).wrapping_add(off as i64);
+                    if idx < 0 || idx as usize >= self.local.len() {
+                        break Exit::LocalOob(idx);
+                    }
+                    self.set(d, self.local[idx as usize]);
+                    insts += 1;
+                    local_mem += 1;
+                    cycles += 1;
+                    pc += 1;
+                }
+                StoreLocal { s, a, off } => {
+                    let idx = self.r(a).wrapping_add(off as i64);
+                    if idx < 0 || idx as usize >= self.local.len() {
+                        break Exit::LocalOob(idx);
+                    }
+                    self.local[idx as usize] = self.r(s);
+                    insts += 1;
+                    local_mem += 1;
+                    cycles += 1;
+                    pc += 1;
+                }
+                LoadGlobal { d, a } => {
+                    let addr = self.global_addr(self.r(a));
+                    let (v, lat) = self.mem.read(addr);
+                    self.set(d, v);
+                    insts += 1;
+                    global_mem += 1;
+                    accesses += 1;
+                    cycles += 1 + lat;
+                    pc += 1;
+                }
+                StoreGlobal { s, a } => {
+                    let addr = self.global_addr(self.r(a));
+                    let lat = self.mem.write(addr, self.r(s));
+                    insts += 1;
+                    global_mem += 1;
+                    accesses += 1;
+                    cycles += 1 + lat;
+                    pc += 1;
+                }
+                EmuLoad { d, a } => {
+                    // SEND tag; SEND addr; RECV — 3 issue cycles, then
+                    // the RECV blocks for the round trip.
+                    let addr = self.global_addr(self.r(a));
+                    let (v, lat) = self.mem.read(addr);
+                    self.set(d, v);
+                    insts += 3;
+                    global_mem += 3;
+                    accesses += 1;
+                    cycles += 3 + lat;
+                    pc += 1;
+                }
+                EmuStore { s, a } => {
+                    // SEND tag; SEND addr; SEND val; RECVACK — 4 issue
+                    // cycles, the data SEND completing the write pays
+                    // the round trip.
+                    let addr = self.global_addr(self.r(a));
+                    let lat = self.mem.write(addr, self.r(s));
+                    insts += 4;
+                    global_mem += 4;
+                    accesses += 1;
+                    cycles += 4 + lat;
+                    pc += 1;
+                }
+                Halt => {
+                    insts += 1;
+                    non_mem += 1;
+                    cycles += 1;
+                    break Exit::Halted;
+                }
+                Nop => {
+                    insts += 1;
+                    non_mem += 1;
+                    cycles += 1;
+                    pc += 1;
+                }
+                FellOff => break Exit::FellOff,
+            }
+        };
+
+        let stats = RunStats {
+            instructions: insts,
+            cycles,
+            non_memory: non_mem,
+            local_memory: local_mem,
+            global_memory: global_mem,
+            global_accesses: accesses,
+        };
+        match exit {
+            Exit::Halted => Ok(stats),
+            Exit::StepLimit => bail!("step limit exceeded ({})", self.max_steps),
+            Exit::RetEmptyStack => bail!("ret with empty stack"),
+            Exit::LocalOob(idx) => {
+                bail!("local access out of bounds ({idx} / {})", self.local.len())
+            }
+            Exit::FellOff => bail!("fell off the end of the program (missing Halt)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::emulation::controller::{expand_load, expand_store};
+    use crate::emulation::{EmulationSetup, SequentialMachine, TopologyKind};
+    use crate::isa::interp::{DirectMemory, EmulatedChannelMemory, Machine};
+    use crate::workload::{InstructionMix, SyntheticProgram};
+    use Inst::*;
+
+    fn direct(space: u64) -> DirectMemory {
+        DirectMemory::new(SequentialMachine::paper_figures(false), space)
+    }
+
+    /// Run a program on both interpreters against fresh direct
+    /// memories; return both outcomes.
+    #[allow(clippy::type_complexity)]
+    fn run_both_direct(
+        prog: &[Inst],
+        space: u64,
+        local: usize,
+    ) -> (Result<RunStats>, [i64; 16], Result<RunStats>, [i64; 16]) {
+        let mut lm = direct(space);
+        let mut legacy = Machine::new(&mut lm, local);
+        let lres = legacy.run(prog);
+        let lregs = std::array::from_fn(|i| legacy.reg(i as u8));
+
+        let decoded = predecode(prog).expect("program predecodes");
+        let mut fm = direct(space);
+        let mut fast = FastMachine::new(&mut fm, local);
+        let fres = fast.run(&decoded);
+        let fregs = *fast.regs();
+        (lres, lregs, fres, fregs)
+    }
+
+    #[test]
+    fn fuses_canonical_channel_sequences() {
+        let mut prog = vec![LoadImm { d: 1, imm: 100 }, LoadImm { d: 2, imm: 42 }];
+        prog.extend(expand_store(2, 1));
+        prog.extend(expand_load(3, 1));
+        prog.push(Halt);
+        let d = predecode(&prog).unwrap();
+        // 2 + 1 (fused store) + 1 (fused load) + 1 = 5 ops + sentinel
+        assert_eq!(d.len(), 5);
+        assert_eq!(d.source_len(), prog.len());
+        assert_eq!(d.ops()[2], DecodedOp::EmuStore { s: 2, a: 1 });
+        assert_eq!(d.ops()[3], DecodedOp::EmuLoad { d: 3, a: 1 });
+        assert_eq!(*d.ops().last().unwrap(), DecodedOp::FellOff);
+    }
+
+    #[test]
+    fn rejects_invalid_programs() {
+        // Bare channel instruction.
+        assert!(predecode(&[Recv { chan: 0, dest: 0 }, Halt]).is_err());
+        // Bad tag.
+        assert!(predecode(&[SendImm { chan: 0, value: 9 }, Halt]).is_err());
+        // Truncated sequence.
+        assert!(predecode(&[SendImm { chan: 0, value: 0 }, Send { chan: 0, src: 1 }]).is_err());
+        // Out-of-range register.
+        assert!(predecode(&[Add { d: 16, a: 0, b: 0 }, Halt]).is_err());
+        // Negative branch target.
+        assert!(predecode(&[Jump { offset: -1 }, Halt]).is_err());
+        // Branch into the middle of a fused sequence.
+        let mut prog = vec![LoadImm { d: 1, imm: 0 }];
+        prog.extend(expand_load(2, 1));
+        prog.push(BranchZ { c: 0, offset: -2 }); // targets the RECV
+        prog.push(Halt);
+        assert!(predecode(&prog).is_err());
+    }
+
+    #[test]
+    fn branch_past_end_hits_the_sentinel() {
+        let (lres, _, fres, _) = run_both_direct(&[Jump { offset: 5 }], 64, 4);
+        assert!(lres.is_err() && fres.is_err());
+        assert_eq!(
+            lres.unwrap_err().to_string(),
+            fres.unwrap_err().to_string()
+        );
+        // Empty program: same fell-off error on both.
+        let (l2, _, f2, _) = run_both_direct(&[], 64, 4);
+        assert!(l2.is_err() && f2.is_err());
+    }
+
+    #[test]
+    fn traps_match_legacy_errors() {
+        // Ret with empty stack.
+        let (l, _, f, _) = run_both_direct(&[Ret], 64, 4);
+        assert_eq!(l.unwrap_err().to_string(), f.unwrap_err().to_string());
+        // Local out of bounds.
+        let (l, _, f, _) = run_both_direct(&[LoadLocal { d: 0, a: 0, off: 100 }, Halt], 64, 4);
+        assert_eq!(l.unwrap_err().to_string(), f.unwrap_err().to_string());
+    }
+
+    #[test]
+    fn step_limit_traps() {
+        let prog = [Jump { offset: 0 }];
+        let decoded = predecode(&prog).unwrap();
+        let mut mem = direct(16);
+        let mut m = FastMachine::new(&mut mem, 4);
+        m.max_steps = 1000;
+        assert!(m.run(&decoded).is_err());
+    }
+
+    #[test]
+    fn control_flow_matches_legacy_exactly() {
+        // Loop, call/ret, nested branches — hand-written control flow.
+        let programs: Vec<Vec<Inst>> = vec![
+            // sum 1..=10
+            vec![
+                LoadImm { d: 0, imm: 0 },
+                LoadImm { d: 1, imm: 10 },
+                Add { d: 0, a: 0, b: 1 },
+                AddI { d: 1, a: 1, imm: -1 },
+                BranchNZ { c: 1, offset: -2 },
+                Halt,
+            ],
+            // call/ret with locals
+            vec![
+                LoadImm { d: 1, imm: 7 },
+                Call { target: 4 },
+                Mov { d: 2, s: 0 },
+                Halt,
+                StoreLocal { s: 1, a: 4, off: 3 },
+                LoadLocal { d: 0, a: 4, off: 3 },
+                AddI { d: 0, a: 0, imm: 1 },
+                Ret,
+            ],
+            // globals on the direct backend
+            vec![
+                LoadImm { d: 1, imm: 9 },
+                LoadImm { d: 2, imm: -5 },
+                StoreGlobal { s: 2, a: 1 },
+                LoadGlobal { d: 3, a: 1 },
+                Eq { d: 4, a: 2, b: 3 },
+                Halt,
+            ],
+        ];
+        for prog in &programs {
+            let (lres, lregs, fres, fregs) = run_both_direct(prog, 1024, 16);
+            let (ls, fs) = (lres.unwrap(), fres.unwrap());
+            assert_eq!(ls, fs, "stats diverge on {prog:?}");
+            assert_eq!(lregs, fregs, "registers diverge on {prog:?}");
+        }
+    }
+
+    #[test]
+    fn emulated_channel_matches_legacy_exactly() {
+        let setup = EmulationSetup::default_tech(TopologyKind::Clos, 1024, 128, 255).unwrap();
+        let mut prog = vec![LoadImm { d: 1, imm: 100 }, LoadImm { d: 2, imm: 42 }];
+        prog.extend(expand_store(2, 1));
+        prog.extend(expand_load(3, 1));
+        prog.push(Halt);
+
+        let mut lm = EmulatedChannelMemory::new(setup.clone());
+        let mut legacy = Machine::new(&mut lm, 16);
+        let ls = legacy.run(&prog).unwrap();
+
+        let decoded = predecode(&prog).unwrap();
+        let mut fm = EmulatedChannelMemory::new(setup);
+        let mut fast = FastMachine::new(&mut fm, 16);
+        let fs = fast.run(&decoded).unwrap();
+
+        assert_eq!(ls, fs);
+        assert_eq!(legacy.reg(3), fast.reg(3));
+        assert_eq!(fast.reg(3), 42);
+        // The fused ops preserve the legacy counting: 7 channel
+        // instructions, 2 accesses.
+        assert_eq!(fs.global_memory, 7);
+        assert_eq!(fs.global_accesses, 2);
+    }
+
+    #[test]
+    fn decoded_matches_legacy_on_random_synthetic_programs() {
+        // Satellite property: RunStats bit-identical on random
+        // synthetic programs, both backends.
+        use crate::util::prop::{forall, Config};
+        let setup = EmulationSetup::default_tech(TopologyKind::Clos, 1024, 128, 255).unwrap();
+        let space = setup.map.space_words();
+        forall(
+            Config { cases: 40, base_seed: 0xDEC0 },
+            |r| {
+                let local = 0.05 + r.f64() * 0.3;
+                let global = 0.05 + r.f64() * 0.25;
+                (InstructionMix::new(local, global), 100 + r.below(1500) as usize, r.next_u64())
+            },
+            |&(mix, n, seed)| {
+                let p = SyntheticProgram::generate(mix, n, space, seed);
+
+                // Direct backend.
+                let mut lm = direct(space);
+                let mut legacy = Machine::new(&mut lm, 32);
+                let ls = legacy.run(&p.direct).map_err(|e| e.to_string())?;
+                let decoded = predecode(&p.direct).map_err(|e| e.to_string())?;
+                let mut fm = direct(space);
+                let mut fast = FastMachine::new(&mut fm, 32);
+                let fs = fast.run(&decoded).map_err(|e| e.to_string())?;
+                if ls != fs {
+                    return Err(format!("direct stats diverge: {ls:?} vs {fs:?}"));
+                }
+
+                // Emulated backend.
+                let mut lem = EmulatedChannelMemory::new(setup.clone());
+                let mut elegacy = Machine::new(&mut lem, 32);
+                let els = elegacy.run(&p.emulated).map_err(|e| e.to_string())?;
+                let edecoded = predecode(&p.emulated).map_err(|e| e.to_string())?;
+                let mut fem = EmulatedChannelMemory::new(setup.clone());
+                let mut efast = FastMachine::new(&mut fem, 32);
+                let efs = efast.run(&edecoded).map_err(|e| e.to_string())?;
+                if els != efs {
+                    return Err(format!("emulated stats diverge: {els:?} vs {efs:?}"));
+                }
+                for i in 0..16u8 {
+                    if elegacy.reg(i) != efast.reg(i) {
+                        return Err(format!("r{i} diverges"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn address_mask_matches_modulo() {
+        // Power-of-two space uses the mask; non-power-of-two space
+        // falls back to `%`. Both must agree with the legacy address
+        // computation (same memory values, same stats).
+        for space in [1u64 << 16, 255 << 10] {
+            let prog = vec![
+                LoadImm { d: 1, imm: (space as i32) + 37 }, // wraps
+                LoadImm { d: 2, imm: 11 },
+                StoreGlobal { s: 2, a: 1 },
+                LoadImm { d: 3, imm: 37 },
+                LoadGlobal { d: 4, a: 3 },
+                Halt,
+            ];
+            let (lres, lregs, fres, fregs) = run_both_direct(&prog, space, 8);
+            assert_eq!(lres.unwrap(), fres.unwrap(), "space {space}");
+            assert_eq!(lregs, fregs);
+            assert_eq!(fregs[4], 11, "wrapped store must be visible at the masked address");
+        }
+    }
+}

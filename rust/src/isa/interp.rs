@@ -14,9 +14,17 @@
 //! Both memories back their words with the shared
 //! [`PagedStore`](crate::util::paged::PagedStore) (pages allocated on
 //! first write, unwritten words read zero), and the emulated memory's
-//! latency charge goes through [`EmulationSetup::access_cycles`]'s
-//! rank LUT — the interpreter's global-access path performs no hashing
-//! and no per-access allocation.
+//! latency charge comes from a whole-cycle copy of
+//! [`EmulationSetup::access_cycles`]'s rank LUT — the interpreter's
+//! global-access path performs no hashing and no per-access allocation.
+//!
+//! Cycle accounting is **integer** end to end: memory systems charge
+//! whole cycles (`u64`, rounded once at construction via
+//! [`to_cycles`]), so [`RunStats::cycles`] accumulates without the f64
+//! drift the seed suffered on long runs, and the legacy loop here
+//! agrees *exactly* with the pre-decoded fast path
+//! ([`crate::isa::decode`]). f64 appears only at reporting boundaries
+//! ([`RunStats::cycles_f64`], [`RunStats::cpi`]).
 
 use anyhow::{bail, Result};
 
@@ -25,13 +33,22 @@ use crate::emulation::controller::{MSG_READ, MSG_WRITE};
 use crate::emulation::{EmulationSetup, SequentialMachine};
 use crate::util::paged::PagedStore;
 
+/// Charge of a latency in whole cycles (round to nearest). The paper's
+/// link/switch parameters are integral, so this is exact for default
+/// tech; it is applied once at memory-system construction, never per
+/// access.
+#[inline]
+pub fn to_cycles(latency: f64) -> u64 {
+    latency.round() as u64
+}
+
 /// A global memory system with a cost model.
 pub trait MemorySystem {
-    /// Read a word; returns (value, latency in cycles charged to the
+    /// Read a word; returns (value, whole-cycle latency charged to the
     /// completing instruction).
-    fn read(&mut self, addr: u64) -> (i64, f64);
-    /// Write a word; returns the latency charged.
-    fn write(&mut self, addr: u64, value: i64) -> f64;
+    fn read(&mut self, addr: u64) -> (i64, u64);
+    /// Write a word; returns the whole-cycle latency charged.
+    fn write(&mut self, addr: u64, value: i64) -> u64;
     /// Size of the address space in words.
     fn space_words(&self) -> u64;
 }
@@ -41,23 +58,31 @@ pub struct DirectMemory {
     machine: SequentialMachine,
     store: PagedStore,
     space: u64,
+    /// Whole-cycle DRAM charge (rounded once at construction).
+    cycles: u64,
 }
 
 impl DirectMemory {
     /// DRAM memory with `space` words and the given baseline machine.
     pub fn new(machine: SequentialMachine, space: u64) -> Self {
-        Self { machine, store: PagedStore::with_capacity_words(space), space }
+        let cycles = to_cycles(machine.global_access_cycles());
+        Self { machine, store: PagedStore::with_capacity_words(space), space, cycles }
+    }
+
+    /// The baseline machine this memory charges.
+    pub fn machine(&self) -> &SequentialMachine {
+        &self.machine
     }
 }
 
 impl MemorySystem for DirectMemory {
-    fn read(&mut self, addr: u64) -> (i64, f64) {
-        (self.store.read(addr), self.machine.global_access_cycles())
+    fn read(&mut self, addr: u64) -> (i64, u64) {
+        (self.store.read(addr), self.cycles)
     }
 
-    fn write(&mut self, addr: u64, value: i64) -> f64 {
+    fn write(&mut self, addr: u64, value: i64) -> u64 {
         self.store.write(addr, value);
-        self.machine.global_access_cycles()
+        self.cycles
     }
 
     fn space_words(&self) -> u64 {
@@ -69,13 +94,19 @@ impl MemorySystem for DirectMemory {
 pub struct EmulatedChannelMemory {
     setup: EmulationSetup,
     store: PagedStore,
+    /// Whole-cycle copy of the rank-latency LUT (rounded once at
+    /// construction via [`EmulationSetup::rank_cycles`]).
+    rank_cycles: Vec<u64>,
+    shift: u32,
 }
 
 impl EmulatedChannelMemory {
     /// Channel memory over an emulation design point.
     pub fn new(setup: EmulationSetup) -> Self {
         let store = PagedStore::with_capacity_words(setup.map.space_words());
-        Self { setup, store }
+        let rank_cycles = setup.rank_cycles();
+        let shift = setup.map.log2_words_per_tile;
+        Self { setup, store, rank_cycles, shift }
     }
 
     /// The underlying design point.
@@ -85,16 +116,16 @@ impl EmulatedChannelMemory {
 }
 
 impl MemorySystem for EmulatedChannelMemory {
-    fn read(&mut self, addr: u64) -> (i64, f64) {
+    fn read(&mut self, addr: u64) -> (i64, u64) {
         // The round trip includes request, SRAM access and response;
         // the two SEND instructions that preceded the RECV were charged
         // their own single cycles. The latency is one rank-LUT load.
-        (self.store.read(addr), self.setup.access_cycles(addr))
+        (self.store.read(addr), self.rank_cycles[(addr >> self.shift) as usize])
     }
 
-    fn write(&mut self, addr: u64, value: i64) -> f64 {
+    fn write(&mut self, addr: u64, value: i64) -> u64 {
         self.store.write(addr, value);
-        self.setup.access_cycles(addr)
+        self.rank_cycles[(addr >> self.shift) as usize]
     }
 
     fn space_words(&self) -> u64 {
@@ -103,12 +134,14 @@ impl MemorySystem for EmulatedChannelMemory {
 }
 
 /// Execution statistics (the quantities Figs 8/10/11 are built from).
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct RunStats {
     /// Instructions executed.
     pub instructions: u64,
-    /// Total cycles (1/instruction + memory latencies).
-    pub cycles: f64,
+    /// Total cycles (1/instruction + whole-cycle memory latencies).
+    /// Integer so long runs accumulate without f64 drift and the
+    /// legacy/decoded interpreters can be compared for exact equality.
+    pub cycles: u64,
     /// Non-memory instructions executed.
     pub non_memory: u64,
     /// Local-memory instructions executed.
@@ -127,9 +160,14 @@ impl RunStats {
         (self.non_memory as f64 / n, self.local_memory as f64 / n, self.global_memory as f64 / n)
     }
 
+    /// Total cycles at the f64 reporting boundary.
+    pub fn cycles_f64(&self) -> f64 {
+        self.cycles as f64
+    }
+
     /// Cycles per instruction.
     pub fn cpi(&self) -> f64 {
-        self.cycles / self.instructions.max(1) as f64
+        self.cycles as f64 / self.instructions.max(1) as f64
     }
 }
 
@@ -200,7 +238,7 @@ impl<'m> Machine<'m> {
                 InstClass::LocalMemory => stats.local_memory += 1,
                 InstClass::GlobalMemory => stats.global_memory += 1,
             }
-            let mut cost = 1.0; // every instruction issues in a cycle
+            let mut cost: u64 = 1; // every instruction issues in a cycle
             let mut next = pc + 1;
             match inst {
                 Add { d, a, b } => self.regs[d as usize] = self.regs[a as usize].wrapping_add(self.regs[b as usize]),
@@ -363,7 +401,7 @@ mod tests {
         let stats = m.run(&prog).unwrap();
         assert_eq!(m.reg(0), 55);
         assert_eq!(stats.instructions, 2 + 3 * 10 + 1);
-        assert_eq!(stats.cycles, stats.instructions as f64); // no memory
+        assert_eq!(stats.cycles, stats.instructions); // no memory
     }
 
     #[test]
@@ -381,13 +419,13 @@ mod tests {
         assert_eq!(m.reg(3), 7);
         assert_eq!(stats.global_accesses, 2);
         // 5 issue cycles + 2 x 35 ns
-        assert!((stats.cycles - (5.0 + 70.0)).abs() < 1e-9);
+        assert_eq!(stats.cycles, 5 + 70);
     }
 
     #[test]
     fn emulated_channel_roundtrip() {
         let setup = EmulationSetup::default_tech(TopologyKind::Clos, 1024, 128, 255).unwrap();
-        let rt = setup.access_cycles(100);
+        let rt = to_cycles(setup.access_cycles(100));
         let mut mem = EmulatedChannelMemory::new(setup);
         let mut prog = vec![LoadImm { d: 1, imm: 100 }, LoadImm { d: 2, imm: 42 }];
         prog.extend(expand_store(2, 1));
@@ -398,8 +436,8 @@ mod tests {
         assert_eq!(m.reg(3), 42);
         assert_eq!(stats.global_accesses, 2);
         // 2 + 4 + 3 + 1 issue cycles + 2 round trips
-        let expect = 10.0 + 2.0 * rt;
-        assert!((stats.cycles - expect).abs() < 1e-9, "{} vs {expect}", stats.cycles);
+        let expect = 10 + 2 * rt;
+        assert_eq!(stats.cycles, expect, "{} vs {expect}", stats.cycles);
         // channel instructions counted as global-memory work
         assert_eq!(stats.global_memory, 7);
     }

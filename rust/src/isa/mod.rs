@@ -5,14 +5,21 @@
 //!   direct global memory, channel send/receive).
 //! * [`encode`] — fixed 32-bit binary encoding (for the §7.3 binary
 //!   size measurements).
-//! * [`interp`] — a costed interpreter: 1 cycle per instruction, plus
-//!   the memory system's latency for global accesses; the channel
-//!   protocol of §2.1 is executed against the emulated memory.
+//! * [`interp`] — the legacy costed interpreter: 1 cycle per
+//!   instruction, plus the memory system's whole-cycle latency for
+//!   global accesses; the channel protocol of §2.1 is executed against
+//!   the emulated memory. Kept as the bit-identity oracle.
+//! * [`decode`] — the decode-once/execute-fast split: [`predecode`]
+//!   pre-validates a program into a dense [`DecodedProgram`] (absolute
+//!   branch targets, checked registers, fused §2.1 channel macro-ops)
+//!   and [`FastMachine`] runs it with no `Result` in the steady state.
 
+pub mod decode;
 pub mod encode;
 pub mod inst;
 pub mod interp;
 
+pub use decode::{predecode, DecodedProgram, FastMachine};
 pub use encode::{decode, encode, program_bytes};
 pub use inst::Inst;
 pub use interp::{DirectMemory, EmulatedChannelMemory, Machine, MemorySystem, RunStats};

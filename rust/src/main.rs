@@ -19,7 +19,8 @@ use memclos::coordinator::{run_sweep, SweepPoint};
 use memclos::dram::{measure_random_latency, DramConfig};
 use memclos::emulation::{SequentialMachine, TopologyKind};
 use memclos::figures::{self, FigOpts};
-use memclos::isa::interp::{DirectMemory, EmulatedChannelMemory, Machine};
+use memclos::isa::decode::{predecode, FastMachine};
+use memclos::isa::interp::{DirectMemory, EmulatedChannelMemory, Machine, RunStats};
 use memclos::sim::network::run_contention;
 use memclos::topology::{ClosSpec, MeshSpec};
 use memclos::vlsi::{ClosFloorplan, MeshFloorplan};
@@ -38,10 +39,14 @@ COMMANDS
                                 emulated-memory latency for one point,
                                 evaluated on the selected backend
   run <program> [--topo ...]    compile+run a corpus program on both machines
+                                (pre-decoded fast loop; --legacy for the
+                                enum-match oracle)
   contention [--clients N]      DES contention experiment (c_cont)
   selfcheck                     prove XLA artifact == native model
   sweep --tiles N --mem KB      latency sweep over emulation sizes
   bench-hotpath [--out PATH]    measure the access hot path, write BENCH_hotpath.json
+  bench-interp [--out PATH]     measure decoded-vs-legacy interpretation
+                                over the cc corpus, write BENCH_interp.json
 
 BACKENDS (--mode, default auto)
   auto     XLA when artifacts/ holds the lowered kernel, else native MC
@@ -269,30 +274,47 @@ fn run(raw: Vec<String>) -> Result<()> {
 
             let direct = compile(prog.source, Backend::Direct)?;
             let emulated = compile(prog.source, Backend::Emulated)?;
+            let legacy = args.has("legacy");
 
-            let mut dmem = DirectMemory::new(SequentialMachine::with_measured_dram(1), 1 << 24);
-            let mut dm = Machine::new(&mut dmem, 1 << 16);
-            let dstats = dm.run(&direct.code)?;
-            let dres = dm.reg(0);
+            let seq = SequentialMachine::with_measured_dram(1);
+            let mut dmem = DirectMemory::new(seq, 1 << 24);
+            let (dstats, dres): (RunStats, i64) = if legacy {
+                let mut dm = Machine::new(&mut dmem, 1 << 16);
+                (dm.run(&direct.code)?, dm.reg(0))
+            } else {
+                let mut dm = FastMachine::new(&mut dmem, 1 << 16);
+                (dm.run(&predecode(&direct.code)?)?, dm.reg(0))
+            };
 
             let mut emem = EmulatedChannelMemory::new(dp.build()?);
-            let mut em = Machine::new(&mut emem, 1 << 16);
-            let estats = em.run(&emulated.code)?;
-            let eres = em.reg(0);
+            let (estats, eres): (RunStats, i64) = if legacy {
+                let mut em = Machine::new(&mut emem, 1 << 16);
+                (em.run(&emulated.code)?, em.reg(0))
+            } else {
+                let mut em = FastMachine::new(&mut emem, 1 << 16);
+                (em.run(&predecode(&emulated.code)?)?, em.reg(0))
+            };
 
-            println!("program `{}`:", prog.name);
             println!(
-                "  sequential: result {dres}, {} insts, {:.0} cycles (binary {} B)",
+                "program `{}` ({} interpreter):",
+                prog.name,
+                if legacy { "legacy enum-match" } else { "pre-decoded" }
+            );
+            println!(
+                "  sequential: result {dres}, {} insts, {} cycles (binary {} B)",
                 dstats.instructions, dstats.cycles, direct.binary_bytes()
             );
             println!(
-                "  emulated  : result {eres}, {} insts, {:.0} cycles (binary {} B, +{:.1}%)",
+                "  emulated  : result {eres}, {} insts, {} cycles (binary {} B, +{:.1}%)",
                 estats.instructions,
                 estats.cycles,
                 emulated.binary_bytes(),
                 100.0 * (emulated.binary_bytes() as f64 / direct.binary_bytes() as f64 - 1.0)
             );
-            println!("  slowdown  : {:.2}x", estats.cycles / dstats.cycles);
+            println!(
+                "  slowdown  : {:.2}x",
+                estats.cycles as f64 / dstats.cycles as f64
+            );
             if dres != eres {
                 bail!("machines disagree: {dres} vs {eres}");
             }
@@ -338,6 +360,20 @@ fn run(raw: Vec<String>) -> Result<()> {
             println!(
                 "throughput assertions OK (LUT {:.1}x routed)",
                 figures::hotpath::lut_speedup(&b)?
+            );
+        }
+        "bench-interp" => {
+            let w = figures::interp_bench::workload()?;
+            let b = figures::interp_bench::measure(&w);
+            print!("{}", figures::interp_bench::render(&b));
+            let out = args.flag("out").unwrap_or("BENCH_interp.json");
+            b.write_json(std::path::Path::new(out))
+                .with_context(|| format!("writing {out}"))?;
+            println!("wrote {out}");
+            figures::interp_bench::assert_interp(&b)?;
+            println!(
+                "interp assertions OK (decoded {:.1}x legacy on the emulated corpus)",
+                figures::interp_bench::speedup(&b)?
             );
         }
         "sweep" => {

@@ -1,14 +1,185 @@
-//! A deterministic discrete-event queue.
+//! Deterministic discrete-event queues.
 //!
-//! Events at equal times are delivered in insertion order (the sequence
-//! number breaks ties), so simulations are reproducible.
+//! Events at equal times are delivered in insertion order, so
+//! simulations are reproducible.
+//!
+//! [`EventQueue`] is a **bucketed delta-time queue** (a calendar
+//! queue): the DES schedules almost every event a small delta ahead of
+//! the current time (link hops, switch traversals, SRAM access), so a
+//! ring of [`RING_SLOTS`] per-tick buckets over `[cur, cur + RING)`
+//! serves pushes and pops in O(1) — no comparison-heap sift, no
+//! per-event ordering wrapper. Events beyond the window land in a
+//! `BTreeMap` overflow and migrate into the ring as the window slides.
+//! The original binary-heap implementation survives as [`HeapQueue`],
+//! the oracle the bucket queue is equivalence-tested against on random
+//! event streams.
+//!
+//! Invariants: ring slots hold exactly the pending events with time in
+//! `[cur, cur + RING)` (slot = `time % RING`, unique per window), the
+//! overflow map holds exactly those at `>= cur + RING`, and `cur` never
+//! exceeds the earliest pending event's time. Pushing *earlier* than
+//! `cur` (legal on the heap, unused by the DES) rewinds the window —
+//! correct but O(ring) — so the equivalence holds on arbitrary streams.
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 
-/// A time-ordered queue of events of type `E`.
+/// Near-window width in time units (covers every per-hop delta the DES
+/// schedules; power of two so the slot index is a mask).
+pub const RING_SLOTS: usize = 1 << 12;
+
+const RING: u64 = RING_SLOTS as u64;
+const MASK: u64 = RING - 1;
+
+/// A time-ordered queue of events of type `E` (bucketed delta-time
+/// implementation).
 #[derive(Debug)]
 pub struct EventQueue<E> {
+    /// Per-tick buckets for times in `[cur, cur + RING)`; slot
+    /// `t & MASK` holds the events at time `t`, in insertion order.
+    ring: Vec<VecDeque<(u64, E)>>,
+    /// Overflow for times `>= cur + RING`, FIFO per time.
+    far: BTreeMap<u64, VecDeque<E>>,
+    /// Lower bound of pending event times (the window start).
+    cur: u64,
+    near_len: usize,
+    far_len: usize,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    /// Empty queue.
+    pub fn new() -> Self {
+        Self {
+            ring: (0..RING_SLOTS).map(|_| VecDeque::new()).collect(),
+            far: BTreeMap::new(),
+            cur: 0,
+            near_len: 0,
+            far_len: 0,
+        }
+    }
+
+    /// Schedule `event` at absolute time `at`.
+    pub fn push(&mut self, at: u64, event: E) {
+        if self.near_len == 0 && self.far_len == 0 {
+            self.cur = at;
+        } else if at < self.cur {
+            self.rewind(at);
+        }
+        if at - self.cur < RING {
+            self.ring[(at & MASK) as usize].push_back((at, event));
+            self.near_len += 1;
+        } else {
+            self.far.entry(at).or_default().push_back(event);
+            self.far_len += 1;
+        }
+    }
+
+    /// Pop the earliest event; returns (time, event). FIFO at equal
+    /// times.
+    pub fn pop(&mut self) -> Option<(u64, E)> {
+        if self.near_len == 0 && self.far_len == 0 {
+            return None;
+        }
+        loop {
+            if self.near_len == 0 {
+                // Jump the window straight to the earliest far time.
+                let (&t, _) = self.far.first_key_value().expect("far holds the events");
+                self.cur = t;
+                self.migrate();
+                continue;
+            }
+            let slot = &mut self.ring[(self.cur & MASK) as usize];
+            if let Some(&(t, _)) = slot.front() {
+                debug_assert_eq!(t, self.cur, "slot holds a time outside the window");
+                let (t, e) = slot.pop_front().expect("front just checked");
+                self.near_len -= 1;
+                return Some((t, e));
+            }
+            // Nothing at this tick: slide the window by one.
+            self.cur += 1;
+            self.migrate();
+        }
+    }
+
+    /// Earliest scheduled time.
+    pub fn peek_time(&self) -> Option<u64> {
+        if self.near_len == 0 && self.far_len == 0 {
+            return None;
+        }
+        if self.near_len == 0 {
+            return self.far.keys().next().copied();
+        }
+        let mut t = self.cur;
+        loop {
+            if !self.ring[(t & MASK) as usize].is_empty() {
+                return Some(t);
+            }
+            t += 1;
+            debug_assert!(t < self.cur + RING, "near events must sit in the window");
+        }
+    }
+
+    /// Number of pending events.
+    pub fn len(&self) -> usize {
+        self.near_len + self.far_len
+    }
+
+    /// True when no events are pending.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Pull overflow events whose time has entered the window.
+    fn migrate(&mut self) {
+        let horizon = self.cur + RING;
+        while let Some((&t, _)) = self.far.first_key_value() {
+            if t >= horizon {
+                break;
+            }
+            let (t, mut q) = self.far.pop_first().expect("first key just checked");
+            self.far_len -= q.len();
+            self.near_len += q.len();
+            let slot = &mut self.ring[(t & MASK) as usize];
+            while let Some(e) = q.pop_front() {
+                slot.push_back((t, e));
+            }
+        }
+    }
+
+    /// Move the window start back to `at` (a push earlier than `cur`):
+    /// ring entries that fall out of the new window spill to the
+    /// overflow, then in-window overflow migrates back. O(ring) — the
+    /// DES never takes this path.
+    fn rewind(&mut self, at: u64) {
+        self.cur = at;
+        let horizon = at + RING;
+        for slot in self.ring.iter_mut() {
+            let mut kept = 0usize;
+            while kept < slot.len() {
+                if slot[kept].0 >= horizon {
+                    let (t, e) = slot.remove(kept).expect("index in range");
+                    self.far.entry(t).or_default().push_back(e);
+                    self.near_len -= 1;
+                    self.far_len += 1;
+                } else {
+                    kept += 1;
+                }
+            }
+        }
+        self.migrate();
+    }
+}
+
+/// The original binary-heap event queue, kept as the ordering oracle
+/// for [`EventQueue`] and as a bench baseline.
+#[derive(Debug)]
+pub struct HeapQueue<E> {
     heap: BinaryHeap<Reverse<(u64, u64, EventBox<E>)>>,
     seq: u64,
 }
@@ -34,13 +205,13 @@ impl<E> Ord for EventBox<E> {
     }
 }
 
-impl<E> Default for EventQueue<E> {
+impl<E> Default for HeapQueue<E> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl<E> EventQueue<E> {
+impl<E> HeapQueue<E> {
     /// Empty queue.
     pub fn new() -> Self {
         Self { heap: BinaryHeap::new(), seq: 0 }
@@ -76,6 +247,7 @@ impl<E> EventQueue<E> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     #[test]
     fn time_ordering() {
@@ -107,5 +279,94 @@ mod tests {
         q.push(9, ());
         assert_eq!(q.peek_time(), Some(9));
         assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn far_events_cross_the_window() {
+        let mut q = EventQueue::new();
+        // Same time on both sides of a window jump, plus far FIFO.
+        q.push(10, "near");
+        let far = 10 + 3 * RING;
+        q.push(far, "far-1");
+        q.push(far, "far-2");
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.peek_time(), Some(10));
+        assert_eq!(q.pop(), Some((10, "near")));
+        assert_eq!(q.peek_time(), Some(far));
+        assert_eq!(q.pop(), Some((far, "far-1")));
+        assert_eq!(q.pop(), Some((far, "far-2")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn push_earlier_than_cursor_rewinds() {
+        let mut q = EventQueue::new();
+        q.push(100, "a");
+        q.push(100 + 2 * RING, "c");
+        assert_eq!(q.pop(), Some((100, "a")));
+        // The cursor sits at 100; schedule earlier.
+        q.push(50, "b");
+        assert_eq!(q.peek_time(), Some(50));
+        assert_eq!(q.pop(), Some((50, "b")));
+        assert_eq!(q.pop(), Some((100 + 2 * RING, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn bucket_matches_heap_on_random_streams() {
+        // Satellite equivalence: interleaved pushes (near + far deltas)
+        // and pops produce the identical (time, event) sequence, length
+        // and peeks as the binary-heap oracle.
+        for seed in 0..10u64 {
+            let mut rng = Rng::new(0xE0E0 + seed);
+            let mut bucket = EventQueue::new();
+            let mut heap = HeapQueue::new();
+            let mut now = 0u64;
+            let mut next_id = 0u64;
+            for _ in 0..3000 {
+                if rng.chance(0.55) || bucket.is_empty() {
+                    for _ in 0..=rng.below(3) {
+                        let delta = if rng.chance(0.85) {
+                            rng.below(600)
+                        } else {
+                            rng.below(4 * RING) // exercise the overflow
+                        };
+                        bucket.push(now + delta, next_id);
+                        heap.push(now + delta, next_id);
+                        next_id += 1;
+                    }
+                } else {
+                    let b = bucket.pop();
+                    let h = heap.pop();
+                    assert_eq!(b, h, "seed {seed}: pop diverged");
+                    if let Some((t, _)) = b {
+                        now = t;
+                    }
+                }
+                assert_eq!(bucket.len(), heap.len(), "seed {seed}");
+                assert_eq!(bucket.peek_time(), heap.peek_time(), "seed {seed}");
+            }
+            loop {
+                let b = bucket.pop();
+                let h = heap.pop();
+                assert_eq!(b, h, "seed {seed}: drain diverged");
+                if b.is_none() {
+                    break;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn heap_oracle_still_orders() {
+        let mut q = HeapQueue::new();
+        q.push(5, "c");
+        q.push(1, "a");
+        q.push(1, "a2");
+        assert_eq!(q.peek_time(), Some(1));
+        assert_eq!(q.pop(), Some((1, "a")));
+        assert_eq!(q.pop(), Some((1, "a2")));
+        assert_eq!(q.pop(), Some((5, "c")));
+        assert!(q.is_empty());
     }
 }

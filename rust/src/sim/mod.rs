@@ -8,12 +8,14 @@
 //! contention it measures what the analytic model abstracts as
 //! `c_cont`.
 //!
-//! * [`event`] — the event queue.
+//! * [`event`] — the event queues: the bucketed delta-time
+//!   [`EventQueue`] the DES runs on, and the binary-heap
+//!   [`event::HeapQueue`] oracle it is equivalence-tested against.
 //! * [`network`] — the network simulator and the emulated-memory access
 //!   round trip.
 
 pub mod event;
 pub mod network;
 
-pub use event::EventQueue;
+pub use event::{EventQueue, HeapQueue};
 pub use network::NetworkSim;

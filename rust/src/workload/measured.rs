@@ -1,0 +1,198 @@
+//! Measured slowdowns: compile and **run** the full [`crate::cc::corpus`]
+//! on both machines (paper §6/§7.2, Fig 10).
+//!
+//! The paper's headline 2–3x slowdown for sequential programs is a
+//! *measured* quantity — benchmarks executed under the cost model —
+//! not a prediction from the instruction-mix formula. This module is
+//! that pipeline: every corpus program is compiled once per backend,
+//! predecoded once ([`crate::isa::decode`]), and then executed on
+//! [`DirectMemory`] (the DDR3 sequential baseline) and on
+//! [`EmulatedChannelMemory`] (the §2.1 channel machine) for each design
+//! point of interest. [`crate::figures::fig10`] threads the resulting
+//! slowdowns in as its `measured` rows, demoting the closed-form
+//! [`crate::workload::predict_slowdown`] mix formula to an analytic
+//! oracle.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::cc::codegen::{compile, Backend};
+use crate::cc::corpus;
+use crate::emulation::{EmulationSetup, SequentialMachine};
+use crate::isa::decode::{predecode, DecodedProgram, FastMachine};
+use crate::isa::inst::Inst;
+use crate::isa::interp::{DirectMemory, EmulatedChannelMemory, RunStats};
+
+/// Words of DRAM address space given to every direct (sequential) run.
+pub const DIRECT_SPACE_WORDS: u64 = 1 << 20;
+
+/// Tile-local memory words given to every run (frames + temporaries).
+pub const LOCAL_WORDS: usize = 1 << 16;
+
+/// One corpus program, compiled for both backends and predecoded.
+pub struct CompiledCorpusProgram {
+    /// Program name (from the corpus).
+    pub name: &'static str,
+    /// Expected `main` return value, when the corpus pins one.
+    pub expected: Option<i64>,
+    /// Raw direct-backend instructions (for the legacy oracle).
+    pub direct_code: Vec<Inst>,
+    /// Raw emulated-backend instructions (for the legacy oracle).
+    pub emulated_code: Vec<Inst>,
+    /// Predecoded direct-backend program.
+    pub direct: DecodedProgram,
+    /// Predecoded emulated-backend program.
+    pub emulated: DecodedProgram,
+}
+
+/// The corpus, compiled + predecoded once and reusable across design
+/// points.
+pub struct CompiledCorpus {
+    /// The programs, in corpus order.
+    pub programs: Vec<CompiledCorpusProgram>,
+}
+
+impl CompiledCorpus {
+    /// Compile and predecode every corpus program for both backends.
+    pub fn compile() -> Result<Self> {
+        let mut programs = Vec::new();
+        for prog in corpus::all() {
+            let direct_code = compile(prog.source, Backend::Direct)
+                .with_context(|| format!("compiling {} (direct)", prog.name))?
+                .code;
+            let emulated_code = compile(prog.source, Backend::Emulated)
+                .with_context(|| format!("compiling {} (emulated)", prog.name))?
+                .code;
+            let direct = predecode(&direct_code)
+                .with_context(|| format!("predecoding {} (direct)", prog.name))?;
+            let emulated = predecode(&emulated_code)
+                .with_context(|| format!("predecoding {} (emulated)", prog.name))?;
+            programs.push(CompiledCorpusProgram {
+                name: prog.name,
+                expected: prog.expected,
+                direct_code,
+                emulated_code,
+                direct,
+                emulated,
+            });
+        }
+        Ok(Self { programs })
+    }
+
+    /// Run the whole corpus on both machines for one design point.
+    /// Verifies results (backends agree; pinned `expected` values hold)
+    /// and that the emulation is never charged fewer cycles than the
+    /// 1-cycle-per-instruction floor implies.
+    pub fn measure(
+        &self,
+        setup: &EmulationSetup,
+        seq: SequentialMachine,
+    ) -> Result<CorpusMeasurement> {
+        let mut runs = Vec::with_capacity(self.programs.len());
+        let mut direct_cycles = 0u64;
+        let mut emulated_cycles = 0u64;
+        for p in &self.programs {
+            let mut dmem = DirectMemory::new(seq, DIRECT_SPACE_WORDS);
+            let mut dm = FastMachine::new(&mut dmem, LOCAL_WORDS);
+            let direct = dm.run(&p.direct).with_context(|| format!("running {} (direct)", p.name))?;
+            let direct_result = dm.reg(0);
+
+            let mut emem = EmulatedChannelMemory::new(setup.clone());
+            let mut em = FastMachine::new(&mut emem, LOCAL_WORDS);
+            let emulated =
+                em.run(&p.emulated).with_context(|| format!("running {} (emulated)", p.name))?;
+            let emulated_result = em.reg(0);
+
+            ensure!(
+                direct_result == emulated_result,
+                "{}: machines disagree ({direct_result} vs {emulated_result})",
+                p.name
+            );
+            if let Some(want) = p.expected {
+                ensure!(
+                    direct_result == want,
+                    "{}: wrong result {direct_result} (expected {want})",
+                    p.name
+                );
+            }
+            direct_cycles += direct.cycles;
+            emulated_cycles += emulated.cycles;
+            runs.push(MeasuredRun {
+                name: p.name,
+                expected: p.expected,
+                direct_result,
+                emulated_result,
+                direct,
+                emulated,
+            });
+        }
+        Ok(CorpusMeasurement { runs, direct_cycles, emulated_cycles })
+    }
+}
+
+/// One program's measured execution on both machines.
+#[derive(Clone, Copy, Debug)]
+pub struct MeasuredRun {
+    /// Program name.
+    pub name: &'static str,
+    /// Expected result, when the corpus pins one.
+    pub expected: Option<i64>,
+    /// `main` return value on the sequential machine.
+    pub direct_result: i64,
+    /// `main` return value on the emulation (always equal).
+    pub emulated_result: i64,
+    /// Sequential-machine execution statistics.
+    pub direct: RunStats,
+    /// Emulated-machine execution statistics.
+    pub emulated: RunStats,
+}
+
+impl MeasuredRun {
+    /// Measured slowdown: emulated cycles over sequential cycles.
+    pub fn slowdown(&self) -> f64 {
+        self.emulated.cycles as f64 / self.direct.cycles.max(1) as f64
+    }
+}
+
+/// The whole corpus measured at one design point.
+#[derive(Clone, Debug)]
+pub struct CorpusMeasurement {
+    /// Per-program runs, in corpus order.
+    pub runs: Vec<MeasuredRun>,
+    /// Total sequential cycles over the corpus.
+    pub direct_cycles: u64,
+    /// Total emulated cycles over the corpus.
+    pub emulated_cycles: u64,
+}
+
+impl CorpusMeasurement {
+    /// Aggregate measured slowdown (cycle-weighted over the corpus).
+    pub fn slowdown(&self) -> f64 {
+        self.emulated_cycles as f64 / self.direct_cycles.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::emulation::TopologyKind;
+
+    #[test]
+    fn corpus_measures_at_a_small_point() {
+        let corpus = CompiledCorpus::compile().unwrap();
+        assert_eq!(corpus.programs.len(), corpus::all().len());
+        // Fusion must shrink every emulated program below its source.
+        for p in &corpus.programs {
+            assert!(p.emulated.len() < p.emulated_code.len(), "{}", p.name);
+            assert_eq!(p.direct.source_len(), p.direct_code.len());
+        }
+        let setup = EmulationSetup::default_tech(TopologyKind::Clos, 1024, 128, 255).unwrap();
+        let m = corpus.measure(&setup, SequentialMachine::paper_figures(false)).unwrap();
+        assert_eq!(m.runs.len(), corpus.programs.len());
+        for r in &m.runs {
+            assert_eq!(r.direct_result, r.emulated_result, "{}", r.name);
+            assert!(r.direct.cycles > 0 && r.emulated.cycles > 0, "{}", r.name);
+        }
+        let sd = m.slowdown();
+        assert!(sd > 0.5 && sd < 6.0, "aggregate slowdown {sd}");
+    }
+}

@@ -5,9 +5,16 @@
 //! * [`synthetic`] — the synthetic instruction-sequence generator: a
 //!   program with a target (non-memory, local, global) mix for either
 //!   memory backend, plus the closed-form slowdown predictions.
+//! * [`measured`] — the measured-slowdown pipeline: compile + predecode
+//!   the full `cc` corpus once, execute it on both machines per design
+//!   point, and report per-program and aggregate slowdowns (the
+//!   quantities Fig 10's `measured` rows plot; the mix formula in
+//!   [`synthetic`] is the analytic oracle).
 
+pub mod measured;
 pub mod mixes;
 pub mod synthetic;
 
+pub use measured::{CompiledCorpus, CorpusMeasurement, MeasuredRun};
 pub use mixes::{InstructionMix, COMPILER_MIX, DHRYSTONE_MIX};
 pub use synthetic::{predict_slowdown, SyntheticProgram};

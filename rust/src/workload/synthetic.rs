@@ -142,7 +142,7 @@ mod tests {
         let dstats = dm.run(&p.direct).unwrap();
 
         assert_eq!(estats.global_accesses, dstats.global_accesses);
-        let slowdown = estats.cycles / dstats.cycles;
+        let slowdown = estats.cycles as f64 / dstats.cycles as f64;
         // §7.2: a factor 2-3 for general programs (allow slack for the
         // small-k config here).
         assert!(slowdown > 1.0 && slowdown < 4.0, "slowdown={slowdown}");

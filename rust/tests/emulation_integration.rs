@@ -27,7 +27,7 @@ fn headline_slowdown_measured_by_execution() {
     let mut em = Machine::new(&mut emem, 64);
     let estats = em.run(&prog.emulated).unwrap();
 
-    let slowdown = estats.cycles / dstats.cycles;
+    let slowdown = estats.cycles as f64 / dstats.cycles as f64;
     assert!(
         slowdown > 1.5 && slowdown < 3.3,
         "measured slowdown {slowdown} outside the paper band"
@@ -70,7 +70,7 @@ fn corpus_runs_at_multiple_design_points() {
             let eres = em.reg(0);
 
             assert_eq!(dres, eres, "{} at {kind:?}/{tiles}", prog.name);
-            let slowdown = es.cycles / ds.cycles;
+            let slowdown = es.cycles as f64 / ds.cycles as f64;
             assert!(
                 (0.5..=6.0).contains(&slowdown),
                 "{} at {kind:?}/{tiles}: slowdown {slowdown}",
