@@ -19,7 +19,7 @@
 
 use memclos::api::{DesignPoint, Mode, Tech};
 use memclos::cc::{compile, corpus, Backend};
-use memclos::coordinator::{run_sweep, SweepPoint};
+use memclos::coordinator::{run_sweep_seq, ParallelSweep, SweepPoint};
 use memclos::dram::{measure_random_latency, DramConfig};
 use memclos::emulation::{SequentialMachine, TopologyKind};
 use memclos::isa::interp::{DirectMemory, EmulatedChannelMemory, Machine};
@@ -52,7 +52,22 @@ fn main() -> anyhow::Result<()> {
             points.push(SweepPoint { kind, tiles: system, mem_kb: 128, k: system - 1 });
         }
     }
-    let mut results = run_sweep(&points, mode, &Tech::default(), 4, 0xE2E)?;
+    let engine = ParallelSweep::new(mode, &Tech::default(), 4, 0xE2E);
+    let mut results = engine.eval_points(&points)?;
+    // The parallel engine is bit-identical to the sequential oracle
+    // (the test suite proves it exhaustively); spot-check a few points
+    // here so the e2e driver exercises both paths without re-running
+    // the whole sweep.
+    let spot = &points[..points.len().min(3)];
+    let oracle = run_sweep_seq(spot, mode, &Tech::default(), 0xE2E)?;
+    for (a, b) in results.iter().zip(&oracle) {
+        assert_eq!(
+            a.mean_cycles.to_bits(),
+            b.mean_cycles.to_bits(),
+            "parallel != sequential at {:?}",
+            a.point
+        );
+    }
     results.sort_by_key(|r| (r.point.tiles, format!("{:?}", r.point.kind), r.point.k));
     let mut t = Table::new(&["system", "topo", "k", "latency ns", "vs DDR3"]);
     for r in &results {

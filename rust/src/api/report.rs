@@ -76,6 +76,12 @@ impl Report {
         Self { bench: bench.to_string(), rows: Vec::new() }
     }
 
+    /// The report's bench name (the golden harness uses it as the
+    /// snapshot file stem).
+    pub fn bench(&self) -> &str {
+        &self.bench
+    }
+
     /// Append a row.
     pub fn push(&mut self, row: Row) {
         self.rows.push(row);

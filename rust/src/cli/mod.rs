@@ -20,7 +20,8 @@ pub struct Args {
 }
 
 /// Flags that take no value.
-const BOOLEAN_FLAGS: &[&str] = &["help", "quick", "tsv", "no-plot", "verbose", "json", "legacy"];
+const BOOLEAN_FLAGS: &[&str] =
+    &["help", "quick", "tsv", "no-plot", "verbose", "json", "legacy", "all"];
 
 impl Args {
     /// Parse from an iterator of arguments (without argv[0]).

@@ -1,13 +1,18 @@
-//! L3 coordination: the sweep engine that drives any
-//! [`crate::api::LatencyBackend`] across a worker pool.
+//! L3 coordination: the deterministic parallel sweep engine that
+//! drives any [`crate::api::LatencyBackend`] across a worker pool.
 //!
 //! * [`queue`] — bounded work queue with backpressure.
-//! * [`sweep`] — leader/worker sweep execution over design points;
-//!   backend selection is a [`crate::api::Mode`], resolved to a live
-//!   [`crate::api::Evaluator`] per worker.
+//! * [`sweep`] — [`ParallelSweep`]: worker-pool sweep execution with a
+//!   memoizing result cache and in-order reassembly, bit-for-bit
+//!   identical to the sequential oracle [`run_sweep_seq`] at any job
+//!   count; backend selection is a [`crate::api::Mode`], resolved to a
+//!   live [`crate::api::Evaluator`] per worker.
 
 pub mod queue;
 pub mod sweep;
 
 pub use queue::WorkQueue;
-pub use sweep::{run_sweep, PointResult, SweepPoint};
+pub use sweep::{
+    default_jobs, point_seed, run_sweep, run_sweep_seq, CacheStats, ParallelSweep, PlanPoint,
+    PlanResult, PointResult, SweepPoint,
+};

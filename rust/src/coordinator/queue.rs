@@ -76,6 +76,12 @@ impl<T> WorkQueue<T> {
         self.state.lock().unwrap().items.len()
     }
 
+    /// True once [`WorkQueue::close`] has been called (consumers may
+    /// still be draining queued items).
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+
     /// True when no items are queued.
     pub fn is_empty(&self) -> bool {
         self.len() == 0

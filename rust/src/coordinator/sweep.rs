@@ -1,27 +1,67 @@
-//! The sweep coordinator: evaluate many emulation design points across
-//! a worker pool, with whichever [`crate::api`] backend the caller's
-//! [`Mode`] selects.
+//! The sweep engine: evaluate many design points across a worker pool,
+//! **deterministically** — parallel output is bit-for-bit identical to
+//! the sequential oracle at any `--jobs`.
 //!
-//! The leader enumerates [`SweepPoint`]s into a bounded [`WorkQueue`]
-//! (backpressure keeps memory flat on huge sweeps); each worker thread
-//! owns its own [`Evaluator`] — and therefore its own PJRT client +
-//! compiled artifact when the mode resolves to XLA (the xla handles
-//! are not `Send`) — draws its own address stream, and returns a
-//! [`PointResult`] over a channel.
+//! Three pieces make that hold:
 //!
-//! Design points are built through [`DesignPoint`] with the caller's
-//! [`Tech`] bundle, so `--set`/`--config` overrides reach every
-//! worker.
+//! * **Canonical per-point seeds.** The address stream a point draws is
+//!   seeded by [`point_seed`] — a pure function of the sweep seed and
+//!   the point's [`SweepPoint::canonical_key`] encoding, never of
+//!   worker identity or arrival order. A point gets the same stream
+//!   whether it runs first on one thread or last on sixteen.
+//! * **In-order reassembly.** Workers return `(slot, result)` pairs;
+//!   the leader reassembles outputs in input order, so callers see the
+//!   same `Vec` the sequential path produces.
+//! * **A memoizing result cache.** [`ParallelSweep`] keys results by
+//!   the canonical encoding, so repeated points — within one sweep or
+//!   across figures sharing an engine — are evaluated once. The cache
+//!   is semantics-preserving *because* seeds are canonical: a fresh
+//!   evaluation of a duplicate would produce the identical bits.
+//!
+//! [`run_sweep_seq`] is the sequential oracle: one thread, one
+//! [`Evaluator`], no cache, input order. Every new execution strategy
+//! (more workers, batching, a new [`crate::api::LatencyBackend`]) must
+//! reproduce its output exactly; the golden-figure harness
+//! (`tests/golden_figures.rs`) enforces this on every figure.
+//!
+//! Each worker owns its own [`Evaluator`] — and therefore its own PJRT
+//! client + compiled artifact when the mode resolves to XLA (the xla
+//! handles are not `Send`). [`Mode::Auto`] is resolved once, before any
+//! worker spawns, so one sweep never mixes backends.
 
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use super::queue::WorkQueue;
 use crate::api::{xla_ready, DesignPoint, Evaluator, Mode, Tech};
 use crate::emulation::TopologyKind;
-use crate::util::rng::Rng;
+use crate::tech::ChipTech;
+use crate::topology::{ClosSpec, MeshSpec};
+use crate::vlsi::{ClosFloorplan, MeshFloorplan};
+
+/// Default worker count: one job per available hardware thread.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// splitmix64 finaliser (decorrelates the per-point stream seeds).
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The address-stream seed of one sweep point: a pure function of the
+/// sweep seed and the point's canonical encoding. This — not worker
+/// count — decides the stream, which is what makes the parallel engine
+/// bit-identical to [`run_sweep_seq`] at any `--jobs`.
+pub fn point_seed(sweep_seed: u64, canonical_key: u64) -> u64 {
+    mix64(sweep_seed ^ mix64(canonical_key))
+}
 
 /// One design point to evaluate.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -36,8 +76,26 @@ pub struct SweepPoint {
     pub k: usize,
 }
 
+impl SweepPoint {
+    /// Canonical encoding of the design point: injective for every
+    /// system this crate models (`tiles`, `k` < 2^24, `mem_kb` < 2^12),
+    /// so equal keys mean equal points — the memo-cache and per-point
+    /// seed contract.
+    pub fn canonical_key(&self) -> u64 {
+        debug_assert!(
+            self.tiles < 1 << 24 && self.k < 1 << 24 && self.mem_kb < 1 << 12,
+            "point {self:?} exceeds the canonical encoding ranges"
+        );
+        let kind = match self.kind {
+            TopologyKind::Clos => 0u64,
+            TopologyKind::Mesh => 1u64,
+        };
+        kind | (self.tiles as u64) << 1 | (self.k as u64) << 25 | (self.mem_kb as u64) << 49
+    }
+}
+
 /// Result of one design point.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PointResult {
     /// The point evaluated.
     pub point: SweepPoint,
@@ -49,19 +107,75 @@ pub struct PointResult {
     pub backend: &'static str,
 }
 
-/// Evaluate one point (worker body).
+/// One single-chip floorplan job (figs 5/6 study what fits on one die:
+/// Clos chips hold all tiles up to the paper's 256-tile building block,
+/// meshes are square single-chip grids).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanPoint {
+    /// Interconnect.
+    pub kind: TopologyKind,
+    /// Tiles on the (single) chip.
+    pub tiles: usize,
+    /// Tile memory (KB).
+    pub mem_kb: u32,
+}
+
+impl PlanPoint {
+    /// Canonical encoding (same contract as
+    /// [`SweepPoint::canonical_key`]).
+    pub fn canonical_key(&self) -> u64 {
+        debug_assert!(
+            self.tiles < 1 << 24 && self.mem_kb < 1 << 12,
+            "plan {self:?} exceeds the canonical encoding ranges"
+        );
+        let kind = match self.kind {
+            TopologyKind::Clos => 0u64,
+            TopologyKind::Mesh => 1u64,
+        };
+        kind | (self.tiles as u64) << 1 | (self.mem_kb as u64) << 25
+    }
+}
+
+/// The floorplan quantities the figures consume.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanResult {
+    /// The plan evaluated.
+    pub point: PlanPoint,
+    /// Total chip area, mm^2.
+    pub area_mm2: f64,
+    /// Switch-group area, mm^2.
+    pub switch_area_mm2: f64,
+    /// Wiring-channel area, mm^2.
+    pub wire_area_mm2: f64,
+    /// I/O area, mm^2.
+    pub io_area_mm2: f64,
+    /// Falls in the economical band.
+    pub economical: bool,
+}
+
+/// Cache effectiveness counters (see [`ParallelSweep::cache_stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Input items served without a fresh evaluation (memo hit or
+    /// intra-call duplicate).
+    pub hits: u64,
+    /// Fresh evaluations performed.
+    pub misses: u64,
+}
+
+/// Evaluate one latency point (worker body).
 fn eval_point(
     point: SweepPoint,
     tech: &Tech,
     evaluator: &Evaluator,
-    rng: &mut Rng,
+    stream_seed: u64,
 ) -> Result<PointResult> {
     let setup = DesignPoint::new(point.kind, point.tiles)
         .mem_kb(point.mem_kb)
         .k(point.k)
         .tech(tech)
         .build()?;
-    let eval = evaluator.evaluate(&setup, &evaluator.stream(rng.next_u64()))?;
+    let eval = evaluator.evaluate(&setup, &evaluator.stream(stream_seed))?;
     Ok(PointResult {
         point,
         mean_cycles: eval.mean_cycles,
@@ -70,69 +184,339 @@ fn eval_point(
     })
 }
 
-/// Run a sweep over `points` with `workers` threads, evaluating with
-/// the backend `mode` selects and building every point from `tech`.
-///
-/// Results are returned in completion order; sort by point if needed.
+/// Evaluate one single-chip floorplan (pure — no RNG, no backend).
+fn eval_plan(point: PlanPoint, chip: &ChipTech) -> Result<PlanResult> {
+    match point.kind {
+        TopologyKind::Clos => {
+            let spec = ClosSpec {
+                tiles: point.tiles,
+                tiles_per_chip: point.tiles.max(256),
+                ..ClosSpec::default()
+            };
+            let fp = ClosFloorplan::plan(&spec, point.mem_kb, chip)?;
+            Ok(PlanResult {
+                point,
+                area_mm2: fp.area_mm2,
+                switch_area_mm2: fp.switch_area_mm2,
+                wire_area_mm2: fp.wire_area_mm2,
+                io_area_mm2: fp.io_area_mm2,
+                economical: fp.is_economical(chip),
+            })
+        }
+        TopologyKind::Mesh => {
+            let spec = MeshSpec::single_chip(point.tiles)?;
+            let fp = MeshFloorplan::plan(&spec, point.mem_kb, chip)?;
+            Ok(PlanResult {
+                point,
+                area_mm2: fp.area_mm2,
+                switch_area_mm2: fp.switch_area_mm2,
+                wire_area_mm2: fp.wire_area_mm2,
+                io_area_mm2: fp.io_area_mm2,
+                economical: fp.is_economical(chip),
+            })
+        }
+    }
+}
+
+/// Resolve [`Mode::Auto`] once, so one sweep never mixes backends.
+fn resolve(mode: Mode) -> Mode {
+    match mode {
+        Mode::Auto { batch, .. } => mode.resolve(xla_ready(batch)),
+        concrete => concrete,
+    }
+}
+
+/// The sequential oracle: one thread, one [`Evaluator`], no cache —
+/// every point evaluated fresh, in input order, with its canonical
+/// [`point_seed`]. [`ParallelSweep::eval_points`] must reproduce this
+/// output bit for bit at any `--jobs`; so must every future backend or
+/// execution strategy.
+pub fn run_sweep_seq(
+    points: &[SweepPoint],
+    mode: Mode,
+    tech: &Tech,
+    seed: u64,
+) -> Result<Vec<PointResult>> {
+    let evaluator = Evaluator::new(resolve(mode))?;
+    points
+        .iter()
+        .map(|&p| eval_point(p, tech, &evaluator, point_seed(seed, p.canonical_key())))
+        .collect()
+}
+
+/// One-shot compatibility wrapper: a fresh [`ParallelSweep`] over
+/// `points`. Results come back in **input order** (the engine
+/// reassembles), bit-identical to [`run_sweep_seq`].
 pub fn run_sweep(
     points: &[SweepPoint],
     mode: Mode,
     tech: &Tech,
-    workers: usize,
+    jobs: usize,
     seed: u64,
 ) -> Result<Vec<PointResult>> {
-    // Resolve auto-selection ONCE, before the pool spawns: every
-    // worker must run the same backend (a per-worker fallback would
-    // silently mix xla and native results in one sweep). A worker
-    // whose resolved backend then fails to load aborts the sweep.
-    let mode = match mode {
-        Mode::Auto { batch, .. } => mode.resolve(xla_ready(batch)),
-        concrete => concrete,
-    };
-    let workers = workers.max(1).min(points.len().max(1));
-    let queue = Arc::new(WorkQueue::<SweepPoint>::new(2 * workers));
-    let (tx, rx) = mpsc::channel::<Result<PointResult>>();
+    ParallelSweep::new(mode, tech, jobs, seed).eval_points(points)
+}
 
-    std::thread::scope(|scope| -> Result<Vec<PointResult>> {
-        for w in 0..workers {
-            let queue = Arc::clone(&queue);
-            let tx = tx.clone();
-            scope.spawn(move || {
-                // Each worker owns its own Evaluator; when the mode
-                // resolves to XLA that means its own PJRT
-                // client/executable (the xla handles are not Send).
-                let evaluator = match Evaluator::new(mode) {
-                    Ok(e) => e,
-                    Err(err) => {
-                        let _ = tx.send(Err(err));
-                        return;
-                    }
-                };
-                let mut rng = Rng::new(seed ^ (0x9E37_79B9 * (w as u64 + 1)));
-                while let Some(point) = queue.pop() {
-                    let res = eval_point(point, tech, &evaluator, &mut rng);
-                    if tx.send(res).is_err() {
-                        break;
-                    }
-                }
-            });
+/// The multi-threaded, deterministic, memoizing sweep engine.
+///
+/// One engine holds the evaluation context (resolved [`Mode`], [`Tech`]
+/// bundle, base seed, worker count) plus the result caches. Figures
+/// that share an engine — `memclos figures --all`, the golden harness —
+/// share the caches, so the design points figs 9/10/11 have in common
+/// (and the single-chip floorplans figs 5/6 share) are evaluated once.
+pub struct ParallelSweep {
+    mode: Mode,
+    tech: Tech,
+    jobs: usize,
+    seed: u64,
+    points: Mutex<HashMap<u64, PointResult>>,
+    plans: Mutex<HashMap<u64, PlanResult>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ParallelSweep {
+    /// An engine with `jobs` workers (clamped to >= 1; 1 evaluates
+    /// inline on the caller thread — the sequential-oracle path).
+    /// [`Mode::Auto`] is resolved here, once.
+    pub fn new(mode: Mode, tech: &Tech, jobs: usize, seed: u64) -> Self {
+        Self {
+            mode: resolve(mode),
+            tech: tech.clone(),
+            jobs: jobs.max(1),
+            seed,
+            points: Mutex::new(HashMap::new()),
+            plans: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
         }
-        drop(tx);
+    }
 
-        // Leader: feed the queue (blocks on backpressure), then close.
-        for &p in points {
-            if !queue.push(p) {
-                break;
+    /// An engine with [`default_jobs`] workers and the figures' default
+    /// seed.
+    pub fn with_defaults(mode: Mode, tech: &Tech) -> Self {
+        Self::new(mode, tech, default_jobs(), 0xC105)
+    }
+
+    /// The resolved evaluation mode (never [`Mode::Auto`]).
+    pub fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    /// The technology bundle every point is built from.
+    pub fn tech(&self) -> &Tech {
+        &self.tech
+    }
+
+    /// Worker threads (1 = the sequential oracle path).
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// The base sweep seed.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Cache effectiveness so far (both caches combined).
+    pub fn cache_stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Evaluate latency design points: in input order, memoized by
+    /// canonical encoding, bit-identical to [`run_sweep_seq`].
+    pub fn eval_points(&self, points: &[SweepPoint]) -> Result<Vec<PointResult>> {
+        let fresh = {
+            let cache = self.points.lock().unwrap();
+            let mut pending: Vec<(u64, SweepPoint)> = Vec::new();
+            for &p in points {
+                let key = p.canonical_key();
+                if cache.contains_key(&key) || pending.iter().any(|&(k, _)| k == key) {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    pending.push((key, p));
+                }
+            }
+            pending
+        };
+        let results = self.eval_fresh_points(&fresh)?;
+        let mut cache = self.points.lock().unwrap();
+        for (&(key, _), r) in fresh.iter().zip(&results) {
+            cache.insert(key, *r);
+        }
+        points
+            .iter()
+            .map(|p| {
+                cache
+                    .get(&p.canonical_key())
+                    .copied()
+                    .context("sweep point missing from the result cache")
+            })
+            .collect()
+    }
+
+    /// Evaluate single-chip floorplans: in input order, memoized by
+    /// canonical encoding (this is the cache figs 5 and 6 share).
+    pub fn eval_plans(&self, points: &[PlanPoint]) -> Result<Vec<PlanResult>> {
+        let fresh = {
+            let cache = self.plans.lock().unwrap();
+            let mut pending: Vec<(u64, PlanPoint)> = Vec::new();
+            for &p in points {
+                let key = p.canonical_key();
+                if cache.contains_key(&key) || pending.iter().any(|&(k, _)| k == key) {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    pending.push((key, p));
+                }
+            }
+            pending
+        };
+        let results = self.map(&fresh, |&(_, p)| eval_plan(p, &self.tech.chip))?;
+        let mut cache = self.plans.lock().unwrap();
+        for (&(key, _), r) in fresh.iter().zip(&results) {
+            cache.insert(key, *r);
+        }
+        points
+            .iter()
+            .map(|p| {
+                cache
+                    .get(&p.canonical_key())
+                    .copied()
+                    .context("plan point missing from the result cache")
+            })
+            .collect()
+    }
+
+    /// Deterministic parallel map: apply `f` to every item on the
+    /// worker pool and reassemble the outputs in input order.
+    ///
+    /// `f` must be a pure function of its input (the sequential-oracle
+    /// rule): at `jobs = 1` the items run inline in order, and any job
+    /// count must produce identical output. Errors are reported for the
+    /// lowest-index failing item, matching what the inline path would
+    /// surface first.
+    pub fn map<I, O, F>(&self, items: &[I], f: F) -> Result<Vec<O>>
+    where
+        I: Sync,
+        O: Send,
+        F: Fn(&I) -> Result<O> + Sync,
+    {
+        if items.is_empty() {
+            return Ok(Vec::new());
+        }
+        let workers = self.jobs.min(items.len());
+        if workers == 1 {
+            return items.iter().map(|i| f(i)).collect();
+        }
+        let queue = Arc::new(WorkQueue::<usize>::new(2 * workers));
+        let (tx, rx) = mpsc::channel::<(usize, Result<O>)>();
+        let f = &f;
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let queue = Arc::clone(&queue);
+                let tx = tx.clone();
+                scope.spawn(move || {
+                    while let Some(slot) = queue.pop() {
+                        if tx.send((slot, f(&items[slot]))).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+            drop(tx);
+            for slot in 0..items.len() {
+                if !queue.push(slot) {
+                    break;
+                }
+            }
+            queue.close();
+            collect_ordered(rx, items.len())
+        })
+    }
+
+    /// Evaluate deduplicated latency points (parallel or inline).
+    fn eval_fresh_points(&self, fresh: &[(u64, SweepPoint)]) -> Result<Vec<PointResult>> {
+        if fresh.is_empty() {
+            return Ok(Vec::new());
+        }
+        let workers = self.jobs.min(fresh.len());
+        if workers == 1 {
+            // The sequential-oracle path: one Evaluator, input order.
+            let evaluator = Evaluator::new(self.mode)?;
+            return fresh
+                .iter()
+                .map(|&(key, p)| eval_point(p, &self.tech, &evaluator, point_seed(self.seed, key)))
+                .collect();
+        }
+        let queue = Arc::new(WorkQueue::<(usize, u64, SweepPoint)>::new(2 * workers));
+        let (tx, rx) = mpsc::channel::<(usize, Result<PointResult>)>();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let queue = Arc::clone(&queue);
+                let tx = tx.clone();
+                scope.spawn(move || {
+                    // Each worker owns its own Evaluator (PJRT handles
+                    // are not Send). A failed backend load aborts the
+                    // sweep: close the queue so the leader stops
+                    // feeding and peers drain out.
+                    let evaluator = match Evaluator::new(self.mode) {
+                        Ok(e) => e,
+                        Err(err) => {
+                            let _ = tx.send((usize::MAX, Err(err)));
+                            queue.close();
+                            return;
+                        }
+                    };
+                    while let Some((slot, key, point)) = queue.pop() {
+                        let res =
+                            eval_point(point, &self.tech, &evaluator, point_seed(self.seed, key));
+                        if tx.send((slot, res)).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+            drop(tx);
+            for (slot, &(key, p)) in fresh.iter().enumerate() {
+                if !queue.push((slot, key, p)) {
+                    break;
+                }
+            }
+            queue.close();
+            collect_ordered(rx, fresh.len())
+        })
+    }
+}
+
+/// Reassemble `(slot, result)` pairs in slot order; on failure report
+/// the lowest failing slot (what the sequential path would hit first).
+fn collect_ordered<T>(rx: mpsc::Receiver<(usize, Result<T>)>, n: usize) -> Result<Vec<T>> {
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let mut first_err: Option<(usize, anyhow::Error)> = None;
+    for (slot, res) in rx {
+        match res {
+            Ok(v) => {
+                if slot < n {
+                    out[slot] = Some(v);
+                }
+            }
+            Err(e) => {
+                let keep = first_err.as_ref().map_or(true, |(s, _)| slot < *s);
+                if keep {
+                    first_err = Some((slot, e));
+                }
             }
         }
-        queue.close();
-
-        let mut results = Vec::with_capacity(points.len());
-        for res in rx {
-            results.push(res?);
-        }
-        Ok(results)
-    })
+    }
+    if let Some((_, e)) = first_err {
+        return Err(e);
+    }
+    out.into_iter().map(|o| o.context("a sweep worker dropped an item")).collect()
 }
 
 #[cfg(test)]
@@ -146,15 +530,32 @@ mod tests {
             .collect()
     }
 
+    fn assert_bit_identical(a: &[PointResult], b: &[PointResult], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.point, y.point, "{what}: point order");
+            assert_eq!(
+                x.mean_cycles.to_bits(),
+                y.mean_cycles.to_bits(),
+                "{what}: k={} {} vs {}",
+                x.point.k,
+                x.mean_cycles,
+                y.mean_cycles
+            );
+            assert_eq!(x.samples, y.samples, "{what}: samples");
+            assert_eq!(x.backend, y.backend, "{what}: backend");
+        }
+    }
+
     #[test]
     fn exact_sweep_multithreaded() {
         let res = run_sweep(&points(), Mode::Exact, &Tech::default(), 3, 1).unwrap();
         assert_eq!(res.len(), 3);
         assert!(res.iter().all(|r| r.backend == "exact"));
-        let mut by_k: Vec<_> = res.iter().map(|r| (r.point.k, r.mean_cycles)).collect();
-        by_k.sort_unstable_by_key(|&(k, _)| k);
-        assert_eq!(by_k[0].1, 19.0); // same-switch emulation
-        assert!(by_k[2].1 > by_k[1].1, "latency grows with k");
+        // In-order now: results follow the input point order.
+        assert_eq!(res[0].point.k, 15);
+        assert_eq!(res[0].mean_cycles, 19.0); // same-switch emulation
+        assert!(res[2].mean_cycles > res[1].mean_cycles, "latency grows with k");
     }
 
     #[test]
@@ -189,7 +590,7 @@ mod tests {
     }
 
     #[test]
-    fn results_cover_all_points() {
+    fn results_cover_all_points_in_input_order() {
         let pts: Vec<SweepPoint> = (1..32)
             .map(|i| SweepPoint {
                 kind: if i % 2 == 0 { TopologyKind::Clos } else { TopologyKind::Mesh },
@@ -200,8 +601,122 @@ mod tests {
             .collect();
         let res = run_sweep(&pts, Mode::Exact, &Tech::default(), 4, 3).unwrap();
         assert_eq!(res.len(), pts.len());
-        for p in &pts {
-            assert!(res.iter().any(|r| r.point == *p), "missing {p:?}");
+        for (p, r) in pts.iter().zip(&res) {
+            assert_eq!(r.point, *p, "in-order reassembly");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_sequential_oracle_bitwise() {
+        // The tentpole invariant: any job count reproduces the oracle's
+        // bits — including for a sampling backend, whose streams come
+        // from canonical per-point seeds rather than worker state.
+        let pts: Vec<SweepPoint> = (1..24)
+            .map(|i| SweepPoint { kind: TopologyKind::Clos, tiles: 1024, mem_kb: 128, k: 40 * i })
+            .collect();
+        let tech = Tech::default();
+        for mode in [Mode::Exact, Mode::Native { samples: 3_000 }] {
+            let oracle = run_sweep_seq(&pts, mode, &tech, 7).unwrap();
+            for jobs in [1usize, 4, 8] {
+                let par = ParallelSweep::new(mode, &tech, jobs, 7).eval_points(&pts).unwrap();
+                assert_bit_identical(&oracle, &par, &format!("{mode:?} jobs={jobs}"));
+            }
+        }
+    }
+
+    #[test]
+    fn point_seed_is_canonical() {
+        let a = SweepPoint { kind: TopologyKind::Clos, tiles: 1024, mem_kb: 128, k: 255 };
+        let b = a;
+        assert_eq!(a.canonical_key(), b.canonical_key());
+        assert_eq!(point_seed(9, a.canonical_key()), point_seed(9, b.canonical_key()));
+        let c = SweepPoint { k: 256, ..a };
+        assert_ne!(a.canonical_key(), c.canonical_key());
+        assert_ne!(point_seed(9, a.canonical_key()), point_seed(9, c.canonical_key()));
+        let m = SweepPoint { kind: TopologyKind::Mesh, ..a };
+        assert_ne!(a.canonical_key(), m.canonical_key());
+    }
+
+    #[test]
+    fn duplicate_points_are_evaluated_once() {
+        let engine =
+            ParallelSweep::new(Mode::Native { samples: 2_000 }, &Tech::default(), 4, 11);
+        let base = points();
+        let mut dup = base.clone();
+        dup.extend(base.iter().copied()); // every point twice
+        let res = engine.eval_points(&dup).unwrap();
+        let stats = engine.cache_stats();
+        assert_eq!(stats.misses, base.len() as u64, "one evaluation per unique point");
+        assert_eq!(stats.hits, base.len() as u64, "duplicates served from the cache");
+        // ...and the duplicate halves are bit-identical to the first.
+        assert_bit_identical(&res[..base.len()], &res[base.len()..], "duplicate halves");
+        // The cache is transparent: fresh-evaluating the duplicated
+        // list sequentially gives the same bits.
+        let oracle =
+            run_sweep_seq(&dup, Mode::Native { samples: 2_000 }, &Tech::default(), 11).unwrap();
+        assert_bit_identical(&oracle, &res, "cache transparency");
+    }
+
+    #[test]
+    fn cache_persists_across_calls() {
+        let engine = ParallelSweep::new(Mode::Exact, &Tech::default(), 2, 0);
+        let pts = points();
+        let first = engine.eval_points(&pts).unwrap();
+        let after_first = engine.cache_stats();
+        let second = engine.eval_points(&pts).unwrap();
+        let after_second = engine.cache_stats();
+        assert_bit_identical(&first, &second, "second call");
+        assert_eq!(after_second.misses, after_first.misses, "no new evaluations");
+        assert_eq!(after_second.hits, after_first.hits + pts.len() as u64);
+    }
+
+    #[test]
+    fn plan_cache_is_shared_and_ordered() {
+        let engine = ParallelSweep::new(Mode::Exact, &Tech::default(), 4, 0);
+        let pts: Vec<PlanPoint> = [16usize, 64, 256, 1024]
+            .iter()
+            .flat_map(|&tiles| {
+                [
+                    PlanPoint { kind: TopologyKind::Clos, tiles, mem_kb: 256 },
+                    PlanPoint { kind: TopologyKind::Mesh, tiles, mem_kb: 256 },
+                ]
+            })
+            .collect();
+        let first = engine.eval_plans(&pts).unwrap();
+        assert_eq!(first.len(), pts.len());
+        for (p, r) in pts.iter().zip(&first) {
+            assert_eq!(r.point, *p, "in-order reassembly");
+            assert!(r.area_mm2 > 0.0);
+        }
+        let before = engine.cache_stats();
+        let second = engine.eval_plans(&pts).unwrap();
+        let after = engine.cache_stats();
+        assert_eq!(after.misses, before.misses, "second pass fully cached");
+        for (a, b) in first.iter().zip(&second) {
+            assert_eq!(a.area_mm2.to_bits(), b.area_mm2.to_bits());
+            assert_eq!(a.economical, b.economical);
+        }
+    }
+
+    #[test]
+    fn map_preserves_order_and_reports_lowest_error() {
+        let engine = ParallelSweep::new(Mode::Exact, &Tech::default(), 4, 0);
+        let items: Vec<usize> = (0..50).collect();
+        let doubled = engine.map(&items, |&i| Ok(2 * i)).unwrap();
+        assert_eq!(doubled, items.iter().map(|&i| 2 * i).collect::<Vec<_>>());
+        // Errors: the lowest failing slot wins, at any job count.
+        for jobs in [1usize, 4] {
+            let engine = ParallelSweep::new(Mode::Exact, &Tech::default(), jobs, 0);
+            let err = engine
+                .map(&items, |&i| {
+                    if i % 7 == 3 {
+                        anyhow::bail!("boom at {i}")
+                    } else {
+                        Ok(i)
+                    }
+                })
+                .unwrap_err();
+            assert_eq!(err.to_string(), "boom at 3", "jobs={jobs}");
         }
     }
 }

@@ -18,7 +18,8 @@
 
 use anyhow::Result;
 
-use crate::api::{DesignPoint, Tech};
+use crate::api::{DesignPoint, Mode, Report, Tech};
+use crate::coordinator::ParallelSweep;
 use crate::emulation::SequentialMachine;
 use crate::netmodel::NetParams;
 use crate::tech::{ChipTech, MemTech};
@@ -151,15 +152,38 @@ pub fn edram_tiles(tech: &Tech, dram_ns: f64) -> Result<Vec<Row>> {
     Ok(rows)
 }
 
-/// All ablations against a technology bundle.
-pub fn generate(tech: &Tech) -> Result<Vec<Row>> {
+/// All ablations on a shared sweep engine: the four experiments are
+/// independent, so they fan out across the worker pool and reassemble
+/// in the fixed experiment order (each experiment is deterministic, so
+/// any `--jobs` is bit-identical).
+pub fn generate_with(engine: &ParallelSweep) -> Result<Vec<Row>> {
     let dram = SequentialMachine::with_measured_dram(1).dram_ns;
-    let mut rows = Vec::new();
-    rows.extend(route_open(tech, dram)?);
-    rows.extend(clock_scaling(tech, dram)?);
-    rows.extend(switch_degree(tech, dram)?);
-    rows.extend(edram_tiles(tech, dram)?);
-    Ok(rows)
+    let tech = engine.tech();
+    type Experiment = fn(&Tech, f64) -> Result<Vec<Row>>;
+    let experiments: [Experiment; 4] =
+        [route_open, clock_scaling, switch_degree, edram_tiles];
+    let nested = engine.map(&experiments, |exp| exp(tech, dram))?;
+    Ok(nested.into_iter().flatten().collect())
+}
+
+/// All ablations against a technology bundle (standalone: a fresh
+/// engine).
+pub fn generate(tech: &Tech) -> Result<Vec<Row>> {
+    generate_with(&ParallelSweep::with_defaults(Mode::Exact, tech))
+}
+
+/// Full numeric output for the golden harness.
+pub fn report(rows: &[Row]) -> Report {
+    let mut rep = Report::new("ablations");
+    for r in rows {
+        rep.push(
+            crate::api::Row::new(&format!("{}-{}", r.experiment, r.variant))
+                .num("latency_ns", r.latency_ns)
+                .num("slowdown", r.slowdown)
+                .str("note", &r.note),
+        );
+    }
+    rep
 }
 
 /// Render the ablation table.

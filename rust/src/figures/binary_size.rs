@@ -52,6 +52,25 @@ pub fn total_overhead(rows: &[Row]) -> f64 {
     e as f64 / d as f64 - 1.0
 }
 
+/// Full numeric output for the golden harness.
+pub fn report(rows: &[Row]) -> crate::api::Report {
+    let mut rep = crate::api::Report::new("binary_size");
+    for r in rows {
+        rep.push(
+            crate::api::Row::new(r.name)
+                .int("direct_bytes", r.direct_bytes as u64)
+                .int("emulated_bytes", r.emulated_bytes as u64)
+                .int("load_sites", r.load_sites as u64)
+                .int("store_sites", r.store_sites as u64)
+                .num("overhead_pct", r.overhead() * 100.0),
+        );
+    }
+    rep.push(
+        crate::api::Row::new("corpus-total").num("overhead_pct", total_overhead(rows) * 100.0),
+    );
+    rep
+}
+
 /// Render the dataset.
 pub fn render(rows: &[Row]) -> String {
     let mut t = Table::new(&[

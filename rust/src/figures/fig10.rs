@@ -17,14 +17,14 @@
 
 use anyhow::Result;
 
-use super::fig9::{k_points, MEM_KB, SYSTEMS};
-use super::FigOpts;
-use crate::api::DesignPoint;
-use crate::coordinator::{run_sweep, SweepPoint};
-use crate::emulation::{SequentialMachine, TopologyKind};
+use super::fig9::{MEM_KB, SYSTEMS};
+use super::{topo_str, FigOpts};
+use crate::api::{DesignPoint, Report};
+use crate::coordinator::ParallelSweep;
+use crate::emulation::{EmulationSetup, SequentialMachine, TopologyKind};
 use crate::util::plot::Plot;
 use crate::util::table::{f, Table};
-use crate::workload::measured::CompiledCorpus;
+use crate::workload::measured::{CompiledCorpus, CorpusMeasurement};
 use crate::workload::{predict_slowdown, InstructionMix, COMPILER_MIX, DHRYSTONE_MIX};
 
 /// One data point.
@@ -45,25 +45,14 @@ pub struct Row {
     pub source: &'static str,
 }
 
-fn topo_str(kind: TopologyKind) -> &'static str {
-    match kind {
-        TopologyKind::Clos => "clos",
-        TopologyKind::Mesh => "mesh",
-    }
-}
-
-/// Generate the Fig 10 dataset: the analytic sweep plus measured corpus
-/// rows at the full-emulation point of every system/topology.
-pub fn generate(opts: &FigOpts) -> Result<Vec<Row>> {
-    let mut points = Vec::new();
-    for &system in SYSTEMS {
-        for kind in [TopologyKind::Clos, TopologyKind::Mesh] {
-            for k in k_points(system) {
-                points.push(SweepPoint { kind, tiles: system, mem_kb: MEM_KB, k });
-            }
-        }
-    }
-    let results = run_sweep(&points, opts.mode, &opts.tech, opts.workers, opts.seed)?;
+/// Generate the Fig 10 dataset on a shared sweep engine: the analytic
+/// sweep reuses fig 9's latency points (served from the result cache
+/// when the engine is shared), and the measured corpus runs fan out
+/// across the pool one `(design point, program)` pair at a time —
+/// integer-deterministic interpreters, so any `--jobs` is
+/// bit-identical.
+pub fn generate_with(engine: &ParallelSweep) -> Result<Vec<Row>> {
+    let results = engine.eval_points(&super::fig9::sweep_points())?;
     let dram = SequentialMachine::with_measured_dram(1).dram_ns;
 
     let benches: [(&'static str, InstructionMix); 2] =
@@ -83,41 +72,72 @@ pub fn generate(opts: &FigOpts) -> Result<Vec<Row>> {
     }
 
     // Measured rows: run the corpus through the decoded interpreter at
-    // the full-emulation point of every system/topology.
+    // the full-emulation point of every system/topology. The corpus is
+    // compiled + predecoded once; each (setup, program) pair is an
+    // independent unit of work for the pool.
     let corpus = CompiledCorpus::compile()?;
     let seq = SequentialMachine::with_measured_dram(1);
+    let mut setups: Vec<(usize, TopologyKind, EmulationSetup)> = Vec::new();
     for &system in SYSTEMS {
         for kind in [TopologyKind::Clos, TopologyKind::Mesh] {
-            let k = system - 1;
             let setup = DesignPoint::new(kind, system)
                 .mem_kb(MEM_KB)
-                .k(k)
-                .tech(&opts.tech)
+                .k(system - 1)
+                .tech(engine.tech())
                 .build()?;
-            let m = corpus.measure(&setup, seq)?;
-            for run in &m.runs {
-                rows.push(Row {
-                    system,
-                    topo: topo_str(kind),
-                    benchmark: run.name,
-                    k,
-                    slowdown: run.slowdown(),
-                    source: "measured",
-                });
-            }
+            setups.push((system, kind, setup));
+        }
+    }
+    let n_progs = corpus.programs.len();
+    let items: Vec<(usize, usize)> =
+        (0..setups.len()).flat_map(|s| (0..n_progs).map(move |p| (s, p))).collect();
+    let runs = engine.map(&items, |&(s, p)| corpus.measure_one(p, &setups[s].2, seq))?;
+    for (s, chunk) in runs.chunks(n_progs).enumerate() {
+        let (system, kind) = (setups[s].0, setups[s].1);
+        let k = system - 1;
+        let m = CorpusMeasurement::from_runs(chunk.to_vec());
+        for run in &m.runs {
             rows.push(Row {
                 system,
                 topo: topo_str(kind),
-                benchmark: "corpus",
+                benchmark: run.name,
                 k,
-                slowdown: m.slowdown(),
+                slowdown: run.slowdown(),
                 source: "measured",
             });
         }
+        rows.push(Row {
+            system,
+            topo: topo_str(kind),
+            benchmark: "corpus",
+            k,
+            slowdown: m.slowdown(),
+            source: "measured",
+        });
     }
 
     rows.sort_by_key(|r| (r.system, r.topo, r.source, r.benchmark, r.k));
     Ok(rows)
+}
+
+/// Generate the Fig 10 dataset (standalone: a fresh engine).
+pub fn generate(opts: &FigOpts) -> Result<Vec<Row>> {
+    generate_with(&opts.engine())
+}
+
+/// Full numeric output for the golden harness.
+pub fn report(rows: &[Row]) -> Report {
+    let mut rep = Report::new("fig10");
+    for r in rows {
+        rep.push(
+            crate::api::Row::new(&format!("{}-{}t-{}-k{}", r.topo, r.system, r.benchmark, r.k))
+                .int("system", r.system as u64)
+                .int("k", r.k as u64)
+                .str("source", r.source)
+                .num("slowdown", r.slowdown),
+        );
+    }
+    rep
 }
 
 /// Render the dataset.

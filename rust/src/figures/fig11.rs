@@ -9,8 +9,9 @@
 use anyhow::Result;
 
 use super::fig9::MEM_KB;
-use super::FigOpts;
-use crate::coordinator::{run_sweep, SweepPoint};
+use super::{topo_str, FigOpts};
+use crate::api::Report;
+use crate::coordinator::{ParallelSweep, SweepPoint};
 use crate::emulation::{SequentialMachine, TopologyKind};
 use crate::runtime::ArtifactSet;
 use crate::util::plot::Plot;
@@ -34,28 +35,39 @@ pub struct Row {
 /// Mix points on the 0..=50% global axis.
 pub const GRID: usize = 21;
 
-/// Generate the Fig 11 dataset.
-pub fn generate(opts: &FigOpts) -> Result<Vec<Row>> {
-    // One latency evaluation per (system, topo): the full emulation.
+/// The figure's latency points: the full emulation of every
+/// (system, topology) — a subset of fig 9's sweep, so a shared engine
+/// serves them from the result cache.
+pub fn sweep_points() -> Vec<SweepPoint> {
     let mut points = Vec::new();
     for &system in super::fig9::SYSTEMS {
         for kind in [TopologyKind::Clos, TopologyKind::Mesh] {
             points.push(SweepPoint { kind, tiles: system, mem_kb: MEM_KB, k: system - 1 });
         }
     }
-    let results = run_sweep(&points, opts.mode, &opts.tech, opts.workers, opts.seed)?;
+    points
+}
+
+/// Generate the Fig 11 dataset on a shared sweep engine.
+pub fn generate_with(engine: &ParallelSweep) -> Result<Vec<Row>> {
+    let results = engine.eval_points(&sweep_points())?;
     let dram = SequentialMachine::with_measured_dram(1).dram_ns;
     let grid = fig11_grid(GRID);
 
-    // Prefer the AOT mix-sweep artifact (exercises the L2 model).
-    let xla_surface = mix_sweep_artifact();
+    // Prefer the AOT mix-sweep artifact (exercises the L2 model) — but
+    // only for sampling modes. `Mode::Exact` means the fully analytic
+    // path end to end, artifact or no artifact, which is what keeps the
+    // golden snapshots environment-independent (the harness and
+    // `figures --all` default to Exact; a machine with `artifacts/`
+    // installed must produce the same bits as artifact-less CI).
+    let xla_surface = match engine.mode() {
+        crate::api::Mode::Exact => None,
+        _ => mix_sweep_artifact(),
+    };
 
     let mut rows = Vec::new();
     for r in &results {
-        let topo = match r.point.kind {
-            TopologyKind::Clos => "clos",
-            TopologyKind::Mesh => "mesh",
-        };
+        let topo = topo_str(r.point.kind);
         let slowdowns: Vec<f64> = match &xla_surface {
             Some(art) => {
                 eval_mix_sweep(art, &grid, r.mean_cycles, dram).unwrap_or_else(|_| {
@@ -79,6 +91,30 @@ pub fn generate(opts: &FigOpts) -> Result<Vec<Row>> {
             .unwrap()
     });
     Ok(rows)
+}
+
+/// Generate the Fig 11 dataset (standalone: a fresh engine).
+pub fn generate(opts: &FigOpts) -> Result<Vec<Row>> {
+    generate_with(&opts.engine())
+}
+
+/// Full numeric output for the golden harness.
+pub fn report(rows: &[Row]) -> Report {
+    let mut rep = Report::new("fig11");
+    for r in rows {
+        rep.push(
+            crate::api::Row::new(&format!(
+                "{}-{}t-{}pct",
+                r.topo,
+                r.system,
+                f(r.global_frac * 100.0, 1)
+            ))
+            .int("system", r.system as u64)
+            .num("global_frac", r.global_frac)
+            .num("slowdown", r.slowdown),
+        );
+    }
+    rep
 }
 
 fn mix_sweep_artifact() -> Option<crate::runtime::Artifact> {

@@ -4,11 +4,13 @@
 
 use anyhow::Result;
 
+use super::topo_str;
+use crate::api::{Mode, Report, Tech};
+use crate::coordinator::{ParallelSweep, PlanPoint};
+use crate::emulation::TopologyKind;
 use crate::tech::ChipTech;
-use crate::topology::{ClosSpec, MeshSpec};
 use crate::util::plot::Plot;
 use crate::util::table::{f, Table};
-use crate::vlsi::{ClosFloorplan, MeshFloorplan};
 
 /// One data point.
 #[derive(Clone, Copy, Debug)]
@@ -31,38 +33,57 @@ pub const TILE_POINTS: &[usize] = &[16, 64, 256, 1024];
 /// Memory capacities plotted.
 pub const MEM_POINTS: &[u32] = &[64, 128, 256, 512];
 
-/// Generate the Fig 5 dataset.
-pub fn generate(tech: &ChipTech) -> Result<Vec<Row>> {
-    let mut rows = Vec::new();
+/// The figure's plan grid, in render order. Single-chip layouts: the
+/// figure studies how much fits on one die (the engine's plan evaluator
+/// uses the integer-validated grid — the seed's
+/// `((tiles/16) as f64).sqrt() as usize` silently truncated at
+/// non-power-of-4 tile counts).
+pub fn plan_points() -> Vec<PlanPoint> {
+    let mut pts = Vec::new();
     for &mem in MEM_POINTS {
         for &tiles in TILE_POINTS {
-            // Single-chip layouts: the figure studies how much fits on
-            // one die.
-            let clos_spec =
-                ClosSpec { tiles, tiles_per_chip: tiles.max(256), ..ClosSpec::default() };
-            let clos = ClosFloorplan::plan(&clos_spec, mem, tech)?;
-            rows.push(Row {
-                topo: "clos",
-                tiles,
-                mem_kb: mem,
-                area_mm2: clos.area_mm2,
-                economical: clos.is_economical(tech),
-            });
-            // Integer-validated single-chip grid: the seed's
-            // `(tiles/16) as f64).sqrt() as usize` silently truncated
-            // at non-power-of-4 tile counts.
-            let mesh_spec = MeshSpec::single_chip(tiles)?;
-            let mesh = MeshFloorplan::plan(&mesh_spec, mem, tech)?;
-            rows.push(Row {
-                topo: "mesh",
-                tiles,
-                mem_kb: mem,
-                area_mm2: mesh.area_mm2,
-                economical: mesh.is_economical(tech),
-            });
+            pts.push(PlanPoint { kind: TopologyKind::Clos, tiles, mem_kb: mem });
+            pts.push(PlanPoint { kind: TopologyKind::Mesh, tiles, mem_kb: mem });
         }
     }
-    Ok(rows)
+    pts
+}
+
+/// Generate the Fig 5 dataset on a shared sweep engine (figs 5 and 6
+/// share the single-chip floorplan cache).
+pub fn generate_with(engine: &ParallelSweep) -> Result<Vec<Row>> {
+    let plans = engine.eval_plans(&plan_points())?;
+    Ok(plans
+        .iter()
+        .map(|p| Row {
+            topo: topo_str(p.point.kind),
+            tiles: p.point.tiles,
+            mem_kb: p.point.mem_kb,
+            area_mm2: p.area_mm2,
+            economical: p.economical,
+        })
+        .collect())
+}
+
+/// Generate the Fig 5 dataset (standalone: a fresh engine).
+pub fn generate(tech: &ChipTech) -> Result<Vec<Row>> {
+    let tech = Tech { chip: tech.clone(), ..Tech::default() };
+    generate_with(&ParallelSweep::with_defaults(Mode::Exact, &tech))
+}
+
+/// Full numeric output for the golden harness.
+pub fn report(rows: &[Row]) -> Report {
+    let mut rep = Report::new("fig5");
+    for r in rows {
+        rep.push(
+            crate::api::Row::new(&format!("{}-{}t-{}KB", r.topo, r.tiles, r.mem_kb))
+                .int("tiles", r.tiles as u64)
+                .int("mem_kb", r.mem_kb as u64)
+                .num("area_mm2", r.area_mm2)
+                .int("economical", r.economical as u64),
+        );
+    }
+    rep
 }
 
 /// Render the dataset as a table + the paper's log-linear plot.

@@ -3,11 +3,13 @@
 
 use anyhow::Result;
 
+use super::topo_str;
+use crate::api::{Mode, Report, Tech};
+use crate::coordinator::{ParallelSweep, PlanPoint};
+use crate::emulation::TopologyKind;
 use crate::tech::ChipTech;
-use crate::topology::{ClosSpec, MeshSpec};
 use crate::util::plot::Plot;
 use crate::util::table::{f, Table};
-use crate::vlsi::{ClosFloorplan, MeshFloorplan};
 
 /// One data point.
 #[derive(Clone, Copy, Debug)]
@@ -27,30 +29,52 @@ pub struct Row {
 /// Tile memory used by the figure.
 pub const MEM_KB: u32 = 256;
 
-/// Generate the Fig 6 dataset.
-pub fn generate(tech: &ChipTech) -> Result<Vec<Row>> {
-    let mut rows = Vec::new();
+/// The figure's plan grid: the fig 5 tile points at 256 KB, both
+/// topologies. Every point here is already in fig 5's grid, so on a
+/// shared engine this figure is served entirely from the plan cache.
+pub fn plan_points() -> Vec<PlanPoint> {
+    let mut pts = Vec::new();
     for &tiles in super::fig5::TILE_POINTS {
-        let spec = ClosSpec { tiles, tiles_per_chip: tiles.max(256), ..ClosSpec::default() };
-        let c = ClosFloorplan::plan(&spec, MEM_KB, tech)?;
-        rows.push(Row {
-            topo: "clos",
-            tiles,
-            switch_pct: 100.0 * c.switch_area_mm2 / c.area_mm2,
-            wire_pct: 100.0 * c.wire_area_mm2 / c.area_mm2,
-            io_pct: 100.0 * c.io_area_mm2 / c.area_mm2,
-        });
-        let mspec = MeshSpec::single_chip(tiles)?;
-        let m = MeshFloorplan::plan(&mspec, MEM_KB, tech)?;
-        rows.push(Row {
-            topo: "mesh",
-            tiles,
-            switch_pct: 100.0 * m.switch_area_mm2 / m.area_mm2,
-            wire_pct: 100.0 * m.wire_area_mm2 / m.area_mm2,
-            io_pct: 100.0 * m.io_area_mm2 / m.area_mm2,
-        });
+        pts.push(PlanPoint { kind: TopologyKind::Clos, tiles, mem_kb: MEM_KB });
+        pts.push(PlanPoint { kind: TopologyKind::Mesh, tiles, mem_kb: MEM_KB });
     }
-    Ok(rows)
+    pts
+}
+
+/// Generate the Fig 6 dataset on a shared sweep engine.
+pub fn generate_with(engine: &ParallelSweep) -> Result<Vec<Row>> {
+    let plans = engine.eval_plans(&plan_points())?;
+    Ok(plans
+        .iter()
+        .map(|p| Row {
+            topo: topo_str(p.point.kind),
+            tiles: p.point.tiles,
+            switch_pct: 100.0 * p.switch_area_mm2 / p.area_mm2,
+            wire_pct: 100.0 * p.wire_area_mm2 / p.area_mm2,
+            io_pct: 100.0 * p.io_area_mm2 / p.area_mm2,
+        })
+        .collect())
+}
+
+/// Generate the Fig 6 dataset (standalone: a fresh engine).
+pub fn generate(tech: &ChipTech) -> Result<Vec<Row>> {
+    let tech = Tech { chip: tech.clone(), ..Tech::default() };
+    generate_with(&ParallelSweep::with_defaults(Mode::Exact, &tech))
+}
+
+/// Full numeric output for the golden harness.
+pub fn report(rows: &[Row]) -> Report {
+    let mut rep = Report::new("fig6");
+    for r in rows {
+        rep.push(
+            crate::api::Row::new(&format!("{}-{}t", r.topo, r.tiles))
+                .int("tiles", r.tiles as u64)
+                .num("switch_pct", r.switch_pct)
+                .num("wire_pct", r.wire_pct)
+                .num("io_pct", r.io_pct),
+        );
+    }
+    rep
 }
 
 /// Render the dataset.

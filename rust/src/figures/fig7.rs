@@ -2,6 +2,8 @@
 
 use anyhow::Result;
 
+use crate::api::{Mode, Report, Tech};
+use crate::coordinator::ParallelSweep;
 use crate::tech::{ChipTech, InterposerTech};
 use crate::topology::{ClosSpec, MeshSpec};
 use crate::util::plot::Plot;
@@ -30,42 +32,76 @@ pub struct Row {
 /// Chip counts plotted.
 pub const CHIP_POINTS: &[usize] = &[2, 4, 8, 16];
 
-/// Generate the Fig 7 dataset.
-pub fn generate(chip_tech: &ChipTech, ip_tech: &InterposerTech) -> Result<Vec<Row>> {
-    let mut rows = Vec::new();
+/// Generate the Fig 7 dataset on a shared sweep engine: interposer
+/// plans fan out across the worker pool, reassembled in the figure's
+/// render order (pure floorplan arithmetic, so any `--jobs` count is
+/// bit-identical).
+pub fn generate_with(engine: &ParallelSweep) -> Result<Vec<Row>> {
+    let chip_tech = &engine.tech().chip;
+    let ip_tech = &engine.tech().ip;
+    let mut items: Vec<(u32, usize)> = Vec::new();
     for &mem in &[64u32, 128] {
         for &chips in CHIP_POINTS {
-            let tiles = chips * 256;
-            let cspec = ClosSpec::with_tiles(tiles);
-            let cfp = ClosFloorplan::plan(&cspec, mem, chip_tech)?;
-            let cip = InterposerPlan::clos(chips, &cfp, ip_tech)?;
+            items.push((mem, chips));
+        }
+    }
+    let nested = engine.map(&items, |&(mem, chips)| {
+        let tiles = chips * 256;
+        let mut rows = Vec::with_capacity(2);
+        let cspec = ClosSpec::with_tiles(tiles);
+        let cfp = ClosFloorplan::plan(&cspec, mem, chip_tech)?;
+        let cip = InterposerPlan::clos(chips, &cfp, ip_tech)?;
+        rows.push(Row {
+            topo: "clos",
+            chips,
+            mem_kb: mem,
+            tiles,
+            interposer_mm2: cip.area_mm2,
+            channel_pct: 100.0 * cip.channel_fraction(),
+            wire_delay_ns: (cip.wire_delay_min_ns, cip.wire_delay_max_ns),
+        });
+        // Mesh systems must form square chip grids.
+        if (chips as f64).sqrt().fract() == 0.0 {
+            let mspec = MeshSpec::with_tiles(tiles);
+            let mfp = MeshFloorplan::plan(&mspec, mem, chip_tech)?;
+            let mip = InterposerPlan::mesh(chips, &mfp, ip_tech)?;
             rows.push(Row {
-                topo: "clos",
+                topo: "mesh",
                 chips,
                 mem_kb: mem,
                 tiles,
-                interposer_mm2: cip.area_mm2,
-                channel_pct: 100.0 * cip.channel_fraction(),
-                wire_delay_ns: (cip.wire_delay_min_ns, cip.wire_delay_max_ns),
+                interposer_mm2: mip.area_mm2,
+                channel_pct: 0.0,
+                wire_delay_ns: (mip.wire_delay_min_ns, mip.wire_delay_max_ns),
             });
-            // Mesh systems must form square chip grids.
-            if (chips as f64).sqrt().fract() == 0.0 {
-                let mspec = MeshSpec::with_tiles(tiles);
-                let mfp = MeshFloorplan::plan(&mspec, mem, chip_tech)?;
-                let mip = InterposerPlan::mesh(chips, &mfp, ip_tech)?;
-                rows.push(Row {
-                    topo: "mesh",
-                    chips,
-                    mem_kb: mem,
-                    tiles,
-                    interposer_mm2: mip.area_mm2,
-                    channel_pct: 0.0,
-                    wire_delay_ns: (mip.wire_delay_min_ns, mip.wire_delay_max_ns),
-                });
-            }
         }
+        Ok(rows)
+    })?;
+    Ok(nested.into_iter().flatten().collect())
+}
+
+/// Generate the Fig 7 dataset (standalone: a fresh engine).
+pub fn generate(chip_tech: &ChipTech, ip_tech: &InterposerTech) -> Result<Vec<Row>> {
+    let tech = Tech { chip: chip_tech.clone(), ip: ip_tech.clone(), ..Tech::default() };
+    generate_with(&ParallelSweep::with_defaults(Mode::Exact, &tech))
+}
+
+/// Full numeric output for the golden harness.
+pub fn report(rows: &[Row]) -> Report {
+    let mut rep = Report::new("fig7");
+    for r in rows {
+        rep.push(
+            crate::api::Row::new(&format!("{}-{}chips-{}KB", r.topo, r.chips, r.mem_kb))
+                .int("chips", r.chips as u64)
+                .int("mem_kb", r.mem_kb as u64)
+                .int("tiles", r.tiles as u64)
+                .num("interposer_mm2", r.interposer_mm2)
+                .num("channel_pct", r.channel_pct)
+                .num("wire_delay_min_ns", r.wire_delay_ns.0)
+                .num("wire_delay_max_ns", r.wire_delay_ns.1),
+        );
     }
-    Ok(rows)
+    rep
 }
 
 /// Render the dataset.

@@ -3,8 +3,9 @@
 
 use anyhow::Result;
 
-use super::FigOpts;
-use crate::coordinator::{run_sweep, SweepPoint};
+use super::{topo_str, FigOpts};
+use crate::api::Report;
+use crate::coordinator::{ParallelSweep, SweepPoint};
 use crate::emulation::{SequentialMachine, TopologyKind};
 use crate::util::plot::Plot;
 use crate::util::table::{f, Table};
@@ -47,8 +48,10 @@ pub fn k_points(system: usize) -> Vec<usize> {
     ks
 }
 
-/// Generate the Fig 9 dataset.
-pub fn generate(opts: &FigOpts) -> Result<Fig9> {
+/// The figure's latency sweep, in generation order. Fig 10 sweeps the
+/// same points, so on a shared engine its analytic rows are served
+/// entirely from the result cache.
+pub fn sweep_points() -> Vec<SweepPoint> {
     let mut points = Vec::new();
     for &system in SYSTEMS {
         for kind in [TopologyKind::Clos, TopologyKind::Mesh] {
@@ -57,15 +60,17 @@ pub fn generate(opts: &FigOpts) -> Result<Fig9> {
             }
         }
     }
-    let results = run_sweep(&points, opts.mode, &opts.tech, opts.workers, opts.seed)?;
+    points
+}
+
+/// Generate the Fig 9 dataset on a shared sweep engine.
+pub fn generate_with(engine: &ParallelSweep) -> Result<Fig9> {
+    let results = engine.eval_points(&sweep_points())?;
     let mut rows: Vec<Row> = results
         .iter()
         .map(|r| Row {
             system: r.point.tiles,
-            topo: match r.point.kind {
-                TopologyKind::Clos => "clos",
-                TopologyKind::Mesh => "mesh",
-            },
+            topo: topo_str(r.point.kind),
             k: r.point.k,
             latency_ns: r.mean_cycles,
         })
@@ -73,6 +78,27 @@ pub fn generate(opts: &FigOpts) -> Result<Fig9> {
     rows.sort_by_key(|r| (r.system, r.topo, r.k));
     let ddr3_ns = SequentialMachine::with_measured_dram(1).dram_ns;
     Ok(Fig9 { rows, ddr3_ns })
+}
+
+/// Generate the Fig 9 dataset (standalone: a fresh engine).
+pub fn generate(opts: &FigOpts) -> Result<Fig9> {
+    generate_with(&opts.engine())
+}
+
+/// Full numeric output for the golden harness.
+pub fn report(fig: &Fig9) -> Report {
+    let mut rep = Report::new("fig9");
+    rep.push(crate::api::Row::new("ddr3-baseline").num("latency_ns", fig.ddr3_ns));
+    for r in &fig.rows {
+        rep.push(
+            crate::api::Row::new(&format!("{}-{}t-k{}", r.topo, r.system, r.k))
+                .int("system", r.system as u64)
+                .int("k", r.k as u64)
+                .num("latency_ns", r.latency_ns)
+                .num("vs_ddr3", r.latency_ns / fig.ddr3_ns),
+        );
+    }
+    rep
 }
 
 /// Render the dataset.

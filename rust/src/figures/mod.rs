@@ -1,7 +1,9 @@
 //! Generators for every table and figure in the paper's evaluation
 //! (§5.1, §7). Each module produces the data rows (used by the benches
-//! and tests) and renders them as an ASCII table + plot matching the
-//! paper's axes.
+//! and tests), renders them as an ASCII table + plot matching the
+//! paper's axes, and emits its full numeric output as a machine-
+//! diffable [`Report`] — the documents the golden harness
+//! (`tests/golden_figures.rs`) pins.
 //!
 //! | module | reproduces |
 //! |--------|------------|
@@ -16,6 +18,13 @@
 //! | [`ablations`] | design-choice ablations (route-open, clock, switch degree, eDRAM) |
 //! | [`hotpath`] | (not in the paper) the repo's own access-hot-path perf trajectory |
 //! | [`interp_bench`] | (not in the paper) decoded-vs-legacy interpreter perf trajectory |
+//!
+//! Every evaluating figure runs on the [`ParallelSweep`] engine. A
+//! figure invoked standalone builds a fresh engine from its [`FigOpts`];
+//! `memclos figures --all` (and the golden harness) build ONE engine and
+//! pass it to every `generate_with`, so the memoizing result cache pays
+//! off across figures — figs 9/10/11 share their latency sweep points,
+//! figs 5/6 share their single-chip floorplans.
 
 pub mod ablations;
 pub mod binary_size;
@@ -29,8 +38,12 @@ pub mod hotpath;
 pub mod interp_bench;
 pub mod tables;
 
-use crate::api::{Mode, Tech};
+use anyhow::Result;
+
+use crate::api::{Mode, Report, Tech};
 use crate::config::Doc;
+use crate::coordinator::{default_jobs, ParallelSweep};
+use crate::emulation::TopologyKind;
 
 /// Shared options for figure generation: backend selection, sweep
 /// parallelism and the technology bundle every design point is built
@@ -39,8 +52,8 @@ use crate::config::Doc;
 pub struct FigOpts {
     /// Evaluation mode for latency points.
     pub mode: Mode,
-    /// Worker threads for sweeps.
-    pub workers: usize,
+    /// Worker threads for sweeps (1 forces the sequential oracle).
+    pub jobs: usize,
     /// Base seed.
     pub seed: u64,
     /// Technology/model parameters (Tables 1, 2 and 5).
@@ -49,8 +62,7 @@ pub struct FigOpts {
 
 impl Default for FigOpts {
     fn default() -> Self {
-        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-        Self { mode: Mode::Exact, workers, seed: 0xC105, tech: Tech::default() }
+        Self { mode: Mode::Exact, jobs: default_jobs(), seed: 0xC105, tech: Tech::default() }
     }
 }
 
@@ -65,4 +77,36 @@ impl FigOpts {
     pub fn from_doc(doc: &Doc) -> Self {
         Self { tech: Tech::from_doc(doc), ..Self::default() }
     }
+
+    /// The sweep engine these options describe. Build it once and share
+    /// it across figures to share the result caches.
+    pub fn engine(&self) -> ParallelSweep {
+        ParallelSweep::new(self.mode, &self.tech, self.jobs, self.seed)
+    }
+}
+
+/// Topology label used across the figure datasets.
+pub fn topo_str(kind: TopologyKind) -> &'static str {
+    match kind {
+        TopologyKind::Clos => "clos",
+        TopologyKind::Mesh => "mesh",
+    }
+}
+
+/// Every figure's and table's full numeric output as machine-diffable
+/// [`Report`]s, generated through ONE shared engine — exactly the
+/// documents the golden harness pins and `memclos figures --all --json`
+/// emits. (The perf-trajectory extras `hotpath`/`interp_bench` are
+/// wall-clock measurements and deliberately not part of this set.)
+pub fn all_reports(engine: &ParallelSweep) -> Result<Vec<Report>> {
+    let mut out = tables::reports(engine.tech());
+    out.push(fig5::report(&fig5::generate_with(engine)?));
+    out.push(fig6::report(&fig6::generate_with(engine)?));
+    out.push(fig7::report(&fig7::generate_with(engine)?));
+    out.push(fig9::report(&fig9::generate_with(engine)?));
+    out.push(fig10::report(&fig10::generate_with(engine)?));
+    out.push(fig11::report(&fig11::generate_with(engine)?));
+    out.push(binary_size::report(&binary_size::generate()?));
+    out.push(ablations::report(&ablations::generate_with(engine)?));
+    Ok(out)
 }

@@ -126,6 +126,18 @@ pub fn table5(p: &NetParams) -> Table {
     t
 }
 
+/// All five tables as machine-diffable [`Report`](crate::api::Report)s
+/// (the golden harness pins these alongside the figure reports).
+pub fn reports(tech: &crate::api::Tech) -> Vec<crate::api::Report> {
+    vec![
+        table1(&tech.chip).to_report("table1"),
+        table2(&tech.ip).to_report("table2"),
+        table3().to_report("table3"),
+        table4().to_report("table4"),
+        table5(&tech.net).to_report("table5"),
+    ]
+}
+
 /// All five tables rendered from a technology bundle (so
 /// `--set`/`--config` overrides show up in the regenerated tables).
 pub fn render_all(tech: &crate::api::Tech) -> String {

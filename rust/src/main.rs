@@ -4,18 +4,20 @@
 //! Every table and figure of the paper has a subcommand; `selfcheck`
 //! proves the XLA artifact and the native model agree bit-for-bit.
 //!
-//! All commands build design points and evaluate latency through
-//! [`memclos::api`]: [`DesignPoint`] (paper defaults + `--set`/
-//! `--config` overrides + CLI flags, in that precedence order) and
-//! [`Evaluator`] (backend selection via `--mode`).
+//! All commands build design points through [`memclos::api`]'s
+//! [`DesignPoint`] builder (paper defaults + `--set`/`--config`
+//! overrides + CLI flags, in that precedence order) and evaluate
+//! latency on the [`memclos::coordinator`] sweep engine (backend via
+//! `--mode`, parallelism via `--jobs`; any job count is bit-identical
+//! to the sequential oracle).
 
 use anyhow::{bail, Context, Result};
 
-use memclos::api::{DesignPoint, Evaluator, Mode, Report, Row, Tech, XlaBackend};
+use memclos::api::{DesignPoint, Mode, Report, Row, Tech, XlaBackend};
 use memclos::cc::{compile, Backend};
 use memclos::cli::Args;
 use memclos::config::{self, Doc};
-use memclos::coordinator::{run_sweep, SweepPoint};
+use memclos::coordinator::{default_jobs, SweepPoint};
 use memclos::dram::{measure_random_latency, DramConfig};
 use memclos::emulation::{SequentialMachine, TopologyKind};
 use memclos::figures::{self, FigOpts};
@@ -33,6 +35,11 @@ USAGE: memclos <command> [options]
 COMMANDS
   tables [--which 1..5]         regenerate the paper's parameter tables
   figure <5|6|7|9|10|11|bsize|ablations>  regenerate a figure / extension
+  figures --all [--jobs N]      regenerate EVERY table and figure on one
+                                shared sweep engine (repeated design
+                                points evaluated once); --json emits the
+                                machine-diffable reports the golden
+                                harness pins, --out DIR writes them
   dram [--ranks N]              measure DDR3 random-access latency
   area --topo clos|mesh [--tiles N --mem KB]   floorplan one chip
   latency [--topo ... --tiles N --mem KB --k N]
@@ -59,7 +66,10 @@ COMMON OPTIONS
   --mode auto|exact|native|xla|des   evaluation backend (see above)
   --samples N                   Monte-Carlo samples (default 65536)
   --batch N                     XLA artifact batch size (default 16384)
-  --workers N                   sweep worker threads (default 4)
+  --jobs N                      sweep worker threads (default: available
+                                parallelism; 1 forces the sequential
+                                oracle — bit-identical output either
+                                way; --workers is an alias)
   --seed N                      RNG seed
   --set key=value               config override (repeatable); system.*,
                                 net.*, chip.*, interposer.* reach every
@@ -88,12 +98,11 @@ fn eval_mode(args: &Args) -> Result<Mode> {
 }
 
 fn fig_opts(args: &Args, doc: &Doc) -> Result<FigOpts> {
+    // `--jobs` is the flag; `--workers` survives as an alias.
+    let workers: usize = args.get("workers", default_jobs())?;
     Ok(FigOpts {
         mode: eval_mode(args)?,
-        workers: args.get(
-            "workers",
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
-        )?,
+        jobs: args.get("jobs", workers)?,
         seed: args.get("seed", 0xC105)?,
         tech: Tech::from_doc(doc),
     })
@@ -163,25 +172,76 @@ fn run(raw: Vec<String>) -> Result<()> {
         "figure" => {
             let which = args.positional.first().context("figure number required")?;
             let opts = fig_opts(&args, &doc)?;
+            let engine = opts.engine();
             match which.as_str() {
                 "5" => print!(
                     "{}",
-                    figures::fig5::render(&figures::fig5::generate(&opts.tech.chip)?, &opts.tech.chip)
+                    figures::fig5::render(&figures::fig5::generate_with(&engine)?, &opts.tech.chip)
                 ),
-                "6" => print!("{}", figures::fig6::render(&figures::fig6::generate(&opts.tech.chip)?)),
-                "7" => print!(
-                    "{}",
-                    figures::fig7::render(&figures::fig7::generate(&opts.tech.chip, &opts.tech.ip)?)
-                ),
-                "9" => print!("{}", figures::fig9::render(&figures::fig9::generate(&opts)?)),
-                "10" => print!("{}", figures::fig10::render(&figures::fig10::generate(&opts)?)),
-                "11" => print!("{}", figures::fig11::render(&figures::fig11::generate(&opts)?)),
+                "6" => print!("{}", figures::fig6::render(&figures::fig6::generate_with(&engine)?)),
+                "7" => print!("{}", figures::fig7::render(&figures::fig7::generate_with(&engine)?)),
+                "9" => print!("{}", figures::fig9::render(&figures::fig9::generate_with(&engine)?)),
+                "10" => print!("{}", figures::fig10::render(&figures::fig10::generate_with(&engine)?)),
+                "11" => print!("{}", figures::fig11::render(&figures::fig11::generate_with(&engine)?)),
                 "bsize" => print!("{}", figures::binary_size::render(&figures::binary_size::generate()?)),
                 "ablations" => {
-                    print!("{}", figures::ablations::render(&figures::ablations::generate(&opts.tech)?))
+                    print!("{}", figures::ablations::render(&figures::ablations::generate_with(&engine)?))
                 }
                 o => bail!("no figure {o} (5|6|7|9|10|11|bsize|ablations)"),
             }
+        }
+        "figures" => {
+            // The scenario-diversity payoff of the sweep engine: one
+            // invocation regenerates the paper's entire evaluation on
+            // one shared engine, so design points repeated across
+            // figures (figs 9/10/11 share their sweeps, figs 5/6 their
+            // floorplans) are evaluated once.
+            if let Some(p) = args.positional.first() {
+                bail!("`figures` takes no figure number (did you mean `figure {p}`?)");
+            }
+            if !args.has("all") {
+                bail!("`figures` regenerates everything — confirm with `figures --all`");
+            }
+            let opts = fig_opts(&args, &doc)?;
+            let engine = opts.engine();
+            if args.has("json") || args.flag("out").is_some() {
+                let reports = figures::all_reports(&engine)?;
+                if let Some(dir) = args.flag("out") {
+                    let dir = std::path::Path::new(dir);
+                    std::fs::create_dir_all(dir)
+                        .with_context(|| format!("creating {}", dir.display()))?;
+                    for r in &reports {
+                        let path = dir.join(format!("{}.json", r.bench()));
+                        r.write(&path).with_context(|| format!("writing {}", path.display()))?;
+                    }
+                    eprintln!("wrote {} reports to {}", reports.len(), dir.display());
+                }
+                if args.has("json") {
+                    for r in &reports {
+                        print!("{}", r.render());
+                    }
+                }
+            } else {
+                print!("{}", figures::tables::render_all(&opts.tech));
+                print!(
+                    "{}",
+                    figures::fig5::render(&figures::fig5::generate_with(&engine)?, &opts.tech.chip)
+                );
+                print!("{}", figures::fig6::render(&figures::fig6::generate_with(&engine)?));
+                print!("{}", figures::fig7::render(&figures::fig7::generate_with(&engine)?));
+                print!("{}", figures::fig9::render(&figures::fig9::generate_with(&engine)?));
+                print!("{}", figures::fig10::render(&figures::fig10::generate_with(&engine)?));
+                print!("{}", figures::fig11::render(&figures::fig11::generate_with(&engine)?));
+                print!("{}", figures::binary_size::render(&figures::binary_size::generate()?));
+                print!("{}", figures::ablations::render(&figures::ablations::generate_with(&engine)?));
+            }
+            let cs = engine.cache_stats();
+            eprintln!(
+                "sweep engine: {} jobs, {} evaluations, {} cache hits",
+                engine.jobs(),
+                cs.misses,
+                cs.hits
+            );
         }
         "dram" => {
             let ranks: usize = args.get("ranks", 1)?;
@@ -233,8 +293,13 @@ fn run(raw: Vec<String>) -> Result<()> {
             let (tiles, mem, k) = (setup.map.tiles, setup.mem_kb, setup.map.k);
             let exact = setup.expected_latency();
             let seq = SequentialMachine::with_measured_dram(1);
-            let evaluator = Evaluator::new(eval_mode(&args)?)?;
-            let eval = evaluator.evaluate(&setup, &evaluator.stream(args.get("seed", 1u64)?))?;
+            // One-point sweep through the engine: same path as `sweep`
+            // and the figures, so `--jobs 1` vs `--jobs N` is
+            // bit-identical by construction.
+            let opts = fig_opts(&args, &doc)?;
+            let engine = opts.engine();
+            let point = SweepPoint { kind: dp.kind(), tiles, mem_kb: mem, k };
+            let eval = engine.eval_points(&[point])?[0];
             let name = format!("{}-{tiles}x{mem}-k{k}", kind_str(dp.kind()));
             if args.has("json") {
                 let mut report = Report::new("latency");
@@ -324,7 +389,12 @@ fn run(raw: Vec<String>) -> Result<()> {
             let accesses: usize = args.get("samples", 500)?;
             let dp = design_point(&args, &doc, 256, None)?;
             let setup = dp.build()?;
-            let r = run_contention(&setup, clients, accesses, args.get("seed", 5)?);
+            let seed: u64 = args.get("seed", 5)?;
+            // A contention run is ONE causally-dependent DES timeline —
+            // inherently sequential, fully determined by its seed.
+            // `--jobs` is accepted for CLI uniformity but has nothing
+            // to parallelise here.
+            let r = run_contention(&setup, clients, accesses, seed);
             if args.has("json") {
                 let mut report = Report::new("contention");
                 report.push(
@@ -388,7 +458,8 @@ fn run(raw: Vec<String>) -> Result<()> {
             }
             points.push(SweepPoint { kind, tiles, mem_kb: mem, k: tiles - 1 });
             let opts = fig_opts(&args, &doc)?;
-            let mut results = run_sweep(&points, opts.mode, &opts.tech, opts.workers, opts.seed)?;
+            let engine = opts.engine();
+            let mut results = engine.eval_points(&points)?;
             results.sort_by_key(|r| r.point.k);
             if args.has("json") {
                 let mut report = Report::new("sweep");

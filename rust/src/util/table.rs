@@ -123,6 +123,22 @@ impl Table {
         out
     }
 
+    /// The table as a machine-diffable [`Report`](crate::api::Report):
+    /// one JSON row per data row, the first column as the row name and
+    /// the remaining cells keyed by their column headers. The golden
+    /// harness pins the paper's tables through this.
+    pub fn to_report(&self, bench: &str) -> crate::api::Report {
+        let mut rep = crate::api::Report::new(bench);
+        for cells in &self.rows {
+            let mut row = crate::api::Row::new(&cells[0]);
+            for (header, cell) in self.headers.iter().zip(cells.iter()).skip(1) {
+                row = row.str(header, cell);
+            }
+            rep.push(row);
+        }
+        rep
+    }
+
     /// Render as tab-separated values (for plotting tools).
     pub fn render_tsv(&self) -> String {
         let mut out = String::new();

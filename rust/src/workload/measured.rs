@@ -17,6 +17,7 @@ use anyhow::{ensure, Context, Result};
 
 use crate::cc::codegen::{compile, Backend};
 use crate::cc::corpus;
+use crate::coordinator::ParallelSweep;
 use crate::emulation::{EmulationSetup, SequentialMachine};
 use crate::isa::decode::{predecode, DecodedProgram, FastMachine};
 use crate::isa::inst::Inst;
@@ -78,54 +79,78 @@ impl CompiledCorpus {
         Ok(Self { programs })
     }
 
-    /// Run the whole corpus on both machines for one design point.
-    /// Verifies results (backends agree; pinned `expected` values hold)
-    /// and that the emulation is never charged fewer cycles than the
-    /// 1-cycle-per-instruction floor implies.
+    /// Run one corpus program (by index) on both machines for one
+    /// design point — the unit of work the parallel sweep engine maps
+    /// over. Verifies results (backends agree; pinned `expected` values
+    /// hold). Fresh memories per call, integer cycle accounting: the
+    /// outcome is a pure function of `(index, setup, seq)`, so parallel
+    /// fan-out reproduces the sequential loop bit for bit.
+    pub fn measure_one(
+        &self,
+        index: usize,
+        setup: &EmulationSetup,
+        seq: SequentialMachine,
+    ) -> Result<MeasuredRun> {
+        let p = &self.programs[index];
+        let mut dmem = DirectMemory::new(seq, DIRECT_SPACE_WORDS);
+        let mut dm = FastMachine::new(&mut dmem, LOCAL_WORDS);
+        let direct = dm.run(&p.direct).with_context(|| format!("running {} (direct)", p.name))?;
+        let direct_result = dm.reg(0);
+
+        let mut emem = EmulatedChannelMemory::new(setup.clone());
+        let mut em = FastMachine::new(&mut emem, LOCAL_WORDS);
+        let emulated =
+            em.run(&p.emulated).with_context(|| format!("running {} (emulated)", p.name))?;
+        let emulated_result = em.reg(0);
+
+        ensure!(
+            direct_result == emulated_result,
+            "{}: machines disagree ({direct_result} vs {emulated_result})",
+            p.name
+        );
+        if let Some(want) = p.expected {
+            ensure!(
+                direct_result == want,
+                "{}: wrong result {direct_result} (expected {want})",
+                p.name
+            );
+        }
+        Ok(MeasuredRun {
+            name: p.name,
+            expected: p.expected,
+            direct_result,
+            emulated_result,
+            direct,
+            emulated,
+        })
+    }
+
+    /// Run the whole corpus on both machines for one design point, in
+    /// corpus order on the calling thread (the sequential oracle for
+    /// [`CompiledCorpus::measure_with`]).
     pub fn measure(
         &self,
         setup: &EmulationSetup,
         seq: SequentialMachine,
     ) -> Result<CorpusMeasurement> {
-        let mut runs = Vec::with_capacity(self.programs.len());
-        let mut direct_cycles = 0u64;
-        let mut emulated_cycles = 0u64;
-        for p in &self.programs {
-            let mut dmem = DirectMemory::new(seq, DIRECT_SPACE_WORDS);
-            let mut dm = FastMachine::new(&mut dmem, LOCAL_WORDS);
-            let direct = dm.run(&p.direct).with_context(|| format!("running {} (direct)", p.name))?;
-            let direct_result = dm.reg(0);
+        let runs: Vec<MeasuredRun> = (0..self.programs.len())
+            .map(|i| self.measure_one(i, setup, seq))
+            .collect::<Result<_>>()?;
+        Ok(CorpusMeasurement::from_runs(runs))
+    }
 
-            let mut emem = EmulatedChannelMemory::new(setup.clone());
-            let mut em = FastMachine::new(&mut emem, LOCAL_WORDS);
-            let emulated =
-                em.run(&p.emulated).with_context(|| format!("running {} (emulated)", p.name))?;
-            let emulated_result = em.reg(0);
-
-            ensure!(
-                direct_result == emulated_result,
-                "{}: machines disagree ({direct_result} vs {emulated_result})",
-                p.name
-            );
-            if let Some(want) = p.expected {
-                ensure!(
-                    direct_result == want,
-                    "{}: wrong result {direct_result} (expected {want})",
-                    p.name
-                );
-            }
-            direct_cycles += direct.cycles;
-            emulated_cycles += emulated.cycles;
-            runs.push(MeasuredRun {
-                name: p.name,
-                expected: p.expected,
-                direct_result,
-                emulated_result,
-                direct,
-                emulated,
-            });
-        }
-        Ok(CorpusMeasurement { runs, direct_cycles, emulated_cycles })
+    /// Like [`CompiledCorpus::measure`], but programs fan out across a
+    /// [`ParallelSweep`] worker pool, reassembled in corpus order —
+    /// output identical to the sequential loop at any job count.
+    pub fn measure_with(
+        &self,
+        engine: &ParallelSweep,
+        setup: &EmulationSetup,
+        seq: SequentialMachine,
+    ) -> Result<CorpusMeasurement> {
+        let idxs: Vec<usize> = (0..self.programs.len()).collect();
+        let runs = engine.map(&idxs, |&i| self.measure_one(i, setup, seq))?;
+        Ok(CorpusMeasurement::from_runs(runs))
     }
 }
 
@@ -165,6 +190,17 @@ pub struct CorpusMeasurement {
 }
 
 impl CorpusMeasurement {
+    /// Aggregate per-program runs (in corpus order) into a measurement
+    /// — the one place the cycle-weighted totals are defined (parallel
+    /// callers that fan out [`CompiledCorpus::measure_one`] themselves
+    /// reassemble through this, so the aggregate can never drift from
+    /// [`CorpusMeasurement::slowdown`]).
+    pub fn from_runs(runs: Vec<MeasuredRun>) -> Self {
+        let direct_cycles = runs.iter().map(|r| r.direct.cycles).sum();
+        let emulated_cycles = runs.iter().map(|r| r.emulated.cycles).sum();
+        Self { runs, direct_cycles, emulated_cycles }
+    }
+
     /// Aggregate measured slowdown (cycle-weighted over the corpus).
     pub fn slowdown(&self) -> f64 {
         self.emulated_cycles as f64 / self.direct_cycles.max(1) as f64
@@ -194,5 +230,27 @@ mod tests {
         }
         let sd = m.slowdown();
         assert!(sd > 0.5 && sd < 6.0, "aggregate slowdown {sd}");
+    }
+
+    #[test]
+    fn parallel_measure_matches_sequential_exactly() {
+        use crate::api::{Mode, Tech};
+        let corpus = CompiledCorpus::compile().unwrap();
+        let setup = EmulationSetup::default_tech(TopologyKind::Clos, 1024, 128, 255).unwrap();
+        let seq = SequentialMachine::paper_figures(false);
+        let serial = corpus.measure(&setup, seq).unwrap();
+        for jobs in [1usize, 4] {
+            let engine = ParallelSweep::new(Mode::Exact, &Tech::default(), jobs, 0);
+            let par = corpus.measure_with(&engine, &setup, seq).unwrap();
+            assert_eq!(par.direct_cycles, serial.direct_cycles, "jobs={jobs}");
+            assert_eq!(par.emulated_cycles, serial.emulated_cycles, "jobs={jobs}");
+            assert_eq!(par.runs.len(), serial.runs.len());
+            for (a, b) in par.runs.iter().zip(&serial.runs) {
+                assert_eq!(a.name, b.name, "corpus order preserved");
+                assert_eq!(a.direct, b.direct, "{}", a.name);
+                assert_eq!(a.emulated, b.emulated, "{}", a.name);
+                assert_eq!(a.direct_result, b.direct_result);
+            }
+        }
     }
 }

@@ -1,0 +1,197 @@
+//! Concurrency tests for the sweep engine's building blocks:
+//!
+//! * `coordinator::WorkQueue` — multi-producer/multi-consumer stress
+//!   (no lost or duplicated items), close-while-popping semantics, and
+//!   close racing producers.
+//! * `coordinator::ParallelSweep` — the determinism property: random
+//!   point sets produce bit-identical results at `--jobs 1` and
+//!   `--jobs 8`, and both match the sequential oracle `run_sweep_seq`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use memclos::api::{Mode, Tech};
+use memclos::coordinator::{run_sweep_seq, ParallelSweep, SweepPoint, WorkQueue};
+use memclos::emulation::TopologyKind;
+use memclos::util::prop::{forall, Config};
+use memclos::util::rng::Rng;
+
+#[test]
+fn work_queue_mpmc_stress_no_lost_or_duplicated_items() {
+    const PRODUCERS: u64 = 4;
+    const CONSUMERS: usize = 4;
+    const PER_PRODUCER: u64 = 2_000;
+    // A small capacity forces constant backpressure hand-offs.
+    let q = Arc::new(WorkQueue::<u64>::new(16));
+
+    let producers: Vec<_> = (0..PRODUCERS)
+        .map(|p| {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                for i in 0..PER_PRODUCER {
+                    assert!(q.push(p * PER_PRODUCER + i), "queue closed early");
+                }
+            })
+        })
+        .collect();
+    let consumers: Vec<_> = (0..CONSUMERS)
+        .map(|_| {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(v) = q.pop() {
+                    got.push(v);
+                }
+                got
+            })
+        })
+        .collect();
+
+    for p in producers {
+        p.join().unwrap();
+    }
+    q.close();
+    assert!(q.is_closed());
+    let mut all: Vec<u64> = Vec::new();
+    for c in consumers {
+        all.extend(c.join().unwrap());
+    }
+    // Every pushed value exactly once: no losses, no duplicates.
+    all.sort_unstable();
+    let expected: Vec<u64> = (0..PRODUCERS * PER_PRODUCER).collect();
+    assert_eq!(all, expected);
+    assert!(q.is_empty(), "queue drained");
+}
+
+#[test]
+fn work_queue_close_releases_blocked_consumers() {
+    let q = Arc::new(WorkQueue::<u64>::new(4));
+    // Consumers block on the empty queue...
+    let consumers: Vec<_> = (0..4)
+        .map(|_| {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || q.pop())
+        })
+        .collect();
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    // ...until close() wakes every one of them with None.
+    q.close();
+    for c in consumers {
+        assert_eq!(c.join().unwrap(), None);
+    }
+}
+
+#[test]
+fn work_queue_close_racing_producers_loses_nothing_accepted() {
+    // Producers race a closer: a push that returned true must be
+    // delivered exactly once; a push that returned false is dropped.
+    let q = Arc::new(WorkQueue::<u64>::new(8));
+    let accepted = Arc::new(AtomicU64::new(0));
+
+    let producers: Vec<_> = (0..4u64)
+        .map(|p| {
+            let q = Arc::clone(&q);
+            let accepted = Arc::clone(&accepted);
+            std::thread::spawn(move || {
+                for i in 0..500 {
+                    if q.push(p * 500 + i) {
+                        accepted.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            })
+        })
+        .collect();
+    let consumers: Vec<_> = (0..3)
+        .map(|_| {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(v) = q.pop() {
+                    got.push(v);
+                }
+                got
+            })
+        })
+        .collect();
+    let closer = {
+        let q = Arc::clone(&q);
+        std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            q.close();
+        })
+    };
+
+    closer.join().unwrap();
+    for p in producers {
+        p.join().unwrap();
+    }
+    let mut all: Vec<u64> = Vec::new();
+    for c in consumers {
+        all.extend(c.join().unwrap());
+    }
+    let n = all.len() as u64;
+    all.sort_unstable();
+    all.dedup();
+    assert_eq!(all.len() as u64, n, "duplicated items");
+    assert_eq!(n, accepted.load(Ordering::SeqCst), "accepted != delivered");
+}
+
+/// A random, duplicate-bearing, always-valid point set.
+fn random_points(r: &mut Rng) -> Vec<SweepPoint> {
+    let n = 3 + r.below(18) as usize;
+    let mut points: Vec<SweepPoint> = Vec::with_capacity(n);
+    for _ in 0..n {
+        // ~1 in 3: repeat an earlier point (exercises the memo cache on
+        // the parallel legs; the oracle evaluates it fresh — results
+        // must still agree bitwise, proving the cache is transparent).
+        if !points.is_empty() && r.below(3) == 0 {
+            let dup = points[r.below(points.len() as u64) as usize];
+            points.push(dup);
+            continue;
+        }
+        let kind = if r.below(2) == 0 { TopologyKind::Clos } else { TopologyKind::Mesh };
+        let tiles = *r.choose(&[256usize, 1024]);
+        let mem_kb = *r.choose(&[64u32, 128]);
+        let k = 1 + r.below(tiles as u64 - 1) as usize;
+        points.push(SweepPoint { kind, tiles, mem_kb, k });
+    }
+    points
+}
+
+#[test]
+fn parallel_sweep_determinism_on_random_point_sets() {
+    forall(
+        Config { cases: 10, base_seed: 0xD17 },
+        |r| (random_points(r), r.next_u64()),
+        |(points, seed)| {
+            for mode in [Mode::Exact, Mode::Native { samples: 2_000 }] {
+                let tech = Tech::default();
+                let oracle =
+                    run_sweep_seq(points, mode, &tech, *seed).map_err(|e| e.to_string())?;
+                for jobs in [1usize, 8] {
+                    let par = ParallelSweep::new(mode, &tech, jobs, *seed)
+                        .eval_points(points)
+                        .map_err(|e| e.to_string())?;
+                    if par.len() != oracle.len() {
+                        return Err(format!("{mode:?} jobs={jobs}: length mismatch"));
+                    }
+                    for (i, (a, b)) in oracle.iter().zip(&par).enumerate() {
+                        if a.point != b.point {
+                            return Err(format!("{mode:?} jobs={jobs}: order differs at {i}"));
+                        }
+                        if a.mean_cycles.to_bits() != b.mean_cycles.to_bits()
+                            || a.samples != b.samples
+                            || a.backend != b.backend
+                        {
+                            return Err(format!(
+                                "{mode:?} jobs={jobs}: point {:?} diverges ({} vs {})",
+                                a.point, a.mean_cycles, b.mean_cycles
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -4,8 +4,10 @@
 
 use memclos::cc::{compile, Backend};
 use memclos::config::Doc;
+use memclos::emulation::controller::{expand_load, expand_store};
 use memclos::emulation::{EmulationSetup, SequentialMachine, TopologyKind};
-use memclos::isa::interp::{DirectMemory, Machine};
+use memclos::isa::decode::{predecode, FastMachine};
+use memclos::isa::interp::{DirectMemory, EmulatedChannelMemory, Machine, RunStats};
 use memclos::isa::{decode, Inst};
 use memclos::util::prop::{forall, Config};
 use memclos::util::rng::Rng;
@@ -98,6 +100,203 @@ fn random_inst(r: &mut Rng) -> Inst {
         14 => Inst::Call { target: r.below(60) as u32 },
         _ => Inst::Ret,
     }
+}
+
+const FUZZ_STEPS: u64 = 10_000;
+
+/// Run a program on both interpreters (same step limit, fresh direct
+/// memories); compare outcomes: identical stats on success, identical
+/// error STRINGS on failure.
+fn compare_both(prog: &[Inst]) -> Result<(), String> {
+    let mut lmem = DirectMemory::new(SequentialMachine::paper_figures(false), 1 << 12);
+    let mut legacy = Machine::new(&mut lmem, 64);
+    legacy.max_steps = FUZZ_STEPS;
+    let lres = legacy.run(prog);
+
+    let Ok(decoded) = predecode(prog) else {
+        // Predecoding is strictly *pre*-validation: it may reject
+        // programs the legacy loop would only fault on (or never reach
+        // the fault in) at run time. Reaching this point at all proves
+        // neither path panicked — which is the property here.
+        return Ok(());
+    };
+    let mut fmem = DirectMemory::new(SequentialMachine::paper_figures(false), 1 << 12);
+    let mut fast = FastMachine::new(&mut fmem, 64);
+    fast.max_steps = FUZZ_STEPS;
+    let fres = fast.run(&decoded);
+
+    match (lres, fres) {
+        (Ok(ls), Ok(fs)) => {
+            if ls != fs {
+                return Err(format!("stats diverge: {ls:?} vs {fs:?}"));
+            }
+            for i in 0..16u8 {
+                if legacy.reg(i) != fast.reg(i) {
+                    return Err(format!("r{i} diverges"));
+                }
+            }
+            Ok(())
+        }
+        (Err(le), Err(fe)) => {
+            let (le, fe) = (le.to_string(), fe.to_string());
+            if le != fe {
+                return Err(format!("error strings diverge: `{le}` vs `{fe}`"));
+            }
+            Ok(())
+        }
+        (l, f) => Err(format!("outcome diverges: legacy {l:?} vs fast {f:?}")),
+    }
+}
+
+fn adversarial_inst(r: &mut Rng, n: usize) -> Inst {
+    let reg = |r: &mut Rng| r.below(8) as u8;
+    let span = n as i64 + 8;
+    match r.below(12) {
+        // Out-of-range branch targets: far past the end (both loops
+        // must report the same "fell off" error via the sentinel) and
+        // in-range backwards (loops, bounded by the step limit).
+        0 | 1 => Inst::Jump { offset: r.range_i64(-4, span) as i32 },
+        2 => Inst::BranchZ { c: reg(r), offset: r.range_i64(-4, span) as i32 },
+        3 => Inst::BranchNZ { c: reg(r), offset: r.range_i64(-4, span) as i32 },
+        // Calls past the end resolve to the sentinel too.
+        4 => Inst::Call { target: r.below(span as u64) as u32 },
+        5 => Inst::Ret, // empty-stack trap
+        // Local accesses far outside the 64-word local memory.
+        6 => Inst::LoadLocal { d: reg(r), a: reg(r), off: r.range_i64(-40, 400) as i32 },
+        7 => Inst::StoreLocal { s: reg(r), a: reg(r), off: r.range_i64(-40, 400) as i32 },
+        8 => Inst::LoadImm { d: reg(r), imm: r.range_i64(-100, 5000) as i32 },
+        9 => Inst::AddI { d: reg(r), a: reg(r), imm: r.range_i64(-100, 100) as i32 },
+        10 => Inst::LoadGlobal { d: reg(r), a: reg(r) },
+        _ => Inst::Halt,
+    }
+}
+
+#[test]
+fn predecode_adversarial_branches_match_legacy_error_strings() {
+    // Random programs built from branch/call/trap-heavy instructions,
+    // many with out-of-range targets and most WITHOUT a trailing Halt:
+    // whenever both loops accept the program, outcome and error strings
+    // must be identical (FastMachine's FellOff sentinel and trap exits
+    // reproduce the legacy messages verbatim).
+    forall(
+        Config { cases: 600, base_seed: 0xF5 },
+        |r| {
+            let n = 3 + r.below(40) as usize;
+            let mut prog: Vec<Inst> = (0..n).map(|_| adversarial_inst(r, n)).collect();
+            if r.below(10) < 7 {
+                prog.pop();
+            } // usually no guaranteed Halt
+            prog
+        },
+        |prog| compare_both(prog),
+    );
+}
+
+#[test]
+fn branch_past_end_error_strings_identical() {
+    // The canonical out-of-range cases, pinned deterministically.
+    for prog in [
+        vec![Inst::Jump { offset: 100 }],
+        vec![Inst::BranchZ { c: 0, offset: 7 }, Inst::Halt],
+        vec![Inst::Call { target: 9999 }, Inst::Halt],
+        vec![Inst::Nop, Inst::Nop], // falls off the end
+        vec![Inst::Ret],
+        vec![Inst::LoadLocal { d: 0, a: 0, off: 1000 }, Inst::Halt],
+    ] {
+        compare_both(&prog).unwrap();
+    }
+}
+
+#[test]
+fn predecode_truncated_channel_sequences_rejected_and_legacy_contained() {
+    // Mutations of the canonical §2.1 expansions: truncations, dropped
+    // instructions, corrupted tags, stray channel words. predecode must
+    // reject malformed sequences up front with a channel-naming error;
+    // the legacy loop (which discovers violations only at run time)
+    // must be contained — error or not, never a panic — and whenever a
+    // mutant predecodes cleanly, both machines must agree exactly.
+    let setup = EmulationSetup::default_tech(TopologyKind::Clos, 256, 64, 255).unwrap();
+    let mut base = vec![Inst::LoadImm { d: 1, imm: 100 }, Inst::LoadImm { d: 2, imm: 42 }];
+    base.extend(expand_store(2, 1));
+    base.extend(expand_load(3, 1));
+    base.push(Inst::Halt);
+    // Sanity: the unmutated program predecodes and both machines agree.
+    assert!(predecode(&base).is_ok());
+
+    let mut mutants: Vec<Vec<Inst>> = Vec::new();
+    // Every truncation (drop the tail, re-terminate with Halt).
+    for len in 1..base.len() {
+        let mut m = base[..len].to_vec();
+        m.push(Inst::Halt);
+        mutants.push(m);
+    }
+    // Every single-instruction deletion.
+    for i in 0..base.len() - 1 {
+        let mut m = base.clone();
+        m.remove(i);
+        mutants.push(m);
+    }
+    // Corrupt each SendImm tag.
+    for i in 0..base.len() {
+        if let Inst::SendImm { chan, .. } = base[i] {
+            let mut m = base.clone();
+            m[i] = Inst::SendImm { chan, value: 7 };
+            mutants.push(m);
+        }
+    }
+    // Stray channel words at every position.
+    for i in 0..base.len() {
+        for stray in [
+            Inst::Recv { chan: 0, dest: 4 },
+            Inst::RecvAck { chan: 0 },
+            Inst::Send { chan: 0, src: 4 },
+        ] {
+            let mut m = base.clone();
+            m.insert(i, stray);
+            mutants.push(m);
+        }
+    }
+
+    let mut rejected = 0usize;
+    for (mi, m) in mutants.iter().enumerate() {
+        let decoded = predecode(m);
+        // Legacy on the emulated-channel memory: must be contained.
+        let mut lmem = EmulatedChannelMemory::new(setup.clone());
+        let mut legacy = Machine::new(&mut lmem, 64);
+        legacy.max_steps = FUZZ_STEPS;
+        let lres: Result<RunStats, _> = legacy.run(m);
+        match decoded {
+            Err(e) => {
+                rejected += 1;
+                let msg = e.to_string();
+                assert!(
+                    msg.contains("pc "),
+                    "mutant {mi}: predecode error does not locate the fault: `{msg}`"
+                );
+            }
+            Ok(d) => {
+                // Both accept: run fast on a fresh memory and compare.
+                let mut fmem = EmulatedChannelMemory::new(setup.clone());
+                let mut fast = FastMachine::new(&mut fmem, 64);
+                fast.max_steps = FUZZ_STEPS;
+                let fres = fast.run(&d);
+                match (lres, fres) {
+                    (Ok(ls), Ok(fs)) => assert_eq!(ls, fs, "mutant {mi}: stats diverge"),
+                    (Err(le), Err(fe)) => assert_eq!(
+                        le.to_string(),
+                        fe.to_string(),
+                        "mutant {mi}: error strings diverge"
+                    ),
+                    (l, f) => panic!("mutant {mi}: outcome diverges: {l:?} vs {f:?}"),
+                }
+            }
+        }
+    }
+    assert!(
+        rejected >= mutants.len() / 2,
+        "expected most mutants rejected up front ({rejected}/{})",
+        mutants.len()
+    );
 }
 
 #[test]

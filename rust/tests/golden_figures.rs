@@ -1,0 +1,168 @@
+//! Golden-figure parity harness: pins every figure's and table's full
+//! numeric output (via `api::Report`) as committed JSON snapshots, and
+//! proves the parallel sweep engine reproduces the sequential oracle
+//! bit for bit on every figure.
+//!
+//! Workflow:
+//!
+//! * Snapshots live in `tests/golden/<bench>.json` (one single-line
+//!   JSON document each, in the `BENCH_hotpath.json` schema family).
+//! * A **missing** snapshot is seeded from the current output and the
+//!   test passes with a notice — so the first toolchain-bearing CI run
+//!   writes the initial set (uploaded as artifacts; commit them).
+//! * `UPDATE_GOLDEN=1 cargo test --test golden_figures` regenerates
+//!   every snapshot in place (do this deliberately, with a diff review:
+//!   a perf refactor must NOT bend a curve).
+//! * On mismatch the fresh output is written next to the snapshot as
+//!   `<bench>.json.new` and the test fails with both paths.
+//!
+//! The snapshots are generated with `Mode::Exact`, the default figure
+//! seed, and no XLA artifacts — the same configuration
+//! `memclos figures --all --json` uses out of the box.
+
+use std::path::PathBuf;
+
+use memclos::api::{Mode, Report, Tech};
+use memclos::coordinator::{run_sweep_seq, ParallelSweep};
+use memclos::figures::{self, fig5, fig6, fig9};
+
+/// The figures' default seed (`FigOpts::default`).
+const SEED: u64 = 0xC105;
+
+/// Jobs for the parallel leg: at least 4, per the acceptance criterion.
+fn parallel_jobs() -> usize {
+    memclos::coordinator::default_jobs().max(4)
+}
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+fn update_requested() -> bool {
+    std::env::var("UPDATE_GOLDEN").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Compare one report against its snapshot; seed the snapshot when
+/// missing (or when `UPDATE_GOLDEN=1`). Returns a mismatch description
+/// instead of panicking so every figure is checked in one run.
+fn check_golden(report: &Report) -> Option<String> {
+    let dir = golden_dir();
+    std::fs::create_dir_all(&dir).expect("creating tests/golden");
+    let path = dir.join(format!("{}.json", report.bench()));
+    let rendered = report.render();
+    if update_requested() || !path.exists() {
+        std::fs::write(&path, &rendered).expect("writing golden snapshot");
+        eprintln!("seeded golden snapshot {}", path.display());
+        return None;
+    }
+    let want = std::fs::read_to_string(&path).expect("reading golden snapshot");
+    if want == rendered {
+        return None;
+    }
+    let new_path = dir.join(format!("{}.json.new", report.bench()));
+    std::fs::write(&new_path, &rendered).expect("writing .new snapshot");
+    Some(format!(
+        "{}: output diverges from {} (fresh output at {}; run with UPDATE_GOLDEN=1 to accept)",
+        report.bench(),
+        path.display(),
+        new_path.display()
+    ))
+}
+
+#[test]
+fn golden_figures_parallel_equals_sequential_equals_snapshots() {
+    let tech = Tech::default();
+    // Two engines over the same configuration: the parallel one and the
+    // jobs=1 sequential-oracle path.
+    let par = ParallelSweep::new(Mode::Exact, &tech, parallel_jobs(), SEED);
+    let seq = ParallelSweep::new(Mode::Exact, &tech, 1, SEED);
+    let par_reports = figures::all_reports(&par).expect("parallel figure generation");
+    let seq_reports = figures::all_reports(&seq).expect("sequential figure generation");
+
+    // Parity: every figure's full numeric document is byte-identical
+    // across job counts.
+    assert_eq!(par_reports.len(), seq_reports.len());
+    for (p, s) in par_reports.iter().zip(&seq_reports) {
+        assert_eq!(p.bench(), s.bench());
+        assert_eq!(
+            p.render(),
+            s.render(),
+            "figure `{}` diverges between --jobs {} and the sequential oracle",
+            p.bench(),
+            parallel_jobs()
+        );
+    }
+
+    // Snapshots: compare (or seed) every report.
+    let mismatches: Vec<String> =
+        par_reports.iter().filter_map(check_golden).collect();
+    assert!(
+        mismatches.is_empty(),
+        "golden mismatches:\n  {}",
+        mismatches.join("\n  ")
+    );
+}
+
+#[test]
+fn raw_sweep_parallel_equals_oracle_on_figure_points() {
+    // Below the report layer: the PointResults themselves are
+    // bit-identical between run_sweep_seq and ParallelSweep on the
+    // fig 9/10 sweep, for both a closed-form and a sampling backend.
+    let tech = Tech::default();
+    let points = fig9::sweep_points();
+    for mode in [Mode::Exact, Mode::Native { samples: 4_000 }] {
+        let oracle = run_sweep_seq(&points, mode, &tech, SEED).unwrap();
+        let par = ParallelSweep::new(mode, &tech, parallel_jobs(), SEED)
+            .eval_points(&points)
+            .unwrap();
+        assert_eq!(oracle.len(), par.len());
+        for (a, b) in oracle.iter().zip(&par) {
+            assert_eq!(a.point, b.point, "{mode:?}: order");
+            assert_eq!(
+                a.mean_cycles.to_bits(),
+                b.mean_cycles.to_bits(),
+                "{mode:?}: point {:?}",
+                a.point
+            );
+            assert_eq!(a.samples, b.samples);
+            assert_eq!(a.backend, b.backend);
+        }
+    }
+}
+
+#[test]
+fn fig5_fig6_combined_run_hits_the_plan_cache() {
+    // Acceptance criterion: the repeated-point cache reports >= 1 hit
+    // on the fig5+fig6 combined run (fig 6's 256 KB plans are a subset
+    // of fig 5's grid).
+    let engine = ParallelSweep::new(Mode::Exact, &Tech::default(), parallel_jobs(), SEED);
+    fig5::generate_with(&engine).unwrap();
+    let before = engine.cache_stats();
+    fig6::generate_with(&engine).unwrap();
+    let after = engine.cache_stats();
+    assert!(
+        after.hits >= before.hits + 1,
+        "fig5+fig6 shared no plans: {before:?} -> {after:?}"
+    );
+    assert_eq!(
+        after.misses, before.misses,
+        "fig6 re-evaluated plans fig5 already produced"
+    );
+}
+
+#[test]
+fn fig9_fig10_fig11_share_the_latency_sweep() {
+    // Figs 10 and 11 reuse fig 9's sweep points: on a shared engine
+    // their latency evaluations are all cache hits.
+    let engine = ParallelSweep::new(Mode::Exact, &Tech::default(), parallel_jobs(), SEED);
+    fig9::generate_with(&engine).unwrap();
+    let before = engine.cache_stats();
+    figures::fig10::generate_with(&engine).unwrap();
+    figures::fig11::generate_with(&engine).unwrap();
+    let after = engine.cache_stats();
+    assert_eq!(
+        after.misses, before.misses,
+        "figs 10/11 re-evaluated latency points fig 9 already produced"
+    );
+    assert!(after.hits > before.hits);
+}
