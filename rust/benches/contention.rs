@@ -1,0 +1,103 @@
+//! Bench: the contention lab — trace generation throughput per pattern
+//! and DES replay throughput (accesses/s) for a 16-client crowd on the
+//! 1,024-tile full-emulation Clos point, against the legacy uniform
+//! loop as the baseline.
+//!
+//! Writes the machine-readable perf trajectory to
+//! `BENCH_contention.json` (override the path with `--json PATH`; same
+//! schema family as `BENCH_hotpath.json`, emitted by
+//! `rust/scripts/bench_hotpath.sh`, uploaded by CI) and then runs the
+//! oracle smoke: the engine's shared-uniform scenario must reproduce
+//! the legacy `run_contention` summary bit for bit.
+//!
+//! Quick smoke mode: set `MEMCLOS_BENCH_QUICK=1` (what
+//! `rust/scripts/bench_hotpath.sh` does).
+
+use std::path::PathBuf;
+
+use memclos::api::DesignPoint;
+use memclos::sim::contention::{run_scenario, Workload};
+use memclos::sim::network::run_contention;
+use memclos::util::bench::{black_box, Bench};
+use memclos::workload::Trace;
+
+const CLIENTS: usize = 16;
+const ACCESSES: usize = 200;
+const GEN_LEN: usize = 4096;
+
+fn json_path() -> PathBuf {
+    let args: Vec<String> = std::env::args().collect();
+    for w in args.windows(2) {
+        if w[0] == "--json" {
+            return PathBuf::from(&w[1]);
+        }
+    }
+    PathBuf::from("BENCH_contention.json")
+}
+
+fn main() {
+    let setup = DesignPoint::clos(1024).mem_kb(128).k(1023).build().unwrap();
+    let space = setup.map.space_words();
+    let block = 1u64 << setup.map.log2_words_per_tile;
+    // ONE catalogue definition for the whole crate: the figure's.
+    let patterns = memclos::figures::contention::patterns(block);
+
+    let mut b = Bench::new("contention");
+
+    // Trace generation throughput (addresses/s) per pattern.
+    for &pat in &patterns {
+        b.iter_items(&format!("gen-{}", pat.label()), GEN_LEN as u64, || {
+            black_box(pat.generate(space, block, GEN_LEN, 7).addrs.len())
+        });
+    }
+
+    // DES replay throughput (issued accesses/s) per pattern, plus the
+    // two uniform implementations side by side.
+    for &pat in &patterns {
+        let traces: Vec<Trace> = (0..CLIENTS)
+            .map(|c| pat.generate(space, block, ACCESSES, 0x7EA5 + c as u64))
+            .collect();
+        b.iter_items(
+            &format!("replay-{}", pat.label()),
+            (CLIENTS * ACCESSES) as u64,
+            || {
+                let r = run_scenario(&setup, CLIENTS, ACCESSES, 7, Workload::Traces(&traces));
+                black_box(r.latency.count())
+            },
+        );
+    }
+    b.iter_items("replay-shared-uniform", (CLIENTS * ACCESSES) as u64, || {
+        let r = run_scenario(&setup, CLIENTS, ACCESSES, 7, Workload::SharedUniform);
+        black_box(r.latency.count())
+    });
+    b.iter_items("legacy-uniform", (CLIENTS * ACCESSES) as u64, || {
+        let r = run_contention(&setup, CLIENTS, ACCESSES, 7);
+        black_box(r.latency.count())
+    });
+
+    b.report();
+    println!("\nthroughput (items/s):");
+    for m in b.results() {
+        if m.items > 0 {
+            println!("  {:<24} {:>14.0}", m.name, m.throughput());
+        }
+    }
+
+    // Perf trajectory lands on disk before the assertions run, so a
+    // regression still records its numbers.
+    let path = json_path();
+    b.write_json(&path).expect("write bench json");
+    println!("wrote {}", path.display());
+
+    // Oracle smoke: the engine's uniform path IS the legacy experiment.
+    let new = run_scenario(&setup, CLIENTS, ACCESSES, 7, Workload::SharedUniform);
+    let old = run_contention(&setup, CLIENTS, ACCESSES, 7);
+    assert_eq!(
+        new.latency.mean().to_bits(),
+        old.latency.mean().to_bits(),
+        "shared-uniform scenario diverged from run_contention"
+    );
+    assert_eq!(new.latency.count(), old.latency.count());
+    assert_eq!(new.inflation.to_bits(), old.inflation.to_bits());
+    println!("oracle smoke OK (engine uniform == legacy run_contention bitwise)");
+}

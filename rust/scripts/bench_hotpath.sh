@@ -3,10 +3,11 @@
 # machine-readable results to the repo root so successive PRs can diff
 # throughput:
 #
-#   BENCH_hotpath.json — the emulated-memory access hot path
-#   BENCH_interp.json  — decoded-vs-legacy whole-program interpretation
+#   BENCH_hotpath.json    — the emulated-memory access hot path
+#   BENCH_interp.json     — decoded-vs-legacy whole-program interpretation
+#   BENCH_contention.json — trace generation + DES contention replay
 #
-# Schema (both files): {"bench": <group>,
+# Schema (all files): {"bench": <group>,
 #          "results": [{"name", "median_ns", "addrs_per_s"}]}
 #
 # Usage: rust/scripts/bench_hotpath.sh [--full]
@@ -18,6 +19,7 @@ RUST_DIR="$(cd "$(dirname "$0")/.." && pwd)"
 REPO_ROOT="$(cd "$RUST_DIR/.." && pwd)"
 OUT="$REPO_ROOT/BENCH_hotpath.json"
 INTERP_OUT="$REPO_ROOT/BENCH_interp.json"
+CONT_OUT="$REPO_ROOT/BENCH_contention.json"
 
 if [[ "${1:-}" != "--full" ]]; then
     export MEMCLOS_BENCH_QUICK=1
@@ -45,3 +47,12 @@ else
 fi
 
 echo "interp trajectory written to $INTERP_OUT"
+
+if cargo bench --bench contention -- --json "$CONT_OUT"; then
+    :
+else
+    echo "(cargo bench contention failed; falling back to the CLI contention --json)" >&2
+    cargo run --release --bin memclos -- contention --clients 8 --json > "$CONT_OUT"
+fi
+
+echo "contention trajectory written to $CONT_OUT"

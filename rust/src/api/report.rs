@@ -8,6 +8,30 @@
 //! Every row starts with a `name` and carries flat scalar fields, so
 //! the perf trajectory, sweeps and figure data diff cleanly across
 //! PRs. Numbers render with a fixed precision to keep diffs stable.
+//!
+//! # The `contention` row schema
+//!
+//! `memclos contention --json` and `figures::contention` emit one row
+//! per (design point, pattern, clients) cell, built by
+//! [`crate::figures::contention::row_for`]:
+//!
+//! | field | type | meaning |
+//! |-------|------|---------|
+//! | `name` | str | `<topo>-<tiles>-<pattern>-c<clients>` |
+//! | `system`, `k` | int | design point (tiles, emulation size) |
+//! | `pattern` | str | `uniform`/`zipf`/`stride`/`chase`/`phased` or `trace:<prog>` |
+//! | `clients`, `accesses` | int | crowd size; access budget per client |
+//! | `remote_accesses` | int | accesses that actually crossed the network |
+//! | `mean_cycles`, `p50`, `p95`, `p99`, `max_cycles` | num | the latency distribution |
+//! | `zero_load_cycles` | num | analytic zero-load mean of the same accesses |
+//! | `c_cont` | num | fitted contention factor (measured/zero-load, >= 1) |
+//! | `inflation` | num | legacy factor vs the uniform expected latency |
+//! | `wait_mean_cycles`, `wait_max_cycles` | num | per-access port-queue waiting |
+//! | `port_util_mean`, `port_util_max` | num | per-port occupancy over the makespan |
+//! | `makespan_cycles` | int | completion time of the last access |
+//!
+//! The round-trip test lives with the emitter
+//! (`figures::contention::tests::report_rows_round_trip_their_fields`).
 
 use std::fmt::Write as _;
 

@@ -1,0 +1,455 @@
+//! Contention figure (extension; not in the paper): the fitted
+//! contention factor `c_cont` and its tail latencies across a clients ×
+//! pattern grid at the 1,024- and 4,096-tile full-emulation Clos
+//! points.
+//!
+//! The paper abstracts multi-client interference into a single fitted
+//! `c_cont` measured under uniform traffic only (§6.3). This figure
+//! measures it per access pattern — uniform, zipf hot-spot, sequential
+//! stride, pointer chase, phased working set — and per crowd size, with
+//! the full latency distribution (mean/p50/p95/p99/max), per-access
+//! queue waiting and port occupancy next to the fitted factor.
+//!
+//! Every cell is ONE causally-dependent DES timeline
+//! ([`crate::sim::contention::run_scenario`]), inherently sequential;
+//! the grid fans out across cells on the [`ParallelSweep`] engine. A
+//! cell's RNG streams are seeded through [`point_seed`] from the sweep
+//! seed and the cell's canonical identity (design point ⊕ pattern ⊕
+//! clients ⊕ accesses) — never from scheduling — so any `--jobs` count
+//! is bit-identical to the sequential pass, and the whole figure joins
+//! the golden harness. The `uniform` column is the legacy
+//! [`crate::sim::network::run_contention`] experiment bit for bit (the
+//! oracle rule; proven in the tests below).
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use super::{topo_str, FigOpts};
+use crate::api::{DesignPoint, Report, Row};
+use crate::coordinator::{point_seed, ParallelSweep, SweepPoint};
+use crate::emulation::{EmulationSetup, TopologyKind};
+use crate::sim::contention::{run_scenario, ContentionStats, Workload};
+use crate::util::plot::Plot;
+use crate::util::table::{f, Table};
+use crate::workload::trace::{Trace, TracePattern};
+
+/// Systems plotted (full-emulation Clos points, like Fig 9/10).
+pub const SYSTEMS: &[usize] = &[1024, 4096];
+
+/// Tile memory used.
+pub const MEM_KB: u32 = 128;
+
+/// Crowd sizes per cell.
+pub const CLIENTS: &[usize] = &[1, 8, 64];
+
+/// Access budget per client per cell.
+pub const ACCESSES: usize = 400;
+
+/// The pattern catalogue of the figure, parameterised for a design
+/// point whose memory tiles hold `block_words` words: the stride walks
+/// one block plus one word per access (round-robin over the memory
+/// tiles), the zipf hot spot and phased windows use their defaults.
+pub fn patterns(block_words: u64) -> Vec<TracePattern> {
+    vec![
+        TracePattern::Uniform,
+        TracePattern::Zipf { theta: 1.2 },
+        TracePattern::Stride { stride: block_words + 1 },
+        TracePattern::PointerChase,
+        TracePattern::Phased { phases: 4, frac: 1.0 / 16.0 },
+    ]
+}
+
+/// Words each memory tile of a sweep point holds (32-bit words:
+/// `mem_kb` KB = `mem_kb * 256` words — the [`DesignPoint`] invariant).
+pub fn block_words(point: &SweepPoint) -> u64 {
+    point.mem_kb as u64 * 256
+}
+
+/// One grid cell: a design point replaying one pattern with one crowd
+/// size. The unit the sweep engine maps over.
+#[derive(Clone, Copy, Debug)]
+pub struct Cell {
+    /// The design point.
+    pub point: SweepPoint,
+    /// Access pattern every client replays.
+    pub pattern: TracePattern,
+    /// Concurrent clients.
+    pub clients: usize,
+    /// Accesses per client.
+    pub accesses: usize,
+}
+
+/// The canonical per-cell seed: a pure function of the sweep seed and
+/// the cell's identity (never of worker count or arrival order — the
+/// determinism contract every sweep consumer follows).
+pub fn cell_seed(sweep_seed: u64, cell: &Cell) -> u64 {
+    point_seed(
+        point_seed(sweep_seed, cell.point.canonical_key()),
+        cell.pattern.key() ^ ((cell.clients as u64) << 1) ^ ((cell.accesses as u64) << 24),
+    )
+}
+
+/// One evaluated cell.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    /// The design point.
+    pub point: SweepPoint,
+    /// Pattern label (`uniform`, `zipf`, ... or `trace:<prog>` for the
+    /// CLI's captured-trace scenarios).
+    pub pattern: String,
+    /// Concurrent clients.
+    pub clients: usize,
+    /// Everything the scenario measured.
+    pub stats: ContentionStats,
+}
+
+impl CellResult {
+    /// Report/row name: `clos-1024-zipf-c8`.
+    pub fn name(&self) -> String {
+        format!(
+            "{}-{}-{}-c{}",
+            topo_str(self.point.kind),
+            self.point.tiles,
+            self.pattern,
+            self.clients
+        )
+    }
+}
+
+/// Evaluate one cell against a prebuilt setup. The `uniform` pattern
+/// runs the shared on-line stream (the legacy-oracle path); every other
+/// pattern generates one trace per client, seeded per client from the
+/// cell seed.
+pub fn eval_cell(setup: &EmulationSetup, cell: &Cell, seed: u64) -> ContentionStats {
+    match cell.pattern {
+        TracePattern::Uniform => {
+            run_scenario(setup, cell.clients, cell.accesses, seed, Workload::SharedUniform)
+        }
+        pattern => {
+            let block = 1u64 << setup.map.log2_words_per_tile;
+            let traces: Vec<Trace> = (0..cell.clients)
+                .map(|c| {
+                    pattern.generate(
+                        setup.map.space_words(),
+                        block,
+                        cell.accesses,
+                        point_seed(seed, c as u64 + 1),
+                    )
+                })
+                .collect();
+            run_scenario(setup, cell.clients, cell.accesses, seed, Workload::Traces(&traces))
+        }
+    }
+}
+
+/// Evaluate a cell grid on the sweep engine: design points are built
+/// once per unique point, cells fan out across the worker pool (one DES
+/// timeline each) and come back in input order — bit-identical at any
+/// job count.
+pub fn eval_cells(engine: &ParallelSweep, cells: &[Cell]) -> Result<Vec<CellResult>> {
+    let mut setups: HashMap<u64, EmulationSetup> = HashMap::new();
+    for cell in cells {
+        let key = cell.point.canonical_key();
+        if !setups.contains_key(&key) {
+            let p = cell.point;
+            let setup = DesignPoint::new(p.kind, p.tiles)
+                .mem_kb(p.mem_kb)
+                .k(p.k)
+                .tech(engine.tech())
+                .build()
+                .with_context(|| format!("building contention cell point {p:?}"))?;
+            setups.insert(key, setup);
+        }
+    }
+    engine.map(cells, |cell| {
+        let setup = setups
+            .get(&cell.point.canonical_key())
+            .context("cell point missing from the setup table")?;
+        Ok(CellResult {
+            point: cell.point,
+            pattern: cell.pattern.label().to_string(),
+            clients: cell.clients,
+            stats: eval_cell(setup, cell, cell_seed(engine.seed(), cell)),
+        })
+    })
+}
+
+/// The figure's dataset.
+#[derive(Clone, Debug)]
+pub struct FigContention {
+    /// One row per (system, pattern, clients) cell, in grid order.
+    pub rows: Vec<CellResult>,
+}
+
+/// The figure's cell grid, in generation order.
+pub fn grid_cells() -> Vec<Cell> {
+    let mut cells = Vec::new();
+    for &system in SYSTEMS {
+        let point =
+            SweepPoint { kind: TopologyKind::Clos, tiles: system, mem_kb: MEM_KB, k: system - 1 };
+        for pattern in patterns(block_words(&point)) {
+            for &clients in CLIENTS {
+                cells.push(Cell { point, pattern, clients, accesses: ACCESSES });
+            }
+        }
+    }
+    cells
+}
+
+/// Generate the contention dataset on a shared sweep engine.
+pub fn generate_with(engine: &ParallelSweep) -> Result<FigContention> {
+    Ok(FigContention { rows: eval_cells(engine, &grid_cells())? })
+}
+
+/// Generate the dataset (standalone: a fresh engine).
+pub fn generate(opts: &FigOpts) -> Result<FigContention> {
+    generate_with(&opts.engine())
+}
+
+/// One report row for a cell — the schema `memclos contention --json`
+/// and the figure share (documented in [`crate::api::report`]).
+pub fn row_for(r: &CellResult) -> Row {
+    let s = &r.stats;
+    Row::new(&r.name())
+        .int("system", r.point.tiles as u64)
+        .int("k", r.point.k as u64)
+        .str("pattern", &r.pattern)
+        .int("clients", r.clients as u64)
+        .int("accesses", s.accesses as u64)
+        .int("remote_accesses", s.latency.count())
+        .num("mean_cycles", s.latency.mean())
+        .num("p50", s.dist.p50)
+        .num("p95", s.dist.p95)
+        .num("p99", s.dist.p99)
+        .num("max_cycles", s.dist.max)
+        .num("zero_load_cycles", s.zero_load_mean)
+        .num("c_cont", s.c_cont)
+        .num("inflation", s.inflation)
+        .num("wait_mean_cycles", s.wait.mean())
+        .num("wait_max_cycles", s.wait.max())
+        .num("port_util_mean", s.port_util_mean)
+        .num("port_util_max", s.port_util_max)
+        .int("makespan_cycles", s.makespan)
+}
+
+/// Render a cell set as the machine-diffable contention report (the
+/// document the golden harness pins as `contention.json`).
+pub fn report_rows(rows: &[CellResult]) -> Report {
+    let mut rep = Report::new("contention");
+    for r in rows {
+        rep.push(row_for(r));
+    }
+    rep
+}
+
+/// Full numeric output for the golden harness.
+pub fn report(fig: &FigContention) -> Report {
+    report_rows(&fig.rows)
+}
+
+/// Render the dataset as a table plus one `c_cont` vs clients plot per
+/// system.
+pub fn render(fig: &FigContention) -> String {
+    let mut out = String::new();
+    let mut t = Table::new(&[
+        "system", "pattern", "clients", "mean cy", "p50", "p95", "p99", "max", "c_cont",
+        "wait cy", "util max",
+    ])
+    .with_title("Contention lab: c_cont and tail latency vs clients x pattern");
+    for r in &fig.rows {
+        let s = &r.stats;
+        t.row(&[
+            r.point.tiles.to_string(),
+            r.pattern.clone(),
+            r.clients.to_string(),
+            f(s.latency.mean(), 1),
+            f(s.dist.p50, 1),
+            f(s.dist.p95, 1),
+            f(s.dist.p99, 1),
+            f(s.dist.max, 0),
+            f(s.c_cont, 3),
+            f(s.wait.mean(), 1),
+            f(s.port_util_max, 2),
+        ]);
+    }
+    out.push_str(&t.render());
+    for &system in SYSTEMS {
+        let mut plot = Plot::new(
+            &format!("Contention ({system}-tile Clos): c_cont vs concurrent clients"),
+            "clients",
+            "c_cont",
+        );
+        let mut labels: Vec<&str> = Vec::new();
+        for r in &fig.rows {
+            if r.point.tiles == system && !labels.contains(&r.pattern.as_str()) {
+                labels.push(r.pattern.as_str());
+            }
+        }
+        for label in labels {
+            let pts: Vec<(f64, f64)> = fig
+                .rows
+                .iter()
+                .filter(|r| r.point.tiles == system && r.pattern == label)
+                .map(|r| (r.clients as f64, r.stats.c_cont))
+                .collect();
+            plot.series(label, &pts);
+        }
+        out.push('\n');
+        out.push_str(&plot.render());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{Mode, Tech};
+    use crate::sim::network::run_contention;
+
+    /// A small engine + grid the tests can afford: one 256-tile point.
+    fn small_cells() -> Vec<Cell> {
+        let point =
+            SweepPoint { kind: TopologyKind::Clos, tiles: 256, mem_kb: 128, k: 255 };
+        let mut cells = Vec::new();
+        for pattern in patterns(block_words(&point)) {
+            for &clients in &[1usize, 16] {
+                cells.push(Cell { point, pattern, clients, accesses: 200 });
+            }
+        }
+        cells
+    }
+
+    #[test]
+    fn crowded_c_cont_dominates_solo_for_every_pattern() {
+        // The acceptance criterion, on the affordable grid: for every
+        // pattern the crowded fitted factor is at least the solo one.
+        let engine = ParallelSweep::new(Mode::Exact, &Tech::default(), 4, 0xC105);
+        let rows = eval_cells(&engine, &small_cells()).unwrap();
+        for pattern in ["uniform", "zipf", "stride", "chase", "phased"] {
+            let solo = rows
+                .iter()
+                .find(|r| r.pattern == pattern && r.clients == 1)
+                .unwrap_or_else(|| panic!("missing solo {pattern}"));
+            let crowd = rows
+                .iter()
+                .find(|r| r.pattern == pattern && r.clients == 16)
+                .unwrap_or_else(|| panic!("missing crowd {pattern}"));
+            assert!(
+                crowd.stats.c_cont >= solo.stats.c_cont - 1e-9,
+                "{pattern}: crowd c_cont {} < solo {}",
+                crowd.stats.c_cont,
+                solo.stats.c_cont
+            );
+            assert!(solo.stats.c_cont >= 1.0 - 1e-9);
+            let d = &crowd.stats.dist;
+            assert!(d.p50 <= d.p95 && d.p95 <= d.p99 && d.p99 <= d.max);
+        }
+    }
+
+    #[test]
+    fn uniform_cells_reproduce_the_legacy_oracle_bitwise() {
+        // The figure's uniform column IS the legacy experiment: same
+        // summary bits for the same (setup, clients, accesses, seed).
+        let engine = ParallelSweep::new(Mode::Exact, &Tech::default(), 2, 0xC105);
+        let point =
+            SweepPoint { kind: TopologyKind::Clos, tiles: 256, mem_kb: 128, k: 255 };
+        let cells: Vec<Cell> = [1usize, 8]
+            .iter()
+            .map(|&clients| Cell {
+                point,
+                pattern: TracePattern::Uniform,
+                clients,
+                accesses: 250,
+            })
+            .collect();
+        let rows = eval_cells(&engine, &cells).unwrap();
+        let setup = DesignPoint::new(point.kind, point.tiles)
+            .mem_kb(point.mem_kb)
+            .k(point.k)
+            .build()
+            .unwrap();
+        for (cell, row) in cells.iter().zip(&rows) {
+            let legacy =
+                run_contention(&setup, cell.clients, cell.accesses, cell_seed(0xC105, cell));
+            assert_eq!(row.stats.latency.count(), legacy.latency.count());
+            assert_eq!(
+                row.stats.latency.mean().to_bits(),
+                legacy.latency.mean().to_bits(),
+                "clients={}: uniform cell diverged from run_contention",
+                cell.clients
+            );
+            assert_eq!(row.stats.inflation.to_bits(), legacy.inflation.to_bits());
+        }
+    }
+
+    #[test]
+    fn grid_covers_systems_patterns_and_crowds() {
+        let cells = grid_cells();
+        assert_eq!(cells.len(), SYSTEMS.len() * 5 * CLIENTS.len());
+        // Cell seeds are canonical: same cell -> same seed; any
+        // differing coordinate -> a different seed.
+        let a = cell_seed(1, &cells[0]);
+        assert_eq!(a, cell_seed(1, &cells[0]));
+        for other in &cells[1..] {
+            assert_ne!(a, cell_seed(1, other), "cell seed collision with {other:?}");
+        }
+    }
+
+    #[test]
+    fn report_rows_round_trip_their_fields() {
+        // Satellite: the --json schema round-trips — every numeric
+        // field lands in the rendered document exactly as the fixed
+        // 4-decimal rendering of the stat it came from.
+        let engine = ParallelSweep::new(Mode::Exact, &Tech::default(), 2, 7);
+        let point =
+            SweepPoint { kind: TopologyKind::Clos, tiles: 256, mem_kb: 128, k: 255 };
+        let cells = vec![Cell {
+            point,
+            pattern: TracePattern::Zipf { theta: 1.2 },
+            clients: 8,
+            accesses: 150,
+        }];
+        let rows = eval_cells(&engine, &cells).unwrap();
+        let rendered = report_rows(&rows).render();
+        assert!(rendered.starts_with("{\"bench\": \"contention\", \"results\": ["));
+        let r = &rows[0];
+        let s = &r.stats;
+        let field = |key: &str, want: String| {
+            let needle = format!("\"{key}\": {want}");
+            assert!(rendered.contains(&needle), "missing `{needle}` in {rendered}");
+        };
+        field("name", format!("\"{}\"", r.name()));
+        field("pattern", "\"zipf\"".to_string());
+        field("clients", "8".to_string());
+        field("remote_accesses", s.latency.count().to_string());
+        field("mean_cycles", format!("{:.4}", s.latency.mean()));
+        field("p50", format!("{:.4}", s.dist.p50));
+        field("p95", format!("{:.4}", s.dist.p95));
+        field("p99", format!("{:.4}", s.dist.p99));
+        field("max_cycles", format!("{:.4}", s.dist.max));
+        field("c_cont", format!("{:.4}", s.c_cont));
+        field("inflation", format!("{:.4}", s.inflation));
+        field("wait_mean_cycles", format!("{:.4}", s.wait.mean()));
+        field("port_util_max", format!("{:.4}", s.port_util_max));
+        field("makespan_cycles", s.makespan.to_string());
+    }
+
+    #[test]
+    fn cells_are_jobs_invariant() {
+        let cells = small_cells();
+        let seq = eval_cells(&ParallelSweep::new(Mode::Exact, &Tech::default(), 1, 3), &cells)
+            .unwrap();
+        let par = eval_cells(&ParallelSweep::new(Mode::Exact, &Tech::default(), 8, 3), &cells)
+            .unwrap();
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.pattern, b.pattern);
+            assert_eq!(a.clients, b.clients);
+            assert_eq!(a.stats.latency.mean().to_bits(), b.stats.latency.mean().to_bits());
+            assert_eq!(a.stats.dist, b.stats.dist);
+            assert_eq!(a.stats.c_cont.to_bits(), b.stats.c_cont.to_bits());
+            assert_eq!(a.stats.makespan, b.stats.makespan);
+        }
+    }
+}

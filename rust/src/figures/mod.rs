@@ -16,6 +16,7 @@
 //! | [`fig11`] | Fig 11 — slowdown vs global-access fraction |
 //! | [`binary_size`] | §7.3 — program binary growth |
 //! | [`ablations`] | design-choice ablations (route-open, clock, switch degree, eDRAM) |
+//! | [`contention`] | (extension) trace-driven contention lab — `c_cont` + tail latency vs clients × pattern |
 //! | [`hotpath`] | (not in the paper) the repo's own access-hot-path perf trajectory |
 //! | [`interp_bench`] | (not in the paper) decoded-vs-legacy interpreter perf trajectory |
 //!
@@ -28,6 +29,7 @@
 
 pub mod ablations;
 pub mod binary_size;
+pub mod contention;
 pub mod fig10;
 pub mod fig11;
 pub mod fig5;
@@ -108,5 +110,6 @@ pub fn all_reports(engine: &ParallelSweep) -> Result<Vec<Report>> {
     out.push(fig11::report(&fig11::generate_with(engine)?));
     out.push(binary_size::report(&binary_size::generate()?));
     out.push(ablations::report(&ablations::generate_with(engine)?));
+    out.push(contention::report(&contention::generate_with(engine)?));
     Ok(out)
 }

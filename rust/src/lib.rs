@@ -18,12 +18,16 @@
 //!   (paper §6.1 baseline: ~35 ns average random access).
 //! * [`netmodel`] — the analytic message-latency model (paper §6.3).
 //! * [`sim`] — a message-level discrete-event simulator that
-//!   cross-validates [`netmodel`].
+//!   cross-validates [`netmodel`], plus the trace-driven multi-client
+//!   contention lab ([`sim::contention`]) reporting tail latencies and
+//!   the fitted `c_cont` per access pattern.
 //! * [`emulation`] — the paper's contribution: the emulated-memory
 //!   machine and the sequential baseline machine.
 //! * [`isa`], [`workload`], [`cc`] — benchmark substrate: a tiny RISC
-//!   ISA + interpreter, synthetic instruction mixes (Fig 8), and a miniC
-//!   compiler with direct and emulated-memory backends (§6.2, §7.3).
+//!   ISA + interpreter, synthetic instruction mixes (Fig 8), a miniC
+//!   compiler with direct and emulated-memory backends (§6.2, §7.3),
+//!   and seed-deterministic access-trace generators + capture
+//!   ([`workload::trace`]).
 //! * [`runtime`], [`coordinator`] — the PJRT runtime that executes the
 //!   AOT-compiled JAX/Pallas latency kernel and the multi-threaded sweep
 //!   coordinator that drives it.

@@ -23,7 +23,7 @@ use memclos::emulation::{SequentialMachine, TopologyKind};
 use memclos::figures::{self, FigOpts};
 use memclos::isa::decode::{predecode, FastMachine};
 use memclos::isa::interp::{DirectMemory, EmulatedChannelMemory, Machine, RunStats};
-use memclos::sim::network::run_contention;
+use memclos::sim::contention::{run_scenario, Workload};
 use memclos::topology::{ClosSpec, MeshSpec};
 use memclos::vlsi::{ClosFloorplan, MeshFloorplan};
 
@@ -34,7 +34,7 @@ USAGE: memclos <command> [options]
 
 COMMANDS
   tables [--which 1..5]         regenerate the paper's parameter tables
-  figure <5|6|7|9|10|11|bsize|ablations>  regenerate a figure / extension
+  figure <5|6|7|9|10|11|bsize|ablations|contention>  regenerate a figure / extension
   figures --all [--jobs N]      regenerate EVERY table and figure on one
                                 shared sweep engine (repeated design
                                 points evaluated once); --json emits the
@@ -48,7 +48,19 @@ COMMANDS
   run <program> [--topo ...]    compile+run a corpus program on both machines
                                 (pre-decoded fast loop; --legacy for the
                                 enum-match oracle)
-  contention [--clients N]      DES contention experiment (c_cont)
+  contention [--clients N]...   trace-driven DES contention lab: replay a
+                                clients x pattern grid, one DES timeline
+                                per cell fanned out over --jobs; reports
+                                mean/p50/p95/p99/max, queue waiting and
+                                the fitted c_cont per cell
+    --pattern P  (repeatable)   uniform | zipf[:theta] | stride[:words]
+                                | chase | phased[:phases[:frac]]
+                                (default uniform — bitwise the legacy
+                                single-scenario experiment)
+    --trace PROG (repeatable)   capture PROG's emulated-memory accesses
+                                from a FastMachine run and replay them
+                                (heterogeneous clients when repeated;
+                                overrides --pattern)
   selfcheck                     prove XLA artifact == native model
   sweep --tiles N --mem KB      latency sweep over emulation sizes
   bench-hotpath [--out PATH]    measure the access hot path, write BENCH_hotpath.json
@@ -187,7 +199,10 @@ fn run(raw: Vec<String>) -> Result<()> {
                 "ablations" => {
                     print!("{}", figures::ablations::render(&figures::ablations::generate_with(&engine)?))
                 }
-                o => bail!("no figure {o} (5|6|7|9|10|11|bsize|ablations)"),
+                "contention" => {
+                    print!("{}", figures::contention::render(&figures::contention::generate_with(&engine)?))
+                }
+                o => bail!("no figure {o} (5|6|7|9|10|11|bsize|ablations|contention)"),
             }
         }
         "figures" => {
@@ -234,6 +249,7 @@ fn run(raw: Vec<String>) -> Result<()> {
                 print!("{}", figures::fig11::render(&figures::fig11::generate_with(&engine)?));
                 print!("{}", figures::binary_size::render(&figures::binary_size::generate()?));
                 print!("{}", figures::ablations::render(&figures::ablations::generate_with(&engine)?));
+                print!("{}", figures::contention::render(&figures::contention::generate_with(&engine)?));
             }
             let cs = engine.cache_stats();
             eprintln!(
@@ -385,36 +401,117 @@ fn run(raw: Vec<String>) -> Result<()> {
             }
         }
         "contention" => {
-            let clients: usize = args.get("clients", 4)?;
+            let clients_list: Vec<usize> = {
+                let raw = args.flag_all("clients");
+                if raw.is_empty() {
+                    vec![4]
+                } else {
+                    raw.iter()
+                        .map(|s| {
+                            s.parse::<usize>()
+                                .map_err(|_| anyhow::anyhow!("--clients: cannot parse `{s}`"))
+                        })
+                        .collect::<Result<_>>()?
+                }
+            };
+            if let Some(&bad) = clients_list.iter().find(|&&c| c == 0) {
+                bail!("--clients {bad}: need at least one client per scenario");
+            }
             let accesses: usize = args.get("samples", 500)?;
+            if accesses == 0 {
+                bail!("--samples 0: need at least one access per client");
+            }
             let dp = design_point(&args, &doc, 256, None)?;
-            let setup = dp.build()?;
-            let seed: u64 = args.get("seed", 5)?;
-            // A contention run is ONE causally-dependent DES timeline —
-            // inherently sequential, fully determined by its seed.
-            // `--jobs` is accepted for CLI uniformity but has nothing
-            // to parallelise here.
-            let r = run_contention(&setup, clients, accesses, seed);
-            if args.has("json") {
-                let mut report = Report::new("contention");
-                report.push(
-                    Row::new(&format!(
-                        "{}-{}-clients{clients}",
-                        kind_str(dp.kind()),
-                        setup.map.tiles
-                    ))
-                    .int("clients", clients as u64)
-                    .int("accesses", accesses as u64)
-                    .num("mean_cycles", r.latency.mean())
-                    .num("inflation", r.inflation),
-                );
-                print!("{}", report.render());
+            let point = SweepPoint {
+                kind: dp.kind(),
+                tiles: dp.system_tiles(),
+                mem_kb: dp.tile_mem_kb(),
+                k: dp.emulation_tiles(),
+            };
+            // Each (pattern, clients) cell is ONE causally-dependent
+            // DES timeline — inherently sequential — so the grid fans
+            // out across cells on the sweep engine; any `--jobs` count
+            // is bit-identical to the sequential pass (canonical
+            // per-cell seeds).
+            let mut opts = fig_opts(&args, &doc)?;
+            opts.seed = args.get("seed", 5)?;
+            let engine = opts.engine();
+
+            let trace_names = args.flag_all("trace");
+            let rows: Vec<figures::contention::CellResult> = if trace_names.is_empty() {
+                let patterns: Vec<memclos::workload::TracePattern> = {
+                    let raw = args.flag_all("pattern");
+                    let specs =
+                        if raw.is_empty() { vec!["uniform".to_string()] } else { raw };
+                    specs
+                        .iter()
+                        .map(|s| memclos::workload::TracePattern::parse(s))
+                        .collect::<Result<_>>()?
+                };
+                let cells: Vec<figures::contention::Cell> = patterns
+                    .iter()
+                    .flat_map(|&pattern| {
+                        clients_list.iter().map(move |&clients| figures::contention::Cell {
+                            point,
+                            pattern,
+                            clients,
+                            accesses,
+                        })
+                    })
+                    .collect();
+                figures::contention::eval_cells(&engine, &cells)?
             } else {
-                println!(
-                    "{clients} clients x {accesses} accesses: mean {:.1} cy (inflation {:.3} over zero-load)",
-                    r.latency.mean(),
-                    r.inflation
-                );
+                // Captured-trace replay: each named corpus program is
+                // run once on the FastMachine and its emulated-memory
+                // accesses become a client trace (clients cycle through
+                // the captured set — heterogeneous when several are
+                // named).
+                let setup = dp.build()?;
+                let captured: Vec<memclos::workload::Trace> = trace_names
+                    .iter()
+                    .map(|name| memclos::workload::capture_corpus_program(name, &setup))
+                    .collect::<Result<_>>()?;
+                let label = format!("trace:{}", trace_names.join("+"));
+                let seed = engine.seed();
+                engine.map(&clients_list, |&clients| {
+                    let cell_seed = memclos::coordinator::point_seed(
+                        seed,
+                        0x7ACE ^ ((clients as u64) << 1) ^ ((accesses as u64) << 24),
+                    );
+                    Ok(figures::contention::CellResult {
+                        point,
+                        pattern: label.clone(),
+                        clients,
+                        stats: run_scenario(
+                            &setup,
+                            clients,
+                            accesses,
+                            cell_seed,
+                            Workload::Traces(&captured),
+                        ),
+                    })
+                })?
+            };
+
+            if args.has("json") {
+                print!("{}", figures::contention::report_rows(&rows).render());
+            } else {
+                for r in &rows {
+                    let s = &r.stats;
+                    println!(
+                        "{:>14} x{:>3} clients, {accesses} accesses: mean {:.1} cy  p50 {:.1}  p95 {:.1}  p99 {:.1}  max {:.0}  c_cont {:.3}  wait {:.1} cy  port-util max {:.2}",
+                        r.pattern,
+                        r.clients,
+                        s.latency.mean(),
+                        s.dist.p50,
+                        s.dist.p95,
+                        s.dist.p99,
+                        s.dist.max,
+                        s.c_cont,
+                        s.wait.mean(),
+                        s.port_util_max,
+                    );
+                }
             }
         }
         "selfcheck" => selfcheck(&args, &tech)?,

@@ -1,0 +1,373 @@
+//! The trace-driven multi-client contention lab.
+//!
+//! [`run_scenario`] replays one access workload for `clients`
+//! concurrent clients through a [`NetworkSim`] on a single
+//! discrete-event timeline and reports the full latency picture the
+//! paper's single fitted `c_cont` abstracts away (§6.3): tail
+//! latencies (mean/p50/p95/p99/max), per-access port-queue waiting,
+//! per-port occupancy, and the fitted contention factor itself.
+//!
+//! Two workload sources:
+//!
+//! * [`Workload::SharedUniform`] — the legacy experiment: every client
+//!   draws uniform addresses from ONE shared on-line stream at event
+//!   time. This path is **bit-identical** to
+//!   [`crate::sim::network::run_contention`] (same RNG draws, same
+//!   event order, same placements) — the legacy loop survives as the
+//!   oracle, and the equivalence test below enforces it.
+//! * [`Workload::Traces`] — each client replays its own (possibly
+//!   heterogeneous) pre-generated [`Trace`] — the
+//!   [`crate::workload::trace`] generators or a captured
+//!   [`crate::workload::trace::capture_corpus_program`] stream —
+//!   cycling when the trace is shorter than the access budget.
+//!
+//! The fitted factor: `c_cont = mean(measured) / mean(zero-load)`,
+//! where the zero-load reference is the analytic
+//! [`crate::netmodel::LatencyModel::access`] latency of *the same
+//! (client, target) pairs the scenario actually issued* (the DES is
+//! proven equal to the analytic model at zero load). Waiting can only
+//! add cycles, so `c_cont >= 1`, a solo client sits at exactly 1, and
+//! a crowded scenario can never report a smaller factor than its solo
+//! baseline — the monotonicity the figure asserts.
+//!
+//! Everything here is a pure function of `(setup, clients, accesses,
+//! seed, workload)`: one scenario is ONE causally-dependent DES
+//! timeline, inherently sequential, so sweep engines parallelise
+//! *across* scenarios (cells), never inside one.
+
+use crate::emulation::EmulationSetup;
+use crate::sim::event::EventQueue;
+use crate::sim::network::{spread_clients, NetworkSim};
+use crate::util::rng::Rng;
+use crate::util::stats::{Dist, Summary};
+use crate::workload::trace::Trace;
+
+/// Where a scenario's addresses come from.
+#[derive(Clone, Copy, Debug)]
+pub enum Workload<'a> {
+    /// One shared on-line uniform stream, drawn at event-pop time —
+    /// the legacy `run_contention` semantics, bit for bit.
+    SharedUniform,
+    /// Per-client pre-generated traces; client `c` replays
+    /// `traces[c % traces.len()]`, cycling past its end. Addresses are
+    /// reduced `% space`, so captured traces replay safely on smaller
+    /// design points.
+    Traces(&'a [Trace]),
+}
+
+/// Everything one contention scenario measures.
+#[derive(Clone, Debug)]
+pub struct ContentionStats {
+    /// Concurrent clients.
+    pub clients: usize,
+    /// Access budget per client (local accesses included).
+    pub accesses: usize,
+    /// Streaming summary of remote-access latencies (cycles) — the
+    /// legacy-comparable quantity (bitwise, for the uniform workload).
+    pub latency: Summary,
+    /// Order statistics of the same latencies: mean/p50/p95/p99/max.
+    pub dist: Dist,
+    /// Per-access cycles spent queued on busy switch ports.
+    pub wait: Summary,
+    /// Mean analytic zero-load latency of the same issued accesses.
+    pub zero_load_mean: f64,
+    /// Fitted contention factor: measured mean over zero-load mean of
+    /// the same accesses (>= 1; exactly 1 for an uncontended client).
+    pub c_cont: f64,
+    /// Legacy inflation: measured mean over the design point's
+    /// *expected* (uniform) zero-load latency — kept bitwise equal to
+    /// `run_contention`'s field for the uniform workload.
+    pub inflation: f64,
+    /// Completion time of the last access (cycles).
+    pub makespan: u64,
+    /// Mean per-port utilisation: held cycles over makespan, averaged
+    /// over every directed port.
+    pub port_util_mean: f64,
+    /// Utilisation of the busiest directed port.
+    pub port_util_max: f64,
+}
+
+/// Replay one contention scenario on a single DES timeline.
+///
+/// Clients are spread over the non-primary tiles exactly as the legacy
+/// oracle spreads them; each client issues `accesses` causally
+/// dependent accesses (the next one departs when the previous
+/// completes; addresses that land on the client's own tile cost one
+/// cycle and are not recorded, as in the oracle).
+pub fn run_scenario(
+    setup: &EmulationSetup,
+    clients: usize,
+    accesses: usize,
+    seed: u64,
+    workload: Workload<'_>,
+) -> ContentionStats {
+    assert!(clients >= 1, "need at least one client");
+    assert!(accesses >= 1, "need at least one access");
+    if let Workload::Traces(ts) = &workload {
+        assert!(!ts.is_empty(), "trace workload needs at least one trace");
+        assert!(ts.iter().all(|t| !t.is_empty()), "empty trace in workload");
+    }
+
+    let mut sim = NetworkSim::new(&setup.topo, &setup.model);
+    let mut rng = Rng::new(seed);
+    let space = setup.map.space_words();
+    let tiles = setup.map.tiles;
+    let expected = setup.expected_latency();
+
+    #[derive(Debug)]
+    struct NextAccess {
+        client: usize,
+        client_tile: usize,
+        pos: usize,
+        remaining: usize,
+    }
+    let mut q = EventQueue::new();
+    for (client, tile) in
+        spread_clients(setup.map.client, tiles, clients).into_iter().enumerate()
+    {
+        q.push(0, NextAccess { client, client_tile: tile, pos: 0, remaining: accesses });
+    }
+
+    let mut latency = Summary::new();
+    let mut wait = Summary::new();
+    let mut lats: Vec<f64> = Vec::with_capacity(clients * accesses);
+    let mut zero_sum = 0.0f64;
+    let mut makespan = 0u64;
+    while let Some((now, ev)) = q.pop() {
+        let addr = match &workload {
+            Workload::SharedUniform => rng.below(space),
+            Workload::Traces(ts) => ts[ev.client % ts.len()].addr(ev.pos) % space,
+        };
+        let target = setup.map.tile_of(addr);
+        if target == ev.client_tile {
+            // Local to this client: unit cost, reissue immediately.
+            if ev.remaining > 1 {
+                q.push(now + 1, NextAccess { pos: ev.pos + 1, remaining: ev.remaining - 1, ..ev });
+            }
+            continue;
+        }
+        let waited_before = sim.wait_cycles();
+        let done = sim.access(ev.client_tile, target, now);
+        latency.add((done - now) as f64);
+        lats.push((done - now) as f64);
+        wait.add((sim.wait_cycles() - waited_before) as f64);
+        zero_sum += setup.model.access(&setup.topo, ev.client_tile, target);
+        if done > makespan {
+            makespan = done;
+        }
+        if ev.remaining > 1 {
+            q.push(done, NextAccess { pos: ev.pos + 1, remaining: ev.remaining - 1, ..ev });
+        }
+    }
+
+    let dist = Dist::of(&lats);
+    let n = latency.count();
+    let zero_load_mean = if n > 0 { zero_sum / n as f64 } else { 0.0 };
+    let c_cont =
+        if n > 0 && zero_load_mean > 0.0 { latency.mean() / zero_load_mean } else { 1.0 };
+    let inflation = latency.mean() / expected;
+    let (port_util_mean, port_util_max) = if makespan > 0 {
+        let holds = sim.port_hold();
+        let mut sum = 0.0f64;
+        let mut max = 0.0f64;
+        for &h in holds {
+            let u = h as f64 / makespan as f64;
+            sum += u;
+            if u > max {
+                max = u;
+            }
+        }
+        (sum / holds.len().max(1) as f64, max)
+    } else {
+        (0.0, 0.0)
+    };
+
+    ContentionStats {
+        clients,
+        accesses,
+        latency,
+        dist,
+        wait,
+        zero_load_mean,
+        c_cont,
+        inflation,
+        makespan,
+        port_util_mean,
+        port_util_max,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::point_seed;
+    use crate::emulation::TopologyKind;
+    use crate::sim::network::run_contention;
+    use crate::workload::trace::{capture_corpus_program, TracePattern};
+
+    fn setup(tiles: usize, k: usize) -> EmulationSetup {
+        EmulationSetup::default_tech(TopologyKind::Clos, tiles, 128, k).unwrap()
+    }
+
+    /// The figure's catalogue — one definition for the whole crate, so
+    /// a pattern added there is automatically covered here.
+    fn catalogue(block: u64) -> Vec<TracePattern> {
+        crate::figures::contention::patterns(block)
+    }
+
+    fn traces_for(
+        pat: TracePattern,
+        e: &EmulationSetup,
+        clients: usize,
+        accesses: usize,
+        seed: u64,
+    ) -> Vec<crate::workload::trace::Trace> {
+        let block = 1u64 << e.map.log2_words_per_tile;
+        (0..clients)
+            .map(|c| {
+                pat.generate(e.map.space_words(), block, accesses, point_seed(seed, c as u64 + 1))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn shared_uniform_is_bitwise_the_legacy_oracle() {
+        // The tentpole's oracle rule: the new engine's uniform pattern
+        // reproduces `run_contention` bit for bit — summary, count and
+        // inflation — for any client count and seed.
+        let e = setup(256, 255);
+        for clients in [1usize, 4, 16] {
+            for seed in [3u64, 5, 0xC0FFEE] {
+                let new = run_scenario(&e, clients, 300, seed, Workload::SharedUniform);
+                let old = run_contention(&e, clients, 300, seed);
+                assert_eq!(new.clients, old.clients);
+                assert_eq!(new.latency.count(), old.latency.count(), "clients={clients}");
+                assert_eq!(
+                    new.latency.mean().to_bits(),
+                    old.latency.mean().to_bits(),
+                    "clients={clients} seed={seed}: mean diverged"
+                );
+                assert_eq!(new.latency.min().to_bits(), old.latency.min().to_bits());
+                assert_eq!(new.latency.max().to_bits(), old.latency.max().to_bits());
+                assert_eq!(
+                    new.inflation.to_bits(),
+                    old.inflation.to_bits(),
+                    "clients={clients} seed={seed}: inflation diverged"
+                );
+                // And the new observables are self-consistent.
+                assert_eq!(new.dist.count, new.latency.count());
+                assert_eq!(new.dist.mean.to_bits(), new.latency.mean().to_bits());
+                assert_eq!(new.dist.max, new.latency.max());
+                assert!(new.dist.p50 <= new.dist.p95 && new.dist.p95 <= new.dist.p99);
+            }
+        }
+    }
+
+    #[test]
+    fn solo_replay_is_contention_free_for_every_pattern() {
+        // A single client's dependent accesses never queue, so the
+        // fitted factor sits at 1 (against the zero-load latency of its
+        // own trace) for every pattern in the catalogue.
+        let e = setup(256, 255);
+        let block = 1u64 << e.map.log2_words_per_tile;
+        for pat in catalogue(block) {
+            let ts = traces_for(pat, &e, 1, 400, 11);
+            let r = run_scenario(&e, 1, 400, 11, Workload::Traces(&ts));
+            assert!(
+                (r.c_cont - 1.0).abs() < 0.02,
+                "{pat:?}: solo c_cont = {} (waits: mean {})",
+                r.c_cont,
+                r.wait.mean()
+            );
+            assert_eq!(r.wait.max(), 0.0, "{pat:?}: a solo client queued");
+        }
+    }
+
+    #[test]
+    fn crowds_never_report_a_smaller_c_cont_than_solo() {
+        let e = setup(256, 255);
+        let block = 1u64 << e.map.log2_words_per_tile;
+        for pat in catalogue(block) {
+            let (solo, crowd) = match pat {
+                TracePattern::Uniform => (
+                    run_scenario(&e, 1, 300, 7, Workload::SharedUniform),
+                    run_scenario(&e, 16, 300, 7, Workload::SharedUniform),
+                ),
+                p => {
+                    let ts1 = traces_for(p, &e, 1, 300, 7);
+                    let ts16 = traces_for(p, &e, 16, 300, 7);
+                    (
+                        run_scenario(&e, 1, 300, 7, Workload::Traces(&ts1)),
+                        run_scenario(&e, 16, 300, 7, Workload::Traces(&ts16)),
+                    )
+                }
+            };
+            assert!(
+                crowd.c_cont >= solo.c_cont - 1e-9,
+                "{pat:?}: crowd c_cont {} < solo {}",
+                crowd.c_cont,
+                solo.c_cont
+            );
+            assert!(crowd.c_cont >= 1.0 - 1e-9, "{pat:?}: c_cont below 1");
+        }
+    }
+
+    #[test]
+    fn zipf_hot_spot_contends_harder_than_uniform() {
+        // The point of pattern diversity: a shared hot tile queues far
+        // worse than the uniform mean suggests.
+        let e = setup(256, 255);
+        let uni = run_scenario(&e, 16, 300, 9, Workload::SharedUniform);
+        let ts = traces_for(TracePattern::Zipf { theta: 1.2 }, &e, 16, 300, 9);
+        let zipf = run_scenario(&e, 16, 300, 9, Workload::Traces(&ts));
+        assert!(
+            zipf.c_cont > uni.c_cont,
+            "zipf c_cont {} <= uniform {}",
+            zipf.c_cont,
+            uni.c_cont
+        );
+    }
+
+    #[test]
+    fn scenarios_are_deterministic() {
+        let e = setup(256, 255);
+        let ts = traces_for(TracePattern::PointerChase, &e, 8, 200, 13);
+        let a = run_scenario(&e, 8, 200, 13, Workload::Traces(&ts));
+        let b = run_scenario(&e, 8, 200, 13, Workload::Traces(&ts));
+        assert_eq!(a.latency.mean().to_bits(), b.latency.mean().to_bits());
+        assert_eq!(a.dist, b.dist);
+        assert_eq!(a.wait.mean().to_bits(), b.wait.mean().to_bits());
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.c_cont.to_bits(), b.c_cont.to_bits());
+        assert_eq!(a.port_util_max.to_bits(), b.port_util_max.to_bits());
+    }
+
+    #[test]
+    fn captured_corpus_traces_replay_heterogeneously() {
+        // Trace capture -> replay end to end: two different captured
+        // programs drive a heterogeneous client mix.
+        let e = setup(256, 255);
+        let a = capture_corpus_program("sum_squares", &e).unwrap();
+        let b = capture_corpus_program("sieve", &e).unwrap();
+        let ts = vec![a, b];
+        let r = run_scenario(&e, 6, 150, 21, Workload::Traces(&ts));
+        assert!(r.latency.count() > 0, "captured replay produced no remote accesses");
+        assert!(r.c_cont >= 1.0 - 1e-9);
+        assert!(r.dist.max >= r.dist.p99);
+    }
+
+    #[test]
+    fn queue_waits_explain_the_inflation() {
+        // Conservation: measured mean == zero-load mean + mean added
+        // delay, and port waiting is part of that added delay. With a
+        // shared hot spot the wait term must be visibly positive.
+        let e = setup(256, 255);
+        let ts = traces_for(TracePattern::Zipf { theta: 1.5 }, &e, 24, 250, 17);
+        let r = run_scenario(&e, 24, 250, 17, Workload::Traces(&ts));
+        assert!(r.wait.mean() > 0.0, "hot-spot crowd never waited on a port");
+        // Waiting can only lengthen an access, never shorten it.
+        assert!(r.latency.mean() >= r.zero_load_mean - 1e-9);
+        assert!(r.port_util_max > 0.0 && r.port_util_max <= 1.0 + 1e-9);
+        assert!(r.port_util_mean <= r.port_util_max);
+    }
+}

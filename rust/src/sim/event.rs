@@ -358,6 +358,115 @@ mod tests {
     }
 
     #[test]
+    fn contention_shaped_streams_match_heap() {
+        // The contention lab's event shape: bursts of same-timestamp
+        // pushes (every client departs at t=0; several accesses often
+        // complete on the same cycle) interleaved with trace-replay
+        // pops, plus occasional pushes *earlier* than the cursor
+        // (rewinds mid-replay). The calendar queue must stay
+        // pop-for-pop identical to the heap oracle throughout.
+        for seed in 0..8u64 {
+            let mut rng = Rng::new(0xC017 + seed);
+            let mut bucket = EventQueue::new();
+            let mut heap = HeapQueue::new();
+            let mut now = 0u64;
+            let mut next_id = 0u64;
+            // Initial burst: 16 clients all scheduled at t=0.
+            for _ in 0..16 {
+                bucket.push(0, next_id);
+                heap.push(0, next_id);
+                next_id += 1;
+            }
+            for _ in 0..4000 {
+                if rng.chance(0.45) && !bucket.is_empty() {
+                    let b = bucket.pop();
+                    let h = heap.pop();
+                    assert_eq!(b, h, "seed {seed}: pop diverged");
+                    if let Some((t, _)) = b {
+                        now = t;
+                    }
+                } else if rng.chance(0.25) {
+                    // Same-timestamp mass: a burst of events at exactly
+                    // `now` (FIFO order must survive both queues).
+                    for _ in 0..=rng.below(6) {
+                        bucket.push(now, next_id);
+                        heap.push(now, next_id);
+                        next_id += 1;
+                    }
+                } else if rng.chance(0.12) {
+                    // Rewind mid-replay: schedule strictly earlier than
+                    // the cursor (exercises EventQueue::rewind).
+                    let back = now.saturating_sub(1 + rng.below(2_000));
+                    bucket.push(back, next_id);
+                    heap.push(back, next_id);
+                    next_id += 1;
+                } else {
+                    // Trace-replay deltas: a round-trip-completion push
+                    // a small-to-window-crossing delta ahead.
+                    let delta = if rng.chance(0.8) {
+                        rng.below(700)
+                    } else {
+                        RING + rng.below(3 * RING)
+                    };
+                    bucket.push(now + delta, next_id);
+                    heap.push(now + delta, next_id);
+                    next_id += 1;
+                }
+                assert_eq!(bucket.len(), heap.len(), "seed {seed}");
+                assert_eq!(bucket.peek_time(), heap.peek_time(), "seed {seed}");
+            }
+            loop {
+                let b = bucket.pop();
+                let h = heap.pop();
+                assert_eq!(b, h, "seed {seed}: drain diverged");
+                if b.is_none() {
+                    break;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn random_trace_replay_timelines_match_heap() {
+        // Replay the contention loop's exact queue discipline — pop an
+        // access, push its successor at the simulated completion time —
+        // with synthetic per-client completion deltas, on both queues.
+        use crate::workload::trace::TracePattern;
+        for (i, pat) in [
+            TracePattern::Uniform,
+            TracePattern::Zipf { theta: 1.3 },
+            TracePattern::Stride { stride: 97 },
+        ]
+        .iter()
+        .enumerate()
+        {
+            // Interpret trace addresses as pseudo completion deltas so
+            // the replay shape (dependent chains, clustered times)
+            // drives the queues exactly as a DES run would.
+            let t = pat.generate(1 << 16, 1 << 10, 2_000, 0xAB + i as u64);
+            let mut bucket = EventQueue::new();
+            let mut heap = HeapQueue::new();
+            for c in 0..12u64 {
+                bucket.push(0, c);
+                heap.push(0, c);
+            }
+            let mut pos = 0usize;
+            loop {
+                let b = bucket.pop();
+                let h = heap.pop();
+                assert_eq!(b, h, "{pat:?}: replay diverged");
+                let Some((now, client)) = b else { break };
+                if pos < t.len() {
+                    let delta = 1 + t.addr(pos) % 500;
+                    bucket.push(now + delta, client);
+                    heap.push(now + delta, client);
+                    pos += 1;
+                }
+            }
+        }
+    }
+
+    #[test]
     fn heap_oracle_still_orders() {
         let mut q = HeapQueue::new();
         q.push(5, "c");

@@ -12,10 +12,17 @@
 //!   [`EventQueue`] the DES runs on, and the binary-heap
 //!   [`event::HeapQueue`] oracle it is equivalence-tested against.
 //! * [`network`] — the network simulator and the emulated-memory access
-//!   round trip.
+//!   round trip (plus the legacy uniform `run_contention`, kept as the
+//!   contention engine's bit-identity oracle).
+//! * [`contention`] — the trace-driven multi-client contention lab:
+//!   replay per-client [`crate::workload::trace`] streams on one DES
+//!   timeline and report tail latencies, queue waiting and the fitted
+//!   `c_cont` per scenario.
 
+pub mod contention;
 pub mod event;
 pub mod network;
 
+pub use contention::{run_scenario, ContentionStats, Workload};
 pub use event::{EventQueue, HeapQueue};
 pub use network::NetworkSim;

@@ -52,6 +52,13 @@ pub struct NetworkSim<'a> {
     /// Busy-until time per directed switch port, indexed by the
     /// routing table's CSR port id. Sized once; never grows.
     port_busy: Vec<u64>,
+    /// Cumulative cycles messages spent queued on busy output ports
+    /// (the contention lab's per-access wait metric; two integer adds
+    /// on the hot path, no effect on timing).
+    wait_cycles: u64,
+    /// Cumulative cycles each directed port was held (occupancy),
+    /// indexed like `port_busy`. Sized once; never grows.
+    port_hold: Vec<u64>,
 }
 
 /// Wire cycles of one link of `class` (rounded to whole cycles, as the
@@ -75,7 +82,8 @@ impl<'a> NetworkSim<'a> {
     pub fn new(topo: &'a Topology, model: &'a LatencyModel) -> Self {
         let routes = topo.routing_table();
         let port_busy = vec![0u64; routes.num_ports()];
-        Self { topo, model, routes, port_busy }
+        let port_hold = vec![0u64; routes.num_ports()];
+        Self { topo, model, routes, port_busy, wait_cycles: 0, port_hold }
     }
 
     /// Simulate one message from `src_tile` to `dst_tile`, departing at
@@ -108,9 +116,11 @@ impl<'a> NetworkSim<'a> {
             let port = self.routes.port_id(u, e);
             let busy = self.port_busy[port];
             if busy > t {
+                self.wait_cycles += busy - t;
                 t = busy;
             }
             self.port_busy[port] = t + occupancy;
+            self.port_hold[port] += occupancy;
             if matches!(class, LinkClass::CoreSys | LinkClass::MeshChipCross) {
                 inter_chip = true;
             }
@@ -131,10 +141,27 @@ impl<'a> NetworkSim<'a> {
         self.one_way(tile, client, served, RESPONSE_WORDS)
     }
 
-    /// Reset port occupancy (fresh zero-load state). Clears the arena
-    /// in place — no allocation.
+    /// Reset port occupancy (fresh zero-load state). Clears the arenas
+    /// and counters in place — no allocation.
     pub fn reset(&mut self) {
         self.port_busy.fill(0);
+        self.port_hold.fill(0);
+        self.wait_cycles = 0;
+    }
+
+    /// Cumulative cycles messages have spent queued on busy output
+    /// ports since construction (or the last [`NetworkSim::reset`]).
+    /// Diff around an [`NetworkSim::access`] call to attribute waiting
+    /// to one access.
+    pub fn wait_cycles(&self) -> u64 {
+        self.wait_cycles
+    }
+
+    /// Cumulative cycles each directed port was held, indexed by the
+    /// routing table's CSR port ids — divide by the run's makespan for
+    /// per-port utilisation.
+    pub fn port_hold(&self) -> &[u64] {
+        &self.port_hold
     }
 }
 
@@ -153,8 +180,9 @@ pub struct ContentionResult {
 /// `tiles - 1` tiles that are *not* the primary client's (the memory
 /// pool lives there too, but a synthetic client only issues traffic).
 /// Never lands on `client`; placements are distinct whenever
-/// `clients <= tiles - 1`.
-fn spread_clients(client: usize, tiles: usize, clients: usize) -> Vec<usize> {
+/// `clients <= tiles - 1`. Shared with [`crate::sim::contention`], so
+/// the trace-driven engine places clients exactly as this oracle does.
+pub(crate) fn spread_clients(client: usize, tiles: usize, clients: usize) -> Vec<usize> {
     debug_assert!(tiles >= 2);
     let slots = tiles - 1;
     let step = (slots / clients.max(1)).max(1);
@@ -164,6 +192,13 @@ fn spread_clients(client: usize, tiles: usize, clients: usize) -> Vec<usize> {
 /// Run `clients` synthetic clients, each performing `accesses`
 /// back-to-back random accesses over an emulation's address space, and
 /// measure contention (the `c_cont` abstraction of §6.3).
+///
+/// This is the **bit-identity oracle** for the trace-driven engine:
+/// [`crate::sim::contention::run_scenario`] with the shared-uniform
+/// workload must reproduce this loop's `Summary` and inflation bit for
+/// bit (same RNG draws, same event order, same placements) — the
+/// equivalence tests in `sim::contention` enforce it. Extend scenarios
+/// there; change this loop only in lockstep with those tests.
 pub fn run_contention(
     setup: &EmulationSetup,
     clients: usize,
@@ -281,6 +316,35 @@ mod tests {
             crowd.latency.mean() >= solo.latency.mean(),
             "contention should not speed things up"
         );
+    }
+
+    #[test]
+    fn wait_and_hold_counters_observe_without_perturbing() {
+        let e = setup(TopologyKind::Clos, 256, 255);
+        let mut a = NetworkSim::new(&e.topo, &e.model);
+        let mut b = NetworkSim::new(&e.topo, &e.model);
+        // Uncontended dependent traffic: counters stay quiet on waits,
+        // holds accumulate, and timing is untouched by the counters.
+        let mut now = 0;
+        for tile in 1..64 {
+            now = a.access(e.map.client, tile, now);
+        }
+        assert_eq!(a.wait_cycles(), 0, "dependent accesses never queue");
+        assert!(a.port_hold().iter().any(|&h| h > 0));
+        // Concurrent departures DO queue: issue the same messages all
+        // at t=0 on the fresh sim.
+        let mut waited = false;
+        for tile in 1..64 {
+            b.one_way(e.map.client, tile, 0, REQUEST_WORDS);
+        }
+        if b.wait_cycles() > 0 {
+            waited = true;
+        }
+        assert!(waited, "64 simultaneous departures share the client's first port");
+        // Reset clears every counter in place.
+        b.reset();
+        assert_eq!(b.wait_cycles(), 0);
+        assert!(b.port_hold().iter().all(|&h| h == 0));
     }
 
     #[test]

@@ -114,6 +114,45 @@ pub fn median(xs: &[f64]) -> f64 {
     percentile(&v, 50.0)
 }
 
+/// Order statistics of one sample: the tail-latency quantities the
+/// contention reports carry (mean/p50/p95/p99/max). The mean is the
+/// streaming [`Summary`] mean, so it compares bitwise against summaries
+/// built from the same observations in the same order.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Dist {
+    /// Number of observations.
+    pub count: u64,
+    /// Arithmetic mean.
+    pub mean: f64,
+    /// Median.
+    pub p50: f64,
+    /// 95th percentile.
+    pub p95: f64,
+    /// 99th percentile.
+    pub p99: f64,
+    /// Largest observation.
+    pub max: f64,
+}
+
+impl Dist {
+    /// Distribution of a sample (all zeros for an empty slice).
+    pub fn of(xs: &[f64]) -> Self {
+        if xs.is_empty() {
+            return Self::default();
+        }
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Self {
+            count: xs.len() as u64,
+            mean: Summary::of(xs).mean(),
+            p50: percentile(&v, 50.0),
+            p95: percentile(&v, 95.0),
+            p99: percentile(&v, 99.0),
+            max: *v.last().unwrap(),
+        }
+    }
+}
+
 /// Fixed-bin histogram over `[lo, hi)`.
 #[derive(Clone, Debug)]
 pub struct Histogram {
@@ -210,6 +249,20 @@ mod tests {
         assert_eq!(percentile(&v, 100.0), 4.0);
         assert!((percentile(&v, 50.0) - 2.5).abs() < 1e-12);
         assert!((median(&[3.0, 1.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dist_orders_the_tail() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let d = Dist::of(&xs);
+        assert_eq!(d.count, 100);
+        assert!((d.mean - 50.5).abs() < 1e-12);
+        assert!((d.p50 - 50.5).abs() < 1e-12);
+        assert!(d.p95 <= d.p99 && d.p99 <= d.max);
+        assert_eq!(d.max, 100.0);
+        // The mean matches a Summary over the same stream bit for bit.
+        assert_eq!(d.mean.to_bits(), Summary::of(&xs).mean().to_bits());
+        assert_eq!(Dist::of(&[]), Dist::default());
     }
 
     #[test]

@@ -10,11 +10,17 @@
 //!   point, and report per-program and aggregate slowdowns (the
 //!   quantities Fig 10's `measured` rows plot; the mix formula in
 //!   [`synthetic`] is the analytic oracle).
+//! * [`trace`] — seed-deterministic access-trace generators (uniform,
+//!   zipf hot-spot, sequential stride, pointer chase, phased working
+//!   set) plus trace capture from [`crate::isa::decode::FastMachine`]
+//!   runs — the workload side of the `sim::contention` lab.
 
 pub mod measured;
 pub mod mixes;
 pub mod synthetic;
+pub mod trace;
 
 pub use measured::{CompiledCorpus, CorpusMeasurement, MeasuredRun};
 pub use mixes::{InstructionMix, COMPILER_MIX, DHRYSTONE_MIX};
 pub use synthetic::{predict_slowdown, SyntheticProgram};
+pub use trace::{capture_corpus_program, RecordingMemory, Trace, TracePattern};

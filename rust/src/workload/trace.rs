@@ -1,0 +1,539 @@
+//! Seed-deterministic access-trace generators and trace capture — the
+//! workload side of the contention lab (`sim::contention`).
+//!
+//! The paper's §6.3 folds multi-client interference into one fitted
+//! factor `c_cont`, measured only ever under uniform-random traffic.
+//! Real access streams are structured — hot spots, strides, dependent
+//! pointer chains, phase changes — and the structure is what decides
+//! whether the emulation's tail latencies survive contact with real
+//! traffic. This module provides that structure as data:
+//!
+//! * [`TracePattern`] — the pattern catalogue: `uniform`, `zipf`
+//!   (hot-spot mass over memory-tile blocks), `stride` (sequential
+//!   arithmetic walk), `chase` (a single-cycle pointer-chase
+//!   permutation), `phased` (working-set windows that jump per phase).
+//!   [`TracePattern::generate`] is a pure function of `(pattern, space,
+//!   block, len, seed)` — bit-for-bit deterministic, every address in
+//!   `[0, space)`.
+//! * [`Trace`] — a concrete address stream a contention client replays.
+//! * [`RecordingMemory`] / [`capture_corpus_program`] — trace capture
+//!   from real [`FastMachine`] runs: wrap any [`MemorySystem`], run a
+//!   cc-corpus program on the emulated backend, and keep the global
+//!   addresses it touched as a replayable [`Trace`].
+//!
+//! The oracle rule (see `rust/README.md`): the contention engine's
+//! `uniform` pattern does NOT go through a pre-generated trace — it
+//! draws from the shared on-line stream exactly as the legacy
+//! `run_contention` loop does, so the legacy implementation stays a
+//! bit-identity oracle. Trace-based patterns join the golden harness
+//! instead.
+
+use anyhow::{Context, Result};
+
+use crate::cc::codegen::{compile, Backend};
+use crate::cc::corpus;
+use crate::emulation::EmulationSetup;
+use crate::isa::decode::{predecode, FastMachine};
+use crate::isa::interp::{EmulatedChannelMemory, MemorySystem};
+use crate::util::rng::Rng;
+
+/// Working-set size of a pointer-chase trace: the chase cycles over at
+/// most this many nodes, so traces longer than the set lap the same
+/// single-cycle permutation again (dependent revisits, like a real
+/// linked structure).
+pub const CHASE_NODES: usize = 1024;
+
+/// One access pattern of the catalogue. Parameters are part of the
+/// pattern's identity ([`TracePattern::key`]), so two cells differing
+/// only in `theta` get different canonical seeds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TracePattern {
+    /// Independent uniform draws over the address space.
+    Uniform,
+    /// Zipf hot-spot over memory-tile blocks: block `b` (rank order)
+    /// carries mass proportional to `1/(b+1)^theta`, the offset within
+    /// the block is uniform. Every client hammers the same hot ranks.
+    Zipf {
+        /// Zipf exponent (> 0; larger concentrates harder).
+        theta: f64,
+    },
+    /// Sequential arithmetic walk: `addr_i = (base + i*stride) % space`
+    /// with a seed-drawn base.
+    Stride {
+        /// Word stride between consecutive accesses (>= 1).
+        stride: u64,
+    },
+    /// Pointer chase: a Sattolo single-cycle permutation over spread
+    /// nodes, walked as a dependent chain.
+    PointerChase,
+    /// Phased working set: the trace splits into `phases` spans, each
+    /// uniform inside a contiguous window of `frac * space` words at a
+    /// seed-drawn base.
+    Phased {
+        /// Number of phases (>= 1).
+        phases: usize,
+        /// Working-set fraction of the space, in (0, 1].
+        frac: f64,
+    },
+}
+
+impl TracePattern {
+    /// Short label used in row names and CLI output.
+    pub fn label(&self) -> &'static str {
+        match self {
+            TracePattern::Uniform => "uniform",
+            TracePattern::Zipf { .. } => "zipf",
+            TracePattern::Stride { .. } => "stride",
+            TracePattern::PointerChase => "chase",
+            TracePattern::Phased { .. } => "phased",
+        }
+    }
+
+    /// Canonical identity of the pattern *including parameters* — the
+    /// contention figure folds this into its per-cell seed, so a cell's
+    /// stream never depends on scheduling, only on what it simulates.
+    pub fn key(&self) -> u64 {
+        match self {
+            TracePattern::Uniform => 0x55AA_0001,
+            TracePattern::Zipf { theta } => 0x55AA_0002 ^ theta.to_bits().rotate_left(16),
+            TracePattern::Stride { stride } => 0x55AA_0003 ^ stride.rotate_left(16),
+            TracePattern::PointerChase => 0x55AA_0004,
+            TracePattern::Phased { phases, frac } => {
+                0x55AA_0005 ^ ((*phases as u64) << 40) ^ frac.to_bits().rotate_left(16)
+            }
+        }
+    }
+
+    /// Parse a CLI pattern spec: `uniform`, `zipf[:theta]`,
+    /// `stride[:words]`, `chase`, `phased[:phases[:frac]]`.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut parts = spec.split(':');
+        let head = parts.next().unwrap_or("");
+        let arg = |p: Option<&str>, what: &str| -> Result<f64> {
+            let s = p.context("missing argument")?;
+            s.parse::<f64>().with_context(|| format!("pattern `{spec}`: bad {what} `{s}`"))
+        };
+        let pat = match head {
+            "uniform" => TracePattern::Uniform,
+            "zipf" => {
+                let theta = match parts.next() {
+                    None => 1.2,
+                    p => arg(p, "theta")?,
+                };
+                anyhow::ensure!(
+                    theta.is_finite() && theta > 0.0,
+                    "pattern `{spec}`: theta must be finite and > 0"
+                );
+                TracePattern::Zipf { theta }
+            }
+            "stride" => {
+                let stride = match parts.next() {
+                    None => 1,
+                    Some(s) => s
+                        .parse::<u64>()
+                        .with_context(|| format!("pattern `{spec}`: bad stride `{s}`"))?,
+                };
+                anyhow::ensure!(stride >= 1, "pattern `{spec}`: stride must be >= 1");
+                TracePattern::Stride { stride }
+            }
+            "chase" => TracePattern::PointerChase,
+            "phased" => {
+                let phases = match parts.next() {
+                    None => 4usize,
+                    Some(s) => s
+                        .parse::<usize>()
+                        .with_context(|| format!("pattern `{spec}`: bad phase count `{s}`"))?
+                        .max(1),
+                };
+                let frac = match parts.next() {
+                    None => 1.0 / 16.0,
+                    p => arg(p, "fraction")?,
+                };
+                anyhow::ensure!(frac > 0.0 && frac <= 1.0, "pattern `{spec}`: frac in (0, 1]");
+                TracePattern::Phased { phases, frac }
+            }
+            other => anyhow::bail!(
+                "unknown pattern `{other}` (uniform|zipf[:theta]|stride[:words]|chase|phased[:phases[:frac]])"
+            ),
+        };
+        if let Some(extra) = parts.next() {
+            anyhow::bail!("pattern `{spec}`: unexpected trailing `:{extra}`");
+        }
+        Ok(pat)
+    }
+
+    /// Generate a `len`-access trace over a `space`-word address space
+    /// whose memory-tile blocks are `block_words` wide. Pure in every
+    /// argument: the same call produces the same addresses bit for bit,
+    /// and every address is in `[0, space)`.
+    pub fn generate(&self, space: u64, block_words: u64, len: usize, seed: u64) -> Trace {
+        assert!(space > 0, "empty address space");
+        assert!(len > 0, "empty trace");
+        let mut rng = Rng::new(seed);
+        let mut addrs = Vec::with_capacity(len);
+        match *self {
+            TracePattern::Uniform => {
+                for _ in 0..len {
+                    addrs.push(rng.below(space));
+                }
+            }
+            TracePattern::Zipf { theta } => {
+                let block = block_words.max(1);
+                let blocks = (space / block).max(1);
+                // Cumulative (unnormalised) Zipf mass per block, hot
+                // block first (rank 0 = the first memory tile).
+                let mut cdf = Vec::with_capacity(blocks as usize);
+                let mut acc = 0.0f64;
+                for b in 0..blocks {
+                    acc += 1.0 / ((b + 1) as f64).powf(theta);
+                    cdf.push(acc);
+                }
+                let total = acc;
+                for _ in 0..len {
+                    let u = rng.f64() * total;
+                    let b = (cdf.partition_point(|&c| c <= u) as u64).min(blocks - 1);
+                    let lo = b * block;
+                    let width = block.min(space - lo);
+                    addrs.push(lo + rng.below(width));
+                }
+            }
+            TracePattern::Stride { stride } => {
+                let s = {
+                    let m = stride % space;
+                    if m == 0 {
+                        1
+                    } else {
+                        m
+                    }
+                };
+                let mut a = rng.below(space);
+                for _ in 0..len {
+                    addrs.push(a);
+                    a = (a + s) % space;
+                }
+            }
+            TracePattern::PointerChase => {
+                // One node per equal share of the space (disjoint,
+                // nonempty intervals => distinct addresses), then a
+                // Sattolo shuffle: a uniformly random *cyclic*
+                // permutation — every node on one cycle. Traces longer
+                // than the working set lap the same cycle again.
+                let n = (len as u64).min(space).min(CHASE_NODES as u64).max(1) as usize;
+                let mut nodes = Vec::with_capacity(n);
+                for j in 0..n as u64 {
+                    let lo = j * space / n as u64;
+                    let hi = (j + 1) * space / n as u64;
+                    nodes.push(lo + rng.below((hi - lo).max(1)));
+                }
+                let mut succ: Vec<usize> = (0..n).collect();
+                for i in (1..n).rev() {
+                    let j = rng.below(i as u64) as usize;
+                    succ.swap(i, j);
+                }
+                let mut cur = 0usize;
+                for _ in 0..len {
+                    cur = succ[cur];
+                    addrs.push(nodes[cur]);
+                }
+            }
+            TracePattern::Phased { phases, frac } => {
+                let phases = phases.max(1);
+                let window = ((space as f64 * frac).ceil() as u64).clamp(1, space);
+                for p in 0..phases {
+                    let start = p * len / phases;
+                    let end = (p + 1) * len / phases;
+                    if start == end {
+                        continue;
+                    }
+                    let base = rng.below(space);
+                    for _ in start..end {
+                        addrs.push((base + rng.below(window)) % space);
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(addrs.len(), len);
+        Trace { label: self.label().to_string(), seed, addrs }
+    }
+}
+
+/// A concrete address stream one contention client replays.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    /// Pattern label (or `trace:<program>` for captured traces).
+    pub label: String,
+    /// The seed the trace was generated from (0 for captured traces).
+    pub seed: u64,
+    /// The addresses, in issue order.
+    pub addrs: Vec<u64>,
+}
+
+impl Trace {
+    /// Number of addresses in one pass of the trace.
+    pub fn len(&self) -> usize {
+        self.addrs.len()
+    }
+
+    /// True when the trace holds no addresses (never produced by the
+    /// generators, which assert `len > 0`).
+    pub fn is_empty(&self) -> bool {
+        self.addrs.is_empty()
+    }
+
+    /// Address at position `i`, cycling past the end — replaying longer
+    /// than one pass walks the trace again.
+    pub fn addr(&self, i: usize) -> u64 {
+        self.addrs[i % self.addrs.len()]
+    }
+}
+
+/// A [`MemorySystem`] wrapper that records every global address touched
+/// (reads and writes, in program order) while delegating untouched to
+/// the wrapped memory — the capture half of trace-driven replay.
+pub struct RecordingMemory<M: MemorySystem> {
+    inner: M,
+    addrs: Vec<u64>,
+}
+
+impl<M: MemorySystem> RecordingMemory<M> {
+    /// Wrap a memory system.
+    pub fn new(inner: M) -> Self {
+        Self { inner, addrs: Vec::new() }
+    }
+
+    /// Addresses recorded so far, in access order.
+    pub fn addrs(&self) -> &[u64] {
+        &self.addrs
+    }
+
+    /// Unwrap into the recorded address stream.
+    pub fn into_addrs(self) -> Vec<u64> {
+        self.addrs
+    }
+}
+
+impl<M: MemorySystem> MemorySystem for RecordingMemory<M> {
+    fn read(&mut self, addr: u64) -> (i64, u64) {
+        self.addrs.push(addr);
+        self.inner.read(addr)
+    }
+
+    fn write(&mut self, addr: u64, value: i64) -> u64 {
+        self.addrs.push(addr);
+        self.inner.write(addr, value)
+    }
+
+    fn space_words(&self) -> u64 {
+        self.inner.space_words()
+    }
+}
+
+/// Capture the emulated-memory access trace of one cc-corpus program:
+/// compile it for the emulated backend, predecode once, run it on a
+/// [`FastMachine`] over a [`RecordingMemory`]-wrapped
+/// [`EmulatedChannelMemory`] for the given design point, and keep the
+/// global addresses it touched. Deterministic: the interpreter draws no
+/// randomness, so the same `(program, setup)` always captures the same
+/// trace.
+pub fn capture_corpus_program(name: &str, setup: &EmulationSetup) -> Result<Trace> {
+    let prog = corpus::all()
+        .into_iter()
+        .find(|p| p.name == name)
+        .with_context(|| {
+            let names: Vec<&str> = corpus::all().iter().map(|p| p.name).collect();
+            format!("unknown program `{name}` (available: {})", names.join(", "))
+        })?;
+    let code = compile(prog.source, Backend::Emulated)
+        .with_context(|| format!("compiling `{name}` (emulated)"))?
+        .code;
+    let decoded = predecode(&code).with_context(|| format!("predecoding `{name}`"))?;
+    let mut mem = RecordingMemory::new(EmulatedChannelMemory::new(setup.clone()));
+    {
+        let mut m = FastMachine::new(&mut mem, 1 << 16);
+        m.run(&decoded).with_context(|| format!("running `{name}` for trace capture"))?;
+    }
+    let addrs = mem.into_addrs();
+    anyhow::ensure!(!addrs.is_empty(), "`{name}` made no emulated-memory accesses to trace");
+    Ok(Trace { label: format!("trace:{name}"), seed: 0, addrs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::emulation::TopologyKind;
+    use crate::util::prop::{check, ensure};
+
+    const SPACE: u64 = 255 << 14; // a 255-rank point's address space
+    const BLOCK: u64 = 1 << 14;
+
+    fn catalogue() -> Vec<TracePattern> {
+        vec![
+            TracePattern::Uniform,
+            TracePattern::Zipf { theta: 1.2 },
+            TracePattern::Stride { stride: 7 },
+            TracePattern::PointerChase,
+            TracePattern::Phased { phases: 4, frac: 1.0 / 16.0 },
+        ]
+    }
+
+    #[test]
+    fn generators_are_bit_deterministic() {
+        for pat in catalogue() {
+            let a = pat.generate(SPACE, BLOCK, 512, 0xFEED);
+            let b = pat.generate(SPACE, BLOCK, 512, 0xFEED);
+            assert_eq!(a, b, "{pat:?} must be a pure function of its seed");
+            assert_eq!(a.len(), 512);
+            assert_eq!(a.label, pat.label());
+        }
+        // ...and a different seed gives a different stream.
+        let a = TracePattern::Uniform.generate(SPACE, BLOCK, 256, 1);
+        let b = TracePattern::Uniform.generate(SPACE, BLOCK, 256, 2);
+        assert_ne!(a.addrs, b.addrs);
+    }
+
+    #[test]
+    fn every_address_in_range_for_any_space() {
+        check(
+            |r| {
+                let space = 1 + r.below(1 << 22);
+                let block = 1u64 << r.range(8, 16);
+                let len = 1 + r.below(600) as usize;
+                let pat = match r.below(5) {
+                    0 => TracePattern::Uniform,
+                    1 => TracePattern::Zipf { theta: 0.5 + r.f64() * 2.0 },
+                    2 => TracePattern::Stride { stride: 1 + r.below(1 << 20) },
+                    3 => TracePattern::PointerChase,
+                    _ => TracePattern::Phased {
+                        phases: 1 + r.below(6) as usize,
+                        frac: 0.05 + r.f64() * 0.9,
+                    },
+                };
+                (pat, space, block, len, r.next_u64())
+            },
+            |&(pat, space, block, len, seed)| {
+                let t = pat.generate(space, block, len, seed);
+                ensure(t.len() == len, format!("{} addrs, wanted {len}", t.len()))?;
+                ensure(
+                    t.addrs.iter().all(|&a| a < space),
+                    format!("{pat:?}: address out of [0, {space})"),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn zipf_mass_concentrates_per_exponent() {
+        // Bounded check: the hot block of a theta=1.2 zipf over 255
+        // blocks carries far more than its uniform share, and a larger
+        // exponent concentrates strictly harder.
+        let share0 = |theta: f64| {
+            let t = TracePattern::Zipf { theta }.generate(SPACE, BLOCK, 20_000, 9);
+            t.addrs.iter().filter(|&&a| a < BLOCK).count() as f64 / t.len() as f64
+        };
+        let uniform_share = BLOCK as f64 / SPACE as f64; // 1/255
+        let mild = share0(1.2);
+        assert!(
+            mild > 10.0 * uniform_share,
+            "zipf(1.2) hot-block share {mild} vs uniform {uniform_share}"
+        );
+        let hard = share0(2.0);
+        assert!(hard > mild, "zipf(2.0) share {hard} <= zipf(1.2) share {mild}");
+    }
+
+    #[test]
+    fn pointer_chase_is_a_single_full_cycle() {
+        // Long trace: the working set caps at CHASE_NODES, one lap
+        // visits every node exactly once, the next lap retraces it.
+        let n = CHASE_NODES;
+        let t = TracePattern::PointerChase.generate(SPACE, BLOCK, 2 * n, 5);
+        let mut first: Vec<u64> = t.addrs[..n].to_vec();
+        first.sort_unstable();
+        first.dedup();
+        assert_eq!(first.len(), n, "chase revisited a node inside one lap");
+        assert_eq!(&t.addrs[n..2 * n], &t.addrs[..n], "second lap must retrace the cycle");
+        // Short trace: the trace IS one full cycle — every entry
+        // distinct, and the cyclic replay (`Trace::addr`) closes it.
+        let short = TracePattern::PointerChase.generate(SPACE, BLOCK, 300, 5);
+        let mut uniq = short.addrs.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 300);
+        assert_eq!(short.addr(300), short.addrs[0], "cyclic replay closes the cycle");
+    }
+
+    #[test]
+    fn stride_walks_arithmetically() {
+        let t = TracePattern::Stride { stride: 3 * BLOCK + 1 }.generate(SPACE, BLOCK, 400, 7);
+        for w in t.addrs.windows(2) {
+            assert_eq!((w[0] + 3 * BLOCK + 1) % SPACE, w[1]);
+        }
+    }
+
+    #[test]
+    fn phased_windows_bound_the_working_set() {
+        // With a 1/16 working set over 4 phases, one trace touches at
+        // most ~4/16 of the blocks (plus wrap slop) — far fewer than
+        // uniform would.
+        let t = TracePattern::Phased { phases: 4, frac: 1.0 / 16.0 }
+            .generate(SPACE, BLOCK, 4_000, 3);
+        let mut blocks: Vec<u64> = t.addrs.iter().map(|a| a / BLOCK).collect();
+        blocks.sort_unstable();
+        blocks.dedup();
+        let total_blocks = (SPACE / BLOCK) as usize;
+        assert!(
+            blocks.len() <= total_blocks / 2,
+            "phased trace touched {} of {} blocks",
+            blocks.len(),
+            total_blocks
+        );
+    }
+
+    #[test]
+    fn parse_round_trips_the_catalogue() {
+        assert_eq!(TracePattern::parse("uniform").unwrap(), TracePattern::Uniform);
+        assert_eq!(TracePattern::parse("zipf").unwrap(), TracePattern::Zipf { theta: 1.2 });
+        assert_eq!(TracePattern::parse("zipf:0.9").unwrap(), TracePattern::Zipf { theta: 0.9 });
+        assert_eq!(TracePattern::parse("stride:64").unwrap(), TracePattern::Stride { stride: 64 });
+        assert_eq!(TracePattern::parse("chase").unwrap(), TracePattern::PointerChase);
+        assert_eq!(
+            TracePattern::parse("phased:8:0.25").unwrap(),
+            TracePattern::Phased { phases: 8, frac: 0.25 }
+        );
+        assert!(TracePattern::parse("bogus").is_err());
+        assert!(TracePattern::parse("zipf:x").is_err());
+        assert!(TracePattern::parse("zipf:nan").is_err());
+        assert!(TracePattern::parse("zipf:-1").is_err());
+        assert!(TracePattern::parse("zipf:0").is_err());
+        assert!(TracePattern::parse("stride:0").is_err());
+        assert!(TracePattern::parse("phased:4:2").is_err());
+        assert!(TracePattern::parse("uniform:1:2").is_err());
+    }
+
+    #[test]
+    fn pattern_keys_separate_parameters() {
+        assert_ne!(
+            TracePattern::Zipf { theta: 1.2 }.key(),
+            TracePattern::Zipf { theta: 1.3 }.key()
+        );
+        assert_ne!(
+            TracePattern::Stride { stride: 1 }.key(),
+            TracePattern::Stride { stride: 2 }.key()
+        );
+        assert_ne!(TracePattern::Uniform.key(), TracePattern::PointerChase.key());
+    }
+
+    #[test]
+    fn capture_records_a_replayable_corpus_trace() {
+        let setup =
+            EmulationSetup::default_tech(TopologyKind::Clos, 256, 128, 255).unwrap();
+        let a = capture_corpus_program("sum_squares", &setup).unwrap();
+        assert!(!a.is_empty());
+        assert_eq!(a.label, "trace:sum_squares");
+        let space = setup.map.space_words();
+        assert!(a.addrs.iter().all(|&x| x < space), "captured address out of range");
+        // Capture is deterministic — the interpreter draws no RNG.
+        let b = capture_corpus_program("sum_squares", &setup).unwrap();
+        assert_eq!(a, b);
+        assert!(capture_corpus_program("no_such_program", &setup).is_err());
+    }
+}

@@ -6,6 +6,10 @@
 //! * `coordinator::ParallelSweep` — the determinism property: random
 //!   point sets produce bit-identical results at `--jobs 1` and
 //!   `--jobs 8`, and both match the sequential oracle `run_sweep_seq`.
+//! * `figures::contention` — the same property for the contention lab:
+//!   a random pattern × clients cell grid is bit-identical at `--jobs
+//!   1` and `--jobs 8` (each cell is one DES timeline; the engine only
+//!   parallelises across cells).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -156,6 +160,68 @@ fn random_points(r: &mut Rng) -> Vec<SweepPoint> {
         points.push(SweepPoint { kind, tiles, mem_kb, k });
     }
     points
+}
+
+/// A random contention cell over small-but-real design points.
+fn random_cell(r: &mut Rng) -> memclos::figures::contention::Cell {
+    use memclos::workload::TracePattern;
+    let tiles = *r.choose(&[256usize, 1024]);
+    let kind = if r.below(2) == 0 { TopologyKind::Clos } else { TopologyKind::Mesh };
+    let k = 1 + r.below(tiles as u64 - 1) as usize;
+    let pattern = match r.below(5) {
+        0 => TracePattern::Uniform,
+        1 => TracePattern::Zipf { theta: 0.8 + r.f64() },
+        2 => TracePattern::Stride { stride: 1 + r.below(1 << 17) },
+        3 => TracePattern::PointerChase,
+        _ => TracePattern::Phased { phases: 1 + r.below(6) as usize, frac: 0.05 + r.f64() * 0.4 },
+    };
+    memclos::figures::contention::Cell {
+        point: SweepPoint { kind, tiles, mem_kb: 64, k },
+        pattern,
+        clients: 1 + r.below(12) as usize,
+        accesses: 120,
+    }
+}
+
+#[test]
+fn contention_grid_jobs1_vs_jobs8_bitwise() {
+    use memclos::figures::contention::eval_cells;
+    // One random duplicate-bearing grid (the cells, not the RNG cases,
+    // carry the randomness — both legs must agree bit for bit).
+    let mut r = Rng::new(0xC047);
+    let mut cells: Vec<memclos::figures::contention::Cell> =
+        (0..10).map(|_| random_cell(&mut r)).collect();
+    let dup = cells[3];
+    cells.push(dup); // a repeated cell must evaluate identically too
+    let tech = Tech::default();
+    let seq = eval_cells(&ParallelSweep::new(Mode::Exact, &tech, 1, 0xAB), &cells).unwrap();
+    let par = eval_cells(&ParallelSweep::new(Mode::Exact, &tech, 8, 0xAB), &cells).unwrap();
+    assert_eq!(seq.len(), par.len());
+    for (i, (a, b)) in seq.iter().zip(&par).enumerate() {
+        assert_eq!(a.pattern, b.pattern, "cell {i}");
+        assert_eq!(a.clients, b.clients, "cell {i}");
+        assert_eq!(
+            a.stats.latency.mean().to_bits(),
+            b.stats.latency.mean().to_bits(),
+            "cell {i} ({}-c{}): mean diverged across job counts",
+            a.pattern,
+            a.clients
+        );
+        assert_eq!(a.stats.latency.count(), b.stats.latency.count(), "cell {i}");
+        assert_eq!(a.stats.dist, b.stats.dist, "cell {i}");
+        assert_eq!(a.stats.c_cont.to_bits(), b.stats.c_cont.to_bits(), "cell {i}");
+        assert_eq!(a.stats.wait.mean().to_bits(), b.stats.wait.mean().to_bits(), "cell {i}");
+        assert_eq!(a.stats.makespan, b.stats.makespan, "cell {i}");
+        assert_eq!(
+            a.stats.port_util_max.to_bits(),
+            b.stats.port_util_max.to_bits(),
+            "cell {i}"
+        );
+    }
+    // The duplicated cell's two rows are bit-identical to each other.
+    let (x, y) = (&seq[3], &seq[cells.len() - 1]);
+    assert_eq!(x.stats.latency.mean().to_bits(), y.stats.latency.mean().to_bits());
+    assert_eq!(x.stats.dist, y.stats.dist);
 }
 
 #[test]

@@ -131,6 +131,63 @@ fn raw_sweep_parallel_equals_oracle_on_figure_points() {
 }
 
 #[test]
+fn contention_lab_joins_the_harness() {
+    // The contention figure is part of `all_reports`, so the main test
+    // above already pins `tests/golden/contention.json` and asserts
+    // parallel == sequential on it. This checks the emitter contract on
+    // an affordable grid: a report exists for every cell, names are
+    // well-formed, and the uniform cells embed the legacy oracle's
+    // numbers (`sim::network::run_contention`) bit for bit.
+    use memclos::api::DesignPoint;
+    use memclos::emulation::TopologyKind;
+    use memclos::figures::contention::{cell_seed, eval_cells, report_rows, Cell};
+    use memclos::sim::network::run_contention;
+    use memclos::workload::TracePattern;
+
+    let engine = ParallelSweep::new(Mode::Exact, &Tech::default(), parallel_jobs(), SEED);
+    let point = memclos::coordinator::SweepPoint {
+        kind: TopologyKind::Clos,
+        tiles: 256,
+        mem_kb: 128,
+        k: 255,
+    };
+    let cells: Vec<Cell> = [
+        (TracePattern::Uniform, 1usize),
+        (TracePattern::Uniform, 8),
+        (TracePattern::Zipf { theta: 1.2 }, 8),
+        (TracePattern::PointerChase, 8),
+    ]
+    .iter()
+    .map(|&(pattern, clients)| Cell { point, pattern, clients, accesses: 200 })
+    .collect();
+    let rows = eval_cells(&engine, &cells).unwrap();
+    let report = report_rows(&rows);
+    assert_eq!(report.bench(), "contention");
+    assert_eq!(report.len(), cells.len());
+    let rendered = report.render();
+    for r in &rows {
+        assert!(rendered.contains(&format!("\"name\": \"{}\"", r.name())));
+    }
+
+    let setup = DesignPoint::new(point.kind, point.tiles)
+        .mem_kb(point.mem_kb)
+        .k(point.k)
+        .build()
+        .unwrap();
+    for (cell, row) in cells.iter().zip(&rows).filter(|(c, _)| {
+        matches!(c.pattern, TracePattern::Uniform)
+    }) {
+        let legacy = run_contention(&setup, cell.clients, cell.accesses, cell_seed(SEED, cell));
+        assert_eq!(
+            row.stats.latency.mean().to_bits(),
+            legacy.latency.mean().to_bits(),
+            "uniform cell (c{}) diverged from the legacy oracle",
+            cell.clients
+        );
+    }
+}
+
+#[test]
 fn fig5_fig6_combined_run_hits_the_plan_cache() {
     // Acceptance criterion: the repeated-point cache reports >= 1 hit
     // on the fig5+fig6 combined run (fig 6's 256 KB plans are a subset
