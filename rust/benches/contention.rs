@@ -61,13 +61,15 @@ fn main() {
             &format!("replay-{}", pat.label()),
             (CLIENTS * ACCESSES) as u64,
             || {
-                let r = run_scenario(&setup, CLIENTS, ACCESSES, 7, Workload::Traces(&traces));
+                let r = run_scenario(&setup, CLIENTS, ACCESSES, 7, Workload::Traces(&traces))
+                    .expect("healthy replay");
                 black_box(r.latency.count())
             },
         );
     }
     b.iter_items("replay-shared-uniform", (CLIENTS * ACCESSES) as u64, || {
-        let r = run_scenario(&setup, CLIENTS, ACCESSES, 7, Workload::SharedUniform);
+        let r = run_scenario(&setup, CLIENTS, ACCESSES, 7, Workload::SharedUniform)
+            .expect("healthy replay");
         black_box(r.latency.count())
     });
     b.iter_items("legacy-uniform", (CLIENTS * ACCESSES) as u64, || {
@@ -90,7 +92,8 @@ fn main() {
     println!("wrote {}", path.display());
 
     // Oracle smoke: the engine's uniform path IS the legacy experiment.
-    let new = run_scenario(&setup, CLIENTS, ACCESSES, 7, Workload::SharedUniform);
+    let new = run_scenario(&setup, CLIENTS, ACCESSES, 7, Workload::SharedUniform)
+        .expect("healthy replay");
     let old = run_contention(&setup, CLIENTS, ACCESSES, 7);
     assert_eq!(
         new.latency.mean().to_bits(),

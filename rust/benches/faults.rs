@@ -1,0 +1,142 @@
+//! Bench: the fault subsystem — DES replay throughput (accesses/s) of
+//! the 1,024-tile Clos point healthy vs under a 5 % fault plan (dead
+//! tiles + degraded/flaky links + failed ports), for the uniform and
+//! zipf patterns, plus the cost of materialising a faulted design
+//! point.
+//!
+//! Writes the machine-readable perf trajectory to `BENCH_faults.json`
+//! (override the path with `--json PATH`; same schema family as
+//! `BENCH_hotpath.json`, emitted by `rust/scripts/bench_hotpath.sh`,
+//! uploaded by CI) and then runs the oracle smoke: the faulted replay
+//! is seed-deterministic (two runs bit-equal), and the empty-plan
+//! setup reproduces the legacy healthy `run_contention` summary bit
+//! for bit.
+//!
+//! Quick smoke mode: set `MEMCLOS_BENCH_QUICK=1` (what
+//! `rust/scripts/bench_hotpath.sh` does).
+
+use std::path::PathBuf;
+
+use memclos::api::DesignPoint;
+use memclos::fault::FaultPlan;
+use memclos::sim::contention::{run_scenario, Workload};
+use memclos::sim::network::run_contention;
+use memclos::util::bench::{black_box, Bench};
+use memclos::workload::{Trace, TracePattern};
+
+const CLIENTS: usize = 16;
+const ACCESSES: usize = 200;
+const FAULT_FRAC: f64 = 0.05;
+const FAULT_SEED: u64 = 0xFA17;
+
+fn json_path() -> PathBuf {
+    let args: Vec<String> = std::env::args().collect();
+    for w in args.windows(2) {
+        if w[0] == "--json" {
+            return PathBuf::from(&w[1]);
+        }
+    }
+    PathBuf::from("BENCH_faults.json")
+}
+
+fn main() {
+    // k = 896 leaves dead-tile slack for the 5 % plan (full emulation
+    // would reject any dead tile under the capacity-degradation rule).
+    let healthy = DesignPoint::clos(1024).mem_kb(128).k(896).build().unwrap();
+    let faulted = DesignPoint::clos(1024)
+        .mem_kb(128)
+        .k(896)
+        .faults(FaultPlan::fraction(FAULT_FRAC, FAULT_SEED))
+        .build()
+        .unwrap();
+    assert!(faulted.fault.is_some(), "5% plan must materialise");
+
+    let space = healthy.map.space_words();
+    let block = 1u64 << healthy.map.log2_words_per_tile;
+
+    let mut b = Bench::new("faults");
+
+    // Materialisation cost: building the faulted point (topology +
+    // fault sampling + heal rule + rank remap + LUT).
+    b.iter("build-faulted", || {
+        let s = DesignPoint::clos(1024)
+            .mem_kb(128)
+            .k(896)
+            .faults(FaultPlan::fraction(FAULT_FRAC, FAULT_SEED))
+            .build()
+            .unwrap();
+        black_box(s.rank_latencies().len())
+    });
+
+    // DES replay throughput, healthy vs faulted, per pattern. The same
+    // traces replay on both setups so the delta is the fault tax.
+    for &pat in &[TracePattern::Uniform, TracePattern::Zipf { theta: 1.2 }] {
+        let traces: Vec<Trace> = (0..CLIENTS)
+            .map(|c| pat.generate(space, block, ACCESSES, 0x7EA5 + c as u64))
+            .collect();
+        b.iter_items(
+            &format!("replay-healthy-{}", pat.label()),
+            (CLIENTS * ACCESSES) as u64,
+            || {
+                let r = run_scenario(&healthy, CLIENTS, ACCESSES, 7, Workload::Traces(&traces))
+                    .expect("healthy replay");
+                black_box(r.latency.count())
+            },
+        );
+        b.iter_items(
+            &format!("replay-faulted-{}", pat.label()),
+            (CLIENTS * ACCESSES) as u64,
+            || {
+                let r = run_scenario(&faulted, CLIENTS, ACCESSES, 7, Workload::Traces(&traces))
+                    .expect("sampled plans never sever the network");
+                black_box(r.latency.count())
+            },
+        );
+    }
+
+    b.report();
+    println!("\nthroughput (items/s):");
+    for m in b.results() {
+        if m.items > 0 {
+            println!("  {:<28} {:>14.0}", m.name, m.throughput());
+        }
+    }
+
+    // Perf trajectory lands on disk before the assertions run, so a
+    // regression still records its numbers.
+    let path = json_path();
+    b.write_json(&path).expect("write bench json");
+    println!("wrote {}", path.display());
+
+    // Oracle smoke 1: the faulted replay is seed-deterministic.
+    let a = run_scenario(&faulted, CLIENTS, ACCESSES, 7, Workload::SharedUniform)
+        .expect("faulted replay");
+    let c = run_scenario(&faulted, CLIENTS, ACCESSES, 7, Workload::SharedUniform)
+        .expect("faulted replay");
+    assert_eq!(a.latency.mean().to_bits(), c.latency.mean().to_bits(), "faulted replay drifted");
+    assert_eq!(a.retries, c.retries);
+    assert_eq!(a.timeouts, c.timeouts);
+    println!("determinism smoke OK (faulted replay bit-stable, {} retries)", a.retries);
+
+    // Oracle smoke 2: the empty-plan path IS the legacy healthy
+    // experiment, bit for bit.
+    let empty = DesignPoint::clos(1024)
+        .mem_kb(128)
+        .k(896)
+        .faults(FaultPlan::none())
+        .build()
+        .unwrap();
+    assert!(empty.fault.is_none(), "empty plan must not materialise");
+    let new = run_scenario(&empty, CLIENTS, ACCESSES, 7, Workload::SharedUniform)
+        .expect("healthy replay");
+    let old = run_contention(&healthy, CLIENTS, ACCESSES, 7);
+    assert_eq!(
+        new.latency.mean().to_bits(),
+        old.latency.mean().to_bits(),
+        "empty-plan scenario diverged from run_contention"
+    );
+    assert_eq!(new.latency.count(), old.latency.count());
+    assert_eq!(new.inflation.to_bits(), old.inflation.to_bits());
+    assert_eq!(new.retries + new.timeouts, 0);
+    println!("oracle smoke OK (empty-plan replay == legacy run_contention bitwise)");
+}

@@ -6,6 +6,7 @@
 #   BENCH_hotpath.json    — the emulated-memory access hot path
 #   BENCH_interp.json     — decoded-vs-legacy whole-program interpretation
 #   BENCH_contention.json — trace generation + DES contention replay
+#   BENCH_faults.json     — healthy-vs-faulted DES replay + fault build cost
 #
 # Schema (all files): {"bench": <group>,
 #          "results": [{"name", "median_ns", "addrs_per_s"}]}
@@ -20,6 +21,7 @@ REPO_ROOT="$(cd "$RUST_DIR/.." && pwd)"
 OUT="$REPO_ROOT/BENCH_hotpath.json"
 INTERP_OUT="$REPO_ROOT/BENCH_interp.json"
 CONT_OUT="$REPO_ROOT/BENCH_contention.json"
+FAULTS_OUT="$REPO_ROOT/BENCH_faults.json"
 
 if [[ "${1:-}" != "--full" ]]; then
     export MEMCLOS_BENCH_QUICK=1
@@ -56,3 +58,12 @@ else
 fi
 
 echo "contention trajectory written to $CONT_OUT"
+
+if cargo bench --bench faults -- --json "$FAULTS_OUT"; then
+    :
+else
+    echo "(cargo bench faults failed; falling back to the CLI faults --json)" >&2
+    cargo run --release --bin memclos -- faults --json > "$FAULTS_OUT"
+fi
+
+echo "faults trajectory written to $FAULTS_OUT"

@@ -10,7 +10,8 @@
 use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::config::Doc;
-use crate::emulation::{EmulationSetup, TopologyKind};
+use crate::emulation::{client_tile, EmulationSetup, TopologyKind};
+use crate::fault::FaultPlan;
 use crate::netmodel::NetParams;
 use crate::tech::{ChipTech, InterposerTech};
 use crate::topology::{ClosSpec, MeshSpec};
@@ -54,6 +55,7 @@ pub struct DesignPoint {
     net: NetParams,
     chip: ChipTech,
     ip: InterposerTech,
+    fault: Option<FaultPlan>,
 }
 
 impl DesignPoint {
@@ -79,6 +81,7 @@ impl DesignPoint {
             net: NetParams::default(),
             chip: ChipTech::default(),
             ip: InterposerTech::default(),
+            fault: None,
         }
     }
 
@@ -160,6 +163,21 @@ impl DesignPoint {
         self
     }
 
+    /// Inject a fault plan (see [`crate::fault`]). An empty plan is
+    /// equivalent to not calling this at all — every path stays
+    /// bit-identical to the healthy machine (the empty-plan oracle
+    /// rule). Validated by [`Self::validate`] with field-named errors
+    /// (`fault.*`), including the capacity-degradation rule.
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.fault = Some(plan);
+        self
+    }
+
+    /// The fault plan, if one was set.
+    pub fn fault_plan(&self) -> Option<&FaultPlan> {
+        self.fault.as_ref()
+    }
+
     /// Set all three technology bundles at once.
     pub fn tech(mut self, tech: &Tech) -> Self {
         self.net = tech.net;
@@ -227,6 +245,18 @@ impl DesignPoint {
             "field `k`: need 1 <= k < tiles (tiles = {}), got {k}",
             self.tiles
         );
+        if let Some(plan) = &self.fault {
+            plan.validate(self.tiles, client_tile(self.kind, self.tiles))?;
+            // The capacity-degradation rule: dead tiles shrink the
+            // alive memory pool, which must still hold k ranks.
+            let dead = plan.dead_tile_count(self.tiles);
+            let alive = self.tiles - 1 - dead;
+            ensure!(
+                k <= alive,
+                "field `fault`: the plan leaves {alive} alive memory tiles but the \
+                 emulation needs k = {k} (dead tiles degrade capacity)"
+            );
+        }
         Ok(())
     }
 
@@ -242,6 +272,7 @@ impl DesignPoint {
             &self.chip,
             &self.ip,
             self.clos_spec,
+            self.fault.as_ref(),
         )
     }
 }
@@ -270,10 +301,75 @@ mod tests {
             (DesignPoint::clos(1024).mem_kb(96), "`mem_kb`"),
             (DesignPoint::mesh(256).clos_spec(ClosSpec::default()), "`clos_spec`"),
             (DesignPoint::clos(1024).clos_spec(ClosSpec::with_tiles(256)), "`clos_spec`"),
+            (
+                DesignPoint::clos(1024)
+                    .faults(FaultPlan { dead_tile_frac: 1.5, ..FaultPlan::none() }),
+                "`fault.dead_tile_frac`",
+            ),
+            (
+                DesignPoint::clos(1024)
+                    .faults(FaultPlan { dead_tiles: vec![3, 3], ..FaultPlan::none() }),
+                "`fault.dead_tiles`",
+            ),
+            (
+                DesignPoint::clos(1024)
+                    .faults(FaultPlan { dead_tiles: vec![2048], ..FaultPlan::none() }),
+                "`fault.dead_tiles`",
+            ),
+            // Killing the primary: Clos client is tile 0, mesh 1024's
+            // is the centre block's first tile (576).
+            (
+                DesignPoint::clos(1024)
+                    .faults(FaultPlan { dead_tiles: vec![0], ..FaultPlan::none() }),
+                "`fault.dead_tiles`",
+            ),
+            (
+                DesignPoint::mesh(1024)
+                    .faults(FaultPlan { dead_tiles: vec![576], ..FaultPlan::none() }),
+                "`fault.dead_tiles`",
+            ),
+            // Capacity degradation: a full emulation has no slack for
+            // even one dead tile.
+            (
+                DesignPoint::clos(1024)
+                    .faults(FaultPlan { dead_tiles: vec![5], ..FaultPlan::none() }),
+                "`fault`",
+            ),
         ] {
             let err = dp.build().unwrap_err().to_string();
             assert!(err.contains(field), "error `{err}` does not name {field}");
         }
+    }
+
+    #[test]
+    fn fault_plan_threads_through_the_builder() {
+        let plan = FaultPlan { dead_tiles: vec![5, 9], ..FaultPlan::none() };
+        let setup = DesignPoint::clos(1024).k(900).faults(plan.clone()).build().unwrap();
+        let fault = setup.fault.as_ref().expect("fault state materialised");
+        assert_eq!(fault.plan, plan);
+        assert_eq!(fault.map.dead_tiles, vec![5, 9]);
+        assert!(!fault.rank_tile.contains(&5) && !fault.rank_tile.contains(&9));
+        // Killing tile 1 (rank 0's healthy home) shifts rank 0 to tile 2
+        // and raises its round-trip versus the healthy setup only if the
+        // new home is further; either way the LUT follows the remap.
+        for (r, &t) in fault.rank_tile.iter().enumerate() {
+            assert_eq!(setup.tile_of_rank(r), t);
+            assert_eq!(
+                setup.rank_latencies()[r].to_bits(),
+                setup.model.access(&setup.topo, setup.map.client, t).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn empty_fault_plan_is_not_materialised() {
+        let healthy = DesignPoint::clos(1024).build().unwrap();
+        let with_empty = DesignPoint::clos(1024).faults(FaultPlan::none()).build().unwrap();
+        assert!(healthy.fault.is_none() && with_empty.fault.is_none());
+        assert_eq!(
+            healthy.expected_latency().to_bits(),
+            with_empty.expected_latency().to_bits()
+        );
     }
 
     #[test]

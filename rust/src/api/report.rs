@@ -27,11 +27,38 @@
 //! | `c_cont` | num | fitted contention factor (measured/zero-load, >= 1) |
 //! | `inflation` | num | legacy factor vs the uniform expected latency |
 //! | `wait_mean_cycles`, `wait_max_cycles` | num | per-access port-queue waiting |
+//! | `retries`, `timeouts` | int | flaky-link resends; accesses pushed through after the retry cap |
 //! | `port_util_mean`, `port_util_max` | num | per-port occupancy over the makespan |
 //! | `makespan_cycles` | int | completion time of the last access |
 //!
 //! The round-trip test lives with the emitter
 //! (`figures::contention::tests::report_rows_round_trip_their_fields`).
+//!
+//! # The `faults` row schema
+//!
+//! `memclos faults --json` and `figures::faults` emit one row per
+//! (design point, fault fraction, pattern) cell, built by
+//! [`crate::figures::faults::row_for`]:
+//!
+//! | field | type | meaning |
+//! |-------|------|---------|
+//! | `name` | str | `<topo>-<tiles>-f<fault_pm>-<pattern>-c<clients>` |
+//! | `system`, `k` | int | design point (tiles, emulation size) |
+//! | `fault_pm` | int | fault fraction in per-mille (0, 20, 50, 100) |
+//! | `pattern` | str | trace pattern label |
+//! | `clients`, `accesses` | int | crowd size; access budget per client |
+//! | `dead_tiles` | int | tiles killed by the plan (ranks remapped away) |
+//! | `degraded_links`, `flaky_links`, `failed_links` | int | the sampled link fault census |
+//! | `healed_links` | int | sampled failures restored by the connectivity heal rule |
+//! | `mean_cycles`, `p50`, `p95`, `p99`, `max_cycles` | num | the faulted latency distribution |
+//! | `slowdown` | num | mean vs the same cell at fraction 0 (same traces) |
+//! | `p99_inflation` | num | p99 vs the same cell at fraction 0 |
+//! | `retries`, `timeouts` | int | flaky-link resends; retry-cap push-throughs |
+//! | `wait_mean_cycles` | num | per-access port-queue waiting |
+//! | `makespan_cycles` | int | completion time of the last access |
+//!
+//! The round-trip test lives with the emitter
+//! (`figures::faults::tests::report_rows_round_trip_their_fields`).
 
 use std::fmt::Write as _;
 

@@ -14,5 +14,5 @@ pub mod sweep;
 pub use queue::WorkQueue;
 pub use sweep::{
     default_jobs, point_seed, run_sweep, run_sweep_seq, CacheStats, ParallelSweep, PlanPoint,
-    PlanResult, PointResult, SweepPoint,
+    PlanResult, PointResult, SweepError, SweepPoint,
 };

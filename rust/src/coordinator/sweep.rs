@@ -163,6 +163,72 @@ pub struct CacheStats {
     pub misses: u64,
 }
 
+/// Typed failure of the sweep engine itself (as opposed to an
+/// evaluation error the worker closure returned): a worker body
+/// panicked. Surfaced as an [`anyhow::Error`] so callers can
+/// `downcast_ref::<SweepError>()` to tell engine failures from point
+/// failures.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SweepError {
+    /// The closure (or evaluator) panicked while processing an item.
+    /// The panic is caught ([`std::panic::catch_unwind`]) and reported
+    /// for the lowest failing slot — the engine returns an error, it
+    /// never hangs or tears down the process.
+    WorkerPanic {
+        /// Input index of the item whose evaluation panicked.
+        slot: usize,
+        /// The panic payload, when it was a string (the common case).
+        message: String,
+    },
+}
+
+impl std::fmt::Display for SweepError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SweepError::WorkerPanic { slot, message } => {
+                write!(f, "sweep worker panicked at item {slot}: {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SweepError {}
+
+/// Lock a memo cache, recovering from poisoning. A cache only ever
+/// holds `Copy` results inserted whole, so a panic elsewhere can never
+/// leave it half-written — the data behind a poisoned lock is still
+/// valid, and refusing to serve it would turn one caught worker panic
+/// into a permanently dead engine.
+fn lock_cache<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Extract the human-readable payload of a caught panic.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run one item's evaluation with a panic net: a panic becomes a typed
+/// [`SweepError::WorkerPanic`] for `slot` instead of unwinding through
+/// the pool (which would poison the caches and abort the scope).
+/// `AssertUnwindSafe` is sound here because on `Err` the whole map
+/// aborts — no state the closure may have half-updated is ever reused.
+fn run_caught<O>(slot: usize, f: impl FnOnce() -> Result<O>) -> Result<O> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(res) => res,
+        Err(payload) => Err(anyhow::Error::new(SweepError::WorkerPanic {
+            slot,
+            message: panic_message(payload),
+        })),
+    }
+}
+
 /// Evaluate one latency point (worker body).
 fn eval_point(
     point: SweepPoint,
@@ -330,7 +396,7 @@ impl ParallelSweep {
     /// canonical encoding, bit-identical to [`run_sweep_seq`].
     pub fn eval_points(&self, points: &[SweepPoint]) -> Result<Vec<PointResult>> {
         let fresh = {
-            let cache = self.points.lock().unwrap();
+            let cache = lock_cache(&self.points);
             let mut pending: Vec<(u64, SweepPoint)> = Vec::new();
             for &p in points {
                 let key = p.canonical_key();
@@ -344,7 +410,7 @@ impl ParallelSweep {
             pending
         };
         let results = self.eval_fresh_points(&fresh)?;
-        let mut cache = self.points.lock().unwrap();
+        let mut cache = lock_cache(&self.points);
         for (&(key, _), r) in fresh.iter().zip(&results) {
             cache.insert(key, *r);
         }
@@ -363,7 +429,7 @@ impl ParallelSweep {
     /// canonical encoding (this is the cache figs 5 and 6 share).
     pub fn eval_plans(&self, points: &[PlanPoint]) -> Result<Vec<PlanResult>> {
         let fresh = {
-            let cache = self.plans.lock().unwrap();
+            let cache = lock_cache(&self.plans);
             let mut pending: Vec<(u64, PlanPoint)> = Vec::new();
             for &p in points {
                 let key = p.canonical_key();
@@ -377,7 +443,7 @@ impl ParallelSweep {
             pending
         };
         let results = self.map(&fresh, |&(_, p)| eval_plan(p, &self.tech.chip))?;
-        let mut cache = self.plans.lock().unwrap();
+        let mut cache = lock_cache(&self.plans);
         for (&(key, _), r) in fresh.iter().zip(&results) {
             cache.insert(key, *r);
         }
@@ -411,7 +477,11 @@ impl ParallelSweep {
         }
         let workers = self.jobs.min(items.len());
         if workers == 1 {
-            return items.iter().map(|i| f(i)).collect();
+            return items
+                .iter()
+                .enumerate()
+                .map(|(slot, i)| run_caught(slot, || f(i)))
+                .collect();
         }
         let queue = Arc::new(WorkQueue::<usize>::new(2 * workers));
         let (tx, rx) = mpsc::channel::<(usize, Result<O>)>();
@@ -422,7 +492,7 @@ impl ParallelSweep {
                 let tx = tx.clone();
                 scope.spawn(move || {
                     while let Some(slot) = queue.pop() {
-                        if tx.send((slot, f(&items[slot]))).is_err() {
+                        if tx.send((slot, run_caught(slot, || f(&items[slot])))).is_err() {
                             break;
                         }
                     }
@@ -450,7 +520,12 @@ impl ParallelSweep {
             let evaluator = Evaluator::new(self.mode)?;
             return fresh
                 .iter()
-                .map(|&(key, p)| eval_point(p, &self.tech, &evaluator, point_seed(self.seed, key)))
+                .enumerate()
+                .map(|(slot, &(key, p))| {
+                    run_caught(slot, || {
+                        eval_point(p, &self.tech, &evaluator, point_seed(self.seed, key))
+                    })
+                })
                 .collect();
         }
         let queue = Arc::new(WorkQueue::<(usize, u64, SweepPoint)>::new(2 * workers));
@@ -473,8 +548,9 @@ impl ParallelSweep {
                         }
                     };
                     while let Some((slot, key, point)) = queue.pop() {
-                        let res =
-                            eval_point(point, &self.tech, &evaluator, point_seed(self.seed, key));
+                        let res = run_caught(slot, || {
+                            eval_point(point, &self.tech, &evaluator, point_seed(self.seed, key))
+                        });
                         if tx.send((slot, res)).is_err() {
                             break;
                         }
@@ -717,6 +793,39 @@ mod tests {
                 })
                 .unwrap_err();
             assert_eq!(err.to_string(), "boom at 3", "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn a_panicking_worker_is_a_typed_error_not_a_hang() {
+        // Satellite: inject a panicking backend closure and assert the
+        // engine surfaces a typed SweepError (lowest slot) instead of
+        // hanging, poisoning its caches or tearing the process down.
+        let items: Vec<usize> = (0..40).collect();
+        for jobs in [1usize, 4] {
+            let engine = ParallelSweep::new(Mode::Exact, &Tech::default(), jobs, 0);
+            let err = engine
+                .map(&items, |&i| {
+                    if i == 5 {
+                        panic!("injected backend panic at {i}");
+                    }
+                    Ok(i)
+                })
+                .unwrap_err();
+            let typed = err.downcast_ref::<SweepError>().expect("typed SweepError");
+            assert_eq!(
+                *typed,
+                SweepError::WorkerPanic {
+                    slot: 5,
+                    message: "injected backend panic at 5".to_string()
+                },
+                "jobs={jobs}"
+            );
+            assert!(err.to_string().contains("panicked at item 5"), "{err}");
+            // The engine stays usable after the caught panic: a fresh
+            // map succeeds and the memo caches still serve.
+            assert_eq!(engine.map(&items, |&i| Ok(i + 1)).unwrap()[0], 1);
+            assert_eq!(engine.eval_points(&points()).unwrap().len(), 3);
         }
     }
 }

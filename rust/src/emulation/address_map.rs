@@ -49,6 +49,38 @@ impl AddressMap {
         debug_assert!(r < self.k);
         (self.client + 1 + r) % self.tiles
     }
+
+    /// Rank -> tile placement with the `dead` tiles removed: walk the
+    /// same ring (`client + 1, client + 2, ...` mod `tiles`) but skip
+    /// the client and every dead tile, taking the first `k` survivors.
+    ///
+    /// This is the documented **capacity-degradation rule**: dead tiles
+    /// shrink the alive pool, and a plan that leaves fewer than `k`
+    /// alive memory tiles is an error (`DesignPoint::validate` reports
+    /// it first with a field-named message; this is the backstop). With
+    /// no dead tiles the result is the identity ring — bit-identical
+    /// ints to [`Self::tile_of_rank`] (the empty-plan oracle rule).
+    pub fn remap_ranks(&self, dead: &[usize]) -> anyhow::Result<Vec<usize>> {
+        let dead_set: std::collections::HashSet<usize> = dead.iter().copied().collect();
+        let mut out = Vec::with_capacity(self.k);
+        for step in 1..self.tiles {
+            let t = (self.client + step) % self.tiles;
+            if !dead_set.contains(&t) {
+                out.push(t);
+                if out.len() == self.k {
+                    break;
+                }
+            }
+        }
+        anyhow::ensure!(
+            out.len() == self.k,
+            "fault plan leaves {} alive memory tiles but the emulation needs k = {} \
+             (capacity degradation)",
+            self.tiles - 1 - dead_set.len(),
+            self.k
+        );
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -107,5 +139,30 @@ mod tests {
     #[should_panic(expected = "must leave the client tile free")]
     fn k_equal_tiles_rejected() {
         AddressMap::new(10, 8, 0, 8);
+    }
+
+    #[test]
+    fn remap_with_no_dead_tiles_is_the_identity_ring() {
+        let m = AddressMap::new(12, 100, 57, 128);
+        let remapped = m.remap_ranks(&[]).unwrap();
+        let healthy: Vec<usize> = (0..m.k).map(|r| m.tile_of_rank(r)).collect();
+        assert_eq!(remapped, healthy);
+    }
+
+    #[test]
+    fn remap_skips_dead_tiles_in_ring_order() {
+        let m = AddressMap::new(10, 5, 6, 8);
+        // Ring from tile 7: [7, 0, 1, 2, 3, 4, 5]; killing 0 and 3
+        // shifts the survivors up.
+        let remapped = m.remap_ranks(&[0, 3]).unwrap();
+        assert_eq!(remapped, vec![7, 1, 2, 4, 5]);
+    }
+
+    #[test]
+    fn remap_reports_capacity_degradation() {
+        let m = AddressMap::new(10, 7, 6, 8); // full emulation: no slack
+        let err = m.remap_ranks(&[2]).unwrap_err().to_string();
+        assert!(err.contains("6 alive memory tiles"), "{err}");
+        assert!(err.contains("k = 7"), "{err}");
     }
 }

@@ -33,9 +33,11 @@
 //! bench measures the speedup between them.
 //!
 //! Invariant: `rank_latency[r] == model.access(&topo, map.client,
-//! map.tile_of_rank(r))` for every rank `r`; any mutation of `topo`,
-//! `map` or `model` requires rebuilding the LUT (no such mutation is
-//! exposed — design points are immutable once built).
+//! tile_of_rank(r))` for every rank `r`, where `tile_of_rank` is the
+//! fault-aware placement (the healthy ring, or the dead-tile remap when
+//! a fault state is present); any mutation of `topo`, `map`, `model` or
+//! `fault` requires rebuilding the LUT (no such mutation is exposed —
+//! design points are immutable once built).
 
 use anyhow::Result;
 
@@ -66,6 +68,22 @@ impl TopologyKind {
     }
 }
 
+/// Client (primary) tile of a `system_tiles`-tile system: tile 0 for
+/// the Clos (the network is symmetric) and the centre block's first
+/// tile for the mesh. Exposed so `DesignPoint::validate` can reject a
+/// fault plan that kills the primary *before* building the topology —
+/// must stay in lockstep with [`EmulationSetup::assemble`]'s placement.
+pub fn client_tile(kind: TopologyKind, system_tiles: usize) -> usize {
+    match kind {
+        TopologyKind::Clos => 0,
+        TopologyKind::Mesh => {
+            let spec = MeshSpec::with_tiles(system_tiles);
+            let bx = spec.blocks_x();
+            ((bx / 2) * bx + bx / 2) * spec.tiles_per_block
+        }
+    }
+}
+
 /// A fully-instantiated design point.
 #[derive(Clone, Debug)]
 pub struct EmulationSetup {
@@ -79,6 +97,10 @@ pub struct EmulationSetup {
     pub model: LatencyModel,
     /// Chip count of the system.
     pub chips: usize,
+    /// Materialised fault state, `None` on a healthy machine. An empty
+    /// [`crate::fault::FaultPlan`] never materialises (the empty-plan
+    /// oracle rule), so `Some` implies at least one concrete fault.
+    pub fault: Option<crate::fault::FaultState>,
     /// Rank-indexed access-latency LUT: `rank_latency[r]` is the round
     /// trip to `map.tile_of_rank(r)` (see the module's Hot path notes).
     rank_latency: Vec<f64>,
@@ -129,6 +151,7 @@ impl EmulationSetup {
         chip_tech: &ChipTech,
         ip_tech: &InterposerTech,
         clos_spec: Option<crate::topology::ClosSpec>,
+        fault_plan: Option<&crate::fault::FaultPlan>,
     ) -> Result<Self> {
         anyhow::ensure!(k >= 1 && k < system_tiles, "1 <= k < tiles required (k={k})");
         // Words are 32-bit: mem_kb KB = mem_kb * 256 words.
@@ -171,19 +194,41 @@ impl EmulationSetup {
                     mesh_cross_extra: pkg.interposer_cycles as f64,
                 };
                 let mesh = Mesh2D::build(spec)?;
-                // Client at the centre block's first tile.
-                let bx = spec.blocks_x();
-                let centre_block = (bx / 2) * bx + bx / 2;
-                let client = centre_block * spec.tiles_per_block;
+                // Client at the centre block's first tile (see
+                // `client_tile`, which mirrors this placement).
+                let client = client_tile(TopologyKind::Mesh, system_tiles);
                 (Topology::Mesh(mesh), links, client, spec.chips())
             }
         };
+        debug_assert_eq!(client, client_tile(kind, system_tiles));
 
         let map = AddressMap::new(log2_wpt, k, client, system_tiles);
         let model = LatencyModel::new(net, links);
-        let rank_latency = model.access_lut(&topo, client, (0..k).map(|r| map.tile_of_rank(r)));
+
+        // Materialise the fault plan (empty plans never materialise —
+        // the empty-plan oracle rule keeps `fault == None` on every
+        // healthy path). The design point's canonical key decorrelates
+        // the same plan across different systems.
+        let fault = match fault_plan {
+            Some(plan) if !plan.is_empty() => {
+                let design_key = crate::coordinator::SweepPoint {
+                    kind,
+                    tiles: system_tiles,
+                    mem_kb,
+                    k,
+                }
+                .canonical_key();
+                Some(crate::fault::FaultState::materialise(plan, &topo, &map, design_key)?)
+            }
+            _ => None,
+        };
+
+        let rank_latency = match &fault {
+            Some(f) => model.access_lut(&topo, client, f.rank_tile.iter().copied()),
+            None => model.access_lut(&topo, client, (0..k).map(|r| map.tile_of_rank(r))),
+        };
         let mean_latency = rank_latency.iter().sum::<f64>() / k as f64;
-        Ok(Self { topo, mem_kb, map, model, chips, rank_latency, mean_latency })
+        Ok(Self { topo, mem_kb, map, model, chips, fault, rank_latency, mean_latency })
     }
 
     /// Convenience: build with default technology and Table 5 params.
@@ -217,8 +262,27 @@ impl EmulationSetup {
     /// the LUT is property-tested against and as the slow side of the
     /// hotpath bench — do not use in hot loops.
     pub fn access_cycles_routed(&self, addr: u64) -> f64 {
-        let tile = self.map.tile_of(addr);
+        let tile = self.tile_of(addr);
         self.model.access(&self.topo, self.map.client, tile)
+    }
+
+    /// Physical tile of a memory rank, fault-aware: the dead-tile
+    /// remap when a fault state is present, the healthy ring otherwise
+    /// (identical ints on a healthy machine — the empty-plan oracle
+    /// rule).
+    #[inline]
+    pub fn tile_of_rank(&self, r: usize) -> usize {
+        match &self.fault {
+            Some(f) => f.rank_tile[r],
+            None => self.map.tile_of_rank(r),
+        }
+    }
+
+    /// Physical tile holding a word address, fault-aware (see
+    /// [`Self::tile_of_rank`]).
+    #[inline]
+    pub fn tile_of(&self, addr: u64) -> usize {
+        self.tile_of_rank(self.map.rank_of(addr))
     }
 
     /// The rank-indexed latency LUT (entry `r` is the round trip to

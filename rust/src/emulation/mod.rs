@@ -18,5 +18,5 @@ pub mod sequential;
 
 pub use address_map::AddressMap;
 pub use controller::{LOAD_EXTRA_INSTRS, STORE_EXTRA_INSTRS};
-pub use machine::{EmulationSetup, TopologyKind};
+pub use machine::{client_tile, EmulationSetup, TopologyKind};
 pub use sequential::SequentialMachine;

@@ -1,0 +1,427 @@
+//! Materialising a [`FaultPlan`] against one built topology: the
+//! concrete dead tiles and per-directed-port fault states the routing
+//! layer and the DES consume.
+
+use anyhow::Result;
+
+use super::plan::FaultPlan;
+use crate::coordinator::point_seed;
+use crate::emulation::AddressMap;
+use crate::topology::graph::{port_offsets, Graph, NodeId};
+use crate::topology::Topology;
+use crate::util::rng::Rng;
+
+/// Per-category stream constants: each fault category draws from its
+/// own `point_seed(plan_key ^ design_key, STREAM)` generator, so adding
+/// a category never perturbs another's draws.
+const STREAM_DEAD: u64 = 0xFA17_0001;
+const STREAM_DEGRADED: u64 = 0xFA17_0002;
+const STREAM_FLAKY: u64 = 0xFA17_0003;
+const STREAM_PORTS: u64 = 0xFA17_0004;
+
+/// Fault state of one *directed* switch port (the unit of the DES's
+/// per-port arena). Default = healthy.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PortFault {
+    /// The port (and hence its link) is down: routing avoids it, and a
+    /// message that would need it finds the destination unreachable.
+    pub failed: bool,
+    /// Degraded link: each traversal costs `1..=jitter_max` extra
+    /// cycles of seed-deterministic jitter (0 = healthy).
+    pub jitter_max: u64,
+    /// Flaky link: each traversal fails with this probability and is
+    /// retried with capped exponential backoff (0.0 = reliable).
+    pub drop_prob: f64,
+}
+
+impl PortFault {
+    /// True when the port carries any fault at all.
+    pub fn is_faulty(&self) -> bool {
+        self.failed || self.jitter_max > 0 || self.drop_prob > 0.0
+    }
+}
+
+/// Typed failure of a fault-aware network operation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultError {
+    /// No route exists between two switches under the active fault
+    /// plan (every connecting port is failed).
+    Unreachable {
+        /// Source switch.
+        from: usize,
+        /// Destination switch.
+        to: usize,
+    },
+}
+
+impl std::fmt::Display for FaultError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FaultError::Unreachable { from, to } => write!(
+                f,
+                "switch {to} is unreachable from switch {from} under the active fault plan"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FaultError {}
+
+/// A [`FaultPlan`] materialised against one topology: concrete dead
+/// tiles and a per-directed-port fault arena.
+///
+/// Determinism contract: `materialise` is a pure function of
+/// `(plan, topology, client, design_key)` — every draw comes from a
+/// canonical [`point_seed`] stream, so rebuilding the same design
+/// point yields bit-identical faults at any `--jobs` count.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultMap {
+    /// Dead tiles (explicit + sampled), sorted ascending. Never
+    /// contains the client tile.
+    pub dead_tiles: Vec<usize>,
+    /// Fault state per directed port, indexed by the
+    /// [`crate::topology::RoutingTable`] CSR port id. `failed` is set
+    /// symmetrically (a dead port takes its link down both ways), so
+    /// routing over the surviving links stays well-defined.
+    pub ports: Vec<PortFault>,
+    /// Undirected links degraded (jitter).
+    pub degraded_links: usize,
+    /// Undirected links flaky (drop + retry).
+    pub flaky_links: usize,
+    /// Undirected links fully down (failed ports), after healing.
+    pub failed_links: usize,
+    /// Sampled port failures restored because they would have
+    /// disconnected the switch graph (the documented heal rule:
+    /// sampled plans never partition the machine; only hand-built maps
+    /// can produce [`FaultError::Unreachable`]).
+    pub healed_links: usize,
+}
+
+impl FaultMap {
+    /// Materialise a plan against a topology. `design_key` is the
+    /// design point's canonical encoding (it decorrelates the same
+    /// plan across different systems); `client` is the primary tile,
+    /// excluded from dead-tile sampling.
+    pub fn materialise(
+        plan: &FaultPlan,
+        topo: &Topology,
+        client: usize,
+        design_key: u64,
+    ) -> Self {
+        let g = topo.graph();
+        let offsets = port_offsets(g);
+        let num_ports = *offsets.last().unwrap_or(&0) as usize;
+        let base = plan.canonical_key() ^ design_key;
+
+        // Dead tiles: the explicit list plus a sampled complement,
+        // drawn from the non-client, non-explicit population by a
+        // partial Fisher-Yates over the ascending candidate list.
+        let tiles = g.num_tiles();
+        let mut dead_tiles = plan.dead_tiles.clone();
+        let extra = plan.dead_tile_count(tiles) - dead_tiles.len();
+        if extra > 0 {
+            let explicit: std::collections::HashSet<usize> =
+                dead_tiles.iter().copied().collect();
+            let mut candidates: Vec<usize> =
+                (0..tiles).filter(|&t| t != client && !explicit.contains(&t)).collect();
+            let mut rng = Rng::new(point_seed(base, STREAM_DEAD));
+            for i in 0..extra {
+                let j = i + rng.below((candidates.len() - i) as u64) as usize;
+                candidates.swap(i, j);
+            }
+            dead_tiles.extend_from_slice(&candidates[..extra]);
+        }
+        dead_tiles.sort_unstable();
+
+        // Link faults: walk the undirected links in canonical order
+        // (ascending by lower endpoint, then adjacency index) and draw
+        // each category from its own stream. Degraded/flaky states and
+        // port failures are applied to BOTH directed ports of a link.
+        let links = undirected_links(g, &offsets);
+        let mut ports = vec![PortFault::default(); num_ports];
+        let mut degraded_links = 0usize;
+        let mut flaky_links = 0usize;
+        if plan.degraded_link_frac > 0.0 {
+            let mut rng = Rng::new(point_seed(base, STREAM_DEGRADED));
+            for &(p, q) in &links {
+                if rng.chance(plan.degraded_link_frac) {
+                    ports[p].jitter_max = plan.jitter_max;
+                    ports[q].jitter_max = plan.jitter_max;
+                    degraded_links += 1;
+                }
+            }
+        }
+        if plan.flaky_link_frac > 0.0 {
+            let mut rng = Rng::new(point_seed(base, STREAM_FLAKY));
+            for &(p, q) in &links {
+                if rng.chance(plan.flaky_link_frac) {
+                    ports[p].drop_prob = plan.drop_prob;
+                    ports[q].drop_prob = plan.drop_prob;
+                    flaky_links += 1;
+                }
+            }
+        }
+
+        // Failed ports, with the connectivity heal rule: a sampled
+        // failure that would shrink the switch graph's reachable set is
+        // restored (in draw order), so sampled plans never partition
+        // the client from the memory pool.
+        let mut failed_links = 0usize;
+        let mut healed_links = 0usize;
+        if plan.failed_port_frac > 0.0 && !links.is_empty() {
+            let mut rng = Rng::new(point_seed(base, STREAM_PORTS));
+            let baseline = reachable_count(g, &offsets, &ports);
+            for &(p, q) in &links {
+                if !rng.chance(plan.failed_port_frac) {
+                    continue;
+                }
+                if ports[p].failed {
+                    continue; // already down (parallel link share)
+                }
+                ports[p].failed = true;
+                ports[q].failed = true;
+                if reachable_count(g, &offsets, &ports) == baseline {
+                    failed_links += 1;
+                } else {
+                    ports[p].failed = false;
+                    ports[q].failed = false;
+                    healed_links += 1;
+                }
+            }
+        }
+
+        Self { dead_tiles, ports, degraded_links, flaky_links, failed_links, healed_links }
+    }
+
+    /// True when any directed port carries a fault (the DES's guard:
+    /// false means the walk must take the exact healthy path).
+    pub fn has_port_faults(&self) -> bool {
+        self.ports.iter().any(|p| p.is_faulty())
+    }
+
+    /// The per-directed-port failed mask routing builds avoid.
+    pub fn failed_ports(&self) -> Vec<bool> {
+        self.ports.iter().map(|p| p.failed).collect()
+    }
+}
+
+/// A plan bundled with its materialisation and the dead-tile-aware
+/// rank placement — the fault field of an
+/// [`crate::emulation::EmulationSetup`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultState {
+    /// The specification.
+    pub plan: FaultPlan,
+    /// Its materialisation against this setup's topology.
+    pub map: FaultMap,
+    /// Rank -> physical tile, remapped off the dead tiles
+    /// ([`AddressMap::remap_ranks`]); identical to the healthy ring
+    /// when no tile is dead.
+    pub rank_tile: Vec<usize>,
+}
+
+impl FaultState {
+    /// Materialise `plan` for a built topology + address map. Errors
+    /// only on the capacity-degradation rule (dead tiles leaving fewer
+    /// than `k` alive tiles) — a backstop; `DesignPoint::validate`
+    /// reports the same condition with a field-named error first.
+    pub fn materialise(
+        plan: &FaultPlan,
+        topo: &Topology,
+        map: &AddressMap,
+        design_key: u64,
+    ) -> Result<Self> {
+        let fmap = FaultMap::materialise(plan, topo, map.client, design_key);
+        let rank_tile = map.remap_ranks(&fmap.dead_tiles)?;
+        Ok(Self { plan: plan.clone(), map: fmap, rank_tile })
+    }
+}
+
+/// Canonical undirected-link enumeration as `(port_uv, port_vu)` CSR
+/// port-id pairs: ascending by lower endpoint `u`, then by `u`'s
+/// adjacency index. Multigraph-safe: the `c`-th adjacency entry of `u`
+/// targeting `v` pairs with the `c`-th entry of `v` targeting `u`
+/// (valid because `Graph::add_link` pushes both directions together).
+fn undirected_links(g: &Graph, offsets: &[u32]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    for u in 0..g.num_switches() {
+        let mut occurrence = std::collections::HashMap::new();
+        for (e, &(v, _)) in g.neighbours(NodeId(u)).iter().enumerate() {
+            let c = occurrence.entry(v.0).or_insert(0usize);
+            let this_c = *c;
+            *c += 1;
+            if v.0 <= u {
+                continue; // counted from the lower endpoint (no self loops exist)
+            }
+            let e2 = g
+                .neighbours(v)
+                .iter()
+                .enumerate()
+                .filter(|&(_, &(w, _))| w.0 == u)
+                .nth(this_c)
+                .map(|(i, _)| i)
+                .expect("undirected multigraph: reverse entry exists");
+            out.push((offsets[u] as usize + e, offsets[v.0] as usize + e2));
+        }
+    }
+    out
+}
+
+/// Switches reachable from switch 0 over non-failed links.
+fn reachable_count(g: &Graph, offsets: &[u32], ports: &[PortFault]) -> usize {
+    let n = g.num_switches();
+    if n == 0 {
+        return 0;
+    }
+    let mut seen = vec![false; n];
+    let mut stack = vec![0usize];
+    seen[0] = true;
+    let mut count = 1;
+    while let Some(u) = stack.pop() {
+        for (e, &(v, _)) in g.neighbours(NodeId(u)).iter().enumerate() {
+            if !ports[offsets[u] as usize + e].failed && !seen[v.0] {
+                seen[v.0] = true;
+                count += 1;
+                stack.push(v.0);
+            }
+        }
+    }
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{ClosSpec, FoldedClos, RoutingTable};
+
+    fn clos(tiles: usize) -> Topology {
+        Topology::Clos(FoldedClos::build(ClosSpec::with_tiles(tiles)).unwrap())
+    }
+
+    fn mesh(tiles: usize) -> Topology {
+        use crate::topology::{Mesh2D, MeshSpec};
+        Topology::Mesh(Mesh2D::build(MeshSpec::with_tiles(tiles)).unwrap())
+    }
+
+    #[test]
+    fn materialise_is_deterministic() {
+        let topo = clos(1024);
+        let plan = FaultPlan::fraction(0.08, 42);
+        let a = FaultMap::materialise(&plan, &topo, 0, 0xD15C0);
+        let b = FaultMap::materialise(&plan, &topo, 0, 0xD15C0);
+        assert_eq!(a, b);
+        // A different design key draws different faults.
+        let c = FaultMap::materialise(&plan, &topo, 0, 0xD15C1);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn dead_tiles_skip_client_and_hit_the_count() {
+        for topo in [clos(256), mesh(256)] {
+            let plan = FaultPlan {
+                dead_tiles: vec![7, 19],
+                dead_tile_frac: 0.1,
+                ..FaultPlan::none()
+            };
+            let m = FaultMap::materialise(&plan, &topo, 5, 1);
+            assert_eq!(m.dead_tiles.len(), plan.dead_tile_count(256));
+            assert!(m.dead_tiles.contains(&7) && m.dead_tiles.contains(&19));
+            assert!(!m.dead_tiles.contains(&5), "client sampled dead");
+            let mut sorted = m.dead_tiles.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted, m.dead_tiles, "sorted and duplicate-free");
+        }
+    }
+
+    #[test]
+    fn link_faults_are_symmetric() {
+        let topo = clos(1024);
+        let g = topo.graph();
+        let offsets = port_offsets(g);
+        let plan = FaultPlan::fraction(0.10, 3);
+        let m = FaultMap::materialise(&plan, &topo, 0, 9);
+        assert!(m.degraded_links > 0 && m.flaky_links > 0, "{m:?}");
+        for &(p, q) in &undirected_links(g, &offsets) {
+            assert_eq!(m.ports[p].failed, m.ports[q].failed);
+            assert_eq!(m.ports[p].jitter_max, m.ports[q].jitter_max);
+            assert_eq!(m.ports[p].drop_prob.to_bits(), m.ports[q].drop_prob.to_bits());
+        }
+    }
+
+    #[test]
+    fn sampled_port_failures_never_disconnect() {
+        // The heal rule: after materialisation the whole switch graph
+        // stays mutually reachable through the fault-avoiding table.
+        for topo in [clos(1024), mesh(256)] {
+            let plan = FaultPlan {
+                failed_port_frac: 0.25, // aggressive, to force healing
+                ..FaultPlan::none()
+            };
+            let m = FaultMap::materialise(&plan, &topo, 0, 4);
+            assert!(m.failed_links > 0, "nothing failed at 25%");
+            let rt = RoutingTable::build_avoiding(topo.graph(), &m.failed_ports());
+            let g = topo.graph();
+            for s in 0..g.num_switches() {
+                assert!(
+                    rt.walk_distance(g, NodeId(0), NodeId(s)).is_some(),
+                    "switch {s} unreachable after sampled faults"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_plan_materialises_to_nothing() {
+        let topo = clos(256);
+        let m = FaultMap::materialise(&FaultPlan::none(), &topo, 0, 1);
+        assert!(m.dead_tiles.is_empty());
+        assert!(!m.has_port_faults());
+        assert_eq!(m.degraded_links + m.flaky_links + m.failed_links, 0);
+    }
+
+    #[test]
+    fn undirected_links_pair_every_directed_port() {
+        for topo in [clos(1024), mesh(256)] {
+            let g = topo.graph();
+            let offsets = port_offsets(g);
+            let links = undirected_links(g, &offsets);
+            let num_ports = *offsets.last().unwrap() as usize;
+            assert_eq!(links.len() * 2, num_ports, "{}", topo.name());
+            let mut seen = vec![false; num_ports];
+            for &(p, q) in &links {
+                assert_ne!(p, q);
+                for x in [p, q] {
+                    assert!(!seen[x], "port {x} paired twice");
+                    seen[x] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s));
+        }
+    }
+
+    #[test]
+    fn fault_error_displays_switches() {
+        let e = FaultError::Unreachable { from: 3, to: 9 };
+        let s = e.to_string();
+        assert!(s.contains('3') && s.contains('9') && s.contains("unreachable"));
+        let _: &dyn std::error::Error = &e;
+    }
+
+    #[test]
+    fn state_capacity_rule_is_a_typed_error() {
+        let topo = clos(256);
+        let map = AddressMap::new(12, 255, 0, 256);
+        let plan = FaultPlan { dead_tiles: vec![9], ..FaultPlan::none() };
+        let design_key = 0x51;
+        let err =
+            FaultState::materialise(&plan, &topo, &map, design_key).unwrap_err().to_string();
+        assert!(err.contains("alive"), "{err}");
+        // With head room the remap simply skips the dead tile.
+        let map = AddressMap::new(12, 200, 0, 256);
+        let st = FaultState::materialise(&plan, &topo, &map, design_key).unwrap();
+        assert_eq!(st.rank_tile.len(), 200);
+        assert!(!st.rank_tile.contains(&9));
+        assert!(!st.rank_tile.contains(&0));
+    }
+}

@@ -1,0 +1,59 @@
+//! Fault injection & degradation: a seed-deterministic fault model for
+//! otherwise-healthy design points.
+//!
+//! Production machines lose tiles, links and switch ports; the paper
+//! models none of that. This module supplies the missing layer as a
+//! two-stage pipeline:
+//!
+//! * [`FaultPlan`] (in [`plan`]) — the user-facing *specification*: an
+//!   explicit dead-tile list plus sampled fault fractions (dead tiles,
+//!   degraded links with bounded latency jitter, flaky links with a
+//!   per-traversal drop probability, failed switch ports) and the plan
+//!   seed every draw derives from. A plan is data; it names no concrete
+//!   link until it meets a topology.
+//! * [`FaultMap`] (in [`map`]) — the *materialisation* of a plan
+//!   against one built topology: the sorted dead-tile set and a
+//!   per-directed-port [`PortFault`] arena indexed by the
+//!   [`crate::topology::RoutingTable`] CSR port ids. Every draw comes
+//!   from [`crate::coordinator::point_seed`] streams keyed by the plan
+//!   seed, the design point's canonical key and a per-category stream
+//!   constant — a pure function of identity, never of scheduling — so
+//!   any `--jobs` count materialises bit-identical faults.
+//!
+//! [`FaultState`] bundles the plan, its materialised map and the
+//! dead-tile-aware rank remap ([`crate::emulation::AddressMap::remap_ranks`])
+//! inside an [`crate::emulation::EmulationSetup`].
+//!
+//! # The empty-plan oracle rule
+//!
+//! An empty plan ([`FaultPlan::is_empty`]) must leave **every** path —
+//! routing tables, DES timing, contention summaries, figure bits —
+//! bit-identical to the healthy machine. The implementation guarantees
+//! this by construction: `DesignPoint::build` skips materialisation
+//! entirely for an empty plan (`setup.fault == None`), and every fault
+//! branch in the DES is guarded by "is there a non-default port
+//! fault?". New fault kinds MUST keep this shape: default-valued knobs
+//! mean "not present", and the `tests/fault_determinism.rs` empty-plan
+//! suite must keep passing unchanged.
+//!
+//! # Typed failure, never panics
+//!
+//! Hand-built plans can sever the network or kill the memory pool;
+//! both surface as typed errors: [`FaultError::Unreachable`] from the
+//! DES walk, and field-named `DesignPoint` validation errors for plans
+//! that kill the primary tile or leave fewer than `k` alive tiles
+//! (the capacity-degradation rule). Sampled plans are *healed*: port
+//! failures that would disconnect the switch graph are restored in
+//! draw order, so `figures::faults` and `figures --all` never trip the
+//! error path (tests exercise it with hand-built maps instead).
+
+pub mod map;
+pub mod plan;
+
+pub use map::{FaultError, FaultMap, FaultState, PortFault};
+pub use plan::FaultPlan;
+
+/// Stream constant separating the DES's per-scenario fault RNG (jitter
+/// and flaky-link draws) from the address-stream seed of the same
+/// scenario: the fault stream is `point_seed(scenario_seed, DES_STREAM)`.
+pub const DES_STREAM: u64 = 0xFA17_0DE5;

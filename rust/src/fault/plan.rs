@@ -1,0 +1,278 @@
+//! The user-facing fault specification: what is broken, how badly, and
+//! the seed every sampled draw derives from.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::coordinator::point_seed;
+
+/// Upper bound on [`FaultPlan::jitter_max`]: jitter is *bounded* by
+/// contract (the DES charges `1..=jitter_max` extra cycles per degraded
+/// traversal), and a bound above this is a configuration error, not a
+/// model.
+pub const JITTER_CEILING: u64 = 65_536;
+
+/// A seed-deterministic fault model for one design point.
+///
+/// The plan is pure data: fractions, an explicit dead-tile list and a
+/// seed. It is threaded through [`crate::api::DesignPoint::faults`],
+/// validated by the builder (field-named errors), and materialised
+/// against the built topology as a [`super::FaultMap`]. See the
+/// [module docs](super) for the empty-plan oracle rule.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Explicitly dead tiles (their SRAM is lost; ranks remap around
+    /// them). Must not contain duplicates or the primary (client) tile.
+    pub dead_tiles: Vec<usize>,
+    /// Fraction of tiles to *additionally* kill by sampling (rounded to
+    /// `round(frac * tiles)` tiles, drawn from the non-client,
+    /// non-explicitly-dead population). In `[0, 1)`.
+    pub dead_tile_frac: f64,
+    /// Fraction of undirected links that are degraded: each traversal
+    /// of a degraded link costs `1..=jitter_max` extra cycles of
+    /// seed-deterministic jitter. In `[0, 1]`.
+    pub degraded_link_frac: f64,
+    /// Bounded per-traversal jitter on degraded links, cycles. Must be
+    /// `>= 1` when `degraded_link_frac > 0` and `<= JITTER_CEILING`.
+    pub jitter_max: u64,
+    /// Fraction of undirected links that are flaky: each traversal
+    /// fails with probability `drop_prob` and is retried with capped
+    /// exponential backoff (see `sim::network`). In `[0, 1]`.
+    pub flaky_link_frac: f64,
+    /// Per-traversal failure probability on flaky links. Must lie in
+    /// `(0, 1)` when `flaky_link_frac > 0`.
+    pub drop_prob: f64,
+    /// Fraction of undirected links taken fully down by a failed switch
+    /// port (a dead port kills its link in both directions — routing
+    /// recomputes around it). In `[0, 1]`. Sampled failures that would
+    /// disconnect the switch graph are healed (restored) in draw order.
+    pub failed_port_frac: f64,
+    /// Seed of every sampled draw (mixed with the design point's
+    /// canonical key and a per-category stream constant).
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// The empty plan: no faults. Bit-identical to not setting a plan
+    /// at all (the empty-plan oracle rule).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// True when the plan injects nothing — the machine is healthy and
+    /// every fault path must be skipped entirely.
+    pub fn is_empty(&self) -> bool {
+        self.dead_tiles.is_empty()
+            && self.dead_tile_frac == 0.0
+            && self.degraded_link_frac == 0.0
+            && self.flaky_link_frac == 0.0
+            && self.failed_port_frac == 0.0
+    }
+
+    /// The one-knob plan the `faults` figure and `--fault-frac` sweep:
+    /// fraction `f` of tiles dead, links degraded (jitter up to 4
+    /// cycles) and links flaky (10 % drop), `f/2` of links port-failed.
+    /// `f = 0` yields the empty plan.
+    pub fn fraction(f: f64, seed: u64) -> Self {
+        if f == 0.0 {
+            return Self::none();
+        }
+        Self {
+            dead_tiles: Vec::new(),
+            dead_tile_frac: f,
+            degraded_link_frac: f,
+            jitter_max: 4,
+            flaky_link_frac: f,
+            drop_prob: 0.1,
+            failed_port_frac: f / 2.0,
+            seed,
+        }
+    }
+
+    /// Canonical encoding of the plan — folded into figure cell seeds
+    /// and cache keys, so two distinct plans never share a stream.
+    /// Pure function of the plan's fields (f64 knobs by bit pattern).
+    pub fn canonical_key(&self) -> u64 {
+        let mut key = point_seed(0xFA17_0C0D_E000_0001, self.seed);
+        for x in [
+            self.dead_tile_frac.to_bits(),
+            self.degraded_link_frac.to_bits(),
+            self.jitter_max,
+            self.flaky_link_frac.to_bits(),
+            self.drop_prob.to_bits(),
+            self.failed_port_frac.to_bits(),
+        ] {
+            key = point_seed(key, x);
+        }
+        for &t in &self.dead_tiles {
+            key = point_seed(key, t as u64 ^ 0xDEAD);
+        }
+        key
+    }
+
+    /// Total dead tiles the plan produces on a `tiles`-tile system:
+    /// the explicit list plus `round(dead_tile_frac * tiles)` sampled
+    /// ones, clamped to the non-client population. Shared by builder
+    /// validation (the capacity-degradation rule) and materialisation,
+    /// so the two can never disagree.
+    pub fn dead_tile_count(&self, tiles: usize) -> usize {
+        let sampled = (self.dead_tile_frac * tiles as f64).round() as usize;
+        let candidates = (tiles - 1).saturating_sub(self.dead_tiles.len());
+        self.dead_tiles.len() + sampled.min(candidates)
+    }
+
+    /// Field-named validation against a concrete system: fraction
+    /// ranges, jitter/drop consistency, dead-tile ids (in range, no
+    /// duplicates, never the primary tile). The capacity-degradation
+    /// check (`k` must fit the alive pool) lives in
+    /// `DesignPoint::validate`, which knows `k`.
+    pub fn validate(&self, tiles: usize, primary: usize) -> Result<()> {
+        for (name, frac, half_open) in [
+            ("dead_tile_frac", self.dead_tile_frac, true),
+            ("degraded_link_frac", self.degraded_link_frac, false),
+            ("flaky_link_frac", self.flaky_link_frac, false),
+            ("failed_port_frac", self.failed_port_frac, false),
+        ] {
+            let ok = frac.is_finite()
+                && frac >= 0.0
+                && if half_open { frac < 1.0 } else { frac <= 1.0 };
+            ensure!(
+                ok,
+                "field `fault.{name}`: fraction must lie in [0, 1{}, got {frac}",
+                if half_open { ")" } else { "]" }
+            );
+        }
+        if self.degraded_link_frac > 0.0 {
+            ensure!(
+                self.jitter_max >= 1,
+                "field `fault.jitter_max`: degraded links need jitter_max >= 1, got {}",
+                self.jitter_max
+            );
+        }
+        ensure!(
+            self.jitter_max <= JITTER_CEILING,
+            "field `fault.jitter_max`: jitter is bounded by {JITTER_CEILING}, got {}",
+            self.jitter_max
+        );
+        if self.flaky_link_frac > 0.0 {
+            ensure!(
+                self.drop_prob.is_finite() && self.drop_prob > 0.0 && self.drop_prob < 1.0,
+                "field `fault.drop_prob`: flaky links need a drop probability in (0, 1), got {}",
+                self.drop_prob
+            );
+        } else {
+            ensure!(
+                self.drop_prob.is_finite() && (0.0..1.0).contains(&self.drop_prob),
+                "field `fault.drop_prob`: must lie in [0, 1), got {}",
+                self.drop_prob
+            );
+        }
+        let mut seen = std::collections::HashSet::new();
+        for &t in &self.dead_tiles {
+            if t >= tiles {
+                bail!("field `fault.dead_tiles`: tile {t} out of range (tiles = {tiles})");
+            }
+            if t == primary {
+                bail!(
+                    "field `fault.dead_tiles`: tile {t} is the primary (client) tile — \
+                     a plan may not kill the client"
+                );
+            }
+            if !seen.insert(t) {
+                bail!("field `fault.dead_tiles`: duplicate dead-tile id {t}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_empty() {
+        assert!(FaultPlan::none().is_empty());
+        assert!(FaultPlan::default().is_empty());
+        assert!(FaultPlan::fraction(0.0, 99).is_empty());
+        assert!(!FaultPlan::fraction(0.05, 99).is_empty());
+        assert!(!FaultPlan { dead_tiles: vec![3], ..FaultPlan::none() }.is_empty());
+        // A plan with only a seed set injects nothing.
+        assert!(FaultPlan { seed: 0xBEEF, ..FaultPlan::none() }.is_empty());
+    }
+
+    #[test]
+    fn canonical_key_separates_plans() {
+        let a = FaultPlan::fraction(0.05, 1);
+        assert_eq!(a.canonical_key(), a.clone().canonical_key());
+        for b in [
+            FaultPlan::fraction(0.06, 1),
+            FaultPlan::fraction(0.05, 2),
+            FaultPlan { jitter_max: 5, ..a.clone() },
+            FaultPlan { dead_tiles: vec![7], ..a.clone() },
+        ] {
+            assert_ne!(a.canonical_key(), b.canonical_key(), "{b:?}");
+        }
+    }
+
+    #[test]
+    fn dead_tile_count_clamps_to_population() {
+        let p = FaultPlan { dead_tile_frac: 0.1, ..FaultPlan::none() };
+        assert_eq!(p.dead_tile_count(1024), 102); // round(102.4)
+        let p = FaultPlan { dead_tiles: vec![1, 2], dead_tile_frac: 0.9, ..FaultPlan::none() };
+        // 8 tiles: round(7.2)=7 sampled, but only 8-1-2=5 candidates.
+        assert_eq!(p.dead_tile_count(8), 7);
+    }
+
+    #[test]
+    fn validation_names_every_offending_field() {
+        for (plan, field) in [
+            (FaultPlan { dead_tile_frac: 1.5, ..FaultPlan::none() }, "`fault.dead_tile_frac`"),
+            (FaultPlan { dead_tile_frac: -0.1, ..FaultPlan::none() }, "`fault.dead_tile_frac`"),
+            (
+                FaultPlan { degraded_link_frac: 2.0, ..FaultPlan::none() },
+                "`fault.degraded_link_frac`",
+            ),
+            (
+                FaultPlan { degraded_link_frac: f64::NAN, ..FaultPlan::none() },
+                "`fault.degraded_link_frac`",
+            ),
+            (FaultPlan { flaky_link_frac: -1.0, ..FaultPlan::none() }, "`fault.flaky_link_frac`"),
+            (
+                FaultPlan { failed_port_frac: 1.01, ..FaultPlan::none() },
+                "`fault.failed_port_frac`",
+            ),
+            (
+                FaultPlan { degraded_link_frac: 0.1, jitter_max: 0, ..FaultPlan::none() },
+                "`fault.jitter_max`",
+            ),
+            (
+                FaultPlan { jitter_max: JITTER_CEILING + 1, ..FaultPlan::none() },
+                "`fault.jitter_max`",
+            ),
+            (
+                FaultPlan { flaky_link_frac: 0.1, drop_prob: 0.0, ..FaultPlan::none() },
+                "`fault.drop_prob`",
+            ),
+            (
+                FaultPlan { flaky_link_frac: 0.1, drop_prob: 1.0, ..FaultPlan::none() },
+                "`fault.drop_prob`",
+            ),
+            (FaultPlan { drop_prob: 1.0, ..FaultPlan::none() }, "`fault.drop_prob`"),
+            (FaultPlan { dead_tiles: vec![256], ..FaultPlan::none() }, "`fault.dead_tiles`"),
+            (FaultPlan { dead_tiles: vec![3, 3], ..FaultPlan::none() }, "`fault.dead_tiles`"),
+            (FaultPlan { dead_tiles: vec![0], ..FaultPlan::none() }, "`fault.dead_tiles`"),
+        ] {
+            let err = plan.validate(256, 0).unwrap_err().to_string();
+            assert!(err.contains(field), "error `{err}` does not name {field}");
+        }
+        // Killing the primary names the client explicitly.
+        let err = FaultPlan { dead_tiles: vec![0], ..FaultPlan::none() }
+            .validate(256, 0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("primary"), "{err}");
+        // A valid plan passes.
+        FaultPlan::fraction(0.05, 7).validate(256, 0).unwrap();
+        FaultPlan { dead_tiles: vec![1, 5, 9], ..FaultPlan::none() }.validate(256, 0).unwrap();
+    }
+}

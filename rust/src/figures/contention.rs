@@ -121,7 +121,7 @@ impl CellResult {
 /// runs the shared on-line stream (the legacy-oracle path); every other
 /// pattern generates one trace per client, seeded per client from the
 /// cell seed.
-pub fn eval_cell(setup: &EmulationSetup, cell: &Cell, seed: u64) -> ContentionStats {
+pub fn eval_cell(setup: &EmulationSetup, cell: &Cell, seed: u64) -> Result<ContentionStats> {
     match cell.pattern {
         TracePattern::Uniform => {
             run_scenario(setup, cell.clients, cell.accesses, seed, Workload::SharedUniform)
@@ -170,7 +170,7 @@ pub fn eval_cells(engine: &ParallelSweep, cells: &[Cell]) -> Result<Vec<CellResu
             point: cell.point,
             pattern: cell.pattern.label().to_string(),
             clients: cell.clients,
-            stats: eval_cell(setup, cell, cell_seed(engine.seed(), cell)),
+            stats: eval_cell(setup, cell, cell_seed(engine.seed(), cell))?,
         })
     })
 }
@@ -228,6 +228,8 @@ pub fn row_for(r: &CellResult) -> Row {
         .num("inflation", s.inflation)
         .num("wait_mean_cycles", s.wait.mean())
         .num("wait_max_cycles", s.wait.max())
+        .int("retries", s.retries)
+        .int("timeouts", s.timeouts)
         .num("port_util_mean", s.port_util_mean)
         .num("port_util_max", s.port_util_max)
         .int("makespan_cycles", s.makespan)
@@ -431,6 +433,8 @@ mod tests {
         field("c_cont", format!("{:.4}", s.c_cont));
         field("inflation", format!("{:.4}", s.inflation));
         field("wait_mean_cycles", format!("{:.4}", s.wait.mean()));
+        field("retries", s.retries.to_string());
+        field("timeouts", s.timeouts.to_string());
         field("port_util_max", format!("{:.4}", s.port_util_max));
         field("makespan_cycles", s.makespan.to_string());
     }

@@ -1,0 +1,534 @@
+//! Faults figure (extension; not in the paper): availability and tail
+//! inflation vs fault fraction — the degradation story of the emulated
+//! memory when tiles die, links degrade or flake, and switch ports fail.
+//!
+//! For each system ([`SYSTEMS`], the 1,024- and 4,096-tile Clos points
+//! at `k = tiles - tiles/8` so the dead-tile budget fits) and each fault
+//! fraction in [`FRACS_PM`] (per mille, 0–10 %), the figure replays the
+//! whole [`crate::workload::trace`] pattern catalogue through the
+//! contention lab under a seed-deterministic [`FaultPlan`]
+//! ([`FaultPlan::fraction`]: dead tiles + degraded links + flaky links
+//! at the fraction, ports failed at half of it) and reports the
+//! slowdown and p99 tail inflation against the fraction-0 baseline of
+//! the same grid, alongside the DES's retry/timeout counters and the
+//! materialised fault census.
+//!
+//! Two determinism properties make the ratios meaningful and the figure
+//! golden-pinnable:
+//!
+//! * the *workload* seed of a cell is the contention lab's
+//!   ([`contention::cell_seed`]) and does NOT fold the fault fraction —
+//!   every fraction replays the identical traces, so slowdown is a pure
+//!   fault effect;
+//! * the *plan* seed ([`plan_for`]) folds the sweep seed, the design
+//!   point and the fraction, and materialisation draws from canonical
+//!   [`point_seed`] streams — any `--jobs` count is bit-identical.
+//!
+//! The fraction-0 column is the healthy contention lab bit for bit (the
+//! empty-plan oracle rule; proven in the tests below and in
+//! `tests/fault_determinism.rs`).
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use super::{contention, topo_str, FigOpts};
+use crate::api::{DesignPoint, Report, Row};
+use crate::coordinator::{point_seed, ParallelSweep, SweepPoint};
+use crate::emulation::{EmulationSetup, TopologyKind};
+use crate::fault::FaultPlan;
+use crate::sim::contention::ContentionStats;
+use crate::util::plot::Plot;
+use crate::util::table::{f, Table};
+use crate::workload::trace::TracePattern;
+
+/// Systems plotted (Clos points, like the contention figure).
+pub const SYSTEMS: &[usize] = &[1024, 4096];
+
+/// Tile memory used.
+pub const MEM_KB: u32 = 128;
+
+/// Concurrent clients per cell.
+pub const CLIENTS: usize = 8;
+
+/// Access budget per client per cell.
+pub const ACCESSES: usize = 300;
+
+/// Fault fractions swept, in per mille (0, 2 %, 5 %, 10 %). The 0 row
+/// is the healthy baseline every ratio is computed against.
+pub const FRACS_PM: &[u32] = &[0, 20, 50, 100];
+
+/// The emulation size the figure uses: 7/8 of the tiles. Full emulation
+/// (`k = tiles - 1`) has zero slack — ANY dead tile is a capacity
+/// error — so the figure leaves `tiles/8` spare tiles, enough for the
+/// 10 % dead-tile point with head room.
+pub fn emulation_k(tiles: usize) -> usize {
+    tiles - tiles / 8
+}
+
+/// The seed-deterministic plan of one (point, fraction) column: a
+/// [`FaultPlan::fraction`] plan whose seed is a pure function of the
+/// sweep seed, the design point and the fraction — never of scheduling.
+/// Fraction 0 is the empty plan.
+pub fn plan_for(point: &SweepPoint, frac_pm: u32, sweep_seed: u64) -> FaultPlan {
+    FaultPlan::fraction(
+        frac_pm as f64 / 1000.0,
+        point_seed(
+            sweep_seed,
+            0xFA17_5EED ^ point.canonical_key() ^ ((frac_pm as u64) << 32),
+        ),
+    )
+}
+
+/// One grid cell: a design point replaying one pattern under one fault
+/// fraction. The unit the sweep engine maps over.
+#[derive(Clone, Copy, Debug)]
+pub struct Cell {
+    /// The design point.
+    pub point: SweepPoint,
+    /// Fault fraction, per mille (0 = healthy baseline).
+    pub frac_pm: u32,
+    /// Access pattern every client replays.
+    pub pattern: TracePattern,
+    /// Concurrent clients.
+    pub clients: usize,
+    /// Accesses per client.
+    pub accesses: usize,
+}
+
+impl Cell {
+    /// The underlying contention-lab cell. Its seed deliberately
+    /// ignores `frac_pm`: every fraction replays the identical
+    /// workload, so the figure's ratios isolate the fault effect.
+    pub fn inner(&self) -> contention::Cell {
+        contention::Cell {
+            point: self.point,
+            pattern: self.pattern,
+            clients: self.clients,
+            accesses: self.accesses,
+        }
+    }
+}
+
+/// One evaluated cell: the scenario summary plus the materialised fault
+/// census and the ratios against the fraction-0 baseline.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    /// The design point.
+    pub point: SweepPoint,
+    /// Fault fraction, per mille.
+    pub frac_pm: u32,
+    /// Pattern label.
+    pub pattern: String,
+    /// Concurrent clients.
+    pub clients: usize,
+    /// Tiles the materialised plan killed.
+    pub dead_tiles: usize,
+    /// Undirected links degraded (jitter).
+    pub degraded_links: usize,
+    /// Undirected links flaky (drop + retry).
+    pub flaky_links: usize,
+    /// Undirected links fully down (after healing).
+    pub failed_links: usize,
+    /// Sampled failures restored by the connectivity heal rule.
+    pub healed_links: usize,
+    /// Everything the scenario measured (includes retries/timeouts).
+    pub stats: ContentionStats,
+    /// Mean latency over the fraction-0 mean of the same
+    /// (system, pattern, clients) cell. Exactly 1.0 on baseline rows.
+    pub slowdown: f64,
+    /// p99 latency over the fraction-0 p99 — the tail-inflation axis.
+    pub p99_inflation: f64,
+}
+
+impl CellResult {
+    /// Report/row name: `clos-1024-f50-zipf-c8`.
+    pub fn name(&self) -> String {
+        format!(
+            "{}-{}-f{}-{}-c{}",
+            topo_str(self.point.kind),
+            self.point.tiles,
+            self.frac_pm,
+            self.pattern,
+            self.clients
+        )
+    }
+}
+
+/// Fill in the baseline ratios: each row is divided by the fraction-0
+/// row of the same (system, pattern, clients) cell. Rows without a
+/// baseline in the set keep ratio 1.0.
+pub fn annotate(mut rows: Vec<CellResult>) -> Vec<CellResult> {
+    let mut base: HashMap<(usize, String, usize), (f64, f64)> = HashMap::new();
+    for r in &rows {
+        if r.frac_pm == 0 {
+            base.insert(
+                (r.point.tiles, r.pattern.clone(), r.clients),
+                (r.stats.latency.mean(), r.stats.dist.p99),
+            );
+        }
+    }
+    for r in &mut rows {
+        if let Some(&(mean0, p990)) = base.get(&(r.point.tiles, r.pattern.clone(), r.clients)) {
+            if mean0 > 0.0 {
+                r.slowdown = r.stats.latency.mean() / mean0;
+            }
+            if p990 > 0.0 {
+                r.p99_inflation = r.stats.dist.p99 / p990;
+            }
+        }
+    }
+    rows
+}
+
+/// Evaluate a cell grid on the sweep engine: one setup is built per
+/// unique (design point, fraction) column — fraction 0 through the
+/// plain builder path, faulted columns through
+/// [`DesignPoint::faults`] — then the cells fan out across the worker
+/// pool (one DES timeline each) and come back annotated, in input
+/// order, bit-identical at any job count.
+pub fn eval_cells(engine: &ParallelSweep, cells: &[Cell]) -> Result<Vec<CellResult>> {
+    let mut setups: HashMap<(u64, u32), EmulationSetup> = HashMap::new();
+    for cell in cells {
+        let key = (cell.point.canonical_key(), cell.frac_pm);
+        if !setups.contains_key(&key) {
+            let p = cell.point;
+            let mut dp =
+                DesignPoint::new(p.kind, p.tiles).mem_kb(p.mem_kb).k(p.k).tech(engine.tech());
+            let plan = plan_for(&p, cell.frac_pm, engine.seed());
+            if !plan.is_empty() {
+                dp = dp.faults(plan);
+            }
+            let setup = dp.build().with_context(|| {
+                format!("building faults cell point {p:?} at {} per mille", cell.frac_pm)
+            })?;
+            setups.insert(key, setup);
+        }
+    }
+    let rows = engine.map(cells, |cell| {
+        let setup = setups
+            .get(&(cell.point.canonical_key(), cell.frac_pm))
+            .context("cell point missing from the setup table")?;
+        let inner = cell.inner();
+        let stats = contention::eval_cell(setup, &inner, contention::cell_seed(engine.seed(), &inner))?;
+        let (dead, degraded, flaky, failed, healed) = match &setup.fault {
+            Some(f) => (
+                f.map.dead_tiles.len(),
+                f.map.degraded_links,
+                f.map.flaky_links,
+                f.map.failed_links,
+                f.map.healed_links,
+            ),
+            None => (0, 0, 0, 0, 0),
+        };
+        Ok(CellResult {
+            point: cell.point,
+            frac_pm: cell.frac_pm,
+            pattern: cell.pattern.label().to_string(),
+            clients: cell.clients,
+            dead_tiles: dead,
+            degraded_links: degraded,
+            flaky_links: flaky,
+            failed_links: failed,
+            healed_links: healed,
+            stats,
+            slowdown: 1.0,
+            p99_inflation: 1.0,
+        })
+    })?;
+    Ok(annotate(rows))
+}
+
+/// The figure's dataset.
+#[derive(Clone, Debug)]
+pub struct FigFaults {
+    /// One row per (system, fraction, pattern) cell, in grid order.
+    pub rows: Vec<CellResult>,
+}
+
+/// The figure's cell grid, in generation order: fraction-major inside
+/// each system so the healthy baselines of a system evaluate first.
+pub fn grid_cells() -> Vec<Cell> {
+    let mut cells = Vec::new();
+    for &system in SYSTEMS {
+        let point = SweepPoint {
+            kind: TopologyKind::Clos,
+            tiles: system,
+            mem_kb: MEM_KB,
+            k: emulation_k(system),
+        };
+        for &frac_pm in FRACS_PM {
+            for pattern in contention::patterns(contention::block_words(&point)) {
+                cells.push(Cell { point, frac_pm, pattern, clients: CLIENTS, accesses: ACCESSES });
+            }
+        }
+    }
+    cells
+}
+
+/// Generate the faults dataset on a shared sweep engine.
+pub fn generate_with(engine: &ParallelSweep) -> Result<FigFaults> {
+    Ok(FigFaults { rows: eval_cells(engine, &grid_cells())? })
+}
+
+/// Generate the dataset (standalone: a fresh engine).
+pub fn generate(opts: &FigOpts) -> Result<FigFaults> {
+    generate_with(&opts.engine())
+}
+
+/// One report row for a cell — the schema `memclos faults --json` and
+/// the figure share (documented in [`crate::api::report`]).
+pub fn row_for(r: &CellResult) -> Row {
+    let s = &r.stats;
+    Row::new(&r.name())
+        .int("system", r.point.tiles as u64)
+        .int("k", r.point.k as u64)
+        .int("fault_pm", r.frac_pm as u64)
+        .str("pattern", &r.pattern)
+        .int("clients", r.clients as u64)
+        .int("accesses", s.accesses as u64)
+        .int("dead_tiles", r.dead_tiles as u64)
+        .int("degraded_links", r.degraded_links as u64)
+        .int("flaky_links", r.flaky_links as u64)
+        .int("failed_links", r.failed_links as u64)
+        .int("healed_links", r.healed_links as u64)
+        .num("mean_cycles", s.latency.mean())
+        .num("p50", s.dist.p50)
+        .num("p95", s.dist.p95)
+        .num("p99", s.dist.p99)
+        .num("max_cycles", s.dist.max)
+        .num("slowdown", r.slowdown)
+        .num("p99_inflation", r.p99_inflation)
+        .int("retries", s.retries)
+        .int("timeouts", s.timeouts)
+        .num("wait_mean_cycles", s.wait.mean())
+        .int("makespan_cycles", s.makespan)
+}
+
+/// Render a cell set as the machine-diffable faults report (the
+/// document the golden harness pins as `faults.json`).
+pub fn report_rows(rows: &[CellResult]) -> Report {
+    let mut rep = Report::new("faults");
+    for r in rows {
+        rep.push(row_for(r));
+    }
+    rep
+}
+
+/// Full numeric output for the golden harness.
+pub fn report(fig: &FigFaults) -> Report {
+    report_rows(&fig.rows)
+}
+
+/// Render the dataset as a table plus one slowdown-vs-fault-fraction
+/// plot per system.
+pub fn render(fig: &FigFaults) -> String {
+    let mut out = String::new();
+    let mut t = Table::new(&[
+        "system", "fault", "pattern", "dead", "down", "mean cy", "p99", "slowdown",
+        "p99 infl", "retries", "timeouts",
+    ])
+    .with_title("Fault injection: slowdown and p99 tail inflation vs fault fraction");
+    for r in &fig.rows {
+        let s = &r.stats;
+        t.row(&[
+            r.point.tiles.to_string(),
+            format!("{:.1}%", r.frac_pm as f64 / 10.0),
+            r.pattern.clone(),
+            r.dead_tiles.to_string(),
+            r.failed_links.to_string(),
+            f(s.latency.mean(), 1),
+            f(s.dist.p99, 1),
+            f(r.slowdown, 3),
+            f(r.p99_inflation, 3),
+            s.retries.to_string(),
+            s.timeouts.to_string(),
+        ]);
+    }
+    out.push_str(&t.render());
+    for &system in SYSTEMS {
+        let mut plot = Plot::new(
+            &format!("Faults ({system}-tile Clos): slowdown vs fault fraction (%)"),
+            "fault %",
+            "slowdown",
+        );
+        let mut labels: Vec<&str> = Vec::new();
+        for r in &fig.rows {
+            if r.point.tiles == system && !labels.contains(&r.pattern.as_str()) {
+                labels.push(r.pattern.as_str());
+            }
+        }
+        for label in labels {
+            let pts: Vec<(f64, f64)> = fig
+                .rows
+                .iter()
+                .filter(|r| r.point.tiles == system && r.pattern == label)
+                .map(|r| (r.frac_pm as f64 / 10.0, r.slowdown))
+                .collect();
+            plot.series(label, &pts);
+        }
+        out.push('\n');
+        out.push_str(&plot.render());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{Mode, Tech};
+    use crate::sim::network::run_contention;
+
+    /// A grid the tests can afford: one 256-tile point at k = 224
+    /// (slack for the 10 % dead-tile column), two patterns.
+    fn small_cells(fracs: &[u32]) -> Vec<Cell> {
+        let point = SweepPoint {
+            kind: TopologyKind::Clos,
+            tiles: 256,
+            mem_kb: 128,
+            k: emulation_k(256),
+        };
+        let mut cells = Vec::new();
+        for &frac_pm in fracs {
+            for pattern in [TracePattern::Uniform, TracePattern::Zipf { theta: 1.2 }] {
+                cells.push(Cell { point, frac_pm, pattern, clients: 8, accesses: 200 });
+            }
+        }
+        cells
+    }
+
+    #[test]
+    fn grid_covers_systems_fractions_and_patterns() {
+        let cells = grid_cells();
+        assert_eq!(cells.len(), SYSTEMS.len() * FRACS_PM.len() * 5);
+        // Every (system, pattern) column has its fraction-0 baseline.
+        for &system in SYSTEMS {
+            for c in cells.iter().filter(|c| c.point.tiles == system) {
+                assert!(cells.iter().any(|b| {
+                    b.frac_pm == 0
+                        && b.point.tiles == system
+                        && b.pattern.label() == c.pattern.label()
+                        && b.clients == c.clients
+                }));
+            }
+        }
+        // Plan seeds are canonical: same coordinates -> same plan;
+        // fraction 0 -> the empty plan; any differing coordinate -> a
+        // different plan.
+        let p1024 = cells[0].point;
+        assert_eq!(plan_for(&p1024, 50, 1), plan_for(&p1024, 50, 1));
+        assert!(plan_for(&p1024, 0, 1).is_empty());
+        assert_ne!(plan_for(&p1024, 20, 1), plan_for(&p1024, 50, 1));
+        assert_ne!(plan_for(&p1024, 50, 1), plan_for(&p1024, 50, 2));
+        let p4096 = cells.last().unwrap().point;
+        assert_ne!(plan_for(&p1024, 50, 1), plan_for(&p4096, 50, 1));
+    }
+
+    #[test]
+    fn zero_fraction_cells_are_the_healthy_oracle_bitwise() {
+        // The empty-plan oracle rule at figure level: the fraction-0
+        // column embeds the healthy contention lab (and, for uniform,
+        // the legacy run_contention experiment) bit for bit.
+        let engine = ParallelSweep::new(Mode::Exact, &Tech::default(), 2, 0xC105);
+        let cells = small_cells(&[0]);
+        let rows = eval_cells(&engine, &cells).unwrap();
+        let point = cells[0].point;
+        let setup = DesignPoint::new(point.kind, point.tiles)
+            .mem_kb(point.mem_kb)
+            .k(point.k)
+            .build()
+            .unwrap();
+        let uni_cell = cells
+            .iter()
+            .find(|c| matches!(c.pattern, TracePattern::Uniform))
+            .unwrap();
+        let uni = rows.iter().find(|r| r.pattern == "uniform").unwrap();
+        let legacy = run_contention(
+            &setup,
+            uni_cell.clients,
+            uni_cell.accesses,
+            contention::cell_seed(0xC105, &uni_cell.inner()),
+        );
+        assert_eq!(uni.stats.latency.count(), legacy.latency.count());
+        assert_eq!(
+            uni.stats.latency.mean().to_bits(),
+            legacy.latency.mean().to_bits(),
+            "fraction-0 uniform cell diverged from run_contention"
+        );
+        assert_eq!(uni.stats.inflation.to_bits(), legacy.inflation.to_bits());
+        for r in &rows {
+            assert_eq!(r.slowdown.to_bits(), 1f64.to_bits());
+            assert_eq!(r.p99_inflation.to_bits(), 1f64.to_bits());
+            assert_eq!(r.dead_tiles + r.degraded_links + r.flaky_links + r.failed_links, 0);
+            assert_eq!(r.stats.retries, 0);
+            assert_eq!(r.stats.timeouts, 0);
+        }
+    }
+
+    #[test]
+    fn faulted_cells_report_fault_work_and_sane_ratios() {
+        let engine = ParallelSweep::new(Mode::Exact, &Tech::default(), 4, 0xC105);
+        let rows = eval_cells(&engine, &small_cells(&[0, 100])).unwrap();
+        let faulted: Vec<_> = rows.iter().filter(|r| r.frac_pm == 100).collect();
+        assert!(!faulted.is_empty());
+        for r in faulted {
+            assert!(r.dead_tiles > 0, "{r:?}");
+            assert!(r.degraded_links > 0 && r.flaky_links > 0, "{r:?}");
+            // 10 % drop over thousands of flaky-hop traversals: the
+            // retry counter must move.
+            assert!(r.stats.retries > 0, "{r:?}");
+            // Loose sanity on the ratios (the remap can shift the mean
+            // slightly either way, but faults cannot make the system
+            // an order of magnitude faster).
+            assert!(r.slowdown > 0.9, "{r:?}");
+            assert!(r.p99_inflation > 0.9, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn cells_are_jobs_invariant() {
+        let cells = small_cells(&[0, 50]);
+        let seq =
+            eval_cells(&ParallelSweep::new(Mode::Exact, &Tech::default(), 1, 3), &cells).unwrap();
+        let par =
+            eval_cells(&ParallelSweep::new(Mode::Exact, &Tech::default(), 8, 3), &cells).unwrap();
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.frac_pm, b.frac_pm);
+            assert_eq!(a.pattern, b.pattern);
+            assert_eq!(a.dead_tiles, b.dead_tiles);
+            assert_eq!(a.stats.latency.mean().to_bits(), b.stats.latency.mean().to_bits());
+            assert_eq!(a.stats.dist, b.stats.dist);
+            assert_eq!(a.stats.retries, b.stats.retries);
+            assert_eq!(a.stats.timeouts, b.stats.timeouts);
+            assert_eq!(a.slowdown.to_bits(), b.slowdown.to_bits());
+        }
+    }
+
+    #[test]
+    fn report_rows_round_trip_their_fields() {
+        let engine = ParallelSweep::new(Mode::Exact, &Tech::default(), 2, 7);
+        let cells = small_cells(&[50]);
+        let rows = eval_cells(&engine, &cells).unwrap();
+        let rendered = report_rows(&rows).render();
+        assert!(rendered.starts_with("{\"bench\": \"faults\", \"results\": ["));
+        let r = &rows[0];
+        let s = &r.stats;
+        let field = |key: &str, want: String| {
+            let needle = format!("\"{key}\": {want}");
+            assert!(rendered.contains(&needle), "missing `{needle}` in {rendered}");
+        };
+        field("name", format!("\"{}\"", r.name()));
+        field("fault_pm", "50".to_string());
+        field("dead_tiles", r.dead_tiles.to_string());
+        field("degraded_links", r.degraded_links.to_string());
+        field("flaky_links", r.flaky_links.to_string());
+        field("failed_links", r.failed_links.to_string());
+        field("mean_cycles", format!("{:.4}", s.latency.mean()));
+        field("p99", format!("{:.4}", s.dist.p99));
+        field("slowdown", format!("{:.4}", r.slowdown));
+        field("p99_inflation", format!("{:.4}", r.p99_inflation));
+        field("retries", s.retries.to_string());
+        field("timeouts", s.timeouts.to_string());
+    }
+}

@@ -17,6 +17,7 @@
 //! | [`binary_size`] | §7.3 — program binary growth |
 //! | [`ablations`] | design-choice ablations (route-open, clock, switch degree, eDRAM) |
 //! | [`contention`] | (extension) trace-driven contention lab — `c_cont` + tail latency vs clients × pattern |
+//! | [`faults`] | (extension) fault injection — slowdown + p99 tail inflation vs fault fraction |
 //! | [`hotpath`] | (not in the paper) the repo's own access-hot-path perf trajectory |
 //! | [`interp_bench`] | (not in the paper) decoded-vs-legacy interpreter perf trajectory |
 //!
@@ -30,6 +31,7 @@
 pub mod ablations;
 pub mod binary_size;
 pub mod contention;
+pub mod faults;
 pub mod fig10;
 pub mod fig11;
 pub mod fig5;
@@ -111,5 +113,6 @@ pub fn all_reports(engine: &ParallelSweep) -> Result<Vec<Report>> {
     out.push(binary_size::report(&binary_size::generate()?));
     out.push(ablations::report(&ablations::generate_with(engine)?));
     out.push(contention::report(&contention::generate_with(engine)?));
+    out.push(faults::report(&faults::generate_with(engine)?));
     Ok(out)
 }

@@ -23,6 +23,9 @@
 //!   the fitted `c_cont` per access pattern.
 //! * [`emulation`] — the paper's contribution: the emulated-memory
 //!   machine and the sequential baseline machine.
+//! * [`fault`] — seed-deterministic fault injection (dead tiles,
+//!   degraded/flaky links, failed switch ports) with fault-aware
+//!   rerouting and the empty-plan oracle rule.
 //! * [`isa`], [`workload`], [`cc`] — benchmark substrate: a tiny RISC
 //!   ISA + interpreter, synthetic instruction mixes (Fig 8), a miniC
 //!   compiler with direct and emulated-memory backends (§6.2, §7.3),
@@ -44,6 +47,7 @@ pub mod config;
 pub mod coordinator;
 pub mod dram;
 pub mod emulation;
+pub mod fault;
 pub mod figures;
 pub mod isa;
 pub mod netmodel;

@@ -20,6 +20,7 @@ use memclos::config::{self, Doc};
 use memclos::coordinator::{default_jobs, SweepPoint};
 use memclos::dram::{measure_random_latency, DramConfig};
 use memclos::emulation::{SequentialMachine, TopologyKind};
+use memclos::fault::FaultPlan;
 use memclos::figures::{self, FigOpts};
 use memclos::isa::decode::{predecode, FastMachine};
 use memclos::isa::interp::{DirectMemory, EmulatedChannelMemory, Machine, RunStats};
@@ -34,7 +35,7 @@ USAGE: memclos <command> [options]
 
 COMMANDS
   tables [--which 1..5]         regenerate the paper's parameter tables
-  figure <5|6|7|9|10|11|bsize|ablations|contention>  regenerate a figure / extension
+  figure <5|6|7|9|10|11|bsize|ablations|contention|faults>  regenerate a figure / extension
   figures --all [--jobs N]      regenerate EVERY table and figure on one
                                 shared sweep engine (repeated design
                                 points evaluated once); --json emits the
@@ -61,6 +62,13 @@ COMMANDS
                                 from a FastMachine run and replay them
                                 (heterogeneous clients when repeated;
                                 overrides --pattern)
+  faults [--jobs N]             fault-injection figure: replay the trace
+                                catalogue under seed-deterministic fault
+                                plans (0-10% dead tiles, degraded/flaky
+                                links, failed ports) and report slowdown,
+                                p99 tail inflation, retries and timeouts
+                                vs the healthy baseline; --json emits the
+                                golden-pinned report
   selfcheck                     prove XLA artifact == native model
   sweep --tiles N --mem KB      latency sweep over emulation sizes
   bench-hotpath [--out PATH]    measure the access hot path, write BENCH_hotpath.json
@@ -86,6 +94,13 @@ COMMON OPTIONS
   --set key=value               config override (repeatable); system.*,
                                 net.*, chip.*, interposer.* reach every
                                 command, including the figures
+  --fault-frac F                inject a seed-deterministic fault plan at
+                                fraction F (dead tiles, degraded + flaky
+                                links, failed ports) into the design
+                                point; 0 is bitwise the healthy system
+  --fault-seed N                fault-plan draw seed (default 0xFA17);
+                                independent of --seed so the same plan
+                                can be replayed under fresh workloads
   --config PATH                 config file (TOML subset)
   --json                        latency/sweep/contention: emit the
                                 BENCH_hotpath.json schema family instead
@@ -153,6 +168,11 @@ fn design_point(
     if args.flag("k").is_some() {
         dp = dp.k(args.get("k", 0usize)?);
     }
+    if args.flag("fault-frac").is_some() {
+        let frac: f64 = args.get("fault-frac", 0.0f64)?;
+        let fault_seed: u64 = args.get("fault-seed", 0xFA17u64)?;
+        dp = dp.faults(FaultPlan::fraction(frac, fault_seed));
+    }
     Ok(dp)
 }
 
@@ -202,7 +222,10 @@ fn run(raw: Vec<String>) -> Result<()> {
                 "contention" => {
                     print!("{}", figures::contention::render(&figures::contention::generate_with(&engine)?))
                 }
-                o => bail!("no figure {o} (5|6|7|9|10|11|bsize|ablations|contention)"),
+                "faults" => {
+                    print!("{}", figures::faults::render(&figures::faults::generate_with(&engine)?))
+                }
+                o => bail!("no figure {o} (5|6|7|9|10|11|bsize|ablations|contention|faults)"),
             }
         }
         "figures" => {
@@ -250,6 +273,7 @@ fn run(raw: Vec<String>) -> Result<()> {
                 print!("{}", figures::binary_size::render(&figures::binary_size::generate()?));
                 print!("{}", figures::ablations::render(&figures::ablations::generate_with(&engine)?));
                 print!("{}", figures::contention::render(&figures::contention::generate_with(&engine)?));
+                print!("{}", figures::faults::render(&figures::faults::generate_with(&engine)?));
             }
             let cs = engine.cache_stats();
             eprintln!(
@@ -488,7 +512,7 @@ fn run(raw: Vec<String>) -> Result<()> {
                             accesses,
                             cell_seed,
                             Workload::Traces(&captured),
-                        ),
+                        )?,
                     })
                 })?
             };
@@ -512,6 +536,22 @@ fn run(raw: Vec<String>) -> Result<()> {
                         s.port_util_max,
                     );
                 }
+            }
+        }
+        "faults" => {
+            // The availability/tail-inflation experiment: replay the
+            // trace catalogue under seed-deterministic fault plans of
+            // rising severity and report slowdown + p99 inflation
+            // against the healthy (fraction 0) baseline of the same
+            // grid. Every cell is one DES timeline fanned out over
+            // --jobs; any job count is bit-identical.
+            let opts = fig_opts(&args, &doc)?;
+            let engine = opts.engine();
+            let rows = figures::faults::generate_with(&engine)?;
+            if args.has("json") {
+                print!("{}", figures::faults::report(&rows).render());
+            } else {
+                print!("{}", figures::faults::render(&rows));
             }
         }
         "selfcheck" => selfcheck(&args, &tech)?,

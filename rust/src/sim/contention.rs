@@ -35,6 +35,9 @@
 //! timeline, inherently sequential, so sweep engines parallelise
 //! *across* scenarios (cells), never inside one.
 
+use anyhow::Result;
+
+use crate::coordinator::point_seed;
 use crate::emulation::EmulationSetup;
 use crate::sim::event::EventQueue;
 use crate::sim::network::{spread_clients, NetworkSim};
@@ -85,6 +88,12 @@ pub struct ContentionStats {
     pub port_util_mean: f64,
     /// Utilisation of the busiest directed port.
     pub port_util_max: f64,
+    /// Flaky-link retransmissions across the scenario (see
+    /// `sim::network`). Always 0 on a healthy machine.
+    pub retries: u64,
+    /// Traversals that hit the retry cap and pushed through. Always 0
+    /// on a healthy machine.
+    pub timeouts: u64,
 }
 
 /// Replay one contention scenario on a single DES timeline.
@@ -94,13 +103,21 @@ pub struct ContentionStats {
 /// dependent accesses (the next one departs when the previous
 /// completes; addresses that land on the client's own tile cost one
 /// cycle and are not recorded, as in the oracle).
+///
+/// On a faulted design point the simulator routes around failed ports
+/// and charges jitter/retries (see `sim::network`); an unreachable
+/// target — possible only under a hand-built fault state, since
+/// sampled plans are connectivity-healed — returns the typed
+/// [`crate::fault::FaultError`] (downcastable from the `anyhow` error),
+/// never a panic. On a healthy design point this function cannot fail
+/// and its numbers are bit-identical to the pre-fault engine.
 pub fn run_scenario(
     setup: &EmulationSetup,
     clients: usize,
     accesses: usize,
     seed: u64,
     workload: Workload<'_>,
-) -> ContentionStats {
+) -> Result<ContentionStats> {
     assert!(clients >= 1, "need at least one client");
     assert!(accesses >= 1, "need at least one access");
     if let Workload::Traces(ts) = &workload {
@@ -108,7 +125,9 @@ pub fn run_scenario(
         assert!(ts.iter().all(|t| !t.is_empty()), "empty trace in workload");
     }
 
-    let mut sim = NetworkSim::new(&setup.topo, &setup.model);
+    // The fault stream is separated from the address stream by the
+    // DES_STREAM constant; healthy runs never consult it.
+    let mut sim = NetworkSim::for_setup(setup, point_seed(seed, crate::fault::DES_STREAM));
     let mut rng = Rng::new(seed);
     let space = setup.map.space_words();
     let tiles = setup.map.tiles;
@@ -138,7 +157,7 @@ pub fn run_scenario(
             Workload::SharedUniform => rng.below(space),
             Workload::Traces(ts) => ts[ev.client % ts.len()].addr(ev.pos) % space,
         };
-        let target = setup.map.tile_of(addr);
+        let target = setup.tile_of(addr);
         if target == ev.client_tile {
             // Local to this client: unit cost, reissue immediately.
             if ev.remaining > 1 {
@@ -147,7 +166,8 @@ pub fn run_scenario(
             continue;
         }
         let waited_before = sim.wait_cycles();
-        let done = sim.access(ev.client_tile, target, now);
+        let done =
+            sim.try_access(ev.client_tile, target, now).map_err(anyhow::Error::new)?;
         latency.add((done - now) as f64);
         lats.push((done - now) as f64);
         wait.add((sim.wait_cycles() - waited_before) as f64);
@@ -182,7 +202,7 @@ pub fn run_scenario(
         (0.0, 0.0)
     };
 
-    ContentionStats {
+    Ok(ContentionStats {
         clients,
         accesses,
         latency,
@@ -194,7 +214,9 @@ pub fn run_scenario(
         makespan,
         port_util_mean,
         port_util_max,
-    }
+        retries: sim.retries(),
+        timeouts: sim.timeouts(),
+    })
 }
 
 #[cfg(test)]
@@ -238,7 +260,7 @@ mod tests {
         let e = setup(256, 255);
         for clients in [1usize, 4, 16] {
             for seed in [3u64, 5, 0xC0FFEE] {
-                let new = run_scenario(&e, clients, 300, seed, Workload::SharedUniform);
+                let new = run_scenario(&e, clients, 300, seed, Workload::SharedUniform).unwrap();
                 let old = run_contention(&e, clients, 300, seed);
                 assert_eq!(new.clients, old.clients);
                 assert_eq!(new.latency.count(), old.latency.count(), "clients={clients}");
@@ -254,6 +276,9 @@ mod tests {
                     old.inflation.to_bits(),
                     "clients={clients} seed={seed}: inflation diverged"
                 );
+                // A healthy machine never retries or times out.
+                assert_eq!(new.retries, 0);
+                assert_eq!(new.timeouts, 0);
                 // And the new observables are self-consistent.
                 assert_eq!(new.dist.count, new.latency.count());
                 assert_eq!(new.dist.mean.to_bits(), new.latency.mean().to_bits());
@@ -272,7 +297,7 @@ mod tests {
         let block = 1u64 << e.map.log2_words_per_tile;
         for pat in catalogue(block) {
             let ts = traces_for(pat, &e, 1, 400, 11);
-            let r = run_scenario(&e, 1, 400, 11, Workload::Traces(&ts));
+            let r = run_scenario(&e, 1, 400, 11, Workload::Traces(&ts)).unwrap();
             assert!(
                 (r.c_cont - 1.0).abs() < 0.02,
                 "{pat:?}: solo c_cont = {} (waits: mean {})",
@@ -290,15 +315,15 @@ mod tests {
         for pat in catalogue(block) {
             let (solo, crowd) = match pat {
                 TracePattern::Uniform => (
-                    run_scenario(&e, 1, 300, 7, Workload::SharedUniform),
-                    run_scenario(&e, 16, 300, 7, Workload::SharedUniform),
+                    run_scenario(&e, 1, 300, 7, Workload::SharedUniform).unwrap(),
+                    run_scenario(&e, 16, 300, 7, Workload::SharedUniform).unwrap(),
                 ),
                 p => {
                     let ts1 = traces_for(p, &e, 1, 300, 7);
                     let ts16 = traces_for(p, &e, 16, 300, 7);
                     (
-                        run_scenario(&e, 1, 300, 7, Workload::Traces(&ts1)),
-                        run_scenario(&e, 16, 300, 7, Workload::Traces(&ts16)),
+                        run_scenario(&e, 1, 300, 7, Workload::Traces(&ts1)).unwrap(),
+                        run_scenario(&e, 16, 300, 7, Workload::Traces(&ts16)).unwrap(),
                     )
                 }
             };
@@ -317,9 +342,9 @@ mod tests {
         // The point of pattern diversity: a shared hot tile queues far
         // worse than the uniform mean suggests.
         let e = setup(256, 255);
-        let uni = run_scenario(&e, 16, 300, 9, Workload::SharedUniform);
+        let uni = run_scenario(&e, 16, 300, 9, Workload::SharedUniform).unwrap();
         let ts = traces_for(TracePattern::Zipf { theta: 1.2 }, &e, 16, 300, 9);
-        let zipf = run_scenario(&e, 16, 300, 9, Workload::Traces(&ts));
+        let zipf = run_scenario(&e, 16, 300, 9, Workload::Traces(&ts)).unwrap();
         assert!(
             zipf.c_cont > uni.c_cont,
             "zipf c_cont {} <= uniform {}",
@@ -332,8 +357,8 @@ mod tests {
     fn scenarios_are_deterministic() {
         let e = setup(256, 255);
         let ts = traces_for(TracePattern::PointerChase, &e, 8, 200, 13);
-        let a = run_scenario(&e, 8, 200, 13, Workload::Traces(&ts));
-        let b = run_scenario(&e, 8, 200, 13, Workload::Traces(&ts));
+        let a = run_scenario(&e, 8, 200, 13, Workload::Traces(&ts)).unwrap();
+        let b = run_scenario(&e, 8, 200, 13, Workload::Traces(&ts)).unwrap();
         assert_eq!(a.latency.mean().to_bits(), b.latency.mean().to_bits());
         assert_eq!(a.dist, b.dist);
         assert_eq!(a.wait.mean().to_bits(), b.wait.mean().to_bits());
@@ -350,7 +375,7 @@ mod tests {
         let a = capture_corpus_program("sum_squares", &e).unwrap();
         let b = capture_corpus_program("sieve", &e).unwrap();
         let ts = vec![a, b];
-        let r = run_scenario(&e, 6, 150, 21, Workload::Traces(&ts));
+        let r = run_scenario(&e, 6, 150, 21, Workload::Traces(&ts)).unwrap();
         assert!(r.latency.count() > 0, "captured replay produced no remote accesses");
         assert!(r.c_cont >= 1.0 - 1e-9);
         assert!(r.dist.max >= r.dist.p99);
@@ -363,7 +388,7 @@ mod tests {
         // shared hot spot the wait term must be visibly positive.
         let e = setup(256, 255);
         let ts = traces_for(TracePattern::Zipf { theta: 1.5 }, &e, 24, 250, 17);
-        let r = run_scenario(&e, 24, 250, 17, Workload::Traces(&ts));
+        let r = run_scenario(&e, 24, 250, 17, Workload::Traces(&ts)).unwrap();
         assert!(r.wait.mean() > 0.0, "hot-spot crowd never waited on a port");
         // Waiting can only lengthen an access, never shorten it.
         assert!(r.latency.mean() >= r.zero_load_mean - 1e-9);

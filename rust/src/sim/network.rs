@@ -27,10 +27,30 @@
 //!   bit-identical to the analytic model at zero load.
 //!
 //! Invariants: the routing table and port arena always correspond to
-//! `topo.graph()` (both are rebuilt only in `new`); `reset` clears the
-//! arena in place and never changes its size.
+//! `topo.graph()` (both are rebuilt only in construction); `reset`
+//! clears the arena in place and never changes its size.
+//!
+//! # Faults
+//!
+//! [`NetworkSim::with_faults`] routes around failed ports
+//! ([`RoutingTable::build_avoiding`]) and degrades the surviving links:
+//! each traversal of a degraded port adds `1..=jitter_max` cycles of
+//! seed-deterministic jitter, and a flaky port drops the message with
+//! its `drop_prob` and retries with capped exponential backoff (base
+//! [`RETRY_BACKOFF_BASE`], doubling, cap [`RETRY_BACKOFF_CAP`]; after
+//! [`MAX_RETRIES`] failures the simulator counts a *timeout* and pushes
+//! the message through, so forward progress is guaranteed).
+//! Retransmissions are charged as pure message latency (the nack and
+//! resend travel the same wires) — the output port is held once for the
+//! message's serialised length, not once per attempt. Destinations cut
+//! off by failures surface as [`FaultError::Unreachable`] from the
+//! `try_*` entry points, never a panic. With no port faults the fault
+//! branch is never taken and the RNG is never consulted — every healthy
+//! simulation stays bit-identical to the pre-fault code (the empty-plan
+//! oracle rule).
 
 use crate::emulation::EmulationSetup;
+use crate::fault::{FaultError, FaultState, PortFault};
 use crate::netmodel::{LatencyModel, LinkLatencies};
 use crate::sim::event::EventQueue;
 use crate::topology::{LinkClass, RoutingTable, Topology, NO_HOP};
@@ -43,11 +63,22 @@ pub const REQUEST_WORDS: u64 = 3;
 /// Words in a response message (value or ack).
 pub const RESPONSE_WORDS: u64 = 1;
 
+/// First retry of a dropped traversal waits this many cycles.
+pub const RETRY_BACKOFF_BASE: u64 = 8;
+
+/// Exponential backoff is capped at this many cycles per retry.
+pub const RETRY_BACKOFF_CAP: u64 = 256;
+
+/// Retries before a traversal is counted as a timeout (the message
+/// still pushes through — the DES guarantees forward progress).
+pub const MAX_RETRIES: u32 = 6;
+
 /// The network simulator.
 pub struct NetworkSim<'a> {
     topo: &'a Topology,
     model: &'a LatencyModel,
-    /// Precomputed next hops + directed-port layout (built once).
+    /// Precomputed next hops + directed-port layout (built once;
+    /// fault-avoiding when constructed via [`Self::with_faults`]).
     routes: RoutingTable,
     /// Busy-until time per directed switch port, indexed by the
     /// routing table's CSR port id. Sized once; never grows.
@@ -59,6 +90,18 @@ pub struct NetworkSim<'a> {
     /// Cumulative cycles each directed port was held (occupancy),
     /// indexed like `port_busy`. Sized once; never grows.
     port_hold: Vec<u64>,
+    /// Per-directed-port fault state — **empty on a healthy machine**
+    /// (the guard every fault branch checks), indexed like `port_busy`
+    /// otherwise.
+    port_fault: Vec<PortFault>,
+    /// Jitter/drop draws. Only consulted when `port_fault` is
+    /// non-empty, so healthy runs take identical draws to the
+    /// pre-fault simulator (none).
+    rng: Rng,
+    /// Flaky-link retransmissions since construction/reset.
+    retries: u64,
+    /// Traversals that hit [`MAX_RETRIES`] and pushed through.
+    timeouts: u64,
 }
 
 /// Wire cycles of one link of `class` (rounded to whole cycles, as the
@@ -80,17 +123,71 @@ impl<'a> NetworkSim<'a> {
     /// routing table and port arena up front; all subsequent message
     /// simulation is allocation-free.
     pub fn new(topo: &'a Topology, model: &'a LatencyModel) -> Self {
-        let routes = topo.routing_table();
+        Self::with_faults(topo, model, None, 0)
+    }
+
+    /// New simulator with an optional materialised fault state: the
+    /// routing table avoids failed ports and each traversal consults
+    /// the per-port fault arena. `fault_seed` seeds the jitter/drop
+    /// draws (use `point_seed(scenario_seed, fault::DES_STREAM)` so the
+    /// fault stream never collides with the address stream). With
+    /// `None` (or a state with no port faults beyond routing) this is
+    /// exactly [`Self::new`].
+    pub fn with_faults(
+        topo: &'a Topology,
+        model: &'a LatencyModel,
+        fault: Option<&FaultState>,
+        fault_seed: u64,
+    ) -> Self {
+        let (routes, port_fault) = match fault {
+            Some(f) if f.map.has_port_faults() => (
+                RoutingTable::build_avoiding(topo.graph(), &f.map.failed_ports()),
+                f.map.ports.clone(),
+            ),
+            _ => (topo.routing_table(), Vec::new()),
+        };
         let port_busy = vec![0u64; routes.num_ports()];
         let port_hold = vec![0u64; routes.num_ports()];
-        Self { topo, model, routes, port_busy, wait_cycles: 0, port_hold }
+        Self {
+            topo,
+            model,
+            routes,
+            port_busy,
+            wait_cycles: 0,
+            port_hold,
+            port_fault,
+            rng: Rng::new(fault_seed),
+            retries: 0,
+            timeouts: 0,
+        }
+    }
+
+    /// Simulator for a built design point, picking up its fault state
+    /// (if any) automatically.
+    pub fn for_setup(setup: &'a EmulationSetup, fault_seed: u64) -> Self {
+        Self::with_faults(&setup.topo, &setup.model, setup.fault.as_ref(), fault_seed)
     }
 
     /// Simulate one message from `src_tile` to `dst_tile`, departing at
     /// `now`; returns its arrival time. Switch output ports are held
     /// for the message's serialised length, so concurrent messages
-    /// contend.
+    /// contend. Panics if the destination is unreachable — only
+    /// possible under a hand-built fault state; use
+    /// [`Self::try_one_way`] there.
     pub fn one_way(&mut self, src_tile: usize, dst_tile: usize, now: u64, words: u64) -> u64 {
+        self.try_one_way(src_tile, dst_tile, now, words)
+            .unwrap_or_else(|e| panic!("network is connected: {e}"))
+    }
+
+    /// Fallible [`Self::one_way`]: an unreachable destination (severed
+    /// by failed ports) is a typed [`FaultError`], never a panic.
+    pub fn try_one_way(
+        &mut self,
+        src_tile: usize,
+        dst_tile: usize,
+        now: u64,
+        words: u64,
+    ) -> Result<u64, FaultError> {
         let links = self.model.links;
         let net = &self.model.net;
         let g = self.topo.graph();
@@ -109,7 +206,9 @@ impl<'a> NetworkSim<'a> {
                 break;
             }
             let e = self.routes.next_edge(u, d);
-            assert_ne!(e, NO_HOP, "network is connected ({u:?} -> {d:?})");
+            if e == NO_HOP {
+                return Err(FaultError::Unreachable { from: u.0, to: d.0 });
+            }
             let (next, class) = g.neighbours(u)[e as usize];
             // Wait for the output port, then hold it for the message's
             // serialised length.
@@ -121,6 +220,9 @@ impl<'a> NetworkSim<'a> {
             }
             self.port_busy[port] = t + occupancy;
             self.port_hold[port] += occupancy;
+            if !self.port_fault.is_empty() {
+                t = self.traverse_faulty(port, t);
+            }
             if matches!(class, LinkClass::CoreSys | LinkClass::MeshChipCross) {
                 inter_chip = true;
             }
@@ -130,23 +232,72 @@ impl<'a> NetworkSim<'a> {
         t += links.tile.round() as u64; // switch -> tile
         let ser =
             if inter_chip { net.t_serial_inter } else { net.t_serial_intra }.round() as u64;
-        t + ser
+        Ok(t + ser)
+    }
+
+    /// Charge one faulty traversal of `port` departing at `t`: flaky
+    /// drops retry with capped exponential backoff (counted; after
+    /// [`MAX_RETRIES`] a timeout is counted and the message pushes
+    /// through), then degraded jitter adds `1..=jitter_max` cycles.
+    fn traverse_faulty(&mut self, port: usize, mut t: u64) -> u64 {
+        let pf = self.port_fault[port];
+        if pf.drop_prob > 0.0 {
+            let mut attempt = 0u32;
+            while self.rng.chance(pf.drop_prob) {
+                if attempt >= MAX_RETRIES {
+                    self.timeouts += 1;
+                    break;
+                }
+                t += (RETRY_BACKOFF_BASE << attempt).min(RETRY_BACKOFF_CAP);
+                self.retries += 1;
+                attempt += 1;
+            }
+        }
+        if pf.jitter_max > 0 {
+            t += 1 + self.rng.below(pf.jitter_max);
+        }
+        t
     }
 
     /// Simulate one emulated-memory access round trip (request to the
     /// tile, SRAM access, response back); returns the completion time.
+    /// Panics on an unreachable tile (see [`Self::try_access`]).
     pub fn access(&mut self, client: usize, tile: usize, now: u64) -> u64 {
         let req = self.one_way(client, tile, now, REQUEST_WORDS);
         let served = req + self.model.net.t_mem.round() as u64;
         self.one_way(tile, client, served, RESPONSE_WORDS)
     }
 
+    /// Fallible [`Self::access`] for fault-aware callers.
+    pub fn try_access(&mut self, client: usize, tile: usize, now: u64) -> Result<u64, FaultError> {
+        let req = self.try_one_way(client, tile, now, REQUEST_WORDS)?;
+        let served = req + self.model.net.t_mem.round() as u64;
+        self.try_one_way(tile, client, served, RESPONSE_WORDS)
+    }
+
     /// Reset port occupancy (fresh zero-load state). Clears the arenas
-    /// and counters in place — no allocation.
+    /// and counters in place — no allocation. The fault RNG is *not*
+    /// rewound: reset restores zero-load timing, not the draw stream
+    /// (rebuild the simulator for a bit-identical replay).
     pub fn reset(&mut self) {
         self.port_busy.fill(0);
         self.port_hold.fill(0);
         self.wait_cycles = 0;
+        self.retries = 0;
+        self.timeouts = 0;
+    }
+
+    /// Flaky-link retransmissions since construction or
+    /// [`Self::reset`]. Always 0 on a healthy machine.
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    /// Traversals that hit the retry cap ([`MAX_RETRIES`]) and pushed
+    /// through, since construction or [`Self::reset`]. Always 0 on a
+    /// healthy machine.
+    pub fn timeouts(&self) -> u64 {
+        self.timeouts
     }
 
     /// Cumulative cycles messages have spent queued on busy output
@@ -345,6 +496,119 @@ mod tests {
         b.reset();
         assert_eq!(b.wait_cycles(), 0);
         assert!(b.port_hold().iter().all(|&h| h == 0));
+    }
+
+    /// Hand-build a fault state giving every directed port the same
+    /// fault, over a setup's topology (healthy rank placement).
+    fn uniform_fault(e: &EmulationSetup, pf: PortFault) -> FaultState {
+        let ports = e.topo.routing_table().num_ports();
+        FaultState {
+            plan: crate::fault::FaultPlan::none(),
+            map: crate::fault::FaultMap {
+                dead_tiles: Vec::new(),
+                ports: vec![pf; ports],
+                degraded_links: 0,
+                flaky_links: 0,
+                failed_links: 0,
+                healed_links: 0,
+            },
+            rank_tile: (0..e.map.k).map(|r| e.map.tile_of_rank(r)).collect(),
+        }
+    }
+
+    #[test]
+    fn healthy_sim_never_counts_retries_or_timeouts() {
+        let e = setup(TopologyKind::Clos, 256, 255);
+        let mut sim = NetworkSim::new(&e.topo, &e.model);
+        let mut now = 0;
+        for tile in 1..128 {
+            now = sim.access(e.map.client, tile, now);
+        }
+        assert_eq!(sim.retries(), 0);
+        assert_eq!(sim.timeouts(), 0);
+    }
+
+    #[test]
+    fn flaky_ports_retry_with_bounded_backoff() {
+        let e = setup(TopologyKind::Clos, 256, 255);
+        let fault =
+            uniform_fault(&e, PortFault { failed: false, jitter_max: 0, drop_prob: 0.5 });
+        let run = |seed: u64| {
+            let mut sim = NetworkSim::with_faults(&e.topo, &e.model, Some(&fault), seed);
+            let mut healthy = NetworkSim::new(&e.topo, &e.model);
+            let mut total_faulty = 0u64;
+            let mut total_healthy = 0u64;
+            for tile in [9usize, 50, 130, 200] {
+                total_faulty += sim.access(e.map.client, tile, 0);
+                total_healthy += healthy.access(e.map.client, tile, 0);
+            }
+            (total_faulty, total_healthy, sim.retries(), sim.timeouts())
+        };
+        let (faulty, healthy, retries, _) = run(7);
+        assert!(retries > 0, "50% drops on every port must retry");
+        assert!(faulty > healthy, "retries must cost latency");
+        // Every retry costs at most the cap, so the inflation is
+        // bounded by retries * cap (plus nothing else here).
+        assert!(faulty <= healthy + retries * RETRY_BACKOFF_CAP);
+        // Same seed, same draws, bit-identical timings.
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7).0, run(8).0, "different fault seeds draw differently");
+    }
+
+    #[test]
+    fn degraded_ports_add_bounded_jitter() {
+        let e = setup(TopologyKind::Clos, 256, 255);
+        let fault =
+            uniform_fault(&e, PortFault { failed: false, jitter_max: 4, drop_prob: 0.0 });
+        let mut sim = NetworkSim::with_faults(&e.topo, &e.model, Some(&fault), 11);
+        let mut healthy = NetworkSim::new(&e.topo, &e.model);
+        for tile in [9usize, 50, 130] {
+            sim.reset();
+            healthy.reset();
+            let slow = sim.access(e.map.client, tile, 0);
+            let fast = healthy.access(e.map.client, tile, 0);
+            // Round trip traverses at most 2 * diameter ports; jitter
+            // is 1..=4 per traversal.
+            assert!(slow > fast, "tile {tile}: jitter must cost");
+            assert!(slow <= fast + 2 * 8 * 4, "tile {tile}: jitter is bounded");
+            assert_eq!(sim.retries() + sim.timeouts(), 0, "jitter is not a retry");
+        }
+    }
+
+    #[test]
+    fn severed_network_is_a_typed_error_not_a_panic() {
+        let e = setup(TopologyKind::Clos, 256, 255);
+        let fault =
+            uniform_fault(&e, PortFault { failed: true, jitter_max: 0, drop_prob: 0.0 });
+        let mut sim = NetworkSim::with_faults(&e.topo, &e.model, Some(&fault), 0);
+        // Tile 1 shares the client's edge switch: no inter-switch link
+        // needed, still reachable.
+        assert!(sim.try_access(e.map.client, 1, 0).is_ok());
+        // Tile 100 is on another switch: every link is down.
+        match sim.try_access(e.map.client, 100, 0) {
+            Err(FaultError::Unreachable { from, to }) => {
+                assert_ne!(from, to);
+            }
+            other => panic!("expected Unreachable, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn with_faults_none_is_bitwise_new() {
+        let e = setup(TopologyKind::Mesh, 256, 255);
+        let mut a = NetworkSim::new(&e.topo, &e.model);
+        let mut b = NetworkSim::with_faults(&e.topo, &e.model, None, 0xDEAD);
+        let mut now_a = 0;
+        let mut now_b = 0;
+        for tile in (1..256).step_by(17) {
+            if tile == e.map.client {
+                continue;
+            }
+            now_a = a.access(e.map.client, tile, now_a);
+            now_b = b.access(e.map.client, tile, now_b);
+        }
+        assert_eq!(now_a, now_b);
+        assert_eq!(a.wait_cycles(), b.wait_cycles());
     }
 
     #[test]

@@ -178,6 +178,23 @@ impl Graph {
     }
 }
 
+/// CSR port offsets of a graph, length `switches + 1`: the directed
+/// port `(u, e)` (the `e`-th adjacency entry of `u`) has arena index
+/// `offsets[u] + e`. This is the same layout [`RoutingTable`] embeds —
+/// exposed standalone so the fault materialiser can index ports without
+/// building a table first.
+pub fn port_offsets(g: &Graph) -> Vec<u32> {
+    let n = g.num_switches();
+    let mut offsets = Vec::with_capacity(n + 1);
+    let mut total = 0u32;
+    for u in 0..n {
+        offsets.push(total);
+        total += g.degree(NodeId(u)) as u32;
+    }
+    offsets.push(total);
+    offsets
+}
+
 /// Sentinel in a [`RoutingTable`] row: no next hop exists (the node is
 /// the destination itself, or the destination is unreachable).
 pub const NO_HOP: u32 = u32::MAX;
@@ -200,7 +217,7 @@ pub const NO_HOP: u32 = u32::MAX;
 /// [`super::routing`]) proves the walked per-link-class counts equal
 /// the arithmetic [`super::Route`] summary on both topologies, which
 /// is what keeps the DES bit-identical to the analytic model.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct RoutingTable {
     switches: usize,
     /// `next_edge[d * switches + u]`: adjacency index of the hop from
@@ -214,14 +231,26 @@ pub struct RoutingTable {
 impl RoutingTable {
     /// Build the full table: O(V^2) memory, O(V * (V + E)) time.
     pub fn build(g: &Graph) -> Self {
+        // The empty mask takes the exact same branches as the healthy
+        // path always did — `build` and `build_avoiding(g, &[])` are
+        // bit-identical by construction (the empty-plan oracle rule).
+        Self::build_avoiding(g, &[])
+    }
+
+    /// Build the table over the *surviving* links only: a directed port
+    /// `(u, e)` with `failed_ports[port_id] == true` is never relaxed
+    /// nor selected as a next hop. Port failures are symmetric (a dead
+    /// port takes its link down in both directions — see
+    /// `crate::fault`), so BFS over forward adjacency stays valid. An
+    /// empty mask means no faults; destinations cut off by failures
+    /// keep [`NO_HOP`] rows, which the DES surfaces as a typed
+    /// `FaultError::Unreachable` instead of panicking.
+    pub fn build_avoiding(g: &Graph, failed_ports: &[bool]) -> Self {
         let n = g.num_switches();
-        let mut port_offset = Vec::with_capacity(n + 1);
-        let mut total = 0u32;
-        for u in 0..n {
-            port_offset.push(total);
-            total += g.degree(NodeId(u)) as u32;
-        }
-        port_offset.push(total);
+        let port_offset = port_offsets(g);
+        let alive = |u: usize, e: usize| {
+            failed_ports.is_empty() || !failed_ports[port_offset[u] as usize + e]
+        };
 
         let mut next_edge = vec![NO_HOP; n * n];
         let mut dist = vec![u32::MAX; n];
@@ -234,8 +263,8 @@ impl RoutingTable {
             dist[dest] = 0;
             q.push_back(dest);
             while let Some(u) = q.pop_front() {
-                for &(v, _) in g.neighbours(NodeId(u)) {
-                    if dist[v.0] == u32::MAX {
+                for (e, &(v, _)) in g.neighbours(NodeId(u)).iter().enumerate() {
+                    if alive(u, e) && dist[v.0] == u32::MAX {
                         dist[v.0] = dist[u] + 1;
                         q.push_back(v.0);
                     }
@@ -247,7 +276,7 @@ impl RoutingTable {
                     continue;
                 }
                 for (e, &(v, _)) in g.neighbours(NodeId(u)).iter().enumerate() {
-                    if dist[v.0] == dist[u] - 1 {
+                    if alive(u, e) && dist[v.0] == dist[u] - 1 {
                         row[u] = e as u32;
                         break;
                     }
@@ -372,6 +401,58 @@ mod tests {
         assert_eq!(rt.next_edge(NodeId(1), NodeId(1)), NO_HOP);
         assert_eq!(rt.next_edge(NodeId(0), isolated), NO_HOP);
         assert_eq!(rt.walk_distance(&g, NodeId(0), isolated), None);
+    }
+
+    /// Mark the undirected link between adjacent switches `a` and `b`
+    /// failed in both directions, in a CSR-indexed mask.
+    fn fail_link(g: &Graph, mask: &mut [bool], a: usize, b: usize) {
+        let offsets = port_offsets(g);
+        for (u, v) in [(a, b), (b, a)] {
+            let e = g
+                .neighbours(NodeId(u))
+                .iter()
+                .position(|&(w, _)| w.0 == v)
+                .expect("adjacent");
+            mask[offsets[u] as usize + e] = true;
+        }
+    }
+
+    #[test]
+    fn build_avoiding_empty_mask_is_bitwise_build() {
+        let g = line_graph(7);
+        assert_eq!(RoutingTable::build(&g), RoutingTable::build_avoiding(&g, &[]));
+        let empty = vec![false; RoutingTable::build(&g).num_ports()];
+        assert_eq!(RoutingTable::build(&g), RoutingTable::build_avoiding(&g, &empty));
+    }
+
+    #[test]
+    fn build_avoiding_reroutes_around_a_failed_link() {
+        // A 5-cycle: killing link 0-1 forces 0 -> 1 the long way round.
+        let mut g = Graph::new();
+        g.add_nodes(5);
+        for i in 0..5 {
+            g.add_link(NodeId(i), NodeId((i + 1) % 5), LinkClass::MeshHop);
+        }
+        let healthy = RoutingTable::build(&g);
+        assert_eq!(healthy.walk_distance(&g, NodeId(0), NodeId(1)), Some(1));
+        let mut mask = vec![false; healthy.num_ports()];
+        fail_link(&g, &mut mask, 0, 1);
+        let rt = RoutingTable::build_avoiding(&g, &mask);
+        assert_eq!(rt.walk_distance(&g, NodeId(0), NodeId(1)), Some(4));
+        assert_eq!(rt.walk_distance(&g, NodeId(1), NodeId(0)), Some(4));
+    }
+
+    #[test]
+    fn build_avoiding_severed_destination_is_no_hop() {
+        let g = line_graph(4);
+        let healthy = RoutingTable::build(&g);
+        let mut mask = vec![false; healthy.num_ports()];
+        fail_link(&g, &mut mask, 2, 3);
+        let rt = RoutingTable::build_avoiding(&g, &mask);
+        assert_eq!(rt.next_edge(NodeId(0), NodeId(3)), NO_HOP);
+        assert_eq!(rt.walk_distance(&g, NodeId(0), NodeId(3)), None);
+        // The surviving side still routes.
+        assert_eq!(rt.walk_distance(&g, NodeId(0), NodeId(2)), Some(2));
     }
 
     #[test]

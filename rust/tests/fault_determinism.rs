@@ -1,0 +1,216 @@
+//! Fault-subsystem property tests (the PR's standing invariants):
+//!
+//! 1. **Determinism** — the same `(plan, seed)` materialises the same
+//!    faults, routing tables and DES bits at any `--jobs` count.
+//! 2. **The empty-plan oracle rule** — a design point built with an
+//!    empty [`FaultPlan`] is bit-identical to one built with no plan at
+//!    all: same rank LUT, same expected latency, same DES summaries,
+//!    same validation error strings.
+//! 3. **Typed failures** — killed primaries, duplicate dead tiles,
+//!    out-of-range fractions, capacity violations and unreachable
+//!    destinations are all typed errors, never panics.
+
+use memclos::api::{DesignPoint, Mode, Tech};
+use memclos::coordinator::{ParallelSweep, SweepPoint};
+use memclos::emulation::TopologyKind;
+use memclos::fault::{FaultError, FaultMap, FaultPlan, FaultState, PortFault};
+use memclos::figures::faults::{emulation_k, eval_cells, Cell};
+use memclos::sim::contention::{run_scenario, Workload};
+use memclos::sim::network::{run_contention, NetworkSim};
+use memclos::topology::RoutingTable;
+use memclos::workload::TracePattern;
+
+/// The affordable faulted design point most tests share: 256 tiles at
+/// k = 224, leaving dead-tile slack.
+fn faulted_point(plan: FaultPlan) -> DesignPoint {
+    DesignPoint::clos(256).mem_kb(128).k(emulation_k(256)).faults(plan)
+}
+
+#[test]
+fn same_plan_and_seed_rebuild_identical_faults_and_lut_bits() {
+    let plan = FaultPlan::fraction(0.06, 77);
+    let a = faulted_point(plan.clone()).build().unwrap();
+    let b = faulted_point(plan).build().unwrap();
+    let fa = a.fault.as_ref().expect("plan materialised");
+    let fb = b.fault.as_ref().expect("plan materialised");
+    assert_eq!(fa.map, fb.map, "fault maps diverged across rebuilds");
+    assert_eq!(fa.rank_tile, fb.rank_tile, "rank remap diverged");
+    assert_eq!(a.rank_latencies().len(), b.rank_latencies().len());
+    for (x, y) in a.rank_latencies().iter().zip(b.rank_latencies()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "rank LUT diverged");
+    }
+    assert_eq!(a.expected_latency().to_bits(), b.expected_latency().to_bits());
+}
+
+#[test]
+fn fault_avoiding_routing_tables_are_deterministic() {
+    let setup = faulted_point(FaultPlan::fraction(0.08, 3)).build().unwrap();
+    let map = &setup.fault.as_ref().unwrap().map;
+    assert!(map.failed_links > 0, "want failed links at 8% (got {map:?})");
+    let g = setup.topo.graph();
+    let rt1 = RoutingTable::build_avoiding(g, &map.failed_ports());
+    let rt2 = RoutingTable::build_avoiding(g, &map.failed_ports());
+    assert_eq!(rt1, rt2, "build_avoiding is not deterministic");
+    // And the empty mask is bitwise the healthy build.
+    let healthy_mask = vec![false; map.failed_ports().len()];
+    assert_eq!(
+        RoutingTable::build_avoiding(g, &healthy_mask),
+        RoutingTable::build(g),
+        "all-healthy mask diverged from the plain build"
+    );
+}
+
+#[test]
+fn faulted_des_is_jobs_invariant() {
+    // Same (plan, seed) -> identical DES bits whether the figure grid
+    // runs sequentially or on 8 workers.
+    let point = SweepPoint {
+        kind: TopologyKind::Clos,
+        tiles: 256,
+        mem_kb: 128,
+        k: emulation_k(256),
+    };
+    let cells: Vec<Cell> = [0u32, 50, 100]
+        .iter()
+        .flat_map(|&frac_pm| {
+            [TracePattern::Uniform, TracePattern::Zipf { theta: 1.2 }].map(|pattern| Cell {
+                point,
+                frac_pm,
+                pattern,
+                clients: 8,
+                accesses: 150,
+            })
+        })
+        .collect();
+    let seq = eval_cells(&ParallelSweep::new(Mode::Exact, &Tech::default(), 1, 9), &cells)
+        .unwrap();
+    let par = eval_cells(&ParallelSweep::new(Mode::Exact, &Tech::default(), 8, 9), &cells)
+        .unwrap();
+    assert_eq!(seq.len(), par.len());
+    for (a, b) in seq.iter().zip(&par) {
+        assert_eq!(a.frac_pm, b.frac_pm);
+        assert_eq!(a.dead_tiles, b.dead_tiles);
+        assert_eq!(a.failed_links, b.failed_links);
+        assert_eq!(a.stats.latency.mean().to_bits(), b.stats.latency.mean().to_bits());
+        assert_eq!(a.stats.dist, b.stats.dist);
+        assert_eq!(a.stats.retries, b.stats.retries);
+        assert_eq!(a.stats.timeouts, b.stats.timeouts);
+        assert_eq!(a.stats.makespan, b.stats.makespan);
+    }
+}
+
+#[test]
+fn empty_plan_is_bit_identical_to_no_plan() {
+    let bare = DesignPoint::clos(256).mem_kb(128).k(255).build().unwrap();
+    let empty = DesignPoint::clos(256)
+        .mem_kb(128)
+        .k(255)
+        .faults(FaultPlan::none())
+        .build()
+        .unwrap();
+    assert!(empty.fault.is_none(), "an empty plan must never materialise");
+    for (x, y) in bare.rank_latencies().iter().zip(empty.rank_latencies()) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    assert_eq!(bare.expected_latency().to_bits(), empty.expected_latency().to_bits());
+    for r in 0..255 {
+        assert_eq!(bare.tile_of_rank(r), empty.tile_of_rank(r));
+    }
+    // DES summaries: the scenario engine on the empty-plan setup IS the
+    // legacy run_contention experiment, bit for bit.
+    let stats = run_scenario(&empty, 8, 200, 7, Workload::SharedUniform).unwrap();
+    let legacy = run_contention(&bare, 8, 200, 7);
+    assert_eq!(stats.latency.count(), legacy.latency.count());
+    assert_eq!(stats.latency.mean().to_bits(), legacy.latency.mean().to_bits());
+    assert_eq!(stats.inflation.to_bits(), legacy.inflation.to_bits());
+    assert_eq!(stats.retries, 0);
+    assert_eq!(stats.timeouts, 0);
+}
+
+#[test]
+fn empty_plan_preserves_validation_error_strings() {
+    // The oracle rule covers the failure paths too: a builder error
+    // reads identically with and without an empty plan attached.
+    let bare = DesignPoint::clos(256).mem_kb(128).k(0).build().unwrap_err().to_string();
+    let empty = DesignPoint::clos(256)
+        .mem_kb(128)
+        .k(0)
+        .faults(FaultPlan::none())
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert_eq!(bare, empty);
+}
+
+#[test]
+fn fault_plan_misuse_is_a_field_named_error() {
+    for (plan, needle) in [
+        (FaultPlan::fraction(1.5, 1), "fault.dead_tile_frac"),
+        (FaultPlan { dead_tiles: vec![3, 3], ..FaultPlan::none() }, "duplicate"),
+        (FaultPlan { dead_tiles: vec![2048], ..FaultPlan::none() }, "out of range"),
+        (FaultPlan { dead_tiles: vec![0], ..FaultPlan::none() }, "primary"),
+    ] {
+        let err = faulted_point(plan).build().unwrap_err().to_string();
+        assert!(err.contains(needle), "error `{err}` does not mention `{needle}`");
+    }
+    // Mesh: the primary lives at the centre block, not tile 0.
+    let err = DesignPoint::new(TopologyKind::Mesh, 1024)
+        .mem_kb(128)
+        .k(900)
+        .faults(FaultPlan { dead_tiles: vec![576], ..FaultPlan::none() })
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("primary"), "{err}");
+    // Full emulation has zero dead-tile slack: any dead tile violates
+    // the capacity-degradation rule.
+    let err = DesignPoint::clos(256)
+        .mem_kb(128)
+        .k(255)
+        .faults(FaultPlan { dead_tiles: vec![5], ..FaultPlan::none() })
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("alive"), "{err}");
+}
+
+/// A hand-built fault state severing every link (sampled plans can
+/// never do this — the heal rule — so this is the only way to reach
+/// the unreachable paths).
+fn severed_state(setup: &memclos::emulation::EmulationSetup) -> FaultState {
+    let num_ports = setup.topo.routing_table().num_ports();
+    FaultState {
+        plan: FaultPlan::none(),
+        map: FaultMap {
+            dead_tiles: Vec::new(),
+            ports: vec![PortFault { failed: true, ..Default::default() }; num_ports],
+            degraded_links: 0,
+            flaky_links: 0,
+            failed_links: num_ports / 2,
+            healed_links: 0,
+        },
+        rank_tile: (0..setup.map.k).map(|r| setup.map.tile_of_rank(r)).collect(),
+    }
+}
+
+#[test]
+fn unreachable_destination_is_a_typed_error_not_a_panic() {
+    let mut setup = DesignPoint::clos(256).mem_kb(128).k(255).build().unwrap();
+    setup.fault = Some(severed_state(&setup));
+    // Direct simulator probe: a cross-switch destination is a typed
+    // FaultError (tile 100 sits on a different edge switch than the
+    // client's tile 0 on the 256-tile Clos).
+    let mut sim = NetworkSim::for_setup(&setup, 0);
+    match sim.try_access(0, 100, 0) {
+        Err(FaultError::Unreachable { from, to }) => assert_ne!(from, to),
+        other => panic!("expected Unreachable, got {other:?}"),
+    }
+    // The scenario engine surfaces the same failure as a downcastable
+    // error, never a panic.
+    let err = run_scenario(&setup, 4, 100, 7, Workload::SharedUniform).unwrap_err();
+    assert!(
+        err.downcast_ref::<FaultError>().is_some(),
+        "scenario error is not a FaultError: {err:#}"
+    );
+    assert!(err.to_string().contains("unreachable"), "{err}");
+}

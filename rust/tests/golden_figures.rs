@@ -188,6 +188,72 @@ fn contention_lab_joins_the_harness() {
 }
 
 #[test]
+fn faults_figure_joins_the_harness() {
+    // The faults figure is part of `all_reports`, so the main test
+    // above already pins `tests/golden/faults.json` and asserts
+    // parallel == sequential on it. This checks the emitter contract on
+    // an affordable grid: a report row exists for every cell, names are
+    // well-formed, and the fraction-0 uniform cell embeds the legacy
+    // healthy oracle (`sim::network::run_contention`) bit for bit.
+    use memclos::api::DesignPoint;
+    use memclos::emulation::TopologyKind;
+    use memclos::figures::contention::cell_seed;
+    use memclos::figures::faults::{emulation_k, eval_cells, report_rows, Cell};
+    use memclos::sim::network::run_contention;
+    use memclos::workload::TracePattern;
+
+    let engine = ParallelSweep::new(Mode::Exact, &Tech::default(), parallel_jobs(), SEED);
+    let point = memclos::coordinator::SweepPoint {
+        kind: TopologyKind::Clos,
+        tiles: 256,
+        mem_kb: 128,
+        k: emulation_k(256),
+    };
+    let cells: Vec<Cell> = [
+        (0u32, TracePattern::Uniform),
+        (0, TracePattern::Zipf { theta: 1.2 }),
+        (50, TracePattern::Uniform),
+        (50, TracePattern::Zipf { theta: 1.2 }),
+        (100, TracePattern::Uniform),
+    ]
+    .iter()
+    .map(|&(frac_pm, pattern)| Cell { point, frac_pm, pattern, clients: 8, accesses: 200 })
+    .collect();
+    let rows = eval_cells(&engine, &cells).unwrap();
+    let report = report_rows(&rows);
+    assert_eq!(report.bench(), "faults");
+    assert_eq!(report.len(), cells.len());
+    let rendered = report.render();
+    for r in &rows {
+        assert!(rendered.contains(&format!("\"name\": \"{}\"", r.name())));
+    }
+
+    // The fraction-0 uniform cell IS the healthy legacy experiment.
+    let setup = DesignPoint::new(point.kind, point.tiles)
+        .mem_kb(point.mem_kb)
+        .k(point.k)
+        .build()
+        .unwrap();
+    let (cell, row) = cells
+        .iter()
+        .zip(&rows)
+        .find(|(c, _)| c.frac_pm == 0 && matches!(c.pattern, TracePattern::Uniform))
+        .unwrap();
+    let legacy =
+        run_contention(&setup, cell.clients, cell.accesses, cell_seed(SEED, &cell.inner()));
+    assert_eq!(
+        row.stats.latency.mean().to_bits(),
+        legacy.latency.mean().to_bits(),
+        "fraction-0 uniform cell diverged from the healthy oracle"
+    );
+    // Faulted rows report their fault census and retry counters.
+    for r in rows.iter().filter(|r| r.frac_pm > 0) {
+        assert!(r.dead_tiles > 0 || r.degraded_links > 0 || r.flaky_links > 0, "{r:?}");
+        assert!(r.slowdown.is_finite() && r.p99_inflation.is_finite());
+    }
+}
+
+#[test]
 fn fig5_fig6_combined_run_hits_the_plan_cache() {
     // Acceptance criterion: the repeated-point cache reports >= 1 hit
     // on the fig5+fig6 combined run (fig 6's 256 KB plans are a subset
