@@ -1,0 +1,98 @@
+//! Bench: the serve layer's hot path — frame codec throughput, request
+//! parse+render, and `Service::handle` cold (fresh canonical keys) vs
+//! hot (cache hits) on the exact backend.
+//!
+//! Writes the machine-readable perf trajectory to `BENCH_serve.json`
+//! (override with `--json PATH`; same schema family as
+//! `BENCH_hotpath.json`, emitted by `rust/scripts/bench_hotpath.sh`,
+//! uploaded by CI) and finishes with the bit-identity smoke: a cache
+//! hit must return byte-identical payload to the cold evaluation.
+//!
+//! Quick smoke mode: set `MEMCLOS_BENCH_QUICK=1` (what
+//! `rust/scripts/bench_hotpath.sh` does).
+
+use std::io::Cursor;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use memclos::api::Mode;
+use memclos::serve::proto::Request;
+use memclos::serve::service::{ServeConfig, Service};
+use memclos::serve::{read_frame, write_frame};
+use memclos::util::bench::{black_box, Bench};
+
+fn json_path() -> PathBuf {
+    let args: Vec<String> = std::env::args().collect();
+    for w in args.windows(2) {
+        if w[0] == "--json" {
+            return PathBuf::from(&w[1]);
+        }
+    }
+    PathBuf::from("BENCH_serve.json")
+}
+
+const REQ: &str =
+    "{\"id\": 7, \"kind\": \"latency\", \"tiles\": 1024, \"k\": 255, \"mem_kb\": 128, \"seed\": 3}";
+
+fn main() {
+    let mut b = Bench::new("serve");
+
+    // Frame codec round trip (frames/s) on a request-sized payload.
+    b.iter_items("frame-roundtrip", 1, || {
+        let mut wire = Vec::with_capacity(REQ.len() + 4);
+        write_frame(&mut wire, REQ.as_bytes()).expect("encode");
+        black_box(read_frame(&mut Cursor::new(wire)).expect("decode").expect("one frame").len())
+    });
+
+    // Request parse + canonicalise + render (requests/s).
+    b.iter_items("request-parse-render", 1, || {
+        let req = Request::from_bytes(REQ.as_bytes()).expect("parse");
+        black_box(req.to_json().render().len())
+    });
+
+    // Service::handle — cold path: a fresh canonical key every call
+    // (rotating seeds defeat the cache), exact backend, no batching.
+    let svc = Service::new(ServeConfig {
+        mode: Mode::Exact,
+        batch_max: 1,
+        jobs: 1,
+        linger: Duration::from_micros(0),
+        ..ServeConfig::default()
+    });
+    let mut seed = 0u64;
+    b.iter_items("handle-cold", 1, || {
+        seed += 1;
+        let body = format!(
+            "{{\"kind\": \"latency\", \"tiles\": 256, \"k\": 63, \"mem_kb\": 64, \"seed\": {seed}}}"
+        );
+        let req = Request::from_bytes(body.as_bytes()).expect("parse");
+        black_box(svc.handle(&req).expect("evaluates").len())
+    });
+
+    // Service::handle — hot path: one canonical key, all cache hits.
+    let hot = Request::from_bytes(REQ.as_bytes()).expect("parse");
+    let cold_payload = svc.handle(&hot).expect("first evaluation");
+    b.iter_items("handle-hot", 1, || black_box(svc.handle(&hot).expect("cache hit").len()));
+
+    b.report();
+    println!("\nthroughput (items/s):");
+    for m in b.results() {
+        if m.items > 0 {
+            println!("  {:<24} {:>14.0}", m.name, m.throughput());
+        }
+    }
+
+    let path = json_path();
+    b.write_json(&path).expect("write bench json");
+    println!("wrote {}", path.display());
+
+    // Bit-identity smoke: the hot path must serve the cold bytes.
+    let hit = svc.handle(&hot).expect("cache hit");
+    assert_eq!(*cold_payload, *hit, "cache hit diverged from the evaluation");
+    let stats = svc.stats();
+    assert!(stats.cache.hits > 0 && stats.cache.misses > 0, "{stats:?}");
+    println!(
+        "bit-identity smoke OK ({} hits / {} misses)",
+        stats.cache.hits, stats.cache.misses
+    );
+}

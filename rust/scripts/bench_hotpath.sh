@@ -7,6 +7,9 @@
 #   BENCH_interp.json     — decoded-vs-legacy whole-program interpretation
 #   BENCH_contention.json — trace generation + DES contention replay
 #   BENCH_faults.json     — healthy-vs-faulted DES replay + fault build cost
+#   BENCH_serve.json      — serve layer: frame codec, request parse,
+#                           Service::handle hot/cold, plus a live
+#                           serve/loadgen smoke over real TCP
 #
 # Schema (all files): {"bench": <group>,
 #          "results": [{"name", "median_ns", "addrs_per_s"}]}
@@ -22,6 +25,7 @@ OUT="$REPO_ROOT/BENCH_hotpath.json"
 INTERP_OUT="$REPO_ROOT/BENCH_interp.json"
 CONT_OUT="$REPO_ROOT/BENCH_contention.json"
 FAULTS_OUT="$REPO_ROOT/BENCH_faults.json"
+SERVE_OUT="$REPO_ROOT/BENCH_serve.json"
 
 if [[ "${1:-}" != "--full" ]]; then
     export MEMCLOS_BENCH_QUICK=1
@@ -67,3 +71,43 @@ else
 fi
 
 echo "faults trajectory written to $FAULTS_OUT"
+
+# Serve-layer microbenches (frame codec, request parse, Service::handle
+# hot/cold). The live smoke below overwrites SERVE_OUT with the fuller
+# closed-loop report when it succeeds; the microbench file stands in
+# when it does not.
+if cargo bench --bench serve -- --json "$SERVE_OUT"; then
+    :
+else
+    echo "(cargo bench serve failed; the loadgen smoke below writes $SERVE_OUT instead)" >&2
+fi
+
+# Live serve/loadgen smoke: a real server on an ephemeral port, the
+# closed-loop load generator against it over TCP, then a graceful wire
+# drain. Falls back to the in-process self-hosted pair if the server
+# never publishes its port.
+PORT_FILE="$(mktemp)"
+cargo run --release --bin memclos -- serve --addr 127.0.0.1:0 --port-file "$PORT_FILE" --mode exact &
+SERVE_PID=$!
+PORT=""
+for _ in $(seq 1 100); do
+    if [[ -s "$PORT_FILE" ]]; then
+        PORT="$(tr -d '[:space:]' < "$PORT_FILE")"
+        break
+    fi
+    sleep 0.1
+done
+if [[ -n "$PORT" ]]; then
+    cargo run --release --bin memclos -- loadgen --addr "127.0.0.1:$PORT" \
+        --clients 4 --requests 32 --shutdown --out "$SERVE_OUT"
+    wait "$SERVE_PID"
+else
+    echo "(serve never published its port; falling back to loadgen --self-host)" >&2
+    kill "$SERVE_PID" 2>/dev/null || true
+    wait "$SERVE_PID" 2>/dev/null || true
+    cargo run --release --bin memclos -- loadgen --self-host --mode exact \
+        --clients 4 --requests 32 --out "$SERVE_OUT"
+fi
+rm -f "$PORT_FILE"
+
+echo "serve trajectory written to $SERVE_OUT"

@@ -59,6 +59,29 @@
 //!
 //! The round-trip test lives with the emitter
 //! (`figures::faults::tests::report_rows_round_trip_their_fields`).
+//!
+//! # The `serve` row schema
+//!
+//! `memclos loadgen` (and `serve`'s drain report via the `stats`
+//! query) emits the `BENCH_serve.json` family, built by
+//! [`crate::serve::loadgen::LoadSummary::report`]. One row per request
+//! kind plus two synthetic rows:
+//!
+//! | row | field | type | meaning |
+//! |-----|-------|------|---------|
+//! | per kind | `name` | str | `latency`/`sweep`/`emulation`/`contention` |
+//! | | `requests`, `ok`, `overload`, `error` | int | outcome census for the kind |
+//! | | `mean_ms`, `p50_ms`, `p95_ms`, `p99_ms`, `max_ms` | num | client-observed latency of **successful** responses (shed latencies are excluded — they would drag the percentiles toward the fast-reject path) |
+//! | `total` | same outcome + latency fields | | aggregated over all kinds |
+//! | | `throughput_rps`, `elapsed_s`, `clients` | num/int | closed-loop rate and shape |
+//! | `server` | `served` | int | requests the service evaluated or answered from cache |
+//! | | `cache_hits`, `cache_misses`, `cache_evictions` | int | shared result-cache counters |
+//! | | `batches`, `coalesced`, `largest_batch` | int | batcher census: leader evaluations, follower joins, widest batch |
+//! | | `drain_clean` | int | 1 when the post-shutdown EOF arrived at a frame boundary |
+//!
+//! The `server` row is captured over the wire (a `stats` query) just
+//! before the drain, so it reflects the server's own counters, not the
+//! client's. Round-trip coverage lives in `tests/serve_e2e.rs`.
 
 use std::fmt::Write as _;
 

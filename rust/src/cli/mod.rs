@@ -1,12 +1,43 @@
-//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//! Hand-rolled CLI argument parsing (clap is unavailable offline) and
+//! the typed-error contract of the binary.
 //!
 //! Grammar: `memclos <command> [positional...] [--flag [value]]...`.
 //! Flags may repeat (`--set a=1 --set b=2`). `--help` is handled by the
-//! binary.
+//! binary ([`driver`]).
+//!
+//! Every misuse of the command line — unknown command, malformed flag
+//! value, unreadable `--config` — is a typed [`UsageError`] mapped to
+//! **exit code 2** by [`exit_code`]; runtime failures (evaluation
+//! errors, I/O mid-run) keep exit code 1. Nothing panics on bad input.
 
 use std::collections::HashMap;
 
-use anyhow::{bail, Context, Result};
+use anyhow::Result;
+
+pub mod driver;
+
+/// Typed command-line misuse: something the *caller* got wrong (unknown
+/// command or figure, unparseable flag value, missing argument,
+/// unreadable `--config`). The binary maps it to exit code 2 so scripts
+/// can tell misuse from runtime failure.
+#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+#[error("{0}")]
+pub struct UsageError(pub String);
+
+/// Build a [`UsageError`] wrapped as an [`anyhow::Error`].
+pub fn usage_error(msg: impl Into<String>) -> anyhow::Error {
+    anyhow::Error::new(UsageError(msg.into()))
+}
+
+/// The process exit code for a failed run: 2 for command-line misuse
+/// (a [`UsageError`] anywhere in the chain), 1 for runtime failure.
+pub fn exit_code(err: &anyhow::Error) -> i32 {
+    if err.chain().any(|c| c.downcast_ref::<UsageError>().is_some()) {
+        2
+    } else {
+        1
+    }
+}
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
@@ -20,8 +51,10 @@ pub struct Args {
 }
 
 /// Flags that take no value.
-const BOOLEAN_FLAGS: &[&str] =
-    &["help", "quick", "tsv", "no-plot", "verbose", "json", "legacy", "all"];
+const BOOLEAN_FLAGS: &[&str] = &[
+    "help", "quick", "tsv", "no-plot", "verbose", "json", "legacy", "all", "shutdown",
+    "self-host",
+];
 
 impl Args {
     /// Parse from an iterator of arguments (without argv[0]).
@@ -31,7 +64,7 @@ impl Args {
         while let Some(arg) = it.next() {
             if let Some(name) = arg.strip_prefix("--") {
                 if name.is_empty() {
-                    bail!("bare `--` is not supported");
+                    return Err(usage_error("bare `--` is not supported"));
                 }
                 if let Some((k, v)) = name.split_once('=') {
                     out.flags.entry(k.to_string()).or_default().push(v.to_string());
@@ -40,7 +73,7 @@ impl Args {
                 } else {
                     let v = it
                         .next()
-                        .with_context(|| format!("flag --{name} expects a value"))?;
+                        .ok_or_else(|| usage_error(format!("flag --{name} expects a value")))?;
                     out.flags.entry(name.to_string()).or_default().push(v);
                 }
             } else if out.command.is_empty() {
@@ -73,7 +106,7 @@ impl Args {
             None => Ok(default),
             Some(v) => v
                 .parse::<T>()
-                .map_err(|_| anyhow::anyhow!("flag --{name}: cannot parse `{v}`")),
+                .map_err(|_| usage_error(format!("flag --{name}: cannot parse `{v}`"))),
         }
     }
 }
@@ -131,5 +164,21 @@ mod tests {
     fn typed_default() {
         let a = parse("dram");
         assert_eq!(a.get::<usize>("ranks", 1).unwrap(), 1);
+    }
+
+    #[test]
+    fn misuse_is_a_usage_error_with_exit_code_2() {
+        let err = Args::parse(["x".into(), "--topo".into()]).unwrap_err();
+        assert!(err.downcast_ref::<UsageError>().is_some());
+        assert_eq!(exit_code(&err), 2);
+        let err = parse("latency --tiles abc").get::<usize>("tiles", 0).unwrap_err();
+        assert_eq!(err.to_string(), "flag --tiles: cannot parse `abc`");
+        assert_eq!(exit_code(&err), 2);
+        // Runtime failures keep exit code 1 — even wrapped in context.
+        let runtime = anyhow::anyhow!("backend exploded").context("evaluating point");
+        assert_eq!(exit_code(&runtime), 1);
+        // ...and a UsageError keeps code 2 through added context.
+        let wrapped = usage_error("bad flag").context("parsing command line");
+        assert_eq!(exit_code(&wrapped), 2);
     }
 }

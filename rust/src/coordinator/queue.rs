@@ -47,6 +47,21 @@ impl<T> WorkQueue<T> {
         true
     }
 
+    /// Non-blocking push: `true` on enqueue, `false` when the queue is
+    /// full or closed (the item is dropped). This is the admission-
+    /// control primitive — overload sheds immediately instead of
+    /// stacking blocked producers ([`crate::serve`]'s rule: shed, never
+    /// block).
+    pub fn try_push(&self, item: T) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.closed || st.items.len() >= self.capacity {
+            return false;
+        }
+        st.items.push_back(item);
+        self.not_empty.notify_one();
+        true
+    }
+
     /// Pop an item, blocking until one is available; `None` once the
     /// queue is closed and drained.
     pub fn pop(&self) -> Option<T> {
@@ -156,5 +171,18 @@ mod tests {
         let q = WorkQueue::new(2);
         q.close();
         assert!(!q.push(1));
+    }
+
+    #[test]
+    fn try_push_sheds_when_full_and_never_blocks() {
+        let q = WorkQueue::new(2);
+        assert!(q.try_push(1));
+        assert!(q.try_push(2));
+        assert!(!q.try_push(3), "full queue sheds immediately");
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert!(q.try_push(4), "capacity freed by the pop");
+        q.close();
+        assert!(!q.try_push(5), "closed queue sheds");
     }
 }

@@ -13,9 +13,10 @@
 //!   the leader reassembles outputs in input order, so callers see the
 //!   same `Vec` the sequential path produces.
 //! * **A memoizing result cache.** [`ParallelSweep`] keys results by
-//!   the canonical encoding, so repeated points — within one sweep or
-//!   across figures sharing an engine — are evaluated once. The cache
-//!   is semantics-preserving *because* seeds are canonical: a fresh
+//!   the canonical encoding (shared [`crate::util::cache::LruCache`]s,
+//!   unbounded here), so repeated points — within one sweep or across
+//!   figures sharing an engine — are evaluated once. The cache is
+//!   semantics-preserving *because* seeds are canonical: a fresh
 //!   evaluation of a duplicate would produce the identical bits.
 //!
 //! [`run_sweep_seq`] is the sequential oracle: one thread, one
@@ -29,9 +30,7 @@
 //! handles are not `Send`). [`Mode::Auto`] is resolved once, before any
 //! worker spawns, so one sweep never mixes backends.
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 
 use anyhow::{Context, Result};
 
@@ -40,6 +39,7 @@ use crate::api::{xla_ready, DesignPoint, Evaluator, Mode, Tech};
 use crate::emulation::TopologyKind;
 use crate::tech::ChipTech;
 use crate::topology::{ClosSpec, MeshSpec};
+use crate::util::cache::LruCache;
 use crate::vlsi::{ClosFloorplan, MeshFloorplan};
 
 /// Default worker count: one job per available hardware thread.
@@ -194,15 +194,6 @@ impl std::fmt::Display for SweepError {
 
 impl std::error::Error for SweepError {}
 
-/// Lock a memo cache, recovering from poisoning. A cache only ever
-/// holds `Copy` results inserted whole, so a panic elsewhere can never
-/// leave it half-written — the data behind a poisoned lock is still
-/// valid, and refusing to serve it would turn one caught worker panic
-/// into a permanently dead engine.
-fn lock_cache<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
-}
-
 /// Extract the human-readable payload of a caught panic.
 fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
@@ -335,10 +326,12 @@ pub struct ParallelSweep {
     tech: Tech,
     jobs: usize,
     seed: u64,
-    points: Mutex<HashMap<u64, PointResult>>,
-    plans: Mutex<HashMap<u64, PlanResult>>,
-    hits: AtomicU64,
-    misses: AtomicU64,
+    // Unbounded shared caches (util::cache handles the poison-safe
+    // locking): the key space is the finite set of design points one
+    // process evaluates. The serve layer stacks a *bounded* response
+    // cache of the same type on top.
+    points: LruCache<u64, PointResult>,
+    plans: LruCache<u64, PlanResult>,
 }
 
 impl ParallelSweep {
@@ -351,10 +344,8 @@ impl ParallelSweep {
             tech: tech.clone(),
             jobs: jobs.max(1),
             seed,
-            points: Mutex::new(HashMap::new()),
-            plans: Mutex::new(HashMap::new()),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
+            points: LruCache::unbounded(),
+            plans: LruCache::unbounded(),
         }
     }
 
@@ -384,78 +375,78 @@ impl ParallelSweep {
         self.seed
     }
 
-    /// Cache effectiveness so far (both caches combined).
+    /// Cache effectiveness so far (both caches combined). Hits count
+    /// memo hits *and* intra-call duplicates; misses count fresh
+    /// evaluations.
     pub fn cache_stats(&self) -> CacheStats {
-        CacheStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-        }
+        let (p, f) = (self.points.stats(), self.plans.stats());
+        CacheStats { hits: p.hits + f.hits, misses: p.misses + f.misses }
     }
 
     /// Evaluate latency design points: in input order, memoized by
     /// canonical encoding, bit-identical to [`run_sweep_seq`].
     pub fn eval_points(&self, points: &[SweepPoint]) -> Result<Vec<PointResult>> {
-        let fresh = {
-            let cache = lock_cache(&self.points);
+        // Scan atomically: memo hits and intra-call duplicates are
+        // hits, everything else is claimed for fresh evaluation.
+        let fresh = self.points.with(|cache| {
             let mut pending: Vec<(u64, SweepPoint)> = Vec::new();
             for &p in points {
                 let key = p.canonical_key();
-                if cache.contains_key(&key) || pending.iter().any(|&(k, _)| k == key) {
-                    self.hits.fetch_add(1, Ordering::Relaxed);
+                if cache.contains(&key) || pending.iter().any(|&(k, _)| k == key) {
+                    cache.note_hit();
                 } else {
-                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    cache.note_miss();
                     pending.push((key, p));
                 }
             }
             pending
-        };
+        });
         let results = self.eval_fresh_points(&fresh)?;
-        let mut cache = lock_cache(&self.points);
-        for (&(key, _), r) in fresh.iter().zip(&results) {
-            cache.insert(key, *r);
-        }
-        points
-            .iter()
-            .map(|p| {
-                cache
-                    .get(&p.canonical_key())
-                    .copied()
-                    .context("sweep point missing from the result cache")
-            })
-            .collect()
+        self.points.with(|cache| {
+            for (&(key, _), r) in fresh.iter().zip(&results) {
+                cache.insert(key, *r, 0);
+            }
+            points
+                .iter()
+                .map(|p| {
+                    cache
+                        .fetch(&p.canonical_key())
+                        .context("sweep point missing from the result cache")
+                })
+                .collect()
+        })
     }
 
     /// Evaluate single-chip floorplans: in input order, memoized by
     /// canonical encoding (this is the cache figs 5 and 6 share).
     pub fn eval_plans(&self, points: &[PlanPoint]) -> Result<Vec<PlanResult>> {
-        let fresh = {
-            let cache = lock_cache(&self.plans);
+        let fresh = self.plans.with(|cache| {
             let mut pending: Vec<(u64, PlanPoint)> = Vec::new();
             for &p in points {
                 let key = p.canonical_key();
-                if cache.contains_key(&key) || pending.iter().any(|&(k, _)| k == key) {
-                    self.hits.fetch_add(1, Ordering::Relaxed);
+                if cache.contains(&key) || pending.iter().any(|&(k, _)| k == key) {
+                    cache.note_hit();
                 } else {
-                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    cache.note_miss();
                     pending.push((key, p));
                 }
             }
             pending
-        };
+        });
         let results = self.map(&fresh, |&(_, p)| eval_plan(p, &self.tech.chip))?;
-        let mut cache = lock_cache(&self.plans);
-        for (&(key, _), r) in fresh.iter().zip(&results) {
-            cache.insert(key, *r);
-        }
-        points
-            .iter()
-            .map(|p| {
-                cache
-                    .get(&p.canonical_key())
-                    .copied()
-                    .context("plan point missing from the result cache")
-            })
-            .collect()
+        self.plans.with(|cache| {
+            for (&(key, _), r) in fresh.iter().zip(&results) {
+                cache.insert(key, *r, 0);
+            }
+            points
+                .iter()
+                .map(|p| {
+                    cache
+                        .fetch(&p.canonical_key())
+                        .context("plan point missing from the result cache")
+                })
+                .collect()
+        })
     }
 
     /// Deterministic parallel map: apply `f` to every item on the

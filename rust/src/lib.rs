@@ -39,6 +39,11 @@
 //!   evaluation paths (exact, native MC, XLA, DES) behind one
 //!   [`api::Evaluator`].
 //! * [`figures`] — generators for every table and figure in the paper.
+//! * [`serve`] — the multi-tenant batched evaluation service: a
+//!   std-only TCP front-end with a shared result cache
+//!   ([`util::cache`]), request batching over the sweep engine, and
+//!   shed-never-block admission control; plus the closed-loop load
+//!   generator behind `BENCH_serve.json`.
 
 pub mod api;
 pub mod cc;
@@ -52,6 +57,7 @@ pub mod figures;
 pub mod isa;
 pub mod netmodel;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod tech;
 pub mod topology;

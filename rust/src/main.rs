@@ -1,671 +1,11 @@
 //! `memclos` — reproduce "Emulating a large memory with a collection of
 //! smaller ones" from the command line.
 //!
-//! Every table and figure of the paper has a subcommand; `selfcheck`
-//! proves the XLA artifact and the native model agree bit-for-bit.
-//!
-//! All commands build design points through [`memclos::api`]'s
-//! [`DesignPoint`] builder (paper defaults + `--set`/`--config`
-//! overrides + CLI flags, in that precedence order) and evaluate
-//! latency on the [`memclos::coordinator`] sweep engine (backend via
-//! `--mode`, parallelism via `--jobs`; any job count is bit-identical
-//! to the sequential oracle).
-
-use anyhow::{bail, Context, Result};
-
-use memclos::api::{DesignPoint, Mode, Report, Row, Tech, XlaBackend};
-use memclos::cc::{compile, Backend};
-use memclos::cli::Args;
-use memclos::config::{self, Doc};
-use memclos::coordinator::{default_jobs, SweepPoint};
-use memclos::dram::{measure_random_latency, DramConfig};
-use memclos::emulation::{SequentialMachine, TopologyKind};
-use memclos::fault::FaultPlan;
-use memclos::figures::{self, FigOpts};
-use memclos::isa::decode::{predecode, FastMachine};
-use memclos::isa::interp::{DirectMemory, EmulatedChannelMemory, Machine, RunStats};
-use memclos::sim::contention::{run_scenario, Workload};
-use memclos::topology::{ClosSpec, MeshSpec};
-use memclos::vlsi::{ClosFloorplan, MeshFloorplan};
-
-const HELP: &str = "\
-memclos — emulating a large memory with a collection of smaller ones
-
-USAGE: memclos <command> [options]
-
-COMMANDS
-  tables [--which 1..5]         regenerate the paper's parameter tables
-  figure <5|6|7|9|10|11|bsize|ablations|contention|faults>  regenerate a figure / extension
-  figures --all [--jobs N]      regenerate EVERY table and figure on one
-                                shared sweep engine (repeated design
-                                points evaluated once); --json emits the
-                                machine-diffable reports the golden
-                                harness pins, --out DIR writes them
-  dram [--ranks N]              measure DDR3 random-access latency
-  area --topo clos|mesh [--tiles N --mem KB]   floorplan one chip
-  latency [--topo ... --tiles N --mem KB --k N]
-                                emulated-memory latency for one point,
-                                evaluated on the selected backend
-  run <program> [--topo ...]    compile+run a corpus program on both machines
-                                (pre-decoded fast loop; --legacy for the
-                                enum-match oracle)
-  contention [--clients N]...   trace-driven DES contention lab: replay a
-                                clients x pattern grid, one DES timeline
-                                per cell fanned out over --jobs; reports
-                                mean/p50/p95/p99/max, queue waiting and
-                                the fitted c_cont per cell
-    --pattern P  (repeatable)   uniform | zipf[:theta] | stride[:words]
-                                | chase | phased[:phases[:frac]]
-                                (default uniform — bitwise the legacy
-                                single-scenario experiment)
-    --trace PROG (repeatable)   capture PROG's emulated-memory accesses
-                                from a FastMachine run and replay them
-                                (heterogeneous clients when repeated;
-                                overrides --pattern)
-  faults [--jobs N]             fault-injection figure: replay the trace
-                                catalogue under seed-deterministic fault
-                                plans (0-10% dead tiles, degraded/flaky
-                                links, failed ports) and report slowdown,
-                                p99 tail inflation, retries and timeouts
-                                vs the healthy baseline; --json emits the
-                                golden-pinned report
-  selfcheck                     prove XLA artifact == native model
-  sweep --tiles N --mem KB      latency sweep over emulation sizes
-  bench-hotpath [--out PATH]    measure the access hot path, write BENCH_hotpath.json
-  bench-interp [--out PATH]     measure decoded-vs-legacy interpretation
-                                over the cc corpus, write BENCH_interp.json
-
-BACKENDS (--mode, default auto)
-  auto     XLA when artifacts/ holds the lowered kernel, else native MC
-  exact    closed-form expectation (O(k), no sampling)
-  native   native Monte-Carlo over the rank-latency LUT
-  xla      Monte-Carlo on the AOT-compiled PJRT kernel
-  des      Monte-Carlo through the discrete-event network simulator
-
-COMMON OPTIONS
-  --mode auto|exact|native|xla|des   evaluation backend (see above)
-  --samples N                   Monte-Carlo samples (default 65536)
-  --batch N                     XLA artifact batch size (default 16384)
-  --jobs N                      sweep worker threads (default: available
-                                parallelism; 1 forces the sequential
-                                oracle — bit-identical output either
-                                way; --workers is an alias)
-  --seed N                      RNG seed
-  --set key=value               config override (repeatable); system.*,
-                                net.*, chip.*, interposer.* reach every
-                                command, including the figures
-  --fault-frac F                inject a seed-deterministic fault plan at
-                                fraction F (dead tiles, degraded + flaky
-                                links, failed ports) into the design
-                                point; 0 is bitwise the healthy system
-  --fault-seed N                fault-plan draw seed (default 0xFA17);
-                                independent of --seed so the same plan
-                                can be replayed under fresh workloads
-  --config PATH                 config file (TOML subset)
-  --json                        latency/sweep/contention: emit the
-                                BENCH_hotpath.json schema family instead
-                                of tables
-";
+//! The binary is a thin shim: every subcommand lives in
+//! [`memclos::cli::driver`] so integration tests can drive the full
+//! command surface (and its exit-code contract: 2 for misuse, 1 for
+//! runtime failure) in-process.
 
 fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    match run(args) {
-        Ok(()) => {}
-        Err(e) => {
-            eprintln!("error: {e:#}");
-            std::process::exit(1);
-        }
-    }
-}
-
-fn eval_mode(args: &Args) -> Result<Mode> {
-    let samples: usize = args.get("samples", 65_536)?;
-    let batch: usize = args.get("batch", 16_384)?;
-    Mode::parse(args.flag("mode"), samples, batch)
-}
-
-fn fig_opts(args: &Args, doc: &Doc) -> Result<FigOpts> {
-    // `--jobs` is the flag; `--workers` survives as an alias.
-    let workers: usize = args.get("workers", default_jobs())?;
-    Ok(FigOpts {
-        mode: eval_mode(args)?,
-        jobs: args.get("jobs", workers)?,
-        seed: args.get("seed", 0xC105)?,
-        tech: Tech::from_doc(doc),
-    })
-}
-
-fn kind_str(kind: TopologyKind) -> &'static str {
-    match kind {
-        TopologyKind::Clos => "clos",
-        TopologyKind::Mesh => "mesh",
-    }
-}
-
-/// One design point from (in rising precedence) per-command defaults,
-/// the config doc and explicit CLI flags.
-fn design_point(
-    args: &Args,
-    doc: &Doc,
-    default_tiles: usize,
-    default_k: Option<usize>,
-) -> Result<DesignPoint> {
-    let mut dp = DesignPoint::clos(default_tiles).with_doc(doc)?;
-    if let Some(k) = default_k {
-        if doc.get("system.k").is_none() {
-            dp = dp.k(k);
-        }
-    }
-    if let Some(t) = args.flag("topo") {
-        dp = dp.topology(TopologyKind::parse(t)?);
-    }
-    if args.flag("tiles").is_some() {
-        dp = dp.tiles(args.get("tiles", 0usize)?);
-    }
-    if args.flag("mem").is_some() {
-        dp = dp.mem_kb(args.get("mem", 0u32)?);
-    }
-    if args.flag("k").is_some() {
-        dp = dp.k(args.get("k", 0usize)?);
-    }
-    if args.flag("fault-frac").is_some() {
-        let frac: f64 = args.get("fault-frac", 0.0f64)?;
-        let fault_seed: u64 = args.get("fault-seed", 0xFA17u64)?;
-        dp = dp.faults(FaultPlan::fraction(frac, fault_seed));
-    }
-    Ok(dp)
-}
-
-fn run(raw: Vec<String>) -> Result<()> {
-    let args = Args::parse(raw)?;
-    if args.command.is_empty() || args.has("help") || args.command == "help" {
-        println!("{HELP}");
-        return Ok(());
-    }
-    let doc = config::load(
-        args.flag("config").map(std::path::Path::new),
-        &args.flag_all("set"),
-    )?;
-    let tech = Tech::from_doc(&doc);
-
-    match args.command.as_str() {
-        "tables" => {
-            let which = args.flag("which");
-            match which {
-                None => print!("{}", figures::tables::render_all(&tech)),
-                Some("1") => print!("{}", figures::tables::table1(&tech.chip).render()),
-                Some("2") => print!("{}", figures::tables::table2(&tech.ip).render()),
-                Some("3") => print!("{}", figures::tables::table3().render()),
-                Some("4") => print!("{}", figures::tables::table4().render()),
-                Some("5") => print!("{}", figures::tables::table5(&tech.net).render()),
-                Some(o) => bail!("no table {o}"),
-            }
-        }
-        "figure" => {
-            let which = args.positional.first().context("figure number required")?;
-            let opts = fig_opts(&args, &doc)?;
-            let engine = opts.engine();
-            match which.as_str() {
-                "5" => print!(
-                    "{}",
-                    figures::fig5::render(&figures::fig5::generate_with(&engine)?, &opts.tech.chip)
-                ),
-                "6" => print!("{}", figures::fig6::render(&figures::fig6::generate_with(&engine)?)),
-                "7" => print!("{}", figures::fig7::render(&figures::fig7::generate_with(&engine)?)),
-                "9" => print!("{}", figures::fig9::render(&figures::fig9::generate_with(&engine)?)),
-                "10" => print!("{}", figures::fig10::render(&figures::fig10::generate_with(&engine)?)),
-                "11" => print!("{}", figures::fig11::render(&figures::fig11::generate_with(&engine)?)),
-                "bsize" => print!("{}", figures::binary_size::render(&figures::binary_size::generate()?)),
-                "ablations" => {
-                    print!("{}", figures::ablations::render(&figures::ablations::generate_with(&engine)?))
-                }
-                "contention" => {
-                    print!("{}", figures::contention::render(&figures::contention::generate_with(&engine)?))
-                }
-                "faults" => {
-                    print!("{}", figures::faults::render(&figures::faults::generate_with(&engine)?))
-                }
-                o => bail!("no figure {o} (5|6|7|9|10|11|bsize|ablations|contention|faults)"),
-            }
-        }
-        "figures" => {
-            // The scenario-diversity payoff of the sweep engine: one
-            // invocation regenerates the paper's entire evaluation on
-            // one shared engine, so design points repeated across
-            // figures (figs 9/10/11 share their sweeps, figs 5/6 their
-            // floorplans) are evaluated once.
-            if let Some(p) = args.positional.first() {
-                bail!("`figures` takes no figure number (did you mean `figure {p}`?)");
-            }
-            if !args.has("all") {
-                bail!("`figures` regenerates everything — confirm with `figures --all`");
-            }
-            let opts = fig_opts(&args, &doc)?;
-            let engine = opts.engine();
-            if args.has("json") || args.flag("out").is_some() {
-                let reports = figures::all_reports(&engine)?;
-                if let Some(dir) = args.flag("out") {
-                    let dir = std::path::Path::new(dir);
-                    std::fs::create_dir_all(dir)
-                        .with_context(|| format!("creating {}", dir.display()))?;
-                    for r in &reports {
-                        let path = dir.join(format!("{}.json", r.bench()));
-                        r.write(&path).with_context(|| format!("writing {}", path.display()))?;
-                    }
-                    eprintln!("wrote {} reports to {}", reports.len(), dir.display());
-                }
-                if args.has("json") {
-                    for r in &reports {
-                        print!("{}", r.render());
-                    }
-                }
-            } else {
-                print!("{}", figures::tables::render_all(&opts.tech));
-                print!(
-                    "{}",
-                    figures::fig5::render(&figures::fig5::generate_with(&engine)?, &opts.tech.chip)
-                );
-                print!("{}", figures::fig6::render(&figures::fig6::generate_with(&engine)?));
-                print!("{}", figures::fig7::render(&figures::fig7::generate_with(&engine)?));
-                print!("{}", figures::fig9::render(&figures::fig9::generate_with(&engine)?));
-                print!("{}", figures::fig10::render(&figures::fig10::generate_with(&engine)?));
-                print!("{}", figures::fig11::render(&figures::fig11::generate_with(&engine)?));
-                print!("{}", figures::binary_size::render(&figures::binary_size::generate()?));
-                print!("{}", figures::ablations::render(&figures::ablations::generate_with(&engine)?));
-                print!("{}", figures::contention::render(&figures::contention::generate_with(&engine)?));
-                print!("{}", figures::faults::render(&figures::faults::generate_with(&engine)?));
-            }
-            let cs = engine.cache_stats();
-            eprintln!(
-                "sweep engine: {} jobs, {} evaluations, {} cache hits",
-                engine.jobs(),
-                cs.misses,
-                cs.hits
-            );
-        }
-        "dram" => {
-            let ranks: usize = args.get("ranks", 1)?;
-            let n: u64 = args.get("samples", 20_000u64)?;
-            let m = measure_random_latency(DramConfig::with_ranks(ranks), n, args.get("seed", 7)?)?;
-            println!(
-                "DDR3-1600 {} rank(s), {} GB: avg {:.2} ns (min {:.2}, max {:.2}, sd {:.2}) over {} accesses",
-                ranks,
-                m.config.capacity_bytes() >> 30,
-                m.avg_ns,
-                m.min_ns,
-                m.max_ns,
-                m.stddev_ns,
-                m.accesses
-            );
-        }
-        "area" => {
-            let dp = design_point(&args, &doc, 256, None)?;
-            let tiles = dp.system_tiles();
-            let mem = dp.tile_mem_kb();
-            match dp.kind() {
-                TopologyKind::Clos => {
-                    let fp = ClosFloorplan::plan(&ClosSpec::with_tiles(tiles), mem, &tech.chip)?;
-                    println!(
-                        "folded-Clos chip: {} tiles x {} KB\n  area {:.1} mm^2 ({:.1} x {:.1}), I/O {:.1} mm^2, switches {:.2} mm^2, wires {:.2} mm^2\n  wires: tile {:.2} mm ({} cy), edge-core {:.2} mm ({} cy), core-pad {:.2} mm ({} cy)\n  economical: {}",
-                        fp.tiles, fp.mem_kb, fp.area_mm2, fp.chip_w_mm, fp.chip_h_mm,
-                        fp.io_area_mm2, fp.switch_area_mm2, fp.wire_area_mm2,
-                        fp.wire_tile_mm, fp.cycles.tile,
-                        fp.wire_edge_core_mm, fp.cycles.edge_core,
-                        fp.wire_core_pad_mm, fp.cycles.core_pad,
-                        fp.is_economical(&tech.chip),
-                    );
-                }
-                TopologyKind::Mesh => {
-                    let fp = MeshFloorplan::plan(&MeshSpec::with_tiles(tiles), mem, &tech.chip)?;
-                    println!(
-                        "2D-mesh chip: {} tiles x {} KB\n  area {:.1} mm^2 (side {:.1}), I/O {:.1} mm^2, switches {:.2} mm^2, wires {:.2} mm^2\n  wires: tile {:.2} mm ({} cy), hop {:.2} mm ({} cy)\n  economical: {}",
-                        fp.tiles, fp.mem_kb, fp.area_mm2, fp.chip_side_mm,
-                        fp.io_area_mm2, fp.switch_area_mm2, fp.wire_area_mm2,
-                        fp.wire_tile_mm, fp.cycles.tile, fp.wire_hop_mm, fp.cycles.mesh_hop,
-                        fp.is_economical(&tech.chip),
-                    );
-                }
-            }
-        }
-        "latency" => {
-            let dp = design_point(&args, &doc, 1024, None)?;
-            let setup = dp.build()?;
-            let (tiles, mem, k) = (setup.map.tiles, setup.mem_kb, setup.map.k);
-            let exact = setup.expected_latency();
-            let seq = SequentialMachine::with_measured_dram(1);
-            // One-point sweep through the engine: same path as `sweep`
-            // and the figures, so `--jobs 1` vs `--jobs N` is
-            // bit-identical by construction.
-            let opts = fig_opts(&args, &doc)?;
-            let engine = opts.engine();
-            let point = SweepPoint { kind: dp.kind(), tiles, mem_kb: mem, k };
-            let eval = engine.eval_points(&[point])?[0];
-            let name = format!("{}-{tiles}x{mem}-k{k}", kind_str(dp.kind()));
-            if args.has("json") {
-                let mut report = Report::new("latency");
-                report.push(
-                    Row::new(&name)
-                        .str("backend", eval.backend)
-                        .num("mean_cycles", eval.mean_cycles)
-                        .int("samples", eval.samples as u64)
-                        .num("exact_cycles", exact)
-                        .num("vs_ddr3", eval.mean_cycles / seq.dram_ns),
-                );
-                print!("{}", report.render());
-            } else {
-                println!(
-                    "{:?} {tiles}-tile system, {mem} KB/tile, k={k}: {exact:.2} cycles/access ({:.2}x DDR3 {:.1} ns)",
-                    dp.kind(), exact / seq.dram_ns, seq.dram_ns
-                );
-                if eval.backend != "exact" {
-                    println!(
-                        "  {} backend: {:.2} cycles/access ({} samples)",
-                        eval.backend, eval.mean_cycles, eval.samples
-                    );
-                }
-            }
-        }
-        "run" => {
-            let name = args.positional.first().context("program name required")?;
-            let prog = memclos::cc::corpus::all()
-                .into_iter()
-                .find(|p| p.name == *name)
-                .with_context(|| {
-                    let names: Vec<&str> =
-                        memclos::cc::corpus::all().iter().map(|p| p.name).collect();
-                    format!("unknown program `{name}` (available: {})", names.join(", "))
-                })?;
-            let dp = design_point(&args, &doc, 1024, Some(255))?;
-
-            let direct = compile(prog.source, Backend::Direct)?;
-            let emulated = compile(prog.source, Backend::Emulated)?;
-            let legacy = args.has("legacy");
-
-            let seq = SequentialMachine::with_measured_dram(1);
-            let mut dmem = DirectMemory::new(seq, 1 << 24);
-            let (dstats, dres): (RunStats, i64) = if legacy {
-                let mut dm = Machine::new(&mut dmem, 1 << 16);
-                (dm.run(&direct.code)?, dm.reg(0))
-            } else {
-                let mut dm = FastMachine::new(&mut dmem, 1 << 16);
-                (dm.run(&predecode(&direct.code)?)?, dm.reg(0))
-            };
-
-            let mut emem = EmulatedChannelMemory::new(dp.build()?);
-            let (estats, eres): (RunStats, i64) = if legacy {
-                let mut em = Machine::new(&mut emem, 1 << 16);
-                (em.run(&emulated.code)?, em.reg(0))
-            } else {
-                let mut em = FastMachine::new(&mut emem, 1 << 16);
-                (em.run(&predecode(&emulated.code)?)?, em.reg(0))
-            };
-
-            println!(
-                "program `{}` ({} interpreter):",
-                prog.name,
-                if legacy { "legacy enum-match" } else { "pre-decoded" }
-            );
-            println!(
-                "  sequential: result {dres}, {} insts, {} cycles (binary {} B)",
-                dstats.instructions, dstats.cycles, direct.binary_bytes()
-            );
-            println!(
-                "  emulated  : result {eres}, {} insts, {} cycles (binary {} B, +{:.1}%)",
-                estats.instructions,
-                estats.cycles,
-                emulated.binary_bytes(),
-                100.0 * (emulated.binary_bytes() as f64 / direct.binary_bytes() as f64 - 1.0)
-            );
-            println!(
-                "  slowdown  : {:.2}x",
-                estats.cycles as f64 / dstats.cycles as f64
-            );
-            if dres != eres {
-                bail!("machines disagree: {dres} vs {eres}");
-            }
-        }
-        "contention" => {
-            let clients_list: Vec<usize> = {
-                let raw = args.flag_all("clients");
-                if raw.is_empty() {
-                    vec![4]
-                } else {
-                    raw.iter()
-                        .map(|s| {
-                            s.parse::<usize>()
-                                .map_err(|_| anyhow::anyhow!("--clients: cannot parse `{s}`"))
-                        })
-                        .collect::<Result<_>>()?
-                }
-            };
-            if let Some(&bad) = clients_list.iter().find(|&&c| c == 0) {
-                bail!("--clients {bad}: need at least one client per scenario");
-            }
-            let accesses: usize = args.get("samples", 500)?;
-            if accesses == 0 {
-                bail!("--samples 0: need at least one access per client");
-            }
-            let dp = design_point(&args, &doc, 256, None)?;
-            let point = SweepPoint {
-                kind: dp.kind(),
-                tiles: dp.system_tiles(),
-                mem_kb: dp.tile_mem_kb(),
-                k: dp.emulation_tiles(),
-            };
-            // Each (pattern, clients) cell is ONE causally-dependent
-            // DES timeline — inherently sequential — so the grid fans
-            // out across cells on the sweep engine; any `--jobs` count
-            // is bit-identical to the sequential pass (canonical
-            // per-cell seeds).
-            let mut opts = fig_opts(&args, &doc)?;
-            opts.seed = args.get("seed", 5)?;
-            let engine = opts.engine();
-
-            let trace_names = args.flag_all("trace");
-            let rows: Vec<figures::contention::CellResult> = if trace_names.is_empty() {
-                let patterns: Vec<memclos::workload::TracePattern> = {
-                    let raw = args.flag_all("pattern");
-                    let specs =
-                        if raw.is_empty() { vec!["uniform".to_string()] } else { raw };
-                    specs
-                        .iter()
-                        .map(|s| memclos::workload::TracePattern::parse(s))
-                        .collect::<Result<_>>()?
-                };
-                let cells: Vec<figures::contention::Cell> = patterns
-                    .iter()
-                    .flat_map(|&pattern| {
-                        clients_list.iter().map(move |&clients| figures::contention::Cell {
-                            point,
-                            pattern,
-                            clients,
-                            accesses,
-                        })
-                    })
-                    .collect();
-                figures::contention::eval_cells(&engine, &cells)?
-            } else {
-                // Captured-trace replay: each named corpus program is
-                // run once on the FastMachine and its emulated-memory
-                // accesses become a client trace (clients cycle through
-                // the captured set — heterogeneous when several are
-                // named).
-                let setup = dp.build()?;
-                let captured: Vec<memclos::workload::Trace> = trace_names
-                    .iter()
-                    .map(|name| memclos::workload::capture_corpus_program(name, &setup))
-                    .collect::<Result<_>>()?;
-                let label = format!("trace:{}", trace_names.join("+"));
-                let seed = engine.seed();
-                engine.map(&clients_list, |&clients| {
-                    let cell_seed = memclos::coordinator::point_seed(
-                        seed,
-                        0x7ACE ^ ((clients as u64) << 1) ^ ((accesses as u64) << 24),
-                    );
-                    Ok(figures::contention::CellResult {
-                        point,
-                        pattern: label.clone(),
-                        clients,
-                        stats: run_scenario(
-                            &setup,
-                            clients,
-                            accesses,
-                            cell_seed,
-                            Workload::Traces(&captured),
-                        )?,
-                    })
-                })?
-            };
-
-            if args.has("json") {
-                print!("{}", figures::contention::report_rows(&rows).render());
-            } else {
-                for r in &rows {
-                    let s = &r.stats;
-                    println!(
-                        "{:>14} x{:>3} clients, {accesses} accesses: mean {:.1} cy  p50 {:.1}  p95 {:.1}  p99 {:.1}  max {:.0}  c_cont {:.3}  wait {:.1} cy  port-util max {:.2}",
-                        r.pattern,
-                        r.clients,
-                        s.latency.mean(),
-                        s.dist.p50,
-                        s.dist.p95,
-                        s.dist.p99,
-                        s.dist.max,
-                        s.c_cont,
-                        s.wait.mean(),
-                        s.port_util_max,
-                    );
-                }
-            }
-        }
-        "faults" => {
-            // The availability/tail-inflation experiment: replay the
-            // trace catalogue under seed-deterministic fault plans of
-            // rising severity and report slowdown + p99 inflation
-            // against the healthy (fraction 0) baseline of the same
-            // grid. Every cell is one DES timeline fanned out over
-            // --jobs; any job count is bit-identical.
-            let opts = fig_opts(&args, &doc)?;
-            let engine = opts.engine();
-            let rows = figures::faults::generate_with(&engine)?;
-            if args.has("json") {
-                print!("{}", figures::faults::report(&rows).render());
-            } else {
-                print!("{}", figures::faults::render(&rows));
-            }
-        }
-        "selfcheck" => selfcheck(&args, &tech)?,
-        "bench-hotpath" => {
-            let setup = figures::hotpath::design_point()?;
-            let b = figures::hotpath::measure(&setup);
-            print!("{}", figures::hotpath::render(&setup, &b));
-            let out = args.flag("out").unwrap_or("BENCH_hotpath.json");
-            b.write_json(std::path::Path::new(out))
-                .with_context(|| format!("writing {out}"))?;
-            println!("wrote {out}");
-            figures::hotpath::assert_hotpath(&b)?;
-            println!(
-                "throughput assertions OK (LUT {:.1}x routed)",
-                figures::hotpath::lut_speedup(&b)?
-            );
-        }
-        "bench-interp" => {
-            let w = figures::interp_bench::workload()?;
-            let b = figures::interp_bench::measure(&w);
-            print!("{}", figures::interp_bench::render(&b));
-            let out = args.flag("out").unwrap_or("BENCH_interp.json");
-            b.write_json(std::path::Path::new(out))
-                .with_context(|| format!("writing {out}"))?;
-            println!("wrote {out}");
-            figures::interp_bench::assert_interp(&b)?;
-            println!(
-                "interp assertions OK (decoded {:.1}x legacy on the emulated corpus)",
-                figures::interp_bench::speedup(&b)?
-            );
-        }
-        "sweep" => {
-            let dp = design_point(&args, &doc, 1024, None)?;
-            let (kind, tiles) = (dp.kind(), dp.system_tiles());
-            let mem = dp.tile_mem_kb();
-            let mut points = Vec::new();
-            let mut k = 16usize;
-            while k < tiles {
-                points.push(SweepPoint { kind, tiles, mem_kb: mem, k });
-                k *= 2;
-            }
-            points.push(SweepPoint { kind, tiles, mem_kb: mem, k: tiles - 1 });
-            let opts = fig_opts(&args, &doc)?;
-            let engine = opts.engine();
-            let mut results = engine.eval_points(&points)?;
-            results.sort_by_key(|r| r.point.k);
-            if args.has("json") {
-                let mut report = Report::new("sweep");
-                for r in &results {
-                    report.push(
-                        Row::new(&format!("{}-{tiles}-k{}", kind_str(kind), r.point.k))
-                            .int("k", r.point.k as u64)
-                            .str("backend", r.backend)
-                            .num("mean_cycles", r.mean_cycles)
-                            .int("samples", r.samples as u64),
-                    );
-                }
-                print!("{}", report.render());
-            } else {
-                println!("k tiles  latency (cycles)");
-                for r in &results {
-                    println!("{:>7}  {:.2}", r.point.k, r.mean_cycles);
-                }
-            }
-        }
-        other => bail!("unknown command `{other}` (try --help)"),
-    }
-    Ok(())
-}
-
-/// Prove the evaluation paths agree: exact expectation, native
-/// Monte-Carlo batches, and the AOT XLA kernel, via the api backends.
-fn selfcheck(args: &Args, tech: &Tech) -> Result<()> {
-    let set = memclos::runtime::ArtifactSet::new()?;
-    println!("PJRT platform: {}", set.platform());
-    if !set.available("latency_batch_4096") {
-        bail!("artifacts missing — run `make artifacts` first");
-    }
-    let backend = XlaBackend::load_from(&set, 4096)?;
-    let mut rng = memclos::util::rng::Rng::new(args.get("seed", 0xABCD)?);
-    let mut worst = 0f32;
-    let mut checked = 0usize;
-    for kind in [TopologyKind::Clos, TopologyKind::Mesh] {
-        for &(tiles, mem) in &[(256usize, 64u32), (1024, 128), (4096, 128)] {
-            for &k in &[15usize, 255, 1023] {
-                if k >= tiles {
-                    continue;
-                }
-                let setup = DesignPoint::new(kind, tiles)
-                    .mem_kb(mem)
-                    .k(k)
-                    .tech(tech)
-                    .build()?;
-                let mut addrs = vec![0i32; 4096];
-                rng.fill_addresses(setup.map.space_words(), &mut addrs);
-                let (xla_lat, _) = backend.batch_latencies(&setup, &addrs)?;
-                let mut native = Vec::new();
-                setup.native_batch(&addrs, &mut native);
-                for i in 0..addrs.len() {
-                    let diff = (xla_lat[i] - native[i]).abs();
-                    worst = worst.max(diff);
-                    if diff > 1e-4 {
-                        bail!(
-                            "MISMATCH {kind:?} tiles={tiles} mem={mem} k={k} addr={}: xla {} native {}",
-                            addrs[i],
-                            xla_lat[i],
-                            native[i]
-                        );
-                    }
-                }
-                checked += addrs.len();
-            }
-        }
-    }
-    println!("selfcheck OK: {checked} accesses across 16 design points, worst |xla-native| = {worst}");
-    Ok(())
+    std::process::exit(memclos::cli::driver::main_entry());
 }

@@ -1,0 +1,159 @@
+//! The wire framing: 4-byte big-endian length prefix + UTF-8 JSON
+//! payload, bounded by [`MAX_FRAME`].
+//!
+//! Malformed input is a typed [`FrameError`], never a panic: an
+//! oversized prefix is rejected before any payload is read (the
+//! connection cannot resync afterwards, so the server closes it), a
+//! short read mid-frame is [`FrameError::Truncated`], and a clean EOF
+//! *between* frames is `Ok(None)` — the normal way a client hangs up.
+
+use std::io::{self, Read, Write};
+
+use thiserror::Error;
+
+/// Hard ceiling on one frame's payload: 1 MiB. Far above any real
+/// request or response in the serve schema; a prefix past it is a
+/// protocol error (or a client speaking something else entirely).
+pub const MAX_FRAME: usize = 1 << 20;
+
+/// Typed framing failure.
+#[derive(Debug, Error)]
+pub enum FrameError {
+    /// The length prefix exceeds [`MAX_FRAME`].
+    #[error("frame of {len} bytes exceeds the {max}-byte limit")]
+    Oversized {
+        /// Declared payload length.
+        len: usize,
+        /// The [`MAX_FRAME`] bound.
+        max: usize,
+    },
+    /// The connection ended mid-frame.
+    #[error("truncated frame: {got} of {want} bytes before EOF")]
+    Truncated {
+        /// Bytes received.
+        got: usize,
+        /// Bytes the frame declared.
+        want: usize,
+    },
+    /// The payload is not valid UTF-8.
+    #[error("frame payload is not valid UTF-8")]
+    Utf8,
+    /// The underlying transport failed.
+    #[error("frame i/o: {0}")]
+    Io(#[from] io::Error),
+}
+
+/// Write one frame (length prefix + payload) and flush.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<(), FrameError> {
+    if payload.len() > MAX_FRAME {
+        return Err(FrameError::Oversized { len: payload.len(), max: MAX_FRAME });
+    }
+    w.write_all(&(payload.len() as u32).to_be_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame. `Ok(None)` is a clean EOF at a frame boundary;
+/// anything else short of a complete frame is a typed error.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>, FrameError> {
+    let mut prefix = [0u8; 4];
+    match read_full(r, &mut prefix)? {
+        0 => return Ok(None),
+        4 => {}
+        got => return Err(FrameError::Truncated { got, want: 4 }),
+    }
+    let len = u32::from_be_bytes(prefix) as usize;
+    if len > MAX_FRAME {
+        return Err(FrameError::Oversized { len, max: MAX_FRAME });
+    }
+    let mut payload = vec![0u8; len];
+    let got = read_full(r, &mut payload)?;
+    if got < len {
+        return Err(FrameError::Truncated { got, want: len });
+    }
+    Ok(Some(payload))
+}
+
+/// Like [`read_frame`], but the payload is also checked to be UTF-8 and
+/// returned as a `String` (what the JSON layer wants).
+pub fn read_text_frame(r: &mut impl Read) -> Result<Option<String>, FrameError> {
+    match read_frame(r)? {
+        None => Ok(None),
+        Some(bytes) => String::from_utf8(bytes).map(Some).map_err(|_| FrameError::Utf8),
+    }
+}
+
+/// Fill `buf` as far as the stream allows; returns the bytes read
+/// (short only at EOF). `Interrupted` is retried.
+fn read_full(r: &mut impl Read, buf: &mut [u8]) -> Result<usize, FrameError> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => break,
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(got)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn round_trip(payload: &[u8]) -> Vec<u8> {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, payload).unwrap();
+        read_frame(&mut Cursor::new(wire)).unwrap().expect("one frame")
+    }
+
+    #[test]
+    fn frames_round_trip() {
+        for payload in [&b""[..], b"x", b"{\"kind\": \"ping\"}", &[0xF0, 0x9F, 0x98, 0x80]] {
+            assert_eq!(round_trip(payload), payload);
+        }
+        let big = vec![b'a'; 100_000];
+        assert_eq!(round_trip(&big), big);
+    }
+
+    #[test]
+    fn clean_eof_is_none_and_mid_frame_eof_is_truncated() {
+        assert!(read_frame(&mut Cursor::new(Vec::new())).unwrap().is_none());
+        // Cut inside the prefix.
+        let err = read_frame(&mut Cursor::new(vec![0u8, 0])).unwrap_err();
+        assert!(matches!(err, FrameError::Truncated { got: 2, want: 4 }), "{err}");
+        // Cut inside the payload.
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"hello").unwrap();
+        wire.truncate(7);
+        let err = read_frame(&mut Cursor::new(wire)).unwrap_err();
+        assert!(matches!(err, FrameError::Truncated { got: 3, want: 5 }), "{err}");
+    }
+
+    #[test]
+    fn oversized_prefix_is_rejected_before_reading_payload() {
+        let mut wire = ((MAX_FRAME + 1) as u32).to_be_bytes().to_vec();
+        wire.extend_from_slice(b"whatever");
+        let err = read_frame(&mut Cursor::new(wire)).unwrap_err();
+        assert!(
+            matches!(err, FrameError::Oversized { len, .. } if len == MAX_FRAME + 1),
+            "{err}"
+        );
+        // And the writer refuses to emit one.
+        let mut sink = Vec::new();
+        let err = write_frame(&mut sink, &vec![0u8; MAX_FRAME + 1]).unwrap_err();
+        assert!(matches!(err, FrameError::Oversized { .. }), "{err}");
+        assert!(sink.is_empty(), "nothing written for a rejected frame");
+    }
+
+    #[test]
+    fn non_utf8_payload_is_typed() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &[0xFF, 0xFE]).unwrap();
+        let err = read_text_frame(&mut Cursor::new(wire)).unwrap_err();
+        assert!(matches!(err, FrameError::Utf8), "{err}");
+    }
+}

@@ -1,0 +1,345 @@
+//! The closed-loop load generator: N client threads, each holding one
+//! connection and one outstanding request at a time, drawing from a
+//! seeded request mix (same [`Rng`] discipline as
+//! [`crate::workload::trace`] — the run is reproducible from its seed).
+//!
+//! The mix leans on the serve cache the way a real multi-tenant
+//! workload would: a small pool of design points and seeds recurs
+//! across clients, so later requests hit payloads cached by earlier
+//! ones. Per-request wall latency is recorded into
+//! [`crate::util::stats::Dist`] per query kind; [`LoadSummary::report`]
+//! renders the `BENCH_serve.json` document (the `BENCH_hotpath.json`
+//! schema family).
+//!
+//! With `shutdown: true` the run ends with a control connection that
+//! captures server counters, requests a drain, and verifies the server
+//! answers then closes cleanly (`drain_clean`).
+
+use std::fmt::Write as _;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::api::{Report, Row};
+use crate::coordinator::point_seed;
+use crate::serve::frame::{read_frame, write_frame};
+use crate::serve::proto::Response;
+use crate::util::rng::Rng;
+use crate::util::stats::Dist;
+
+/// Load-generator options.
+#[derive(Clone, Debug)]
+pub struct LoadgenOpts {
+    /// Server address (`host:port`).
+    pub addr: String,
+    /// Concurrent closed-loop clients.
+    pub clients: usize,
+    /// Requests per client.
+    pub requests: usize,
+    /// Mix seed (the whole run is a pure function of it and the
+    /// server's state).
+    pub seed: u64,
+    /// End the run with a stats capture + drain request.
+    pub shutdown: bool,
+}
+
+impl Default for LoadgenOpts {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7077".to_string(),
+            clients: 4,
+            requests: 64,
+            seed: 0x10AD,
+            shutdown: true,
+        }
+    }
+}
+
+/// The query kinds the mix draws, with their draw weights (percent).
+const MIX: &[(&str, u32)] =
+    &[("latency", 60), ("contention", 20), ("sweep", 10), ("emulation", 10)];
+
+/// Per-kind outcome counters and latency distribution.
+#[derive(Clone, Debug, Default)]
+pub struct KindSummary {
+    /// Requests sent.
+    pub sent: u64,
+    /// `ok: true` responses.
+    pub ok: u64,
+    /// Typed overload sheds.
+    pub overload: u64,
+    /// Hard errors (`ok: false` without the overload marker).
+    pub errors: u64,
+    /// Wall latencies, seconds (successful responses only — shed
+    /// latencies would drag the percentiles toward the fast-reject
+    /// path and hide the served tail).
+    lat_s: Vec<f64>,
+}
+
+/// Whole-run summary.
+#[derive(Clone, Debug, Default)]
+pub struct LoadSummary {
+    /// Requests sent across all clients.
+    pub sent: u64,
+    /// Successful responses.
+    pub ok: u64,
+    /// Overload sheds.
+    pub overload: u64,
+    /// Hard errors (mismatched ids count here too).
+    pub errors: u64,
+    /// Wall time of the request phase.
+    pub elapsed: Duration,
+    /// Clients driven.
+    pub clients: usize,
+    /// Per-kind breakdown, in [`MIX`] order.
+    pub kinds: Vec<(String, KindSummary)>,
+    /// Server counters captured just before shutdown (when requested).
+    pub server_stats: Option<crate::util::json::Json>,
+    /// Whether the drain handshake completed cleanly (when requested):
+    /// shutdown acknowledged, then EOF at a frame boundary.
+    pub drain_clean: Option<bool>,
+}
+
+impl LoadSummary {
+    /// Requests per second over the request phase.
+    pub fn throughput_rps(&self) -> f64 {
+        let s = self.elapsed.as_secs_f64();
+        if s > 0.0 {
+            self.sent as f64 / s
+        } else {
+            0.0
+        }
+    }
+
+    /// The `BENCH_serve.json` document: one row per kind, a `total`
+    /// row, and a `server` row with the captured counters.
+    pub fn report(&self) -> Report {
+        let mut rep = Report::new("serve");
+        let mut all: Vec<f64> = Vec::new();
+        for (kind, s) in &self.kinds {
+            all.extend_from_slice(&s.lat_s);
+            rep.push(latency_row(kind, s.sent, s.ok, s.overload, s.errors, &s.lat_s));
+        }
+        let total = latency_row("total", self.sent, self.ok, self.overload, self.errors, &all)
+            .num("throughput_rps", self.throughput_rps())
+            .num("elapsed_s", self.elapsed.as_secs_f64())
+            .int("clients", self.clients as u64);
+        rep.push(total);
+        let mut server = Row::new("server");
+        if let Some(stats) = &self.server_stats {
+            for key in
+                ["served", "cache_hits", "cache_misses", "cache_evictions", "batches", "coalesced", "largest_batch"]
+            {
+                if let Some(v) = stats.get(key).and_then(crate::util::json::Json::as_f64) {
+                    server = server.num(key, v);
+                }
+            }
+        }
+        server = server.int("drain_clean", u64::from(self.drain_clean == Some(true)));
+        rep.push(server);
+        rep
+    }
+
+    /// Human rendering.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{} requests over {} clients in {:.2}s ({:.1} req/s): {} ok, {} shed, {} errors",
+            self.sent,
+            self.clients,
+            self.elapsed.as_secs_f64(),
+            self.throughput_rps(),
+            self.ok,
+            self.overload,
+            self.errors
+        );
+        for (kind, s) in &self.kinds {
+            let d = Dist::of(&s.lat_s);
+            let _ = writeln!(
+                out,
+                "  {kind:>11}: {:>4} sent  {:>4} ok  p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  max {:.2} ms",
+                s.sent,
+                s.ok,
+                d.p50 * 1e3,
+                d.p95 * 1e3,
+                d.p99 * 1e3,
+                d.max * 1e3,
+            );
+        }
+        if let Some(clean) = self.drain_clean {
+            let _ = writeln!(out, "  drain: {}", if clean { "clean" } else { "NOT CLEAN" });
+        }
+        out
+    }
+}
+
+fn latency_row(name: &str, sent: u64, ok: u64, overload: u64, errors: u64, lat_s: &[f64]) -> Row {
+    let d = Dist::of(lat_s);
+    Row::new(name)
+        .int("requests", sent)
+        .int("ok", ok)
+        .int("overload", overload)
+        .int("error", errors)
+        .num("mean_ms", d.mean * 1e3)
+        .num("p50_ms", d.p50 * 1e3)
+        .num("p95_ms", d.p95 * 1e3)
+        .num("p99_ms", d.p99 * 1e3)
+        .num("max_ms", d.max * 1e3)
+}
+
+/// Draw one request body for client `client`, request `i`. Small pools
+/// of points/seeds recur across clients so the server cache sees
+/// cross-session sharing.
+fn draw_request(rng: &mut Rng, id: u64) -> (String, String) {
+    let roll = rng.below(100) as u32;
+    let mut acc = 0u32;
+    let mut kind = MIX[0].0;
+    for &(k, w) in MIX {
+        acc += w;
+        if roll < acc {
+            kind = k;
+            break;
+        }
+    }
+    let (tiles, k_small, k_full) = *rng.choose(&[(256usize, 128usize, 255usize), (1024, 255, 1023)]);
+    let k = if rng.chance(0.5) { k_small } else { k_full };
+    let seed = rng.below(4);
+    let body = match kind {
+        "latency" => format!(
+            "{{\"id\": {id}, \"kind\": \"latency\", \"tiles\": {tiles}, \"k\": {k}, \"seed\": {seed}}}"
+        ),
+        "sweep" => format!(
+            "{{\"id\": {id}, \"kind\": \"sweep\", \"tiles\": {tiles}, \"seed\": {seed}}}"
+        ),
+        "emulation" => {
+            let prog = rng.choose(&["sieve", "sum_squares", "fib_memo"]);
+            format!(
+                "{{\"id\": {id}, \"kind\": \"emulation\", \"tiles\": {tiles}, \"k\": {k}, \"program\": \"{prog}\"}}"
+            )
+        }
+        _ => {
+            let pattern = rng.choose(&["uniform", "zipf:1.2", "stride:8", "chase"]);
+            let clients = rng.range(2, 5);
+            format!(
+                "{{\"id\": {id}, \"kind\": \"contention\", \"tiles\": {tiles}, \"k\": {k}, \"seed\": {seed}, \"clients\": {clients}, \"accesses\": 64, \"pattern\": \"{pattern}\"}}"
+            )
+        }
+    };
+    (kind.to_string(), body)
+}
+
+/// One round-trip on an open connection.
+fn round_trip(stream: &mut TcpStream, body: &str) -> Result<Response> {
+    write_frame(stream, body.as_bytes()).context("sending request")?;
+    let bytes = read_frame(stream)
+        .context("reading response")?
+        .context("server closed before responding")?;
+    Response::from_bytes(&bytes).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+}
+
+/// Run the closed loop against a live server.
+pub fn run(opts: &LoadgenOpts) -> Result<LoadSummary> {
+    let mut summary = LoadSummary {
+        clients: opts.clients,
+        kinds: MIX.iter().map(|&(k, _)| (k.to_string(), KindSummary::default())).collect(),
+        ..LoadSummary::default()
+    };
+    let started = Instant::now();
+    let handles: Vec<_> = (0..opts.clients)
+        .map(|c| {
+            let addr = opts.addr.clone();
+            let requests = opts.requests;
+            let seed = point_seed(opts.seed, c as u64);
+            std::thread::spawn(move || client_loop(&addr, c, requests, seed))
+        })
+        .collect();
+    for h in handles {
+        let per_client = h.join().unwrap_or_else(|_| Err(anyhow::anyhow!("client panicked")))?;
+        for (kind, sent, outcome, lat) in per_client {
+            let slot = summary
+                .kinds
+                .iter_mut()
+                .find(|(k, _)| *k == kind)
+                .map(|(_, s)| s)
+                .expect("kind drawn from MIX");
+            slot.sent += sent;
+            summary.sent += sent;
+            match outcome {
+                Outcome::Ok => {
+                    slot.ok += 1;
+                    summary.ok += 1;
+                    slot.lat_s.push(lat);
+                }
+                Outcome::Overload => {
+                    slot.overload += 1;
+                    summary.overload += 1;
+                }
+                Outcome::Error => {
+                    slot.errors += 1;
+                    summary.errors += 1;
+                }
+            }
+        }
+    }
+    summary.elapsed = started.elapsed();
+
+    if opts.shutdown {
+        let (stats, clean) = drain(&opts.addr)?;
+        summary.server_stats = stats;
+        summary.drain_clean = Some(clean);
+    }
+    Ok(summary)
+}
+
+enum Outcome {
+    Ok,
+    Overload,
+    Error,
+}
+
+/// One client's closed loop; returns (kind, sent, outcome, latency_s)
+/// per request.
+fn client_loop(
+    addr: &str,
+    client: usize,
+    requests: usize,
+    seed: u64,
+) -> Result<Vec<(String, u64, Outcome, f64)>> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("client {client}: connecting {addr}"))?;
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let id = client as u64 * 1_000_000 + i as u64;
+        let (kind, body) = draw_request(&mut rng, id);
+        let t0 = Instant::now();
+        let outcome = match round_trip(&mut stream, &body) {
+            Err(_) => Outcome::Error,
+            Ok(resp) if resp.id != id => Outcome::Error,
+            Ok(resp) if resp.ok => Outcome::Ok,
+            Ok(resp) if resp.overload => Outcome::Overload,
+            Ok(_) => Outcome::Error,
+        };
+        out.push((kind, 1, outcome, t0.elapsed().as_secs_f64()));
+    }
+    Ok(out)
+}
+
+/// The drain handshake on its own connection: capture `stats`, request
+/// `shutdown`, then verify the server answers and closes at a frame
+/// boundary.
+fn drain(addr: &str) -> Result<(Option<crate::util::json::Json>, bool)> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("drain connection to {addr}"))?;
+    let stats = round_trip(&mut stream, "{\"id\": 1, \"kind\": \"stats\"}")
+        .ok()
+        .filter(|r| r.ok)
+        .and_then(|r| r.result);
+    let shut = round_trip(&mut stream, "{\"id\": 2, \"kind\": \"shutdown\"}")?;
+    let acknowledged = shut.ok && shut.id == 2;
+    // A clean drain answers the shutdown, then EOF at a frame boundary.
+    let closed = matches!(read_frame(&mut stream), Ok(None));
+    Ok((stats, acknowledged && closed))
+}

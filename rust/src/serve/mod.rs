@@ -1,0 +1,47 @@
+//! # `memclos::serve` — the multi-tenant batched evaluation service
+//!
+//! A std-only TCP service (acceptor + worker pool; the work is
+//! CPU-bound, so plain threads are the honest architecture) that
+//! answers the repo's evaluation queries over a length-prefixed JSON
+//! protocol. Layers, outermost first:
+//!
+//! | module | role |
+//! |--------|------|
+//! | [`frame`] | 4-byte big-endian length prefix + UTF-8 JSON payload, 1 MiB cap, typed errors |
+//! | [`proto`] | request/response schema: canonicalising parse, field-named validation, canonical keys |
+//! | [`server`] | acceptor, per-connection reader/writer threads, bounded job queue, graceful drain |
+//! | [`service`] | shared result cache ([`crate::util::cache`]) + request batcher over [`crate::coordinator::ParallelSweep`] |
+//! | [`loadgen`] | closed-loop load generator + `BENCH_serve.json` reporting |
+//!
+//! ## The determinism invariant
+//!
+//! A response payload is a **pure function of its request's canonical
+//! key** — which folds in the seed — bit-identical regardless of
+//! batching, concurrency, cache state or arrival order. This is the
+//! sweep engine's jobs-1-vs-N bitwise contract lifted to the wire:
+//! per-point seeds are pure functions of (seed, point), payloads carry
+//! nothing schedule-dependent, and the envelope adds only the client's
+//! correlation id. `ping`/`stats`/`shutdown` are the deliberate,
+//! uncached exceptions. Pinned by `tests/serve_proto.rs`, which replays
+//! one request corpus through serial, batched-concurrent and
+//! adversarially reordered schedules and diffs the bytes.
+//!
+//! ## The overload contract
+//!
+//! Admission control **sheds, never blocks**: a full job queue, a
+//! per-connection in-flight cap, or a draining server each answer
+//! immediately with a typed rejection (`"overload": true`) instead of
+//! queueing unboundedly. Every admitted request is answered before its
+//! connection retires, including across a graceful drain.
+
+pub mod frame;
+pub mod loadgen;
+pub mod proto;
+pub mod server;
+pub mod service;
+
+pub use frame::{read_frame, read_text_frame, write_frame, FrameError, MAX_FRAME};
+pub use loadgen::{LoadSummary, LoadgenOpts};
+pub use proto::{QueryKind, Request, Response, ServeError};
+pub use server::{install_sigint, sigint_seen, DrainReport, Server, ServerConfig};
+pub use service::{ServeConfig, Service, ServiceStats};

@@ -1,0 +1,587 @@
+//! The serve request/response schema and its typed errors.
+//!
+//! A request is one JSON object per frame:
+//!
+//! ```json
+//! {"id": 7, "kind": "latency", "topo": "clos", "tiles": 1024,
+//!  "mem_kb": 128, "k": 255, "seed": 42}
+//! ```
+//!
+//! `kind` selects the query (`ping`, `stats`, `shutdown`, `latency`,
+//! `sweep`, `emulation`, `contention`); every other member has a
+//! default, and unknown members are rejected (a typo never silently
+//! changes what is evaluated). Contention adds `clients`, `accesses`
+//! and `pattern` (a [`TracePattern`] spec string); emulation adds
+//! `program` (a cc-corpus name).
+//!
+//! Parsing **canonicalises**: defaults are filled in, `k` defaults to
+//! `tiles - 1` (full emulation), and the result is bounds-checked with
+//! field-named errors *before* anything is built — the canonical key
+//! ([`Request::canonical_key`]) is only computed for requests every
+//! replica would accept. The serve invariant hangs off that key: the
+//! response payload is a pure function of `(canonical key, seed)`.
+//!
+//! The response envelope is `{"id", "ok", "result"}` on success and
+//! `{"id", "ok": false, "overload", "error"}` on failure. The payload
+//! under `result` is a [`crate::api::Report`] document (the
+//! `BENCH_hotpath.json` schema family); the envelope carries only the
+//! client's correlation id, never anything schedule- or
+//! cache-dependent, so cached and fresh responses are bit-identical.
+
+use thiserror::Error;
+
+use crate::coordinator::SweepPoint;
+use crate::emulation::TopologyKind;
+use crate::serve::frame::FrameError;
+use crate::util::json::{Json, JsonError};
+use crate::workload::TracePattern;
+
+/// Largest system a request may ask for (the canonical-key encoding
+/// and the O(tiles) setup build both stay comfortable below this).
+pub const MAX_TILES: usize = 1 << 16;
+/// Largest tile memory in KB (the canonical-key bound is 2^12).
+pub const MAX_MEM_KB: u32 = (1 << 12) - 1;
+/// Largest contention crowd per request.
+pub const MAX_CLIENTS: usize = 1024;
+/// Largest per-client access budget per request.
+pub const MAX_ACCESSES: usize = 65_536;
+
+/// Typed serve-layer failure. `Overload` and `Draining` are the shed
+/// responses admission control returns instead of queueing unboundedly.
+#[derive(Debug, Error)]
+pub enum ServeError {
+    /// The wire framing failed.
+    #[error(transparent)]
+    Frame(#[from] FrameError),
+    /// The frame held malformed JSON.
+    #[error("request is not valid JSON: {0}")]
+    Json(#[from] JsonError),
+    /// A request member failed validation (field-named).
+    #[error("field `{field}`: {msg}")]
+    Field {
+        /// The offending request member.
+        field: &'static str,
+        /// What is wrong with it.
+        msg: String,
+    },
+    /// The design point itself is invalid (the [`crate::api`] builder's
+    /// field-named message).
+    #[error("{0}")]
+    Invalid(String),
+    /// Admission control shed the request.
+    #[error("overloaded: {0}")]
+    Overload(&'static str),
+    /// The server is draining after a shutdown request.
+    #[error("server is draining; request rejected")]
+    Draining,
+    /// Evaluation failed after admission.
+    #[error("evaluation failed: {0}")]
+    Eval(String),
+}
+
+impl ServeError {
+    /// Shorthand for a field-named validation error.
+    pub fn field(field: &'static str, msg: impl Into<String>) -> Self {
+        ServeError::Field { field, msg: msg.into() }
+    }
+
+    /// True for the shed responses (overload / draining) — the load
+    /// generator counts these separately from hard errors.
+    pub fn is_overload(&self) -> bool {
+        matches!(self, ServeError::Overload(_) | ServeError::Draining)
+    }
+}
+
+/// What a request asks for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueryKind {
+    /// Liveness probe (uncached, constant payload).
+    Ping,
+    /// Server counters (uncached — deliberately outside the
+    /// determinism rule, which is why it is not a cacheable kind).
+    Stats,
+    /// Ask the server to drain and exit.
+    Shutdown,
+    /// One design point's mean access latency.
+    Latency,
+    /// A k-sweep over emulation sizes at one (topo, tiles, mem) point.
+    Sweep,
+    /// Run a cc-corpus program direct vs emulated.
+    Emulation,
+    /// One trace-driven DES contention cell.
+    Contention,
+}
+
+impl QueryKind {
+    /// The wire name.
+    pub fn label(&self) -> &'static str {
+        match self {
+            QueryKind::Ping => "ping",
+            QueryKind::Stats => "stats",
+            QueryKind::Shutdown => "shutdown",
+            QueryKind::Latency => "latency",
+            QueryKind::Sweep => "sweep",
+            QueryKind::Emulation => "emulation",
+            QueryKind::Contention => "contention",
+        }
+    }
+
+    /// Parse the wire name.
+    pub fn parse(s: &str) -> Result<Self, ServeError> {
+        Ok(match s {
+            "ping" => QueryKind::Ping,
+            "stats" => QueryKind::Stats,
+            "shutdown" => QueryKind::Shutdown,
+            "latency" => QueryKind::Latency,
+            "sweep" => QueryKind::Sweep,
+            "emulation" => QueryKind::Emulation,
+            "contention" => QueryKind::Contention,
+            other => {
+                return Err(ServeError::field(
+                    "kind",
+                    format!(
+                        "unknown kind `{other}` (ping|stats|shutdown|latency|sweep|emulation|contention)"
+                    ),
+                ))
+            }
+        })
+    }
+
+    /// True for the kinds whose responses are cached and batched (the
+    /// ones the determinism invariant covers).
+    pub fn is_evaluating(&self) -> bool {
+        matches!(
+            self,
+            QueryKind::Latency | QueryKind::Sweep | QueryKind::Emulation | QueryKind::Contention
+        )
+    }
+}
+
+/// One canonicalised request. [`Request::parse`] is the only wire
+/// entry point; it fills defaults and validates, so a constructed value
+/// is always in-bounds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    /// Client correlation id (echoed in the response envelope; not part
+    /// of the canonical key).
+    pub id: u64,
+    /// The query.
+    pub kind: QueryKind,
+    /// Interconnect.
+    pub topo: TopologyKind,
+    /// System tiles.
+    pub tiles: usize,
+    /// Tile memory (KB).
+    pub mem_kb: u32,
+    /// Emulation size (defaults to `tiles - 1`, full emulation).
+    pub k: usize,
+    /// The request's RNG seed (part of the canonical key).
+    pub seed: u64,
+    /// Contention: concurrent clients.
+    pub clients: usize,
+    /// Contention: accesses per client.
+    pub accesses: usize,
+    /// Contention: the access pattern.
+    pub pattern: TracePattern,
+    /// Emulation: the cc-corpus program name.
+    pub program: String,
+}
+
+/// Members [`Request::parse`] accepts; anything else is rejected.
+const KNOWN_MEMBERS: &[&str] = &[
+    "id", "kind", "topo", "tiles", "mem_kb", "k", "seed", "clients", "accesses", "pattern",
+    "program",
+];
+
+impl Request {
+    /// A request of `kind` with every member at its default.
+    pub fn new(kind: QueryKind) -> Self {
+        Self {
+            id: 0,
+            kind,
+            topo: TopologyKind::Clos,
+            tiles: 1024,
+            mem_kb: 128,
+            k: 1023,
+            seed: 0,
+            clients: 4,
+            accesses: 256,
+            pattern: TracePattern::Uniform,
+            program: "sieve".to_string(),
+        }
+    }
+
+    /// Parse + canonicalise + validate one request document.
+    pub fn parse(doc: &Json) -> Result<Self, ServeError> {
+        let members = doc
+            .as_obj()
+            .ok_or_else(|| ServeError::field("request", "must be a JSON object"))?;
+        for (key, _) in members {
+            if !KNOWN_MEMBERS.contains(&key.as_str()) {
+                return Err(ServeError::field("request", format!("unknown member `{key}`")));
+            }
+        }
+        let kind_str = doc
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| ServeError::field("kind", "required (a string)"))?;
+        let mut req = Request::new(QueryKind::parse(kind_str)?);
+        req.id = uint_member(doc, "id", req.id as usize)? as u64;
+        if let Some(t) = doc.get("topo") {
+            let s = t
+                .as_str()
+                .ok_or_else(|| ServeError::field("topo", "must be a string"))?;
+            req.topo = TopologyKind::parse(s)
+                .map_err(|e| ServeError::field("topo", format!("{e:#}")))?;
+        }
+        req.tiles = uint_member(doc, "tiles", req.tiles)?;
+        req.mem_kb = uint_member(doc, "mem_kb", req.mem_kb as usize)? as u32;
+        // Canonicalise: absent k means full emulation of *this* tiles.
+        req.k = match doc.get("k") {
+            None => req.tiles.saturating_sub(1),
+            Some(_) => uint_member(doc, "k", 0)?,
+        };
+        req.seed = uint_member(doc, "seed", req.seed as usize)? as u64;
+        req.clients = uint_member(doc, "clients", req.clients)?;
+        req.accesses = uint_member(doc, "accesses", req.accesses)?;
+        if let Some(p) = doc.get("pattern") {
+            let s = p
+                .as_str()
+                .ok_or_else(|| ServeError::field("pattern", "must be a string"))?;
+            req.pattern = TracePattern::parse(s)
+                .map_err(|e| ServeError::field("pattern", format!("{e:#}")))?;
+        }
+        if let Some(p) = doc.get("program") {
+            req.program = p
+                .as_str()
+                .ok_or_else(|| ServeError::field("program", "must be a string"))?
+                .to_string();
+        }
+        req.validate()?;
+        Ok(req)
+    }
+
+    /// Parse a request straight from frame bytes.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, ServeError> {
+        let text = std::str::from_utf8(bytes).map_err(|_| FrameError::Utf8)?;
+        Self::parse(&Json::parse(text)?)
+    }
+
+    fn validate(&self) -> Result<(), ServeError> {
+        if !self.kind.is_evaluating() {
+            return Ok(());
+        }
+        if self.tiles == 0 || self.tiles > MAX_TILES {
+            return Err(ServeError::field("tiles", format!("need 1 <= tiles <= {MAX_TILES}")));
+        }
+        if self.mem_kb == 0 || self.mem_kb > MAX_MEM_KB {
+            return Err(ServeError::field("mem_kb", format!("need 1 <= mem_kb <= {MAX_MEM_KB}")));
+        }
+        if self.kind == QueryKind::Contention {
+            if self.clients == 0 || self.clients > MAX_CLIENTS {
+                return Err(ServeError::field(
+                    "clients",
+                    format!("need 1 <= clients <= {MAX_CLIENTS}"),
+                ));
+            }
+            if self.accesses == 0 || self.accesses > MAX_ACCESSES {
+                return Err(ServeError::field(
+                    "accesses",
+                    format!("need 1 <= accesses <= {MAX_ACCESSES}"),
+                ));
+            }
+        }
+        if self.kind == QueryKind::Emulation
+            && !crate::cc::corpus::all().iter().any(|p| p.name == self.program)
+        {
+            let names: Vec<&str> = crate::cc::corpus::all().iter().map(|p| p.name).collect();
+            return Err(ServeError::field(
+                "program",
+                format!("unknown program `{}` (available: {})", self.program, names.join(", ")),
+            ));
+        }
+        // The builder's own field-named validation (k vs tiles, mesh
+        // squareness, ...) — the same rule every CLI path enforces.
+        self.design_point()
+            .validate()
+            .map_err(|e| ServeError::Invalid(format!("{e:#}")))
+    }
+
+    /// The request's design point (untech'd — the service applies its
+    /// configured [`crate::api::Tech`]).
+    pub fn design_point(&self) -> crate::api::DesignPoint {
+        crate::api::DesignPoint::new(self.topo, self.tiles).mem_kb(self.mem_kb).k(self.k)
+    }
+
+    /// The request's sweep point.
+    pub fn sweep_point(&self) -> SweepPoint {
+        SweepPoint { kind: self.topo, tiles: self.tiles, mem_kb: self.mem_kb, k: self.k }
+    }
+
+    /// The canonical cache/batch key: every member that decides the
+    /// response payload, and nothing else (`id` is excluded). Two
+    /// requests with equal keys get bit-identical payloads regardless
+    /// of batching, concurrency, cache state or arrival order.
+    pub fn canonical_key(&self) -> String {
+        let topo = match self.topo {
+            TopologyKind::Clos => "clos",
+            TopologyKind::Mesh => "mesh",
+        };
+        let base = format!(
+            "{}/{topo}/t{}/m{}/k{}/s{}",
+            self.kind.label(),
+            self.tiles,
+            self.mem_kb,
+            self.k,
+            self.seed
+        );
+        match self.kind {
+            QueryKind::Contention => format!(
+                "{base}/w{:016x}/c{}/a{}",
+                self.pattern.key(),
+                self.clients,
+                self.accesses
+            ),
+            QueryKind::Emulation => format!("{base}/p{}", self.program),
+            _ => base,
+        }
+    }
+
+    /// Render the request as its wire document (kind-relevant members
+    /// only; [`Request::parse`] of the result round-trips).
+    pub fn to_json(&self) -> Json {
+        let topo = match self.topo {
+            TopologyKind::Clos => "clos",
+            TopologyKind::Mesh => "mesh",
+        };
+        let mut members = vec![
+            ("id".to_string(), Json::Num(self.id as f64)),
+            ("kind".to_string(), Json::Str(self.kind.label().to_string())),
+        ];
+        if self.kind.is_evaluating() {
+            members.push(("topo".to_string(), Json::Str(topo.to_string())));
+            members.push(("tiles".to_string(), Json::Num(self.tiles as f64)));
+            members.push(("mem_kb".to_string(), Json::Num(self.mem_kb as f64)));
+            members.push(("k".to_string(), Json::Num(self.k as f64)));
+            members.push(("seed".to_string(), Json::Num(self.seed as f64)));
+        }
+        if self.kind == QueryKind::Contention {
+            members.push(("clients".to_string(), Json::Num(self.clients as f64)));
+            members.push(("accesses".to_string(), Json::Num(self.accesses as f64)));
+            members.push(("pattern".to_string(), Json::Str(pattern_spec(&self.pattern))));
+        }
+        if self.kind == QueryKind::Emulation {
+            members.push(("program".to_string(), Json::Str(self.program.clone())));
+        }
+        Json::Obj(members)
+    }
+
+    /// Row name the payloads use: `clos-1024x128-k255-s42`.
+    pub fn point_name(&self) -> String {
+        let topo = match self.topo {
+            TopologyKind::Clos => "clos",
+            TopologyKind::Mesh => "mesh",
+        };
+        format!("{topo}-{}x{}-k{}-s{}", self.tiles, self.mem_kb, self.k, self.seed)
+    }
+}
+
+/// Render a [`TracePattern`] as a spec string [`TracePattern::parse`]
+/// accepts (round-trip: `parse(pattern_spec(p)) == p`).
+pub fn pattern_spec(p: &TracePattern) -> String {
+    match p {
+        TracePattern::Uniform => "uniform".to_string(),
+        TracePattern::Zipf { theta } => format!("zipf:{theta}"),
+        TracePattern::Stride { stride } => format!("stride:{stride}"),
+        TracePattern::PointerChase => "chase".to_string(),
+        TracePattern::Phased { phases, frac } => format!("phased:{phases}:{frac}"),
+    }
+}
+
+/// A bounded unsigned integer member with a default.
+fn uint_member(doc: &Json, field: &'static str, default: usize) -> Result<usize, ServeError> {
+    match doc.get(field) {
+        None => Ok(default),
+        Some(v) => {
+            let n = v.as_u64().ok_or_else(|| {
+                ServeError::Field {
+                    field: leak_field(field),
+                    msg: "must be a non-negative integer".to_string(),
+                }
+            })?;
+            usize::try_from(n).map_err(|_| ServeError::Field {
+                field: leak_field(field),
+                msg: "out of range".to_string(),
+            })
+        }
+    }
+}
+
+/// `uint_member` takes the field name as `&'static str` already; this
+/// keeps the signature honest without allocation.
+fn leak_field(field: &'static str) -> &'static str {
+    field
+}
+
+/// One response envelope, as parsed by the client side.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Response {
+    /// Echo of the request id (0 when the request was unparseable).
+    pub id: u64,
+    /// Success flag.
+    pub ok: bool,
+    /// True when the failure was an admission-control shed.
+    pub overload: bool,
+    /// The result payload (successes only).
+    pub result: Option<Json>,
+    /// The error message (failures only).
+    pub error: Option<String>,
+}
+
+impl Response {
+    /// Assemble a success envelope around a pre-rendered payload. The
+    /// payload is spliced in verbatim — the bit-identity invariant is a
+    /// statement about exactly these bytes.
+    pub fn ok_wire(id: u64, payload: &str) -> String {
+        format!("{{\"id\": {id}, \"ok\": true, \"result\": {payload}}}")
+    }
+
+    /// Assemble a failure envelope for a typed error.
+    pub fn error_wire(id: u64, err: &ServeError) -> String {
+        format!(
+            "{{\"id\": {id}, \"ok\": false, \"overload\": {}, \"error\": {}}}",
+            err.is_overload(),
+            Json::Str(format!("{err}")).render()
+        )
+    }
+
+    /// Parse an envelope from frame bytes.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, ServeError> {
+        let text = std::str::from_utf8(bytes).map_err(|_| FrameError::Utf8)?;
+        let doc = Json::parse(text)?;
+        let ok = doc
+            .get("ok")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| ServeError::field("ok", "required (a boolean)"))?;
+        Ok(Response {
+            id: doc.get("id").and_then(Json::as_u64).unwrap_or(0),
+            ok,
+            overload: doc.get("overload").and_then(Json::as_bool).unwrap_or(false),
+            result: doc.get("result").cloned(),
+            error: doc.get("error").and_then(Json::as_str).map(str::to_string),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_req(text: &str) -> Result<Request, ServeError> {
+        Request::from_bytes(text.as_bytes())
+    }
+
+    #[test]
+    fn defaults_and_canonicalisation() {
+        let r = parse_req("{\"kind\": \"latency\"}").unwrap();
+        assert_eq!(r.tiles, 1024);
+        assert_eq!(r.k, 1023, "absent k canonicalises to tiles - 1");
+        assert_eq!(r.seed, 0);
+        let r = parse_req("{\"kind\": \"latency\", \"tiles\": 256}").unwrap();
+        assert_eq!(r.k, 255, "k default follows the requested tiles");
+    }
+
+    #[test]
+    fn canonical_key_excludes_id_and_covers_seed() {
+        let a = parse_req("{\"kind\": \"latency\", \"id\": 1, \"seed\": 9}").unwrap();
+        let b = parse_req("{\"kind\": \"latency\", \"id\": 2, \"seed\": 9}").unwrap();
+        let c = parse_req("{\"kind\": \"latency\", \"id\": 1, \"seed\": 10}").unwrap();
+        assert_eq!(a.canonical_key(), b.canonical_key(), "id is not identity");
+        assert_ne!(a.canonical_key(), c.canonical_key(), "seed is identity");
+        assert_eq!(a.canonical_key(), "latency/clos/t1024/m128/k1023/s9");
+    }
+
+    #[test]
+    fn field_errors_are_named() {
+        for (text, field) in [
+            ("{}", "kind"),
+            ("{\"kind\": \"warp\"}", "kind"),
+            ("{\"kind\": \"latency\", \"tiles\": 0}", "tiles"),
+            ("{\"kind\": \"latency\", \"tiles\": 100000000}", "tiles"),
+            ("{\"kind\": \"latency\", \"tiles\": -4}", "tiles"),
+            ("{\"kind\": \"latency\", \"mem_kb\": 8192}", "mem_kb"),
+            ("{\"kind\": \"contention\", \"clients\": 0}", "clients"),
+            ("{\"kind\": \"contention\", \"accesses\": 0}", "accesses"),
+            ("{\"kind\": \"contention\", \"pattern\": \"warp\"}", "pattern"),
+            ("{\"kind\": \"emulation\", \"program\": \"nosuch\"}", "program"),
+            ("{\"kind\": \"latency\", \"topo\": \"ring\"}", "topo"),
+            ("{\"kind\": \"latency\", \"tilez\": 4}", "request"),
+            ("[1, 2]", "request"),
+        ] {
+            let err = parse_req(text).unwrap_err();
+            let msg = format!("{err}");
+            assert!(
+                msg.contains(&format!("`{field}`"))
+                    || matches!(&err, ServeError::Field { field: f, .. } if *f == field),
+                "{text}: expected field `{field}` in `{msg}`"
+            );
+        }
+        // k >= tiles trips the design-point builder's own validation.
+        let err = parse_req("{\"kind\": \"latency\", \"tiles\": 64, \"k\": 64}").unwrap_err();
+        assert!(matches!(err, ServeError::Invalid(_)), "{err}");
+        assert!(format!("{err}").contains("`k`"), "{err}");
+    }
+
+    #[test]
+    fn requests_round_trip_through_their_wire_form() {
+        let texts = [
+            "{\"kind\": \"ping\"}",
+            "{\"kind\": \"latency\", \"tiles\": 256, \"seed\": 7}",
+            "{\"kind\": \"sweep\", \"topo\": \"mesh\", \"tiles\": 1024}",
+            "{\"kind\": \"emulation\", \"program\": \"fib_memo\", \"tiles\": 256}",
+            "{\"kind\": \"contention\", \"clients\": 8, \"pattern\": \"zipf:1.5\"}",
+            "{\"kind\": \"contention\", \"pattern\": \"phased:4:0.0625\"}",
+            "{\"kind\": \"contention\", \"pattern\": \"stride:33\"}",
+        ];
+        for text in texts {
+            let req = parse_req(text).unwrap();
+            let wire = req.to_json().render();
+            let back = Request::from_bytes(wire.as_bytes()).unwrap();
+            assert_eq!(req, back, "round-trip of {text} via {wire}");
+        }
+    }
+
+    #[test]
+    fn response_envelopes_round_trip() {
+        let ok = Response::ok_wire(7, "{\"pong\": true}");
+        let r = Response::from_bytes(ok.as_bytes()).unwrap();
+        assert!(r.ok && !r.overload);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.result.unwrap().get("pong").and_then(Json::as_bool), Some(true));
+
+        let shed = Response::error_wire(9, &ServeError::Overload("queue full"));
+        let r = Response::from_bytes(shed.as_bytes()).unwrap();
+        assert!(!r.ok && r.overload);
+        assert_eq!(r.id, 9);
+        assert!(r.error.unwrap().contains("queue full"));
+
+        let bad = Response::error_wire(0, &ServeError::field("tiles", "need 1 <= tiles"));
+        let r = Response::from_bytes(bad.as_bytes()).unwrap();
+        assert!(!r.ok && !r.overload, "validation failure is not an overload");
+    }
+
+    #[test]
+    fn pattern_specs_round_trip() {
+        for p in [
+            TracePattern::Uniform,
+            TracePattern::Zipf { theta: 1.2 },
+            TracePattern::Stride { stride: 1025 },
+            TracePattern::PointerChase,
+            TracePattern::Phased { phases: 4, frac: 1.0 / 16.0 },
+        ] {
+            let spec = pattern_spec(&p);
+            let back = TracePattern::parse(&spec).unwrap();
+            assert_eq!(p.key(), back.key(), "round-trip of `{spec}`");
+        }
+    }
+}

@@ -1,0 +1,416 @@
+//! The TCP front-end: acceptor + connection threads + a bounded worker
+//! pool, all std (no async runtime — the evaluation work is CPU-bound,
+//! so a handful of OS threads is the honest architecture).
+//!
+//! Admission control **sheds, never blocks**: the executor queue is a
+//! bounded [`WorkQueue`] fed with `try_push`, each connection has an
+//! in-flight cap, and both reject with a typed overload response
+//! (`"overload": true` in the envelope) the moment a bound is hit. A
+//! client always gets an answer for every frame it sent — possibly a
+//! shed — and responses carry the request's own id, so pipelining
+//! works even though responses can complete out of order.
+//!
+//! Graceful drain: a `shutdown` request (or SIGINT via
+//! [`install_sigint`]) flips the shutdown flag. The acceptor stops,
+//! connection readers reject new work with `Draining` and exit at the
+//! next frame boundary, queued jobs finish and are written back, and
+//! [`Server::join`] returns a [`DrainReport`] of the final counters.
+
+use std::io::{self, Read};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::WorkQueue;
+use crate::serve::frame::{write_frame, FrameError, MAX_FRAME};
+use crate::serve::proto::{QueryKind, Request, Response, ServeError};
+use crate::serve::service::{Service, ServiceStats};
+use crate::util::json::Json;
+
+/// Front-end tuning (the [`Service`] has its own config).
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Bind address (`127.0.0.1:0` picks an ephemeral port).
+    pub addr: String,
+    /// Executor threads draining the job queue.
+    pub net_workers: usize,
+    /// Job-queue bound; a full queue sheds with `overloaded: queue full`.
+    pub queue_depth: usize,
+    /// Per-connection in-flight cap; beyond it the connection sheds.
+    pub session_inflight: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".to_string(),
+            net_workers: 4,
+            queue_depth: 64,
+            session_inflight: 8,
+        }
+    }
+}
+
+/// Final counters handed back by [`Server::join`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DrainReport {
+    /// Requests the service evaluated (all kinds).
+    pub served: u64,
+    /// Requests shed by admission control (queue full, session cap,
+    /// draining).
+    pub overloads: u64,
+    /// Connections dropped for framing violations.
+    pub frame_errors: u64,
+    /// Connections accepted over the server's lifetime.
+    pub connections: u64,
+    /// The service's own counters.
+    pub stats: ServiceStats,
+}
+
+impl std::fmt::Display for DrainReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "served {} over {} connections ({} shed, {} frame errors); cache {}h/{}m/{}e; {} batches ({} coalesced, largest {})",
+            self.served,
+            self.connections,
+            self.overloads,
+            self.frame_errors,
+            self.stats.cache.hits,
+            self.stats.cache.misses,
+            self.stats.cache.evictions,
+            self.stats.batches,
+            self.stats.coalesced,
+            self.stats.largest_batch,
+        )
+    }
+}
+
+/// One queued evaluation job.
+struct Job {
+    id: u64,
+    body: Json,
+    session: Arc<Session>,
+    reply: mpsc::Sender<String>,
+}
+
+/// Per-connection admission state.
+struct Session {
+    inflight: AtomicUsize,
+}
+
+/// State shared by the acceptor, connections and workers.
+struct Shared {
+    service: Arc<Service>,
+    shutdown: AtomicBool,
+    queue: WorkQueue<Job>,
+    session_cap: usize,
+    overloads: AtomicU64,
+    frame_errors: AtomicU64,
+    connections: AtomicU64,
+}
+
+/// A running server. Dropping it does NOT stop it — call
+/// [`Server::request_shutdown`] then [`Server::join`].
+pub struct Server {
+    shared: Arc<Shared>,
+    addr: std::net::SocketAddr,
+    acceptor: JoinHandle<()>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and start accepting. Returns once the listener is live.
+    pub fn start(service: Arc<Service>, cfg: &ServerConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let addr = listener.local_addr().context("reading bound address")?;
+        listener.set_nonblocking(true).context("making the listener nonblocking")?;
+        let shared = Arc::new(Shared {
+            service,
+            shutdown: AtomicBool::new(false),
+            queue: WorkQueue::new(cfg.queue_depth.max(1)),
+            session_cap: cfg.session_inflight.max(1),
+            overloads: AtomicU64::new(0),
+            frame_errors: AtomicU64::new(0),
+            connections: AtomicU64::new(0),
+        });
+        let workers: Vec<JoinHandle<()>> = (0..cfg.net_workers.max(1))
+            .map(|_| {
+                let shared = shared.clone();
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        let acceptor = {
+            let shared = shared.clone();
+            std::thread::spawn(move || accept_loop(listener, &shared))
+        };
+        Ok(Server { shared, addr, acceptor, workers })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Flip the drain flag (idempotent; also flipped by a `shutdown`
+    /// request on the wire).
+    pub fn request_shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// True once draining has started.
+    pub fn is_draining(&self) -> bool {
+        self.shared.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Drain and stop: waits for the acceptor and every connection to
+    /// retire (queued jobs are answered first), then stops the workers.
+    /// Call after [`Server::request_shutdown`] — joining a live server
+    /// blocks until something else requests shutdown.
+    pub fn join(self) -> DrainReport {
+        // The acceptor owns the connection handles and joins them as it
+        // exits; once it returns, no producer can touch the queue.
+        let _ = self.acceptor.join();
+        self.shared.queue.close();
+        for w in self.workers {
+            let _ = w.join();
+        }
+        DrainReport {
+            served: self.shared.service.stats().served,
+            overloads: self.shared.overloads.load(Ordering::Relaxed),
+            frame_errors: self.shared.frame_errors.load(Ordering::Relaxed),
+            connections: self.shared.connections.load(Ordering::Relaxed),
+            stats: self.shared.service.stats(),
+        }
+    }
+}
+
+/// Accept until shutdown; poll-based so the drain flag is honoured
+/// within ~10 ms. Joins every connection thread before returning.
+fn accept_loop(listener: TcpListener, shared: &Arc<Shared>) {
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                shared.connections.fetch_add(1, Ordering::Relaxed);
+                let shared = shared.clone();
+                conns.push(std::thread::spawn(move || connection(stream, &shared)));
+                // Opportunistically reap finished connections so a
+                // long-lived server does not accumulate handles.
+                conns.retain(|h| !h.is_finished());
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+/// Drain the job queue until it is closed and empty.
+fn worker_loop(shared: &Arc<Shared>) {
+    while let Some(job) = shared.queue.pop() {
+        let wire = respond(shared, job.id, &job.body);
+        job.session.inflight.fetch_sub(1, Ordering::AcqRel);
+        // A dead connection just drops the response.
+        let _ = job.reply.send(wire);
+    }
+}
+
+/// Evaluate one parsed request body into its wire response.
+fn respond(shared: &Arc<Shared>, id: u64, body: &Json) -> String {
+    match Request::parse(body) {
+        Err(e) => Response::error_wire(id, &e),
+        Ok(req) => {
+            if req.kind == QueryKind::Shutdown {
+                shared.shutdown.store(true, Ordering::SeqCst);
+            }
+            match shared.service.handle(&req) {
+                Ok(payload) => Response::ok_wire(req.id, &payload),
+                Err(e) => Response::error_wire(req.id, &e),
+            }
+        }
+    }
+}
+
+/// One connection: this thread reads frames and admits jobs; a writer
+/// thread serialises responses back (they complete out of order). The
+/// reader exits at a frame boundary once draining, or on a framing
+/// violation; it then waits for the writer, which runs until every
+/// admitted job has been answered (all reply senders dropped).
+fn connection(stream: TcpStream, shared: &Arc<Shared>) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let _ = stream.set_nodelay(true);
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (tx, rx) = mpsc::channel::<String>();
+    let writer = std::thread::spawn(move || {
+        let mut out = write_half;
+        // Ends when the reader AND every in-flight job dropped their
+        // senders — i.e. only after all admitted work is answered.
+        while let Ok(wire) = rx.recv() {
+            if write_frame(&mut out, wire.as_bytes()).is_err() {
+                break;
+            }
+        }
+        let _ = out.shutdown(std::net::Shutdown::Write);
+    });
+
+    let session = Arc::new(Session { inflight: AtomicUsize::new(0) });
+    let mut reader = stream;
+    loop {
+        let payload = match read_frame_polled(&mut reader, shared) {
+            Ok(None) => break,
+            Ok(Some(p)) => p,
+            Err(e) => {
+                shared.frame_errors.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(Response::error_wire(0, &ServeError::Frame(e)));
+                break;
+            }
+        };
+        // Parse just far enough for an id so even malformed requests
+        // get a correlated error; full parsing happens in the worker.
+        let body = match std::str::from_utf8(&payload)
+            .map_err(|_| ServeError::Frame(FrameError::Utf8))
+            .and_then(|text| Json::parse(text).map_err(ServeError::from))
+        {
+            Ok(body) => body,
+            Err(e) => {
+                // Malformed JSON is the client's bug but not a framing
+                // violation: answer and keep the connection.
+                let _ = tx.send(Response::error_wire(0, &e));
+                continue;
+            }
+        };
+        let id = body.get("id").and_then(Json::as_u64).unwrap_or(0);
+        if shared.shutdown.load(Ordering::SeqCst) {
+            // Draining rejects everything, control frames included; the
+            // client sees a typed overload and can reconnect elsewhere.
+            shared.overloads.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(Response::error_wire(id, &ServeError::Draining));
+            continue;
+        }
+        if session.inflight.fetch_add(1, Ordering::AcqRel) >= shared.session_cap {
+            session.inflight.fetch_sub(1, Ordering::AcqRel);
+            shared.overloads.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(Response::error_wire(id, &ServeError::Overload("session in-flight cap")));
+            continue;
+        }
+        let job = Job { id, body, session: session.clone(), reply: tx.clone() };
+        if !shared.queue.try_push(job) {
+            session.inflight.fetch_sub(1, Ordering::AcqRel);
+            shared.overloads.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(Response::error_wire(id, &ServeError::Overload("queue full")));
+        }
+    }
+    // Drop the reader's sender; the writer exits once in-flight jobs
+    // (holding clones) have answered.
+    drop(tx);
+    let _ = writer.join();
+}
+
+/// Like [`crate::serve::frame::read_frame`], but the 100 ms read
+/// timeout doubles as the
+/// drain poll: a timeout *between* frames loops unless draining, in
+/// which case the connection retires cleanly (`Ok(None)`). A timeout
+/// *inside* a frame keeps waiting for the rest — a slow client is not
+/// a protocol violation.
+fn read_frame_polled(stream: &mut TcpStream, shared: &Shared) -> Result<Option<Vec<u8>>, FrameError> {
+    let mut prefix = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match stream.read(&mut prefix[got..]) {
+            Ok(0) => {
+                return if got == 0 {
+                    Ok(None)
+                } else {
+                    Err(FrameError::Truncated { got, want: 4 })
+                }
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                if got == 0 && shared.shutdown.load(Ordering::SeqCst) {
+                    return Ok(None);
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let len = u32::from_be_bytes(prefix) as usize;
+    if len > MAX_FRAME {
+        return Err(FrameError::Oversized { len, max: MAX_FRAME });
+    }
+    let mut payload = vec![0u8; len];
+    let mut got = 0usize;
+    while got < len {
+        match stream.read(&mut payload[got..]) {
+            Ok(0) => return Err(FrameError::Truncated { got, want: len }),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(Some(payload))
+}
+
+/// The SIGINT drain flag (set by the handler, polled by the CLI loop).
+#[cfg(unix)]
+static SIGINT_SEEN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" fn on_sigint(_sig: i32) {
+    SIGINT_SEEN.store(true, Ordering::SeqCst);
+}
+
+/// Install a SIGINT handler that records the signal (std links libc, so
+/// the raw `signal(2)` binding needs no external crate). Returns false
+/// if the handler could not be installed.
+#[cfg(unix)]
+pub fn install_sigint() -> bool {
+    const SIGINT: i32 = 2;
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    // SAFETY: `on_sigint` only stores to an AtomicBool, which is
+    // async-signal-safe; `signal` itself is a plain libc call.
+    let prev = unsafe { signal(SIGINT, on_sigint as usize) };
+    prev != usize::MAX
+}
+
+/// True once SIGINT has been received (after [`install_sigint`]).
+#[cfg(unix)]
+pub fn sigint_seen() -> bool {
+    SIGINT_SEEN.load(Ordering::SeqCst)
+}
+
+/// Non-unix fallback: no handler; the flag never fires.
+#[cfg(not(unix))]
+pub fn install_sigint() -> bool {
+    false
+}
+
+/// Non-unix fallback.
+#[cfg(not(unix))]
+pub fn sigint_seen() -> bool {
+    false
+}

@@ -1,0 +1,631 @@
+//! The evaluation core of the serve layer: shared result cache +
+//! request batcher over the [`ParallelSweep`] engine.
+//!
+//! [`Service::handle`] is the whole contract: given a canonicalised
+//! [`Request`], return the response payload — an [`Arc<String>`] of
+//! pre-rendered JSON. The payload is a **pure function of the
+//! request's canonical key** ([`Request::canonical_key`], which folds
+//! in the seed): whether it came from the cache, a batch of one, or a
+//! coalesced batch shared with other sessions' requests, the bytes are
+//! identical. Nothing schedule-dependent (wall-clock, batch size,
+//! cache state) is allowed into a payload; `ping`/`stats`/`shutdown`
+//! are the deliberate exceptions and are never cached.
+//!
+//! Two mechanisms sit between a request and the engine:
+//!
+//! * the **result cache** — a bounded [`LruCache`] from canonical key
+//!   to rendered payload (the ParallelSweep memo cache generalised one
+//!   level up: that one dedups design points *within* an engine, this
+//!   one dedups whole queries *across* sessions and kinds);
+//! * the **batcher** — latency queries that miss the cache wait up to
+//!   a linger window for compatible in-flight queries and go to the
+//!   engine as ONE `eval_points` call. The leader of a batch runs the
+//!   evaluation; followers block until it posts the result. Because
+//!   per-point seeds are `point_seed(seed, key)` — a pure function of
+//!   the point, never of batch composition — coalescing cannot change
+//!   any result.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+use crate::api::{DesignPoint, Mode, Report, Row};
+use crate::cc::{compile, corpus, Backend};
+use crate::coordinator::{default_jobs, ParallelSweep, PointResult, SweepPoint};
+use crate::emulation::SequentialMachine;
+use crate::figures::contention::{cell_seed, eval_cell, row_for, Cell, CellResult};
+use crate::isa::decode::{predecode, FastMachine};
+use crate::isa::interp::{DirectMemory, EmulatedChannelMemory};
+use crate::serve::proto::{QueryKind, Request, ServeError};
+use crate::util::cache::{CacheStats, LruCache};
+use crate::util::json::Json;
+
+/// Lock that recovers from poisoning: every value under a serve lock
+/// is inserted whole, so a panicking peer cannot leave it torn.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Service tuning. The defaults match the CLI's: `Mode::Auto` with the
+/// standard sample budget, one engine worker per core.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Evaluation backend for latency/sweep queries.
+    pub mode: Mode,
+    /// Technology parameters applied to every design point.
+    pub tech: crate::api::Tech,
+    /// Sweep-engine worker threads per engine.
+    pub jobs: usize,
+    /// Result-cache entry bound (0 = unbounded).
+    pub cache_entries: usize,
+    /// Result-cache byte bound over payload bytes (0 = unbounded).
+    pub cache_bytes: usize,
+    /// How long a batch leader waits for co-travellers.
+    pub linger: Duration,
+    /// Largest coalesced batch (1 disables batching).
+    pub batch_max: usize,
+    /// Engines kept alive (one per distinct request seed, LRU).
+    pub max_engines: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            mode: Mode::Auto { samples: 65_536, batch: 16_384 },
+            tech: crate::api::Tech::default(),
+            jobs: default_jobs(),
+            cache_entries: 4096,
+            cache_bytes: 16 << 20,
+            linger: Duration::from_millis(1),
+            batch_max: 64,
+            max_engines: 8,
+        }
+    }
+}
+
+/// A counters snapshot for `stats` queries and the drain report.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServiceStats {
+    /// Requests handled (all kinds, including uncached ones).
+    pub served: u64,
+    /// Result-cache counters.
+    pub cache: CacheStats,
+    /// Batches the batcher closed.
+    pub batches: u64,
+    /// Requests that joined an existing batch instead of leading one.
+    pub coalesced: u64,
+    /// Largest batch closed so far.
+    pub largest_batch: u64,
+}
+
+/// The shared evaluation service (one per server; `Arc`-shared by every
+/// connection and worker).
+pub struct Service {
+    cfg: ServeConfig,
+    /// canonical key -> rendered payload.
+    cache: LruCache<String, Arc<String>>,
+    /// request seed -> engine (the engine's seed is fixed at
+    /// construction, so distinct request seeds need distinct engines).
+    engines: LruCache<u64, Arc<ParallelSweep>>,
+    batcher: Batcher,
+    served: AtomicU64,
+}
+
+impl Service {
+    /// Build a service from its config.
+    pub fn new(cfg: ServeConfig) -> Self {
+        let cache = LruCache::bounded(cfg.cache_entries, cfg.cache_bytes);
+        let engines = LruCache::bounded(cfg.max_engines.max(1), 0);
+        let batcher = Batcher::new(cfg.linger, cfg.batch_max.max(1));
+        Self { cfg, cache, engines, batcher, served: AtomicU64::new(0) }
+    }
+
+    /// The config the service runs with.
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Handle one request: cache lookup, then (for latency) the
+    /// batcher, then the engine. The returned payload is pre-rendered
+    /// JSON, bit-identical for equal canonical keys.
+    pub fn handle(&self, req: &Request) -> Result<Arc<String>, ServeError> {
+        self.served.fetch_add(1, Ordering::Relaxed);
+        match req.kind {
+            QueryKind::Ping => return Ok(Arc::new("{\"pong\": true}".to_string())),
+            QueryKind::Stats => return Ok(Arc::new(self.stats_payload())),
+            QueryKind::Shutdown => return Ok(Arc::new("{\"draining\": true}".to_string())),
+            _ => {}
+        }
+        let key = req.canonical_key();
+        if let Some(hit) = self.cache.get(&key) {
+            return Ok(hit);
+        }
+        let payload = Arc::new(self.eval(req)?);
+        self.cache.insert_weighted(key, payload.clone(), payload.len());
+        Ok(payload)
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> ServiceStats {
+        ServiceStats {
+            served: self.served.load(Ordering::Relaxed),
+            cache: self.cache.stats(),
+            batches: self.batcher.batches.load(Ordering::Relaxed),
+            coalesced: self.batcher.coalesced.load(Ordering::Relaxed),
+            largest_batch: self.batcher.largest.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The `stats` payload (uncached; explicitly outside the
+    /// determinism rule, which is why `stats` is not a cacheable kind).
+    fn stats_payload(&self) -> String {
+        let s = self.stats();
+        Json::Obj(vec![
+            ("served".to_string(), Json::Num(s.served as f64)),
+            ("cache_hits".to_string(), Json::Num(s.cache.hits as f64)),
+            ("cache_misses".to_string(), Json::Num(s.cache.misses as f64)),
+            ("cache_evictions".to_string(), Json::Num(s.cache.evictions as f64)),
+            ("batches".to_string(), Json::Num(s.batches as f64)),
+            ("coalesced".to_string(), Json::Num(s.coalesced as f64)),
+            ("largest_batch".to_string(), Json::Num(s.largest_batch as f64)),
+        ])
+        .render()
+    }
+
+    /// The engine for a request seed (engines pin their seed at
+    /// construction; a small LRU keeps the hot ones alive).
+    fn engine_for(&self, seed: u64) -> Arc<ParallelSweep> {
+        self.engines.with(|c| match c.fetch(&seed) {
+            Some(e) => e,
+            None => {
+                let e = Arc::new(ParallelSweep::new(self.cfg.mode, &self.cfg.tech, self.cfg.jobs, seed));
+                c.insert(seed, e.clone(), 0);
+                e
+            }
+        })
+    }
+
+    /// Build the request's full design point with the service tech.
+    fn setup_for(&self, req: &Request) -> Result<crate::emulation::EmulationSetup, ServeError> {
+        req.design_point()
+            .tech(&self.cfg.tech)
+            .build()
+            .map_err(|e| ServeError::Invalid(format!("{e:#}")))
+    }
+
+    fn eval(&self, req: &Request) -> Result<String, ServeError> {
+        match req.kind {
+            QueryKind::Latency => self.latency_payload(req),
+            QueryKind::Sweep => self.sweep_payload(req),
+            QueryKind::Emulation => self.emulation_payload(req),
+            QueryKind::Contention => self.contention_payload(req),
+            // Parse never produces other kinds on this path.
+            _ => Err(ServeError::Eval(format!("kind `{}` is not evaluable", req.kind.label()))),
+        }
+    }
+
+    /// One point through the batcher (or straight to the engine when
+    /// batching is disabled).
+    fn eval_point(&self, seed: u64, point: SweepPoint) -> Result<PointResult, ServeError> {
+        if self.batcher.max <= 1 {
+            let r = self
+                .engine_for(seed)
+                .eval_points(&[point])
+                .map_err(|e| ServeError::Eval(format!("{e:#}")))?;
+            return Ok(r[0]);
+        }
+        self.batcher.run(seed, point, |items| self.eval_batch(items))
+    }
+
+    /// Evaluate one closed batch: group by seed (engines are per-seed)
+    /// and fan each group out as ONE `eval_points` call. Per-point
+    /// seeds are pure functions of (seed, point), so grouping cannot
+    /// change results.
+    fn eval_batch(
+        &self,
+        items: &[(u64, SweepPoint)],
+    ) -> Result<HashMap<(u64, u64), PointResult>, String> {
+        let mut by_seed: std::collections::BTreeMap<u64, Vec<SweepPoint>> =
+            std::collections::BTreeMap::new();
+        for &(seed, point) in items {
+            by_seed.entry(seed).or_default().push(point);
+        }
+        let mut out = HashMap::new();
+        for (seed, points) in by_seed {
+            let results =
+                self.engine_for(seed).eval_points(&points).map_err(|e| format!("{e:#}"))?;
+            for r in results {
+                out.insert((seed, r.point.canonical_key()), r);
+            }
+        }
+        Ok(out)
+    }
+
+    fn latency_payload(&self, req: &Request) -> Result<String, ServeError> {
+        let setup = self.setup_for(req)?;
+        let exact = setup.expected_latency();
+        let eval = self.eval_point(req.seed, req.sweep_point())?;
+        let mut report = Report::new("serve.latency");
+        report.push(
+            Row::new(&req.point_name())
+                .str("backend", eval.backend)
+                .num("mean_cycles", eval.mean_cycles)
+                .int("samples", eval.samples as u64)
+                .num("exact_cycles", exact),
+        );
+        Ok(report.render().trim_end().to_string())
+    }
+
+    fn sweep_payload(&self, req: &Request) -> Result<String, ServeError> {
+        // Same k-grid as the CLI `sweep` command: doublings from 16
+        // plus full emulation (`tiles - 1`).
+        let point = req.sweep_point();
+        let mut points = Vec::new();
+        let mut k = 16usize;
+        while k < point.tiles {
+            points.push(SweepPoint { k, ..point });
+            k *= 2;
+        }
+        points.push(SweepPoint { k: point.tiles - 1, ..point });
+        let mut results = self
+            .engine_for(req.seed)
+            .eval_points(&points)
+            .map_err(|e| ServeError::Eval(format!("{e:#}")))?;
+        results.sort_by_key(|r| r.point.k);
+        let mut report = Report::new("serve.sweep");
+        for r in &results {
+            report.push(
+                Row::new(&format!("{}-k{}", req.point_name(), r.point.k))
+                    .int("k", r.point.k as u64)
+                    .str("backend", r.backend)
+                    .num("mean_cycles", r.mean_cycles)
+                    .int("samples", r.samples as u64),
+            );
+        }
+        Ok(report.render().trim_end().to_string())
+    }
+
+    fn emulation_payload(&self, req: &Request) -> Result<String, ServeError> {
+        let prog = corpus::all()
+            .into_iter()
+            .find(|p| p.name == req.program)
+            .ok_or_else(|| ServeError::field("program", format!("unknown program `{}`", req.program)))?;
+        let err = |e: anyhow::Error| ServeError::Eval(format!("{e:#}"));
+        let direct = compile(prog.source, Backend::Direct).map_err(err)?;
+        let emulated = compile(prog.source, Backend::Emulated).map_err(err)?;
+
+        // Paper-constant DRAM model: the run is fully deterministic, so
+        // the payload honours the canonical-key contract by
+        // construction (the seed participates in the key but the
+        // machines never draw from it).
+        let seq = SequentialMachine::paper_figures(false);
+        let mut dmem = DirectMemory::new(seq, 1 << 24);
+        let mut dm = FastMachine::new(&mut dmem, 1 << 16);
+        let dstats = dm.run(&predecode(&direct.code).map_err(err)?).map_err(err)?;
+        let dres = dm.reg(0);
+
+        let mut emem = EmulatedChannelMemory::new(self.setup_for(req)?);
+        let mut em = FastMachine::new(&mut emem, 1 << 16);
+        let estats = em.run(&predecode(&emulated.code).map_err(err)?).map_err(err)?;
+        let eres = em.reg(0);
+        if dres != eres {
+            return Err(ServeError::Eval(format!(
+                "machines disagree on `{}`: direct {dres} vs emulated {eres}",
+                req.program
+            )));
+        }
+
+        let mut report = Report::new("serve.emulation");
+        report.push(
+            Row::new(&format!("{}-{}", req.program, req.point_name()))
+                .num("result", dres as f64)
+                .int("direct_insts", dstats.instructions)
+                .int("direct_cycles", dstats.cycles)
+                .int("emulated_insts", estats.instructions)
+                .int("emulated_cycles", estats.cycles)
+                .num("slowdown", estats.cycles as f64 / dstats.cycles as f64)
+                .int("direct_bytes", direct.binary_bytes() as u64)
+                .int("emulated_bytes", emulated.binary_bytes() as u64),
+        );
+        Ok(report.render().trim_end().to_string())
+    }
+
+    fn contention_payload(&self, req: &Request) -> Result<String, ServeError> {
+        let cell = Cell {
+            point: req.sweep_point(),
+            pattern: req.pattern,
+            clients: req.clients,
+            accesses: req.accesses,
+        };
+        // The figure's canonical per-cell seed: a pure function of the
+        // request seed and the cell identity.
+        let seed = cell_seed(req.seed, &cell);
+        let setup = self.setup_for(req)?;
+        let stats = eval_cell(&setup, &cell, seed).map_err(|e| ServeError::Eval(format!("{e:#}")))?;
+        let result = CellResult {
+            point: cell.point,
+            pattern: req.pattern.label().to_string(),
+            clients: req.clients,
+            stats,
+        };
+        let mut report = Report::new("serve.contention");
+        report.push(row_for(&result));
+        Ok(report.render().trim_end().to_string())
+    }
+}
+
+/// A batch under construction or in flight.
+struct BatchState {
+    /// Still accepting joiners.
+    open: bool,
+    /// (request seed, point) per member; duplicates allowed (they
+    /// resolve to the same map slot).
+    items: Vec<(u64, SweepPoint)>,
+    /// Posted by the leader exactly once.
+    result: Option<Result<Arc<HashMap<(u64, u64), PointResult>>, String>>,
+}
+
+struct Batch {
+    state: Mutex<BatchState>,
+    /// Leader sleeps here through the linger window; a joiner that
+    /// fills the batch wakes it early.
+    filled: Condvar,
+    /// Everyone sleeps here until `result` is posted.
+    done: Condvar,
+}
+
+/// Coalesces concurrent latency queries into shared engine calls.
+///
+/// Join-or-lead: a request that finds an open, non-full batch joins it
+/// and waits; otherwise it installs a fresh batch as leader, lingers
+/// for co-travellers, closes the batch, runs the evaluation (panic-safe
+/// — followers are never stranded) and posts the result.
+///
+/// Lock order: `current` before any `Batch::state`; the leader drops
+/// the state lock before retiring its batch from `current`.
+struct Batcher {
+    current: Mutex<Option<Arc<Batch>>>,
+    linger: Duration,
+    max: usize,
+    batches: AtomicU64,
+    coalesced: AtomicU64,
+    largest: AtomicU64,
+}
+
+impl Batcher {
+    fn new(linger: Duration, max: usize) -> Self {
+        Self {
+            current: Mutex::new(None),
+            linger,
+            max,
+            batches: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            largest: AtomicU64::new(0),
+        }
+    }
+
+    fn run(
+        &self,
+        seed: u64,
+        point: SweepPoint,
+        eval: impl FnOnce(&[(u64, SweepPoint)]) -> Result<HashMap<(u64, u64), PointResult>, String>,
+    ) -> Result<PointResult, ServeError> {
+        let (batch, leader) = self.join_or_lead(seed, point);
+        if leader {
+            self.lead(&batch, eval);
+        }
+        // Wait for the leader's verdict (posted exactly once, even on
+        // panic), then pick this request's slot out of the shared map.
+        let mut st = lock(&batch.state);
+        while st.result.is_none() {
+            st = batch.done.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+        let map = match st.result.as_ref().expect("loop exits only with a result") {
+            Ok(map) => map.clone(),
+            Err(msg) => return Err(ServeError::Eval(msg.clone())),
+        };
+        drop(st);
+        map.get(&(seed, point.canonical_key()))
+            .copied()
+            .ok_or_else(|| ServeError::Eval("batched point missing from its result map".into()))
+    }
+
+    /// Returns the batch to wait on and whether this caller leads it.
+    fn join_or_lead(&self, seed: u64, point: SweepPoint) -> (Arc<Batch>, bool) {
+        let mut current = lock(&self.current);
+        if let Some(batch) = current.as_ref() {
+            let mut st = lock(&batch.state);
+            if st.open && st.items.len() < self.max {
+                st.items.push((seed, point));
+                let full = st.items.len() >= self.max;
+                drop(st);
+                self.coalesced.fetch_add(1, Ordering::Relaxed);
+                if full {
+                    batch.filled.notify_all();
+                }
+                return (batch.clone(), false);
+            }
+        }
+        let batch = Arc::new(Batch {
+            state: Mutex::new(BatchState {
+                open: true,
+                items: vec![(seed, point)],
+                result: None,
+            }),
+            filled: Condvar::new(),
+            done: Condvar::new(),
+        });
+        *current = Some(batch.clone());
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        (batch, true)
+    }
+
+    /// Leader duties: linger, close, retire from `current`, evaluate,
+    /// post the result.
+    fn lead(
+        &self,
+        batch: &Arc<Batch>,
+        eval: impl FnOnce(&[(u64, SweepPoint)]) -> Result<HashMap<(u64, u64), PointResult>, String>,
+    ) {
+        let deadline = Instant::now() + self.linger;
+        let items = {
+            let mut st = lock(&batch.state);
+            loop {
+                if st.items.len() >= self.max {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (g, _) = batch
+                    .filled
+                    .wait_timeout(st, deadline - now)
+                    .unwrap_or_else(PoisonError::into_inner);
+                st = g;
+            }
+            st.open = false;
+            st.items.clone()
+        };
+        // Retire from `current` so the next request starts a fresh
+        // batch (unless a joiner already replaced it).
+        {
+            let mut current = lock(&self.current);
+            if current.as_ref().is_some_and(|c| Arc::ptr_eq(c, batch)) {
+                *current = None;
+            }
+        }
+        self.largest.fetch_max(items.len() as u64, Ordering::Relaxed);
+        // Panic-safe: a follower must never be stranded without a
+        // result, so a panicking evaluation becomes an error result.
+        let result = match catch_unwind(AssertUnwindSafe(|| eval(&items))) {
+            Ok(r) => r.map(Arc::new),
+            Err(_) => Err("batch evaluation panicked".to_string()),
+        };
+        let mut st = lock(&batch.state);
+        st.result = Some(result);
+        batch.done.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::proto::Request;
+
+    fn exact_service(batch_max: usize) -> Service {
+        Service::new(ServeConfig {
+            mode: Mode::Exact,
+            batch_max,
+            jobs: 2,
+            linger: Duration::from_millis(5),
+            ..ServeConfig::default()
+        })
+    }
+
+    fn req(text: &str) -> Request {
+        Request::from_bytes(text.as_bytes()).unwrap()
+    }
+
+    #[test]
+    fn ping_stats_and_shutdown_are_uncached() {
+        let svc = exact_service(1);
+        assert_eq!(*svc.handle(&req("{\"kind\": \"ping\"}")).unwrap(), "{\"pong\": true}");
+        assert_eq!(
+            *svc.handle(&req("{\"kind\": \"shutdown\"}")).unwrap(),
+            "{\"draining\": true}"
+        );
+        let stats = svc.handle(&req("{\"kind\": \"stats\"}")).unwrap();
+        assert!(stats.contains("\"served\": 3"), "{stats}");
+        let s = svc.stats();
+        assert_eq!(s.served, 3);
+        assert_eq!(s.cache.hits + s.cache.misses, 0, "control kinds bypass the cache");
+    }
+
+    #[test]
+    fn identical_requests_share_one_cached_payload() {
+        let svc = exact_service(1);
+        let r = req("{\"kind\": \"latency\", \"tiles\": 256, \"k\": 63, \"mem_kb\": 64, \"seed\": 3}");
+        let a = svc.handle(&r).unwrap();
+        let b = svc.handle(&r).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second call is the cached allocation");
+        let s = svc.stats();
+        assert_eq!((s.cache.hits, s.cache.misses), (1, 1));
+        // A different seed is a different canonical key.
+        let r2 =
+            req("{\"kind\": \"latency\", \"tiles\": 256, \"k\": 63, \"mem_kb\": 64, \"seed\": 4}");
+        let c = svc.handle(&r2).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+    }
+
+    #[test]
+    fn every_kind_produces_a_report_payload() {
+        let svc = exact_service(1);
+        for (text, needle) in [
+            (
+                "{\"kind\": \"latency\", \"tiles\": 64, \"k\": 15, \"mem_kb\": 64}",
+                "\"exact_cycles\"",
+            ),
+            ("{\"kind\": \"sweep\", \"tiles\": 64, \"mem_kb\": 64}", "\"bench\": \"serve.sweep\""),
+            (
+                "{\"kind\": \"contention\", \"tiles\": 64, \"k\": 15, \"mem_kb\": 64, \"clients\": 2, \"accesses\": 32, \"pattern\": \"zipf:1.2\"}",
+                "\"c_cont\"",
+            ),
+            (
+                "{\"kind\": \"emulation\", \"tiles\": 256, \"k\": 255, \"program\": \"sum_squares\"}",
+                "\"slowdown\"",
+            ),
+        ] {
+            let payload = svc.handle(&req(text)).unwrap();
+            assert!(payload.contains(needle), "{text} -> {payload}");
+            // Payloads are themselves valid JSON documents.
+            Json::parse(&payload).unwrap_or_else(|e| panic!("{text}: {e}"));
+        }
+    }
+
+    #[test]
+    fn batched_and_unbatched_latency_payloads_are_bit_identical() {
+        let serial = exact_service(1);
+        let batched = exact_service(8);
+        let texts: Vec<String> = (0..6)
+            .map(|i| {
+                format!(
+                    "{{\"kind\": \"latency\", \"tiles\": 256, \"k\": {}, \"mem_kb\": 64, \"seed\": {}}}",
+                    15 + 16 * (i % 3),
+                    i % 2
+                )
+            })
+            .collect();
+        let want: Vec<String> =
+            texts.iter().map(|t| serial.handle(&req(t)).unwrap().to_string()).collect();
+        // Drive the batched service concurrently so requests actually
+        // coalesce; results must not care either way.
+        let batched = Arc::new(batched);
+        let handles: Vec<_> = texts
+            .iter()
+            .map(|t| {
+                let svc = batched.clone();
+                let r = req(t);
+                std::thread::spawn(move || svc.handle(&r).unwrap().to_string())
+            })
+            .collect();
+        let got: Vec<String> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(want, got, "batching must not change a single byte");
+        assert!(batched.stats().batches >= 1);
+    }
+
+    #[test]
+    fn a_panicking_batch_leader_strands_no_followers() {
+        let b = Batcher::new(Duration::from_millis(1), 4);
+        let point = SweepPoint {
+            kind: crate::emulation::TopologyKind::Clos,
+            tiles: 64,
+            mem_kb: 64,
+            k: 15,
+        };
+        let err = b.run(1, point, |_| panic!("boom")).unwrap_err();
+        assert!(format!("{err}").contains("panicked"), "{err}");
+    }
+}

@@ -1,0 +1,339 @@
+//! A shared concurrent memo cache with LRU eviction — the
+//! [`crate::coordinator::ParallelSweep`] result cache generalised so the
+//! serve layer ([`crate::serve`]) and any future consumer key results by
+//! a canonical encoding and share them across threads.
+//!
+//! Design:
+//!
+//! * **One mutex, whole-value entries.** Values are inserted whole and
+//!   cloned out whole, so a panic elsewhere can never leave an entry
+//!   half-written — locks recover from poisoning
+//!   ([`std::sync::PoisonError::into_inner`]) for the same reason the
+//!   sweep caches always did: the data behind a poisoned lock is still
+//!   valid, and refusing to serve it would turn one caught panic into a
+//!   permanently dead cache.
+//! * **Transactional access.** [`LruCache::with`] runs a closure under
+//!   the lock over a [`CacheView`], so multi-step read-modify-write
+//!   protocols (the sweep engine's scan-then-insert-then-assemble) stay
+//!   atomic and control their own hit/miss accounting. The convenience
+//!   [`LruCache::get`]/[`LruCache::insert`] wrappers cover the common
+//!   single-key case.
+//! * **Bounded, with counters.** `max_entries`/`max_bytes` caps (0 =
+//!   unbounded) evict least-recently-used entries on insert; hits,
+//!   misses and evictions are reported via [`LruCache::stats`]. A
+//!   single entry larger than `max_bytes` is admitted alone (a cache
+//!   that can hold nothing would turn every request into a miss loop).
+//!
+//! Eviction scans for the oldest entry in O(len). The caches this crate
+//! needs hold at most a few thousand entries, where the scan is cheaper
+//! than maintaining an intrusive list; revisit if a cache ever grows
+//! past ~10^5 entries.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Cache effectiveness counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups served from the cache.
+    pub hits: u64,
+    /// Lookups that found nothing (or chose to evaluate fresh).
+    pub misses: u64,
+    /// Entries evicted to respect the capacity/byte bounds.
+    pub evictions: u64,
+}
+
+struct Entry<V> {
+    value: V,
+    bytes: usize,
+    /// Last-touch tick (monotone per cache) — the LRU order.
+    last: u64,
+}
+
+struct Inner<K, V> {
+    map: HashMap<K, Entry<V>>,
+    bytes: usize,
+    tick: u64,
+}
+
+/// The shared concurrent LRU cache.
+pub struct LruCache<K, V> {
+    inner: Mutex<Inner<K, V>>,
+    max_entries: usize,
+    max_bytes: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+/// The view a [`LruCache::with`] closure operates on: every method runs
+/// under the cache lock, so a whole closure is one atomic transaction.
+pub struct CacheView<'a, K, V> {
+    guard: MutexGuard<'a, Inner<K, V>>,
+    cache: &'a LruCache<K, V>,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> LruCache<K, V> {
+    /// A cache bounded to `max_entries` entries and `max_bytes` payload
+    /// bytes (0 = unbounded in that dimension).
+    pub fn bounded(max_entries: usize, max_bytes: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner { map: HashMap::new(), bytes: 0, tick: 0 }),
+            max_entries,
+            max_bytes,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// An unbounded cache (what the sweep engine's memo caches use:
+    /// their key space is the finite set of design points one process
+    /// evaluates).
+    pub fn unbounded() -> Self {
+        Self::bounded(0, 0)
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner<K, V>> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Run `f` under the cache lock. Everything the closure does via the
+    /// [`CacheView`] — lookups, inserts, hit/miss accounting — is one
+    /// atomic transaction against concurrent callers.
+    pub fn with<R>(&self, f: impl FnOnce(&mut CacheView<'_, K, V>) -> R) -> R {
+        let mut view = CacheView { guard: self.lock(), cache: self };
+        f(&mut view)
+    }
+
+    /// Counted single-key lookup (hit or miss recorded; a hit refreshes
+    /// the entry's LRU position).
+    pub fn get(&self, key: &K) -> Option<V> {
+        self.with(|c| c.get(key))
+    }
+
+    /// Insert with an explicit payload weight in bytes, evicting LRU
+    /// entries as needed. Zero-weight entries only count against
+    /// `max_entries`.
+    pub fn insert_weighted(&self, key: K, value: V, bytes: usize) {
+        self.with(|c| c.insert(key, value, bytes));
+    }
+
+    /// Insert a zero-weight entry (see [`LruCache::insert_weighted`]).
+    pub fn insert(&self, key: K, value: V) {
+        self.insert_weighted(key, value, 0);
+    }
+
+    /// Counters so far.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Entries currently held.
+    pub fn len(&self) -> usize {
+        self.lock().map.len()
+    }
+
+    /// True when the cache holds nothing.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Payload bytes currently held (the sum of insert weights).
+    pub fn bytes(&self) -> usize {
+        self.lock().bytes
+    }
+
+    /// Drop every entry (counters are kept).
+    pub fn clear(&self) {
+        let mut inner = self.lock();
+        inner.map.clear();
+        inner.bytes = 0;
+    }
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> CacheView<'_, K, V> {
+    /// Uncounted membership probe (no hit/miss recorded, no LRU touch) —
+    /// for protocols that account hits themselves, like the sweep
+    /// engine's duplicate scan.
+    pub fn contains(&self, key: &K) -> bool {
+        self.guard.map.contains_key(key)
+    }
+
+    /// Counted lookup: records a hit or miss and refreshes the entry's
+    /// LRU position.
+    pub fn get(&mut self, key: &K) -> Option<V> {
+        match self.fetch(key) {
+            Some(v) => {
+                self.note_hit();
+                Some(v)
+            }
+            None => {
+                self.note_miss();
+                None
+            }
+        }
+    }
+
+    /// Uncounted lookup (LRU position is still refreshed).
+    pub fn fetch(&mut self, key: &K) -> Option<V> {
+        self.guard.tick += 1;
+        let tick = self.guard.tick;
+        let entry = self.guard.map.get_mut(key)?;
+        entry.last = tick;
+        Some(entry.value.clone())
+    }
+
+    /// Insert (or replace) an entry with a payload weight of `bytes`,
+    /// then evict least-recently-used entries until the cache respects
+    /// its bounds again. The just-inserted entry is never evicted
+    /// unless it alone exceeds `max_entries == 0` semantics (it is the
+    /// most recently used by construction).
+    pub fn insert(&mut self, key: K, value: V, bytes: usize) {
+        self.guard.tick += 1;
+        let tick = self.guard.tick;
+        if let Some(old) = self.guard.map.insert(key, Entry { value, bytes, last: tick }) {
+            self.guard.bytes -= old.bytes;
+        }
+        self.guard.bytes += bytes;
+        let max_entries = self.cache.max_entries;
+        let max_bytes = self.cache.max_bytes;
+        while self.guard.map.len() > 1
+            && ((max_entries > 0 && self.guard.map.len() > max_entries)
+                || (max_bytes > 0 && self.guard.bytes > max_bytes))
+        {
+            self.evict_lru();
+        }
+    }
+
+    /// Record a hit the caller resolved without touching the map (e.g.
+    /// an intra-call duplicate that will be served by a later insert).
+    pub fn note_hit(&mut self) {
+        self.cache.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a miss the caller resolved by evaluating fresh.
+    pub fn note_miss(&mut self) {
+        self.cache.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Entries currently held.
+    pub fn len(&self) -> usize {
+        self.guard.map.len()
+    }
+
+    /// True when the cache holds nothing.
+    pub fn is_empty(&self) -> bool {
+        self.guard.map.is_empty()
+    }
+
+    fn evict_lru(&mut self) {
+        let oldest = self
+            .guard
+            .map
+            .iter()
+            .min_by_key(|(_, e)| e.last)
+            .map(|(k, _)| k.clone());
+        if let Some(k) = oldest {
+            if let Some(e) = self.guard.map.remove(&k) {
+                self.guard.bytes -= e.bytes;
+                self.cache.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_insert_and_counters() {
+        let c: LruCache<u64, String> = LruCache::unbounded();
+        assert_eq!(c.get(&1), None);
+        c.insert(1, "one".to_string());
+        assert_eq!(c.get(&1).as_deref(), Some("one"));
+        assert_eq!(c.stats(), CacheStats { hits: 1, misses: 1, evictions: 0 });
+        assert_eq!(c.len(), 1);
+        assert!(!c.is_empty());
+    }
+
+    #[test]
+    fn entry_bound_evicts_least_recently_used() {
+        let c: LruCache<u64, u64> = LruCache::bounded(2, 0);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        assert_eq!(c.get(&1), Some(10)); // refresh 1 → 2 is now LRU
+        c.insert(3, 30);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&2), None, "LRU entry evicted");
+        assert_eq!(c.get(&1), Some(10));
+        assert_eq!(c.get(&3), Some(30));
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn byte_bound_evicts_and_replacement_updates_weight() {
+        let c: LruCache<u64, Vec<u8>> = LruCache::bounded(0, 100);
+        c.insert_weighted(1, vec![0; 40], 40);
+        c.insert_weighted(2, vec![0; 40], 40);
+        assert_eq!(c.bytes(), 80);
+        c.insert_weighted(3, vec![0; 40], 40); // 120 > 100 → evict key 1
+        assert_eq!(c.bytes(), 80);
+        assert_eq!(c.get(&1), None);
+        // Replacing a key swaps its weight, not adds it.
+        c.insert_weighted(2, vec![0; 10], 10);
+        assert_eq!(c.bytes(), 50);
+    }
+
+    #[test]
+    fn an_oversized_sole_entry_is_admitted() {
+        let c: LruCache<u64, Vec<u8>> = LruCache::bounded(0, 10);
+        c.insert_weighted(1, vec![0; 64], 64);
+        assert_eq!(c.len(), 1, "a cache that can hold nothing would never hit");
+        c.insert_weighted(2, vec![0; 64], 64);
+        assert_eq!(c.len(), 1, "the older oversized entry is evicted");
+        assert_eq!(c.get(&2).map(|v| v.len()), Some(64));
+    }
+
+    #[test]
+    fn with_transaction_controls_its_own_accounting() {
+        // The sweep-engine protocol: probe untracked, account manually,
+        // insert, then assemble with uncounted fetches.
+        let c: LruCache<u64, u64> = LruCache::unbounded();
+        c.with(|view| {
+            assert!(!view.contains(&7));
+            view.note_miss();
+            view.insert(7, 49, 0);
+            assert!(view.contains(&7));
+            view.note_hit();
+            assert_eq!(view.fetch(&7), Some(49)); // uncounted
+        });
+        assert_eq!(c.stats(), CacheStats { hits: 1, misses: 1, evictions: 0 });
+    }
+
+    #[test]
+    fn survives_a_poisoned_lock() {
+        let c = std::sync::Arc::new(LruCache::<u64, u64>::unbounded());
+        c.insert(1, 11);
+        let c2 = std::sync::Arc::clone(&c);
+        let _ = std::thread::spawn(move || {
+            c2.with(|view| {
+                view.insert(2, 22, 0);
+                panic!("poison the lock");
+            })
+        })
+        .join();
+        // Entries inserted whole are still valid behind the poison.
+        assert_eq!(c.get(&1), Some(11));
+        assert_eq!(c.get(&2), Some(22));
+        c.insert(3, 33);
+        assert_eq!(c.get(&3), Some(33));
+    }
+}

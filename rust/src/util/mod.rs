@@ -2,6 +2,9 @@
 //! crates beyond the xla stack are available).
 //!
 //! * [`rng`] — splitmix64 / xoshiro256** PRNG.
+//! * [`cache`] — shared concurrent LRU memo cache (the sweep engine's
+//!   result caches and the serve layer's response cache).
+//! * [`json`] — minimal JSON parser/renderer (the serve wire protocol).
 //! * [`paged`] — paged flat word store (the interpreter memories'
 //!   zero-hash backing).
 //! * [`stats`] — summary statistics, histograms.
@@ -12,6 +15,8 @@
 //!   `harness = false` bench binaries.
 
 pub mod bench;
+pub mod cache;
+pub mod json;
 pub mod paged;
 pub mod plot;
 pub mod prop;

@@ -1,0 +1,79 @@
+//! The CLI exit-code contract, end to end: every command-line misuse is
+//! a typed [`UsageError`] mapped to exit code 2 with a field-named
+//! message; runtime failures keep exit code 1; nothing panics on bad
+//! input. Drives the real driver ([`memclos::cli::driver::run`])
+//! in-process — the same code path as the binary.
+
+use memclos::cli::{driver, exit_code, UsageError};
+
+fn run(line: &str) -> anyhow::Result<()> {
+    driver::run(line.split_whitespace().map(str::to_string).collect())
+}
+
+fn usage_err(line: &str) -> anyhow::Error {
+    let err = run(line).expect_err(&format!("`{line}` must fail"));
+    assert_eq!(exit_code(&err), 2, "`{line}` must be misuse (exit 2): {err:#}");
+    assert!(
+        err.chain().any(|c| c.downcast_ref::<UsageError>().is_some()),
+        "`{line}` must carry a typed UsageError: {err:#}"
+    );
+    err
+}
+
+#[test]
+fn misuse_matrix_is_typed_with_exit_code_2() {
+    // (command line, fragment the message must name)
+    for (line, fragment) in [
+        ("frobnicate", "unknown command"),
+        ("figure", "figure number required"),
+        ("figure bogus", "no figure bogus"),
+        ("figures", "figures --all"),
+        ("figures 5", "figure 5"),
+        ("tables --which 9", "no table 9"),
+        ("latency --tiles abc", "flag --tiles"),
+        ("latency --topo ring", "ring"),
+        ("latency --samples", "expects a value"),
+        ("run", "program name required"),
+        ("run nosuchprog", "unknown program `nosuchprog`"),
+        ("contention --clients 0", "--clients 0"),
+        ("contention --clients x", "--clients: cannot parse `x`"),
+        ("contention --samples 0", "--samples 0"),
+        ("contention --pattern warp", "unknown pattern"),
+        ("loadgen", "--addr"),
+        ("loadgen --self-host --clients 0", "--clients 0"),
+        ("loadgen --self-host --requests 0", "--requests 0"),
+        ("latency --config /nonexistent/memclos.toml", "reading config"),
+        ("serve --queue-depth abc", "flag --queue-depth"),
+    ] {
+        let err = usage_err(line);
+        let msg = format!("{err:#}");
+        assert!(msg.contains(fragment), "`{line}`: expected `{fragment}` in `{msg}`");
+    }
+}
+
+#[test]
+fn design_point_validation_is_a_field_named_failure() {
+    // An invalid design point is caught by the builder with a
+    // field-named message. It is a nonzero failure either way; the
+    // message must say WHICH field.
+    let err = run("latency --tiles 64 --k 64").expect_err("k >= tiles must fail");
+    assert!(format!("{err:#}").contains("`k`"), "{err:#}");
+    let err = run("sweep --mem 0").expect_err("mem 0 must fail");
+    assert!(format!("{err:#}").contains("`mem_kb`"), "{err:#}");
+}
+
+#[test]
+fn valid_commands_still_succeed() {
+    // The misuse plumbing must not break the happy path: cheap,
+    // deterministic commands run clean through the same driver.
+    run("tables --which 3").expect("tables");
+    run("area --topo clos --tiles 256").expect("area");
+    run("latency --mode exact --tiles 256 --k 63 --json").expect("latency");
+}
+
+#[test]
+fn help_never_fails() {
+    run("").expect("bare invocation prints help");
+    run("help").expect("help command");
+    run("latency --help").expect("--help flag");
+}

@@ -1,0 +1,165 @@
+//! End-to-end serve tests: a real in-process [`Server`] on an
+//! ephemeral port, driven over real TCP — by a raw frame client, by
+//! the closed-loop load generator, and by an overload burst against
+//! deliberately tiny admission bounds.
+
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use memclos::api::Mode;
+use memclos::serve::loadgen::{self, LoadgenOpts};
+use memclos::serve::proto::Response;
+use memclos::serve::service::{ServeConfig, Service};
+use memclos::serve::{read_frame, write_frame, Server, ServerConfig};
+use memclos::util::json::Json;
+
+fn start(server_cfg: ServerConfig) -> Server {
+    let service = Arc::new(Service::new(ServeConfig {
+        mode: Mode::Exact,
+        jobs: 2,
+        linger: Duration::from_millis(1),
+        ..ServeConfig::default()
+    }));
+    Server::start(service, &server_cfg).expect("server starts")
+}
+
+fn request(stream: &mut TcpStream, body: &str) -> Response {
+    write_frame(stream, body.as_bytes()).expect("send");
+    let bytes = read_frame(stream).expect("read").expect("one response frame");
+    Response::from_bytes(&bytes).expect("parseable envelope")
+}
+
+#[test]
+fn raw_client_round_trips_and_drains_cleanly() {
+    let server = start(ServerConfig { addr: "127.0.0.1:0".into(), ..ServerConfig::default() });
+    let addr = server.local_addr();
+    let mut conn = TcpStream::connect(addr).expect("connect");
+
+    let pong = request(&mut conn, "{\"id\": 1, \"kind\": \"ping\"}");
+    assert!(pong.ok && pong.id == 1);
+    assert_eq!(pong.result.unwrap().get("pong").and_then(Json::as_bool), Some(true));
+
+    let lat = request(
+        &mut conn,
+        "{\"id\": 2, \"kind\": \"latency\", \"tiles\": 256, \"k\": 63, \"mem_kb\": 64}",
+    );
+    assert!(lat.ok && lat.id == 2, "{lat:?}");
+    let doc = lat.result.unwrap();
+    assert_eq!(doc.get("bench").and_then(Json::as_str), Some("serve.latency"));
+
+    // Malformed JSON gets a typed error and KEEPS the connection.
+    write_frame(&mut conn, b"{not json").expect("send garbage");
+    let bad = Response::from_bytes(&read_frame(&mut conn).unwrap().unwrap()).unwrap();
+    assert!(!bad.ok && !bad.overload);
+    assert!(bad.error.unwrap().contains("JSON"), "typed parse error");
+    let again = request(&mut conn, "{\"id\": 3, \"kind\": \"ping\"}");
+    assert!(again.ok && again.id == 3, "connection survives garbage JSON");
+
+    // Drain: shutdown is acknowledged, then EOF at a frame boundary.
+    let shut = request(&mut conn, "{\"id\": 4, \"kind\": \"shutdown\"}");
+    assert!(shut.ok && shut.id == 4);
+    assert!(matches!(read_frame(&mut conn), Ok(None)), "clean EOF after drain");
+    assert!(server.is_draining());
+    let report = server.join();
+    assert!(report.served >= 4, "{report}");
+    assert_eq!(report.frame_errors, 0, "{report}");
+}
+
+#[test]
+fn loadgen_drives_and_drains_a_live_server() {
+    let server = start(ServerConfig { addr: "127.0.0.1:0".into(), ..ServerConfig::default() });
+    let opts = LoadgenOpts {
+        addr: server.local_addr().to_string(),
+        clients: 2,
+        requests: 8,
+        seed: 0x10AD,
+        shutdown: true,
+    };
+    let summary = loadgen::run(&opts).expect("loadgen runs");
+    assert_eq!(summary.sent, 16);
+    assert_eq!(summary.sent, summary.ok + summary.overload + summary.errors);
+    assert_eq!(summary.errors, 0, "{}", summary.render());
+    assert!(summary.ok > 0);
+    assert_eq!(summary.drain_clean, Some(true), "{}", summary.render());
+    let stats = summary.server_stats.as_ref().expect("stats captured before drain");
+    assert!(stats.get("served").and_then(Json::as_u64).unwrap() >= 16);
+
+    // The report is a well-formed document of the BENCH schema family.
+    let report = summary.report().render();
+    let doc = Json::parse(&report).expect("report parses");
+    assert_eq!(doc.get("bench").and_then(Json::as_str), Some("serve"));
+
+    let report = server.join();
+    assert!(report.served >= 16, "{report}");
+}
+
+#[test]
+fn overload_sheds_with_typed_rejections_and_answers_every_frame() {
+    // Tiny bounds: 1 worker, queue depth 1, 1 in-flight per session —
+    // a pipelined burst must shed most of itself.
+    let server = start(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        net_workers: 1,
+        queue_depth: 1,
+        session_inflight: 1,
+    });
+    let mut conn = TcpStream::connect(server.local_addr()).expect("connect");
+
+    // Pipeline slow contention requests without reading responses.
+    const BURST: usize = 10;
+    for i in 0..BURST {
+        let body = format!(
+            "{{\"id\": {}, \"kind\": \"contention\", \"tiles\": 64, \"k\": 15, \"mem_kb\": 64, \"clients\": 4, \"accesses\": 2000, \"seed\": {i}}}",
+            100 + i
+        );
+        write_frame(&mut conn, body.as_bytes()).expect("send");
+    }
+    let mut seen = std::collections::BTreeSet::new();
+    let mut ok = 0usize;
+    let mut shed = 0usize;
+    for _ in 0..BURST {
+        let bytes = read_frame(&mut conn).expect("read").expect("every frame is answered");
+        let resp = Response::from_bytes(&bytes).expect("envelope");
+        assert!(seen.insert(resp.id), "duplicate response id {}", resp.id);
+        if resp.ok {
+            ok += 1;
+        } else {
+            assert!(resp.overload, "only overloads may fail here: {resp:?}");
+            assert!(resp.error.unwrap().contains("overload"));
+            shed += 1;
+        }
+    }
+    assert_eq!(ok + shed, BURST);
+    assert!(ok >= 1, "at least the first admitted request is served");
+    assert!(shed >= 1, "the burst must overrun depth-1 admission");
+    for i in 0..BURST {
+        assert!(seen.contains(&(100 + i as u64)), "response for id {} missing", 100 + i);
+    }
+
+    server.request_shutdown();
+    drop(conn);
+    let report = server.join();
+    assert!(report.overloads >= shed as u64, "{report}");
+}
+
+#[test]
+fn an_oversized_frame_is_rejected_and_the_connection_closed() {
+    let server = start(ServerConfig { addr: "127.0.0.1:0".into(), ..ServerConfig::default() });
+    let mut conn = TcpStream::connect(server.local_addr()).expect("connect");
+    // A prefix past MAX_FRAME: the server answers with a typed framing
+    // error and closes (no resync is possible mid-stream).
+    let huge = ((memclos::serve::MAX_FRAME + 1) as u32).to_be_bytes();
+    conn.write_all(&huge).expect("send prefix");
+    conn.flush().unwrap();
+    let bytes = read_frame(&mut conn).expect("read").expect("error response");
+    let resp = Response::from_bytes(&bytes).expect("envelope");
+    assert!(!resp.ok);
+    assert!(resp.error.unwrap().contains("exceeds"), "typed oversize error");
+    assert!(matches!(read_frame(&mut conn), Ok(None)), "connection closed after violation");
+
+    server.request_shutdown();
+    let report = server.join();
+    assert_eq!(report.frame_errors, 1, "{report}");
+}

@@ -1,0 +1,180 @@
+//! The serve determinism invariant, pinned: a response payload is a
+//! pure function of its request's canonical key (which folds in the
+//! seed) — bit-identical regardless of batching, concurrency, cache
+//! state or arrival order.
+//!
+//! One request corpus is replayed through three schedules:
+//!
+//! 1. **serial** — batching disabled, one request at a time, cold cache;
+//! 2. **batched-concurrent** — batching enabled, all requests in
+//!    flight at once from worker threads;
+//! 3. **adversarial** — a tiny (2-entry) cache forcing evictions, the
+//!    corpus shuffled, duplicated and replayed twice.
+//!
+//! Every schedule must produce the same payload bytes per canonical
+//! key. The file also covers the wire-schema edges the in-module unit
+//! tests do not: envelope/error shapes as a client library would see
+//! them.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use memclos::api::Mode;
+use memclos::serve::proto::Request;
+use memclos::serve::service::{ServeConfig, Service};
+use memclos::serve::ServeError;
+use memclos::util::json::Json;
+
+/// A mixed-kind corpus with deliberate duplicates (same canonical key
+/// from different ids) and near-duplicates (same point, different
+/// seed).
+fn corpus() -> Vec<Request> {
+    let texts = [
+        "{\"id\": 1, \"kind\": \"latency\", \"tiles\": 256, \"k\": 63, \"mem_kb\": 64, \"seed\": 0}",
+        "{\"id\": 2, \"kind\": \"latency\", \"tiles\": 256, \"k\": 63, \"mem_kb\": 64, \"seed\": 0}",
+        "{\"id\": 3, \"kind\": \"latency\", \"tiles\": 256, \"k\": 63, \"mem_kb\": 64, \"seed\": 1}",
+        "{\"id\": 4, \"kind\": \"latency\", \"tiles\": 256, \"k\": 255, \"mem_kb\": 64, \"seed\": 0}",
+        "{\"id\": 5, \"kind\": \"latency\", \"tiles\": 1024, \"k\": 255, \"mem_kb\": 64, \"seed\": 0}",
+        "{\"id\": 6, \"kind\": \"sweep\", \"tiles\": 64, \"mem_kb\": 64, \"seed\": 0}",
+        "{\"id\": 7, \"kind\": \"contention\", \"tiles\": 64, \"k\": 15, \"mem_kb\": 64, \"clients\": 2, \"accesses\": 32, \"pattern\": \"zipf:1.2\", \"seed\": 0}",
+        "{\"id\": 8, \"kind\": \"contention\", \"tiles\": 64, \"k\": 15, \"mem_kb\": 64, \"clients\": 2, \"accesses\": 32, \"pattern\": \"zipf:1.2\", \"seed\": 7}",
+        "{\"id\": 9, \"kind\": \"emulation\", \"tiles\": 256, \"k\": 255, \"program\": \"sum_squares\", \"seed\": 0}",
+    ];
+    texts.iter().map(|t| Request::from_bytes(t.as_bytes()).unwrap()).collect()
+}
+
+fn service(batch_max: usize, cache_entries: usize) -> Arc<Service> {
+    Arc::new(Service::new(ServeConfig {
+        mode: Mode::Exact,
+        batch_max,
+        cache_entries,
+        jobs: 2,
+        linger: Duration::from_millis(2),
+        ..ServeConfig::default()
+    }))
+}
+
+/// Payloads per canonical key under one schedule.
+fn payloads_serial(svc: &Service, reqs: &[Request]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    for r in reqs {
+        let p = svc.handle(r).unwrap_or_else(|e| panic!("{}: {e}", r.canonical_key()));
+        let prev = out.insert(r.canonical_key(), p.to_string());
+        if let Some(prev) = prev {
+            assert_eq!(prev, *out[&r.canonical_key()], "same key, same bytes, same schedule");
+        }
+    }
+    out
+}
+
+fn payloads_concurrent(svc: &Arc<Service>, reqs: &[Request]) -> HashMap<String, String> {
+    let handles: Vec<_> = reqs
+        .iter()
+        .map(|r| {
+            let svc = svc.clone();
+            let r = r.clone();
+            std::thread::spawn(move || (r.canonical_key(), svc.handle(&r).unwrap().to_string()))
+        })
+        .collect();
+    let mut out = HashMap::new();
+    for h in handles {
+        let (key, payload) = h.join().unwrap();
+        if let Some(prev) = out.insert(key.clone(), payload) {
+            assert_eq!(prev, out[&key], "concurrent duplicates must agree");
+        }
+    }
+    out
+}
+
+#[test]
+fn payloads_are_schedule_invariant() {
+    let reqs = corpus();
+
+    // Schedule 1: serial, unbatched, cold cache — the oracle.
+    let want = payloads_serial(&service(1, 4096), &reqs);
+
+    // Schedule 2: batched + concurrent.
+    let got = payloads_concurrent(&service(8, 4096), &reqs);
+    assert_eq!(want, got, "batching/concurrency changed payload bytes");
+
+    // Schedule 3: adversarial — 2-entry cache (evictions guaranteed),
+    // shuffled + duplicated corpus, replayed twice.
+    let svc = service(4, 2);
+    let mut order: Vec<Request> = reqs.iter().rev().cloned().collect();
+    order.extend(reqs.iter().cloned());
+    let first = payloads_serial(&svc, &order);
+    assert_eq!(want, first, "evicting cache changed payload bytes");
+    let second = payloads_serial(&svc, &order);
+    assert_eq!(want, second, "replay after evictions changed payload bytes");
+    assert!(svc.stats().cache.evictions > 0, "the tiny cache must actually evict");
+}
+
+#[test]
+fn a_warm_cache_serves_the_identical_allocation() {
+    let svc = service(1, 4096);
+    let reqs = corpus();
+    let cold: Vec<Arc<String>> = reqs.iter().map(|r| svc.handle(r).unwrap()).collect();
+    let miss_floor = svc.stats().cache.misses;
+    let warm: Vec<Arc<String>> = reqs.iter().map(|r| svc.handle(r).unwrap()).collect();
+    for (c, w) in cold.iter().zip(&warm) {
+        assert!(Arc::ptr_eq(c, w), "warm pass must return the cached allocation");
+    }
+    assert_eq!(svc.stats().cache.misses, miss_floor, "warm pass evaluates nothing");
+    assert_eq!(svc.stats().cache.hits as usize, reqs.len() + 1, "one duplicate in the cold pass");
+}
+
+#[test]
+fn envelope_and_error_shapes_survive_the_wire() {
+    use memclos::serve::proto::Response;
+
+    // Success envelope: id echo + raw payload splice.
+    let svc = service(1, 16);
+    let req = Request::from_bytes(
+        b"{\"id\": 42, \"kind\": \"latency\", \"tiles\": 64, \"k\": 15, \"mem_kb\": 64}",
+    )
+    .unwrap();
+    let payload = svc.handle(&req).unwrap();
+    let wire = Response::ok_wire(req.id, &payload);
+    let resp = Response::from_bytes(wire.as_bytes()).unwrap();
+    assert!(resp.ok);
+    assert_eq!(resp.id, 42);
+    // The spliced payload parses back to the same document.
+    assert_eq!(resp.result.unwrap(), Json::parse(&payload).unwrap());
+
+    // Error envelopes: overload marker only for sheds.
+    for (err, overload) in [
+        (ServeError::Overload("queue full"), true),
+        (ServeError::Draining, true),
+        (ServeError::field("tiles", "need 1 <= tiles"), false),
+        (ServeError::Eval("backend exploded".into()), false),
+    ] {
+        let resp = Response::from_bytes(Response::error_wire(9, &err).as_bytes()).unwrap();
+        assert!(!resp.ok);
+        assert_eq!(resp.overload, overload, "{err}");
+        assert_eq!(resp.id, 9);
+        assert!(resp.error.is_some());
+    }
+}
+
+#[test]
+fn malformed_requests_are_typed_not_panics() {
+    for bytes in [
+        &b"not json"[..],
+        b"[]",
+        b"{\"kind\": 7}",
+        b"{\"kind\": \"latency\", \"tiles\": \"many\"}",
+        b"{\"kind\": \"latency\", \"seed\": -1}",
+        b"{\"kind\": \"latency\", \"seed\": 1.5}",
+        b"{\"kind\": \"contention\", \"pattern\": \"zipf:\"}",
+        b"{\"kind\": \"latency\", \"tiles\": 64, \"k\": 100}",
+        b"{\"kind\": \"latency\", \"unknown_member\": 1}",
+        b"\xff\xfe",
+    ] {
+        let err = Request::from_bytes(bytes).unwrap_err();
+        // Every one of these is a client bug with a printable message,
+        // never an overload.
+        assert!(!err.is_overload(), "{err}");
+        assert!(!format!("{err}").is_empty());
+    }
+}
