@@ -1,0 +1,77 @@
+"""Bit-exact Python port of the repo's deterministic RNG stack
+(``rust/src/util/rng.rs`` and ``rust/src/coordinator/sweep.rs``):
+splitmix64 seeding, xoshiro256** generation, Lemire's multiply-shift
+``below`` with rejection, and the ``point_seed`` mixer.
+
+This is the ONE shared RNG module for every Python cross-check; tests
+must import it rather than re-implementing the stream. Goldens pinning
+the exact draws live in ``rust/tests/golden/pyparity_rng.json``.
+"""
+
+MASK64 = (1 << 64) - 1
+
+
+def _splitmix64(state):
+    """One splitmix64 step. Returns (new_state, output)."""
+    state = (state + 0x9E3779B97F4A7C15) & MASK64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    return state, z ^ (z >> 31)
+
+
+def mix64(z):
+    """splitmix64 finaliser (``coordinator::sweep::mix64``)."""
+    z = (z + 0x9E3779B97F4A7C15) & MASK64
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    return z ^ (z >> 31)
+
+
+def point_seed(sweep_seed, canonical_key):
+    """``coordinator::point_seed``: the per-point stream seed."""
+    return mix64((sweep_seed ^ mix64(canonical_key)) & MASK64)
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK64
+
+
+class Rng:
+    """xoshiro256** seeded from four splitmix64 draws — draw-for-draw
+    identical to ``util::rng::Rng``."""
+
+    def __init__(self, seed):
+        state = seed & MASK64
+        s = []
+        for _ in range(4):
+            state, out = _splitmix64(state)
+            s.append(out)
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[1] * 5) & MASK64, 7) * 9) & MASK64
+        t = (s[1] << 17) & MASK64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def below(self, bound):
+        """Uniform in [0, bound) — Lemire multiply-shift, with the same
+        rejection rule as the Rust implementation."""
+        assert bound > 0, "below(0)"
+        threshold = (MASK64 - bound + 1) % bound
+        while True:
+            x = self.next_u64()
+            m = x * bound
+            lo = m & MASK64
+            if lo >= bound or lo >= threshold:
+                return m >> 64
+
+    def choose(self, xs):
+        return xs[self.below(len(xs))]

@@ -1,0 +1,326 @@
+"""Independent Python re-implementation of the fuzz-case generator
+(``rust/src/workload/fuzzgen.rs``), cross-checked against the Rust
+golden: the first 100 cases of sweep seed 0 must render to sources with
+identical FNV-1a digests. The two implementations share nothing but
+this file's fidelity — a silent drift in the Rust RNG, the draw order,
+or the renderer breaks the digests here.
+
+The port mirrors the Rust routine draw for draw; change them in
+lockstep (the module docs on the Rust side say the same).
+"""
+
+import json
+from pathlib import Path
+
+import pytest
+
+from tests.memclos_rng import Rng, point_seed
+
+GOLDEN = (
+    Path(__file__).resolve().parents[2] / "rust" / "tests" / "golden" / "pyparity_fuzzgen.json"
+)
+
+# Same order as the Rust BIN_OPS / CMP_OPS arrays; tokens double as the
+# op representation so rendering needs no separate mapping.
+BIN_OPS = ["+", "-", "*", "/", "%", "<", ">", "<=", ">=", "==", "!=", "&", "|", "^"]
+CMP_OPS = ["<", ">", "<=", ">=", "==", "!="]
+
+# Expressions are tuples: ("int", v) | ("local", name) | ("gvar", name)
+# | ("gidx", name, idx) | ("bin", op, lhs, rhs) | ("call", name, args).
+# Statements: ("decl", name, expr|None) | ("alocal", name, e)
+# | ("aglobal", name, e) | ("aidx", name, idx, e)
+# | ("if", cond, then, els) | ("while", cond, body)
+# | ("return", e) | ("exprstmt", e).
+
+
+class Gen:
+    def __init__(self, seed, index):
+        self.r = Rng(point_seed(seed, index))
+        self.scalars = []
+        self.arrays = []  # (name, power-of-two size)
+        self.callable = []  # (name, arity)
+        self.locals = []
+        self.local_counter = 0
+        self.fuel_counter = 0
+        self.budget = 0
+
+    def program(self):
+        globals_, functions = [], []
+        n_scalars = 1 + self.r.below(3)
+        for i in range(n_scalars):
+            name = f"g{i}"
+            self.scalars.append(name)
+            globals_.append((name, 1))
+        n_arrays = 1 + self.r.below(2)
+        for i in range(n_arrays):
+            name = f"a{i}"
+            size = 8 << self.r.below(4)  # 8, 16, 32 or 64
+            self.arrays.append((name, size))
+            globals_.append((name, size))
+        n_helpers = self.r.below(3)
+        for i in range(n_helpers):
+            name = f"f{i}"
+            arity = self.r.below(3)
+            params = [f"p{j}" for j in range(arity)]
+            body = self.function_body(params, 6 + self.r.below(10))
+            self.callable.append((name, arity))
+            functions.append((name, params, body))
+        body = self.function_body([], 8 + self.r.below(12))
+        functions.append(("main", [], body))
+        return globals_, functions
+
+    def function_body(self, params, budget):
+        self.locals = list(params)
+        self.local_counter = 0
+        self.fuel_counter = 0
+        self.budget = budget
+        body = []
+        self.block(body, 0)
+        body.append(("return", self.expr(2)))
+        return body
+
+    def block(self, out, loop_depth):
+        n = 1 + self.r.below(4)
+        for _ in range(n):
+            if self.budget == 0:
+                break
+            self.budget -= 1
+            self.emit_stmt(out, loop_depth)
+
+    def emit_stmt(self, out, loop_depth):
+        arm = self.r.below(8)
+        if arm in (0, 1):
+            e = self.expr(2)
+            out.append(("decl", self.fresh_local(), e))
+        elif arm == 2:
+            if not self.locals:
+                e = self.expr(2)
+                out.append(("decl", self.fresh_local(), e))
+            else:
+                name = self.r.choose(self.locals)
+                out.append(("alocal", name, self.expr(2)))
+        elif arm == 3:
+            name = self.r.choose(self.scalars)
+            out.append(("aglobal", name, self.expr(2)))
+        elif arm == 4:
+            name, size = self.r.choose(self.arrays)
+            idx = self.masked_index(size)
+            out.append(("aidx", name, idx, self.expr(2)))
+        elif arm == 5:
+            cond = self.cmp_expr()
+            scope = len(self.locals)
+            then = []
+            self.block(then, loop_depth)
+            del self.locals[scope:]
+            els = []
+            if self.r.below(2) == 0:
+                self.block(els, loop_depth)
+                del self.locals[scope:]
+            out.append(("if", cond, then, els))
+        elif arm == 6:
+            if loop_depth < 2:
+                # Fuel-bounded loop: the fuel decl stays in the
+                # enclosing scope; the body burns one fuel first.
+                fuel = f"fuel{self.fuel_counter}"
+                self.fuel_counter += 1
+                initial = 1 + self.r.below(8)
+                out.append(("decl", fuel, ("int", initial)))
+                self.locals.append(fuel)
+                cond = (
+                    "bin",
+                    "&",
+                    self.cmp_expr(),
+                    ("bin", "<", ("int", 0), ("local", fuel)),
+                )
+                scope = len(self.locals)
+                body = [("alocal", fuel, ("bin", "-", ("local", fuel), ("int", 1)))]
+                self.block(body, loop_depth + 1)
+                del self.locals[scope:]
+                out.append(("while", cond, body))
+            else:
+                name = self.r.choose(self.scalars)
+                out.append(("aglobal", name, self.expr(2)))
+        else:
+            if not self.callable:
+                name = self.r.choose(self.scalars)
+                out.append(("aglobal", name, self.expr(2)))
+            else:
+                out.append(("exprstmt", self.call_expr(2)))
+
+    def fresh_local(self):
+        name = f"v{self.local_counter}"
+        self.local_counter += 1
+        self.locals.append(name)
+        return name
+
+    def masked_index(self, size):
+        return ("bin", "&", self.expr(2), ("int", size - 1))
+
+    def cmp_expr(self):
+        op = self.r.choose(CMP_OPS)
+        lhs = self.expr(2)
+        rhs = self.expr(2)
+        return ("bin", op, lhs, rhs)
+
+    def call_expr(self, depth):
+        name, arity = self.r.choose(self.callable)
+        args = [self.expr(max(depth - 1, 0)) for _ in range(arity)]
+        return ("call", name, args)
+
+    def expr(self, depth):
+        if depth == 0:
+            return self.leaf()
+        arm = self.r.below(10)
+        if arm <= 3:
+            return self.leaf()
+        if arm <= 6:
+            op = self.r.choose(BIN_OPS)
+            if op in ("/", "%"):
+                # Bounded dividend, small nonzero constant divisor —
+                # mirrors the Rust step-limit guard exactly.
+                dividend = ("bin", "&", self.expr(depth - 1), ("int", 1023))
+                divisor = ("int", 1 + self.r.below(7))
+                return ("bin", op, dividend, divisor)
+            lhs = self.expr(depth - 1)
+            rhs = self.expr(depth - 1)
+            return ("bin", op, lhs, rhs)
+        if arm == 7:
+            if not self.arrays:
+                return self.leaf()
+            name, size = self.r.choose(self.arrays)
+            return ("gidx", name, self.masked_index(size))
+        if arm == 8:
+            if not self.callable:
+                return self.leaf()
+            return self.call_expr(depth)
+        return self.leaf()
+
+    def leaf(self):
+        arm = self.r.below(6)
+        if arm in (0, 1):
+            return ("int", self.r.below(65))
+        if arm in (2, 3):
+            if not self.locals:
+                return ("int", self.r.below(65))
+            return ("local", self.r.choose(self.locals))
+        if arm == 4:
+            return ("gvar", self.r.choose(self.scalars))
+        return ("int", self.r.below(1025))
+
+
+def generate(seed, index):
+    return Gen(seed, index).program()
+
+
+# --- renderer (mirrors fuzzgen::render byte for byte) -----------------
+
+
+def render(program):
+    globals_, functions = program
+    out = []
+    for name, size in globals_:
+        if size == 1:
+            out.append(f"global {name};\n")
+        else:
+            out.append(f"global {name}[{size}];\n")
+    for name, params, body in functions:
+        out.append(f"fn {name}({', '.join(params)}) {{\n")
+        render_block(body, 1, out)
+        out.append("}\n")
+    return "".join(out)
+
+
+def render_block(stmts, level, out):
+    for stmt in stmts:
+        render_stmt(stmt, level, out)
+
+
+def render_stmt(stmt, level, out):
+    pad = "    " * level
+    kind = stmt[0]
+    if kind == "decl":
+        _, name, e = stmt
+        if e is None:
+            out.append(f"{pad}var {name};\n")
+        else:
+            out.append(f"{pad}var {name} = {render_expr(e)};\n")
+    elif kind in ("alocal", "aglobal"):
+        _, name, e = stmt
+        out.append(f"{pad}{name} = {render_expr(e)};\n")
+    elif kind == "aidx":
+        _, name, idx, e = stmt
+        out.append(f"{pad}{name}[{render_expr(idx)}] = {render_expr(e)};\n")
+    elif kind == "if":
+        _, cond, then, els = stmt
+        out.append(f"{pad}if ({render_expr(cond)}) {{\n")
+        render_block(then, level + 1, out)
+        if not els:
+            out.append(f"{pad}}}\n")
+        else:
+            out.append(f"{pad}}} else {{\n")
+            render_block(els, level + 1, out)
+            out.append(f"{pad}}}\n")
+    elif kind == "while":
+        _, cond, body = stmt
+        out.append(f"{pad}while ({render_expr(cond)}) {{\n")
+        render_block(body, level + 1, out)
+        out.append(f"{pad}}}\n")
+    elif kind == "return":
+        out.append(f"{pad}return {render_expr(stmt[1])};\n")
+    else:  # exprstmt
+        out.append(f"{pad}{render_expr(stmt[1])};\n")
+
+
+def render_expr(e):
+    kind = e[0]
+    if kind == "int":
+        v = e[1]
+        return str(v) if v >= 0 else f"(0 - {-v})"
+    if kind in ("local", "gvar"):
+        return e[1]
+    if kind == "gidx":
+        return f"{e[1]}[{render_expr(e[2])}]"
+    if kind == "bin":
+        return f"({render_expr(e[2])} {e[1]} {render_expr(e[3])})"
+    args = ", ".join(render_expr(a) for a in e[2])
+    return f"{e[1]}({args})"
+
+
+def fnv1a64(data):
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) & ((1 << 64) - 1)
+    return h
+
+
+def case_digest(seed, index):
+    return fnv1a64(render(generate(seed, index)).encode())
+
+
+# --- the cross-check --------------------------------------------------
+
+
+def _load():
+    if not GOLDEN.exists():
+        pytest.skip(f"golden not seeded yet: {GOLDEN}")
+    return json.loads(GOLDEN.read_text())
+
+
+def test_first_case_renders_to_the_exact_rust_source():
+    doc = _load()
+    got = render(generate(int(doc["seed"]), 0))
+    assert got == doc["sample_case_0"], "case 0 source text diverged from the Rust renderer"
+
+
+def test_first_100_case_digests_match_the_rust_generator():
+    doc = _load()
+    seed = int(doc["seed"])
+    want = [int(v) for v in doc["digests"]]
+    assert len(want) == doc["cases"]
+    mismatches = [
+        (i, hex(case_digest(seed, i)), hex(w))
+        for i, w in enumerate(want)
+        if case_digest(seed, i) != w
+    ]
+    assert not mismatches, f"{len(mismatches)} of {len(want)} case digests diverge: {mismatches[:3]}"

@@ -1,0 +1,137 @@
+//! Bench: the generative fuzzing + snapshot subsystem — case
+//! generation/rendering throughput, the full differential check
+//! (legacy vs fast on both backends), and the snapshot
+//! serialise → parse → rebuild round trip.
+//!
+//! Writes the machine-readable perf trajectory to `BENCH_fuzz.json`
+//! (override with `--json PATH`; same schema family as
+//! `BENCH_hotpath.json`, emitted by `rust/scripts/bench_hotpath.sh`,
+//! uploaded by CI) and then runs the oracle smoke: a bounded fuzz run
+//! must be divergence-free and the snapshot-slice oracle must pass on
+//! its sampled cases.
+//!
+//! Quick smoke mode: set `MEMCLOS_BENCH_QUICK=1` (what
+//! `rust/scripts/bench_hotpath.sh` does).
+
+use std::path::PathBuf;
+
+use memclos::cc::{compile, corpus, Backend};
+use memclos::emulation::{EmulationSetup, TopologyKind};
+use memclos::isa::decode::predecode;
+use memclos::isa::interp::{EmulatedChannelMemory, MachineState};
+use memclos::isa::snapshot::{
+    program_fingerprint, rebuild_memory, run_fast_slice, BackendSnap, Snapshot, Tier,
+};
+use memclos::util::bench::{black_box, Bench};
+use memclos::workload::fuzzgen::{self, DiffHarness, FuzzConfig};
+
+fn json_path() -> PathBuf {
+    let args: Vec<String> = std::env::args().collect();
+    for w in args.windows(2) {
+        if w[0] == "--json" {
+            return PathBuf::from(&w[1]);
+        }
+    }
+    PathBuf::from("BENCH_fuzz.json")
+}
+
+fn main() {
+    let quick = std::env::var("MEMCLOS_BENCH_QUICK").is_ok();
+    let mut b = Bench::new("fuzz");
+
+    // Generation + rendering throughput (the pure-CPU side of a fuzz
+    // campaign; no execution).
+    const GEN_BATCH: u64 = 64;
+    let mut gen_index = 0u64;
+    b.iter_items("generate-render", GEN_BATCH, || {
+        let mut bytes = 0usize;
+        for _ in 0..GEN_BATCH {
+            bytes += fuzzgen::render(&fuzzgen::generate(0xBE7C, gen_index)).len();
+            gen_index += 1;
+        }
+        black_box(bytes)
+    });
+
+    // Full differential check throughput: compile on both backends,
+    // run every tier, compare stats/registers/errors.
+    let harness = DiffHarness::new().expect("harness build");
+    let sources: Vec<String> =
+        (0..16).map(|i| fuzzgen::render(&fuzzgen::generate(0xD1FF, i))).collect();
+    b.iter_items("diff-check", sources.len() as u64, || {
+        let mut clean = 0usize;
+        for src in &sources {
+            if harness.check_source(src).is_ok() {
+                clean += 1;
+            }
+        }
+        assert_eq!(clean, sources.len(), "bench corpus must be divergence-free");
+        black_box(clean)
+    });
+
+    // Snapshot round trip on a genuine paused run: serialise, parse,
+    // verify, rebuild the memory, all in one measured unit.
+    let prog = corpus::all().into_iter().find(|p| p.name == "sieve").unwrap();
+    let compiled = compile(prog.source, Backend::Emulated).unwrap();
+    let decoded = predecode(&compiled.code).unwrap();
+    let setup = EmulationSetup::default_tech(TopologyKind::Clos, 256, 64, 128).unwrap();
+    let snap = {
+        let mut mem = EmulatedChannelMemory::new(setup);
+        let blank = MachineState { local: vec![0i64; 1 << 16], ..MachineState::default() };
+        let part = run_fast_slice(&decoded, &mut mem, &blank, 50_000_000, Some(400));
+        assert_eq!(part.outcome, Ok(false), "sieve must pause at 400 cycles");
+        Snapshot {
+            tier: Tier::Fast,
+            backend: BackendSnap::of_emulated(&mem),
+            space_words: mem.setup().map.space_words(),
+            max_steps: 50_000_000,
+            program: "sieve".into(),
+            program_fnv: program_fingerprint(&compiled.code),
+            state: part.state,
+            pages: Snapshot::pages_of(mem.store()),
+        }
+    };
+    let blob = snap.to_bytes();
+    b.iter("snapshot-save", || black_box(snap.to_bytes().len()));
+    b.iter("snapshot-restore", || {
+        let parsed = Snapshot::from_bytes(&blob).expect("round trip");
+        let mem = rebuild_memory(&parsed).expect("rebuild");
+        black_box((parsed.state.stats.cycles, std::mem::size_of_val(&mem)))
+    });
+
+    b.report();
+    println!("\nthroughput (items/s):");
+    for m in b.results() {
+        if m.items > 0 {
+            println!("  {:<24} {:>14.0}", m.name, m.throughput());
+        }
+    }
+
+    // Perf trajectory lands on disk before the assertions run, so a
+    // regression still records its numbers.
+    let path = json_path();
+    b.write_json(&path).expect("write bench json");
+    println!("wrote {}", path.display());
+
+    // Oracle smoke: a bounded fuzz campaign (differential + snapshot
+    // slices) is divergence-free, and the resumed slice from the blob
+    // above finishes with the corpus-expected result.
+    let cases = if quick { 64 } else { 256 };
+    let cfg = FuzzConfig { out_dir: None, ..FuzzConfig::new(0, cases) };
+    let summary = fuzzgen::run_fuzz(&cfg).expect("fuzz run");
+    assert_eq!(summary.cases, cases, "early stop means a divergence");
+    assert!(
+        summary.failures.is_empty(),
+        "divergences in the smoke run: {}",
+        summary.failures.len()
+    );
+    assert!(summary.snapshot_checks > 0, "snapshot oracle must sample cases");
+    let parsed = Snapshot::from_bytes(&blob).unwrap();
+    let mut mem = rebuild_memory(&parsed).unwrap();
+    let done = run_fast_slice(&decoded, mem.as_dyn(), &parsed.state, parsed.max_steps, None);
+    assert_eq!(done.outcome, Ok(true), "resume must halt");
+    assert_eq!(done.state.regs[0], prog.expected.unwrap(), "resumed sieve result");
+    println!(
+        "oracle smoke OK ({} cases, {} snapshot slices, 0 divergences)",
+        summary.cases, summary.snapshot_checks
+    );
+}

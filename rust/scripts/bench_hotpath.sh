@@ -10,6 +10,8 @@
 #   BENCH_serve.json      — serve layer: frame codec, request parse,
 #                           Service::handle hot/cold, plus a live
 #                           serve/loadgen smoke over real TCP
+#   BENCH_fuzz.json       — fuzz-case generation, the differential
+#                           harness, and the snapshot round trip
 #
 # Schema (all files): {"bench": <group>,
 #          "results": [{"name", "median_ns", "addrs_per_s"}]}
@@ -26,6 +28,7 @@ INTERP_OUT="$REPO_ROOT/BENCH_interp.json"
 CONT_OUT="$REPO_ROOT/BENCH_contention.json"
 FAULTS_OUT="$REPO_ROOT/BENCH_faults.json"
 SERVE_OUT="$REPO_ROOT/BENCH_serve.json"
+FUZZ_OUT="$REPO_ROOT/BENCH_fuzz.json"
 
 if [[ "${1:-}" != "--full" ]]; then
     export MEMCLOS_BENCH_QUICK=1
@@ -71,6 +74,13 @@ else
 fi
 
 echo "faults trajectory written to $FAULTS_OUT"
+
+if cargo bench --bench fuzz -- --json "$FUZZ_OUT"; then
+    echo "fuzz trajectory written to $FUZZ_OUT"
+else
+    echo "(cargo bench fuzz failed; running the CLI fuzz smoke instead — no $FUZZ_OUT)" >&2
+    cargo run --release --bin memclos -- fuzz --cases 256 --seed 0 --no-shrink
+fi
 
 # Serve-layer microbenches (frame codec, request parse, Service::handle
 # hot/cold). The live smoke below overwrites SERVE_OUT with the fuller

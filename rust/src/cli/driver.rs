@@ -21,11 +21,18 @@ use crate::cc::{compile, Backend};
 use crate::config::{self, Doc};
 use crate::coordinator::{default_jobs, SweepPoint};
 use crate::dram::{measure_random_latency, DramConfig};
-use crate::emulation::{SequentialMachine, TopologyKind};
+use crate::emulation::{EmulationSetup, SequentialMachine, TopologyKind};
 use crate::fault::FaultPlan;
 use crate::figures::{self, FigOpts};
 use crate::isa::decode::{predecode, FastMachine};
-use crate::isa::interp::{DirectMemory, EmulatedChannelMemory, Machine, RunStats};
+use crate::isa::interp::{
+    DirectMemory, EmulatedChannelMemory, ExecCursor, Machine, MachineState, MemorySystem,
+    RunOutcome, RunStats,
+};
+use crate::isa::snapshot::{
+    program_fingerprint, rebuild_memory, run_fast_slice, run_legacy_slice, BackendSnap,
+    RebuiltMemory, Snapshot, Tier,
+};
 use crate::serve::{
     install_sigint, sigint_seen, LoadgenOpts, ServeConfig, Server, ServerConfig, Service,
 };
@@ -92,6 +99,29 @@ COMMANDS
     --self-host                 start an in-process server on an
                                 ephemeral port, drive it, drain it
     --out PATH                  write the BENCH_serve.json report
+  fuzz [--cases N --seed S]     generative differential fuzzing: typed
+                                random miniC programs run on every
+                                execution tier x both memory backends,
+                                with a snapshot-slice resume oracle
+                                every 16th case; divergences are
+                                greedily shrunk (--no-shrink to skip)
+                                and written as replayable artifacts
+    --out DIR                   artifact directory (default .)
+    --max-failures N            stop after N divergences (default 5)
+    --replay PATH               re-run one artifact (conflicts with
+                                --cases)
+  snapshot save --program NAME --at CYCLES
+                                pause a corpus program at a cycle budget
+                                and write its complete machine state
+                                (versioned, checksummed binary)
+    --backend direct|emulated   memory backend (default emulated)
+    --legacy                    snapshot the legacy enum-match machine
+    --topo/--tiles/--mem/--k    emulated design point (defaults
+                                clos/256/64/128)
+    --out FILE                  snapshot path (default NAME.snap)
+  snapshot resume --in FILE     resume a snapshot to completion
+    --verify                    also rerun uninterrupted from cycle 0
+                                and assert bit-identical stats+registers
   selfcheck                     prove XLA artifact == native model
   sweep --tiles N --mem KB      latency sweep over emulation sizes
   bench-hotpath [--out PATH]    measure the access hot path, write BENCH_hotpath.json
@@ -603,6 +633,8 @@ pub fn run(raw: Vec<String>) -> Result<()> {
                 print!("{}", figures::faults::render(&rows));
             }
         }
+        "fuzz" => fuzz_cmd(&args)?,
+        "snapshot" => snapshot_cmd(&args)?,
         "serve" => serve_cmd(&args, &doc, &tech)?,
         "loadgen" => loadgen_cmd(&args, &doc, &tech)?,
         "selfcheck" => selfcheck(&args, &tech)?,
@@ -669,6 +701,256 @@ pub fn run(raw: Vec<String>) -> Result<()> {
             }
         }
         other => return Err(usage_error(format!("unknown command `{other}` (try --help)"))),
+    }
+    Ok(())
+}
+
+/// `memclos fuzz`: the generative differential fuzzer (or a one-shot
+/// artifact replay). Divergences are runtime failures (exit 1); flag
+/// misuse is exit 2.
+fn fuzz_cmd(args: &Args) -> Result<()> {
+    if args.has("shrink") && args.has("no-shrink") {
+        return Err(usage_error("--shrink conflicts with --no-shrink"));
+    }
+    if let Some(path) = args.flag("replay") {
+        if args.flag("cases").is_some() {
+            return Err(usage_error(
+                "--replay re-runs one artifact; it conflicts with --cases",
+            ));
+        }
+        let path = std::path::Path::new(path);
+        return match crate::workload::fuzzgen::replay_file(path)? {
+            None => {
+                println!("replay {}: no divergence", path.display());
+                Ok(())
+            }
+            Some(d) => bail!("replay {}: divergence reproduces: {d}", path.display()),
+        };
+    }
+    let cases: u64 = args.get("cases", 1000u64)?;
+    if cases == 0 {
+        return Err(usage_error("--cases 0: need at least one case"));
+    }
+    let max_failures: usize = args.get("max-failures", 5usize)?;
+    if max_failures == 0 {
+        return Err(usage_error("--max-failures 0: need room for at least one failure"));
+    }
+    let cfg = crate::workload::FuzzConfig {
+        seed: args.get("seed", 0u64)?,
+        cases,
+        shrink: !args.has("no-shrink"),
+        out_dir: Some(std::path::PathBuf::from(args.flag("out").unwrap_or("."))),
+        max_failures,
+    };
+    let summary = crate::workload::run_fuzz(&cfg)?;
+    println!(
+        "fuzz: {} cases (seed {}), {} snapshot-slice checks, {} divergences",
+        summary.cases,
+        cfg.seed,
+        summary.snapshot_checks,
+        summary.failures.len()
+    );
+    for f in &summary.failures {
+        println!("  case {}: {}", f.index, f.divergence);
+        if let Some(p) = &f.artifact {
+            println!("    artifact: {}", p.display());
+        }
+    }
+    if !summary.failures.is_empty() {
+        bail!("{} of {} cases diverged", summary.failures.len(), summary.cases);
+    }
+    Ok(())
+}
+
+/// `memclos snapshot {save,resume}`.
+fn snapshot_cmd(args: &Args) -> Result<()> {
+    let sub = args
+        .positional
+        .first()
+        .ok_or_else(|| usage_error("snapshot needs a subcommand: save | resume"))?;
+    match sub.as_str() {
+        "save" => snapshot_save(args),
+        "resume" => snapshot_resume(args),
+        other => {
+            Err(usage_error(format!("unknown snapshot subcommand `{other}` (save | resume)")))
+        }
+    }
+}
+
+/// Build the memory a snapshot run executes over, from the command
+/// line (the emulated point must be a `default_tech` design so resume
+/// can rebuild and verify it from the recorded identity alone).
+fn snapshot_memory(args: &Args) -> Result<RebuiltMemory> {
+    match args.flag("backend").unwrap_or("emulated") {
+        "direct" => Ok(RebuiltMemory::Direct(DirectMemory::new(
+            SequentialMachine::paper_figures(false),
+            1 << 24,
+        ))),
+        "emulated" => {
+            let kind = TopologyKind::parse(args.flag("topo").unwrap_or("clos"))
+                .map_err(|e| usage_error(format!("{e:#}")))?;
+            let setup = EmulationSetup::default_tech(
+                kind,
+                args.get("tiles", 256usize)?,
+                args.get("mem", 64u32)?,
+                args.get("k", 128usize)?,
+            )?;
+            Ok(RebuiltMemory::Emulated(EmulatedChannelMemory::new(setup)))
+        }
+        other => Err(usage_error(format!(
+            "--backend must be `direct` or `emulated`, not `{other}`"
+        ))),
+    }
+}
+
+/// `memclos snapshot save`: run a corpus program to a cycle budget and
+/// freeze the complete machine state.
+fn snapshot_save(args: &Args) -> Result<()> {
+    let name = args
+        .flag("program")
+        .ok_or_else(|| usage_error("snapshot save needs --program NAME"))?
+        .to_string();
+    let at: u64 = args.get("at", 0u64)?;
+    if at == 0 {
+        return Err(usage_error("snapshot save needs --at CYCLES (a positive pause budget)"));
+    }
+    let prog = crate::cc::corpus::all()
+        .into_iter()
+        .find(|p| p.name == name)
+        .ok_or_else(|| {
+            let names: Vec<&str> = crate::cc::corpus::all().iter().map(|p| p.name).collect();
+            usage_error(format!("unknown program `{name}` (available: {})", names.join(", ")))
+        })?;
+    let mut memory = snapshot_memory(args)?;
+    let cc_backend = match &memory {
+        RebuiltMemory::Direct(_) => Backend::Direct,
+        RebuiltMemory::Emulated(_) => Backend::Emulated,
+    };
+    let compiled = compile(prog.source, cc_backend)?;
+    let legacy = args.has("legacy");
+    let local_words = 1 << 16;
+
+    let mut cursor = ExecCursor::default();
+    let (state, max_steps, outcome) = if legacy {
+        let mut m = Machine::new(memory.as_dyn(), local_words);
+        let outcome = m.run_until(&compiled.code, &mut cursor, Some(at))?;
+        (m.export_state(&cursor), m.max_steps, outcome)
+    } else {
+        let decoded = predecode(&compiled.code)?;
+        let mut mem = memory.as_dyn();
+        let mut m = FastMachine::new(&mut mem, local_words);
+        let outcome = m.run_until(&decoded, &mut cursor, Some(at))?;
+        (m.export_state(&cursor), m.max_steps, outcome)
+    };
+    if matches!(outcome, RunOutcome::Halted) {
+        bail!(
+            "program `{name}` halted after {} cycles, before the --at {at} pause point",
+            cursor.stats.cycles
+        );
+    }
+
+    let (backend, pages, space_words) = match &memory {
+        RebuiltMemory::Direct(m) => {
+            (BackendSnap::of_direct(m), Snapshot::pages_of(m.store()), m.space_words())
+        }
+        RebuiltMemory::Emulated(m) => {
+            (BackendSnap::of_emulated(m), Snapshot::pages_of(m.store()), m.space_words())
+        }
+    };
+    let snap = Snapshot {
+        tier: if legacy { Tier::Legacy } else { Tier::Fast },
+        backend,
+        space_words,
+        max_steps,
+        program: name.clone(),
+        program_fnv: program_fingerprint(&compiled.code),
+        state,
+        pages,
+    };
+    let out = args.flag("out").map(|s| s.to_string()).unwrap_or_else(|| format!("{name}.snap"));
+    std::fs::write(&out, snap.to_bytes()).with_context(|| format!("writing {out}"))?;
+    println!(
+        "wrote {out}: `{name}` on the {} backend, {} tier, paused at {} cycles ({} instructions, {} pages)",
+        snap.backend.label(),
+        snap.tier.label(),
+        cursor.stats.cycles,
+        cursor.stats.instructions,
+        snap.pages.len()
+    );
+    Ok(())
+}
+
+/// `memclos snapshot resume`: rebuild a snapshot's memory and machine
+/// and run to completion; `--verify` additionally reruns from cycle 0
+/// and asserts the two runs are bit-identical.
+fn snapshot_resume(args: &Args) -> Result<()> {
+    let path = args.flag("in").ok_or_else(|| usage_error("snapshot resume needs --in FILE"))?;
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    let snap = Snapshot::from_bytes(&bytes).with_context(|| format!("loading snapshot {path}"))?;
+    let prog = crate::cc::corpus::all()
+        .into_iter()
+        .find(|p| p.name == snap.program)
+        .ok_or_else(|| {
+            anyhow::anyhow!("snapshot program `{}` is not in the corpus", snap.program)
+        })?;
+    let cc_backend = match &snap.backend {
+        BackendSnap::Direct { .. } => Backend::Direct,
+        BackendSnap::Emulated { .. } => Backend::Emulated,
+    };
+    let compiled = compile(prog.source, cc_backend)?;
+    snap.check_program(&compiled.code)?;
+    let decoded = match snap.tier {
+        Tier::Fast => Some(predecode(&compiled.code)?),
+        Tier::Legacy => None,
+    };
+    let run_from = |state: &MachineState, memory: &mut RebuiltMemory| match &decoded {
+        Some(d) => run_fast_slice(d, memory.as_dyn(), state, snap.max_steps, None),
+        None => run_legacy_slice(&compiled.code, memory.as_dyn(), state, snap.max_steps, None),
+    };
+
+    let mut memory = rebuild_memory(&snap)?;
+    let resumed = run_from(&snap.state, &mut memory);
+    match &resumed.outcome {
+        Ok(true) => {}
+        Ok(false) => bail!("unbounded resume paused"),
+        Err(e) => bail!("resumed run failed: {e}"),
+    }
+    println!(
+        "resumed `{}` from {path} ({} tier, {} backend): halted at {} cycles, {} instructions, r0 = {}",
+        snap.program,
+        snap.tier.label(),
+        snap.backend.label(),
+        resumed.state.stats.cycles,
+        resumed.state.stats.instructions,
+        resumed.state.regs[0]
+    );
+    if args.has("verify") {
+        // An uninterrupted run of the same program on a blank memory of
+        // the same design, with the same local-memory size.
+        let blank = Snapshot { state: MachineState::default(), pages: Vec::new(), ..snap.clone() };
+        let mut fresh = rebuild_memory(&blank)?;
+        let start = MachineState {
+            local: vec![0; snap.state.local.len()],
+            ..MachineState::default()
+        };
+        let reference = run_from(&start, &mut fresh);
+        let ok = matches!(reference.outcome, Ok(true))
+            && reference.state.stats == resumed.state.stats
+            && reference.state.regs == resumed.state.regs;
+        if ok {
+            println!(
+                "verify OK: resumed run is bit-identical to an uninterrupted run ({} cycles)",
+                resumed.state.stats.cycles
+            );
+        } else {
+            bail!(
+                "verify FAILED: resumed {:?} r0={} vs uninterrupted {:?} r0={}",
+                resumed.state.stats,
+                resumed.state.regs[0],
+                reference.state.stats,
+                reference.state.regs[0]
+            );
+        }
     }
     Ok(())
 }

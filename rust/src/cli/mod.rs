@@ -53,7 +53,7 @@ pub struct Args {
 /// Flags that take no value.
 const BOOLEAN_FLAGS: &[&str] = &[
     "help", "quick", "tsv", "no-plot", "verbose", "json", "legacy", "all", "shutdown",
-    "self-host",
+    "self-host", "shrink", "no-shrink", "verify",
 ];
 
 impl Args {

@@ -42,7 +42,7 @@
 use anyhow::{bail, ensure, Result};
 
 use super::inst::Inst;
-use super::interp::{MemorySystem, RunStats};
+use super::interp::{ChanSnap, ExecCursor, MachineState, MemorySystem, RunOutcome, RunStats};
 use crate::emulation::controller::{MSG_READ, MSG_WRITE};
 
 /// One pre-validated, pre-resolved operation.
@@ -364,6 +364,7 @@ fn resolve_target(pc: usize, offset: i32, n: usize) -> Result<usize> {
 /// How a run left the dispatch loop.
 enum Exit {
     Halted,
+    Paused,
     StepLimit,
     RetEmptyStack,
     LocalOob(i64),
@@ -447,18 +448,93 @@ impl<'m, M: MemorySystem> FastMachine<'m, M> {
     /// trap out of the dispatch loop and are converted at this
     /// boundary, with the legacy interpreter's error messages.
     pub fn run(&mut self, prog: &DecodedProgram) -> Result<RunStats> {
+        let mut cursor = ExecCursor::default();
+        match self.run_inner::<false>(prog, &mut cursor, u64::MAX)? {
+            RunOutcome::Halted => Ok(cursor.stats),
+            RunOutcome::Paused => unreachable!("unbounded run cannot pause"),
+        }
+    }
+
+    /// Run from `cursor` until `Halt`, an error, or — when
+    /// `cycle_limit` is given — the first op boundary at or past that
+    /// many cycles. The unbounded path monomorphises the limit check
+    /// away, so `run` keeps its hot-loop shape. The cursor's pc indexes
+    /// *decoded* ops (fused channel sequences are one op) — never mix
+    /// it with a legacy-machine cursor.
+    pub fn run_until(
+        &mut self,
+        prog: &DecodedProgram,
+        cursor: &mut ExecCursor,
+        cycle_limit: Option<u64>,
+    ) -> Result<RunOutcome> {
+        match cycle_limit {
+            Some(limit) => self.run_inner::<true>(prog, cursor, limit),
+            None => self.run_inner::<false>(prog, cursor, u64::MAX),
+        }
+    }
+
+    /// Export the machine-side state at a pause cursor. The fast tier
+    /// executes fused channel sequences atomically, so the channel
+    /// state is always `Idle` at an op boundary.
+    pub fn export_state(&self, cursor: &ExecCursor) -> MachineState {
+        MachineState {
+            pc: cursor.pc,
+            stats: cursor.stats,
+            regs: self.regs,
+            local: self.local.clone(),
+            call_stack: self.call_stack.iter().map(|&p| p as u64).collect(),
+            chan: ChanSnap::Idle,
+        }
+    }
+
+    /// Restore exported state into this machine; returns the cursor to
+    /// continue from. Rejects state this tier cannot represent (a
+    /// mid-transaction channel, return pcs past `u32`).
+    pub fn import_state(&mut self, state: &MachineState) -> Result<ExecCursor> {
+        ensure!(
+            state.chan == ChanSnap::Idle,
+            "fast-tier resume with a pending channel transaction (take fast-tier \
+             snapshots at op boundaries, or resume on the legacy tier)"
+        );
+        self.regs = state.regs;
+        self.local = state.local.clone();
+        self.call_stack = state
+            .call_stack
+            .iter()
+            .map(|&p| {
+                u32::try_from(p).map_err(|_| anyhow::anyhow!("return pc {p} exceeds u32"))
+            })
+            .collect::<Result<_>>()?;
+        Ok(ExecCursor { pc: state.pc, stats: state.stats })
+    }
+
+    fn run_inner<const BOUNDED: bool>(
+        &mut self,
+        prog: &DecodedProgram,
+        cursor: &mut ExecCursor,
+        cycle_limit: u64,
+    ) -> Result<RunOutcome> {
         use DecodedOp::*;
         let ops = prog.ops();
+        ensure!(
+            (cursor.pc as usize) < ops.len(),
+            "resume pc {} out of range ({} decoded ops)",
+            cursor.pc,
+            ops.len()
+        );
         let max_steps = self.max_steps;
-        let mut insts: u64 = 0;
-        let mut cycles: u64 = 0;
-        let mut non_mem: u64 = 0;
-        let mut local_mem: u64 = 0;
-        let mut global_mem: u64 = 0;
-        let mut accesses: u64 = 0;
-        let mut pc: usize = 0;
+        let mut insts: u64 = cursor.stats.instructions;
+        let mut cycles: u64 = cursor.stats.cycles;
+        let mut non_mem: u64 = cursor.stats.non_memory;
+        let mut local_mem: u64 = cursor.stats.local_memory;
+        let mut global_mem: u64 = cursor.stats.global_memory;
+        let mut accesses: u64 = cursor.stats.global_accesses;
+        let mut pc: usize = cursor.pc as usize;
 
         let exit = loop {
+            if BOUNDED && cycles >= cycle_limit {
+                break Exit::Paused;
+            }
             if insts >= max_steps {
                 break Exit::StepLimit;
             }
@@ -655,7 +731,8 @@ impl<'m, M: MemorySystem> FastMachine<'m, M> {
             }
         };
 
-        let stats = RunStats {
+        cursor.pc = pc as u64;
+        cursor.stats = RunStats {
             instructions: insts,
             cycles,
             non_memory: non_mem,
@@ -664,7 +741,8 @@ impl<'m, M: MemorySystem> FastMachine<'m, M> {
             global_accesses: accesses,
         };
         match exit {
-            Exit::Halted => Ok(stats),
+            Exit::Halted => Ok(RunOutcome::Halted),
+            Exit::Paused => Ok(RunOutcome::Paused),
             Exit::StepLimit => bail!("step limit exceeded ({})", self.max_steps),
             Exit::RetEmptyStack => bail!("ret with empty stack"),
             Exit::LocalOob(idx) => {
@@ -893,6 +971,55 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn fast_pause_slices_match_uninterrupted_run() {
+        let setup = EmulationSetup::default_tech(TopologyKind::Clos, 1024, 128, 255).unwrap();
+        let mut prog = vec![LoadImm { d: 1, imm: 100 }, LoadImm { d: 2, imm: 42 }];
+        prog.extend(expand_store(2, 1));
+        prog.extend(expand_load(3, 1));
+        prog.push(Halt);
+        let decoded = predecode(&prog).unwrap();
+
+        let mut mem = EmulatedChannelMemory::new(setup.clone());
+        let mut fast = FastMachine::new(&mut mem, 16);
+        let want = fast.run(&decoded).unwrap();
+        let want_regs = *fast.regs();
+
+        // Slice the same run every 2 cycles, round-tripping state
+        // through export/import into a fresh machine each slice (the
+        // memory persists across slices here; full memory capture is
+        // `isa::snapshot`'s job).
+        let mut mem2 = EmulatedChannelMemory::new(setup);
+        let mut state = MachineState::default();
+        let mut slices = 0;
+        loop {
+            let mut m = FastMachine::new(&mut mem2, 16);
+            let mut cursor = m.import_state(&state).unwrap();
+            let limit = cursor.stats.cycles + 2;
+            let out = m.run_until(&decoded, &mut cursor, Some(limit)).unwrap();
+            state = m.export_state(&cursor);
+            slices += 1;
+            if out == RunOutcome::Halted {
+                break;
+            }
+            assert!(slices < 10_000, "pause loop runaway");
+        }
+        assert!(slices > 2, "expected several pause slices");
+        assert_eq!(state.stats, want);
+        assert_eq!(state.regs, want_regs);
+    }
+
+    #[test]
+    fn fast_import_rejects_pending_channel_state() {
+        let decoded = predecode(&[Halt]).unwrap();
+        let mut mem = direct(64);
+        let mut m = FastMachine::new(&mut mem, 4);
+        let state = MachineState { chan: ChanSnap::WrotePending, ..Default::default() };
+        assert!(m.import_state(&state).is_err());
+        let mut cursor = ExecCursor { pc: 99, ..Default::default() };
+        assert!(m.run_until(&decoded, &mut cursor, None).is_err());
     }
 
     #[test]

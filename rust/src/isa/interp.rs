@@ -53,6 +53,23 @@ pub trait MemorySystem {
     fn space_words(&self) -> u64;
 }
 
+// A mutable borrow of a memory system is a memory system. This is what
+// lets the differential fuzz harness hand a `&mut dyn MemorySystem` to
+// the monomorphised `FastMachine` alongside the legacy machine.
+impl<M: MemorySystem + ?Sized> MemorySystem for &mut M {
+    fn read(&mut self, addr: u64) -> (i64, u64) {
+        (**self).read(addr)
+    }
+
+    fn write(&mut self, addr: u64, value: i64) -> u64 {
+        (**self).write(addr, value)
+    }
+
+    fn space_words(&self) -> u64 {
+        (**self).space_words()
+    }
+}
+
 /// The sequential baseline's DRAM-backed global memory.
 pub struct DirectMemory {
     machine: SequentialMachine,
@@ -69,9 +86,31 @@ impl DirectMemory {
         Self { machine, store: PagedStore::with_capacity_words(space), space, cycles }
     }
 
+    /// DRAM memory with an explicit whole-cycle access charge — the
+    /// snapshot-resume constructor ([`crate::isa::snapshot`] records the
+    /// charge so a resumed run replays the identical cost model).
+    pub fn with_cycle_charge(machine: SequentialMachine, space: u64, cycles: u64) -> Self {
+        Self { machine, store: PagedStore::with_capacity_words(space), space, cycles }
+    }
+
     /// The baseline machine this memory charges.
     pub fn machine(&self) -> &SequentialMachine {
         &self.machine
+    }
+
+    /// Whole-cycle charge per global access.
+    pub fn global_cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// The backing word store (snapshot capture).
+    pub fn store(&self) -> &PagedStore {
+        &self.store
+    }
+
+    /// The backing word store, mutable (snapshot restore).
+    pub fn store_mut(&mut self) -> &mut PagedStore {
+        &mut self.store
     }
 }
 
@@ -112,6 +151,26 @@ impl EmulatedChannelMemory {
     /// The underlying design point.
     pub fn setup(&self) -> &EmulationSetup {
         &self.setup
+    }
+
+    /// The whole-cycle rank-latency LUT (snapshot identity check).
+    pub fn rank_cycles(&self) -> &[u64] {
+        &self.rank_cycles
+    }
+
+    /// log2 words-per-tile address shift.
+    pub fn shift(&self) -> u32 {
+        self.shift
+    }
+
+    /// The backing word store (snapshot capture).
+    pub fn store(&self) -> &PagedStore {
+        &self.store
+    }
+
+    /// The backing word store, mutable (snapshot restore).
+    pub fn store_mut(&mut self) -> &mut PagedStore {
+        &mut self.store
     }
 }
 
@@ -183,6 +242,87 @@ enum ChannelState {
     ReadPending { addr: u64 },
 }
 
+/// Serialisable mirror of the channel-protocol state — the legacy
+/// machine can pause mid-transaction, so snapshots must carry it. The
+/// fast machine fuses the §2.1 sequences and is always `Idle` at an
+/// instruction boundary.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ChanSnap {
+    #[default]
+    Idle,
+    GotTag(u32),
+    GotAddr { tag: u32, addr: u64 },
+    WrotePending,
+    ReadPending { addr: u64 },
+}
+
+impl From<ChannelState> for ChanSnap {
+    fn from(c: ChannelState) -> Self {
+        match c {
+            ChannelState::Idle => ChanSnap::Idle,
+            ChannelState::GotTag(t) => ChanSnap::GotTag(t),
+            ChannelState::GotAddr { tag, addr } => ChanSnap::GotAddr { tag, addr },
+            ChannelState::WrotePending => ChanSnap::WrotePending,
+            ChannelState::ReadPending { addr } => ChanSnap::ReadPending { addr },
+        }
+    }
+}
+
+impl From<ChanSnap> for ChannelState {
+    fn from(c: ChanSnap) -> Self {
+        match c {
+            ChanSnap::Idle => ChannelState::Idle,
+            ChanSnap::GotTag(t) => ChannelState::GotTag(t),
+            ChanSnap::GotAddr { tag, addr } => ChannelState::GotAddr { tag, addr },
+            ChanSnap::WrotePending => ChannelState::WrotePending,
+            ChanSnap::ReadPending { addr } => ChannelState::ReadPending { addr },
+        }
+    }
+}
+
+/// Where a paused run stands: the pc of the *next* instruction plus the
+/// statistics accumulated so far. `Default` is the start of a program.
+/// For the legacy [`Machine`] the pc indexes the source program; for
+/// [`crate::isa::FastMachine`] it indexes the decoded ops — the two are
+/// never interchangeable (snapshots record the tier).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExecCursor {
+    /// Index of the next instruction to execute.
+    pub pc: u64,
+    /// Statistics accumulated up to (not including) `pc`.
+    pub stats: RunStats,
+}
+
+/// How a bounded run left the dispatch loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunOutcome {
+    /// The program executed `Halt`; the cursor's stats are final.
+    Halted,
+    /// The cycle budget was reached at an instruction boundary; the
+    /// cursor resumes the run bit-identically.
+    Paused,
+}
+
+/// Complete machine-side execution state at a pause point — everything
+/// a fresh machine needs (besides the program and the global memory) to
+/// continue bit-identically. Produced by `export_state`, consumed by
+/// `import_state`, serialised by [`crate::isa::snapshot`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MachineState {
+    /// Next-instruction pc (tier-specific indexing; see [`ExecCursor`]).
+    pub pc: u64,
+    /// Statistics accumulated so far.
+    pub stats: RunStats,
+    /// The register file.
+    pub regs: [i64; 16],
+    /// Tile-local memory, in full.
+    pub local: Vec<i64>,
+    /// Return pcs (same indexing as `pc`).
+    pub call_stack: Vec<u64>,
+    /// Channel-protocol progress (always `Idle` on the fast tier).
+    pub chan: ChanSnap,
+}
+
 /// The interpreter: registers, local memory, call stack, and a global
 /// memory system.
 pub struct Machine<'m> {
@@ -224,10 +364,62 @@ impl<'m> Machine<'m> {
 
     /// Run a program to `Halt` (or error); returns the statistics.
     pub fn run(&mut self, program: &[Inst]) -> Result<RunStats> {
+        let mut cursor = ExecCursor::default();
+        match self.run_until(program, &mut cursor, None)? {
+            RunOutcome::Halted => Ok(cursor.stats),
+            RunOutcome::Paused => unreachable!("unbounded run cannot pause"),
+        }
+    }
+
+    /// Export the machine-side state at a pause cursor (the global
+    /// memory is captured separately — drop the machine to release its
+    /// borrow, then read the backend's store).
+    pub fn export_state(&self, cursor: &ExecCursor) -> MachineState {
+        MachineState {
+            pc: cursor.pc,
+            stats: cursor.stats,
+            regs: self.regs,
+            local: self.local.clone(),
+            call_stack: self.call_stack.iter().map(|&p| p as u64).collect(),
+            chan: self.chan.into(),
+        }
+    }
+
+    /// Restore exported state into this machine; returns the cursor to
+    /// continue from. The local memory is replaced wholesale (its
+    /// length is part of the out-of-bounds error strings, so the
+    /// snapshot's length wins).
+    pub fn import_state(&mut self, state: &MachineState) -> Result<ExecCursor> {
+        self.regs = state.regs;
+        self.local = state.local.clone();
+        self.call_stack = state.call_stack.iter().map(|&p| p as usize).collect();
+        self.chan = state.chan.into();
+        Ok(ExecCursor { pc: state.pc, stats: state.stats })
+    }
+
+    /// Run from `cursor` until `Halt`, an error, or — when
+    /// `cycle_limit` is given — the first instruction boundary at or
+    /// past that many cycles. Pausing is invisible to the result: a run
+    /// chopped into any number of `Paused` slices accumulates the exact
+    /// stats, registers, memory and error strings of the uninterrupted
+    /// run (pinned by `tests/snapshot_resume.rs`).
+    pub fn run_until(
+        &mut self,
+        program: &[Inst],
+        cursor: &mut ExecCursor,
+        cycle_limit: Option<u64>,
+    ) -> Result<RunOutcome> {
         use Inst::*;
-        let mut stats = RunStats::default();
-        let mut pc = 0usize;
+        let mut stats = cursor.stats;
+        let mut pc = cursor.pc as usize;
         while pc < program.len() {
+            if let Some(limit) = cycle_limit {
+                if stats.cycles >= limit {
+                    cursor.pc = pc as u64;
+                    cursor.stats = stats;
+                    return Ok(RunOutcome::Paused);
+                }
+            }
             if stats.instructions >= self.max_steps {
                 bail!("step limit exceeded ({})", self.max_steps);
             }
@@ -313,7 +505,9 @@ impl<'m> Machine<'m> {
                 }
                 Halt => {
                     stats.cycles += cost;
-                    return Ok(stats);
+                    cursor.pc = pc as u64;
+                    cursor.stats = stats;
+                    return Ok(RunOutcome::Halted);
                 }
                 Nop => {}
             }
@@ -468,5 +662,44 @@ mod tests {
         let mut mem = direct(16);
         let mut m = Machine::new(&mut mem, 4);
         assert!(m.run(&[LoadLocal { d: 0, a: 0, off: 100 }, Halt]).is_err());
+    }
+
+    #[test]
+    fn paused_slices_accumulate_to_the_uninterrupted_run() {
+        // sum 1..=10, paused every 4 cycles; state round-trips through
+        // export/import into a fresh machine at every slice.
+        let prog = vec![
+            LoadImm { d: 0, imm: 0 },
+            LoadImm { d: 1, imm: 10 },
+            Add { d: 0, a: 0, b: 1 },
+            AddI { d: 1, a: 1, imm: -1 },
+            BranchNZ { c: 1, offset: -2 },
+            Halt,
+        ];
+        let mut mem = direct(1024);
+        let mut m = Machine::new(&mut mem, 16);
+        let want = m.run(&prog).unwrap();
+        let want_r0 = m.reg(0);
+
+        let mut mem2 = direct(1024);
+        let mut cursor = ExecCursor::default();
+        let mut state = Machine::new(&mut mem2, 16).export_state(&cursor);
+        let mut slices = 0;
+        loop {
+            let mut mem3 = direct(1024);
+            let mut m3 = Machine::new(&mut mem3, 16);
+            cursor = m3.import_state(&state).unwrap();
+            let limit = cursor.stats.cycles + 4;
+            let out = m3.run_until(&prog, &mut cursor, Some(limit)).unwrap();
+            state = m3.export_state(&cursor);
+            slices += 1;
+            if out == RunOutcome::Halted {
+                break;
+            }
+            assert!(slices < 100, "pause loop runaway");
+        }
+        assert!(slices > 3, "expected several pause slices");
+        assert_eq!(state.stats, want);
+        assert_eq!(state.regs[0], want_r0);
     }
 }

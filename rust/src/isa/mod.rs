@@ -13,13 +13,22 @@
 //!   pre-validates a program into a dense [`DecodedProgram`] (absolute
 //!   branch targets, checked registers, fused §2.1 channel macro-ops)
 //!   and [`FastMachine`] runs it with no `Result` in the steady state.
+//! * [`snapshot`] — versioned binary machine snapshots: both machines
+//!   pause at cycle budgets (`run_until`) and export/import their
+//!   complete state, so runs suspend, migrate and resume
+//!   bit-identically.
 
 pub mod decode;
 pub mod encode;
 pub mod inst;
 pub mod interp;
+pub mod snapshot;
 
 pub use decode::{predecode, DecodedProgram, FastMachine};
 pub use encode::{decode, encode, program_bytes};
 pub use inst::Inst;
-pub use interp::{DirectMemory, EmulatedChannelMemory, Machine, MemorySystem, RunStats};
+pub use interp::{
+    ChanSnap, DirectMemory, EmulatedChannelMemory, ExecCursor, Machine, MachineState,
+    MemorySystem, RunOutcome, RunStats,
+};
+pub use snapshot::{Snapshot, SnapshotError};

@@ -1,0 +1,861 @@
+//! Versioned binary machine snapshots (suspend / resume).
+//!
+//! A snapshot freezes one interpreter run at an instruction boundary:
+//! the machine-side state ([`MachineState`]: pc, stats, registers,
+//! locals, call stack, channel progress), the *sparse* global memory
+//! (only the [`PagedStore`] pages actually touched), the cost-model
+//! identity of the backend it ran over, and the identity of the decode
+//! tier that produced the pc — a legacy pc indexes source
+//! instructions, a fast pc indexes decoded ops, and the two are never
+//! interchangeable.
+//!
+//! Resuming rebuilds the memory system from the recorded identity
+//! ([`rebuild_memory`]), restores the machine state, and continues; a
+//! run chopped into any number of snapshot/resume slices produces the
+//! exact stats, registers, memory and error strings of the
+//! uninterrupted run (`tests/snapshot_resume.rs` pins this over random
+//! checkpoints). The differential fuzzer uses this to restart from the
+//! last checkpoint before a divergence, and `memclos serve` uses it as
+//! its suspend/migrate primitive.
+//!
+//! # Format (version 1, all little-endian)
+//!
+//! ```text
+//! "MCSS" | version u32 | tier u8 | backend u8 | backend payload
+//!   | space_words u64 | max_steps u64
+//!   | program-name (len u16 + bytes) | program fnv1a-64 over encoded words
+//!   | pc u64 | stats 6xu64 | regs 16xi64
+//!   | call-stack (len u64 + u64 each) | chan (tag u8 + fields)
+//!   | local (total len u64, sparse count u64, (idx u64, word i64) each)
+//!   | pages (count u64, (page u64, 4096xi64) each, ascending)
+//!   | fnv1a-64 checksum over every preceding byte
+//! ```
+//!
+//! The backend payload is the whole cost model: `dram_cycles` for the
+//! direct backend; design identity (topo/tiles/mem_kb/k) *plus* the
+//! full whole-cycle rank LUT for the emulated backend — resume rebuilds
+//! the setup from the identity and verifies the rebuilt LUT equals the
+//! recorded one, so a snapshot from a non-default-tech or faulted setup
+//! is rejected with a typed error instead of silently re-costed.
+//!
+//! Every malformed input — truncation at any byte, flipped bits,
+//! version skew, wrong tier/backend, inconsistent counts — yields a
+//! typed, field-named [`SnapshotError`] (exit 1 through the CLI),
+//! never a panic (`tests/fuzz.rs` mutates valid snapshots
+//! adversarially to pin this).
+
+use thiserror::Error;
+
+use super::decode::{DecodedProgram, FastMachine};
+use super::inst::Inst;
+use super::interp::{
+    ChanSnap, DirectMemory, EmulatedChannelMemory, Machine, MachineState, MemorySystem,
+    RunStats,
+};
+use crate::emulation::{EmulationSetup, SequentialMachine, TopologyKind};
+use crate::topology::Topology;
+use crate::util::paged::{PagedStore, PAGE_WORDS};
+
+/// File magic.
+pub const MAGIC: [u8; 4] = *b"MCSS";
+/// Current (and only) format version.
+pub const VERSION: u32 = 1;
+
+/// Sanity bounds on adversarial counts: a checksum can be recomputed by
+/// an attacker, so counts are bounded before any allocation.
+const MAX_NAME: usize = 4096;
+const MAX_RANKS: u64 = 1 << 24;
+const MAX_LOCAL: u64 = 1 << 28;
+
+/// Which interpreter tier took the snapshot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// Legacy enum-match [`Machine`] — pc indexes source instructions.
+    Legacy,
+    /// Direct-threaded [`FastMachine`] — pc indexes decoded ops.
+    Fast,
+}
+
+impl Tier {
+    /// Human-readable label (used in the typed errors).
+    pub fn label(self) -> &'static str {
+        match self {
+            Tier::Legacy => "legacy",
+            Tier::Fast => "fast",
+        }
+    }
+}
+
+/// Backend cost-model identity recorded in a snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BackendSnap {
+    /// Sequential baseline: one whole-cycle DRAM charge.
+    Direct {
+        /// Whole-cycle charge per global access.
+        dram_cycles: u64,
+    },
+    /// Emulated memory: design identity plus the recorded rank LUT.
+    Emulated {
+        /// Interconnect kind.
+        topo: TopologyKind,
+        /// Total system tiles.
+        tiles: u64,
+        /// KiB of SRAM per tile.
+        mem_kb: u32,
+        /// Memory tiles (ranks).
+        k: u64,
+        /// log2 words-per-tile address shift.
+        shift: u32,
+        /// Whole-cycle rank-latency LUT at capture time.
+        rank_cycles: Vec<u64>,
+    },
+}
+
+impl BackendSnap {
+    /// Capture the identity of a direct memory.
+    pub fn of_direct(mem: &DirectMemory) -> Self {
+        BackendSnap::Direct { dram_cycles: mem.global_cycles() }
+    }
+
+    /// Capture the identity of an emulated channel memory.
+    pub fn of_emulated(mem: &EmulatedChannelMemory) -> Self {
+        let setup = mem.setup();
+        let topo = match setup.topo {
+            Topology::Clos(_) => TopologyKind::Clos,
+            Topology::Mesh(_) => TopologyKind::Mesh,
+        };
+        BackendSnap::Emulated {
+            topo,
+            tiles: setup.map.tiles as u64,
+            mem_kb: setup.mem_kb,
+            k: setup.map.k as u64,
+            shift: mem.shift(),
+            rank_cycles: mem.rank_cycles().to_vec(),
+        }
+    }
+
+    /// Human-readable label (used in the typed errors).
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendSnap::Direct { .. } => "direct",
+            BackendSnap::Emulated { .. } => "emulated",
+        }
+    }
+}
+
+/// Typed snapshot failures. Every variant names what went wrong; the
+/// CLI maps them to exit 1 like any other runtime error.
+#[derive(Debug, Error)]
+pub enum SnapshotError {
+    /// The file ended inside the named field.
+    #[error("snapshot truncated reading {field}")]
+    Truncated {
+        /// Field being read when the bytes ran out.
+        field: &'static str,
+    },
+    /// Not a snapshot file.
+    #[error("bad snapshot magic (want \"MCSS\")")]
+    BadMagic,
+    /// Produced by a different format version.
+    #[error("unsupported snapshot version {found} (supported: {supported})")]
+    Version {
+        /// Version found in the file.
+        found: u32,
+        /// Version this build reads.
+        supported: u32,
+    },
+    /// The trailing checksum does not match the content.
+    #[error("snapshot checksum mismatch (file is corrupt)")]
+    Checksum,
+    /// Bytes remain past the checksum.
+    #[error("snapshot has {extra} trailing bytes past the checksum")]
+    Trailing {
+        /// Count of extra bytes.
+        extra: usize,
+    },
+    /// Resumed on a different interpreter tier than it was taken on.
+    #[error("snapshot was taken on the {found} tier, cannot resume on {want}")]
+    WrongTier {
+        /// Tier recorded in the snapshot.
+        found: &'static str,
+        /// Tier attempting the resume.
+        want: &'static str,
+    },
+    /// Resumed over a different memory backend than it was taken over.
+    #[error("snapshot was taken over the {found} backend, cannot resume over {want}")]
+    WrongBackend {
+        /// Backend recorded in the snapshot.
+        found: &'static str,
+        /// Backend attempting the resume.
+        want: &'static str,
+    },
+    /// A field parsed but its value is invalid.
+    #[error("snapshot field `{field}`: {detail}")]
+    Field {
+        /// Offending field.
+        field: &'static str,
+        /// What is wrong with it.
+        detail: String,
+    },
+}
+
+/// FNV-1a 64-bit hash (the format's checksum and fingerprint hash —
+/// stable, dependency-free, byte-order independent).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Fingerprint of a source program: FNV-1a over its encoded
+/// little-endian instruction words. Resume refuses to run a snapshot
+/// against a program with a different fingerprint.
+pub fn program_fingerprint(program: &[Inst]) -> u64 {
+    let mut bytes = Vec::with_capacity(program.len() * 4);
+    for inst in program {
+        for w in super::encode::encode(inst) {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+    fnv1a64(&bytes)
+}
+
+/// One frozen run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Snapshot {
+    /// Interpreter tier that took it.
+    pub tier: Tier,
+    /// Backend cost-model identity.
+    pub backend: BackendSnap,
+    /// Address-space size in words.
+    pub space_words: u64,
+    /// Step limit in force (part of the step-limit error string).
+    pub max_steps: u64,
+    /// Program label (a cc-corpus name for CLI snapshots).
+    pub program: String,
+    /// [`program_fingerprint`] of the source program.
+    pub program_fnv: u64,
+    /// Machine-side execution state.
+    pub state: MachineState,
+    /// Sparse global memory: (page index, exactly [`PAGE_WORDS`] words).
+    pub pages: Vec<(u64, Box<[i64]>)>,
+}
+
+impl Snapshot {
+    /// Capture the sparse page list of a backing store.
+    pub fn pages_of(store: &PagedStore) -> Vec<(u64, Box<[i64]>)> {
+        store.pages().map(|(i, d)| (i, d.to_vec().into_boxed_slice())).collect()
+    }
+
+    /// Install the recorded pages into a store.
+    pub fn restore_pages(&self, store: &mut PagedStore) {
+        for (page, words) in &self.pages {
+            store.load_page(*page, words);
+        }
+    }
+
+    /// Serialise (format documented in the module docs).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.push(match self.tier {
+            Tier::Legacy => 0,
+            Tier::Fast => 1,
+        });
+        match &self.backend {
+            BackendSnap::Direct { dram_cycles } => {
+                out.push(0);
+                out.extend_from_slice(&dram_cycles.to_le_bytes());
+            }
+            BackendSnap::Emulated { topo, tiles, mem_kb, k, shift, rank_cycles } => {
+                out.push(1);
+                out.push(match topo {
+                    TopologyKind::Clos => 0,
+                    TopologyKind::Mesh => 1,
+                });
+                out.extend_from_slice(&tiles.to_le_bytes());
+                out.extend_from_slice(&mem_kb.to_le_bytes());
+                out.extend_from_slice(&k.to_le_bytes());
+                out.extend_from_slice(&shift.to_le_bytes());
+                out.extend_from_slice(&(rank_cycles.len() as u64).to_le_bytes());
+                for c in rank_cycles {
+                    out.extend_from_slice(&c.to_le_bytes());
+                }
+            }
+        }
+        out.extend_from_slice(&self.space_words.to_le_bytes());
+        out.extend_from_slice(&self.max_steps.to_le_bytes());
+        out.extend_from_slice(&(self.program.len() as u16).to_le_bytes());
+        out.extend_from_slice(self.program.as_bytes());
+        out.extend_from_slice(&self.program_fnv.to_le_bytes());
+
+        let s = &self.state;
+        out.extend_from_slice(&s.pc.to_le_bytes());
+        for v in [
+            s.stats.instructions,
+            s.stats.cycles,
+            s.stats.non_memory,
+            s.stats.local_memory,
+            s.stats.global_memory,
+            s.stats.global_accesses,
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for r in &s.regs {
+            out.extend_from_slice(&r.to_le_bytes());
+        }
+        out.extend_from_slice(&(s.call_stack.len() as u64).to_le_bytes());
+        for p in &s.call_stack {
+            out.extend_from_slice(&p.to_le_bytes());
+        }
+        match s.chan {
+            ChanSnap::Idle => out.push(0),
+            ChanSnap::GotTag(t) => {
+                out.push(1);
+                out.extend_from_slice(&t.to_le_bytes());
+            }
+            ChanSnap::GotAddr { tag, addr } => {
+                out.push(2);
+                out.extend_from_slice(&tag.to_le_bytes());
+                out.extend_from_slice(&addr.to_le_bytes());
+            }
+            ChanSnap::WrotePending => out.push(3),
+            ChanSnap::ReadPending { addr } => {
+                out.push(4);
+                out.extend_from_slice(&addr.to_le_bytes());
+            }
+        }
+        out.extend_from_slice(&(s.local.len() as u64).to_le_bytes());
+        let nonzero: Vec<(u64, i64)> = s
+            .local
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v != 0)
+            .map(|(i, &v)| (i as u64, v))
+            .collect();
+        out.extend_from_slice(&(nonzero.len() as u64).to_le_bytes());
+        for (i, v) in nonzero {
+            out.extend_from_slice(&i.to_le_bytes());
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+
+        out.extend_from_slice(&(self.pages.len() as u64).to_le_bytes());
+        for (page, words) in &self.pages {
+            out.extend_from_slice(&page.to_le_bytes());
+            for w in words.iter() {
+                out.extend_from_slice(&w.to_le_bytes());
+            }
+        }
+
+        let sum = fnv1a64(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Parse and validate a snapshot. Magic and version are checked
+    /// first, then the trailing checksum over the whole body, then
+    /// every field with bounded reads — malformed input of any kind
+    /// yields a typed [`SnapshotError`], never a panic.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, SnapshotError> {
+        if bytes.len() < MAGIC.len() + 4 + 8 {
+            return Err(SnapshotError::Truncated { field: "header" });
+        }
+        if bytes[..4] != MAGIC {
+            return Err(SnapshotError::BadMagic);
+        }
+        let version = u32::from_le_bytes(bytes[4..8].try_into().expect("4 bytes"));
+        if version != VERSION {
+            return Err(SnapshotError::Version { found: version, supported: VERSION });
+        }
+        let body = &bytes[..bytes.len() - 8];
+        let sum = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().expect("8 bytes"));
+        if fnv1a64(body) != sum {
+            return Err(SnapshotError::Checksum);
+        }
+
+        let mut r = Reader { bytes: &body[8..] };
+        let tier = match r.u8("tier")? {
+            0 => Tier::Legacy,
+            1 => Tier::Fast,
+            other => {
+                return Err(SnapshotError::Field {
+                    field: "tier",
+                    detail: format!("unknown tier byte {other}"),
+                })
+            }
+        };
+        let backend = match r.u8("backend")? {
+            0 => BackendSnap::Direct { dram_cycles: r.u64("dram_cycles")? },
+            1 => {
+                let topo = match r.u8("topo")? {
+                    0 => TopologyKind::Clos,
+                    1 => TopologyKind::Mesh,
+                    other => {
+                        return Err(SnapshotError::Field {
+                            field: "topo",
+                            detail: format!("unknown topology byte {other}"),
+                        })
+                    }
+                };
+                let tiles = r.u64("tiles")?;
+                let mem_kb = r.u32("mem_kb")?;
+                let k = r.u64("k")?;
+                let shift = r.u32("shift")?;
+                let rank_len = r.u64("rank_cycles length")?;
+                if rank_len > r.remaining() as u64 / 8 {
+                    return Err(SnapshotError::Field {
+                        field: "rank_cycles",
+                        detail: format!("length {rank_len} exceeds the file"),
+                    });
+                }
+                if rank_len > MAX_RANKS || rank_len != k {
+                    return Err(SnapshotError::Field {
+                        field: "rank_cycles",
+                        detail: format!("length {rank_len} does not match k {k}"),
+                    });
+                }
+                let mut rank_cycles = Vec::with_capacity(rank_len as usize);
+                for _ in 0..rank_len {
+                    rank_cycles.push(r.u64("rank_cycles entry")?);
+                }
+                BackendSnap::Emulated { topo, tiles, mem_kb, k, shift, rank_cycles }
+            }
+            other => {
+                return Err(SnapshotError::Field {
+                    field: "backend",
+                    detail: format!("unknown backend byte {other}"),
+                })
+            }
+        };
+        let space_words = r.u64("space_words")?;
+        let max_steps = r.u64("max_steps")?;
+        let name_len = r.u16("program name length")? as usize;
+        if name_len > MAX_NAME {
+            return Err(SnapshotError::Field {
+                field: "program name",
+                detail: format!("length {name_len} exceeds {MAX_NAME}"),
+            });
+        }
+        let name_bytes = r.take(name_len, "program name")?;
+        let program = String::from_utf8(name_bytes.to_vec()).map_err(|_| {
+            SnapshotError::Field { field: "program name", detail: "not UTF-8".into() }
+        })?;
+        let program_fnv = r.u64("program fingerprint")?;
+
+        let pc = r.u64("pc")?;
+        let stats = RunStats {
+            instructions: r.u64("stats.instructions")?,
+            cycles: r.u64("stats.cycles")?,
+            non_memory: r.u64("stats.non_memory")?,
+            local_memory: r.u64("stats.local_memory")?,
+            global_memory: r.u64("stats.global_memory")?,
+            global_accesses: r.u64("stats.global_accesses")?,
+        };
+        let mut regs = [0i64; 16];
+        for reg in &mut regs {
+            *reg = r.i64("regs")?;
+        }
+        let call_len = r.u64("call stack length")?;
+        if call_len > r.remaining() as u64 / 8 {
+            return Err(SnapshotError::Field {
+                field: "call stack",
+                detail: format!("length {call_len} exceeds the file"),
+            });
+        }
+        let mut call_stack = Vec::with_capacity(call_len as usize);
+        for _ in 0..call_len {
+            call_stack.push(r.u64("call stack entry")?);
+        }
+        let chan = match r.u8("chan")? {
+            0 => ChanSnap::Idle,
+            1 => ChanSnap::GotTag(r.u32("chan.tag")?),
+            2 => ChanSnap::GotAddr { tag: r.u32("chan.tag")?, addr: r.u64("chan.addr")? },
+            3 => ChanSnap::WrotePending,
+            4 => ChanSnap::ReadPending { addr: r.u64("chan.addr")? },
+            other => {
+                return Err(SnapshotError::Field {
+                    field: "chan",
+                    detail: format!("unknown channel-state byte {other}"),
+                })
+            }
+        };
+        let local_len = r.u64("local length")?;
+        if local_len > MAX_LOCAL {
+            return Err(SnapshotError::Field {
+                field: "local",
+                detail: format!("length {local_len} exceeds {MAX_LOCAL}"),
+            });
+        }
+        let sparse = r.u64("local sparse count")?;
+        if sparse > local_len || sparse > r.remaining() as u64 / 16 {
+            return Err(SnapshotError::Field {
+                field: "local",
+                detail: format!("sparse count {sparse} is inconsistent"),
+            });
+        }
+        let mut local = vec![0i64; local_len as usize];
+        for _ in 0..sparse {
+            let idx = r.u64("local entry index")?;
+            let val = r.i64("local entry word")?;
+            if idx >= local_len {
+                return Err(SnapshotError::Field {
+                    field: "local",
+                    detail: format!("entry index {idx} out of range ({local_len})"),
+                });
+            }
+            local[idx as usize] = val;
+        }
+
+        let page_count = r.u64("page count")?;
+        let page_bytes = 8 + PAGE_WORDS as u64 * 8;
+        if page_count > r.remaining() as u64 / page_bytes {
+            return Err(SnapshotError::Field {
+                field: "pages",
+                detail: format!("count {page_count} exceeds the file"),
+            });
+        }
+        let mut pages = Vec::with_capacity(page_count as usize);
+        let mut last_page: Option<u64> = None;
+        for _ in 0..page_count {
+            let page = r.u64("page index")?;
+            if page.saturating_mul(PAGE_WORDS as u64) >= space_words.max(1) {
+                return Err(SnapshotError::Field {
+                    field: "pages",
+                    detail: format!("page {page} lies outside the {space_words}-word space"),
+                });
+            }
+            if last_page.is_some_and(|p| page <= p) {
+                return Err(SnapshotError::Field {
+                    field: "pages",
+                    detail: format!("page {page} out of ascending order"),
+                });
+            }
+            last_page = Some(page);
+            let mut words = vec![0i64; PAGE_WORDS];
+            for w in &mut words {
+                *w = r.i64("page words")?;
+            }
+            pages.push((page, words.into_boxed_slice()));
+        }
+        if r.remaining() != 0 {
+            return Err(SnapshotError::Trailing { extra: r.remaining() });
+        }
+
+        Ok(Snapshot {
+            tier,
+            backend,
+            space_words,
+            max_steps,
+            program,
+            program_fnv,
+            state: MachineState { pc, stats, regs, local, call_stack, chan },
+            pages,
+        })
+    }
+
+    /// Check the snapshot was taken on `tier`.
+    pub fn check_tier(&self, tier: Tier) -> Result<(), SnapshotError> {
+        if self.tier != tier {
+            return Err(SnapshotError::WrongTier {
+                found: self.tier.label(),
+                want: tier.label(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Check the source program matches the recorded fingerprint.
+    pub fn check_program(&self, program: &[Inst]) -> Result<(), SnapshotError> {
+        let got = program_fingerprint(program);
+        if got != self.program_fnv {
+            return Err(SnapshotError::Field {
+                field: "program fingerprint",
+                detail: format!(
+                    "snapshot was taken of `{}` ({:#018x}), the provided program hashes \
+                     to {got:#018x}",
+                    self.program, self.program_fnv
+                ),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Bounded little-endian reader with field-named truncation errors.
+struct Reader<'a> {
+    bytes: &'a [u8],
+}
+
+impl<'a> Reader<'a> {
+    fn remaining(&self) -> usize {
+        self.bytes.len()
+    }
+
+    fn take(&mut self, n: usize, field: &'static str) -> Result<&'a [u8], SnapshotError> {
+        if self.bytes.len() < n {
+            return Err(SnapshotError::Truncated { field });
+        }
+        let (head, rest) = self.bytes.split_at(n);
+        self.bytes = rest;
+        Ok(head)
+    }
+
+    fn u8(&mut self, field: &'static str) -> Result<u8, SnapshotError> {
+        Ok(self.take(1, field)?[0])
+    }
+
+    fn u16(&mut self, field: &'static str) -> Result<u16, SnapshotError> {
+        Ok(u16::from_le_bytes(self.take(2, field)?.try_into().expect("2 bytes")))
+    }
+
+    fn u32(&mut self, field: &'static str) -> Result<u32, SnapshotError> {
+        Ok(u32::from_le_bytes(self.take(4, field)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self, field: &'static str) -> Result<u64, SnapshotError> {
+        Ok(u64::from_le_bytes(self.take(8, field)?.try_into().expect("8 bytes")))
+    }
+
+    fn i64(&mut self, field: &'static str) -> Result<i64, SnapshotError> {
+        Ok(i64::from_le_bytes(self.take(8, field)?.try_into().expect("8 bytes")))
+    }
+}
+
+/// A memory system rebuilt from a snapshot's backend identity, pages
+/// restored.
+pub enum RebuiltMemory {
+    /// Sequential-baseline DRAM memory.
+    Direct(DirectMemory),
+    /// Emulated channel memory.
+    Emulated(EmulatedChannelMemory),
+}
+
+impl RebuiltMemory {
+    /// The rebuilt memory as a trait object (what [`Machine::new`] and
+    /// the blanket `&mut dyn` impl feed both tiers).
+    pub fn as_dyn(&mut self) -> &mut dyn MemorySystem {
+        match self {
+            RebuiltMemory::Direct(m) => m,
+            RebuiltMemory::Emulated(m) => m,
+        }
+    }
+}
+
+/// Rebuild the memory system a snapshot was taken over and restore its
+/// pages. The emulated backend is rebuilt from the recorded design
+/// identity with default technology; the rebuilt rank LUT must equal
+/// the recorded one bit for bit, so snapshots of exotic setups fail
+/// with a typed error instead of resuming with a different cost model.
+pub fn rebuild_memory(snap: &Snapshot) -> Result<RebuiltMemory, SnapshotError> {
+    match &snap.backend {
+        BackendSnap::Direct { dram_cycles } => {
+            let mut mem = DirectMemory::with_cycle_charge(
+                SequentialMachine::paper_figures(false),
+                snap.space_words,
+                *dram_cycles,
+            );
+            snap.restore_pages(mem.store_mut());
+            Ok(RebuiltMemory::Direct(mem))
+        }
+        BackendSnap::Emulated { topo, tiles, mem_kb, k, shift, rank_cycles } => {
+            let setup = EmulationSetup::default_tech(
+                *topo,
+                *tiles as usize,
+                *mem_kb,
+                *k as usize,
+            )
+            .map_err(|e| SnapshotError::Field {
+                field: "backend design point",
+                detail: e.to_string(),
+            })?;
+            let mut mem = EmulatedChannelMemory::new(setup);
+            if mem.shift() != *shift {
+                return Err(SnapshotError::Field {
+                    field: "shift",
+                    detail: format!("recorded {shift}, rebuilt {}", mem.shift()),
+                });
+            }
+            if mem.rank_cycles() != rank_cycles.as_slice() {
+                return Err(SnapshotError::Field {
+                    field: "rank_cycles",
+                    detail: "recorded LUT differs from the rebuilt default-tech LUT \
+                             (snapshot was taken over a non-default setup)"
+                        .into(),
+                });
+            }
+            if mem.space_words() != snap.space_words {
+                return Err(SnapshotError::Field {
+                    field: "space_words",
+                    detail: format!(
+                        "recorded {}, rebuilt {}",
+                        snap.space_words,
+                        mem.space_words()
+                    ),
+                });
+            }
+            snap.restore_pages(mem.store_mut());
+            Ok(RebuiltMemory::Emulated(mem))
+        }
+    }
+}
+
+/// Outcome of a (possibly budgeted) snapshot-aware run.
+pub struct SliceRun {
+    /// Final machine state (at halt, pause, or the start of the slice
+    /// that errored).
+    pub state: MachineState,
+    /// `Ok(true)` halted, `Ok(false)` paused at the budget; `Err` is
+    /// the tier's error string, bit-identical to the uninterrupted run.
+    pub outcome: Result<bool, String>,
+}
+
+/// Run `program` on the legacy tier over `mem` from `state` until halt,
+/// error, or `cycle_limit`. Helper shared by the CLI, serve and tests.
+pub fn run_legacy_slice(
+    program: &[Inst],
+    mem: &mut dyn MemorySystem,
+    state: &MachineState,
+    max_steps: u64,
+    cycle_limit: Option<u64>,
+) -> SliceRun {
+    let mut m = Machine::new(mem, 0);
+    m.max_steps = max_steps;
+    let mut cursor = match m.import_state(state) {
+        Ok(c) => c,
+        Err(e) => return SliceRun { state: state.clone(), outcome: Err(e.to_string()) },
+    };
+    match m.run_until(program, &mut cursor, cycle_limit) {
+        Ok(out) => {
+            let state = m.export_state(&cursor);
+            SliceRun { state, outcome: Ok(out == super::interp::RunOutcome::Halted) }
+        }
+        Err(e) => SliceRun { state: state.clone(), outcome: Err(e.to_string()) },
+    }
+}
+
+/// Fast-tier sibling of [`run_legacy_slice`] (pc indexes decoded ops).
+pub fn run_fast_slice(
+    prog: &DecodedProgram,
+    mem: &mut dyn MemorySystem,
+    state: &MachineState,
+    max_steps: u64,
+    cycle_limit: Option<u64>,
+) -> SliceRun {
+    let mut mem = mem;
+    let mut m = FastMachine::new(&mut mem, 0);
+    m.max_steps = max_steps;
+    let mut cursor = match m.import_state(state) {
+        Ok(c) => c,
+        Err(e) => return SliceRun { state: state.clone(), outcome: Err(e.to_string()) },
+    };
+    match m.run_until(prog, &mut cursor, cycle_limit) {
+        Ok(out) => {
+            let state = m.export_state(&cursor);
+            SliceRun { state, outcome: Ok(out == super::interp::RunOutcome::Halted) }
+        }
+        Err(e) => SliceRun { state: state.clone(), outcome: Err(e.to_string()) },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cc::{compile, Backend};
+
+    fn sample_snapshot() -> Snapshot {
+        let setup = EmulationSetup::default_tech(TopologyKind::Clos, 256, 64, 128).unwrap();
+        let mut mem = EmulatedChannelMemory::new(setup);
+        mem.store_mut().write(7, -3);
+        mem.store_mut().write(PAGE_WORDS as u64 * 2 + 1, 12345);
+        let mut local = vec![0i64; 64];
+        local[3] = 9;
+        Snapshot {
+            tier: Tier::Fast,
+            backend: BackendSnap::of_emulated(&mem),
+            space_words: mem.space_words(),
+            max_steps: 10_000,
+            program: "sieve".into(),
+            program_fnv: 0xDEAD_BEEF,
+            state: MachineState {
+                pc: 17,
+                stats: RunStats {
+                    instructions: 100,
+                    cycles: 450,
+                    non_memory: 60,
+                    local_memory: 20,
+                    global_memory: 20,
+                    global_accesses: 5,
+                },
+                regs: std::array::from_fn(|i| i as i64 - 8),
+                local,
+                call_stack: vec![3, 11],
+                chan: ChanSnap::Idle,
+            },
+            pages: Snapshot::pages_of(mem.store()),
+        }
+    }
+
+    #[test]
+    fn roundtrips_bit_exactly() {
+        let snap = sample_snapshot();
+        let bytes = snap.to_bytes();
+        let back = Snapshot::from_bytes(&bytes).unwrap();
+        assert_eq!(back, snap);
+        // Canonical: re-serialising yields the same bytes.
+        assert_eq!(back.to_bytes(), bytes);
+    }
+
+    #[test]
+    fn rebuild_restores_the_store_and_cost_model() {
+        let snap = sample_snapshot();
+        let mut mem = rebuild_memory(&snap).unwrap();
+        let dyn_mem = mem.as_dyn();
+        assert_eq!(dyn_mem.read(7).0, -3);
+        assert_eq!(dyn_mem.read(PAGE_WORDS as u64 * 2 + 1).0, 12345);
+        assert_eq!(dyn_mem.read(8).0, 0);
+    }
+
+    #[test]
+    fn direct_backend_roundtrip() {
+        let mem = DirectMemory::new(SequentialMachine::paper_figures(false), 1 << 12);
+        let mut snap = sample_snapshot();
+        snap.backend = BackendSnap::of_direct(&mem);
+        snap.space_words = 1 << 12;
+        snap.pages.clear();
+        snap.tier = Tier::Legacy;
+        let back = Snapshot::from_bytes(&snap.to_bytes()).unwrap();
+        assert_eq!(back, snap);
+        let mut rebuilt = rebuild_memory(&back).unwrap();
+        let RebuiltMemory::Direct(d) = &mut rebuilt else { panic!("want direct") };
+        assert_eq!(d.global_cycles(), mem.global_cycles());
+    }
+
+    #[test]
+    fn wrong_tier_and_fingerprint_are_typed() {
+        let snap = sample_snapshot();
+        let err = snap.check_tier(Tier::Legacy).unwrap_err();
+        assert!(matches!(err, SnapshotError::WrongTier { .. }), "{err}");
+        let prog = compile("fn main() { return 3; }", Backend::Direct).unwrap();
+        let err = snap.check_program(&prog.code).unwrap_err();
+        assert!(err.to_string().contains("sieve"), "{err}");
+    }
+
+    #[test]
+    fn version_skew_is_typed() {
+        let snap = sample_snapshot();
+        let mut bytes = snap.to_bytes();
+        bytes[4] = 2; // version; checksum ignores nothing, so refresh it
+        let n = bytes.len();
+        let sum = fnv1a64(&bytes[..n - 8]);
+        bytes[n - 8..].copy_from_slice(&sum.to_le_bytes());
+        let err = Snapshot::from_bytes(&bytes).unwrap_err();
+        assert!(
+            matches!(err, SnapshotError::Version { found: 2, supported: 1 }),
+            "{err}"
+        );
+    }
+}

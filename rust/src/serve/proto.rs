@@ -8,11 +8,15 @@
 //! ```
 //!
 //! `kind` selects the query (`ping`, `stats`, `shutdown`, `latency`,
-//! `sweep`, `emulation`, `contention`); every other member has a
-//! default, and unknown members are rejected (a typo never silently
-//! changes what is evaluated). Contention adds `clients`, `accesses`
-//! and `pattern` (a [`TracePattern`] spec string); emulation adds
-//! `program` (a cc-corpus name).
+//! `sweep`, `emulation`, `contention`, `suspend`, `resume`); every
+//! other member has a default, and unknown members are rejected (a
+//! typo never silently changes what is evaluated). Contention adds
+//! `clients`, `accesses` and `pattern` (a [`TracePattern`] spec
+//! string); emulation adds `program` (a cc-corpus name). Suspend runs
+//! `program` to a `budget` of cycles and returns its hex-encoded
+//! machine snapshot (the [`crate::isa::snapshot`] binary format);
+//! resume accepts such a `snapshot` blob and runs it to completion —
+//! the migration pair: suspend on one server, resume on another.
 //!
 //! Parsing **canonicalises**: defaults are filled in, `k` defaults to
 //! `tiles - 1` (full emulation), and the result is bounds-checked with
@@ -45,6 +49,10 @@ pub const MAX_MEM_KB: u32 = (1 << 12) - 1;
 pub const MAX_CLIENTS: usize = 1024;
 /// Largest per-client access budget per request.
 pub const MAX_ACCESSES: usize = 65_536;
+/// Largest suspend cycle budget per request.
+pub const MAX_BUDGET: u64 = 100_000_000;
+/// Largest hex-encoded snapshot blob a resume request may carry.
+pub const MAX_SNAPSHOT_HEX: usize = 16 << 20;
 
 /// Typed serve-layer failure. `Overload` and `Draining` are the shed
 /// responses admission control returns instead of queueing unboundedly.
@@ -110,6 +118,12 @@ pub enum QueryKind {
     Emulation,
     /// One trace-driven DES contention cell.
     Contention,
+    /// Run a cc-corpus program to a cycle budget and return its
+    /// hex-encoded machine snapshot.
+    Suspend,
+    /// Resume a snapshot blob to completion (suspend's migration
+    /// counterpart).
+    Resume,
 }
 
 impl QueryKind {
@@ -123,6 +137,8 @@ impl QueryKind {
             QueryKind::Sweep => "sweep",
             QueryKind::Emulation => "emulation",
             QueryKind::Contention => "contention",
+            QueryKind::Suspend => "suspend",
+            QueryKind::Resume => "resume",
         }
     }
 
@@ -136,11 +152,13 @@ impl QueryKind {
             "sweep" => QueryKind::Sweep,
             "emulation" => QueryKind::Emulation,
             "contention" => QueryKind::Contention,
+            "suspend" => QueryKind::Suspend,
+            "resume" => QueryKind::Resume,
             other => {
                 return Err(ServeError::field(
                     "kind",
                     format!(
-                        "unknown kind `{other}` (ping|stats|shutdown|latency|sweep|emulation|contention)"
+                        "unknown kind `{other}` (ping|stats|shutdown|latency|sweep|emulation|contention|suspend|resume)"
                     ),
                 ))
             }
@@ -152,7 +170,12 @@ impl QueryKind {
     pub fn is_evaluating(&self) -> bool {
         matches!(
             self,
-            QueryKind::Latency | QueryKind::Sweep | QueryKind::Emulation | QueryKind::Contention
+            QueryKind::Latency
+                | QueryKind::Sweep
+                | QueryKind::Emulation
+                | QueryKind::Contention
+                | QueryKind::Suspend
+                | QueryKind::Resume
         )
     }
 }
@@ -185,12 +208,16 @@ pub struct Request {
     pub pattern: TracePattern,
     /// Emulation: the cc-corpus program name.
     pub program: String,
+    /// Suspend: pause the run at this many cycles.
+    pub budget: u64,
+    /// Resume: the hex-encoded snapshot blob.
+    pub snapshot: String,
 }
 
 /// Members [`Request::parse`] accepts; anything else is rejected.
 const KNOWN_MEMBERS: &[&str] = &[
     "id", "kind", "topo", "tiles", "mem_kb", "k", "seed", "clients", "accesses", "pattern",
-    "program",
+    "program", "budget", "snapshot",
 ];
 
 impl Request {
@@ -208,6 +235,8 @@ impl Request {
             accesses: 256,
             pattern: TracePattern::Uniform,
             program: "sieve".to_string(),
+            budget: 10_000,
+            snapshot: String::new(),
         }
     }
 
@@ -257,6 +286,13 @@ impl Request {
                 .ok_or_else(|| ServeError::field("program", "must be a string"))?
                 .to_string();
         }
+        req.budget = uint_member(doc, "budget", req.budget as usize)? as u64;
+        if let Some(s) = doc.get("snapshot") {
+            req.snapshot = s
+                .as_str()
+                .ok_or_else(|| ServeError::field("snapshot", "must be a hex string"))?
+                .to_string();
+        }
         req.validate()?;
         Ok(req)
     }
@@ -291,7 +327,7 @@ impl Request {
                 ));
             }
         }
-        if self.kind == QueryKind::Emulation
+        if matches!(self.kind, QueryKind::Emulation | QueryKind::Suspend)
             && !crate::cc::corpus::all().iter().any(|p| p.name == self.program)
         {
             let names: Vec<&str> = crate::cc::corpus::all().iter().map(|p| p.name).collect();
@@ -299,6 +335,31 @@ impl Request {
                 "program",
                 format!("unknown program `{}` (available: {})", self.program, names.join(", ")),
             ));
+        }
+        if self.kind == QueryKind::Suspend && (self.budget == 0 || self.budget > MAX_BUDGET) {
+            return Err(ServeError::field(
+                "budget",
+                format!("need 1 <= budget <= {MAX_BUDGET}"),
+            ));
+        }
+        if self.kind == QueryKind::Resume {
+            if self.snapshot.is_empty() {
+                return Err(ServeError::field("snapshot", "required (a hex string)"));
+            }
+            if self.snapshot.len() > MAX_SNAPSHOT_HEX {
+                return Err(ServeError::field(
+                    "snapshot",
+                    format!("too large (> {MAX_SNAPSHOT_HEX} hex chars)"),
+                ));
+            }
+            if self.snapshot.len() % 2 != 0
+                || !self.snapshot.bytes().all(|b| b.is_ascii_hexdigit())
+            {
+                return Err(ServeError::field(
+                    "snapshot",
+                    "must be an even-length hex string",
+                ));
+            }
         }
         // The builder's own field-named validation (k vs tiles, mesh
         // squareness, ...) — the same rule every CLI path enforces.
@@ -343,6 +404,12 @@ impl Request {
                 self.accesses
             ),
             QueryKind::Emulation => format!("{base}/p{}", self.program),
+            QueryKind::Suspend => format!("{base}/p{}/b{}", self.program, self.budget),
+            // A resume payload depends only on the snapshot blob — its
+            // key is the blob's digest, nothing else.
+            QueryKind::Resume => {
+                format!("resume/h{:016x}", crate::isa::snapshot::fnv1a64(self.snapshot.as_bytes()))
+            }
             _ => base,
         }
     }
@@ -370,8 +437,14 @@ impl Request {
             members.push(("accesses".to_string(), Json::Num(self.accesses as f64)));
             members.push(("pattern".to_string(), Json::Str(pattern_spec(&self.pattern))));
         }
-        if self.kind == QueryKind::Emulation {
+        if matches!(self.kind, QueryKind::Emulation | QueryKind::Suspend) {
             members.push(("program".to_string(), Json::Str(self.program.clone())));
+        }
+        if self.kind == QueryKind::Suspend {
+            members.push(("budget".to_string(), Json::Num(self.budget as f64)));
+        }
+        if self.kind == QueryKind::Resume {
+            members.push(("snapshot".to_string(), Json::Str(self.snapshot.clone())));
         }
         Json::Obj(members)
     }
@@ -396,6 +469,31 @@ pub fn pattern_spec(p: &TracePattern) -> String {
         TracePattern::PointerChase => "chase".to_string(),
         TracePattern::Phased { phases, frac } => format!("phased:{phases}:{frac}"),
     }
+}
+
+/// Hex-encode a binary snapshot blob for the wire.
+pub fn hex_encode(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+/// Decode a hex snapshot blob ([`Request::validate`] has already
+/// checked shape for parsed requests; this revalidates for direct
+/// callers).
+pub fn hex_decode(s: &str) -> Result<Vec<u8>, ServeError> {
+    if s.len() % 2 != 0 {
+        return Err(ServeError::field("snapshot", "must be an even-length hex string"));
+    }
+    (0..s.len())
+        .step_by(2)
+        .map(|i| {
+            u8::from_str_radix(&s[i..i + 2], 16)
+                .map_err(|_| ServeError::field("snapshot", "must be an even-length hex string"))
+        })
+        .collect()
 }
 
 /// A bounded unsigned integer member with a default.
@@ -517,6 +615,11 @@ mod tests {
             ("{\"kind\": \"latency\", \"topo\": \"ring\"}", "topo"),
             ("{\"kind\": \"latency\", \"tilez\": 4}", "request"),
             ("[1, 2]", "request"),
+            ("{\"kind\": \"suspend\", \"budget\": 0}", "budget"),
+            ("{\"kind\": \"suspend\", \"program\": \"nosuch\"}", "program"),
+            ("{\"kind\": \"resume\"}", "snapshot"),
+            ("{\"kind\": \"resume\", \"snapshot\": \"abc\"}", "snapshot"),
+            ("{\"kind\": \"resume\", \"snapshot\": \"zz\"}", "snapshot"),
         ] {
             let err = parse_req(text).unwrap_err();
             let msg = format!("{err}");
@@ -542,6 +645,8 @@ mod tests {
             "{\"kind\": \"contention\", \"clients\": 8, \"pattern\": \"zipf:1.5\"}",
             "{\"kind\": \"contention\", \"pattern\": \"phased:4:0.0625\"}",
             "{\"kind\": \"contention\", \"pattern\": \"stride:33\"}",
+            "{\"kind\": \"suspend\", \"program\": \"sieve\", \"tiles\": 256, \"budget\": 500}",
+            "{\"kind\": \"resume\", \"snapshot\": \"deadbeef\"}",
         ];
         for text in texts {
             let req = parse_req(text).unwrap();
@@ -568,6 +673,27 @@ mod tests {
         let bad = Response::error_wire(0, &ServeError::field("tiles", "need 1 <= tiles"));
         let r = Response::from_bytes(bad.as_bytes()).unwrap();
         assert!(!r.ok && !r.overload, "validation failure is not an overload");
+    }
+
+    #[test]
+    fn hex_blobs_round_trip_and_key_resume_requests() {
+        let blob = [0u8, 1, 0x7f, 0xff, 0xde, 0xad];
+        let hex = hex_encode(&blob);
+        assert_eq!(hex, "00017fffdead");
+        assert_eq!(hex_decode(&hex).unwrap(), blob);
+        assert!(hex_decode("abc").is_err(), "odd length");
+        assert!(hex_decode("zz").is_err(), "non-hex digits");
+
+        let a = parse_req("{\"kind\": \"resume\", \"snapshot\": \"deadbeef\", \"id\": 3}").unwrap();
+        let b = parse_req("{\"kind\": \"resume\", \"snapshot\": \"deadbeef\", \"id\": 9}").unwrap();
+        let c = parse_req("{\"kind\": \"resume\", \"snapshot\": \"deadbeee\"}").unwrap();
+        assert_eq!(a.canonical_key(), b.canonical_key(), "key is the blob digest, not the id");
+        assert_ne!(a.canonical_key(), c.canonical_key());
+        assert!(a.canonical_key().starts_with("resume/h"), "{}", a.canonical_key());
+
+        let s = parse_req("{\"kind\": \"suspend\", \"program\": \"sieve\", \"budget\": 77, \"tiles\": 256}")
+            .unwrap();
+        assert!(s.canonical_key().ends_with("/psieve/b77"), "{}", s.canonical_key());
     }
 
     #[test]

@@ -34,11 +34,15 @@ use std::time::{Duration, Instant};
 use crate::api::{DesignPoint, Mode, Report, Row};
 use crate::cc::{compile, corpus, Backend};
 use crate::coordinator::{default_jobs, ParallelSweep, PointResult, SweepPoint};
-use crate::emulation::SequentialMachine;
+use crate::emulation::{EmulationSetup, SequentialMachine};
 use crate::figures::contention::{cell_seed, eval_cell, row_for, Cell, CellResult};
 use crate::isa::decode::{predecode, FastMachine};
-use crate::isa::interp::{DirectMemory, EmulatedChannelMemory};
-use crate::serve::proto::{QueryKind, Request, ServeError};
+use crate::isa::interp::{DirectMemory, EmulatedChannelMemory, ExecCursor, RunOutcome};
+use crate::isa::snapshot::{
+    program_fingerprint, rebuild_memory, run_fast_slice, run_legacy_slice, BackendSnap, Snapshot,
+    Tier,
+};
+use crate::serve::proto::{hex_decode, hex_encode, QueryKind, Request, ServeError};
 use crate::util::cache::{CacheStats, LruCache};
 use crate::util::json::Json;
 
@@ -201,6 +205,8 @@ impl Service {
             QueryKind::Sweep => self.sweep_payload(req),
             QueryKind::Emulation => self.emulation_payload(req),
             QueryKind::Contention => self.contention_payload(req),
+            QueryKind::Suspend => self.suspend_payload(req),
+            QueryKind::Resume => self.resume_payload(req),
             // Parse never produces other kinds on this path.
             _ => Err(ServeError::Eval(format!("kind `{}` is not evaluable", req.kind.label()))),
         }
@@ -328,6 +334,111 @@ impl Service {
                 .num("slowdown", estats.cycles as f64 / dstats.cycles as f64)
                 .int("direct_bytes", direct.binary_bytes() as u64)
                 .int("emulated_bytes", emulated.binary_bytes() as u64),
+        );
+        Ok(report.render().trim_end().to_string())
+    }
+
+    /// Suspend: run the program on the fast machine over the emulated
+    /// backend, pause at the request's cycle budget, and ship the
+    /// complete machine state as a hex blob. The design point is built
+    /// with `default_tech` (NOT the service tech) so any replica — or
+    /// the CLI — can rebuild and verify the memory from the recorded
+    /// identity alone; that is what makes the suspend/resume pair a
+    /// migration primitive.
+    fn suspend_payload(&self, req: &Request) -> Result<String, ServeError> {
+        let err = |e: anyhow::Error| ServeError::Eval(format!("{e:#}"));
+        let prog = corpus::all()
+            .into_iter()
+            .find(|p| p.name == req.program)
+            .ok_or_else(|| {
+                ServeError::field("program", format!("unknown program `{}`", req.program))
+            })?;
+        let compiled = compile(prog.source, Backend::Emulated).map_err(err)?;
+        let decoded = predecode(&compiled.code).map_err(err)?;
+        let setup = EmulationSetup::default_tech(req.topo, req.tiles, req.mem_kb, req.k)
+            .map_err(|e| ServeError::Invalid(format!("{e:#}")))?;
+        let mut mem = EmulatedChannelMemory::new(setup);
+        let mut cursor = ExecCursor::default();
+        let name = format!("{}-{}-b{}", req.program, req.point_name(), req.budget);
+        let (outcome, state, max_steps) = {
+            let mut m = FastMachine::new(&mut mem, 1 << 16);
+            let outcome = m.run_until(&decoded, &mut cursor, Some(req.budget)).map_err(err)?;
+            let state = m.export_state(&cursor);
+            (outcome, state, m.max_steps)
+        };
+        let mut report = Report::new("serve.suspend");
+        let mut row = Row::new(&name)
+            .int("cycles", cursor.stats.cycles)
+            .int("instructions", cursor.stats.instructions);
+        match outcome {
+            RunOutcome::Halted => {
+                row = row.str("status", "halted").num("result", state.regs[0] as f64);
+            }
+            RunOutcome::Paused => {
+                let snap = Snapshot {
+                    tier: Tier::Fast,
+                    backend: BackendSnap::of_emulated(&mem),
+                    space_words: mem.setup().map.space_words(),
+                    max_steps,
+                    program: req.program.clone(),
+                    program_fnv: program_fingerprint(&compiled.code),
+                    state,
+                    pages: Snapshot::pages_of(mem.store()),
+                };
+                row = row.str("status", "paused").str("snapshot", &hex_encode(&snap.to_bytes()));
+            }
+        }
+        report.push(row);
+        Ok(report.render().trim_end().to_string())
+    }
+
+    /// Resume: rebuild a suspended run from its blob and drive it to
+    /// completion. The payload is a pure function of the blob (the
+    /// canonical key is the blob's digest).
+    fn resume_payload(&self, req: &Request) -> Result<String, ServeError> {
+        let bytes = hex_decode(&req.snapshot)?;
+        let snap = Snapshot::from_bytes(&bytes)
+            .map_err(|e| ServeError::Eval(format!("snapshot rejected: {e}")))?;
+        let prog = corpus::all()
+            .into_iter()
+            .find(|p| p.name == snap.program)
+            .ok_or_else(|| {
+                ServeError::Eval(format!("snapshot program `{}` is not in the corpus", snap.program))
+            })?;
+        let cc_backend = match &snap.backend {
+            BackendSnap::Direct { .. } => Backend::Direct,
+            BackendSnap::Emulated { .. } => Backend::Emulated,
+        };
+        let err = |e: anyhow::Error| ServeError::Eval(format!("{e:#}"));
+        let compiled = compile(prog.source, cc_backend).map_err(err)?;
+        snap.check_program(&compiled.code)
+            .map_err(|e| ServeError::Eval(format!("snapshot rejected: {e}")))?;
+        let mut memory =
+            rebuild_memory(&snap).map_err(|e| ServeError::Eval(format!("snapshot rejected: {e}")))?;
+        let slice = match snap.tier {
+            Tier::Fast => {
+                let decoded = predecode(&compiled.code).map_err(err)?;
+                run_fast_slice(&decoded, memory.as_dyn(), &snap.state, snap.max_steps, None)
+            }
+            Tier::Legacy => {
+                run_legacy_slice(&compiled.code, memory.as_dyn(), &snap.state, snap.max_steps, None)
+            }
+        };
+        match slice.outcome {
+            Ok(true) => {}
+            Ok(false) => return Err(ServeError::Eval("unbounded resume paused".into())),
+            Err(e) => return Err(ServeError::Eval(format!("resumed run failed: {e}"))),
+        }
+        let mut report = Report::new("serve.resume");
+        report.push(
+            Row::new(&format!("{}-resume", snap.program))
+                .str("status", "halted")
+                .str("tier", snap.tier.label())
+                .str("backend", snap.backend.label())
+                .int("resumed_from_cycles", snap.state.stats.cycles)
+                .int("cycles", slice.state.stats.cycles)
+                .int("instructions", slice.state.stats.instructions)
+                .num("result", slice.state.regs[0] as f64),
         );
         Ok(report.render().trim_end().to_string())
     }
@@ -614,6 +725,39 @@ mod tests {
         let got: Vec<String> = handles.into_iter().map(|h| h.join().unwrap()).collect();
         assert_eq!(want, got, "batching must not change a single byte");
         assert!(batched.stats().batches >= 1);
+    }
+
+    #[test]
+    fn suspend_then_resume_migrates_a_run_to_completion() {
+        let svc = exact_service(1);
+        let paused = svc
+            .handle(&req(
+                "{\"kind\": \"suspend\", \"tiles\": 64, \"k\": 15, \"mem_kb\": 64, \"program\": \"sieve\", \"budget\": 200}",
+            ))
+            .unwrap();
+        assert!(paused.contains("\"status\": \"paused\""), "{paused}");
+        let hex = paused
+            .split("\"snapshot\": \"")
+            .nth(1)
+            .and_then(|rest| rest.split('"').next())
+            .expect("paused payload carries a snapshot blob")
+            .to_string();
+        // A fresh service instance resumes the blob: migration needs
+        // nothing beyond the snapshot itself.
+        let other = exact_service(1);
+        let done = other
+            .handle(&req(&format!("{{\"kind\": \"resume\", \"snapshot\": \"{hex}\"}}")))
+            .unwrap();
+        assert!(done.contains("\"status\": \"halted\""), "{done}");
+        assert!(done.contains("\"result\": 78"), "sieve must finish with 78: {done}");
+        // A corrupted blob is a typed evaluation error, not a panic.
+        let mut bad = hex.clone();
+        let flip = bad.pop().map(|c| if c == '0' { '1' } else { '0' }).unwrap();
+        bad.push(flip);
+        let err = other
+            .handle(&req(&format!("{{\"kind\": \"resume\", \"snapshot\": \"{bad}\"}}")))
+            .unwrap_err();
+        assert!(format!("{err}").contains("snapshot rejected"), "{err}");
     }
 
     #[test]

@@ -64,6 +64,28 @@ impl PagedStore {
         self.pages.iter().filter(|p| p.is_some()).count()
     }
 
+    /// Iterate the allocated pages as `(page_index, words)`, in
+    /// ascending page order — the sparse view machine snapshots
+    /// serialise ([`crate::isa::snapshot`]).
+    pub fn pages(&self) -> impl Iterator<Item = (u64, &[i64])> {
+        self.pages
+            .iter()
+            .enumerate()
+            .filter_map(|(i, p)| p.as_deref().map(|data| (i as u64, data)))
+    }
+
+    /// Install a full page of words at `page` (snapshot restore). The
+    /// slice must hold exactly [`PAGE_WORDS`] words — the snapshot
+    /// reader guarantees this before calling.
+    pub fn load_page(&mut self, page: u64, words: &[i64]) {
+        assert_eq!(words.len(), PAGE_WORDS, "load_page wants a full page");
+        let page = page as usize;
+        if page >= self.pages.len() {
+            self.pages.resize_with(page + 1, || None);
+        }
+        self.pages[page] = Some(words.to_vec().into_boxed_slice());
+    }
+
     /// Bytes of word data currently allocated.
     pub fn allocated_bytes(&self) -> usize {
         self.allocated_pages() * PAGE_WORDS * std::mem::size_of::<i64>()
@@ -115,6 +137,27 @@ mod tests {
         let s = PagedStore::with_capacity_words(1 << 24);
         assert_eq!(s.allocated_pages(), 0);
         assert_eq!(s.read(1 << 23), 0);
+    }
+
+    #[test]
+    fn pages_roundtrip_through_load_page() {
+        let mut s = PagedStore::new();
+        s.write(3, -1);
+        s.write(2 * PAGE_WORDS as u64 + 7, 99);
+        let saved: Vec<(u64, Vec<i64>)> =
+            s.pages().map(|(i, d)| (i, d.to_vec())).collect();
+        assert_eq!(saved.len(), 2);
+        assert_eq!(saved[0].0, 0);
+        assert_eq!(saved[1].0, 2);
+
+        let mut restored = PagedStore::with_capacity_words(4 * PAGE_WORDS as u64);
+        for (i, d) in &saved {
+            restored.load_page(*i, d);
+        }
+        assert_eq!(restored.read(3), -1);
+        assert_eq!(restored.read(2 * PAGE_WORDS as u64 + 7), 99);
+        assert_eq!(restored.read(PAGE_WORDS as u64), 0);
+        assert_eq!(restored.allocated_pages(), 2);
     }
 
     #[test]

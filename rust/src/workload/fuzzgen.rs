@@ -1,0 +1,1264 @@
+//! Generative differential fuzzing of the execution tiers.
+//!
+//! A typed random miniC program generator in the style of cranelift's
+//! fuzzgen: it builds well-formed [`crate::cc::ast`] trees directly —
+//! arithmetic over scoped locals and globals, power-of-two arrays with
+//! masked indices, fuel-bounded `while` loops, acyclic calls with
+//! bounded depth — renders them to source, and drives every
+//! registered execution tier differentially over both memory backends.
+//!
+//! **Seed purity:** case `(seed, index)` is generated from
+//! `Rng::new(point_seed(seed, index))` and nothing else, so every case
+//! is reproducible from those two numbers alone, on any machine, at
+//! any parallelism. The Python port (`python/tests/`) regenerates the
+//! first cases of seed 0 byte-for-byte from the same stream.
+//!
+//! **The oracle rule** (what a future JIT must satisfy to join the
+//! harness): for any program every tier accepts, a tier must produce
+//! the *bit-identical* [`RunStats`] and register file of the legacy
+//! [`Machine`]; for any program that fails at runtime, the
+//! *byte-identical* error string. Implement [`ExecTier`] and append
+//! the tier to [`tiers`] — the harness compares every tier against the
+//! legacy baseline on both [`DirectMemory`] and
+//! [`EmulatedChannelMemory`], and additionally checks that the two
+//! backends agree on the program's result (`r0`) when both halt.
+//!
+//! On a divergence the greedy AST [`shrink`]er minimises the case —
+//! dropping statements, unrolling loops to straight line, narrowing
+//! constants, collapsing operators and calls — keeping only mutants
+//! that still compile *and* still diverge, and the driver emits a
+//! replayable `.cc` artifact carrying its `(seed, index)`.
+//!
+//! Generated programs avoid miniC's intentional degenerate corners so
+//! a case exercises the tiers rather than the step limit: array
+//! indices are masked to the (power-of-two) array size, divisor
+//! operands are small nonzero constants and dividends are masked
+//! non-negative (division lowers to repeated subtraction), and every
+//! loop carries a fuel counter. Runtime faults still occur — deep
+//! frames overflow the local memory, fuelled loops still hit tight
+//! step limits — and those error strings are part of the differential
+//! surface.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::cc::ast::{BinOp, Expr, Function, GlobalDecl, Program, Stmt};
+use crate::cc::{compile, Backend};
+use crate::coordinator::point_seed;
+use crate::emulation::{EmulationSetup, SequentialMachine, TopologyKind};
+use crate::isa::snapshot::{
+    fnv1a64, program_fingerprint, rebuild_memory, run_fast_slice, BackendSnap, Snapshot, Tier,
+};
+use crate::isa::{
+    predecode, DirectMemory, EmulatedChannelMemory, ExecCursor, FastMachine, Inst, Machine,
+    MemorySystem, RunOutcome, RunStats,
+};
+use crate::util::rng::Rng;
+
+/// Local-memory words each fuzz machine gets (deep call chains can
+/// legitimately overflow this — the error string is compared too).
+pub const FUZZ_LOCAL_WORDS: usize = 512;
+/// Step limit for fuzz runs (small enough that fuelled loops which
+/// still run away fail fast, identically, on every tier).
+pub const FUZZ_MAX_STEPS: u64 = 50_000;
+
+// ---------------------------------------------------------------------------
+// Generator
+// ---------------------------------------------------------------------------
+
+const BIN_OPS: [BinOp; 14] = [
+    BinOp::Add,
+    BinOp::Sub,
+    BinOp::Mul,
+    BinOp::Div,
+    BinOp::Mod,
+    BinOp::Lt,
+    BinOp::Gt,
+    BinOp::Le,
+    BinOp::Ge,
+    BinOp::Eq,
+    BinOp::Ne,
+    BinOp::And,
+    BinOp::Or,
+    BinOp::Xor,
+];
+
+const CMP_OPS: [BinOp; 6] =
+    [BinOp::Lt, BinOp::Gt, BinOp::Le, BinOp::Ge, BinOp::Eq, BinOp::Ne];
+
+struct Gen {
+    r: Rng,
+    /// Scalar global names.
+    scalars: Vec<String>,
+    /// (array name, power-of-two size).
+    arrays: Vec<(String, u64)>,
+    /// Callable (already generated) functions: (name, arity).
+    callable: Vec<(String, usize)>,
+    /// Locals in scope in the function being generated.
+    locals: Vec<String>,
+    /// Per-function counters for unique names.
+    local_counter: usize,
+    fuel_counter: usize,
+}
+
+/// Generate fuzz case `(seed, index)` — a pure function of those two
+/// numbers (see the module docs). The Python port mirrors this routine
+/// draw for draw; change them in lockstep.
+pub fn generate(seed: u64, index: u64) -> Program {
+    let mut g = Gen {
+        r: Rng::new(point_seed(seed, index)),
+        scalars: Vec::new(),
+        arrays: Vec::new(),
+        callable: Vec::new(),
+        locals: Vec::new(),
+        local_counter: 0,
+        fuel_counter: 0,
+    };
+    g.program()
+}
+
+impl Gen {
+    fn program(&mut self) -> Program {
+        let mut p = Program::default();
+        let n_scalars = 1 + self.r.below(3) as usize;
+        for i in 0..n_scalars {
+            let name = format!("g{i}");
+            self.scalars.push(name.clone());
+            p.globals.push(GlobalDecl { name, size: 1 });
+        }
+        let n_arrays = 1 + self.r.below(2) as usize;
+        for i in 0..n_arrays {
+            let name = format!("a{i}");
+            let size = 8u64 << self.r.below(4); // 8, 16, 32 or 64
+            self.arrays.push((name.clone(), size));
+            p.globals.push(GlobalDecl { name, size });
+        }
+        let n_helpers = self.r.below(3) as usize;
+        for i in 0..n_helpers {
+            let name = format!("f{i}");
+            let arity = self.r.below(3) as usize;
+            let params: Vec<String> = (0..arity).map(|j| format!("p{j}")).collect();
+            let body = self.function_body(&params, 6 + self.r.below(10) as usize);
+            self.callable.push((name.clone(), arity));
+            p.functions.push(Function { name, params, body });
+        }
+        let body = self.function_body(&[], 8 + self.r.below(12) as usize);
+        p.functions.push(Function { name: "main".into(), params: Vec::new(), body });
+        p
+    }
+
+    fn function_body(&mut self, params: &[String], mut budget: usize) -> Vec<Stmt> {
+        self.locals = params.to_vec();
+        self.local_counter = 0;
+        self.fuel_counter = 0;
+        let mut body = Vec::new();
+        self.block(&mut body, 0, &mut budget);
+        body.push(Stmt::Return(self.expr(2)));
+        body
+    }
+
+    fn block(&mut self, out: &mut Vec<Stmt>, loop_depth: u32, budget: &mut usize) {
+        let n = 1 + self.r.below(4) as usize;
+        for _ in 0..n {
+            if *budget == 0 {
+                break;
+            }
+            *budget -= 1;
+            self.emit_stmt(out, loop_depth, budget);
+        }
+    }
+
+    fn emit_stmt(&mut self, out: &mut Vec<Stmt>, loop_depth: u32, budget: &mut usize) {
+        match self.r.below(8) {
+            0 | 1 => {
+                let e = self.expr(2);
+                out.push(Stmt::DeclLocal(self.fresh_local(), Some(e)));
+            }
+            2 => {
+                if self.locals.is_empty() {
+                    let e = self.expr(2);
+                    out.push(Stmt::DeclLocal(self.fresh_local(), Some(e)));
+                } else {
+                    let name = self.r.choose(&self.locals).clone();
+                    out.push(Stmt::AssignLocal(name, self.expr(2)));
+                }
+            }
+            3 => {
+                let name = self.r.choose(&self.scalars).clone();
+                out.push(Stmt::AssignGlobal(name, self.expr(2)));
+            }
+            4 => {
+                let (name, size) = self.r.choose(&self.arrays).clone();
+                let idx = self.masked_index(size);
+                out.push(Stmt::AssignIndex(name, idx, self.expr(2)));
+            }
+            5 => {
+                let cond = self.cmp_expr();
+                let scope = self.locals.len();
+                let mut then = Vec::new();
+                self.block(&mut then, loop_depth, budget);
+                self.locals.truncate(scope);
+                let mut els = Vec::new();
+                if self.r.below(2) == 0 {
+                    self.block(&mut els, loop_depth, budget);
+                    self.locals.truncate(scope);
+                }
+                out.push(Stmt::If(cond, then, els));
+            }
+            6 => {
+                if loop_depth < 2 {
+                    // Fuel-bounded loop: the fuel decl stays in the
+                    // enclosing scope; the body burns one fuel first.
+                    let fuel = format!("fuel{}", self.fuel_counter);
+                    self.fuel_counter += 1;
+                    let initial = 1 + self.r.below(8) as i64;
+                    out.push(Stmt::DeclLocal(fuel.clone(), Some(Expr::Int(initial))));
+                    self.locals.push(fuel.clone());
+                    let cond = Expr::Bin(
+                        BinOp::And,
+                        Box::new(self.cmp_expr()),
+                        Box::new(Expr::Bin(
+                            BinOp::Lt,
+                            Box::new(Expr::Int(0)),
+                            Box::new(Expr::Local(fuel.clone())),
+                        )),
+                    );
+                    let scope = self.locals.len();
+                    let mut body = vec![Stmt::AssignLocal(
+                        fuel.clone(),
+                        Expr::Bin(
+                            BinOp::Sub,
+                            Box::new(Expr::Local(fuel)),
+                            Box::new(Expr::Int(1)),
+                        ),
+                    )];
+                    self.block(&mut body, loop_depth + 1, budget);
+                    self.locals.truncate(scope);
+                    out.push(Stmt::While(cond, body));
+                } else {
+                    let name = self.r.choose(&self.scalars).clone();
+                    out.push(Stmt::AssignGlobal(name, self.expr(2)));
+                }
+            }
+            _ => {
+                if self.callable.is_empty() {
+                    let name = self.r.choose(&self.scalars).clone();
+                    out.push(Stmt::AssignGlobal(name, self.expr(2)));
+                } else {
+                    out.push(Stmt::ExprStmt(self.call_expr(2)));
+                }
+            }
+        }
+    }
+
+    fn fresh_local(&mut self) -> String {
+        let name = format!("v{}", self.local_counter);
+        self.local_counter += 1;
+        self.locals.push(name.clone());
+        name
+    }
+
+    fn masked_index(&mut self, size: u64) -> Expr {
+        Expr::Bin(
+            BinOp::And,
+            Box::new(self.expr(2)),
+            Box::new(Expr::Int(size as i64 - 1)),
+        )
+    }
+
+    fn cmp_expr(&mut self) -> Expr {
+        let op = *self.r.choose(&CMP_OPS);
+        Expr::Bin(op, Box::new(self.expr(2)), Box::new(self.expr(2)))
+    }
+
+    fn call_expr(&mut self, depth: u32) -> Expr {
+        let (name, arity) = self.r.choose(&self.callable).clone();
+        let args = (0..arity).map(|_| self.expr(depth.saturating_sub(1))).collect();
+        Expr::Call(name, args)
+    }
+
+    fn expr(&mut self, depth: u32) -> Expr {
+        if depth == 0 {
+            return self.leaf();
+        }
+        match self.r.below(10) {
+            0..=3 => self.leaf(),
+            4..=6 => {
+                let op = *self.r.choose(&BIN_OPS);
+                if op == BinOp::Div || op == BinOp::Mod {
+                    // Non-negative, bounded dividend; small nonzero
+                    // constant divisor: division lowers to repeated
+                    // subtraction, so unbounded operands would turn
+                    // every case into a step-limit run.
+                    let dividend = Expr::Bin(
+                        BinOp::And,
+                        Box::new(self.expr(depth - 1)),
+                        Box::new(Expr::Int(1023)),
+                    );
+                    let divisor = Expr::Int(1 + self.r.below(7) as i64);
+                    Expr::Bin(op, Box::new(dividend), Box::new(divisor))
+                } else {
+                    let lhs = self.expr(depth - 1);
+                    let rhs = self.expr(depth - 1);
+                    Expr::Bin(op, Box::new(lhs), Box::new(rhs))
+                }
+            }
+            7 => {
+                if self.arrays.is_empty() {
+                    self.leaf()
+                } else {
+                    let (name, size) = self.r.choose(&self.arrays).clone();
+                    let idx = self.masked_index(size);
+                    Expr::GlobalIndex(name, Box::new(idx))
+                }
+            }
+            8 => {
+                if self.callable.is_empty() {
+                    self.leaf()
+                } else {
+                    self.call_expr(depth)
+                }
+            }
+            _ => self.leaf(),
+        }
+    }
+
+    fn leaf(&mut self) -> Expr {
+        match self.r.below(6) {
+            0 | 1 => Expr::Int(self.r.below(65) as i64),
+            2 | 3 => {
+                if self.locals.is_empty() {
+                    Expr::Int(self.r.below(65) as i64)
+                } else {
+                    Expr::Local(self.r.choose(&self.locals).clone())
+                }
+            }
+            4 => Expr::GlobalVar(self.r.choose(&self.scalars).clone()),
+            _ => Expr::Int(self.r.below(1025) as i64),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Renderer
+// ---------------------------------------------------------------------------
+
+/// Render a program to miniC source the front end parses back to the
+/// same tree (every binary expression fully parenthesised, so operator
+/// precedence and the non-chaining comparison rule cannot bite).
+pub fn render(p: &Program) -> String {
+    let mut s = String::new();
+    for g in &p.globals {
+        if g.size == 1 {
+            s.push_str(&format!("global {};\n", g.name));
+        } else {
+            s.push_str(&format!("global {}[{}];\n", g.name, g.size));
+        }
+    }
+    for f in &p.functions {
+        s.push_str(&format!("fn {}({}) {{\n", f.name, f.params.join(", ")));
+        render_block(&f.body, 1, &mut s);
+        s.push_str("}\n");
+    }
+    s
+}
+
+fn indent(level: usize, out: &mut String) {
+    for _ in 0..level {
+        out.push_str("    ");
+    }
+}
+
+fn render_block(stmts: &[Stmt], level: usize, out: &mut String) {
+    for stmt in stmts {
+        render_stmt(stmt, level, out);
+    }
+}
+
+fn render_stmt(stmt: &Stmt, level: usize, out: &mut String) {
+    indent(level, out);
+    match stmt {
+        Stmt::DeclLocal(name, Some(e)) => {
+            out.push_str(&format!("var {name} = {};\n", render_expr(e)));
+        }
+        Stmt::DeclLocal(name, None) => out.push_str(&format!("var {name};\n")),
+        Stmt::AssignLocal(name, e) | Stmt::AssignGlobal(name, e) => {
+            out.push_str(&format!("{name} = {};\n", render_expr(e)));
+        }
+        Stmt::AssignIndex(name, idx, e) => {
+            out.push_str(&format!("{name}[{}] = {};\n", render_expr(idx), render_expr(e)));
+        }
+        Stmt::If(cond, then, els) => {
+            out.push_str(&format!("if ({}) {{\n", render_expr(cond)));
+            render_block(then, level + 1, out);
+            indent(level, out);
+            if els.is_empty() {
+                out.push_str("}\n");
+            } else {
+                out.push_str("} else {\n");
+                render_block(els, level + 1, out);
+                indent(level, out);
+                out.push_str("}\n");
+            }
+        }
+        Stmt::While(cond, body) => {
+            out.push_str(&format!("while ({}) {{\n", render_expr(cond)));
+            render_block(body, level + 1, out);
+            indent(level, out);
+            out.push_str("}\n");
+        }
+        Stmt::Return(e) => out.push_str(&format!("return {};\n", render_expr(e))),
+        Stmt::ExprStmt(e) => out.push_str(&format!("{};\n", render_expr(e))),
+    }
+}
+
+fn op_token(op: BinOp) -> &'static str {
+    match op {
+        BinOp::Add => "+",
+        BinOp::Sub => "-",
+        BinOp::Mul => "*",
+        BinOp::Div => "/",
+        BinOp::Mod => "%",
+        BinOp::Lt => "<",
+        BinOp::Gt => ">",
+        BinOp::Le => "<=",
+        BinOp::Ge => ">=",
+        BinOp::Eq => "==",
+        BinOp::Ne => "!=",
+        BinOp::And => "&",
+        BinOp::Or => "|",
+        BinOp::Xor => "^",
+    }
+}
+
+fn render_expr(e: &Expr) -> String {
+    match e {
+        Expr::Int(v) => {
+            if *v >= 0 {
+                v.to_string()
+            } else {
+                // The parser desugars unary minus to `0 - x`; render
+                // negatives in that shape so round-trips stay stable.
+                format!("(0 - {})", (*v as i128).unsigned_abs())
+            }
+        }
+        Expr::Local(name) | Expr::GlobalVar(name) => name.clone(),
+        Expr::GlobalIndex(name, idx) => format!("{name}[{}]", render_expr(idx)),
+        Expr::Bin(op, a, b) => {
+            format!("({} {} {})", render_expr(a), op_token(*op), render_expr(b))
+        }
+        Expr::Call(name, args) => {
+            let args: Vec<String> = args.iter().map(render_expr).collect();
+            format!("{name}({})", args.join(", "))
+        }
+    }
+}
+
+/// FNV-1a digest of a case's rendered source — the unit of the Python
+/// cross-check goldens.
+pub fn case_digest(seed: u64, index: u64) -> u64 {
+    fnv1a64(render(&generate(seed, index)).as_bytes())
+}
+
+// ---------------------------------------------------------------------------
+// Execution tiers + differential harness
+// ---------------------------------------------------------------------------
+
+/// What one tier produced: stats + the full register file, or the
+/// runtime error string.
+pub type TierOutcome = Result<(RunStats, [i64; 16]), String>;
+
+/// One execution tier in the differential harness. See the module docs
+/// for the oracle rule a new tier (the future JIT) must satisfy.
+pub trait ExecTier {
+    /// Display name (used in divergence reports).
+    fn name(&self) -> &'static str;
+    /// Run `program` to completion over `mem`.
+    fn run(
+        &self,
+        program: &[Inst],
+        mem: &mut dyn MemorySystem,
+        local_words: usize,
+        max_steps: u64,
+    ) -> TierOutcome;
+}
+
+/// The legacy enum-match interpreter — the baseline every other tier
+/// is measured against.
+pub struct LegacyTier;
+
+impl ExecTier for LegacyTier {
+    fn name(&self) -> &'static str {
+        "legacy"
+    }
+
+    fn run(
+        &self,
+        program: &[Inst],
+        mem: &mut dyn MemorySystem,
+        local_words: usize,
+        max_steps: u64,
+    ) -> TierOutcome {
+        let mut m = Machine::new(mem, local_words);
+        m.max_steps = max_steps;
+        match m.run(program) {
+            Ok(stats) => Ok((stats, std::array::from_fn(|i| m.reg(i as u8)))),
+            Err(e) => Err(e.to_string()),
+        }
+    }
+}
+
+/// The predecoded direct-threaded interpreter.
+pub struct FastTier;
+
+impl ExecTier for FastTier {
+    fn name(&self) -> &'static str {
+        "fast"
+    }
+
+    fn run(
+        &self,
+        program: &[Inst],
+        mem: &mut dyn MemorySystem,
+        local_words: usize,
+        max_steps: u64,
+    ) -> TierOutcome {
+        let decoded = predecode(program).map_err(|e| format!("predecode: {e}"))?;
+        let mut mem = mem;
+        let mut m = FastMachine::new(&mut mem, local_words);
+        m.max_steps = max_steps;
+        match m.run(&decoded) {
+            Ok(stats) => Ok((stats, *m.regs())),
+            Err(e) => Err(e.to_string()),
+        }
+    }
+}
+
+/// The registered tiers, baseline first. A future JIT appends itself
+/// here and inherits the whole differential surface.
+pub fn tiers() -> Vec<Box<dyn ExecTier>> {
+    vec![Box::new(LegacyTier), Box::new(FastTier)]
+}
+
+/// One observed divergence (or generator-side failure).
+#[derive(Clone, Debug)]
+pub struct Divergence {
+    /// Backend the divergence appeared on (`direct`, `emulated`,
+    /// `cross-backend`, or `snapshot`).
+    pub backend: &'static str,
+    /// Tier (or stage) that disagreed with the baseline.
+    pub tier: String,
+    /// Human-readable description.
+    pub detail: String,
+}
+
+impl std::fmt::Display for Divergence {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}/{}] {}", self.backend, self.tier, self.detail)
+    }
+}
+
+fn compare_outcomes(base: &TierOutcome, other: &TierOutcome) -> Result<(), String> {
+    match (base, other) {
+        (Ok((bs, br)), Ok((os, or))) => {
+            if bs != os {
+                return Err(format!("stats diverge: baseline {bs:?} vs {os:?}"));
+            }
+            if br != or {
+                return Err(format!("registers diverge: baseline {br:?} vs {or:?}"));
+            }
+            Ok(())
+        }
+        (Err(be), Err(oe)) => {
+            if be != oe {
+                return Err(format!("error strings diverge: `{be}` vs `{oe}`"));
+            }
+            Ok(())
+        }
+        (Ok((bs, _)), Err(oe)) => {
+            Err(format!("baseline halted ({bs:?}) but tier errored: `{oe}`"))
+        }
+        (Err(be), Ok((os, _))) => {
+            Err(format!("baseline errored (`{be}`) but tier halted ({os:?})"))
+        }
+    }
+}
+
+/// The differential harness: a fixed pair of memory backends (one
+/// sequential DRAM point, one emulated Clos point with the same
+/// power-of-two address space) and the registered tiers.
+pub struct DiffHarness {
+    setup: EmulationSetup,
+    direct_space: u64,
+    /// Local-memory words per machine.
+    pub local_words: usize,
+    /// Step limit per run.
+    pub max_steps: u64,
+}
+
+impl DiffHarness {
+    /// Harness at the default fuzz design point (256-tile Clos,
+    /// 64 KiB tiles, k = 128 → a 2^20-word space on both backends, so
+    /// address wrap-around behaves identically across backends).
+    pub fn new() -> Result<Self> {
+        let setup = EmulationSetup::default_tech(TopologyKind::Clos, 256, 64, 128)
+            .context("building the fuzz emulation point")?;
+        let direct_space = setup.map.space_words();
+        Ok(Self { setup, direct_space, local_words: FUZZ_LOCAL_WORDS, max_steps: FUZZ_MAX_STEPS })
+    }
+
+    fn run_tier(&self, tier: &dyn ExecTier, backend: &'static str, prog: &[Inst]) -> TierOutcome {
+        if backend == "direct" {
+            let mut mem =
+                DirectMemory::new(SequentialMachine::paper_figures(false), self.direct_space);
+            tier.run(prog, &mut mem, self.local_words, self.max_steps)
+        } else {
+            let mut mem = EmulatedChannelMemory::new(self.setup.clone());
+            tier.run(prog, &mut mem, self.local_words, self.max_steps)
+        }
+    }
+
+    fn run_all_tiers(
+        &self,
+        backend: &'static str,
+        prog: &[Inst],
+    ) -> Result<TierOutcome, Divergence> {
+        let tiers = tiers();
+        let mut baseline: Option<TierOutcome> = None;
+        for tier in &tiers {
+            let outcome = self.run_tier(tier.as_ref(), backend, prog);
+            match &baseline {
+                None => baseline = Some(outcome),
+                Some(base) => compare_outcomes(base, &outcome).map_err(|detail| Divergence {
+                    backend,
+                    tier: tier.name().into(),
+                    detail,
+                })?,
+            }
+        }
+        Ok(baseline.expect("at least one tier"))
+    }
+
+    /// Run one source program through every tier on both backends;
+    /// `Err` is the first divergence. Compile failures surface as a
+    /// `cc`-stage divergence (the generator promises well-formed
+    /// programs, so a compile error is itself a bug to minimise).
+    pub fn check_source(&self, src: &str) -> Result<(), Divergence> {
+        let direct = compile(src, Backend::Direct).map_err(|e| Divergence {
+            backend: "direct",
+            tier: "cc".into(),
+            detail: format!("compile failed: {e}"),
+        })?;
+        let emulated = compile(src, Backend::Emulated).map_err(|e| Divergence {
+            backend: "emulated",
+            tier: "cc".into(),
+            detail: format!("compile failed: {e}"),
+        })?;
+        let d = self.run_all_tiers("direct", &direct.code)?;
+        let e = self.run_all_tiers("emulated", &emulated.code)?;
+        if let (Ok((_, dr)), Ok((_, er))) = (&d, &e) {
+            if dr[0] != er[0] {
+                return Err(Divergence {
+                    backend: "cross-backend",
+                    tier: "result".into(),
+                    detail: format!(
+                        "program result r0 diverges across backends: direct {} vs emulated {}",
+                        dr[0], er[0]
+                    ),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Snapshot-slice oracle: run the fast tier on the emulated
+    /// backend uninterrupted, then again paused at a `slice_seed`-drawn
+    /// cycle with the full state serialised through the
+    /// [`Snapshot`] binary format and a rebuilt memory — both runs
+    /// must agree bit-for-bit (stats, registers, error strings).
+    pub fn check_snapshot_slice(&self, src: &str, slice_seed: u64) -> Result<(), Divergence> {
+        let snap_div = |detail: String| Divergence {
+            backend: "snapshot",
+            tier: "fast".into(),
+            detail,
+        };
+        let emulated = compile(src, Backend::Emulated)
+            .map_err(|e| snap_div(format!("compile failed: {e}")))?;
+        let decoded =
+            predecode(&emulated.code).map_err(|e| snap_div(format!("predecode: {e}")))?;
+
+        // Uninterrupted reference run.
+        let mut ref_mem = EmulatedChannelMemory::new(self.setup.clone());
+        let reference = FastTier.run(
+            &emulated.code,
+            &mut ref_mem,
+            self.local_words,
+            self.max_steps,
+        );
+        let total_cycles = match &reference {
+            Ok((stats, _)) => stats.cycles,
+            Err(_) => 2_000,
+        };
+        let mut r = Rng::new(slice_seed);
+        let limit = 1 + r.below(total_cycles.max(2));
+
+        // Sliced run: pause at `limit`, freeze through the binary
+        // format, rebuild, resume to completion.
+        let mut mem = EmulatedChannelMemory::new(self.setup.clone());
+        let sliced: TierOutcome = {
+            let mut paused: Option<Snapshot> = None;
+            let first = {
+                let mut m = FastMachine::new(&mut mem, self.local_words);
+                m.max_steps = self.max_steps;
+                let mut cursor = ExecCursor::default();
+                match m.run_until(&decoded, &mut cursor, Some(limit)) {
+                    Ok(RunOutcome::Halted) => Some(Ok((cursor.stats, *m.regs()))),
+                    Ok(RunOutcome::Paused) => {
+                        let state = m.export_state(&cursor);
+                        paused = Some(Snapshot {
+                            tier: Tier::Fast,
+                            backend: BackendSnap::Emulated {
+                                topo: TopologyKind::Clos,
+                                tiles: self.setup.map.tiles as u64,
+                                mem_kb: self.setup.mem_kb,
+                                k: self.setup.map.k as u64,
+                                shift: self.setup.map.log2_words_per_tile,
+                                rank_cycles: Vec::new(), // filled below
+                            },
+                            space_words: self.direct_space,
+                            max_steps: self.max_steps,
+                            program: "fuzz".into(),
+                            program_fnv: program_fingerprint(&emulated.code),
+                            state,
+                            pages: Vec::new(), // filled below
+                        });
+                        None
+                    }
+                    Err(e) => Some(Err(e.to_string())),
+                }
+            };
+            match first {
+                Some(done) => done,
+                None => {
+                    let mut snap = paused.expect("paused path sets the snapshot");
+                    snap.backend = BackendSnap::of_emulated(&mem);
+                    snap.pages = Snapshot::pages_of(mem.store());
+                    let bytes = snap.to_bytes();
+                    let snap = Snapshot::from_bytes(&bytes)
+                        .map_err(|e| snap_div(format!("snapshot round-trip: {e}")))?;
+                    snap.check_tier(Tier::Fast)
+                        .map_err(|e| snap_div(e.to_string()))?;
+                    snap.check_program(&emulated.code)
+                        .map_err(|e| snap_div(e.to_string()))?;
+                    let mut rebuilt = rebuild_memory(&snap)
+                        .map_err(|e| snap_div(format!("rebuild: {e}")))?;
+                    let slice = run_fast_slice(
+                        &decoded,
+                        rebuilt.as_dyn(),
+                        &snap.state,
+                        snap.max_steps,
+                        None,
+                    );
+                    match slice.outcome {
+                        Ok(true) => Ok((slice.state.stats, slice.state.regs)),
+                        Ok(false) => {
+                            return Err(snap_div("unbounded resume paused".into()))
+                        }
+                        Err(e) => Err(e),
+                    }
+                }
+            }
+        };
+        compare_outcomes(&reference, &sliced).map_err(|detail| {
+            snap_div(format!("resumed run diverges from uninterrupted run: {detail}"))
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shrinker
+// ---------------------------------------------------------------------------
+
+fn for_each_block(p: &mut Program, f: &mut impl FnMut(&mut Vec<Stmt>) -> bool) -> bool {
+    fn walk(block: &mut Vec<Stmt>, f: &mut impl FnMut(&mut Vec<Stmt>) -> bool) -> bool {
+        if f(block) {
+            return true;
+        }
+        for stmt in block.iter_mut() {
+            match stmt {
+                Stmt::If(_, t, e) => {
+                    if walk(t, f) || walk(e, f) {
+                        return true;
+                    }
+                }
+                Stmt::While(_, b) => {
+                    if walk(b, f) {
+                        return true;
+                    }
+                }
+                _ => {}
+            }
+        }
+        false
+    }
+    for func in &mut p.functions {
+        if walk(&mut func.body, f) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Remove the `target`-th statement (pre-order over all blocks).
+fn try_remove_stmt(prog: &Program, target: usize) -> Option<Program> {
+    let mut p = prog.clone();
+    let mut counter = 0usize;
+    let done = for_each_block(&mut p, &mut |block| {
+        if target < counter + block.len() {
+            block.remove(target - counter);
+            true
+        } else {
+            counter += block.len();
+            false
+        }
+    });
+    done.then_some(p)
+}
+
+/// Flatten the `target`-th statement: a `While` becomes its body run
+/// once (straight line), an `If` becomes one branch (`variant` picks
+/// which).
+fn try_flatten_stmt(prog: &Program, target: usize, variant: u8) -> Option<Program> {
+    let mut p = prog.clone();
+    let mut counter = 0usize;
+    let mut changed = false;
+    for_each_block(&mut p, &mut |block| {
+        if target < counter + block.len() {
+            let i = target - counter;
+            let replacement = match &block[i] {
+                Stmt::While(_, body) => Some(body.clone()),
+                Stmt::If(_, t, e) => {
+                    Some(if variant == 0 { t.clone() } else { e.clone() })
+                }
+                _ => None,
+            };
+            if let Some(stmts) = replacement {
+                block.splice(i..=i, stmts);
+                changed = true;
+            }
+            true
+        } else {
+            counter += block.len();
+            false
+        }
+    });
+    changed.then_some(p)
+}
+
+fn stmt_count(p: &Program) -> usize {
+    let mut p = p.clone();
+    let mut n = 0usize;
+    for_each_block(&mut p, &mut |block| {
+        n += block.len();
+        false
+    });
+    n
+}
+
+fn for_each_expr(p: &mut Program, f: &mut impl FnMut(&mut Expr) -> bool) -> bool {
+    fn walk_expr(e: &mut Expr, f: &mut impl FnMut(&mut Expr) -> bool) -> bool {
+        if f(e) {
+            return true;
+        }
+        match e {
+            Expr::Bin(_, a, b) => walk_expr(a, f) || walk_expr(b, f),
+            Expr::GlobalIndex(_, idx) => walk_expr(idx, f),
+            Expr::Call(_, args) => args.iter_mut().any(|a| walk_expr(a, f)),
+            Expr::Int(_) | Expr::Local(_) | Expr::GlobalVar(_) => false,
+        }
+    }
+    fn walk_stmt(s: &mut Stmt, f: &mut impl FnMut(&mut Expr) -> bool) -> bool {
+        match s {
+            Stmt::DeclLocal(_, Some(e))
+            | Stmt::AssignLocal(_, e)
+            | Stmt::AssignGlobal(_, e)
+            | Stmt::Return(e)
+            | Stmt::ExprStmt(e) => walk_expr(e, f),
+            Stmt::DeclLocal(_, None) => false,
+            Stmt::AssignIndex(_, idx, e) => walk_expr(idx, f) || walk_expr(e, f),
+            Stmt::If(c, t, e) => {
+                walk_expr(c, f)
+                    || t.iter_mut().any(|s| walk_stmt(s, f))
+                    || e.iter_mut().any(|s| walk_stmt(s, f))
+            }
+            Stmt::While(c, b) => walk_expr(c, f) || b.iter_mut().any(|s| walk_stmt(s, f)),
+        }
+    }
+    p.functions.iter_mut().any(|func| func.body.iter_mut().any(|s| walk_stmt(s, f)))
+}
+
+fn expr_count(p: &Program) -> usize {
+    let mut p = p.clone();
+    let mut n = 0usize;
+    for_each_expr(&mut p, &mut |_| {
+        n += 1;
+        false
+    });
+    n
+}
+
+/// Rewrite the `target`-th expression node (pre-order): narrow an
+/// integer, collapse a binary to one operand, or replace a call with 0.
+fn try_rewrite_expr(prog: &Program, target: usize, variant: u8) -> Option<Program> {
+    let mut p = prog.clone();
+    let mut counter = 0usize;
+    let mut changed = false;
+    for_each_expr(&mut p, &mut |e| {
+        if counter != target {
+            counter += 1;
+            return false;
+        }
+        counter += 1;
+        let replacement = match (&*e, variant) {
+            (Expr::Bin(_, a, _), 0) => Some((**a).clone()),
+            (Expr::Bin(_, _, b), 1) => Some((**b).clone()),
+            (Expr::Int(v), 2) if *v > 1 => Some(Expr::Int(*v / 2)),
+            (Expr::Int(1), 2) => Some(Expr::Int(0)),
+            (Expr::Call(..), 3) => Some(Expr::Int(0)),
+            _ => None,
+        };
+        if let Some(r) = replacement {
+            *e = r;
+            changed = true;
+        }
+        true
+    });
+    changed.then_some(p)
+}
+
+/// Drop the `target`-th non-`main` function.
+fn try_drop_function(prog: &Program, target: usize) -> Option<Program> {
+    let mut p = prog.clone();
+    let idx = p
+        .functions
+        .iter()
+        .enumerate()
+        .filter(|(_, f)| f.name != "main")
+        .map(|(i, _)| i)
+        .nth(target)?;
+    p.functions.remove(idx);
+    Some(p)
+}
+
+/// Drop the `target`-th global declaration.
+fn try_drop_global(prog: &Program, target: usize) -> Option<Program> {
+    let mut p = prog.clone();
+    if target >= p.globals.len() {
+        return None;
+    }
+    p.globals.remove(target);
+    Some(p)
+}
+
+/// Greedily minimise a diverging program: repeatedly apply the first
+/// mutation (drop function/global, drop statement, unroll loop /
+/// collapse branch, narrow constant / collapse operator / inline call
+/// as 0) whose result still compiles *and* still satisfies `diverges`,
+/// until a full pass makes no progress or the mutation budget runs
+/// out. `diverges` must return `false` for non-compiling candidates.
+pub fn shrink(program: &Program, diverges: &mut dyn FnMut(&Program) -> bool) -> Program {
+    let mut cur = program.clone();
+    let mut fuel = 400usize;
+    loop {
+        let mut improved = false;
+        let candidates: Vec<Box<dyn Fn(&Program, usize) -> Option<Program>>> = vec![
+            Box::new(try_drop_function),
+            Box::new(try_drop_global),
+            Box::new(try_remove_stmt),
+            Box::new(|p, i| try_flatten_stmt(p, i, 0)),
+            Box::new(|p, i| try_flatten_stmt(p, i, 1)),
+            Box::new(|p, i| try_rewrite_expr(p, i, 0)),
+            Box::new(|p, i| try_rewrite_expr(p, i, 1)),
+            Box::new(|p, i| try_rewrite_expr(p, i, 2)),
+            Box::new(|p, i| try_rewrite_expr(p, i, 3)),
+        ];
+        'pass: for gen in &candidates {
+            let bound = stmt_count(&cur).max(expr_count(&cur)).max(cur.functions.len());
+            for idx in 0..bound {
+                if fuel == 0 {
+                    return cur;
+                }
+                let Some(cand) = gen(&cur, idx) else { continue };
+                fuel -= 1;
+                if diverges(&cand) {
+                    cur = cand;
+                    improved = true;
+                    break 'pass;
+                }
+            }
+        }
+        if !improved {
+            return cur;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fuzz driver
+// ---------------------------------------------------------------------------
+
+/// Every `SNAPSHOT_EVERY`-th case also runs the snapshot-slice oracle.
+pub const SNAPSHOT_EVERY: u64 = 16;
+
+/// Configuration of a fuzz run.
+#[derive(Clone, Debug)]
+pub struct FuzzConfig {
+    /// Sweep seed; case `i` derives from `point_seed(seed, i)`.
+    pub seed: u64,
+    /// Number of cases.
+    pub cases: u64,
+    /// Minimise divergences before reporting.
+    pub shrink: bool,
+    /// Where to write `.cc` artifacts (`None` = no artifacts).
+    pub out_dir: Option<PathBuf>,
+    /// Stop after this many divergences.
+    pub max_failures: usize,
+}
+
+impl FuzzConfig {
+    /// Defaults: 1000 cases of seed 0, shrinking on, artifacts in cwd.
+    pub fn new(seed: u64, cases: u64) -> Self {
+        Self { seed, cases, shrink: true, out_dir: Some(PathBuf::from(".")), max_failures: 5 }
+    }
+}
+
+/// One divergence found by [`run_fuzz`].
+#[derive(Clone, Debug)]
+pub struct FuzzFailure {
+    /// Case index within the run.
+    pub index: u64,
+    /// What diverged.
+    pub divergence: Divergence,
+    /// Rendered source of the generated case.
+    pub source: String,
+    /// Minimised source (when shrinking was on and made progress).
+    pub shrunk: Option<String>,
+    /// Path of the emitted artifact, if one was written.
+    pub artifact: Option<PathBuf>,
+}
+
+/// Summary of a fuzz run.
+#[derive(Clone, Debug, Default)]
+pub struct FuzzSummary {
+    /// Cases generated and differentially executed.
+    pub cases: u64,
+    /// Snapshot-slice oracle runs performed.
+    pub snapshot_checks: u64,
+    /// Divergences found (empty on a healthy tree).
+    pub failures: Vec<FuzzFailure>,
+}
+
+/// Run the differential fuzzer. Infrastructure failures (an
+/// unbuildable harness, unwritable artifacts) are `Err`; divergences
+/// are data in the summary.
+pub fn run_fuzz(cfg: &FuzzConfig) -> Result<FuzzSummary> {
+    let harness = DiffHarness::new()?;
+    let mut summary = FuzzSummary::default();
+    for index in 0..cfg.cases {
+        let program = generate(cfg.seed, index);
+        let source = render(&program);
+        let mut result = harness.check_source(&source);
+        if result.is_ok() && index % SNAPSHOT_EVERY == 0 {
+            summary.snapshot_checks += 1;
+            result = harness
+                .check_snapshot_slice(&source, point_seed(cfg.seed, index ^ 0x5eed_cafe));
+        }
+        summary.cases += 1;
+        if let Err(divergence) = result {
+            let shrunk = if cfg.shrink {
+                let minimised = shrink(&program, &mut |cand| {
+                    harness.check_source(&render(cand)).is_err()
+                });
+                let text = render(&minimised);
+                (text != source).then_some(text)
+            } else {
+                None
+            };
+            let artifact = match &cfg.out_dir {
+                Some(dir) => Some(write_artifact(
+                    dir,
+                    cfg.seed,
+                    index,
+                    &divergence,
+                    &source,
+                    shrunk.as_deref(),
+                )?),
+                None => None,
+            };
+            summary.failures.push(FuzzFailure { index, divergence, source, shrunk, artifact });
+            if summary.failures.len() >= cfg.max_failures {
+                break;
+            }
+        }
+    }
+    Ok(summary)
+}
+
+fn write_artifact(
+    dir: &Path,
+    seed: u64,
+    index: u64,
+    divergence: &Divergence,
+    source: &str,
+    shrunk: Option<&str>,
+) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating artifact dir {}", dir.display()))?;
+    let path = dir.join(format!("fuzz-s{seed}-i{index}.cc"));
+    let mut text = String::new();
+    text.push_str("# memclos fuzz divergence artifact\n");
+    text.push_str(&format!("# seed {seed} index {index}\n"));
+    text.push_str(&format!("# divergence: {divergence}\n"));
+    text.push_str(&format!("# replay: memclos fuzz --replay {}\n", path.display()));
+    text.push_str(source);
+    if let Some(shrunk) = shrunk {
+        text.push_str("\n# ---- shrunk reproduction (replayed source ends above) ----\n");
+        for line in shrunk.lines() {
+            text.push_str(&format!("# {line}\n"));
+        }
+    }
+    std::fs::write(&path, text).with_context(|| format!("writing {}", path.display()))?;
+    Ok(path)
+}
+
+/// Replay a `.cc` artifact (or any miniC file) through the harness,
+/// including the snapshot-slice oracle. Returns the divergence if one
+/// reproduces.
+pub fn replay_file(path: &Path) -> Result<Option<Divergence>> {
+    let source = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let harness = DiffHarness::new()?;
+    if let Err(d) = harness.check_source(&source) {
+        return Ok(Some(d));
+    }
+    if let Err(d) = harness.check_snapshot_slice(&source, 0) {
+        return Ok(Some(d));
+    }
+    Ok(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cc::parse_program;
+
+    #[test]
+    fn generation_is_seed_pure() {
+        for index in [0u64, 7, 63] {
+            let a = generate(0, index);
+            let b = generate(0, index);
+            assert_eq!(render(&a), render(&b));
+        }
+        assert_ne!(render(&generate(0, 0)), render(&generate(0, 1)));
+        assert_ne!(render(&generate(0, 0)), render(&generate(1, 0)));
+    }
+
+    #[test]
+    fn rendered_cases_parse_compile_and_roundtrip() {
+        for index in 0..40u64 {
+            let p = generate(0, index);
+            let src = render(&p);
+            let parsed = parse_program(&src)
+                .unwrap_or_else(|e| panic!("case {index} does not parse: {e}\n{src}"));
+            assert_eq!(
+                render(&parsed),
+                src,
+                "case {index} render/parse is not a fixpoint"
+            );
+            compile(&src, Backend::Direct)
+                .unwrap_or_else(|e| panic!("case {index} direct compile: {e}\n{src}"));
+            compile(&src, Backend::Emulated)
+                .unwrap_or_else(|e| panic!("case {index} emulated compile: {e}\n{src}"));
+        }
+    }
+
+    #[test]
+    fn differential_smoke_is_divergence_free() {
+        let harness = DiffHarness::new().unwrap();
+        for index in 0..30u64 {
+            let src = render(&generate(0xF0, index));
+            if let Err(d) = harness.check_source(&src) {
+                panic!("case {index} diverged: {d}\n{src}");
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_slice_oracle_smoke() {
+        let harness = DiffHarness::new().unwrap();
+        for index in 0..6u64 {
+            let src = render(&generate(0xF1, index));
+            if let Err(d) = harness.check_snapshot_slice(&src, 1000 + index) {
+                panic!("case {index} snapshot slice diverged: {d}\n{src}");
+            }
+        }
+    }
+
+    #[test]
+    fn shrinker_minimises_while_preserving_the_predicate() {
+        // Synthetic "bug": any program whose source mentions `%`
+        // (modulo). The shrinker must keep the property while
+        // shedding everything unrelated, and must never hand the
+        // predicate a non-compiling candidate it would keep.
+        let mut index = 0;
+        let program = loop {
+            let p = generate(3, index);
+            if render(&p).contains('%') {
+                break p;
+            }
+            index += 1;
+            assert!(index < 200, "no modulo case found");
+        };
+        let shrunk = shrink(&program, &mut |cand| {
+            let src = render(cand);
+            compile(&src, Backend::Direct).is_ok() && src.contains('%')
+        });
+        let out = render(&shrunk);
+        assert!(out.contains('%'), "predicate lost:\n{out}");
+        assert!(
+            out.len() <= render(&program).len(),
+            "shrinking must not grow the case"
+        );
+        assert!(compile(&out, Backend::Direct).is_ok());
+    }
+
+    #[test]
+    fn run_fuzz_smoke() {
+        let summary = run_fuzz(&FuzzConfig {
+            seed: 0,
+            cases: 48,
+            shrink: true,
+            out_dir: None,
+            max_failures: 5,
+        })
+        .unwrap();
+        assert_eq!(summary.cases, 48);
+        assert!(summary.snapshot_checks >= 3);
+        assert!(
+            summary.failures.is_empty(),
+            "divergences: {:?}",
+            summary.failures.iter().map(|f| f.divergence.to_string()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn case_digests_are_stable_within_a_session() {
+        // The Python parity goldens hash rendered sources; digesting
+        // twice must agree (guards accidental nondeterminism like
+        // hash-map iteration in the generator or renderer).
+        for index in 0..10u64 {
+            assert_eq!(case_digest(0, index), case_digest(0, index));
+        }
+    }
+}

@@ -14,12 +14,18 @@
 //!   zipf hot-spot, sequential stride, pointer chase, phased working
 //!   set) plus trace capture from [`crate::isa::decode::FastMachine`]
 //!   runs — the workload side of the `sim::contention` lab.
+//! * [`fuzzgen`] — typed random miniC program generation and the
+//!   differential fuzzing harness: every execution tier versus the
+//!   legacy baseline on both memory backends, a snapshot-slice
+//!   resume oracle, and a greedy AST shrinker for divergences.
 
+pub mod fuzzgen;
 pub mod measured;
 pub mod mixes;
 pub mod synthetic;
 pub mod trace;
 
+pub use fuzzgen::{run_fuzz, DiffHarness, FuzzConfig, FuzzSummary};
 pub use measured::{CompiledCorpus, CorpusMeasurement, MeasuredRun};
 pub use mixes::{InstructionMix, COMPILER_MIX, DHRYSTONE_MIX};
 pub use synthetic::{predict_slowdown, SyntheticProgram};

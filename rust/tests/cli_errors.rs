@@ -44,6 +44,19 @@ fn misuse_matrix_is_typed_with_exit_code_2() {
         ("loadgen --self-host --requests 0", "--requests 0"),
         ("latency --config /nonexistent/memclos.toml", "reading config"),
         ("serve --queue-depth abc", "flag --queue-depth"),
+        ("fuzz --cases 0", "--cases 0"),
+        ("fuzz --cases abc", "flag --cases"),
+        ("fuzz --replay x.cc --cases 5", "conflicts with --cases"),
+        ("fuzz --shrink --no-shrink", "--shrink conflicts with --no-shrink"),
+        ("fuzz --max-failures 0", "--max-failures 0"),
+        ("snapshot", "needs a subcommand"),
+        ("snapshot bogus", "unknown snapshot subcommand `bogus`"),
+        ("snapshot save", "needs --program"),
+        ("snapshot save --program sieve", "needs --at"),
+        ("snapshot save --program sieve --at 0", "needs --at"),
+        ("snapshot save --program nosuch --at 100", "unknown program `nosuch`"),
+        ("snapshot save --program sieve --at 100 --backend weird", "--backend"),
+        ("snapshot resume", "needs --in"),
     ] {
         let err = usage_err(line);
         let msg = format!("{err:#}");
@@ -60,6 +73,28 @@ fn design_point_validation_is_a_field_named_failure() {
     assert!(format!("{err:#}").contains("`k`"), "{err:#}");
     let err = run("sweep --mem 0").expect_err("mem 0 must fail");
     assert!(format!("{err:#}").contains("`mem_kb`"), "{err:#}");
+}
+
+#[test]
+fn corrupt_snapshots_are_runtime_failures_not_misuse() {
+    // A snapshot that exists but is garbage is a RUNTIME failure (exit
+    // 1, a typed SnapshotError in the chain) — the command line itself
+    // was fine. Same for a missing file.
+    let dir = std::env::temp_dir().join("memclos-cli-errors-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let garbage = dir.join("garbage.snap");
+    std::fs::write(&garbage, b"MCSSnot really a snapshot").unwrap();
+    let err = run(&format!("snapshot resume --in {}", garbage.display()))
+        .expect_err("garbage snapshot must fail");
+    assert_eq!(exit_code(&err), 1, "corrupt file is runtime, not misuse: {err:#}");
+    assert!(format!("{err:#}").contains("snapshot"), "{err:#}");
+
+    let missing = dir.join("does-not-exist.snap");
+    let err = run(&format!("snapshot resume --in {}", missing.display()))
+        .expect_err("missing snapshot must fail");
+    assert_eq!(exit_code(&err), 1, "{err:#}");
+    assert!(format!("{err:#}").contains("reading"), "{err:#}");
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]

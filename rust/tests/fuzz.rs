@@ -299,6 +299,161 @@ fn predecode_truncated_channel_sequences_rejected_and_legacy_contained() {
     );
 }
 
+// ---------------------------------------------------------------------
+// Snapshot adversarial mutation: every corruption of the binary format
+// — truncation at any length, bit flips anywhere, semantically invalid
+// fields behind a valid checksum, tier/backend/program mismatches —
+// must come back as a typed, field-named [`SnapshotError`]. Nothing in
+// this section may panic.
+// ---------------------------------------------------------------------
+
+use memclos::cc::corpus;
+use memclos::isa::interp::{ExecCursor, RunOutcome};
+use memclos::isa::snapshot::{
+    fnv1a64, program_fingerprint, rebuild_memory, BackendSnap, Snapshot, SnapshotError, Tier,
+};
+
+/// A genuine mid-run snapshot: sieve on the fast machine over the
+/// emulated backend, paused at a 300-cycle budget.
+fn paused_sieve_snapshot() -> (Vec<Inst>, Snapshot) {
+    let prog = corpus::all().into_iter().find(|p| p.name == "sieve").unwrap();
+    let compiled = compile(prog.source, Backend::Emulated).unwrap();
+    let decoded = predecode(&compiled.code).unwrap();
+    let setup = EmulationSetup::default_tech(TopologyKind::Clos, 64, 64, 15).unwrap();
+    let mut mem = EmulatedChannelMemory::new(setup);
+    let mut cursor = ExecCursor::default();
+    let (state, max_steps) = {
+        let mut m = FastMachine::new(&mut mem, 1 << 16);
+        let out = m.run_until(&decoded, &mut cursor, Some(300)).unwrap();
+        assert!(matches!(out, RunOutcome::Paused), "sieve must outlive a 300-cycle budget");
+        (m.export_state(&cursor), m.max_steps)
+    };
+    let snap = Snapshot {
+        tier: Tier::Fast,
+        backend: BackendSnap::of_emulated(&mem),
+        space_words: mem.setup().map.space_words(),
+        max_steps,
+        program: "sieve".into(),
+        program_fnv: program_fingerprint(&compiled.code),
+        state,
+        pages: Snapshot::pages_of(mem.store()),
+    };
+    (compiled.code, snap)
+}
+
+fn with_checksum(mut body: Vec<u8>) -> Vec<u8> {
+    let sum = fnv1a64(&body);
+    body.extend_from_slice(&sum.to_le_bytes());
+    body
+}
+
+#[test]
+fn snapshot_truncation_at_any_length_is_a_typed_error() {
+    let (_, snap) = paused_sieve_snapshot();
+    let bytes = snap.to_bytes();
+    // Sanity: the untampered blob round-trips byte-identically.
+    assert_eq!(Snapshot::from_bytes(&bytes).unwrap().to_bytes(), bytes);
+    // Every prefix length near structural boundaries, plus a stride
+    // sample through the bulk (page data dominates the byte count).
+    let mut lens: Vec<usize> = (0..bytes.len().min(160)).collect();
+    lens.extend((160..bytes.len()).step_by(211));
+    lens.extend(bytes.len().saturating_sub(40)..bytes.len());
+    for len in lens {
+        let err = Snapshot::from_bytes(&bytes[..len])
+            .expect_err(&format!("truncation to {len} bytes parsed"));
+        // Short prefixes die in the header; anything longer fails the
+        // trailing checksum (the tail it covers has been cut off).
+        assert!(
+            matches!(
+                err,
+                SnapshotError::Truncated { .. } | SnapshotError::Checksum | SnapshotError::BadMagic
+            ),
+            "truncation to {len}: unexpected error {err}"
+        );
+    }
+}
+
+#[test]
+fn snapshot_single_byte_flips_are_always_rejected() {
+    let (_, snap) = paused_sieve_snapshot();
+    let bytes = snap.to_bytes();
+    let mut positions: Vec<usize> = (0..bytes.len().min(64)).collect();
+    positions.extend((64..bytes.len()).step_by(97));
+    positions.extend(bytes.len().saturating_sub(16)..bytes.len());
+    for i in positions {
+        let mut m = bytes.clone();
+        m[i] ^= 0x40;
+        let err =
+            Snapshot::from_bytes(&m).expect_err(&format!("flip at byte {i} parsed cleanly"));
+        match err {
+            SnapshotError::BadMagic => assert!(i < 4, "BadMagic from flip at {i}"),
+            SnapshotError::Version { .. } => {
+                assert!((4..8).contains(&i), "Version error from flip at {i}")
+            }
+            // Any flip in the body or in the trailer itself breaks the
+            // checksum before field parsing even starts.
+            SnapshotError::Checksum => assert!(i >= 8, "Checksum from header flip at {i}"),
+            other => panic!("flip at {i}: unexpected error {other}"),
+        }
+    }
+}
+
+#[test]
+fn snapshot_semantic_corruption_behind_a_valid_checksum_is_field_named() {
+    let (code, snap) = paused_sieve_snapshot();
+    let bytes = snap.to_bytes();
+    let body = bytes[..bytes.len() - 8].to_vec();
+
+    // Version skew: the version gate names both versions.
+    let mut skew = body.clone();
+    skew[4] = 99;
+    match Snapshot::from_bytes(&with_checksum(skew)) {
+        Err(SnapshotError::Version { found: 99, supported }) => assert_eq!(supported, 1),
+        other => panic!("version skew: {other:?}"),
+    }
+
+    // Unknown tier byte (offset 8) and backend byte (offset 9).
+    for (off, field) in [(8usize, "tier"), (9usize, "backend")] {
+        let mut bad = body.clone();
+        bad[off] = 9;
+        match Snapshot::from_bytes(&with_checksum(bad)) {
+            Err(SnapshotError::Field { field: f, .. }) => {
+                assert_eq!(f, field, "corruption at offset {off}")
+            }
+            other => panic!("corruption at offset {off}: {other:?}"),
+        }
+    }
+
+    // A recorded rank LUT that no default-tech replica can rebuild:
+    // parses fine, but rebuild_memory refuses with the field name.
+    let mut lut = snap.clone();
+    if let BackendSnap::Emulated { rank_cycles, .. } = &mut lut.backend {
+        rank_cycles[0] ^= 1;
+    }
+    let reparsed = Snapshot::from_bytes(&lut.to_bytes()).unwrap();
+    match rebuild_memory(&reparsed) {
+        Err(SnapshotError::Field { field: "rank_cycles", .. }) => {}
+        other => panic!("tampered LUT: {other:?}"),
+    }
+
+    // Wrong machine: a fast-tier snapshot refuses a legacy resume, and
+    // a fingerprint mismatch names the program it was taken of.
+    match snap.check_tier(Tier::Legacy) {
+        Err(SnapshotError::WrongTier { found: "fast", want: "legacy" }) => {}
+        other => panic!("wrong tier: {other:?}"),
+    }
+    let other_prog = corpus::all().into_iter().find(|p| p.name == "fib_memo").unwrap();
+    let other_code = compile(other_prog.source, Backend::Emulated).unwrap().code;
+    match snap.check_program(&other_code) {
+        Err(SnapshotError::Field { field: "program fingerprint", detail }) => {
+            assert!(detail.contains("sieve"), "detail must name the program: {detail}")
+        }
+        other => panic!("wrong program: {other:?}"),
+    }
+    // The matching program still checks out.
+    snap.check_program(&code).unwrap();
+}
+
 #[test]
 fn emulation_setup_rejects_bad_points_gracefully() {
     // k out of range, non-square meshes, non-power-of-two capacities.

@@ -1,0 +1,115 @@
+//! Rust-side goldens for the Python cross-checks in `python/tests/`.
+//!
+//! Two snapshots pin the exact bit streams the Python ports must
+//! reproduce:
+//!
+//! * `tests/golden/pyparity_rng.json` — raw xoshiro256** draws, Lemire
+//!   `below` draws, and `point_seed` values for a few seeds
+//!   (`python/tests/test_rng_parity.py` replays them through
+//!   `memclos_rng.py`).
+//! * `tests/golden/pyparity_fuzzgen.json` — FNV-1a digests of the
+//!   first 100 rendered fuzz cases for sweep seed 0
+//!   (`python/tests/test_fuzzgen_parity.py` regenerates every program
+//!   draw for draw and must match all 100).
+//!
+//! Same convention as `golden_figures`: a missing snapshot is seeded
+//! from the current output (the first toolchain-bearing CI run writes
+//! the initial set); `UPDATE_GOLDEN=1` regenerates in place. All u64s
+//! are rendered as decimal *strings* so no JSON reader mangles values
+//! above 2^53.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use memclos::coordinator::point_seed;
+use memclos::util::rng::Rng;
+use memclos::workload::fuzzgen;
+
+fn golden_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden").join(name)
+}
+
+fn check_or_seed(name: &str, rendered: &str) {
+    let path = golden_path(name);
+    std::fs::create_dir_all(path.parent().unwrap()).expect("creating tests/golden");
+    let update = std::env::var("UPDATE_GOLDEN").map(|v| v == "1").unwrap_or(false);
+    if update || !path.exists() {
+        std::fs::write(&path, rendered).expect("writing golden snapshot");
+        eprintln!("seeded golden snapshot {}", path.display());
+        return;
+    }
+    let want = std::fs::read_to_string(&path).expect("reading golden snapshot");
+    if want != rendered {
+        let new = path.with_extension("json.new");
+        std::fs::write(&new, rendered).expect("writing fresh output");
+        panic!(
+            "{name} drifted from its golden snapshot — the Python port's reference \
+             stream must not move silently.\n  golden: {}\n  fresh:  {}",
+            path.display(),
+            new.display()
+        );
+    }
+}
+
+fn str_list<T: std::fmt::Display>(values: impl IntoIterator<Item = T>) -> String {
+    let items: Vec<String> = values.into_iter().map(|v| format!("\"{v}\"")).collect();
+    format!("[{}]", items.join(", "))
+}
+
+#[test]
+fn rng_golden_pins_the_stream_for_the_python_port() {
+    let seeds: [u64; 4] = [0, 1, 0xDEAD_BEEF, u64::MAX];
+    let mut out = String::from("{\"seeds\": [");
+    for (i, &seed) in seeds.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        let mut r = Rng::new(seed);
+        let raw: Vec<u64> = (0..8).map(|_| r.next_u64()).collect();
+        let below10: Vec<u64> = (0..8).map(|_| r.below(10)).collect();
+        let below_big: Vec<u64> = (0..4).map(|_| r.below(1_000_000_007)).collect();
+        let _ = write!(
+            out,
+            "{{\"seed\": \"{seed}\", \"next_u64\": {}, \"below_10\": {}, \"below_1000000007\": {}}}",
+            str_list(raw),
+            str_list(below10),
+            str_list(below_big)
+        );
+    }
+    out.push_str("], \"point_seed\": [");
+    let pairs: [(u64, u64); 4] = [(0, 0), (0, 1), (7, 42), (0xC105, u64::MAX)];
+    for (i, &(seed, key)) in pairs.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        let _ = write!(
+            out,
+            "{{\"seed\": \"{seed}\", \"key\": \"{key}\", \"value\": \"{}\"}}",
+            point_seed(seed, key)
+        );
+    }
+    out.push_str("]}\n");
+    check_or_seed("pyparity_rng.json", &out);
+}
+
+#[test]
+fn fuzzgen_golden_pins_the_first_100_case_digests_for_seed_0() {
+    let digests: Vec<u64> = (0..100).map(|i| fuzzgen::case_digest(0, i)).collect();
+    // A rendered sample rides along so a digest mismatch in the Python
+    // port can be debugged against the exact expected source text.
+    let sample = fuzzgen::render(&fuzzgen::generate(0, 0));
+    let escaped: String = sample
+        .chars()
+        .map(|c| match c {
+            '"' => "\\\"".to_string(),
+            '\\' => "\\\\".to_string(),
+            '\n' => "\\n".to_string(),
+            c => c.to_string(),
+        })
+        .collect();
+    let out = format!(
+        "{{\"seed\": \"0\", \"cases\": 100, \"digests\": {}, \"sample_case_0\": \"{escaped}\"}}\n",
+        str_list(digests)
+    );
+    check_or_seed("pyparity_fuzzgen.json", &out);
+}

@@ -1,0 +1,290 @@
+//! Snapshot/resume bit-exactness, end to end: pausing a run at a
+//! random cycle checkpoint, serialising the machine through the binary
+//! snapshot format, rebuilding the memory from the recorded identity,
+//! and resuming must reproduce the uninterrupted run exactly — same
+//! `RunStats`, same register file, same error string on failure — on
+//! both interpreter tiers and both memory backends.
+
+use memclos::cc::{compile, corpus, Backend};
+use memclos::cli::driver;
+use memclos::emulation::{EmulationSetup, SequentialMachine, TopologyKind};
+use memclos::isa::decode::{predecode, DecodedProgram};
+use memclos::isa::interp::{
+    DirectMemory, EmulatedChannelMemory, MachineState, MemorySystem,
+};
+use memclos::isa::snapshot::{
+    program_fingerprint, rebuild_memory, run_fast_slice, run_legacy_slice, BackendSnap,
+    SliceRun, Snapshot, Tier,
+};
+use memclos::isa::Inst;
+use memclos::util::rng::Rng;
+
+const LOCAL_WORDS: usize = 1 << 14;
+const DIRECT_SPACE: u64 = 1 << 20;
+const MAX_STEPS: u64 = 50_000_000;
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mem {
+    Direct,
+    Emulated,
+}
+
+fn point() -> EmulationSetup {
+    EmulationSetup::default_tech(TopologyKind::Clos, 64, 64, 15).unwrap()
+}
+
+/// A blank start-of-program state (what `import_state` sizes the local
+/// memory from).
+fn blank() -> MachineState {
+    MachineState { local: vec![0i64; LOCAL_WORDS], ..MachineState::default() }
+}
+
+enum Backing {
+    Direct(DirectMemory),
+    Emulated(EmulatedChannelMemory),
+}
+
+impl Backing {
+    fn new(mem: Mem) -> Self {
+        match mem {
+            Mem::Direct => Backing::Direct(DirectMemory::new(
+                SequentialMachine::paper_figures(false),
+                DIRECT_SPACE,
+            )),
+            Mem::Emulated => Backing::Emulated(EmulatedChannelMemory::new(point())),
+        }
+    }
+
+    fn as_dyn(&mut self) -> &mut dyn MemorySystem {
+        match self {
+            Backing::Direct(m) => m,
+            Backing::Emulated(m) => m,
+        }
+    }
+
+    /// Capture the backend identity + sparse pages for a snapshot.
+    fn capture(&self) -> (BackendSnap, u64, Vec<(u64, Box<[i64]>)>) {
+        match self {
+            Backing::Direct(m) => {
+                (BackendSnap::of_direct(m), DIRECT_SPACE, Snapshot::pages_of(m.store()))
+            }
+            Backing::Emulated(m) => (
+                BackendSnap::of_emulated(m),
+                m.setup().map.space_words(),
+                Snapshot::pages_of(m.store()),
+            ),
+        }
+    }
+}
+
+fn run_slice(
+    tier: Tier,
+    code: &[Inst],
+    decoded: &DecodedProgram,
+    mem: &mut dyn MemorySystem,
+    state: &MachineState,
+    limit: Option<u64>,
+) -> SliceRun {
+    match tier {
+        Tier::Fast => run_fast_slice(decoded, mem, state, MAX_STEPS, limit),
+        Tier::Legacy => run_legacy_slice(code, mem, state, MAX_STEPS, limit),
+    }
+}
+
+/// Pause `code` at `checkpoint` cycles, push the machine through the
+/// full serialise → parse → rebuild path, resume, and return the final
+/// [`SliceRun`]. Panics if any stage of the format round trip fails.
+fn resume_via_snapshot(
+    tier: Tier,
+    mem_kind: Mem,
+    name: &str,
+    code: &[Inst],
+    decoded: &DecodedProgram,
+    checkpoint: u64,
+) -> SliceRun {
+    let mem_label = match mem_kind {
+        Mem::Direct => "direct",
+        Mem::Emulated => "emulated",
+    };
+    let ctx = format!("{name}/{}/{mem_label}-at-{checkpoint}", tier.label());
+    let mut backing = Backing::new(mem_kind);
+    let part1 = run_slice(tier, code, decoded, backing.as_dyn(), &blank(), Some(checkpoint));
+    match part1.outcome {
+        Ok(false) => {} // paused at the budget: the interesting path
+        Ok(true) => return part1, // the last op crossed the finish line first
+        Err(e) => panic!("{ctx}: first slice errored before the checkpoint: {e}"),
+    }
+    let (backend, space_words, pages) = backing.capture();
+    let snap = Snapshot {
+        tier,
+        backend,
+        space_words,
+        max_steps: MAX_STEPS,
+        program: name.to_string(),
+        program_fnv: program_fingerprint(code),
+        state: part1.state,
+        pages,
+    };
+    let reparsed = Snapshot::from_bytes(&snap.to_bytes())
+        .unwrap_or_else(|e| panic!("{ctx}: round trip rejected: {e}"));
+    reparsed.check_tier(tier).unwrap();
+    reparsed.check_program(code).unwrap();
+    let mut rebuilt =
+        rebuild_memory(&reparsed).unwrap_or_else(|e| panic!("{ctx}: rebuild failed: {e}"));
+    run_slice(tier, code, decoded, rebuilt.as_dyn(), &reparsed.state, None)
+}
+
+#[test]
+fn random_checkpoints_resume_bit_identically_across_tiers_and_backends() {
+    let programs = ["sum_squares", "sieve", "fib_memo"];
+    let mut r = Rng::new(0x5EED_0001);
+    for name in programs {
+        let prog = corpus::all().into_iter().find(|p| p.name == name).unwrap();
+        for (mem_kind, cc_backend) in
+            [(Mem::Direct, Backend::Direct), (Mem::Emulated, Backend::Emulated)]
+        {
+            let code = compile(prog.source, cc_backend).unwrap().code;
+            let decoded = predecode(&code).unwrap();
+            for tier in [Tier::Legacy, Tier::Fast] {
+                // Uninterrupted reference run.
+                let mut backing = Backing::new(mem_kind);
+                let reference =
+                    run_slice(tier, &code, &decoded, backing.as_dyn(), &blank(), None);
+                assert_eq!(reference.outcome, Ok(true), "{name}: reference must halt");
+                if let Some(want) = prog.expected {
+                    assert_eq!(reference.state.regs[0], want, "{name}: wrong result");
+                }
+                let total = reference.state.stats.cycles;
+                assert!(total > 2, "{name}: too short to checkpoint");
+                // Property: ANY cycle boundary is a valid migration
+                // point. Sample random checkpoints across the run.
+                for _ in 0..4 {
+                    let checkpoint = 1 + r.below(total - 1);
+                    let resumed = resume_via_snapshot(
+                        tier, mem_kind, name, &code, &decoded, checkpoint,
+                    );
+                    assert_eq!(
+                        resumed.outcome,
+                        Ok(true),
+                        "{name}/{}/at-{checkpoint}: resume did not halt",
+                        tier.label()
+                    );
+                    assert_eq!(
+                        resumed.state.stats, reference.state.stats,
+                        "{name}/{}/at-{checkpoint}: stats diverge",
+                        tier.label()
+                    );
+                    assert_eq!(
+                        resumed.state.regs, reference.state.regs,
+                        "{name}/{}/at-{checkpoint}: registers diverge",
+                        tier.label()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn resuming_a_failing_run_reproduces_the_error_string_exactly() {
+    // A program that trips the step limit: pausing and resuming must
+    // reproduce the uninterrupted error string byte for byte (the step
+    // limit is recorded in the snapshot for exactly this reason).
+    let src = "global x;\nfn main() { var i = 0; while (0 < 1) { x = x + 1; i = i + 1; } return i; }";
+    let max_steps = 10_000u64;
+    let mut r = Rng::new(0x5EED_0002);
+    for (mem_kind, cc_backend) in
+        [(Mem::Direct, Backend::Direct), (Mem::Emulated, Backend::Emulated)]
+    {
+        let code = compile(src, cc_backend).unwrap().code;
+        let decoded = predecode(&code).unwrap();
+        for tier in [Tier::Legacy, Tier::Fast] {
+            let mut backing = Backing::new(mem_kind);
+            let reference = match tier {
+                Tier::Fast => run_fast_slice(&decoded, backing.as_dyn(), &blank(), max_steps, None),
+                Tier::Legacy => run_legacy_slice(&code, backing.as_dyn(), &blank(), max_steps, None),
+            };
+            let want = reference.outcome.clone().expect_err("must hit the step limit");
+            assert_eq!(want, format!("step limit exceeded ({max_steps})"));
+
+            // Pause somewhere before the limit, snapshot, resume.
+            let checkpoint = 1 + r.below(max_steps / 2);
+            let mut b2 = Backing::new(mem_kind);
+            let part1 = match tier {
+                Tier::Fast => {
+                    run_fast_slice(&decoded, b2.as_dyn(), &blank(), max_steps, Some(checkpoint))
+                }
+                Tier::Legacy => {
+                    run_legacy_slice(&code, b2.as_dyn(), &blank(), max_steps, Some(checkpoint))
+                }
+            };
+            assert_eq!(part1.outcome, Ok(false), "must pause before the step limit");
+            let (backend, space_words, pages) = b2.capture();
+            let snap = Snapshot {
+                tier,
+                backend,
+                space_words,
+                max_steps,
+                program: "steplimit".to_string(),
+                program_fnv: program_fingerprint(&code),
+                state: part1.state,
+                pages,
+            };
+            let reparsed = Snapshot::from_bytes(&snap.to_bytes()).unwrap();
+            let mut rebuilt = rebuild_memory(&reparsed).unwrap();
+            let resumed = match tier {
+                Tier::Fast => run_fast_slice(
+                    &decoded,
+                    rebuilt.as_dyn(),
+                    &reparsed.state,
+                    reparsed.max_steps,
+                    None,
+                ),
+                Tier::Legacy => run_legacy_slice(
+                    &code,
+                    rebuilt.as_dyn(),
+                    &reparsed.state,
+                    reparsed.max_steps,
+                    None,
+                ),
+            };
+            let got = resumed.outcome.expect_err("resumed run must fail the same way");
+            assert_eq!(got, want, "{}: error strings must be bit-identical", tier.label());
+        }
+    }
+}
+
+#[test]
+fn cli_save_then_resume_with_verify_round_trips() {
+    // The user-facing path: `memclos snapshot save` writes a blob,
+    // `memclos snapshot resume --verify` rebuilds, replays from zero,
+    // and cross-checks the resumed run against the full re-execution.
+    let dir = std::env::temp_dir().join("memclos-snapshot-resume-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join("sum_squares.snap");
+    let run = |line: String| {
+        driver::run(line.split_whitespace().map(str::to_string).collect())
+            .unwrap_or_else(|e| panic!("`{line}` failed: {e:#}"))
+    };
+    run(format!(
+        "snapshot save --program sum_squares --at 500 --tiles 64 --k 15 --mem 64 --out {}",
+        out.display()
+    ));
+    assert!(out.exists(), "save must write the blob");
+    run(format!("snapshot resume --in {} --verify", out.display()));
+    // Legacy tier through the same CLI.
+    let out2 = dir.join("sieve-legacy.snap");
+    run(format!(
+        "snapshot save --program sieve --at 400 --legacy --tiles 64 --k 15 --mem 64 --out {}",
+        out2.display()
+    ));
+    run(format!("snapshot resume --in {} --verify", out2.display()));
+    // A direct-backend snapshot migrates too.
+    let out3 = dir.join("fib-direct.snap");
+    run(format!(
+        "snapshot save --program fib_memo --at 200 --backend direct --out {}",
+        out3.display()
+    ));
+    run(format!("snapshot resume --in {} --verify", out3.display()));
+    std::fs::remove_dir_all(&dir).ok();
+}
