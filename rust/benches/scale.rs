@@ -1,0 +1,123 @@
+//! Bench: the scale trajectory of the computed-routing machinery —
+//! topology + O(V) router build time and the uncontended DES
+//! dependent-chain throughput at 1K / 64K / 1M tiles.
+//!
+//! Writes the machine-readable results to `BENCH_scale.json` (override
+//! with `--json PATH`; schema in
+//! [`memclos::util::bench::Bench::to_json`]), then enforces the hard
+//! memory ceiling: at a million tiles the computed router must stay
+//! under 8 MiB and [`RoutingTable::try_build`] must refuse the graph
+//! with the typed [`TableTooLarge`] error — so the O(n²) table can
+//! never silently return to the hot path.
+//!
+//! Quick smoke mode: set `MEMCLOS_BENCH_QUICK=1` (what
+//! `rust/scripts/bench_hotpath.sh` does).
+
+use std::path::PathBuf;
+
+use memclos::api::DesignPoint;
+use memclos::sim::NetworkSim;
+use memclos::topology::{
+    ClosSpec, FoldedClos, Mesh2D, MeshSpec, RoutingTable, Topology, MAX_TABLE_SWITCHES,
+};
+use memclos::util::bench::{black_box, Bench};
+use memclos::util::rng::Rng;
+
+/// The sizes the trajectory tracks: the paper's entry point, the old
+/// table ceiling's first casualty, and the million-tile headline.
+const SIZES: &[usize] = &[1 << 10, 1 << 16, 1 << 20];
+
+/// Dependent accesses per timed iteration of the DES chain.
+const CHAIN: usize = 4096;
+
+fn json_path() -> PathBuf {
+    let args: Vec<String> = std::env::args().collect();
+    for w in args.windows(2) {
+        if w[0] == "--json" {
+            return PathBuf::from(&w[1]);
+        }
+    }
+    PathBuf::from("BENCH_scale.json")
+}
+
+fn main() {
+    let mut b = Bench::new("scale");
+
+    // Topology + computed-router construction, end to end. The graph
+    // dominates; the router itself is one O(V) prefix-sum pass.
+    for &tiles in SIZES {
+        b.iter(&format!("build-clos-{tiles}"), || {
+            let topo = Topology::Clos(FoldedClos::build(ClosSpec::with_tiles(tiles)).unwrap());
+            black_box(topo.next_hops().memory_bytes())
+        });
+        b.iter(&format!("build-mesh-{tiles}"), || {
+            let topo = Topology::Mesh(Mesh2D::build(MeshSpec::with_tiles(tiles)).unwrap());
+            black_box(topo.next_hops().memory_bytes())
+        });
+    }
+
+    // The DesBackend loop: one client's causally-dependent accesses in
+    // uncontended mode (analytic fast path, bit-identical to the walk).
+    for &tiles in SIZES {
+        let setup = DesignPoint::clos(tiles).build().unwrap();
+        let mut rng = Rng::new(0x5CA1E ^ tiles as u64);
+        let space = setup.map.space_words();
+        let dests: Vec<usize> =
+            (0..CHAIN).map(|_| setup.map.tile_of(rng.below(space))).collect();
+        let client = setup.map.client;
+        let mut sim = NetworkSim::uncontended(&setup.topo, &setup.model);
+        let mut now = 0u64;
+        b.iter_items(&format!("des-chain-clos-{tiles}"), CHAIN as u64, || {
+            for &t in &dests {
+                now = sim.access(client, t, now);
+            }
+            black_box(now)
+        });
+    }
+
+    b.report();
+    println!("\nthroughput (addresses/s):");
+    for m in b.results() {
+        if m.items > 0 {
+            println!("  {:<24} {:>14.0}", m.name, m.throughput());
+        }
+    }
+
+    // The trajectory lands on disk before the assertions run, so a
+    // regression still records its numbers.
+    let path = json_path();
+    b.write_json(&path).expect("write bench json");
+    println!("wrote {}", path.display());
+
+    // The hard memory ceiling. If someone reintroduces an O(n²)
+    // structure on the healthy routing path, memory_bytes blows the
+    // 8 MiB budget (a million-tile table would need ~340 GB) and this
+    // bench fails loudly.
+    let million = 1usize << 20;
+    let clos = Topology::Clos(FoldedClos::build(ClosSpec::with_tiles(million)).unwrap());
+    let mesh = Topology::Mesh(Mesh2D::build(MeshSpec::with_tiles(million)).unwrap());
+    for topo in [&clos, &mesh] {
+        let routes = topo.next_hops();
+        assert!(
+            !routes.is_table(),
+            "{}: the million-tile router fell back to the dense table",
+            topo.name()
+        );
+        assert!(
+            routes.memory_bytes() < 8 << 20,
+            "{}: router memory {} bytes breaks the 8 MiB ceiling",
+            topo.name(),
+            routes.memory_bytes()
+        );
+        assert!(routes.switches() > MAX_TABLE_SWITCHES);
+        // And the table itself stays a typed refusal at this size.
+        let err = RoutingTable::try_build(topo.graph()).unwrap_err();
+        println!(
+            "{}: {} switches, router {} KiB, dense table refused ({err})",
+            topo.name(),
+            routes.switches(),
+            routes.memory_bytes() / 1024
+        );
+    }
+    println!("memory-ceiling assertions OK");
+}

@@ -12,6 +12,9 @@
 #                           serve/loadgen smoke over real TCP
 #   BENCH_fuzz.json       — fuzz-case generation, the differential
 #                           harness, and the snapshot round trip
+#   BENCH_scale.json      — topology + computed-router build time and
+#                           uncontended DES throughput at 1K/64K/1M
+#                           tiles, plus the O(V) router memory ceiling
 #
 # Schema (all files): {"bench": <group>,
 #          "results": [{"name", "median_ns", "addrs_per_s"}]}
@@ -29,6 +32,7 @@ CONT_OUT="$REPO_ROOT/BENCH_contention.json"
 FAULTS_OUT="$REPO_ROOT/BENCH_faults.json"
 SERVE_OUT="$REPO_ROOT/BENCH_serve.json"
 FUZZ_OUT="$REPO_ROOT/BENCH_fuzz.json"
+SCALE_OUT="$REPO_ROOT/BENCH_scale.json"
 
 if [[ "${1:-}" != "--full" ]]; then
     export MEMCLOS_BENCH_QUICK=1
@@ -80,6 +84,18 @@ if cargo bench --bench fuzz -- --json "$FUZZ_OUT"; then
 else
     echo "(cargo bench fuzz failed; running the CLI fuzz smoke instead — no $FUZZ_OUT)" >&2
     cargo run --release --bin memclos -- fuzz --cases 256 --seed 0 --no-shrink
+fi
+
+# Scale trajectory: build time + DES throughput at 1K/64K/1M tiles and
+# the hard O(V) router-memory ceiling (the bench fails if an O(n^2)
+# structure ever returns to the healthy routing path). The fallback
+# smoke renders the scale figure, which exercises the same machinery
+# but writes no JSON.
+if cargo bench --bench scale -- --json "$SCALE_OUT"; then
+    echo "scale trajectory written to $SCALE_OUT"
+else
+    echo "(cargo bench scale failed; running the CLI figure scale smoke instead — no $SCALE_OUT)" >&2
+    cargo run --release --bin memclos -- figure scale
 fi
 
 # Serve-layer microbenches (frame codec, request parse, Service::handle

@@ -153,8 +153,28 @@ impl XlaBackend {
         setup: &EmulationSetup,
         addresses: &[i32],
     ) -> Result<(Vec<f32>, f32)> {
+        ensure_kernel_expressible(setup)?;
         self.engine.run(addresses, &setup.kernel_params())
     }
+}
+
+/// The v1 kernel parameter contract encodes exactly two Clos grouping
+/// levels (`IP_LOG2_G0` = tiles per edge switch, `IP_LOG2_G1` = tiles
+/// per chip), so deep hierarchies — systems past `degree` chips, which
+/// recurse extra bank levels — cannot be expressed. Reject them with a
+/// typed error rather than silently computing two-level distances.
+fn ensure_kernel_expressible(setup: &EmulationSetup) -> Result<()> {
+    if let crate::topology::Topology::Clos(c) = &setup.topo {
+        let levels = c.spec().sys_levels();
+        anyhow::ensure!(
+            levels <= 1,
+            "xla backend: the lowered kernel encodes at most one system-core bank \
+             level, but this {}-tile Clos needs {levels}; use the native, exact or \
+             des backend for deep hierarchies",
+            setup.map.tiles
+        );
+    }
+    Ok(())
 }
 
 impl LatencyBackend for XlaBackend {
@@ -164,6 +184,7 @@ impl LatencyBackend for XlaBackend {
 
     fn evaluate(&self, setup: &EmulationSetup, addrs: &AddrStream) -> Result<Evaluation> {
         anyhow::ensure!(addrs.samples > 0, "xla backend needs samples > 0");
+        ensure_kernel_expressible(setup)?;
         let batch = self.engine.batch_size();
         let params = setup.kernel_params();
         let space = setup.map.space_words();
@@ -190,7 +211,9 @@ impl LatencyBackend for XlaBackend {
 /// Monte-Carlo through the discrete-event network simulator: each
 /// sampled address becomes a full request/response round trip over the
 /// explicit switch graph (integer clock, zero load — a single client's
-/// dependent accesses never contend).
+/// dependent accesses never contend, so the sim runs in its
+/// [`NetworkSim::uncontended`] mode: analytic per-access arrival times,
+/// bit-identical to the hop walk, O(1) per access at any scale).
 pub struct DesBackend;
 
 impl LatencyBackend for DesBackend {
@@ -200,7 +223,7 @@ impl LatencyBackend for DesBackend {
 
     fn evaluate(&self, setup: &EmulationSetup, addrs: &AddrStream) -> Result<Evaluation> {
         anyhow::ensure!(addrs.samples > 0, "des backend needs samples > 0");
-        let mut sim = NetworkSim::new(&setup.topo, &setup.model);
+        let mut sim = NetworkSim::uncontended(&setup.topo, &setup.model);
         let mut rng = Rng::new(addrs.seed);
         let space = setup.map.space_words();
         let client = setup.map.client;
@@ -468,6 +491,19 @@ mod tests {
         assert_eq!(e.samples, 40_000);
         let exact = setup.expected_latency();
         assert!((e.mean_cycles - exact).abs() / exact < 0.02, "{} vs {exact}", e.mean_cycles);
+    }
+
+    #[test]
+    fn xla_gate_rejects_deep_hierarchies() {
+        // 16384 tiles = 64 chips = two bank levels: the two-group
+        // kernel parameter contract cannot express the extra level.
+        let deep = DesignPoint::clos(16384).mem_kb(64).k(1023).build().unwrap();
+        let err = ensure_kernel_expressible(&deep).unwrap_err().to_string();
+        assert!(err.contains("bank"), "{err}");
+        // One-level systems and meshes of any size stay expressible.
+        ensure_kernel_expressible(&small_setup()).unwrap();
+        let mesh = DesignPoint::mesh(65536).mem_kb(64).k(1023).build().unwrap();
+        ensure_kernel_expressible(&mesh).unwrap();
     }
 
     #[test]

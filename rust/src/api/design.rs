@@ -14,7 +14,7 @@ use crate::emulation::{client_tile, EmulationSetup, TopologyKind};
 use crate::fault::FaultPlan;
 use crate::netmodel::NetParams;
 use crate::tech::{ChipTech, InterposerTech};
-use crate::topology::{ClosSpec, MeshSpec};
+use crate::topology::{ClosSpec, MeshSpec, MAX_TABLE_SWITCHES};
 
 /// The technology/model parameter bundle behind one design point:
 /// Table 1 (processing chip), Table 2 (interposer) and Table 5
@@ -256,6 +256,27 @@ impl DesignPoint {
                 "field `fault`: the plan leaves {alive} alive memory tiles but the \
                  emulation needs k = {k} (dead tiles degrade capacity)"
             );
+            // Fault masks reroute through the dense avoiding table
+            // (computed next hops only describe the healthy graph), so
+            // a non-empty plan inherits the table's switch ceiling.
+            if !plan.is_empty() {
+                let switches = match self.kind {
+                    TopologyKind::Clos => self
+                        .clos_spec
+                        .unwrap_or_else(|| ClosSpec::with_tiles(self.tiles))
+                        .total_switches(),
+                    TopologyKind::Mesh => {
+                        let m = MeshSpec::with_tiles(self.tiles);
+                        m.tiles / m.tiles_per_block
+                    }
+                };
+                ensure!(
+                    switches <= MAX_TABLE_SWITCHES,
+                    "field `fault`: fault-aware rerouting needs the dense routing \
+                     table, capped at {MAX_TABLE_SWITCHES} switches; this system has \
+                     {switches} (evaluate it healthy, or shrink the system)"
+                );
+            }
         }
         Ok(())
     }
@@ -335,10 +356,34 @@ mod tests {
                     .faults(FaultPlan { dead_tiles: vec![5], ..FaultPlan::none() }),
                 "`fault`",
             ),
+            // Fault masks force the dense avoiding table, whose switch
+            // ceiling million-tile systems exceed: they must run healthy.
+            (
+                DesignPoint::clos(1 << 20)
+                    .k(4095)
+                    .faults(FaultPlan { dead_tiles: vec![5], ..FaultPlan::none() }),
+                "`fault`",
+            ),
+            (
+                DesignPoint::mesh(1 << 20)
+                    .k(4095)
+                    .faults(FaultPlan { dead_tiles: vec![5], ..FaultPlan::none() }),
+                "`fault`",
+            ),
         ] {
             let err = dp.build().unwrap_err().to_string();
             assert!(err.contains(field), "error `{err}` does not name {field}");
         }
+    }
+
+    #[test]
+    fn million_tile_points_validate_without_building() {
+        // Validation is pure arithmetic — no graph, no table — so the
+        // lifted ceiling is checkable in microseconds at any scale.
+        DesignPoint::clos(1 << 20).k(4095).validate().unwrap();
+        DesignPoint::mesh(1 << 20).k(4095).validate().unwrap();
+        // An *empty* plan stays equivalent to no plan at every scale.
+        DesignPoint::clos(1 << 20).k(4095).faults(FaultPlan::none()).validate().unwrap();
     }
 
     #[test]

@@ -47,7 +47,7 @@ USAGE: memclos <command> [options]
 
 COMMANDS
   tables [--which 1..5]         regenerate the paper's parameter tables
-  figure <5|6|7|9|10|11|bsize|ablations|contention|faults>  regenerate a figure / extension
+  figure <5|6|7|9|10|11|bsize|ablations|contention|faults|scale>  regenerate a figure / extension
   figures --all [--jobs N]      regenerate EVERY table and figure on one
                                 shared sweep engine (repeated design
                                 points evaluated once); --json emits the
@@ -285,9 +285,12 @@ pub fn run(raw: Vec<String>) -> Result<()> {
                 "faults" => {
                     print!("{}", figures::faults::render(&figures::faults::generate_with(&engine)?))
                 }
+                "scale" => {
+                    print!("{}", figures::scale::render(&figures::scale::generate_with(&engine)?))
+                }
                 o => {
                     return Err(usage_error(format!(
-                        "no figure {o} (5|6|7|9|10|11|bsize|ablations|contention|faults)"
+                        "no figure {o} (5|6|7|9|10|11|bsize|ablations|contention|faults|scale)"
                     )))
                 }
             }
@@ -342,6 +345,7 @@ pub fn run(raw: Vec<String>) -> Result<()> {
                 print!("{}", figures::ablations::render(&figures::ablations::generate_with(&engine)?));
                 print!("{}", figures::contention::render(&figures::contention::generate_with(&engine)?));
                 print!("{}", figures::faults::render(&figures::faults::generate_with(&engine)?));
+                print!("{}", figures::scale::render(&figures::scale::generate_with(&engine)?));
             }
             let cs = engine.cache_stats();
             eprintln!(

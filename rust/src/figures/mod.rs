@@ -18,6 +18,7 @@
 //! | [`ablations`] | design-choice ablations (route-open, clock, switch degree, eDRAM) |
 //! | [`contention`] | (extension) trace-driven contention lab — `c_cont` + tail latency vs clients × pattern |
 //! | [`faults`] | (extension) fault injection — slowdown + p99 tail inflation vs fault fraction |
+//! | [`scale`] | (extension) slowdown + `c_cont` from 1K to 1M tiles on computed routing |
 //! | [`hotpath`] | (not in the paper) the repo's own access-hot-path perf trajectory |
 //! | [`interp_bench`] | (not in the paper) decoded-vs-legacy interpreter perf trajectory |
 //!
@@ -40,6 +41,7 @@ pub mod fig7;
 pub mod fig9;
 pub mod hotpath;
 pub mod interp_bench;
+pub mod scale;
 pub mod tables;
 
 use anyhow::Result;
@@ -114,5 +116,6 @@ pub fn all_reports(engine: &ParallelSweep) -> Result<Vec<Report>> {
     out.push(ablations::report(&ablations::generate_with(engine)?));
     out.push(contention::report(&contention::generate_with(engine)?));
     out.push(faults::report(&faults::generate_with(engine)?));
+    out.push(scale::report(&scale::generate_with(engine)?));
     Ok(out)
 }

@@ -1,0 +1,349 @@
+//! Scale figure (extension; not in the paper): zero-load slowdown and
+//! the fitted contention factor `c_cont` from 1,024 to 1,048,576 tiles
+//! on both topologies — the figure the 4,096-tile ceiling used to make
+//! impossible.
+//!
+//! Every point past [`crate::topology::MAX_TABLE_SWITCHES`] switches
+//! is only evaluable because routing is *computed*
+//! ([`crate::topology::NextHop`]): O(V) router state instead of the
+//! O(V²) dense table, bit-identical to that table wherever both exist.
+//! Each row records the switch count, recursion depth, router memory
+//! and whether the dense table is even feasible, next to the exact
+//! zero-load latency, the Dhrystone-mix slowdown prediction and a
+//! crowded DES measurement (the [`CLIENTS`]-client uniform scenario,
+//! reusing the contention lab's cell machinery and canonical seeding —
+//! so any `--jobs` count is bit-identical and the figure joins the
+//! golden harness).
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use super::contention::{cell_seed, eval_cell, Cell};
+use super::{topo_str, FigOpts};
+use crate::api::{DesignPoint, Report, Row};
+use crate::coordinator::{ParallelSweep, SweepPoint};
+use crate::emulation::{EmulationSetup, SequentialMachine, TopologyKind};
+use crate::sim::contention::ContentionStats;
+use crate::topology::{Topology, MAX_TABLE_SWITCHES};
+use crate::util::plot::Plot;
+use crate::util::table::{f, Table};
+use crate::workload::{predict_slowdown, DHRYSTONE_MIX};
+
+/// System sizes plotted: 1K to 1M tiles, both topologies at every size.
+pub const SYSTEMS: &[usize] =
+    &[1 << 10, 1 << 12, 1 << 14, 1 << 16, 1 << 18, 1 << 20];
+
+/// Tile memory used (full-emulation points, like Fig 9/10).
+pub const MEM_KB: u32 = 128;
+
+/// Concurrent clients in the DES leg of every cell.
+pub const CLIENTS: usize = 8;
+
+/// Access budget per client in the DES leg.
+pub const ACCESSES: usize = 192;
+
+/// One evaluated scale point.
+#[derive(Clone, Debug)]
+pub struct ScaleRow {
+    /// The design point (full emulation: `k = tiles - 1`).
+    pub point: SweepPoint,
+    /// Switches in the interconnect graph.
+    pub switches: usize,
+    /// Recursive system-core bank levels (0 for meshes and
+    /// single-chip Clos, 1 for the paper's 1,024–8,192-tile systems,
+    /// more past `degree` chips).
+    pub sys_levels: usize,
+    /// Whether the dense routing table could even be built here
+    /// (`switches <= MAX_TABLE_SWITCHES`).
+    pub table_feasible: bool,
+    /// Resident bytes of the computed next-hop router (O(V)).
+    pub nexthop_bytes: usize,
+    /// Exact expected zero-load access latency (cycles).
+    pub zero_load: f64,
+    /// Dhrystone-mix slowdown prediction at that latency.
+    pub slowdown: f64,
+    /// The crowded uniform DES measurement ([`CLIENTS`] clients x
+    /// [`ACCESSES`] accesses).
+    pub stats: ContentionStats,
+}
+
+impl ScaleRow {
+    /// Report/row name: `clos-1048576`.
+    pub fn name(&self) -> String {
+        format!("{}-{}", topo_str(self.point.kind), self.point.tiles)
+    }
+}
+
+/// The figure's dataset.
+#[derive(Clone, Debug)]
+pub struct FigScale {
+    /// One row per (system, topology), in grid order.
+    pub rows: Vec<ScaleRow>,
+}
+
+/// The figure's cell grid, in generation order: every system size on
+/// both topologies, as uniform contention cells (the contention lab's
+/// canonical seeding makes each cell's DES stream a pure function of
+/// the sweep seed and the cell identity).
+pub fn grid_cells() -> Vec<Cell> {
+    let mut cells = Vec::new();
+    for &tiles in SYSTEMS {
+        for kind in [TopologyKind::Clos, TopologyKind::Mesh] {
+            let point = SweepPoint { kind, tiles, mem_kb: MEM_KB, k: tiles - 1 };
+            cells.push(Cell {
+                point,
+                pattern: crate::workload::trace::TracePattern::Uniform,
+                clients: CLIENTS,
+                accesses: ACCESSES,
+            });
+        }
+    }
+    cells
+}
+
+/// Evaluate a cell list: design points are built once per unique
+/// point (computed routing — no dense table at any size), then cells
+/// fan out across the worker pool and come back in input order.
+pub fn eval_points(engine: &ParallelSweep, cells: &[Cell]) -> Result<Vec<ScaleRow>> {
+    let mut setups: HashMap<u64, EmulationSetup> = HashMap::new();
+    for cell in cells {
+        let key = cell.point.canonical_key();
+        if !setups.contains_key(&key) {
+            let p = cell.point;
+            let setup = DesignPoint::new(p.kind, p.tiles)
+                .mem_kb(p.mem_kb)
+                .k(p.k)
+                .tech(engine.tech())
+                .build()
+                .with_context(|| format!("building scale point {p:?}"))?;
+            setups.insert(key, setup);
+        }
+    }
+    let dram = SequentialMachine::with_measured_dram(1).dram_ns;
+    engine.map(cells, |cell| {
+        let setup = setups
+            .get(&cell.point.canonical_key())
+            .context("scale point missing from the setup table")?;
+        let routes = setup.topo.next_hops();
+        let switches = routes.switches();
+        let zero_load = setup.expected_latency();
+        Ok(ScaleRow {
+            point: cell.point,
+            switches,
+            sys_levels: match &setup.topo {
+                Topology::Clos(c) => c.spec().sys_levels(),
+                Topology::Mesh(_) => 0,
+            },
+            table_feasible: switches <= MAX_TABLE_SWITCHES,
+            nexthop_bytes: routes.memory_bytes(),
+            zero_load,
+            slowdown: predict_slowdown(&DHRYSTONE_MIX, zero_load, dram),
+            stats: eval_cell(setup, cell, cell_seed(engine.seed(), cell))?,
+        })
+    })
+}
+
+/// Generate the scale dataset on a shared sweep engine.
+pub fn generate_with(engine: &ParallelSweep) -> Result<FigScale> {
+    Ok(FigScale { rows: eval_points(engine, &grid_cells())? })
+}
+
+/// Generate the dataset (standalone: a fresh engine).
+pub fn generate(opts: &FigOpts) -> Result<FigScale> {
+    generate_with(&opts.engine())
+}
+
+/// One report row — the schema `memclos figures --all --json` emits
+/// for this figure and the golden harness pins.
+pub fn row_for(r: &ScaleRow) -> Row {
+    let s = &r.stats;
+    Row::new(&r.name())
+        .int("system", r.point.tiles as u64)
+        .str("topo", topo_str(r.point.kind))
+        .int("k", r.point.k as u64)
+        .int("switches", r.switches as u64)
+        .int("sys_levels", r.sys_levels as u64)
+        .int("table_feasible", u64::from(r.table_feasible))
+        .int("nexthop_bytes", r.nexthop_bytes as u64)
+        .num("zero_load_cycles", r.zero_load)
+        .num("slowdown", r.slowdown)
+        .int("clients", CLIENTS as u64)
+        .num("mean_cycles", s.latency.mean())
+        .num("p99", s.dist.p99)
+        .num("c_cont", s.c_cont)
+        .num("wait_mean_cycles", s.wait.mean())
+        .int("makespan_cycles", s.makespan)
+}
+
+/// Full numeric output for the golden harness.
+pub fn report(fig: &FigScale) -> Report {
+    let mut rep = Report::new("scale");
+    for r in &fig.rows {
+        rep.push(row_for(r));
+    }
+    rep
+}
+
+/// Render the dataset as a table plus slowdown and `c_cont` vs tiles
+/// plots (one series per topology).
+pub fn render(fig: &FigScale) -> String {
+    let mut out = String::new();
+    let mut t = Table::new(&[
+        "system", "topo", "switches", "levels", "router KiB", "table?", "zero-load cy",
+        "slowdown", "c_cont", "wait cy",
+    ])
+    .with_title("Scale: slowdown and c_cont, 1K to 1M tiles (computed routing)");
+    for r in &fig.rows {
+        t.row(&[
+            r.point.tiles.to_string(),
+            topo_str(r.point.kind).to_string(),
+            r.switches.to_string(),
+            r.sys_levels.to_string(),
+            (r.nexthop_bytes / 1024).to_string(),
+            if r.table_feasible { "yes" } else { "no" }.to_string(),
+            f(r.zero_load, 1),
+            f(r.slowdown, 3),
+            f(r.stats.c_cont, 3),
+            f(r.stats.wait.mean(), 1),
+        ]);
+    }
+    out.push_str(&t.render());
+    for (title, y, pick) in [
+        (
+            "Scale: Dhrystone slowdown vs tiles (log2)",
+            "slowdown",
+            (|r: &ScaleRow| r.slowdown) as fn(&ScaleRow) -> f64,
+        ),
+        (
+            "Scale: c_cont (8 clients, uniform) vs tiles (log2)",
+            "c_cont",
+            |r: &ScaleRow| r.stats.c_cont,
+        ),
+    ] {
+        let mut plot = Plot::new(title, "tiles (log2)", y);
+        for kind in [TopologyKind::Clos, TopologyKind::Mesh] {
+            let pts: Vec<(f64, f64)> = fig
+                .rows
+                .iter()
+                .filter(|r| r.point.kind == kind)
+                .map(|r| ((r.point.tiles as f64).log2(), pick(r)))
+                .collect();
+            plot.series(topo_str(kind), &pts);
+        }
+        out.push('\n');
+        out.push_str(&plot.render());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{Mode, Tech};
+    use crate::workload::trace::TracePattern;
+
+    /// The debug-affordable subset: the two table-era sizes on both
+    /// topologies (the full 1M grid runs in the release-mode golden
+    /// harness and `benches/scale.rs`).
+    fn small_cells() -> Vec<Cell> {
+        grid_cells().into_iter().filter(|c| c.point.tiles <= 4096).collect()
+    }
+
+    #[test]
+    fn grid_covers_both_topologies_up_to_a_million_tiles() {
+        let cells = grid_cells();
+        assert_eq!(cells.len(), SYSTEMS.len() * 2);
+        for kind in [TopologyKind::Clos, TopologyKind::Mesh] {
+            assert!(cells
+                .iter()
+                .any(|c| c.point.kind == kind && c.point.tiles == 1 << 20));
+        }
+        // Cell seeds stay canonical on this grid too.
+        let a = cell_seed(1, &cells[0]);
+        assert_eq!(a, cell_seed(1, &cells[0]));
+        for other in &cells[1..] {
+            assert_ne!(a, cell_seed(1, other), "cell seed collision with {other:?}");
+        }
+    }
+
+    #[test]
+    fn rows_are_jobs_invariant() {
+        // Satellite: the scale grid is bit-identical at any job count
+        // (same canonical seeding contract as the contention lab).
+        let cells = small_cells();
+        let seq =
+            eval_points(&ParallelSweep::new(Mode::Exact, &Tech::default(), 1, 3), &cells).unwrap();
+        let par =
+            eval_points(&ParallelSweep::new(Mode::Exact, &Tech::default(), 8, 3), &cells).unwrap();
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.point.canonical_key(), b.point.canonical_key());
+            assert_eq!(a.zero_load.to_bits(), b.zero_load.to_bits());
+            assert_eq!(a.slowdown.to_bits(), b.slowdown.to_bits());
+            assert_eq!(a.stats.latency.mean().to_bits(), b.stats.latency.mean().to_bits());
+            assert_eq!(a.stats.c_cont.to_bits(), b.stats.c_cont.to_bits());
+            assert_eq!(a.stats.makespan, b.stats.makespan);
+        }
+    }
+
+    #[test]
+    fn past_the_table_ceiling_points_still_evaluate() {
+        // A 65,536-tile Clos recurses two bank levels and exceeds the
+        // dense-table switch ceiling — exactly the design point the old
+        // code could not express. It must evaluate end to end on
+        // computed routing alone.
+        let engine = ParallelSweep::new(Mode::Exact, &Tech::default(), 2, 0xC105);
+        let point = SweepPoint {
+            kind: TopologyKind::Clos,
+            tiles: 1 << 16,
+            mem_kb: MEM_KB,
+            k: (1 << 16) - 1,
+        };
+        let cells = vec![Cell {
+            point,
+            pattern: TracePattern::Uniform,
+            clients: CLIENTS,
+            accesses: 96,
+        }];
+        let rows = eval_points(&engine, &cells).unwrap();
+        let r = &rows[0];
+        assert!(r.switches > MAX_TABLE_SWITCHES && !r.table_feasible);
+        assert_eq!(r.sys_levels, 2);
+        // Router memory is O(V): far below what the dense table would
+        // need (~4 * switches^2 bytes), and the table really is
+        // unbuildable here.
+        assert!(r.nexthop_bytes < r.switches * 64, "router bytes {}", r.nexthop_bytes);
+        let setup = DesignPoint::clos(1 << 16).build().unwrap();
+        assert!(setup.topo.try_routing_table().is_err());
+        assert!(r.zero_load > 0.0 && r.slowdown > 0.0);
+        assert!(r.stats.c_cont >= 1.0 - 1e-9);
+        assert!(r.stats.latency.mean() >= r.stats.zero_load_mean - 1e-9);
+    }
+
+    #[test]
+    fn report_rows_round_trip_their_fields() {
+        let engine = ParallelSweep::new(Mode::Exact, &Tech::default(), 2, 7);
+        let cells: Vec<Cell> =
+            small_cells().into_iter().filter(|c| c.point.tiles == 1024).collect();
+        let rows = eval_points(&engine, &cells).unwrap();
+        let rendered = report(&FigScale { rows: rows.clone() }).render();
+        assert!(rendered.starts_with("{\"bench\": \"scale\", \"results\": ["));
+        for r in &rows {
+            for needle in [
+                format!("\"name\": \"{}\"", r.name()),
+                format!("\"switches\": {}", r.switches),
+                format!("\"table_feasible\": {}", u64::from(r.table_feasible)),
+                format!("\"zero_load_cycles\": {:.4}", r.zero_load),
+                format!("\"slowdown\": {:.4}", r.slowdown),
+                format!("\"c_cont\": {:.4}", r.stats.c_cont),
+            ] {
+                assert!(rendered.contains(&needle), "missing `{needle}` in {rendered}");
+            }
+        }
+        // The rendered text output carries the table and both plots.
+        let text = render(&FigScale { rows });
+        assert!(text.contains("slowdown"));
+        assert!(text.contains("c_cont"));
+    }
+}

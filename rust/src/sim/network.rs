@@ -14,21 +14,40 @@
 //! [`NetworkSim::one_way`] is the inner loop of every DES experiment
 //! and does **zero hashing and zero heap allocation** in steady state:
 //!
-//! * routes come from a [`RoutingTable`] built once in
-//!   [`NetworkSim::new`] — each hop is one dense-array load (`next
-//!   edge toward the destination switch`), never a BFS and never a
+//! * routes come from a [`NextHop`] strategy built once in
+//!   [`NetworkSim::new`] — computed arithmetic on healthy systems
+//!   (O(V) memory, so a million tiles fits), the dense
+//!   [`RoutingTable`] only under fault masks; each hop is one
+//!   closed-form step (or array load), never a BFS and never a
 //!   memoised `Vec` path;
 //! * per-port busy-until times live in a flat arena (`Vec<u64>`)
-//!   indexed by the table's CSR directed-port ids, sized once at
+//!   indexed by the strategy's CSR directed-port ids, sized once at
 //!   construction — never a `HashMap<(NodeId, NodeId), u64>` probe;
 //! * the walked path's per-link-class counts are proven equal to the
 //!   arithmetic [`crate::topology::Route`] summary
-//!   (`routing_table_walk_matches_route`), which is what keeps the DES
-//!   bit-identical to the analytic model at zero load.
+//!   (`routing_table_walk_matches_route` and the `topology::nexthop`
+//!   oracles), which is what keeps the DES bit-identical to the
+//!   analytic model at zero load.
 //!
-//! Invariants: the routing table and port arena always correspond to
-//! `topo.graph()` (both are rebuilt only in construction); `reset`
+//! Invariants: the next-hop strategy and port arena always correspond
+//! to `topo.graph()` (both are rebuilt only in construction); `reset`
 //! clears the arena in place and never changes its size.
+//!
+//! # Uncontended fast path
+//!
+//! [`NetworkSim::uncontended`] opts a simulator into an analytic fast
+//! path for single-dependent-chain traffic (one client, each message
+//! departing no earlier than the previous arrival — the latency-
+//! evaluation pattern of `api::DesBackend`): instead of walking a
+//! 20-hop million-tile path event by event, the arrival is the sum of
+//! the **same rounded integer per-hop terms** the walk accumulates
+//! (tile injection, `d+1` switch traversals, per-class link cycles,
+//! ejection, serialisation), so it is bit-identical to the walk by
+//! construction — `uncontended_mode_is_bitwise_identical_to_the_walk`
+//! proves it hop count by hop count. The fast path skips the per-port
+//! busy bookkeeping, which is sound only while no queueing can occur;
+//! a `debug_assert` enforces the dependent-chain horizon on every
+//! message. Multi-client contention runs never opt in and always walk.
 //!
 //! # Faults
 //!
@@ -53,7 +72,7 @@ use crate::emulation::EmulationSetup;
 use crate::fault::{FaultError, FaultState, PortFault};
 use crate::netmodel::{LatencyModel, LinkLatencies};
 use crate::sim::event::EventQueue;
-use crate::topology::{LinkClass, RoutingTable, Topology, NO_HOP};
+use crate::topology::{LinkClass, NextHop, RoutingTable, Topology, NO_HOP};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
@@ -77,9 +96,18 @@ pub const MAX_RETRIES: u32 = 6;
 pub struct NetworkSim<'a> {
     topo: &'a Topology,
     model: &'a LatencyModel,
-    /// Precomputed next hops + directed-port layout (built once;
-    /// fault-avoiding when constructed via [`Self::with_faults`]).
-    routes: RoutingTable,
+    /// Next-hop strategy + directed-port layout (built once; computed
+    /// O(V) routing when healthy, the dense fault-avoiding table when
+    /// constructed via [`Self::with_faults`]).
+    routes: NextHop,
+    /// Analytic fast path enabled ([`Self::uncontended`]): arrivals of
+    /// dependent-chain messages are summed in closed form instead of
+    /// walked. Never set on fault-masked or multi-client simulators.
+    uncontended: bool,
+    /// Upper bound on every port busy-until time produced so far under
+    /// the fast path — each message must depart at or after it (the
+    /// dependent-chain contract; `debug_assert`ed per message).
+    fast_horizon: u64,
     /// Busy-until time per directed switch port, indexed by the
     /// routing table's CSR port id. Sized once; never grows.
     port_busy: Vec<u64>,
@@ -141,10 +169,20 @@ impl<'a> NetworkSim<'a> {
     ) -> Self {
         let (routes, port_fault) = match fault {
             Some(f) if f.map.has_port_faults() => (
-                RoutingTable::build_avoiding(topo.graph(), &f.map.failed_ports()),
+                // Irregular (fault-masked) routing has no closed form:
+                // always the dense avoiding table. Feasibility past
+                // MAX_TABLE_SWITCHES is rejected up front by
+                // `api::DesignPoint::validate`.
+                NextHop::Table(RoutingTable::build_avoiding(
+                    topo.graph(),
+                    &f.map.failed_ports(),
+                )),
                 f.map.ports.clone(),
             ),
-            _ => (topo.routing_table(), Vec::new()),
+            // Healthy systems route computed: O(V) memory, proven
+            // entry-for-entry identical to the dense table — timings
+            // stay bit-identical to the table-backed simulator.
+            _ => (topo.next_hops(), Vec::new()),
         };
         let port_busy = vec![0u64; routes.num_ports()];
         let port_hold = vec![0u64; routes.num_ports()];
@@ -152,6 +190,8 @@ impl<'a> NetworkSim<'a> {
             topo,
             model,
             routes,
+            uncontended: false,
+            fast_horizon: 0,
             port_busy,
             wait_cycles: 0,
             port_hold,
@@ -160,6 +200,17 @@ impl<'a> NetworkSim<'a> {
             retries: 0,
             timeouts: 0,
         }
+    }
+
+    /// Healthy simulator with the analytic fast path enabled — for
+    /// single-dependent-chain callers only (each message departs at or
+    /// after the previous arrival; `api::DesBackend` latency
+    /// evaluation). Bit-identical to [`Self::new`] on such chains;
+    /// contention experiments must use [`Self::new`] and walk.
+    pub fn uncontended(topo: &'a Topology, model: &'a LatencyModel) -> Self {
+        let mut sim = Self::new(topo, model);
+        sim.uncontended = true;
+        sim
     }
 
     /// Simulator for a built design point, picking up its fault state
@@ -190,6 +241,46 @@ impl<'a> NetworkSim<'a> {
     ) -> Result<u64, FaultError> {
         let links = self.model.links;
         let net = &self.model.net;
+
+        if self.uncontended && self.port_fault.is_empty() {
+            // Analytic fast path: the arrival is the sum of the exact
+            // rounded integer terms the walk below accumulates — tile
+            // injection, `d+1` switch traversals, per-class link
+            // cycles (counts are the oracle-proven Route summary),
+            // ejection, serialisation — so the result is bit-identical
+            // by construction. No ports are reserved, which is sound
+            // only while no message could ever queue: the horizon
+            // bounds every port release the skipped walk would have
+            // written.
+            let tile_cycles = links.tile.round() as u64;
+            let per_switch = net.per_switch().round() as u64;
+            debug_assert!(
+                now + tile_cycles + per_switch >= self.fast_horizon,
+                "uncontended fast path requires dependent-chain traffic \
+                 (departure {now} inside the previous message's horizon {})",
+                self.fast_horizon
+            );
+            let r = self.topo.route(src_tile, dst_tile);
+            let ser = if r.inter_chip { net.t_serial_inter } else { net.t_serial_intra }
+                .round() as u64;
+            let t = now
+                + tile_cycles
+                + (u64::from(r.distance) + 1) * per_switch
+                + u64::from(r.edge_core_links) * link_cycles(&links, LinkClass::EdgeCore)
+                + u64::from(r.core_sys_links) * link_cycles(&links, LinkClass::CoreSys)
+                + u64::from(r.mesh_hops) * link_cycles(&links, LinkClass::MeshHop)
+                + u64::from(r.chip_crossings)
+                    * link_cycles(&links, LinkClass::MeshChipCross)
+                + tile_cycles
+                + ser;
+            if r.distance > 0 {
+                // Every held port would have released by arrival +
+                // occupancy; later departures must sit past it.
+                self.fast_horizon = t + words.max(1);
+            }
+            return Ok(t);
+        }
+
         let g = self.topo.graph();
         let d = self.topo.tile_switch(dst_tile);
 
@@ -283,6 +374,7 @@ impl<'a> NetworkSim<'a> {
         self.port_busy.fill(0);
         self.port_hold.fill(0);
         self.wait_cycles = 0;
+        self.fast_horizon = 0;
         self.retries = 0;
         self.timeouts = 0;
     }
@@ -609,6 +701,67 @@ mod tests {
         }
         assert_eq!(now_a, now_b);
         assert_eq!(a.wait_cycles(), b.wait_cycles());
+    }
+
+    #[test]
+    fn healthy_routes_are_computed_and_fault_routes_are_the_table() {
+        // Healthy simulators must never hold the O(n²) dense table —
+        // that is what lets a million-tile system evaluate at all.
+        let e = setup(TopologyKind::Clos, 1024, 1023);
+        let sim = NetworkSim::new(&e.topo, &e.model);
+        assert!(!sim.routes.is_table(), "healthy routing must be computed");
+        let fault =
+            uniform_fault(&e, PortFault { failed: false, jitter_max: 2, drop_prob: 0.0 });
+        let sim = NetworkSim::with_faults(&e.topo, &e.model, Some(&fault), 1);
+        assert!(sim.routes.is_table(), "fault masks force the dense table");
+    }
+
+    #[test]
+    fn uncontended_mode_is_bitwise_identical_to_the_walk() {
+        // The analytic fast path must reproduce the hop walk exactly,
+        // arrival for arrival, on dependent chains — including at the
+        // first deep-hierarchy Clos size (16K tiles, distance 6) and a
+        // multi-chip mesh. Both sims use computed next hops; only the
+        // accumulation differs.
+        for (kind, tiles) in [
+            (TopologyKind::Clos, 1024usize),
+            (TopologyKind::Clos, 16384),
+            (TopologyKind::Mesh, 1024),
+            (TopologyKind::Mesh, 4096),
+        ] {
+            let e = setup(kind, tiles, tiles - 1);
+            let mut walk = NetworkSim::new(&e.topo, &e.model);
+            let mut fast = NetworkSim::uncontended(&e.topo, &e.model);
+            let mut now_w = 0u64;
+            let mut now_f = 0u64;
+            for i in 0..200u64 {
+                // Deterministic spread of targets, including same-edge
+                // and cross-group extremes.
+                let tile = ((i * 2654435761) % tiles as u64) as usize;
+                if tile == e.map.client {
+                    continue;
+                }
+                now_w = walk.access(e.map.client, tile, now_w);
+                now_f = fast.access(e.map.client, tile, now_f);
+                assert_eq!(now_w, now_f, "{kind:?} tiles={tiles} step {i} tile {tile}");
+            }
+            assert_eq!(walk.wait_cycles(), 0, "dependent chains never queue");
+            assert_eq!(fast.wait_cycles(), 0);
+        }
+    }
+
+    #[test]
+    fn uncontended_matches_analytic_model() {
+        // Fast path == walk == analytic at zero load: the triangle
+        // closes (des_matches_analytic covers walk == analytic).
+        let e = setup(TopologyKind::Clos, 16384, 16383);
+        let mut sim = NetworkSim::uncontended(&e.topo, &e.model);
+        for tile in [1usize, 17, 300, 8192, 16383] {
+            sim.reset();
+            let des = sim.access(e.map.client, tile, 0);
+            let analytic = e.model.access(&e.topo, e.map.client, tile);
+            assert_eq!(des as f64, analytic, "tile {tile}");
+        }
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Folded Clos network construction (paper §2, Fig 1; §4.2).
+//! Folded Clos network construction (paper §2, Fig 1; §4.2), extended
+//! past the paper's 4,096-tile ceiling by recursive composition.
 //!
 //! Built from degree-32 switches:
 //!
@@ -11,14 +12,31 @@
 //!   chip contributes a bank of `tiles_per_chip / degree` of them
 //!   (8 per 256-tile chip), for `tiles / degree` in total.
 //!
+//! The paper stops at `degree` chips — one interposer's worth, the
+//! most a single stage-3 bank can span. Larger systems recurse the
+//! same folded pattern: every `degree` chips form an *interposer
+//! group* closed by its own stage-3 bank (doubled, half links up, the
+//! same rule that doubles the chip cores), every `degree` groups are
+//! closed by a level-4 bank, and so on — `sys_levels()` banks above
+//! the chips in total, every one wired with the one wiring rule
+//! `core = (s * links_per_child + i) % child_bank`. A million tiles is
+//! 4,096 chips = 128 interposer groups under three system-core levels.
+//!
 //! Tile-to-tile switch-path length (`d(s,t)` of the §6.3 model) is 0
-//! within an edge switch, 2 within a chip, and 4 between chips — an
-//! arithmetic function of the tile indices that `distance` exposes and a
-//! property test proves equal to BFS on the explicit graph.
+//! within an edge switch, 2 within a chip, 4 within an interposer
+//! group and `4 + 2ℓ` across level-`ℓ` groups — an arithmetic function
+//! of the tile indices that `distance` exposes and a property test
+//! proves equal to BFS on the explicit graph.
 
 use anyhow::{bail, Result};
 
 use super::graph::{Graph, LinkClass, NodeId};
+
+/// Emulation ceiling on total tiles (2^24). A resource bound, not a
+/// topology bound: sweep canonical keys
+/// ([`crate::coordinator::SweepPoint`]) reserve 24 bits for the tile
+/// count, and every per-tile structure (edge map, rank LUT) is O(n).
+pub const MAX_TILES: usize = 1 << 24;
 
 /// Parameters of a folded Clos system.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -50,21 +68,72 @@ impl ClosSpec {
         self.tiles.div_ceil(self.tiles_per_chip)
     }
 
-    /// Number of switch stages (1, 2 or 3).
+    /// Number of system-core levels above the chips: 0 for a single
+    /// chip, 1 for up to `degree` chips (the paper's stage 3), and one
+    /// more for every further factor of `degree`.
+    pub fn sys_levels(&self) -> usize {
+        let chips = self.chips();
+        if chips <= 1 {
+            return 0;
+        }
+        let mut levels = 1;
+        let mut span = self.degree; // chips one bank level can span
+        while span < chips {
+            span *= self.degree;
+            levels += 1;
+        }
+        levels
+    }
+
+    /// Number of switch stages (1, 2, or `2 + sys_levels()`).
     pub fn stages(&self) -> usize {
         if self.tiles <= self.tiles_per_edge {
             1
         } else if self.chips() == 1 {
             2
         } else {
-            3
+            2 + self.sys_levels()
         }
     }
 
-    /// Validate structural constraints.
+    /// Total switches the built graph will hold (edges + chip cores +
+    /// every system-core bank) — computed without building, so
+    /// validation layers can decide table feasibility up front.
+    pub fn total_switches(&self) -> usize {
+        let tiles_per_chip = self.tiles.min(self.tiles_per_chip);
+        let edges = self.tiles / self.tiles_per_edge.min(self.tiles);
+        let chips = self.chips();
+        let cores_per_chip = if self.stages() < 2 {
+            0
+        } else if chips == 1 {
+            tiles_per_chip / self.degree
+        } else {
+            2 * (tiles_per_chip / self.degree)
+        };
+        let mut total = edges + chips * cores_per_chip;
+        let sys_levels = self.sys_levels();
+        let mut group_tiles = tiles_per_chip;
+        for level in 0..sys_levels {
+            group_tiles = (group_tiles * self.degree).min(self.tiles);
+            let bank = (group_tiles / self.degree)
+                * if level + 1 < sys_levels { 2 } else { 1 };
+            total += (self.tiles / group_tiles) * bank;
+        }
+        total
+    }
+
+    /// Validate structural constraints. Every message names the
+    /// offending resource; `api::DesignPoint` prefixes the field name.
     pub fn validate(&self) -> Result<()> {
         if !self.tiles.is_power_of_two() {
             bail!("tiles {} must be a power of two", self.tiles);
+        }
+        if self.tiles > MAX_TILES {
+            bail!(
+                "tiles {} exceeds the {MAX_TILES} emulation ceiling (sweep canonical \
+                 keys reserve 24 bits for the tile count)",
+                self.tiles
+            );
         }
         if self.tiles_per_edge * 2 != self.degree {
             bail!("edge switches use half their links for tiles (degree {})", self.degree);
@@ -75,11 +144,40 @@ impl ClosSpec {
         if self.tiles > self.tiles_per_chip && self.tiles % self.tiles_per_chip != 0 {
             bail!("multi-chip systems must use whole chips");
         }
-        if self.chips() > self.degree {
-            bail!("at most {} chips (system-core switch degree)", self.degree);
+        if self.sys_levels() > 1
+            && !(self.degree.is_power_of_two() && self.tiles_per_chip.is_power_of_two())
+        {
+            bail!(
+                "systems beyond {} chips recurse the hierarchy, which needs \
+                 power-of-two degree and tiles_per_chip so every group level \
+                 divides the system evenly",
+                self.degree
+            );
         }
         Ok(())
     }
+}
+
+/// One system-core bank level of a built [`FoldedClos`] — the node-id
+/// layout and wiring constants the computed [`super::NextHop`] router
+/// uses to derive next hops arithmetically. Level 0 is the paper's
+/// stage-3 bank (children are chips); level `ℓ > 0` banks have the
+/// level-`ℓ-1` groups as children.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SysLevel {
+    /// First node id of this level's banks (groups are contiguous).
+    pub first_node: usize,
+    /// Tiles per group at this level.
+    pub group_tiles: usize,
+    /// Core switches per group bank (doubled below the top level —
+    /// half their links go up, same as the chip cores).
+    pub bank: usize,
+    /// Child groups per group (chips, for level 0).
+    pub children: usize,
+    /// Downlinks each core spends per child.
+    pub links_per_child: usize,
+    /// Bank size of the child level (`cores_per_chip` for level 0).
+    pub child_bank: usize,
 }
 
 /// A constructed folded Clos network.
@@ -92,6 +190,10 @@ pub struct FoldedClos {
     num_edge: usize,
     num_chip_core: usize,
     num_sys_core: usize,
+    edges_per_chip: usize,
+    cores_per_chip: usize,
+    /// System-core bank levels, innermost (stage 3) first.
+    levels: Vec<SysLevel>,
 }
 
 impl FoldedClos {
@@ -113,10 +215,8 @@ impl FoldedClos {
         } else {
             2 * (tiles_per_chip / spec.degree)
         };
-        // Stage-3 system cores: all `degree` links down.
-        let sys_cores = if chips > 1 { spec.tiles / spec.degree } else { 0 };
-
-        // Node layout: per chip [edges..][cores..], then all sys cores.
+        // Node layout: per chip [edges..][cores..], then the system
+        // core banks, one level at a time (group-major within a level).
         let mut edge_nodes = Vec::with_capacity(chips * edges_per_chip);
         let mut core_nodes = Vec::with_capacity(chips * cores_per_chip);
         for _chip in 0..chips {
@@ -126,10 +226,6 @@ impl FoldedClos {
             for _ in 0..cores_per_chip {
                 core_nodes.push(graph.add_node());
             }
-        }
-        let mut sys_nodes = Vec::with_capacity(sys_cores);
-        for _ in 0..sys_cores {
-            sys_nodes.push(graph.add_node());
         }
 
         // Tiles onto edge switches, in index order.
@@ -154,21 +250,60 @@ impl FoldedClos {
             }
         }
 
-        // Chip-core <-> system-core: each system core spends
-        // `degree / chips` downlinks per chip, spread over that chip's
-        // cores so every system core reaches every chip (d = 4 between
-        // any two chips).
-        if chips > 1 {
-            let links_per_chip = spec.degree / chips;
-            for (s, &sn) in sys_nodes.iter().enumerate() {
-                for chip in 0..chips {
-                    for i in 0..links_per_chip {
-                        let c = (s * links_per_chip + i) % cores_per_chip;
-                        let cn = core_nodes[chip * cores_per_chip + c];
-                        graph.add_link(sn, cn, LinkClass::CoreSys);
+        // System-core banks, recursing the one folded wiring rule. At
+        // level 0 the children are chips and each core spends
+        // `degree / children` downlinks per chip, spread over that
+        // chip's cores so every core reaches every chip (d = 4 between
+        // any two chips of a group — the paper's stage 3, bit-identical
+        // to the pre-hierarchy construction when one level suffices).
+        // Higher levels treat the level below's group banks exactly as
+        // level 0 treats the chip cores.
+        let sys_levels = spec.sys_levels();
+        let mut levels: Vec<SysLevel> = Vec::with_capacity(sys_levels);
+        let mut num_sys_core = 0usize;
+        let mut child_group_tiles = tiles_per_chip;
+        let mut child_bank = cores_per_chip;
+        let mut child_first = 0usize; // unused at level 0 (chip cores interleave)
+        for level in 0..sys_levels {
+            let group_tiles = (child_group_tiles * spec.degree).min(spec.tiles);
+            let groups = spec.tiles / group_tiles;
+            let children = group_tiles / child_group_tiles;
+            let links_per_child = spec.degree / children;
+            let bank = (group_tiles / spec.degree)
+                * if level + 1 < sys_levels { 2 } else { 1 };
+            let first_node = graph.num_switches();
+            for _ in 0..groups * bank {
+                graph.add_node();
+            }
+            for grp in 0..groups {
+                for s in 0..bank {
+                    let sn = NodeId(first_node + grp * bank + s);
+                    for child in 0..children {
+                        for i in 0..links_per_child {
+                            let c = (s * links_per_child + i) % child_bank;
+                            let cn = if level == 0 {
+                                let chip = grp * children + child;
+                                core_nodes[chip * cores_per_chip + c]
+                            } else {
+                                NodeId(child_first + (grp * children + child) * child_bank + c)
+                            };
+                            graph.add_link(sn, cn, LinkClass::CoreSys);
+                        }
                     }
                 }
             }
+            levels.push(SysLevel {
+                first_node,
+                group_tiles,
+                bank,
+                children,
+                links_per_child,
+                child_bank,
+            });
+            num_sys_core += groups * bank;
+            child_group_tiles = group_tiles;
+            child_bank = bank;
+            child_first = first_node;
         }
 
         Ok(Self {
@@ -177,7 +312,10 @@ impl FoldedClos {
             edge_of_tile,
             num_edge: edge_nodes.len(),
             num_chip_core: core_nodes.len(),
-            num_sys_core: sys_nodes.len(),
+            num_sys_core,
+            edges_per_chip,
+            cores_per_chip,
+            levels,
         })
     }
 
@@ -196,9 +334,26 @@ impl FoldedClos {
         self.edge_of_tile[tile]
     }
 
-    /// Edge / chip-core / system-core switch counts.
+    /// Edge / chip-core / system-core switch counts (system cores
+    /// summed over every bank level).
     pub fn switch_counts(&self) -> (usize, usize, usize) {
         (self.num_edge, self.num_chip_core, self.num_sys_core)
+    }
+
+    /// Edge switches per chip.
+    pub fn edges_per_chip(&self) -> usize {
+        self.edges_per_chip
+    }
+
+    /// Chip-core switches per chip.
+    pub fn cores_per_chip(&self) -> usize {
+        self.cores_per_chip
+    }
+
+    /// The system-core bank levels, innermost (stage 3) first — the
+    /// layout the computed [`super::NextHop`] router consumes.
+    pub fn levels(&self) -> &[SysLevel] {
+        &self.levels
     }
 
     /// Chip index of a tile.
@@ -207,28 +362,38 @@ impl FoldedClos {
     }
 
     /// Arithmetic switch-path length between two tiles' edge switches:
-    /// 0 (same edge switch), 2 (same chip), 4 (different chips).
+    /// 0 (same edge switch), 2 (same chip), 4 (same interposer group),
+    /// `4 + 2ℓ` when level `ℓ` is the innermost bank level whose
+    /// groups contain both tiles.
     ///
-    /// This is the function the AOT kernel evaluates; the
-    /// `clos_distance_matches_bfs` property test proves it equals BFS
-    /// distance on the explicit graph.
+    /// This is the function the AOT kernel evaluates (at ≤ one bank
+    /// level); the `clos_distance_matches_bfs` property test proves it
+    /// equals BFS distance on the explicit graph.
     pub fn distance(&self, a: usize, b: usize) -> u32 {
         if a / self.spec.tiles_per_edge == b / self.spec.tiles_per_edge {
-            0
-        } else if self.chip_of(a) == self.chip_of(b) {
-            2
-        } else {
-            4
+            return 0;
         }
+        if self.chip_of(a) == self.chip_of(b) {
+            return 2;
+        }
+        for (l, level) in self.levels.iter().enumerate() {
+            if a / level.group_tiles == b / level.group_tiles {
+                return 4 + 2 * l as u32;
+            }
+        }
+        unreachable!("the top bank level's group spans the whole system")
     }
 
     /// Per-stage link counts crossed by a shortest route between two
-    /// tiles: (edge-core links, core-sys links).
+    /// tiles: (edge-core links, core-sys links). Every link above the
+    /// chip cores crosses interposer-class wiring, so a distance-`d`
+    /// cross-chip route is 2 edge-core links plus `d - 2` core-sys
+    /// links (2 at one bank level, 4 at two, ...).
     pub fn link_counts(&self, a: usize, b: usize) -> (u32, u32) {
         match self.distance(a, b) {
             0 => (0, 0),
             2 => (2, 0),
-            _ => (2, 2),
+            d => (2, d - 2),
         }
     }
 }
@@ -302,21 +467,27 @@ mod tests {
 
     #[test]
     fn clos_distance_matches_bfs() {
-        for tiles in [16usize, 64, 256, 1024, 2048] {
+        // 16,384 tiles = 64 chips = two interposer groups: the first
+        // size the recursive hierarchy (two bank levels, distance 6)
+        // kicks in. No `.expect` on the BFS: an unreachable pair is a
+        // reported property failure, never a panic.
+        for tiles in [16usize, 64, 256, 1024, 2048, 16384] {
             let c = FoldedClos::build(ClosSpec::with_tiles(tiles)).unwrap();
             check(
                 |r: &mut Rng| {
                     (r.below(tiles as u64) as usize, r.below(tiles as u64) as usize)
                 },
                 |&(a, b)| {
-                    let bfs = c
-                        .graph()
-                        .bfs_distance(c.edge_switch(a), c.edge_switch(b))
-                        .expect("connected");
-                    ensure(
-                        bfs == c.distance(a, b),
-                        format!("tiles={tiles} a={a} b={b}: bfs={bfs} arith={}", c.distance(a, b)),
-                    )
+                    match c.graph().bfs_distance(c.edge_switch(a), c.edge_switch(b)) {
+                        None => ensure(false, format!("tiles={tiles} a={a} b={b}: severed")),
+                        Some(bfs) => ensure(
+                            bfs == c.distance(a, b),
+                            format!(
+                                "tiles={tiles} a={a} b={b}: bfs={bfs} arith={}",
+                                c.distance(a, b)
+                            ),
+                        ),
+                    }
                 },
             );
         }
@@ -328,8 +499,96 @@ mod tests {
         let mut s = ClosSpec::with_tiles(256);
         s.tiles_per_edge = 10;
         assert!(FoldedClos::build(s).is_err());
-        // > 32 chips exceeds system-core degree
-        assert!(FoldedClos::build(ClosSpec::with_tiles(16384)).is_err());
+        // The old 4,096-tile (degree-chips) ceiling is gone: the
+        // boundary is now the 2^24 canonical-key resource ceiling,
+        // named in the error.
+        assert!(FoldedClos::build(ClosSpec::with_tiles(16384)).is_ok());
+        let err = ClosSpec::with_tiles(MAX_TILES * 2).validate().unwrap_err().to_string();
+        assert!(err.contains("tiles") && err.contains("ceiling"), "{err}");
+        assert!(ClosSpec::with_tiles(MAX_TILES).validate().is_ok());
+    }
+
+    #[test]
+    fn hierarchy_levels_and_counts() {
+        // 16K tiles: 64 chips, two bank levels (one doubled interposer
+        // bank per 32-chip group + one top bank).
+        let spec = ClosSpec::with_tiles(16384);
+        assert_eq!(spec.chips(), 64);
+        assert_eq!(spec.sys_levels(), 2);
+        assert_eq!(spec.stages(), 4);
+        let c = FoldedClos::build(spec).unwrap();
+        let (e, cc, sc) = c.switch_counts();
+        assert_eq!((e, cc), (1024, 1024));
+        // Level 0: 2 groups x 512 (doubled); level 1: 1 group x 512.
+        assert_eq!(sc, 2 * 512 + 512);
+        assert_eq!(spec.total_switches(), e + cc + sc);
+        assert_eq!(c.levels().len(), 2);
+        let l0 = c.levels()[0];
+        assert_eq!((l0.group_tiles, l0.bank, l0.children, l0.links_per_child), (8192, 512, 32, 1));
+        let l1 = c.levels()[1];
+        assert_eq!((l1.group_tiles, l1.bank, l1.children, l1.links_per_child), (16384, 512, 2, 16));
+        assert_eq!(l1.child_bank, l0.bank);
+        // A million tiles: 4,096 chips under three bank levels; the
+        // spec validates and the switch count stays O(n).
+        let million = ClosSpec::with_tiles(1 << 20);
+        assert!(million.validate().is_ok());
+        assert_eq!(million.sys_levels(), 3);
+        assert_eq!(million.total_switches(), 294_912);
+    }
+
+    #[test]
+    fn deep_hierarchy_distances() {
+        let c = FoldedClos::build(ClosSpec::with_tiles(16384)).unwrap();
+        assert_eq!(c.distance(0, 5), 0); // same edge switch
+        assert_eq!(c.distance(0, 200), 2); // same chip
+        assert_eq!(c.distance(0, 300), 4); // same interposer group
+        assert_eq!(c.distance(0, 8192), 6); // across groups
+        assert_eq!(c.distance(8192, 0), 6); // symmetric
+        assert_eq!(c.link_counts(0, 8192), (2, 4));
+        assert_eq!(c.graph().diameter(), 6);
+        // The old sizes keep the old distances bit for bit.
+        let small = FoldedClos::build(ClosSpec::with_tiles(1024)).unwrap();
+        assert_eq!(small.distance(0, 300), 4);
+        assert_eq!(small.link_counts(0, 300), (2, 2));
+    }
+
+    #[test]
+    fn pre_hierarchy_sizes_build_identical_graphs() {
+        // The recursion must reduce exactly to the old single-bank
+        // construction at ≤ degree chips: same node count, same
+        // adjacency lists in the same order (the empty-plan oracle
+        // rule rides on this).
+        for tiles in [1024usize, 4096] {
+            let c = FoldedClos::build(ClosSpec::with_tiles(tiles)).unwrap();
+            let spec = c.spec();
+            assert_eq!(spec.sys_levels(), 1);
+            assert_eq!(c.levels().len(), 1);
+            let l0 = c.levels()[0];
+            assert_eq!(l0.group_tiles, tiles);
+            assert_eq!(l0.bank, tiles / spec.degree);
+            assert_eq!(l0.children, spec.chips());
+            assert_eq!(l0.links_per_child, spec.degree / spec.chips());
+            assert_eq!(l0.first_node, c.switch_counts().0 + c.switch_counts().1);
+            // Wiring spot-check against the legacy formula: sys core s
+            // spends links_per_chip links on chip 0's cores
+            // (s*lpc+i) % cores_per_chip, in that order.
+            let lpc = l0.links_per_child;
+            let per_chip = c.edges_per_chip() + c.cores_per_chip();
+            for s in [0usize, 7, l0.bank - 1] {
+                let sn = NodeId(l0.first_node + s);
+                let adj = c.graph().neighbours(sn);
+                assert_eq!(adj.len(), spec.degree);
+                for (e, &(v, class)) in adj.iter().enumerate() {
+                    assert_eq!(class, LinkClass::CoreSys);
+                    let chip = e / lpc;
+                    let i = e % lpc;
+                    let want = chip * per_chip
+                        + c.edges_per_chip()
+                        + (s * lpc + i) % c.cores_per_chip();
+                    assert_eq!(v.0, want, "sys {s} edge {e}");
+                }
+            }
+        }
     }
 
     #[test]

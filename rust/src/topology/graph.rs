@@ -199,6 +199,41 @@ pub fn port_offsets(g: &Graph) -> Vec<u32> {
 /// the destination itself, or the destination is unreachable).
 pub const NO_HOP: u32 = u32::MAX;
 
+/// Hard ceiling on the switch count a dense [`RoutingTable`] may
+/// cover. The table is O(n²) — 4 bytes per (destination, switch) pair
+/// — so 8,192 switches is a 256 MiB table; a million-tile system
+/// (hundreds of thousands of switches) would need terabytes. Beyond
+/// the ceiling [`RoutingTable::try_build`] returns the typed
+/// [`TableTooLarge`] error and callers use the O(V) computed
+/// [`super::NextHop`] strategy instead.
+pub const MAX_TABLE_SWITCHES: usize = 8192;
+
+/// Typed error: the switch graph is too large for a dense O(n²)
+/// routing table. Carries the counts so callers (and tests) can report
+/// the boundary exactly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TableTooLarge {
+    /// Switches the graph has.
+    pub switches: usize,
+    /// The ceiling ([`MAX_TABLE_SWITCHES`]).
+    pub max: usize,
+}
+
+impl std::fmt::Display for TableTooLarge {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "dense routing table over {} switches exceeds the {}-switch ceiling \
+             ({} bytes); use computed NextHop routing for large systems",
+            self.switches,
+            self.max,
+            self.switches.saturating_mul(self.switches).saturating_mul(4),
+        )
+    }
+}
+
+impl std::error::Error for TableTooLarge {}
+
 /// Precomputed shortest-path next hops plus a CSR directed-port layout.
 ///
 /// * `next_edge(u, d)` is the index into `Graph::neighbours(u)` of the
@@ -230,11 +265,21 @@ pub struct RoutingTable {
 
 impl RoutingTable {
     /// Build the full table: O(V^2) memory, O(V * (V + E)) time.
+    /// Panics past [`MAX_TABLE_SWITCHES`] — large-system callers use
+    /// [`RoutingTable::try_build`] (typed error) or the computed
+    /// [`super::NextHop`] strategy.
     pub fn build(g: &Graph) -> Self {
         // The empty mask takes the exact same branches as the healthy
         // path always did — `build` and `build_avoiding(g, &[])` are
         // bit-identical by construction (the empty-plan oracle rule).
         Self::build_avoiding(g, &[])
+    }
+
+    /// [`RoutingTable::build`] with the size ceiling surfaced as the
+    /// typed [`TableTooLarge`] error instead of an abort: the n × n
+    /// allocation is only attempted when it fits.
+    pub fn try_build(g: &Graph) -> Result<Self, TableTooLarge> {
+        Self::try_build_avoiding(g, &[])
     }
 
     /// Build the table over the *surviving* links only: a directed port
@@ -246,7 +291,20 @@ impl RoutingTable {
     /// keep [`NO_HOP`] rows, which the DES surfaces as a typed
     /// `FaultError::Unreachable` instead of panicking.
     pub fn build_avoiding(g: &Graph, failed_ports: &[bool]) -> Self {
+        Self::try_build_avoiding(g, failed_ports)
+            .expect("dense routing table exceeds MAX_TABLE_SWITCHES; route large systems through NextHop")
+    }
+
+    /// [`RoutingTable::build_avoiding`] with the size ceiling surfaced
+    /// as the typed [`TableTooLarge`] error instead of an abort.
+    pub fn try_build_avoiding(
+        g: &Graph,
+        failed_ports: &[bool],
+    ) -> Result<Self, TableTooLarge> {
         let n = g.num_switches();
+        if n > MAX_TABLE_SWITCHES {
+            return Err(TableTooLarge { switches: n, max: MAX_TABLE_SWITCHES });
+        }
         let port_offset = port_offsets(g);
         let alive = |u: usize, e: usize| {
             failed_ports.is_empty() || !failed_ports[port_offset[u] as usize + e]
@@ -283,7 +341,7 @@ impl RoutingTable {
                 }
             }
         }
-        Self { switches: n, next_edge, port_offset }
+        Ok(Self { switches: n, next_edge, port_offset })
     }
 
     /// Number of switches the table covers.
@@ -453,6 +511,26 @@ mod tests {
         assert_eq!(rt.walk_distance(&g, NodeId(0), NodeId(3)), None);
         // The surviving side still routes.
         assert_eq!(rt.walk_distance(&g, NodeId(0), NodeId(2)), Some(2));
+    }
+
+    #[test]
+    fn too_large_graphs_are_a_typed_error_not_an_abort() {
+        // One switch past the ceiling (nodes only — cheap): the n × n
+        // allocation must never be attempted, and the error carries
+        // the exact counts. Satellite of the 4,096-tile-ceiling fix.
+        let mut g = Graph::new();
+        g.add_nodes(MAX_TABLE_SWITCHES + 1);
+        let err = RoutingTable::try_build(&g).unwrap_err();
+        assert_eq!(
+            err,
+            TableTooLarge { switches: MAX_TABLE_SWITCHES + 1, max: MAX_TABLE_SWITCHES }
+        );
+        assert!(err.to_string().contains("ceiling"), "{err}");
+        assert!(RoutingTable::try_build_avoiding(&g, &[]).is_err());
+        let _: &dyn std::error::Error = &err;
+        // Small graphs keep building through the checked path.
+        let ok = RoutingTable::try_build(&line_graph(4)).unwrap();
+        assert_eq!(ok, RoutingTable::build(&line_graph(4)));
     }
 
     #[test]

@@ -2,10 +2,17 @@
 //!
 //! * [`graph`] — the switch-graph substrate with BFS shortest paths
 //!   and the precomputed [`RoutingTable`] (next hops + directed-port
-//!   arena) the DES hot path walks allocation-free.
+//!   arena), capped at [`MAX_TABLE_SWITCHES`] by the typed
+//!   [`TableTooLarge`] error.
 //! * [`clos`] — folded Clos networks built from degree-32 switches
-//!   (16 tiles per edge switch, 256 tiles per chip, 2 or 3 stages).
+//!   (16 tiles per edge switch, 256 tiles per chip), recursing extra
+//!   system-core bank levels past `degree` chips up to the 2^24-tile
+//!   [`MAX_TILES`] ceiling.
 //! * [`mesh`] — 2D meshes of 16-tile blocks, extended across chips.
+//! * [`nexthop`] — computed next-hop routing ([`NextHop`]): O(V)
+//!   memory at any scale, entry-for-entry identical to the dense
+//!   table wherever both exist (the table stays the bit-identity
+//!   oracle; fault-masked irregular graphs always take the table).
 //! * [`routing`] — shortest-path routes annotated with link classes,
 //!   consumed by the analytic latency model and the DES.
 //!
@@ -16,9 +23,13 @@
 pub mod clos;
 pub mod graph;
 pub mod mesh;
+pub mod nexthop;
 pub mod routing;
 
-pub use clos::{ClosSpec, FoldedClos};
-pub use graph::{Graph, LinkClass, NodeId, RoutingTable, NO_HOP};
+pub use clos::{ClosSpec, FoldedClos, SysLevel, MAX_TILES};
+pub use graph::{
+    Graph, LinkClass, NodeId, RoutingTable, TableTooLarge, MAX_TABLE_SWITCHES, NO_HOP,
+};
 pub use mesh::{Mesh2D, MeshSpec};
+pub use nexthop::{ClosRouter, MeshRouter, NextHop};
 pub use routing::{Route, Topology};

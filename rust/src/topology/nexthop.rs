@@ -1,0 +1,460 @@
+//! Computed next-hop routing: O(V) memory at any scale.
+//!
+//! The dense [`RoutingTable`] stores a next-hop row per destination —
+//! O(n²) over switches, dead at a million tiles (hundreds of thousands
+//! of switches → terabytes). Both of the paper's topologies are
+//! regular enough that the next hop is a closed-form function of the
+//! current switch and the destination address, so large systems route
+//! *computed*: [`ClosRouter`] and [`MeshRouter`] derive each hop
+//! arithmetically from the node-id layout, keeping only the CSR port
+//! offsets (O(V)) for the DES per-port arenas.
+//!
+//! **Oracle rule.** The dense table remains the bit-identity
+//! reference: the computed routers reproduce the table's tie-break —
+//! BFS from the destination, first adjacency entry one step closer —
+//! *exactly*, so `next_edge` agrees with [`RoutingTable::next_edge`]
+//! entry for entry at every size where the table fits (property-tested
+//! exhaustively at small sizes and on random pairs at every
+//! table-feasible size). Irregular graphs — fault-masked topologies
+//! from [`RoutingTable::build_avoiding`] — have no closed form and
+//! always take the table path ([`NextHop::Table`]); that is why
+//! fault-plan evaluation caps out at [`MAX_TABLE_SWITCHES`] switches
+//! while healthy evaluation scales to the 2^24-tile ceiling.
+
+use super::clos::{FoldedClos, SysLevel};
+use super::graph::{port_offsets, NodeId, RoutingTable, NO_HOP};
+use super::mesh::Mesh2D;
+use super::routing::Topology;
+
+/// Next-hop strategy behind the DES: a dense table where one exists
+/// (small or fault-masked systems), computed arithmetic everywhere
+/// else. The three variants answer the same three queries —
+/// `next_edge`, `port_id`, `num_ports` — with identical results on
+/// healthy graphs (the oracle property tests in this module).
+#[derive(Clone, Debug)]
+pub enum NextHop {
+    /// Dense precomputed table (the bit-identity oracle; required for
+    /// fault-masked irregular routing).
+    Table(RoutingTable),
+    /// Computed folded-Clos routing from the node-id layout.
+    Clos(ClosRouter),
+    /// Computed dimension-ordered mesh routing.
+    Mesh(MeshRouter),
+}
+
+impl NextHop {
+    /// Computed router for a healthy topology — O(V) memory.
+    pub fn computed(topo: &Topology) -> Self {
+        match topo {
+            Topology::Clos(c) => NextHop::Clos(ClosRouter::new(c)),
+            Topology::Mesh(m) => NextHop::Mesh(MeshRouter::new(m)),
+        }
+    }
+
+    /// Adjacency index of the next hop from `from` toward `dest`, or
+    /// [`NO_HOP`] when `from == dest` (or, on a fault-masked table,
+    /// when the destination is unreachable). `dest` must be a
+    /// tile-bearing switch (Clos edge switch / mesh block switch) —
+    /// the only destinations messages have.
+    #[inline]
+    pub fn next_edge(&self, from: NodeId, dest: NodeId) -> u32 {
+        match self {
+            NextHop::Table(t) => t.next_edge(from, dest),
+            NextHop::Clos(c) => c.next_edge(from, dest),
+            NextHop::Mesh(m) => m.next_edge(from, dest),
+        }
+    }
+
+    /// Arena index of the directed port `(from, edge_idx)` — same CSR
+    /// layout as [`RoutingTable::port_id`].
+    #[inline]
+    pub fn port_id(&self, from: NodeId, edge_idx: u32) -> usize {
+        match self {
+            NextHop::Table(t) => t.port_id(from, edge_idx),
+            NextHop::Clos(c) => c.port_offset[from.0] as usize + edge_idx as usize,
+            NextHop::Mesh(m) => m.port_offset[from.0] as usize + edge_idx as usize,
+        }
+    }
+
+    /// Total directed ports — the arena size per-port state needs.
+    pub fn num_ports(&self) -> usize {
+        match self {
+            NextHop::Table(t) => t.num_ports(),
+            NextHop::Clos(c) => c.port_offset[c.switches] as usize,
+            NextHop::Mesh(m) => m.port_offset[m.switches] as usize,
+        }
+    }
+
+    /// Switches covered.
+    pub fn switches(&self) -> usize {
+        match self {
+            NextHop::Table(t) => t.switches(),
+            NextHop::Clos(c) => c.switches,
+            NextHop::Mesh(m) => m.switches,
+        }
+    }
+
+    /// Bytes of routing state held — O(n²) for the table, O(V) for the
+    /// computed routers. `benches/scale.rs` asserts the ceiling on
+    /// this so the dense table can never silently return to the
+    /// healthy path at scale.
+    pub fn memory_bytes(&self) -> usize {
+        match self {
+            NextHop::Table(t) => (t.switches() * t.switches() + t.switches() + 1) * 4,
+            NextHop::Clos(c) => {
+                c.port_offset.len() * 4 + c.levels.len() * std::mem::size_of::<SysLevel>()
+            }
+            NextHop::Mesh(m) => m.port_offset.len() * 4,
+        }
+    }
+
+    /// True when this strategy is the dense table (fault-masked or
+    /// oracle path).
+    pub fn is_table(&self) -> bool {
+        matches!(self, NextHop::Table(_))
+    }
+}
+
+/// Computed folded-Clos next hops.
+///
+/// Node-id layout (see [`FoldedClos::build`]): per chip
+/// `[edges 0..E)[cores 0..CC)`, chip-major; then the system-core bank
+/// levels, group-major within each level. Adjacency orders fall out of
+/// construction order:
+///
+/// * edge switch: `[core 0, .., core CC-1]` of its chip;
+/// * chip core: `[edge 0, .., edge E-1]` of its chip, then uplinks;
+/// * level-ℓ core: downlinks in `(child, i)` order, then uplinks.
+///
+/// BFS from a destination edge switch `d` gives: all cores of `d`'s
+/// chip dist 1; level-ℓ cores whose group contains `d` dist `ℓ+2`; and
+/// every other switch reaches `d` through the first entry of the
+/// unique "turnaround" group — so the table's first-closer-entry
+/// tie-break collapses to four closed-form cases.
+#[derive(Clone, Debug)]
+pub struct ClosRouter {
+    edges_per_chip: usize,
+    cores_per_chip: usize,
+    /// `edges_per_chip + cores_per_chip`.
+    per_chip: usize,
+    /// Chips-region size in nodes (`chips * per_chip`).
+    chip_region: usize,
+    tiles_per_chip: usize,
+    levels: Vec<SysLevel>,
+    switches: usize,
+    port_offset: Vec<u32>,
+}
+
+impl ClosRouter {
+    /// Derive the router from a built network's layout.
+    pub fn new(c: &FoldedClos) -> Self {
+        let spec = c.spec();
+        let edges_per_chip = c.edges_per_chip();
+        let cores_per_chip = c.cores_per_chip();
+        let per_chip = edges_per_chip + cores_per_chip;
+        Self {
+            edges_per_chip,
+            cores_per_chip,
+            per_chip,
+            chip_region: spec.chips() * per_chip,
+            tiles_per_chip: spec.tiles.min(spec.tiles_per_chip),
+            levels: c.levels().to_vec(),
+            switches: c.graph().num_switches(),
+            port_offset: port_offsets(c.graph()),
+        }
+    }
+
+    /// Chip index of an edge/core node in the chips region.
+    #[inline]
+    fn chip_of_node(&self, n: usize) -> usize {
+        n / self.per_chip
+    }
+
+    #[inline]
+    pub(crate) fn next_edge(&self, from: NodeId, dest: NodeId) -> u32 {
+        if from == dest {
+            return NO_HOP;
+        }
+        debug_assert!(
+            dest.0 < self.chip_region && dest.0 % self.per_chip < self.edges_per_chip,
+            "computed Clos routing only targets edge switches"
+        );
+        let dest_chip = self.chip_of_node(dest.0);
+        if from.0 < self.chip_region {
+            let local = from.0 % self.per_chip;
+            if local < self.edges_per_chip {
+                // Edge switch: every chip core is one step closer
+                // (toward `dest` on this chip, or toward the uplinks) —
+                // the table takes the first, core 0.
+                return 0;
+            }
+            // Chip core: straight down to `dest` if it lives here
+            // (the edges are adjacency entries 0..E in local order),
+            // else the first uplink (entry E).
+            return if self.chip_of_node(from.0) == dest_chip {
+                (dest.0 % self.per_chip) as u32
+            } else {
+                self.edges_per_chip as u32
+            };
+        }
+        // System core at some level ℓ: descend into the child that
+        // contains the destination chip (all of that child's bank is
+        // one step closer, first link = child * links_per_child), or
+        // take the first uplink (entry children * links_per_child)
+        // when the destination is outside this group.
+        let mut node = from.0;
+        for level in &self.levels {
+            let level_nodes = {
+                // Groups at this level cover the whole system.
+                let groups = self.chip_region / self.per_chip * self.tiles_per_chip
+                    / level.group_tiles;
+                groups * level.bank
+            };
+            if node < level.first_node + level_nodes {
+                let grp = (node - level.first_node) / level.bank;
+                let chips_per_group = level.group_tiles / self.tiles_per_chip;
+                if dest_chip / chips_per_group == grp {
+                    let chips_per_child = chips_per_group / level.children;
+                    let child = dest_chip / chips_per_child % level.children;
+                    return (child * level.links_per_child) as u32;
+                }
+                return (level.children * level.links_per_child) as u32;
+            }
+        }
+        unreachable!("node id {node} beyond the top bank level")
+    }
+}
+
+/// Computed 2D-mesh next hops: dimension-ordered in exactly the dense
+/// table's tie-break order.
+///
+/// Block `(x, y)` is node `y * bx + x`; construction adds east then
+/// south links per block in row-major order, so adjacency order at any
+/// block is `[north, west, east, south]` (present entries only). BFS
+/// from the destination makes a neighbour closer iff it reduces the
+/// Manhattan distance, so the first-closer-entry rule is: north while
+/// the destination is above, else west/east while it is beside, else
+/// south.
+#[derive(Clone, Debug)]
+pub struct MeshRouter {
+    /// Blocks per row (grid is `bx × bx`).
+    bx: usize,
+    switches: usize,
+    port_offset: Vec<u32>,
+}
+
+impl MeshRouter {
+    /// Derive the router from a built mesh's layout.
+    pub fn new(m: &Mesh2D) -> Self {
+        Self {
+            bx: m.spec().blocks_x(),
+            switches: m.graph().num_switches(),
+            port_offset: port_offsets(m.graph()),
+        }
+    }
+
+    #[inline]
+    pub(crate) fn next_edge(&self, from: NodeId, dest: NodeId) -> u32 {
+        if from == dest {
+            return NO_HOP;
+        }
+        let (x, y) = (from.0 % self.bx, from.0 / self.bx);
+        let (dx, dy) = (dest.0 % self.bx, dest.0 / self.bx);
+        // Adjacency index of each present direction, in push order.
+        let north = 0u32;
+        let west = (y > 0) as u32;
+        let east = west + (x > 0) as u32;
+        let south = east + (x + 1 < self.bx) as u32;
+        if dy < y {
+            north
+        } else if dx < x {
+            west
+        } else if dx > x {
+            east
+        } else {
+            south
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::graph::LinkClass;
+    use crate::topology::{ClosSpec, MeshSpec, Route};
+    use crate::util::prop::{check, ensure};
+    use crate::util::rng::Rng;
+
+    fn clos(tiles: usize) -> Topology {
+        Topology::Clos(FoldedClos::build(ClosSpec::with_tiles(tiles)).unwrap())
+    }
+
+    fn mesh(tiles: usize) -> Topology {
+        Topology::Mesh(Mesh2D::build(MeshSpec::with_tiles(tiles)).unwrap())
+    }
+
+    /// Every tile-bearing destination switch, deduplicated.
+    fn dest_switches(topo: &Topology) -> Vec<NodeId> {
+        let mut dests: Vec<NodeId> = (0..topo.tiles()).map(|t| topo.tile_switch(t)).collect();
+        dests.dedup();
+        dests
+    }
+
+    #[test]
+    fn computed_matches_table_exhaustively_at_small_sizes() {
+        // The strong oracle: entry-for-entry equality with the dense
+        // table over every (switch, destination) pair.
+        for topo in [clos(16), clos(64), clos(256), clos(1024), mesh(256), mesh(1024)] {
+            let nh = NextHop::computed(&topo);
+            let rt = topo.routing_table();
+            assert_eq!(nh.switches(), rt.switches());
+            assert_eq!(nh.num_ports(), rt.num_ports());
+            for &dest in &dest_switches(&topo) {
+                for u in 0..rt.switches() {
+                    let from = NodeId(u);
+                    assert_eq!(
+                        nh.next_edge(from, dest),
+                        rt.next_edge(from, dest),
+                        "{}: {u} -> {}",
+                        topo.name(),
+                        dest.0
+                    );
+                    assert_eq!(nh.port_id(from, 0), rt.port_id(from, 0));
+                }
+            }
+        }
+    }
+
+    /// Walk `a -> b` over a strategy, accumulating the per-class Route
+    /// summary — the exact accumulation the DES performs.
+    fn walk(topo: &Topology, nh: &NextHop, a: usize, b: usize) -> Route {
+        let g = topo.graph();
+        let dest = topo.tile_switch(b);
+        let mut u = topo.tile_switch(a);
+        let mut r = Route {
+            distance: 0,
+            edge_core_links: 0,
+            core_sys_links: 0,
+            mesh_hops: 0,
+            chip_crossings: 0,
+            inter_chip: false,
+        };
+        while u != dest {
+            let e = nh.next_edge(u, dest);
+            assert_ne!(e, NO_HOP, "connected");
+            let (v, class) = g.neighbours(u)[e as usize];
+            match class {
+                LinkClass::EdgeCore => r.edge_core_links += 1,
+                LinkClass::CoreSys => r.core_sys_links += 1,
+                LinkClass::MeshHop => r.mesh_hops += 1,
+                LinkClass::MeshChipCross => r.chip_crossings += 1,
+                LinkClass::Tile => {}
+            }
+            r.distance += 1;
+            u = v;
+            assert!((r.distance as usize) <= nh.switches(), "computed walk cycles");
+        }
+        r.inter_chip = r.core_sys_links > 0 || r.chip_crossings > 0;
+        r
+    }
+
+    #[test]
+    fn computed_equals_table_walk_equals_bfs_at_every_table_feasible_size() {
+        // The satellite property test: computed next hop == dense-table
+        // walk == bfs_route per link class on random pairs, at every
+        // size where the table still fits — including the first
+        // deep-hierarchy Clos (16K tiles, 3,584 switches) and the
+        // largest table-feasible mesh (64K tiles, 4,096 switches).
+        let topos = [clos(64), clos(1024), clos(4096), clos(16384), mesh(1024), mesh(65536)];
+        for topo in topos {
+            let tiles = topo.tiles() as u64;
+            let nh = NextHop::computed(&topo);
+            let rt = topo.routing_table();
+            check(
+                |r: &mut Rng| (r.below(tiles) as usize, r.below(tiles) as usize),
+                |&(a, b)| {
+                    let dest = topo.tile_switch(b);
+                    // Entry-for-entry table equality along the path.
+                    let mut u = topo.tile_switch(a);
+                    while u != dest {
+                        let e = nh.next_edge(u, dest);
+                        if e != rt.next_edge(u, dest) {
+                            return ensure(
+                                false,
+                                format!(
+                                    "{}: {a}->{b} at {}: computed {e} vs table {}",
+                                    topo.name(),
+                                    u.0,
+                                    rt.next_edge(u, dest)
+                                ),
+                            );
+                        }
+                        u = topo.graph().neighbours(u)[e as usize].0;
+                    }
+                    let walked = walk(&topo, &nh, a, b);
+                    let arith = topo.route(a, b);
+                    let bfs = match topo.bfs_route(a, b) {
+                        Ok(r) => r,
+                        Err(e) => return ensure(false, format!("severed: {e}")),
+                    };
+                    ensure(
+                        walked == arith
+                            && bfs.distance == walked.distance
+                            && bfs.edge_core_links == walked.edge_core_links
+                            && bfs.core_sys_links == walked.core_sys_links
+                            && bfs.distance - bfs.chip_crossings
+                                == walked.distance - walked.chip_crossings,
+                        format!(
+                            "{}: {a}->{b}: walked {walked:?} arith {arith:?} bfs {bfs:?}",
+                            topo.name()
+                        ),
+                    )
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn million_tile_routers_stay_o_n_and_route_end_to_end() {
+        // 2^20 tiles on both topologies: the computed routers build
+        // (no O(n²) table anywhere) and a longest-class route walks
+        // clean. The Clos holds 294,912 switches — a dense table would
+        // be ~348 GB.
+        let c = clos(1 << 20);
+        let nh = NextHop::computed(&c);
+        assert_eq!(nh.switches(), 294_912);
+        assert!(!nh.is_table());
+        // O(V) state: CSR offsets, ~1.2 MB — far under the 8 MiB
+        // ceiling benches/scale.rs enforces.
+        assert!(nh.memory_bytes() < 8 << 20, "clos router holds {} bytes", nh.memory_bytes());
+        let r = walk(&c, &nh, 0, (1 << 20) - 1);
+        assert_eq!(r.distance, c.route(0, (1 << 20) - 1).distance);
+        assert_eq!(r.distance, 8); // three bank levels: 4 + 2*2
+
+        let m = mesh(1 << 20);
+        let nh = NextHop::computed(&m);
+        assert_eq!(nh.switches(), 65_536);
+        assert!(nh.memory_bytes() < 8 << 20, "mesh router holds {} bytes", nh.memory_bytes());
+        let r = walk(&m, &nh, 0, (1 << 20) - 1);
+        assert_eq!(r, m.route(0, (1 << 20) - 1));
+        assert_eq!(r.distance, 2 * 255); // corner to corner
+    }
+
+    #[test]
+    fn table_variant_answers_identically() {
+        // NextHop::Table wraps the dense table without changing any
+        // answer — the fault path (build_avoiding) rides on this.
+        let topo = clos(1024);
+        let rt = topo.routing_table();
+        let nh = NextHop::Table(rt.clone());
+        assert!(nh.is_table());
+        assert_eq!(nh.num_ports(), rt.num_ports());
+        for &dest in &dest_switches(&topo) {
+            for u in 0..rt.switches() {
+                assert_eq!(nh.next_edge(NodeId(u), dest), rt.next_edge(NodeId(u), dest));
+            }
+        }
+        // Table memory is O(n²) and says so.
+        assert!(nh.memory_bytes() > rt.switches() * rt.switches() * 4 - 1);
+    }
+}

@@ -2,8 +2,10 @@
 //! counts the §6.3 latency model needs.
 
 use super::clos::FoldedClos;
-use super::graph::LinkClass;
+use super::graph::{Graph, LinkClass, NodeId};
 use super::mesh::Mesh2D;
+use super::nexthop::NextHop;
+use crate::fault::FaultError;
 
 /// A shortest route between two tiles, summarised for the latency model.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -110,17 +112,47 @@ impl Topology {
         }
     }
 
-    /// Precompute the next-hop routing table + directed-port layout for
-    /// the underlying switch graph (the DES hot-path substrate).
+    /// Precompute the dense next-hop routing table + directed-port
+    /// layout for the underlying switch graph. O(n²) memory — panics
+    /// past [`super::MAX_TABLE_SWITCHES`]; large-system callers use
+    /// [`Topology::try_routing_table`] or [`Topology::next_hops`].
     pub fn routing_table(&self) -> super::graph::RoutingTable {
         super::graph::RoutingTable::build(self.graph())
     }
 
+    /// [`Topology::routing_table`] with the size ceiling surfaced as
+    /// the typed [`super::TableTooLarge`] error.
+    pub fn try_routing_table(
+        &self,
+    ) -> Result<super::graph::RoutingTable, super::graph::TableTooLarge> {
+        super::graph::RoutingTable::try_build(self.graph())
+    }
+
+    /// Computed next-hop strategy — O(V) memory at any scale,
+    /// entry-for-entry identical to [`Topology::routing_table`] on
+    /// healthy graphs (the [`super::nexthop`] oracle tests). The DES
+    /// routes healthy systems through this; fault-masked systems keep
+    /// the dense avoiding table.
+    pub fn next_hops(&self) -> NextHop {
+        NextHop::computed(self)
+    }
+
     /// Count links of each class on a BFS path between two tiles'
-    /// switches — slow, for cross-validation in tests.
-    pub fn bfs_route(&self, a: usize, b: usize) -> Route {
-        let g = self.graph();
-        let path = g.bfs_path(self.tile_switch(a), self.tile_switch(b)).expect("connected");
+    /// switches — slow, for cross-validation in tests. A severed
+    /// graph is a typed [`FaultError::Unreachable`], never a panic
+    /// (the PR 6 rule).
+    pub fn bfs_route(&self, a: usize, b: usize) -> Result<Route, FaultError> {
+        Self::bfs_route_between(self.graph(), self.tile_switch(a), self.tile_switch(b))
+    }
+
+    /// [`Topology::bfs_route`] over an explicit graph and endpoint
+    /// switches — split out so the severed-graph regression test can
+    /// drive the error path (healthy topology constructors only ever
+    /// build connected graphs).
+    fn bfs_route_between(g: &Graph, from: NodeId, to: NodeId) -> Result<Route, FaultError> {
+        let path = g
+            .bfs_path(from, to)
+            .ok_or(FaultError::Unreachable { from: from.0, to: to.0 })?;
         let mut r = Route {
             distance: (path.len() - 1) as u32,
             edge_core_links: 0,
@@ -130,7 +162,7 @@ impl Topology {
             inter_chip: false,
         };
         for w in path.windows(2) {
-            match g.link_class(w[0], w[1]).expect("adjacent") {
+            match g.link_class(w[0], w[1]).expect("BFS path steps over existing links") {
                 LinkClass::EdgeCore => r.edge_core_links += 1,
                 LinkClass::CoreSys => r.core_sys_links += 1,
                 LinkClass::MeshHop => r.mesh_hops += 1,
@@ -139,7 +171,7 @@ impl Topology {
             }
         }
         r.inter_chip = r.core_sys_links > 0 || r.chip_crossings > 0;
-        r
+        Ok(r)
     }
 }
 
@@ -190,7 +222,10 @@ mod tests {
                 |r: &mut Rng| (r.below(1024) as usize, r.below(1024) as usize),
                 |&(a, b)| {
                     let fast = topo.route(a, b);
-                    let slow = topo.bfs_route(a, b);
+                    let slow = match topo.bfs_route(a, b) {
+                        Ok(r) => r,
+                        Err(e) => return ensure(false, format!("severed: {e}")),
+                    };
                     ensure(
                         fast.distance == slow.distance
                             && fast.edge_core_links == slow.edge_core_links
@@ -203,6 +238,24 @@ mod tests {
                 },
             );
         }
+    }
+
+    #[test]
+    fn severed_graph_is_a_typed_error_not_a_panic() {
+        // Regression for the `.expect("connected")` panic path: a
+        // graph split in two must surface FaultError::Unreachable.
+        let mut g = Graph::new();
+        let a = g.add_node();
+        let b = g.add_node();
+        let err = Topology::bfs_route_between(&g, a, b).unwrap_err();
+        assert_eq!(err, FaultError::Unreachable { from: a.0, to: b.0 });
+        assert!(err.to_string().contains("unreachable"), "{err}");
+        // Connected endpoints still classify.
+        g.add_link(a, b, LinkClass::MeshHop);
+        let r = Topology::bfs_route_between(&g, a, b).unwrap();
+        assert_eq!((r.distance, r.mesh_hops), (1, 1));
+        // The public tile-level wrapper stays Ok on healthy builds.
+        assert!(clos(256).bfs_route(0, 255).is_ok());
     }
 
     #[test]

@@ -254,6 +254,50 @@ fn faults_figure_joins_the_harness() {
 }
 
 #[test]
+fn scale_figure_joins_the_harness() {
+    // The scale figure is part of `all_reports`, so the main test above
+    // already pins `tests/golden/scale.json` and asserts parallel ==
+    // sequential on it (including the million-tile cells). This checks
+    // the emitter contract on the affordable sizes, and that scale
+    // cells — which ARE uniform contention cells — embed the legacy
+    // oracle (`sim::network::run_contention`) bit for bit.
+    use memclos::api::DesignPoint;
+    use memclos::figures::contention::cell_seed;
+    use memclos::figures::scale::{self, eval_points, FigScale};
+    use memclos::sim::network::run_contention;
+
+    let engine = ParallelSweep::new(Mode::Exact, &Tech::default(), parallel_jobs(), SEED);
+    let cells: Vec<_> =
+        scale::grid_cells().into_iter().filter(|c| c.point.tiles <= 4096).collect();
+    let rows = eval_points(&engine, &cells).unwrap();
+    let report = scale::report(&FigScale { rows: rows.clone() });
+    assert_eq!(report.bench(), "scale");
+    assert_eq!(report.len(), cells.len());
+    let rendered = report.render();
+    for r in &rows {
+        assert!(rendered.contains(&format!("\"name\": \"{}\"", r.name())));
+    }
+    for (cell, row) in cells.iter().zip(&rows) {
+        let setup = DesignPoint::new(cell.point.kind, cell.point.tiles)
+            .mem_kb(cell.point.mem_kb)
+            .k(cell.point.k)
+            .build()
+            .unwrap();
+        let legacy =
+            run_contention(&setup, cell.clients, cell.accesses, cell_seed(SEED, cell));
+        assert_eq!(
+            row.stats.latency.mean().to_bits(),
+            legacy.latency.mean().to_bits(),
+            "{}: scale cell diverged from the legacy contention oracle",
+            row.name()
+        );
+    }
+    // The table-era sizes stay table-feasible; the full grid's top end
+    // (checked by the main snapshot test) is not.
+    assert!(rows.iter().all(|r| r.table_feasible));
+}
+
+#[test]
 fn fig5_fig6_combined_run_hits_the_plan_cache() {
     // Acceptance criterion: the repeated-point cache reports >= 1 hit
     // on the fig5+fig6 combined run (fig 6's 256 KB plans are a subset
