@@ -1,12 +1,19 @@
 //! Bench: whole-program interpretation — the pre-decoded
 //! direct-threaded loop ([`memclos::isa::decode::FastMachine`]) vs the
 //! legacy enum-match loop ([`memclos::isa::interp::Machine`]) over the
-//! full cc corpus on both memory systems, plus the decode-once cost.
+//! full cc corpus on both memory systems, plus the decode-once cost —
+//! and the third tier: the baseline JIT ([`memclos::isa::jit`]) over
+//! the same corpus.
 //!
 //! Writes the machine-readable perf trajectory to `BENCH_interp.json`
-//! (override the path with `--json PATH`; same schema family as
-//! `BENCH_hotpath.json`) and then enforces the floor: the decoded
-//! interpreter must be >= 5x the legacy loop on the emulated corpus.
+//! and `BENCH_jit.json` (override with `--json PATH` / `--json-jit
+//! PATH`; same schema family as `BENCH_hotpath.json`) and then
+//! enforces the floors: decoded >= 5x legacy and jit >= 50x legacy on
+//! the emulated corpus. Both JSON files land on disk *before* their
+//! assertions run, so a regression still records its numbers. On
+//! hosts the JIT does not target, `BENCH_jit.json` is written with an
+//! empty result set and the jit floor is skipped with a notice — the
+//! interp floors still apply everywhere.
 //!
 //! Quick smoke mode: set `MEMCLOS_BENCH_QUICK=1` (what
 //! `rust/scripts/bench_hotpath.sh` does).
@@ -14,15 +21,16 @@
 use std::path::PathBuf;
 
 use memclos::figures::interp_bench;
+use memclos::util::bench::Bench;
 
-fn json_path() -> PathBuf {
+fn flag_path(flag: &str, default: &str) -> PathBuf {
     let args: Vec<String> = std::env::args().collect();
     for w in args.windows(2) {
-        if w[0] == "--json" {
+        if w[0] == flag {
             return PathBuf::from(&w[1]);
         }
     }
-    PathBuf::from("BENCH_interp.json")
+    PathBuf::from(default)
 }
 
 fn main() {
@@ -40,7 +48,7 @@ fn main() {
 
     // Perf trajectory lands on disk before the assertions run, so a
     // regression still records its numbers.
-    let path = json_path();
+    let path = flag_path("--json", "BENCH_interp.json");
     b.write_json(&path).expect("write bench json");
     println!("wrote {}", path.display());
 
@@ -49,4 +57,28 @@ fn main() {
         "interp assertions OK (decoded {:.1}x legacy on the emulated corpus)",
         interp_bench::speedup(&b).unwrap()
     );
+
+    // Third tier: the baseline JIT, same corpus, same design point.
+    let jit_path = flag_path("--json-jit", "BENCH_jit.json");
+    if memclos::isa::jit::available() {
+        let jb = interp_bench::measure_jit(&w).expect("jit corpus compiles");
+        jb.report();
+        println!("\n{}", interp_bench::render_jit(&jb));
+        jb.write_json(&jit_path).expect("write jit bench json");
+        println!("wrote {}", jit_path.display());
+        interp_bench::assert_jit(&jb).expect("jit throughput floors");
+        println!(
+            "jit assertions OK (jit {:.1}x legacy on the emulated corpus)",
+            interp_bench::jit_speedup(&jb).unwrap()
+        );
+    } else {
+        // Typed, explicit degradation: record an empty jit group so the
+        // artifact family stays complete, and say why.
+        Bench::new("jit").write_json(&jit_path).expect("write jit bench json");
+        println!("wrote {} (empty: JIT tier unavailable on this host)", jit_path.display());
+        println!(
+            "skipping jit floor: {}",
+            memclos::isa::JitUnsupported::host()
+        );
+    }
 }

@@ -5,6 +5,9 @@
 #
 #   BENCH_hotpath.json    — the emulated-memory access hot path
 #   BENCH_interp.json     — decoded-vs-legacy whole-program interpretation
+#   BENCH_jit.json        — the baseline JIT tier vs legacy on the same
+#                           corpus (written empty, with a notice, on
+#                           hosts the JIT does not target)
 #   BENCH_contention.json — trace generation + DES contention replay
 #   BENCH_faults.json     — healthy-vs-faulted DES replay + fault build cost
 #   BENCH_serve.json      — serve layer: frame codec, request parse,
@@ -28,6 +31,7 @@ RUST_DIR="$(cd "$(dirname "$0")/.." && pwd)"
 REPO_ROOT="$(cd "$RUST_DIR/.." && pwd)"
 OUT="$REPO_ROOT/BENCH_hotpath.json"
 INTERP_OUT="$REPO_ROOT/BENCH_interp.json"
+JIT_OUT="$REPO_ROOT/BENCH_jit.json"
 CONT_OUT="$REPO_ROOT/BENCH_contention.json"
 FAULTS_OUT="$REPO_ROOT/BENCH_faults.json"
 SERVE_OUT="$REPO_ROOT/BENCH_serve.json"
@@ -52,14 +56,19 @@ fi
 
 echo "perf trajectory written to $OUT"
 
-if cargo bench --bench interp -- --json "$INTERP_OUT"; then
+# The interp bench also runs the third tier and writes BENCH_jit.json
+# (empty, with a notice, on hosts the JIT does not target); the CLI
+# fallback covers the jit group with its own subcommand.
+if cargo bench --bench interp -- --json "$INTERP_OUT" --json-jit "$JIT_OUT"; then
     :
 else
-    echo "(cargo bench interp failed; falling back to the CLI bench-interp)" >&2
+    echo "(cargo bench interp failed; falling back to the CLI bench-interp + bench-jit)" >&2
     cargo run --release --bin memclos -- bench-interp --out "$INTERP_OUT"
+    cargo run --release --bin memclos -- bench-jit --out "$JIT_OUT"
 fi
 
 echo "interp trajectory written to $INTERP_OUT"
+echo "jit trajectory written to $JIT_OUT"
 
 if cargo bench --bench contention -- --json "$CONT_OUT"; then
     :

@@ -25,13 +25,15 @@ use crate::emulation::{EmulationSetup, SequentialMachine, TopologyKind};
 use crate::fault::FaultPlan;
 use crate::figures::{self, FigOpts};
 use crate::isa::decode::{predecode, FastMachine};
+use crate::isa::inst::Inst;
+use crate::isa::jit::{self, JitMachine};
 use crate::isa::interp::{
     DirectMemory, EmulatedChannelMemory, ExecCursor, Machine, MachineState, MemorySystem,
     RunOutcome, RunStats,
 };
 use crate::isa::snapshot::{
-    program_fingerprint, rebuild_memory, run_fast_slice, run_legacy_slice, BackendSnap,
-    RebuiltMemory, Snapshot, Tier,
+    program_fingerprint, rebuild_memory, run_fast_slice, run_jit_slice, run_legacy_slice,
+    BackendSnap, RebuiltMemory, Snapshot, Tier,
 };
 use crate::serve::{
     install_sigint, sigint_seen, LoadgenOpts, ServeConfig, Server, ServerConfig, Service,
@@ -59,8 +61,12 @@ COMMANDS
                                 emulated-memory latency for one point,
                                 evaluated on the selected backend
   run <program> [--topo ...]    compile+run a corpus program on both machines
-                                (pre-decoded fast loop; --legacy for the
-                                enum-match oracle)
+    --tier auto|jit|fast|legacy execution tier (default auto: the
+                                baseline JIT where the host supports
+                                it, else the pre-decoded fast loop;
+                                `--tier jit` on an unsupported host is
+                                a typed runtime error). --legacy is the
+                                old spelling of --tier legacy
   contention [--clients N]...   trace-driven DES contention lab: replay a
                                 clients x pattern grid, one DES timeline
                                 per cell fanned out over --jobs; reports
@@ -127,6 +133,9 @@ COMMANDS
   bench-hotpath [--out PATH]    measure the access hot path, write BENCH_hotpath.json
   bench-interp [--out PATH]     measure decoded-vs-legacy interpretation
                                 over the cc corpus, write BENCH_interp.json
+  bench-jit [--out PATH]        measure the baseline JIT tier over the cc
+                                corpus, write BENCH_jit.json (empty
+                                result set on hosts without the JIT)
 
 BACKENDS (--mode, default auto)
   auto     XLA when artifacts/ holds the lowered kernel, else native MC
@@ -188,6 +197,14 @@ fn fig_opts(args: &Args, doc: &Doc) -> Result<FigOpts> {
         seed: args.get("seed", 0xC105)?,
         tech: Tech::from_doc(doc),
     })
+}
+
+/// The execution tier `memclos run` resolved from `--tier`/`--legacy`.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum RunTier {
+    Legacy,
+    Fast,
+    Jit,
 }
 
 fn kind_str(kind: TopologyKind) -> &'static str {
@@ -457,31 +474,72 @@ pub fn run(raw: Vec<String>) -> Result<()> {
 
             let direct = compile(prog.source, Backend::Direct)?;
             let emulated = compile(prog.source, Backend::Emulated)?;
-            let legacy = args.has("legacy");
+            // Tier selection: `--tier auto` (the default) takes the
+            // fastest tier the host supports — never a panic, never a
+            // silent wrong answer; an *explicit* `--tier jit` on an
+            // unsupported host is a typed runtime error (exit 1).
+            let tier = match (args.has("legacy"), args.flag("tier")) {
+                (true, Some(_)) => {
+                    return Err(usage_error(
+                        "--legacy conflicts with --tier (it is shorthand for --tier legacy)",
+                    ))
+                }
+                (true, None) | (false, Some("legacy")) => RunTier::Legacy,
+                (false, Some("fast")) => RunTier::Fast,
+                (false, Some("jit")) => {
+                    if !jit::available() {
+                        return Err(jit::JitUnsupported::host().into());
+                    }
+                    RunTier::Jit
+                }
+                (false, None) | (false, Some("auto")) => {
+                    if jit::available() {
+                        RunTier::Jit
+                    } else {
+                        RunTier::Fast
+                    }
+                }
+                (false, Some(other)) => {
+                    return Err(usage_error(format!(
+                        "flag --tier: unknown tier `{other}` (auto | jit | fast | legacy)"
+                    )))
+                }
+            };
+            let run_tier = |code: &[Inst], mem: &mut dyn MemorySystem| -> Result<(RunStats, i64)> {
+                match tier {
+                    RunTier::Legacy => {
+                        let mut m = Machine::new(mem, 1 << 16);
+                        Ok((m.run(code)?, m.reg(0)))
+                    }
+                    RunTier::Fast => {
+                        let mut mem = mem;
+                        let mut m = FastMachine::new(&mut mem, 1 << 16);
+                        Ok((m.run(&predecode(code)?)?, m.reg(0)))
+                    }
+                    RunTier::Jit => {
+                        let compiled = jit::compile(&predecode(code)?)?;
+                        let mut mem = mem;
+                        let mut m = JitMachine::new(&mut mem, 1 << 16);
+                        Ok((m.run(&compiled)?, m.reg(0)))
+                    }
+                }
+            };
 
             let seq = SequentialMachine::with_measured_dram(1);
             let mut dmem = DirectMemory::new(seq, 1 << 24);
-            let (dstats, dres): (RunStats, i64) = if legacy {
-                let mut dm = Machine::new(&mut dmem, 1 << 16);
-                (dm.run(&direct.code)?, dm.reg(0))
-            } else {
-                let mut dm = FastMachine::new(&mut dmem, 1 << 16);
-                (dm.run(&predecode(&direct.code)?)?, dm.reg(0))
-            };
+            let (dstats, dres): (RunStats, i64) = run_tier(&direct.code, &mut dmem)?;
 
             let mut emem = EmulatedChannelMemory::new(dp.build()?);
-            let (estats, eres): (RunStats, i64) = if legacy {
-                let mut em = Machine::new(&mut emem, 1 << 16);
-                (em.run(&emulated.code)?, em.reg(0))
-            } else {
-                let mut em = FastMachine::new(&mut emem, 1 << 16);
-                (em.run(&predecode(&emulated.code)?)?, em.reg(0))
-            };
+            let (estats, eres): (RunStats, i64) = run_tier(&emulated.code, &mut emem)?;
 
             println!(
-                "program `{}` ({} interpreter):",
+                "program `{}` ({} tier):",
                 prog.name,
-                if legacy { "legacy enum-match" } else { "pre-decoded" }
+                match tier {
+                    RunTier::Legacy => "legacy enum-match",
+                    RunTier::Fast => "pre-decoded fast",
+                    RunTier::Jit => "baseline JIT",
+                }
             );
             println!(
                 "  sequential: result {dres}, {} insts, {} cycles (binary {} B)",
@@ -669,6 +727,31 @@ pub fn run(raw: Vec<String>) -> Result<()> {
                 "interp assertions OK (decoded {:.1}x legacy on the emulated corpus)",
                 figures::interp_bench::speedup(&b)?
             );
+        }
+        "bench-jit" => {
+            let out = args.flag("out").unwrap_or("BENCH_jit.json");
+            if !jit::available() {
+                // Degrade explicitly: record an empty jit group so the
+                // BENCH artifact family stays complete on every host,
+                // and say why the floor was not enforced.
+                crate::util::bench::Bench::new("jit")
+                    .write_json(std::path::Path::new(out))
+                    .with_context(|| format!("writing {out}"))?;
+                println!("wrote {out} (empty result set)");
+                println!("skipping jit floor: {}", jit::JitUnsupported::host());
+            } else {
+                let w = figures::interp_bench::workload()?;
+                let b = figures::interp_bench::measure_jit(&w)?;
+                print!("{}", figures::interp_bench::render_jit(&b));
+                b.write_json(std::path::Path::new(out))
+                    .with_context(|| format!("writing {out}"))?;
+                println!("wrote {out}");
+                figures::interp_bench::assert_jit(&b)?;
+                println!(
+                    "jit assertions OK (jit {:.1}x legacy on the emulated corpus)",
+                    figures::interp_bench::jit_speedup(&b)?
+                );
+            }
         }
         "sweep" => {
             let dp = design_point(&args, &doc, 1024, None)?;
@@ -904,12 +987,31 @@ fn snapshot_resume(args: &Args) -> Result<()> {
     let compiled = compile(prog.source, cc_backend)?;
     snap.check_program(&compiled.code)?;
     let decoded = match snap.tier {
-        Tier::Fast => Some(predecode(&compiled.code)?),
+        Tier::Fast | Tier::Jit => Some(predecode(&compiled.code)?),
         Tier::Legacy => None,
     };
-    let run_from = |state: &MachineState, memory: &mut RebuiltMemory| match &decoded {
-        Some(d) => run_fast_slice(d, memory.as_dyn(), state, snap.max_steps, None),
-        None => run_legacy_slice(&compiled.code, memory.as_dyn(), state, snap.max_steps, None),
+    // A jit-tier snapshot resumes under the JIT where the host supports
+    // it; elsewhere it degrades — explicitly, with a notice — to the
+    // fast tier, which shares the decoded cursor space bit-identically.
+    let jit_prog = match snap.tier {
+        Tier::Jit if jit::available() => {
+            Some(jit::compile(decoded.as_ref().expect("jit tier predecodes"))?)
+        }
+        Tier::Jit => {
+            eprintln!(
+                "note: resuming a jit-tier snapshot on the fast tier ({})",
+                jit::JitUnsupported::host()
+            );
+            None
+        }
+        _ => None,
+    };
+    let run_from = |state: &MachineState, memory: &mut RebuiltMemory| match (&jit_prog, &decoded) {
+        (Some(jp), _) => run_jit_slice(jp, memory.as_dyn(), state, snap.max_steps, None),
+        (None, Some(d)) => run_fast_slice(d, memory.as_dyn(), state, snap.max_steps, None),
+        (None, None) => {
+            run_legacy_slice(&compiled.code, memory.as_dyn(), state, snap.max_steps, None)
+        }
     };
 
     let mut memory = rebuild_memory(&snap)?;

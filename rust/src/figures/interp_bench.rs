@@ -15,6 +15,16 @@
 //! legacy loop on the emulated corpus); [`Bench::write_json`] emits the
 //! `BENCH_interp.json` schema (same family as `BENCH_hotpath.json`)
 //! consumed by `rust/scripts/bench_hotpath.sh`.
+//!
+//! [`measure_jit`] is the third-tier companion (the `jit` bench group,
+//! emitted as `BENCH_jit.json`): `jit-emulated` / `jit-direct` run the
+//! [`JitCorpus`] native code, `legacy-emulated` rides along as the
+//! in-file baseline, and `jit-compile-corpus` prices the compile-once
+//! cost. [`assert_jit`] holds the JIT to >= 50x the legacy loop on the
+//! emulated corpus. On hosts the compiler does not target,
+//! [`measure_jit`] returns the typed
+//! [`JitUnsupported`](crate::isa::JitUnsupported) error instead of a
+//! number — callers fall back explicitly, never silently.
 
 use anyhow::{Context, Result};
 
@@ -22,12 +32,17 @@ use crate::api::DesignPoint;
 use crate::emulation::{EmulationSetup, SequentialMachine};
 use crate::isa::decode::{predecode, FastMachine};
 use crate::isa::interp::{DirectMemory, EmulatedChannelMemory, Machine};
+use crate::isa::jit::{self, JitMachine};
 use crate::util::bench::{black_box, fmt_duration, Bench};
-use crate::workload::measured::CompiledCorpus;
+use crate::workload::measured::{CompiledCorpus, JitCorpus};
 
 /// Acceptance floor: decoded must beat legacy by this factor on the
 /// emulated corpus.
 pub const SPEEDUP_FLOOR: f64 = 5.0;
+
+/// Acceptance floor for the third tier: the baseline JIT must beat the
+/// legacy enum-match loop by this factor on the emulated corpus.
+pub const JIT_SPEEDUP_FLOOR: f64 = 50.0;
 
 /// Words of DRAM space per direct run (power of two: the fast loop's
 /// address mask applies).
@@ -175,9 +190,128 @@ pub fn render(b: &Bench) -> String {
     s
 }
 
+/// Measure the JIT tier against the legacy loop on the same corpus
+/// and design point (the `jit` bench group). Native code is compiled
+/// once, outside the timed closures — the compile-once cost gets its
+/// own `jit-compile-corpus` case instead. Returns the typed
+/// [`JitUnsupported`](crate::isa::JitUnsupported) error on hosts the
+/// compiler does not target.
+pub fn measure_jit(w: &InterpWorkload) -> Result<Bench> {
+    if !jit::available() {
+        return Err(crate::isa::JitUnsupported::host().into());
+    }
+    let jitted = JitCorpus::compile(&w.corpus)?;
+    let mut b = Bench::new("jit");
+
+    b.iter_items("jit-emulated", w.emulated_insts, || {
+        let mut sum = 0u64;
+        for p in &jitted.programs {
+            let mut mem = EmulatedChannelMemory::new(w.setup.clone());
+            let mut m = JitMachine::new(&mut mem, LOCAL_WORDS);
+            sum += m.run(&p.emulated).expect("corpus runs").cycles;
+        }
+        black_box(sum)
+    });
+    b.iter_items("legacy-emulated", w.emulated_insts, || {
+        let mut sum = 0u64;
+        for p in &w.corpus.programs {
+            let mut mem = EmulatedChannelMemory::new(w.setup.clone());
+            let mut m = Machine::new(&mut mem, LOCAL_WORDS);
+            sum += m.run(&p.emulated_code).expect("corpus runs").cycles;
+        }
+        black_box(sum)
+    });
+    b.iter_items("jit-direct", w.direct_insts, || {
+        let mut sum = 0u64;
+        for p in &jitted.programs {
+            let mut mem = DirectMemory::new(w.seq, DIRECT_SPACE);
+            let mut m = JitMachine::new(&mut mem, LOCAL_WORDS);
+            sum += m.run(&p.direct).expect("corpus runs").cycles;
+        }
+        black_box(sum)
+    });
+    b.iter("jit-compile-corpus", || {
+        let mut bytes = 0usize;
+        for p in &w.corpus.programs {
+            bytes += jit::compile(&p.emulated).expect("corpus compiles").code_len();
+        }
+        black_box(bytes)
+    });
+
+    Ok(b)
+}
+
+/// Speedup of the JIT tier over the legacy loop on the emulated
+/// corpus (the third-tier acceptance metric).
+pub fn jit_speedup(b: &Bench) -> Result<f64> {
+    let native = b.get("jit-emulated").context("jit-emulated not measured")?;
+    let legacy = b.get("legacy-emulated").context("legacy-emulated not measured")?;
+    Ok(legacy.median.as_secs_f64() / native.median.as_secs_f64())
+}
+
+/// Throughput assertions for the third tier: the JIT must be >= 50x
+/// the legacy enum-match loop on the emulated corpus, faster than
+/// legacy on the direct corpus too, and every case measured with
+/// nonzero time.
+pub fn assert_jit(b: &Bench) -> Result<()> {
+    let x = jit_speedup(b)?;
+    anyhow::ensure!(
+        x >= JIT_SPEEDUP_FLOOR,
+        "baseline JIT is only {x:.1}x the legacy enum-match loop \
+         on the emulated corpus (need >= {JIT_SPEEDUP_FLOOR}x)"
+    );
+    let jd = b.get("jit-direct").context("jit-direct not measured")?;
+    for case in ["jit-emulated", "legacy-emulated", "jit-direct", "jit-compile-corpus"] {
+        let m = b.get(case).with_context(|| format!("{case} not measured"))?;
+        anyhow::ensure!(!m.median.is_zero(), "{case} measured a zero median");
+    }
+    anyhow::ensure!(
+        jd.median < b.get("legacy-emulated").expect("checked above").median,
+        "jit direct path ({}) not faster than the legacy emulated loop",
+        fmt_duration(jd.median)
+    );
+    Ok(())
+}
+
+/// Human summary for the JIT group (one line per case + the speedup).
+pub fn render_jit(b: &Bench) -> String {
+    let mut s = String::from("baseline JIT tier (cc corpus, 1,024-tile Clos k=255):\n");
+    for m in b.results() {
+        s.push_str(&format!("  {:<18} {:>12}/iter", m.name, fmt_duration(m.median)));
+        if m.items > 0 {
+            s.push_str(&format!("  {:>14.0} insts/s", m.throughput()));
+        }
+        s.push('\n');
+    }
+    if let Ok(x) = jit_speedup(b) {
+        s.push_str(&format!("  jit vs legacy (emulated corpus): {x:.1}x\n"));
+    }
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn quick_measure_covers_jit_cases() {
+        if !jit::available() {
+            let err = measure_jit(&workload().unwrap()).unwrap_err();
+            assert!(err.to_string().contains("JIT tier unsupported"), "{err}");
+            return;
+        }
+        std::env::set_var("MEMCLOS_BENCH_QUICK", "1");
+        let w = workload().unwrap();
+        let b = measure_jit(&w).unwrap();
+        for case in ["jit-emulated", "legacy-emulated", "jit-direct", "jit-compile-corpus"] {
+            assert!(b.get(case).is_some(), "{case} missing");
+        }
+        assert!(jit_speedup(&b).unwrap() > 0.0);
+        let json = b.to_json();
+        assert!(json.contains("\"bench\": \"jit\""));
+        let summary = render_jit(&b);
+        assert!(summary.contains("jit vs legacy"));
+    }
 
     #[test]
     fn quick_measure_covers_all_cases() {

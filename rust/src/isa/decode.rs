@@ -109,12 +109,41 @@ pub enum DecodedOp {
 pub struct DecodedProgram {
     ops: Vec<DecodedOp>,
     source_len: usize,
+    /// Source pc → decoded index (`u32::MAX` marks the interior of a
+    /// fused channel sequence); entry `source_len` maps to the sentinel.
+    pc_map: Vec<u32>,
 }
 
 impl DecodedProgram {
     /// The decoded operations (sentinel included).
     pub fn ops(&self) -> &[DecodedOp] {
         &self.ops
+    }
+
+    /// Decoded index of source pc `src` (the sentinel for
+    /// `src == source_len`). `None` when `src` is out of range or lands
+    /// in the interior of a fused channel sequence — positions no
+    /// legacy-tier pause can sit at, but arbitrary snapshot bytes can
+    /// claim, so cross-tier conversion must treat them as typed errors.
+    pub fn decoded_pc(&self, src: u64) -> Option<u32> {
+        match self.pc_map.get(usize::try_from(src).ok()?) {
+            Some(&m) if m != u32::MAX => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Source pc of decoded index `decoded` (inverse of
+    /// [`Self::decoded_pc`]). Every decoded op starts a source
+    /// instruction, so this fails only for out-of-range indices.
+    pub fn source_pc(&self, decoded: u64) -> Option<u64> {
+        // Non-MAX entries of pc_map are strictly increasing, so the
+        // forward map is invertible by scan; programs are small and
+        // conversions are rare (snapshot import/export only).
+        let want = u32::try_from(decoded).ok()?;
+        self.pc_map
+            .iter()
+            .position(|&m| m == want)
+            .map(|src| src as u64)
     }
 
     /// Number of decoded operations, sentinel excluded (fusion makes
@@ -348,7 +377,7 @@ pub fn predecode(program: &[Inst]) -> Result<DecodedProgram> {
         }
     }
 
-    Ok(DecodedProgram { ops, source_len: n })
+    Ok(DecodedProgram { ops, source_len: n, pc_map })
 }
 
 /// Original-pc branch target; negative targets are rejected (the legacy

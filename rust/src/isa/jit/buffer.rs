@@ -1,0 +1,107 @@
+//! Append-only machine-code emit buffer with label fixups — the
+//! `cranelift/codegen/src/machinst/buffer.rs` idiom cut down to what a
+//! single-pass template compiler needs: emit forward, record every
+//! `rel32` whose target is not yet known, patch them all once the final
+//! offsets exist.
+//!
+//! The buffer itself is plain bytes; making them executable is
+//! [`super::exec::ExecBuf`]'s job, so lowering stays pure and testable
+//! on every host.
+
+/// Growable code buffer. All jump displacements are `rel32`
+/// (displacement from the end of the displacement field), the only
+/// form the lowerer emits.
+#[derive(Default)]
+pub struct EmitBuf {
+    code: Vec<u8>,
+}
+
+/// A recorded `rel32` hole: `patch_pos` is the offset of the 4
+/// displacement bytes, `target_op` the decoded-op index it must reach
+/// once op offsets are final.
+#[derive(Clone, Copy, Debug)]
+pub struct OpFixup {
+    /// Buffer offset of the 4-byte displacement.
+    pub patch_pos: usize,
+    /// Decoded-op index the displacement must land on.
+    pub target_op: u32,
+}
+
+impl EmitBuf {
+    /// Fresh empty buffer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current emit offset (== length).
+    pub fn pos(&self) -> usize {
+        self.code.len()
+    }
+
+    /// Append one byte.
+    pub fn byte(&mut self, b: u8) {
+        self.code.push(b);
+    }
+
+    /// Append raw bytes.
+    pub fn bytes(&mut self, bs: &[u8]) {
+        self.code.extend_from_slice(bs);
+    }
+
+    /// Append a little-endian u32 (immediates and displacements).
+    pub fn u32(&mut self, v: u32) {
+        self.code.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `rel32` displacement that reaches `target`, an offset
+    /// already emitted (backward jumps to the shared exit stubs).
+    pub fn rel32_to(&mut self, target: usize) {
+        let disp = target as i64 - (self.pos() as i64 + 4);
+        self.u32(disp as i32 as u32);
+    }
+
+    /// Append a 4-byte displacement placeholder and return its offset
+    /// for later patching (forward jumps to op addresses).
+    pub fn rel32_placeholder(&mut self) -> usize {
+        let at = self.pos();
+        self.u32(0);
+        at
+    }
+
+    /// Patch a placeholder from [`Self::rel32_placeholder`] so it
+    /// reaches `target`.
+    pub fn patch_rel32(&mut self, patch_pos: usize, target: usize) {
+        let disp = (target as i64 - (patch_pos as i64 + 4)) as i32;
+        self.code[patch_pos..patch_pos + 4].copy_from_slice(&disp.to_le_bytes());
+    }
+
+    /// The finished bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.code
+    }
+
+    /// The bytes emitted so far.
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.code
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel32_round_trips_forward_and_backward() {
+        let mut b = EmitBuf::new();
+        b.byte(0xE9); // jmp rel32 (backward to offset 0)
+        b.rel32_to(0);
+        assert_eq!(b.as_bytes()[1..5], (-5i32).to_le_bytes());
+
+        b.byte(0xE9);
+        let hole = b.rel32_placeholder();
+        let target = b.pos() + 7;
+        b.bytes(&[0x90; 7]);
+        b.patch_rel32(hole, target);
+        assert_eq!(b.as_bytes()[hole..hole + 4], 7i32.to_le_bytes());
+    }
+}

@@ -1,0 +1,99 @@
+//! Per-opcode cost table baked into the emitted code (the cita-vm
+//! `instruction_cycles` idiom): the lowerer consults this table — and
+//! only this table — when emitting the counter-update instructions, so
+//! the accounting contract with [`crate::isa::decode::FastMachine`]
+//! lives in exactly one place.
+//!
+//! The contract (decode.rs `run_inner`):
+//!
+//! * every op retires `insts` instructions and `issue_cycles` issue
+//!   cycles (equal for all current ops — fused channel macro-ops retire
+//!   3/4 at once);
+//! * the op's class picks which class counter takes the same increment
+//!   (`non_memory`, `local_memory`, or `global_memory`);
+//! * global-class ops additionally count one `global_accesses` and add
+//!   the backend-reported latency to `cycles`;
+//! * trap sites charge **nothing**: `Ret` on an empty stack,
+//!   out-of-bounds locals, and the `FellOff` sentinel all break before
+//!   counting, exactly as the interpreters do.
+
+use crate::isa::decode::DecodedOp;
+
+/// Which class counter an op charges.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CostClass {
+    /// ALU / control flow → `RunStats::non_memory`.
+    NonMemory,
+    /// Tile-local scratchpad → `RunStats::local_memory`.
+    LocalMemory,
+    /// Backend memory → `RunStats::global_memory` + one
+    /// `RunStats::global_accesses` + backend latency cycles.
+    GlobalMemory,
+}
+
+/// Static cost of one decoded op.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OpCost {
+    /// Instructions retired (i64-wrapping ALU ops: 1; fused
+    /// `EmuLoad`: 3; fused `EmuStore`: 4; `FellOff`: 0).
+    pub insts: u8,
+    /// Issue cycles charged before any backend latency.
+    pub issue_cycles: u8,
+    /// Class counter taking the same increment as `insts`.
+    pub class: CostClass,
+}
+
+/// The table. Total = one entry per [`DecodedOp`] variant; the match is
+/// exhaustive so a new op cannot ship without a declared cost.
+pub fn op_cost(op: &DecodedOp) -> OpCost {
+    use CostClass::*;
+    use DecodedOp as O;
+    let (insts, class) = match op {
+        O::Add { .. }
+        | O::Sub { .. }
+        | O::Mul { .. }
+        | O::And { .. }
+        | O::Or { .. }
+        | O::Xor { .. }
+        | O::Lt { .. }
+        | O::Eq { .. }
+        | O::AddI { .. }
+        | O::LoadImm { .. }
+        | O::Mov { .. }
+        | O::Jump { .. }
+        | O::BranchZ { .. }
+        | O::BranchNZ { .. }
+        | O::Call { .. }
+        | O::Ret
+        | O::Halt
+        | O::Nop => (1, NonMemory),
+        O::LoadLocal { .. } | O::StoreLocal { .. } => (1, LocalMemory),
+        O::LoadGlobal { .. } | O::StoreGlobal { .. } => (1, GlobalMemory),
+        O::EmuLoad { .. } => (3, GlobalMemory),
+        O::EmuStore { .. } => (4, GlobalMemory),
+        // The sentinel traps uncounted.
+        O::FellOff => (0, NonMemory),
+    };
+    OpCost { insts, issue_cycles: insts, class }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_matches_the_interpreter_contract() {
+        use DecodedOp as O;
+        let c = op_cost(&O::Add { d: 0, a: 1, b: 2 });
+        assert_eq!((c.insts, c.issue_cycles, c.class), (1, 1, CostClass::NonMemory));
+        let c = op_cost(&O::LoadLocal { d: 0, a: 0, off: 0 });
+        assert_eq!((c.insts, c.class), (1, CostClass::LocalMemory));
+        let c = op_cost(&O::LoadGlobal { d: 0, a: 0 });
+        assert_eq!((c.insts, c.class), (1, CostClass::GlobalMemory));
+        let c = op_cost(&O::EmuLoad { d: 0, a: 0 });
+        assert_eq!((c.insts, c.issue_cycles), (3, 3));
+        let c = op_cost(&O::EmuStore { s: 0, a: 0 });
+        assert_eq!((c.insts, c.issue_cycles), (4, 4));
+        assert_eq!(op_cost(&O::FellOff).insts, 0);
+    }
+}

@@ -1,0 +1,131 @@
+//! Executable code memory for the JIT: a private anonymous mapping
+//! filled while writable, then flipped to read+execute (W^X — the
+//! mapping is never writable and executable at once).
+//!
+//! std links libc, so the raw `mmap(2)`/`mprotect(2)`/`munmap(2)`
+//! bindings need no external crate (the same idiom as the `signal(2)`
+//! binding in `serve::server`). Hosts without the syscalls (non-unix)
+//! or without an x86-64 lowering never reach this module at runtime:
+//! [`super::available`] gates compilation, and [`ExecBuf::map`] returns
+//! the typed [`JitError`] rather than panicking if called anyway.
+
+use super::JitError;
+
+/// An immutable, executable code mapping. Safe to share across threads
+/// once constructed: the bytes are never written again after the
+/// protection flip.
+pub struct ExecBuf {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// SAFETY: after `map` returns, the pages are read+execute only and the
+// struct exposes no mutation; concurrent reads/executes are safe.
+unsafe impl Send for ExecBuf {}
+unsafe impl Sync for ExecBuf {}
+
+impl ExecBuf {
+    /// Copy `code` into a fresh read+execute mapping.
+    pub fn map(code: &[u8]) -> Result<Self, JitError> {
+        imp::map(code)
+    }
+
+    /// Absolute address of buffer offset `off`.
+    pub fn addr(&self, off: usize) -> usize {
+        debug_assert!(off < self.len);
+        self.ptr as usize + off
+    }
+
+    /// Mapped length in bytes (page-rounded).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Never true: a mapping always covers at least one page.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl Drop for ExecBuf {
+    fn drop(&mut self) {
+        imp::unmap(self.ptr, self.len);
+    }
+}
+
+#[cfg(unix)]
+mod imp {
+    use super::ExecBuf;
+    use crate::isa::jit::JitError;
+    use std::ffi::c_void;
+
+    const PROT_READ: i32 = 1;
+    const PROT_WRITE: i32 = 2;
+    const PROT_EXEC: i32 = 4;
+    const MAP_PRIVATE: i32 = 2;
+    #[cfg(target_os = "macos")]
+    const MAP_ANONYMOUS: i32 = 0x1000;
+    #[cfg(not(target_os = "macos"))]
+    const MAP_ANONYMOUS: i32 = 0x20;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        fn mprotect(addr: *mut c_void, len: usize, prot: i32) -> i32;
+        fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+
+    pub fn map(code: &[u8]) -> Result<ExecBuf, JitError> {
+        let len = code.len().max(1).div_ceil(4096) * 4096;
+        // SAFETY: a fresh private anonymous mapping; no existing memory
+        // is touched. Failure is reported as MAP_FAILED (-1), checked
+        // below.
+        let ptr = unsafe {
+            mmap(
+                std::ptr::null_mut(),
+                len,
+                PROT_READ | PROT_WRITE,
+                MAP_PRIVATE | MAP_ANONYMOUS,
+                -1,
+                0,
+            )
+        };
+        if ptr as isize == -1 || ptr.is_null() {
+            return Err(JitError::Map { detail: format!("mmap of {len} bytes failed") });
+        }
+        // SAFETY: ptr..ptr+len is ours, writable, and code fits in it.
+        unsafe {
+            std::ptr::copy_nonoverlapping(code.as_ptr(), ptr as *mut u8, code.len());
+        }
+        // SAFETY: flips our own fresh mapping to read+execute.
+        if unsafe { mprotect(ptr, len, PROT_READ | PROT_EXEC) } != 0 {
+            // SAFETY: unmapping the mapping we just created.
+            unsafe { munmap(ptr, len) };
+            return Err(JitError::Map { detail: "mprotect(PROT_READ|PROT_EXEC) failed".into() });
+        }
+        Ok(ExecBuf { ptr: ptr as *mut u8, len })
+    }
+
+    pub fn unmap(ptr: *mut u8, len: usize) {
+        // SAFETY: ptr/len came from the successful mmap in `map`.
+        unsafe { munmap(ptr as *mut c_void, len) };
+    }
+}
+
+#[cfg(not(unix))]
+mod imp {
+    use super::ExecBuf;
+    use crate::isa::jit::JitError;
+
+    pub fn map(_code: &[u8]) -> Result<ExecBuf, JitError> {
+        Err(JitError::Unsupported(crate::isa::jit::JitUnsupported::host()))
+    }
+
+    pub fn unmap(_ptr: *mut u8, _len: usize) {}
+}

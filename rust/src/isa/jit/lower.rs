@@ -1,0 +1,437 @@
+//! Single-pass template lowering of a [`DecodedProgram`] to x86-64
+//! machine code (the Winch baseline-compiler shape: one template per
+//! op, no register allocation, no IR).
+//!
+//! ## Code layout and register convention
+//!
+//! The buffer holds, in order: the entry **prologue**, the shared
+//! **epilogue**, six shared **exit stubs**, then one code block per
+//! decoded op (sentinel included). Every gate and trap jump therefore
+//! points *backward* at a known offset; only op→op branches need
+//! fixups.
+//!
+//! Guest architectural state lives in the [`super::JitRt`] context
+//! block addressed off `r15` (guest registers are the first 16 slots,
+//! always reachable with a disp8). The hot counters ride in host
+//! callee-saved registers for the whole run:
+//!
+//! | host reg | holds                         |
+//! |----------|-------------------------------|
+//! | `r15`    | `*mut JitRt` context          |
+//! | `r12`    | `instructions`                |
+//! | `r13`    | `cycles`                      |
+//! | `r14`    | `non_memory`                  |
+//! | `rbx`    | `max_steps` (loop bound)      |
+//! | `rbp`    | `cycle_limit` (pause bound)   |
+//!
+//! `rax/rcx/rdx/rsi/rdi` are per-template scratch; helper calls may
+//! clobber them freely (System V caller-saved).
+//!
+//! ## The per-op gate
+//!
+//! Every op body begins with the same gate, mirroring the interpreter
+//! loop head exactly (pause check strictly before step-limit check):
+//!
+//! ```text
+//! mov qword [r15+PC], <pc>   ; cursor pc is always current
+//! cmp r13, rbp ; jae pause   ; cycles >= cycle_limit -> Paused
+//! cmp r12, rbx ; jae limit   ; insts  >= max_steps   -> StepLimit
+//! ```
+//!
+//! Because the pc is stored *before* the checks, every exit — pause,
+//! step limit, or an uncounted trap — observes the interpreter's
+//! cursor: pointing at the op that did not (yet) execute.
+//!
+//! Counter updates are emitted from [`super::cycles::op_cost`] and
+//! nothing else; memory ops call out through the [`super::JitRt`]
+//! helper slots so `DirectMemory`/`EmulatedChannelMemory` charging is
+//! shared with the interpreters, not re-implemented.
+
+use super::buffer::{EmitBuf, OpFixup};
+use super::cycles::{op_cost, CostClass, OpCost};
+use super::{
+    EXIT_FELL_OFF, EXIT_HALTED, EXIT_LOCAL_OOB, EXIT_PAUSED, EXIT_RET_EMPTY, EXIT_STEP_LIMIT,
+    OFF_CYCLES, OFF_CYCLE_LIMIT, OFF_ENV, OFF_EXIT, OFF_GLOBAL_ACC, OFF_GLOBAL_MEM, OFF_INSTS,
+    OFF_LOCAL_LEN, OFF_LOCAL_MEM, OFF_LOCAL_PTR, OFF_MAX_STEPS, OFF_NON_MEM, OFF_PC, OFF_POP_FN,
+    OFF_PUSH_FN, OFF_READ_FN, OFF_TABLE, OFF_TRAP, OFF_WRITE_FN,
+};
+use crate::isa::decode::{DecodedOp, DecodedProgram};
+
+/// Host register numbers (x86-64 encoding order).
+const RAX: u8 = 0;
+const RCX: u8 = 1;
+const RDX: u8 = 2;
+const RSI: u8 = 6;
+const RDI: u8 = 7;
+const R12: u8 = 12;
+const R13: u8 = 13;
+const R14: u8 = 14;
+
+/// Condition codes for `jcc rel32` (`0F 8x`).
+const CC_AE: u8 = 0x03;
+const CC_E: u8 = 0x04;
+const CC_NE: u8 = 0x05;
+const CC_S: u8 = 0x08;
+
+/// Pure lowering result: bytes plus the buffer offset of every decoded
+/// op (sentinel included) for the resume-entry and `Ret` jump tables.
+pub struct LoweredCode {
+    /// The machine code (position-independent: all jumps are rel32
+    /// within the buffer, all data access goes through `r15`).
+    pub code: Vec<u8>,
+    /// Buffer offset of each decoded op's gate.
+    pub op_offsets: Vec<u32>,
+}
+
+/// Shared code offsets every template may jump back to.
+struct Stubs {
+    pause: usize,
+    step_limit: usize,
+    halt: usize,
+    ret_empty: usize,
+    local_oob: usize,
+    fell_off: usize,
+}
+
+/// Where the backend latency lands after a memory-helper call.
+enum Lat {
+    None,
+    /// `helper_read` returns `{value, lat}` in `rax:rdx`.
+    Rdx,
+    /// `helper_write` returns lat in `rax`.
+    Rax,
+}
+
+/// Byte offset of guest register `r` inside the context block.
+fn reg_off(r: u8) -> i32 {
+    (r & 15) as i32 * 8
+}
+
+/// Emit `REX opcode ModRM [disp]` for an `[r15+off]` operand: the one
+/// parameterised encoding the templates need. `reg` is the /r field —
+/// a host register or an opcode extension (`/0`, `/2`, `/7`).
+fn ctx_modrm(b: &mut EmitBuf, rex_w: bool, opcode: &[u8], reg: u8, off: i32) {
+    let mut rex = 0x41; // REX.B: the base is r15
+    if rex_w {
+        rex |= 0x08;
+    }
+    if reg >= 8 {
+        rex |= 0x04; // REX.R
+    }
+    b.byte(rex);
+    b.bytes(opcode);
+    // rm=111 (r15) needs no SIB; disp8 when it fits.
+    if (-128..=127).contains(&off) {
+        b.byte(0x40 | ((reg & 7) << 3) | 0x07);
+        b.byte(off as i8 as u8);
+    } else {
+        b.byte(0x80 | ((reg & 7) << 3) | 0x07);
+        b.u32(off as u32);
+    }
+}
+
+/// `mov reg, [r15+off]`
+fn ld(b: &mut EmitBuf, reg: u8, off: i32) {
+    ctx_modrm(b, true, &[0x8B], reg, off);
+}
+
+/// `mov [r15+off], reg`
+fn st(b: &mut EmitBuf, reg: u8, off: i32) {
+    ctx_modrm(b, true, &[0x89], reg, off);
+}
+
+/// `add qword [r15+off], imm8`
+fn add_ctx_imm8(b: &mut EmitBuf, off: i32, imm: u8) {
+    ctx_modrm(b, true, &[0x83], 0, off);
+    b.byte(imm);
+}
+
+/// `mov qword [r15+off], imm32` (sign-extended)
+fn mov_ctx_imm32(b: &mut EmitBuf, off: i32, imm: u32) {
+    ctx_modrm(b, true, &[0xC7], 0, off);
+    b.u32(imm);
+}
+
+/// `call qword [r15+off]` — the helper slots.
+fn call_ctx(b: &mut EmitBuf, off: i32) {
+    ctx_modrm(b, false, &[0xFF], 2, off);
+}
+
+/// `jcc rel32` to an already-emitted offset (the stubs).
+fn jcc_back(b: &mut EmitBuf, cc: u8, target: usize) {
+    b.byte(0x0F);
+    b.byte(0x80 | cc);
+    b.rel32_to(target);
+}
+
+/// `jmp rel32` to an already-emitted offset.
+fn jmp_back(b: &mut EmitBuf, target: usize) {
+    b.byte(0xE9);
+    b.rel32_to(target);
+}
+
+/// `jmp rel32` to a decoded-op target (fixed up after emission).
+fn jmp_op(b: &mut EmitBuf, fixups: &mut Vec<OpFixup>, target_op: u32) {
+    b.byte(0xE9);
+    fixups.push(OpFixup { patch_pos: b.rel32_placeholder(), target_op });
+}
+
+/// `jcc rel32` to a decoded-op target (fixed up after emission).
+fn jcc_op(b: &mut EmitBuf, fixups: &mut Vec<OpFixup>, cc: u8, target_op: u32) {
+    b.byte(0x0F);
+    b.byte(0x80 | cc);
+    fixups.push(OpFixup { patch_pos: b.rel32_placeholder(), target_op });
+}
+
+/// The counter-update template, driven entirely by the cycle table:
+/// `instructions` (r12), the class counter, issue `cycles` (r13), and
+/// — for global ops — one `global_accesses` plus the helper-returned
+/// latency.
+fn emit_counters(b: &mut EmitBuf, cost: OpCost, lat: Lat) {
+    debug_assert!(cost.insts > 0, "trap sites charge nothing");
+    b.bytes(&[0x49, 0x83, 0xC4, cost.insts]); // add r12, insts
+    match cost.class {
+        CostClass::NonMemory => b.bytes(&[0x49, 0x83, 0xC6, cost.insts]), // add r14, n
+        CostClass::LocalMemory => add_ctx_imm8(b, OFF_LOCAL_MEM, cost.insts),
+        CostClass::GlobalMemory => {
+            add_ctx_imm8(b, OFF_GLOBAL_MEM, cost.insts);
+            add_ctx_imm8(b, OFF_GLOBAL_ACC, 1);
+        }
+    }
+    b.bytes(&[0x49, 0x83, 0xC5, cost.issue_cycles]); // add r13, issue
+    match lat {
+        Lat::None => {}
+        Lat::Rdx => b.bytes(&[0x49, 0x01, 0xD5]), // add r13, rdx
+        Lat::Rax => b.bytes(&[0x49, 0x01, 0xC5]), // add r13, rax
+    }
+}
+
+/// The per-op gate (see the module docs).
+fn emit_gate(b: &mut EmitBuf, pc: u32, stubs: &Stubs) {
+    mov_ctx_imm32(b, OFF_PC, pc);
+    b.bytes(&[0x49, 0x39, 0xED]); // cmp r13, rbp (cycles vs limit)
+    jcc_back(b, CC_AE, stubs.pause);
+    b.bytes(&[0x49, 0x39, 0xDC]); // cmp r12, rbx (insts vs max_steps)
+    jcc_back(b, CC_AE, stubs.step_limit);
+}
+
+/// Entry prologue: save callee-saved registers, align the stack for
+/// helper calls, load the counter registers from the context, and tail
+/// into the resume op (its absolute address arrives in `rsi`).
+fn emit_prologue(b: &mut EmitBuf) {
+    b.bytes(&[0x53, 0x55]); // push rbx; push rbp
+    b.bytes(&[0x41, 0x54, 0x41, 0x55, 0x41, 0x56, 0x41, 0x57]); // push r12..r15
+    b.bytes(&[0x48, 0x83, 0xEC, 0x08]); // sub rsp, 8 (16-byte call alignment)
+    b.bytes(&[0x49, 0x89, 0xFF]); // mov r15, rdi (ctx)
+    ld(b, R12, OFF_INSTS);
+    ld(b, R13, OFF_CYCLES);
+    ld(b, R14, OFF_NON_MEM);
+    ld(b, 3, OFF_MAX_STEPS); // rbx
+    ld(b, 5, OFF_CYCLE_LIMIT); // rbp
+    b.bytes(&[0xFF, 0xE6]); // jmp rsi
+}
+
+/// Shared epilogue: flush the counter registers back to the context,
+/// restore the host registers, return to the trampoline.
+fn emit_epilogue(b: &mut EmitBuf) {
+    st(b, R12, OFF_INSTS);
+    st(b, R13, OFF_CYCLES);
+    st(b, R14, OFF_NON_MEM);
+    b.bytes(&[0x48, 0x83, 0xC4, 0x08]); // add rsp, 8
+    b.bytes(&[0x41, 0x5F, 0x41, 0x5E, 0x41, 0x5D, 0x41, 0x5C]); // pop r15..r12
+    b.bytes(&[0x5D, 0x5B, 0xC3]); // pop rbp; pop rbx; ret
+}
+
+/// One exit stub: record the exit code (and, for the local-memory
+/// trap, the offending index from `rax`) and leave.
+fn emit_stub(b: &mut EmitBuf, epilogue: usize, exit: u64, save_trap_rax: bool) -> usize {
+    let at = b.pos();
+    if save_trap_rax {
+        st(b, RAX, OFF_TRAP);
+    }
+    mov_ctx_imm32(b, OFF_EXIT, exit as u32);
+    jmp_back(b, epilogue);
+    at
+}
+
+/// Lower every decoded op. Pure byte generation — runs on any host;
+/// only mapping the result executable is platform-gated.
+pub fn lower(prog: &DecodedProgram) -> LoweredCode {
+    use DecodedOp as O;
+    let ops = prog.ops();
+    let mut b = EmitBuf::new();
+    let mut fixups: Vec<OpFixup> = Vec::new();
+
+    emit_prologue(&mut b);
+    let epilogue = b.pos();
+    emit_epilogue(&mut b);
+    let stubs = Stubs {
+        halt: emit_stub(&mut b, epilogue, EXIT_HALTED, false),
+        pause: emit_stub(&mut b, epilogue, EXIT_PAUSED, false),
+        step_limit: emit_stub(&mut b, epilogue, EXIT_STEP_LIMIT, false),
+        ret_empty: emit_stub(&mut b, epilogue, EXIT_RET_EMPTY, false),
+        local_oob: emit_stub(&mut b, epilogue, EXIT_LOCAL_OOB, true),
+        fell_off: emit_stub(&mut b, epilogue, EXIT_FELL_OFF, false),
+    };
+
+    let mut op_offsets: Vec<u32> = Vec::with_capacity(ops.len());
+    for (pc, op) in ops.iter().enumerate() {
+        op_offsets.push(b.pos() as u32);
+        emit_gate(&mut b, pc as u32, &stubs);
+        let cost = op_cost(op);
+        match *op {
+            O::Add { d, a, b: rb }
+            | O::Sub { d, a, b: rb }
+            | O::Mul { d, a, b: rb }
+            | O::And { d, a, b: rb }
+            | O::Or { d, a, b: rb }
+            | O::Xor { d, a, b: rb } => {
+                ld(&mut b, RAX, reg_off(a));
+                // x86 integer ops wrap, matching the interpreters'
+                // wrapping_{add,sub,mul}.
+                let opc: &[u8] = match op {
+                    O::Add { .. } => &[0x03],
+                    O::Sub { .. } => &[0x2B],
+                    O::Mul { .. } => &[0x0F, 0xAF],
+                    O::And { .. } => &[0x23],
+                    O::Or { .. } => &[0x0B],
+                    _ => &[0x33],
+                };
+                ctx_modrm(&mut b, true, opc, RAX, reg_off(rb));
+                st(&mut b, RAX, reg_off(d));
+                emit_counters(&mut b, cost, Lat::None);
+            }
+            O::Lt { d, a, b: rb } | O::Eq { d, a, b: rb } => {
+                ld(&mut b, RAX, reg_off(a));
+                ctx_modrm(&mut b, true, &[0x3B], RAX, reg_off(rb)); // cmp rax, [rb]
+                let setcc = if matches!(op, O::Lt { .. }) { 0x9C } else { 0x94 };
+                b.bytes(&[0x0F, setcc, 0xC0]); // setl/sete al
+                b.bytes(&[0x0F, 0xB6, 0xC0]); // movzx eax, al (zero-extends rax)
+                st(&mut b, RAX, reg_off(d));
+                emit_counters(&mut b, cost, Lat::None);
+            }
+            O::AddI { d, a, imm } => {
+                ld(&mut b, RAX, reg_off(a));
+                b.bytes(&[0x48, 0x05]); // add rax, imm32 (sign-extended)
+                b.u32(imm as u32);
+                st(&mut b, RAX, reg_off(d));
+                emit_counters(&mut b, cost, Lat::None);
+            }
+            O::LoadImm { d, imm } => {
+                b.bytes(&[0x48, 0xC7, 0xC0]); // mov rax, imm32 (sign-extended)
+                b.u32(imm as u32);
+                st(&mut b, RAX, reg_off(d));
+                emit_counters(&mut b, cost, Lat::None);
+            }
+            O::Mov { d, s } => {
+                ld(&mut b, RAX, reg_off(s));
+                st(&mut b, RAX, reg_off(d));
+                emit_counters(&mut b, cost, Lat::None);
+            }
+            O::Nop => emit_counters(&mut b, cost, Lat::None),
+            O::Jump { target } => {
+                emit_counters(&mut b, cost, Lat::None);
+                jmp_op(&mut b, &mut fixups, target);
+            }
+            O::BranchZ { c, target } | O::BranchNZ { c, target } => {
+                // Counters charge whether or not the branch is taken.
+                emit_counters(&mut b, cost, Lat::None);
+                ctx_modrm(&mut b, true, &[0x83], 7, reg_off(c)); // cmp qword [rc], 0
+                b.byte(0x00);
+                let cc = if matches!(op, O::BranchZ { .. }) { CC_E } else { CC_NE };
+                jcc_op(&mut b, &mut fixups, cc, target);
+                // not taken: fall through to the next op's gate
+            }
+            O::Call { target } => {
+                // The return pc is static: push it, charge, jump.
+                ld(&mut b, RDI, OFF_ENV);
+                b.byte(0xBE); // mov esi, imm32 (ret pc, zero-extended)
+                b.u32(pc as u32 + 1);
+                call_ctx(&mut b, OFF_PUSH_FN);
+                emit_counters(&mut b, cost, Lat::None);
+                jmp_op(&mut b, &mut fixups, target);
+            }
+            O::Ret => {
+                ld(&mut b, RDI, OFF_ENV);
+                call_ctx(&mut b, OFF_POP_FN); // rax = popped pc, or -1
+                b.bytes(&[0x48, 0x85, 0xC0]); // test rax, rax
+                jcc_back(&mut b, CC_S, stubs.ret_empty); // empty: uncounted trap
+                emit_counters(&mut b, cost, Lat::None);
+                ld(&mut b, RCX, OFF_TABLE);
+                b.bytes(&[0xFF, 0x24, 0xC1]); // jmp qword [rcx + rax*8]
+            }
+            O::LoadLocal { d, a, off } | O::StoreLocal { s: d, a, off } => {
+                ld(&mut b, RAX, reg_off(a));
+                b.bytes(&[0x48, 0x05]); // add rax, imm32 (wrapping, like the interp)
+                b.u32(off as u32);
+                ld(&mut b, RCX, OFF_LOCAL_LEN);
+                // One unsigned compare covers both `idx < 0` (huge as
+                // u64) and `idx >= len`.
+                b.bytes(&[0x48, 0x39, 0xC8]); // cmp rax, rcx
+                jcc_back(&mut b, CC_AE, stubs.local_oob); // uncounted trap, idx in rax
+                ld(&mut b, RCX, OFF_LOCAL_PTR);
+                if matches!(op, O::LoadLocal { .. }) {
+                    b.bytes(&[0x48, 0x8B, 0x14, 0xC1]); // mov rdx, [rcx + rax*8]
+                    st(&mut b, RDX, reg_off(d));
+                } else {
+                    ld(&mut b, RDX, reg_off(d));
+                    b.bytes(&[0x48, 0x89, 0x14, 0xC1]); // mov [rcx + rax*8], rdx
+                }
+                emit_counters(&mut b, cost, Lat::None);
+            }
+            O::LoadGlobal { d, a } | O::EmuLoad { d, a } => {
+                ld(&mut b, RDI, OFF_ENV);
+                ld(&mut b, RSI, reg_off(a)); // raw address; the helper masks
+                call_ctx(&mut b, OFF_READ_FN);
+                st(&mut b, RAX, reg_off(d));
+                emit_counters(&mut b, cost, Lat::Rdx);
+            }
+            O::StoreGlobal { s, a } | O::EmuStore { s, a } => {
+                ld(&mut b, RDI, OFF_ENV);
+                ld(&mut b, RSI, reg_off(a));
+                ld(&mut b, RDX, reg_off(s));
+                call_ctx(&mut b, OFF_WRITE_FN);
+                emit_counters(&mut b, cost, Lat::Rax);
+            }
+            O::Halt => {
+                // Counted, and the pc stays on the Halt op.
+                emit_counters(&mut b, cost, Lat::None);
+                jmp_back(&mut b, stubs.halt);
+            }
+            O::FellOff => jmp_back(&mut b, stubs.fell_off), // uncounted
+        }
+    }
+
+    for f in fixups {
+        let target = op_offsets[f.target_op as usize] as usize;
+        b.patch_rel32(f.patch_pos, target);
+    }
+
+    LoweredCode { code: b.into_bytes(), op_offsets }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::predecode;
+    use crate::isa::Inst;
+
+    #[test]
+    fn lowering_is_pure_and_covers_every_op() {
+        let prog = vec![
+            Inst::LoadImm { d: 0, imm: 7 },
+            Inst::AddI { d: 0, a: 0, imm: -2 },
+            Inst::BranchNZ { c: 0, offset: -1 },
+            Inst::Halt,
+        ];
+        let decoded = predecode(&prog).unwrap();
+        let low = lower(&decoded);
+        // One offset per decoded op, sentinel included, all in range
+        // and strictly increasing (every op emits at least its gate).
+        assert_eq!(low.op_offsets.len(), decoded.ops().len());
+        assert!(low.op_offsets.windows(2).all(|w| w[0] < w[1]));
+        assert!((*low.op_offsets.last().unwrap() as usize) < low.code.len());
+        // The prologue starts with `push rbx`.
+        assert_eq!(low.code[0], 0x53);
+    }
+}

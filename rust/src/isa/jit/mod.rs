@@ -1,0 +1,648 @@
+//! The third execution tier: a single-pass baseline JIT lowering a
+//! [`DecodedProgram`] to x86-64 machine code.
+//!
+//! The tier lattice is legacy [`crate::isa::Machine`] (enum dispatch,
+//! source pcs) → [`FastMachine`] (direct-threaded, decoded pcs) →
+//! [`JitMachine`] (this module, decoded pcs, native code). Each faster
+//! tier is held to **bit-identity** with the one below it — `RunStats`,
+//! registers, and error strings — by the differential-fuzz lattice
+//! (`workload::fuzzgen`), the corpus suite (`tests/corpus_e2e.rs`) and
+//! the cross-tier snapshot suite (`tests/snapshot_resume.rs`).
+//!
+//! Module map:
+//!
+//! * [`buffer`] — the append-only emit buffer with rel32 fixups;
+//! * [`cycles`] — the per-opcode cost table baked into emitted code;
+//! * [`lower`] — the op templates (pure byte generation, any host);
+//! * [`exec`] — the W^X executable mapping (unix `mmap`/`mprotect`).
+//!
+//! ## Sharing semantics instead of re-implementing them
+//!
+//! Global memory accesses (including the fused `EmuLoad`/`EmuStore`
+//! macro-ops) leave JIT code through `extern "C"` helper slots into the
+//! *same* [`MemorySystem`] charge paths the interpreters use, so
+//! `DirectMemory` and `EmulatedChannelMemory` cost models have exactly
+//! one implementation. Address masking (`space` power-of-two fast
+//! path) also lives in the helpers, mirroring `FastMachine`.
+//!
+//! ## Portability contract
+//!
+//! [`available`] is `true` only on x86-64 unix hosts. Everywhere else
+//! [`compile`] returns the typed [`JitUnsupported`] — callers either
+//! surface it (`--tier jit`) or fall back to [`FastMachine`]
+//! (`--tier auto`, fuzz-tier registration). Never a panic, never a
+//! silent wrong answer.
+
+pub mod buffer;
+pub mod cycles;
+pub mod exec;
+pub mod lower;
+
+use anyhow::{bail, ensure, Result};
+use std::ffi::c_void;
+use thiserror::Error;
+
+use crate::isa::decode::DecodedProgram;
+use crate::isa::interp::{ChanSnap, ExecCursor, MachineState, MemorySystem, RunOutcome, RunStats};
+use exec::ExecBuf;
+
+/// Typed "this host cannot run the JIT tier" error — `--tier jit`
+/// surfaces it (exit 1), `--tier auto` and the fuzz lattice fall back
+/// to the fast tier instead.
+#[derive(Debug, Clone, PartialEq, Eq, Error)]
+#[error(
+    "JIT tier unsupported on this host ({arch}/{os}): the baseline compiler emits \
+     x86-64 machine code for unix targets — use --tier fast, or --tier auto to \
+     fall back automatically"
+)]
+pub struct JitUnsupported {
+    /// Host architecture (`std::env::consts::ARCH`).
+    pub arch: &'static str,
+    /// Host OS (`std::env::consts::OS`).
+    pub os: &'static str,
+}
+
+impl JitUnsupported {
+    /// The error for the current host.
+    pub fn host() -> Self {
+        Self { arch: std::env::consts::ARCH, os: std::env::consts::OS }
+    }
+}
+
+/// Compilation errors. Runtime behaviour never errors differently from
+/// [`FastMachine`]: anything `predecode` accepts, a successful
+/// [`compile`] executes with identical stats and error strings.
+#[derive(Debug, Error)]
+pub enum JitError {
+    /// The host cannot execute emitted x86-64 code.
+    #[error(transparent)]
+    Unsupported(#[from] JitUnsupported),
+    /// Program exceeds the emit ceiling (gate pc immediates are i32).
+    #[error("program too large to JIT ({ops} decoded ops)")]
+    TooLarge {
+        /// Decoded op count (sentinel included).
+        ops: usize,
+    },
+    /// The executable mapping failed.
+    #[error("jit code mapping failed: {detail}")]
+    Map {
+        /// OS-level failure description.
+        detail: String,
+    },
+}
+
+/// Hard ceiling on decoded ops per compiled program: keeps every gate
+/// pc a positive i32 immediate with ample margin (≈100 bytes of code
+/// per op ⇒ ~1.6 GiB of text at the ceiling, far past any real
+/// program).
+pub const MAX_JIT_OPS: usize = 1 << 24;
+
+/// True when this build can map and execute the emitted code
+/// (x86-64 + unix). Gates tier registration everywhere.
+pub fn available() -> bool {
+    cfg!(all(target_arch = "x86_64", unix))
+}
+
+// ---------------------------------------------------------------------------
+// The runtime context shared between Rust and emitted code.
+// ---------------------------------------------------------------------------
+
+// Byte offsets into `JitRt`, consumed by the lowerer. `repr(C)` with
+// every field 8 bytes wide ⇒ no padding; the `jitrt_offsets_match`
+// test pins the agreement.
+pub(crate) const OFF_PC: i32 = 128;
+pub(crate) const OFF_EXIT: i32 = 136;
+pub(crate) const OFF_TRAP: i32 = 144;
+pub(crate) const OFF_INSTS: i32 = 152;
+pub(crate) const OFF_CYCLES: i32 = 160;
+pub(crate) const OFF_NON_MEM: i32 = 168;
+pub(crate) const OFF_LOCAL_MEM: i32 = 176;
+pub(crate) const OFF_GLOBAL_MEM: i32 = 184;
+pub(crate) const OFF_GLOBAL_ACC: i32 = 192;
+pub(crate) const OFF_MAX_STEPS: i32 = 200;
+pub(crate) const OFF_CYCLE_LIMIT: i32 = 208;
+pub(crate) const OFF_ENV: i32 = 216;
+pub(crate) const OFF_READ_FN: i32 = 224;
+pub(crate) const OFF_WRITE_FN: i32 = 232;
+pub(crate) const OFF_PUSH_FN: i32 = 240;
+pub(crate) const OFF_POP_FN: i32 = 248;
+pub(crate) const OFF_TABLE: i32 = 256;
+pub(crate) const OFF_LOCAL_PTR: i32 = 264;
+pub(crate) const OFF_LOCAL_LEN: i32 = 272;
+
+// Exit codes written by the shared stubs, mirroring the interpreter's
+// loop-exit enum one for one.
+pub(crate) const EXIT_HALTED: u64 = 0;
+pub(crate) const EXIT_PAUSED: u64 = 1;
+pub(crate) const EXIT_STEP_LIMIT: u64 = 2;
+pub(crate) const EXIT_RET_EMPTY: u64 = 3;
+pub(crate) const EXIT_LOCAL_OOB: u64 = 4;
+pub(crate) const EXIT_FELL_OFF: u64 = 5;
+
+/// The context block emitted code addresses off `r15`. Guest registers
+/// first (disp8-reachable), then cursor/exit state, counters, limits,
+/// and the helper slots.
+#[repr(C)]
+struct JitRt {
+    regs: [i64; 16],
+    pc: u64,
+    exit: u64,
+    trap_val: i64,
+    instructions: u64,
+    cycles: u64,
+    non_memory: u64,
+    local_memory: u64,
+    global_memory: u64,
+    global_accesses: u64,
+    max_steps: u64,
+    cycle_limit: u64,
+    env: *mut c_void,
+    read_fn: usize,
+    write_fn: usize,
+    push_fn: usize,
+    pop_fn: usize,
+    table: *const usize,
+    local_ptr: *mut i64,
+    local_len: u64,
+}
+
+/// `helper_read` return: System V packs a 16-byte two-integer struct
+/// into `rax:rdx`, exactly where the load template wants value and
+/// latency.
+#[repr(C)]
+struct ReadRet {
+    value: i64,
+    lat: u64,
+}
+
+/// The monomorphised environment behind the helper slots: the borrowed
+/// memory system, the address-masking parameters, and the call stack.
+struct RtEnv<'m, M: MemorySystem> {
+    mem: &'m mut M,
+    space: u64,
+    addr_mask: u64,
+    mask_exact: bool,
+    call_stack: Vec<u32>,
+}
+
+impl<M: MemorySystem> RtEnv<'_, M> {
+    #[inline(always)]
+    fn global_addr(&self, v: i64) -> u64 {
+        let u = v as u64;
+        if self.mask_exact {
+            u & self.addr_mask
+        } else {
+            u % self.space
+        }
+    }
+}
+
+unsafe extern "C" fn helper_read<M: MemorySystem>(env: *mut c_void, addr_raw: i64) -> ReadRet {
+    // SAFETY: `env` is the RtEnv<M> installed by `run_until` for the
+    // duration of this entry call; emitted code passes it through
+    // untouched.
+    let env = unsafe { &mut *(env as *mut RtEnv<M>) };
+    let addr = env.global_addr(addr_raw);
+    let (value, lat) = env.mem.read(addr);
+    ReadRet { value, lat }
+}
+
+unsafe extern "C" fn helper_write<M: MemorySystem>(
+    env: *mut c_void,
+    addr_raw: i64,
+    value: i64,
+) -> u64 {
+    // SAFETY: as in `helper_read`.
+    let env = unsafe { &mut *(env as *mut RtEnv<M>) };
+    let addr = env.global_addr(addr_raw);
+    env.mem.write(addr, value)
+}
+
+unsafe extern "C" fn helper_push<M: MemorySystem>(env: *mut c_void, ret_pc: u64) {
+    // SAFETY: as in `helper_read`.
+    let env = unsafe { &mut *(env as *mut RtEnv<M>) };
+    env.call_stack.push(ret_pc as u32);
+}
+
+/// Pops the return pc, or returns −1 on an empty stack (the sign bit
+/// is the trap condition the `Ret` template tests).
+unsafe extern "C" fn helper_pop<M: MemorySystem>(env: *mut c_void) -> i64 {
+    // SAFETY: as in `helper_read`.
+    let env = unsafe { &mut *(env as *mut RtEnv<M>) };
+    match env.call_stack.pop() {
+        Some(pc) => pc as i64,
+        None => -1,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Compiled programs.
+// ---------------------------------------------------------------------------
+
+/// Entry trampoline type: context pointer plus the absolute address of
+/// the op to (re)start from.
+type Entry = unsafe extern "C" fn(*mut JitRt, usize);
+
+/// A compiled program: the executable mapping plus the decoded-index →
+/// code-address table used for resume entry and `Ret` computed jumps.
+/// Immutable after construction; compile once, run many.
+pub struct CompiledProgram {
+    code: ExecBuf,
+    /// Absolute code address of each decoded op (sentinel included).
+    op_addrs: Vec<usize>,
+    source_len: usize,
+}
+
+impl CompiledProgram {
+    /// Decoded op count, sentinel included (the number `FastMachine`
+    /// reports in resume-bounds errors).
+    pub fn ops_len(&self) -> usize {
+        self.op_addrs.len()
+    }
+
+    /// Source-program instruction count.
+    pub fn source_len(&self) -> usize {
+        self.source_len
+    }
+
+    /// Emitted code size in bytes (before page rounding).
+    pub fn code_len(&self) -> usize {
+        self.code.len()
+    }
+
+    fn entry(&self) -> Entry {
+        // SAFETY: offset 0 holds the prologue emitted by `lower`, an
+        // `extern "C"`-compatible function on the host this mapping
+        // was created for (compile() is gated on `available()`).
+        unsafe { std::mem::transmute::<usize, Entry>(self.code.addr(0)) }
+    }
+}
+
+/// Compile a predecoded program to native code. Fails only for
+/// unsupported hosts, over-ceiling programs, or mapping failures —
+/// never for anything `predecode` accepted.
+pub fn compile(prog: &DecodedProgram) -> Result<CompiledProgram, JitError> {
+    if !available() {
+        return Err(JitUnsupported::host().into());
+    }
+    if prog.ops().len() > MAX_JIT_OPS {
+        return Err(JitError::TooLarge { ops: prog.ops().len() });
+    }
+    let lowered = lower::lower(prog);
+    let code = ExecBuf::map(&lowered.code)?;
+    let op_addrs = lowered.op_offsets.iter().map(|&o| code.addr(o as usize)).collect();
+    Ok(CompiledProgram { code, op_addrs, source_len: prog.source_len() })
+}
+
+// ---------------------------------------------------------------------------
+// The machine.
+// ---------------------------------------------------------------------------
+
+/// The JIT-tier machine: the same surface as [`FastMachine`] (`run`,
+/// `run_until`, `export_state`, `import_state`, register accessors),
+/// the same decoded-pc cursor space, the same `RunStats`, the same
+/// error strings.
+pub struct JitMachine<'m, M: MemorySystem> {
+    regs: [i64; 16],
+    local: Vec<i64>,
+    call_stack: Vec<u32>,
+    mem: &'m mut M,
+    space: u64,
+    addr_mask: u64,
+    mask_exact: bool,
+    /// Safety limit on executed instructions.
+    pub max_steps: u64,
+}
+
+impl<'m, M: MemorySystem> JitMachine<'m, M> {
+    /// New machine with `local_words` of tile-local memory.
+    pub fn new(mem: &'m mut M, local_words: usize) -> Self {
+        let space = mem.space_words().max(1);
+        let mask_exact = space.is_power_of_two();
+        Self {
+            regs: [0; 16],
+            local: vec![0; local_words],
+            call_stack: Vec::new(),
+            mem,
+            space,
+            addr_mask: if mask_exact { space - 1 } else { 0 },
+            mask_exact,
+            max_steps: 200_000_000,
+        }
+    }
+
+    /// Read a register (for assertions in tests/examples).
+    pub fn reg(&self, i: u8) -> i64 {
+        self.regs[i as usize]
+    }
+
+    /// Set a register before running.
+    pub fn set_reg(&mut self, i: u8, v: i64) {
+        self.regs[i as usize] = v;
+    }
+
+    /// The full register file (for exact cross-tier comparisons).
+    pub fn regs(&self) -> &[i64; 16] {
+        &self.regs
+    }
+
+    /// Run compiled code to `Halt` (or error); returns the statistics.
+    pub fn run(&mut self, prog: &CompiledProgram) -> Result<RunStats> {
+        let mut cursor = ExecCursor::default();
+        match self.run_until(prog, &mut cursor, None)? {
+            RunOutcome::Halted => Ok(cursor.stats),
+            RunOutcome::Paused => unreachable!("unbounded run cannot pause"),
+        }
+    }
+
+    /// Run from `cursor` until `Halt`, an error, or — when
+    /// `cycle_limit` is given — the first op boundary at or past that
+    /// many cycles. The cursor's pc indexes *decoded* ops, exactly as
+    /// [`FastMachine::run_until`]'s does.
+    pub fn run_until(
+        &mut self,
+        prog: &CompiledProgram,
+        cursor: &mut ExecCursor,
+        cycle_limit: Option<u64>,
+    ) -> Result<RunOutcome> {
+        ensure!(
+            (cursor.pc as usize) < prog.ops_len(),
+            "resume pc {} out of range ({} decoded ops)",
+            cursor.pc,
+            prog.ops_len()
+        );
+        let mut env = RtEnv::<M> {
+            mem: &mut *self.mem,
+            space: self.space,
+            addr_mask: self.addr_mask,
+            mask_exact: self.mask_exact,
+            call_stack: std::mem::take(&mut self.call_stack),
+        };
+        let mut rt = JitRt {
+            regs: self.regs,
+            pc: cursor.pc,
+            exit: u64::MAX,
+            trap_val: 0,
+            instructions: cursor.stats.instructions,
+            cycles: cursor.stats.cycles,
+            non_memory: cursor.stats.non_memory,
+            local_memory: cursor.stats.local_memory,
+            global_memory: cursor.stats.global_memory,
+            global_accesses: cursor.stats.global_accesses,
+            max_steps: self.max_steps,
+            cycle_limit: cycle_limit.unwrap_or(u64::MAX),
+            env: (&mut env as *mut RtEnv<M>).cast::<c_void>(),
+            read_fn: helper_read::<M> as usize,
+            write_fn: helper_write::<M> as usize,
+            push_fn: helper_push::<M> as usize,
+            pop_fn: helper_pop::<M> as usize,
+            table: prog.op_addrs.as_ptr(),
+            local_ptr: self.local.as_mut_ptr(),
+            local_len: self.local.len() as u64,
+        };
+        // SAFETY: the mapping was compiled for this host; every pointer
+        // in `rt` (env, table, local) outlives the call; emitted code
+        // only writes guest state through `rt` and `env`. The entry
+        // address is the gate of a valid decoded op (bounds-checked
+        // above).
+        unsafe { (prog.entry())(&mut rt, prog.op_addrs[cursor.pc as usize]) };
+        self.regs = rt.regs;
+        self.call_stack = env.call_stack;
+        cursor.pc = rt.pc;
+        cursor.stats = RunStats {
+            instructions: rt.instructions,
+            cycles: rt.cycles,
+            non_memory: rt.non_memory,
+            local_memory: rt.local_memory,
+            global_memory: rt.global_memory,
+            global_accesses: rt.global_accesses,
+        };
+        match rt.exit {
+            EXIT_HALTED => Ok(RunOutcome::Halted),
+            EXIT_PAUSED => Ok(RunOutcome::Paused),
+            EXIT_STEP_LIMIT => bail!("step limit exceeded ({})", self.max_steps),
+            EXIT_RET_EMPTY => bail!("ret with empty stack"),
+            EXIT_LOCAL_OOB => {
+                bail!("local access out of bounds ({} / {})", rt.trap_val, self.local.len())
+            }
+            EXIT_FELL_OFF => bail!("fell off the end of the program (missing Halt)"),
+            other => unreachable!("jit exit code {other}"),
+        }
+    }
+
+    /// Export the machine-side state at a pause cursor. Like the fast
+    /// tier, fused channel sequences execute atomically, so the channel
+    /// is always `Idle` at an op boundary.
+    pub fn export_state(&self, cursor: &ExecCursor) -> MachineState {
+        MachineState {
+            pc: cursor.pc,
+            stats: cursor.stats,
+            regs: self.regs,
+            local: self.local.clone(),
+            call_stack: self.call_stack.iter().map(|&p| p as u64).collect(),
+            chan: ChanSnap::Idle,
+        }
+    }
+
+    /// Restore exported state into this machine; returns the cursor to
+    /// continue from. Rejects state this tier cannot represent (a
+    /// mid-transaction channel, return pcs past `u32`).
+    pub fn import_state(&mut self, state: &MachineState) -> Result<ExecCursor> {
+        ensure!(
+            state.chan == ChanSnap::Idle,
+            "jit-tier resume with a pending channel transaction (take jit-tier \
+             snapshots at op boundaries, or resume on the legacy tier)"
+        );
+        self.regs = state.regs;
+        self.local = state.local.clone();
+        self.call_stack = state
+            .call_stack
+            .iter()
+            .map(|&p| {
+                u32::try_from(p).map_err(|_| anyhow::anyhow!("return pc {p} exceeds u32"))
+            })
+            .collect::<Result<_>>()?;
+        Ok(ExecCursor { pc: state.pc, stats: state.stats })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::emulation::SequentialMachine;
+    use crate::isa::interp::DirectMemory;
+    use crate::isa::{predecode, FastMachine, Inst};
+
+    #[test]
+    fn jitrt_offsets_match() {
+        use std::mem::offset_of;
+        assert_eq!(offset_of!(JitRt, pc), OFF_PC as usize);
+        assert_eq!(offset_of!(JitRt, exit), OFF_EXIT as usize);
+        assert_eq!(offset_of!(JitRt, trap_val), OFF_TRAP as usize);
+        assert_eq!(offset_of!(JitRt, instructions), OFF_INSTS as usize);
+        assert_eq!(offset_of!(JitRt, cycles), OFF_CYCLES as usize);
+        assert_eq!(offset_of!(JitRt, non_memory), OFF_NON_MEM as usize);
+        assert_eq!(offset_of!(JitRt, local_memory), OFF_LOCAL_MEM as usize);
+        assert_eq!(offset_of!(JitRt, global_memory), OFF_GLOBAL_MEM as usize);
+        assert_eq!(offset_of!(JitRt, global_accesses), OFF_GLOBAL_ACC as usize);
+        assert_eq!(offset_of!(JitRt, max_steps), OFF_MAX_STEPS as usize);
+        assert_eq!(offset_of!(JitRt, cycle_limit), OFF_CYCLE_LIMIT as usize);
+        assert_eq!(offset_of!(JitRt, env), OFF_ENV as usize);
+        assert_eq!(offset_of!(JitRt, read_fn), OFF_READ_FN as usize);
+        assert_eq!(offset_of!(JitRt, write_fn), OFF_WRITE_FN as usize);
+        assert_eq!(offset_of!(JitRt, push_fn), OFF_PUSH_FN as usize);
+        assert_eq!(offset_of!(JitRt, pop_fn), OFF_POP_FN as usize);
+        assert_eq!(offset_of!(JitRt, table), OFF_TABLE as usize);
+        assert_eq!(offset_of!(JitRt, local_ptr), OFF_LOCAL_PTR as usize);
+        assert_eq!(offset_of!(JitRt, local_len), OFF_LOCAL_LEN as usize);
+    }
+
+    fn direct_mem(space: u64) -> DirectMemory {
+        DirectMemory::new(SequentialMachine::paper_figures(false), space)
+    }
+
+    /// Run `prog` on both the fast and jit tiers over direct memory
+    /// and return both outcomes for comparison.
+    #[allow(clippy::type_complexity)]
+    fn run_both(
+        prog: &[Inst],
+        space: u64,
+        local: usize,
+        max_steps: u64,
+    ) -> (Result<RunStats>, [i64; 16], Result<RunStats>, [i64; 16]) {
+        let decoded = predecode(prog).expect("predecode");
+        let mut fmem = direct_mem(space);
+        let mut fm = FastMachine::new(&mut fmem, local);
+        fm.max_steps = max_steps;
+        let fres = fm.run(&decoded);
+        let fregs = *fm.regs();
+
+        let compiled = compile(&decoded).expect("compile");
+        let mut jmem = direct_mem(space);
+        let mut jm = JitMachine::new(&mut jmem, local);
+        jm.max_steps = max_steps;
+        let jres = jm.run(&compiled);
+        let jregs = *jm.regs();
+        (fres, fregs, jres, jregs)
+    }
+
+    fn assert_identical(prog: &[Inst], space: u64, local: usize, max_steps: u64) {
+        if !available() {
+            return;
+        }
+        let (fres, fregs, jres, jregs) = run_both(prog, space, local, max_steps);
+        match (fres, jres) {
+            (Ok(fs), Ok(js)) => assert_eq!(fs, js, "stats diverge on {prog:?}"),
+            (Err(fe), Err(je)) => {
+                assert_eq!(fe.to_string(), je.to_string(), "errors diverge on {prog:?}")
+            }
+            (f, j) => panic!("outcome shape diverges: fast={f:?} jit={j:?}"),
+        }
+        assert_eq!(fregs, jregs, "registers diverge on {prog:?}");
+    }
+
+    #[test]
+    fn alu_and_control_flow_match_the_fast_tier() {
+        // sum of squares 1..=10 via a loop, exercising ALU, branches,
+        // locals and direct global memory.
+        let prog = vec![
+            Inst::LoadImm { d: 1, imm: 10 }, // n
+            Inst::LoadImm { d: 2, imm: 0 },  // acc
+            Inst::LoadImm { d: 3, imm: 1 },  // i
+            Inst::Mul { d: 4, a: 3, b: 3 },
+            Inst::Add { d: 2, a: 2, b: 4 },
+            Inst::StoreLocal { s: 2, a: 0, off: 5 },
+            Inst::StoreGlobal { s: 2, a: 3 },
+            Inst::AddI { d: 3, a: 3, imm: 1 },
+            Inst::Lt { d: 5, a: 1, b: 3 },
+            Inst::BranchZ { c: 5, offset: -6 },
+            Inst::LoadLocal { d: 6, a: 0, off: 5 },
+            Inst::LoadGlobal { d: 7, a: 1 },
+            Inst::Halt,
+        ];
+        assert_identical(&prog, 1 << 12, 64, 10_000);
+    }
+
+    #[test]
+    fn calls_and_traps_match_the_fast_tier() {
+        if !available() {
+            return;
+        }
+        // call/ret round trip
+        let prog = vec![
+            Inst::LoadImm { d: 0, imm: 5 },
+            Inst::Call { target: 4 },
+            Inst::AddI { d: 0, a: 0, imm: 100 },
+            Inst::Halt,
+            Inst::Mul { d: 0, a: 0, b: 0 },
+            Inst::Ret,
+        ];
+        assert_identical(&prog, 1 << 12, 64, 10_000);
+        // every trap shape: bare ret, local oob, fall off, step limit
+        assert_identical(&[Inst::Ret], 1 << 12, 64, 10_000);
+        assert_identical(&[Inst::LoadLocal { d: 0, a: 0, off: 1000 }, Inst::Halt], 1 << 12, 64, 10_000);
+        assert_identical(&[Inst::Nop, Inst::Nop], 1 << 12, 64, 10_000);
+        assert_identical(&[Inst::Jump { offset: 0 }], 1 << 12, 64, 500);
+        // negative local index (idx < 0 arm of the bounds check)
+        assert_identical(
+            &[Inst::LoadImm { d: 1, imm: -7 }, Inst::StoreLocal { s: 1, a: 1, off: 0 }, Inst::Halt],
+            1 << 12,
+            64,
+            10_000,
+        );
+    }
+
+    #[test]
+    fn pause_resume_slices_match_an_uninterrupted_run() {
+        if !available() {
+            return;
+        }
+        let prog = vec![
+            Inst::LoadImm { d: 1, imm: 40 },
+            Inst::LoadImm { d: 2, imm: 0 },
+            Inst::LoadImm { d: 3, imm: 0 },
+            Inst::Add { d: 2, a: 2, b: 3 },
+            Inst::StoreGlobal { s: 2, a: 3 },
+            Inst::AddI { d: 3, a: 3, imm: 1 },
+            Inst::Lt { d: 5, a: 3, b: 1 },
+            Inst::BranchNZ { c: 5, offset: -4 },
+            Inst::Halt,
+        ];
+        let decoded = predecode(&prog).unwrap();
+        let compiled = compile(&decoded).unwrap();
+
+        let mut ref_mem = direct_mem(1 << 12);
+        let mut rm = JitMachine::new(&mut ref_mem, 64);
+        let ref_stats = rm.run(&compiled).unwrap();
+        let ref_regs = *rm.regs();
+
+        let mut mem = direct_mem(1 << 12);
+        let mut m = JitMachine::new(&mut mem, 64);
+        let mut cursor = ExecCursor::default();
+        let mut slices = 0;
+        loop {
+            let limit = cursor.stats.cycles + 7;
+            match m.run_until(&compiled, &mut cursor, Some(limit)).unwrap() {
+                RunOutcome::Paused => slices += 1,
+                RunOutcome::Halted => break,
+            }
+        }
+        assert!(slices > 3, "the cycle budget should force several pauses");
+        assert_eq!(cursor.stats, ref_stats);
+        assert_eq!(*m.regs(), ref_regs);
+    }
+
+    #[test]
+    fn unsupported_hosts_get_the_typed_error() {
+        if available() {
+            return;
+        }
+        let decoded = predecode(&[Inst::Halt]).unwrap();
+        match compile(&decoded) {
+            Err(JitError::Unsupported(u)) => {
+                assert_eq!(u, JitUnsupported::host());
+            }
+            other => panic!("expected JitUnsupported, got {other:?}"),
+        }
+    }
+}

@@ -13,18 +13,24 @@
 //!   pre-validates a program into a dense [`DecodedProgram`] (absolute
 //!   branch targets, checked registers, fused §2.1 channel macro-ops)
 //!   and [`FastMachine`] runs it with no `Result` in the steady state.
-//! * [`snapshot`] — versioned binary machine snapshots: both machines
+//! * [`jit`] — the third tier: a single-pass baseline compiler
+//!   lowering a [`DecodedProgram`] to x86-64 machine code, with the
+//!   same surface, stats, and error strings as [`FastMachine`]
+//!   (non-x86-64 hosts get a typed [`jit::JitUnsupported`]).
+//! * [`snapshot`] — versioned binary machine snapshots: all tiers
 //!   pause at cycle budgets (`run_until`) and export/import their
 //!   complete state, so runs suspend, migrate and resume
-//!   bit-identically.
+//!   bit-identically — including across tiers.
 
 pub mod decode;
 pub mod encode;
 pub mod inst;
 pub mod interp;
+pub mod jit;
 pub mod snapshot;
 
 pub use decode::{predecode, DecodedProgram, FastMachine};
+pub use jit::{JitMachine, JitUnsupported};
 pub use encode::{decode, encode, program_bytes};
 pub use inst::Inst;
 pub use interp::{

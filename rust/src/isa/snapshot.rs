@@ -4,10 +4,11 @@
 //! the machine-side state ([`MachineState`]: pc, stats, registers,
 //! locals, call stack, channel progress), the *sparse* global memory
 //! (only the [`PagedStore`] pages actually touched), the cost-model
-//! identity of the backend it ran over, and the identity of the decode
-//! tier that produced the pc — a legacy pc indexes source
-//! instructions, a fast pc indexes decoded ops, and the two are never
-//! interchangeable.
+//! identity of the backend it ran over, and the identity of the
+//! execution tier that produced the pc — a legacy pc indexes source
+//! instructions, a fast or jit pc indexes decoded ops, and the two
+//! cursor spaces are never interchangeable without an explicit
+//! [`convert_tier`] translation through the decoded program's pc map.
 //!
 //! Resuming rebuilds the memory system from the recorded identity
 //! ([`rebuild_memory`]), restores the machine state, and continues; a
@@ -74,6 +75,9 @@ pub enum Tier {
     Legacy,
     /// Direct-threaded [`FastMachine`] — pc indexes decoded ops.
     Fast,
+    /// Baseline-compiled [`crate::isa::jit::JitMachine`] — pc indexes
+    /// decoded ops, same cursor space as [`Tier::Fast`].
+    Jit,
 }
 
 impl Tier {
@@ -82,7 +86,15 @@ impl Tier {
         match self {
             Tier::Legacy => "legacy",
             Tier::Fast => "fast",
+            Tier::Jit => "jit",
         }
+    }
+
+    /// True when this tier's cursor pc indexes decoded ops (the fast
+    /// and jit tiers share one cursor space; the legacy tier counts
+    /// source instructions).
+    pub fn decoded_pcs(self) -> bool {
+        !matches!(self, Tier::Legacy)
     }
 }
 
@@ -265,6 +277,7 @@ impl Snapshot {
         out.push(match self.tier {
             Tier::Legacy => 0,
             Tier::Fast => 1,
+            Tier::Jit => 2,
         });
         match &self.backend {
             BackendSnap::Direct { dram_cycles } => {
@@ -381,6 +394,7 @@ impl Snapshot {
         let tier = match r.u8("tier")? {
             0 => Tier::Legacy,
             1 => Tier::Fast,
+            2 => Tier::Jit,
             other => {
                 return Err(SnapshotError::Field {
                     field: "tier",
@@ -737,6 +751,90 @@ pub fn run_legacy_slice(
     }
 }
 
+/// Jit-tier sibling of [`run_legacy_slice`] (pc indexes decoded ops,
+/// exactly as the fast tier's does). Takes an already-compiled program
+/// so callers compile once and resume many slices.
+pub fn run_jit_slice(
+    prog: &crate::isa::jit::CompiledProgram,
+    mem: &mut dyn MemorySystem,
+    state: &MachineState,
+    max_steps: u64,
+    cycle_limit: Option<u64>,
+) -> SliceRun {
+    let mut mem = mem;
+    let mut m = crate::isa::jit::JitMachine::new(&mut mem, 0);
+    m.max_steps = max_steps;
+    let mut cursor = match m.import_state(state) {
+        Ok(c) => c,
+        Err(e) => return SliceRun { state: state.clone(), outcome: Err(e.to_string()) },
+    };
+    match m.run_until(prog, &mut cursor, cycle_limit) {
+        Ok(out) => {
+            let state = m.export_state(&cursor);
+            SliceRun { state, outcome: Ok(out == super::interp::RunOutcome::Halted) }
+        }
+        Err(e) => SliceRun { state: state.clone(), outcome: Err(e.to_string()) },
+    }
+}
+
+/// Retag a snapshot for resumption on a different tier, translating
+/// the cursor where the tiers disagree on what a pc indexes.
+///
+/// [`Tier::Fast`] ↔ [`Tier::Jit`] share the decoded cursor space, so
+/// that conversion is a pure retag. To or from [`Tier::Legacy`] the pc
+/// and every call-stack entry are translated through the decoded
+/// program's pc map; positions that have no image on the target tier —
+/// the interior of a fused channel sequence, or a mid-transaction
+/// channel state no decoded tier can represent — are typed, field-named
+/// errors, never a silent renumbering. [`Snapshot::check_tier`] stays
+/// strict: an unconverted snapshot still fails with
+/// [`SnapshotError::WrongTier`].
+pub fn convert_tier(
+    snap: &Snapshot,
+    to: Tier,
+    decoded: &DecodedProgram,
+) -> Result<Snapshot, SnapshotError> {
+    let mut out = snap.clone();
+    out.tier = to;
+    if snap.tier.decoded_pcs() == to.decoded_pcs() {
+        return Ok(out); // same cursor space: retag only
+    }
+    if snap.state.chan != ChanSnap::Idle {
+        return Err(SnapshotError::Field {
+            field: "chan",
+            detail: format!(
+                "cannot convert a mid-transaction channel state to the {} tier \
+                 (resume on the legacy tier instead)",
+                to.label()
+            ),
+        });
+    }
+    let map_pc = |pc: u64, field: &'static str| -> Result<u64, SnapshotError> {
+        if to.decoded_pcs() {
+            decoded.decoded_pc(pc).map(u64::from).ok_or_else(|| SnapshotError::Field {
+                field,
+                detail: format!(
+                    "source pc {pc} has no decoded image (out of range or the \
+                     interior of a fused channel sequence)"
+                ),
+            })
+        } else {
+            decoded.source_pc(pc).ok_or_else(|| SnapshotError::Field {
+                field,
+                detail: format!("decoded pc {pc} is out of range"),
+            })
+        }
+    };
+    out.state.pc = map_pc(snap.state.pc, "pc")?;
+    out.state.call_stack = snap
+        .state
+        .call_stack
+        .iter()
+        .map(|&p| map_pc(p, "call stack"))
+        .collect::<Result<_, _>>()?;
+    Ok(out)
+}
+
 /// Fast-tier sibling of [`run_legacy_slice`] (pc indexes decoded ops).
 pub fn run_fast_slice(
     prog: &DecodedProgram,
@@ -842,6 +940,63 @@ mod tests {
         let prog = compile("fn main() { return 3; }", Backend::Direct).unwrap();
         let err = snap.check_program(&prog.code).unwrap_err();
         assert!(err.to_string().contains("sieve"), "{err}");
+    }
+
+    #[test]
+    fn convert_tier_translates_cursors_and_rejects_unmappable_ones() {
+        use crate::emulation::controller::MSG_READ;
+        use crate::isa::{predecode, Inst};
+        // Source pcs: 0 LoadImm | 1..=3 fused EmuLoad | 4 Halt.
+        let prog = vec![
+            Inst::LoadImm { d: 1, imm: 3 },
+            Inst::SendImm { chan: 0, value: MSG_READ },
+            Inst::Send { chan: 0, src: 1 },
+            Inst::Recv { chan: 0, dest: 2 },
+            Inst::Halt,
+        ];
+        let decoded = predecode(&prog).unwrap();
+
+        let mut snap = sample_snapshot();
+        snap.tier = Tier::Legacy;
+        snap.state.pc = 4; // the Halt, decoded index 2
+        snap.state.call_stack = vec![0];
+        let fast = convert_tier(&snap, Tier::Fast, &decoded).unwrap();
+        assert_eq!((fast.tier, fast.state.pc), (Tier::Fast, 2));
+        assert_eq!(fast.state.call_stack, vec![0]);
+
+        // Fast <-> Jit share the cursor space: a pure retag.
+        let jit = convert_tier(&fast, Tier::Jit, &decoded).unwrap();
+        assert_eq!((jit.tier, jit.state.pc), (Tier::Jit, 2));
+        assert_eq!(jit.state, fast.state);
+
+        // And back down to legacy pcs.
+        let legacy = convert_tier(&jit, Tier::Legacy, &decoded).unwrap();
+        assert_eq!((legacy.tier, legacy.state.pc), (Tier::Legacy, 4));
+
+        // A pc inside the fused sequence has no decoded image.
+        snap.state.pc = 2;
+        let err = convert_tier(&snap, Tier::Jit, &decoded).unwrap_err();
+        assert!(
+            matches!(err, SnapshotError::Field { field: "pc", .. }),
+            "{err}"
+        );
+
+        // A mid-transaction channel cannot cross onto a decoded tier...
+        snap.state.pc = 4;
+        snap.state.chan = ChanSnap::GotTag(0);
+        let err = convert_tier(&snap, Tier::Fast, &decoded).unwrap_err();
+        assert!(
+            matches!(err, SnapshotError::Field { field: "chan", .. }),
+            "{err}"
+        );
+
+        // ...and check_tier stays strict: retagging is explicit.
+        let snap = sample_snapshot();
+        let err = snap.check_tier(Tier::Jit).unwrap_err();
+        assert!(
+            matches!(err, SnapshotError::WrongTier { found: "fast", want: "jit" }),
+            "{err}"
+        );
     }
 
     #[test]

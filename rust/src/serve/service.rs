@@ -38,9 +38,10 @@ use crate::emulation::{EmulationSetup, SequentialMachine};
 use crate::figures::contention::{cell_seed, eval_cell, row_for, Cell, CellResult};
 use crate::isa::decode::{predecode, FastMachine};
 use crate::isa::interp::{DirectMemory, EmulatedChannelMemory, ExecCursor, RunOutcome};
+use crate::isa::jit;
 use crate::isa::snapshot::{
-    program_fingerprint, rebuild_memory, run_fast_slice, run_legacy_slice, BackendSnap, Snapshot,
-    Tier,
+    program_fingerprint, rebuild_memory, run_fast_slice, run_jit_slice, run_legacy_slice,
+    BackendSnap, Snapshot, Tier,
 };
 use crate::serve::proto::{hex_decode, hex_encode, QueryKind, Request, ServeError};
 use crate::util::cache::{CacheStats, LruCache};
@@ -416,9 +417,18 @@ impl Service {
         let mut memory =
             rebuild_memory(&snap).map_err(|e| ServeError::Eval(format!("snapshot rejected: {e}")))?;
         let slice = match snap.tier {
-            Tier::Fast => {
+            // Fast and jit snapshots share the decoded cursor space:
+            // a jit-tagged blob resumes under the JIT where the host
+            // supports it and bit-identically under the fast tier
+            // elsewhere.
+            Tier::Fast | Tier::Jit => {
                 let decoded = predecode(&compiled.code).map_err(err)?;
-                run_fast_slice(&decoded, memory.as_dyn(), &snap.state, snap.max_steps, None)
+                if snap.tier == Tier::Jit && jit::available() {
+                    let jp = jit::compile(&decoded).map_err(|e| err(e.into()))?;
+                    run_jit_slice(&jp, memory.as_dyn(), &snap.state, snap.max_steps, None)
+                } else {
+                    run_fast_slice(&decoded, memory.as_dyn(), &snap.state, snap.max_steps, None)
+                }
             }
             Tier::Legacy => {
                 run_legacy_slice(&compiled.code, memory.as_dyn(), &snap.state, snap.max_steps, None)

@@ -13,15 +13,24 @@
 //! any parallelism. The Python port (`python/tests/`) regenerates the
 //! first cases of seed 0 byte-for-byte from the same stream.
 //!
-//! **The oracle rule** (what a future JIT must satisfy to join the
-//! harness): for any program every tier accepts, a tier must produce
-//! the *bit-identical* [`RunStats`] and register file of the legacy
-//! [`Machine`]; for any program that fails at runtime, the
-//! *byte-identical* error string. Implement [`ExecTier`] and append
-//! the tier to [`tiers`] — the harness compares every tier against the
-//! legacy baseline on both [`DirectMemory`] and
-//! [`EmulatedChannelMemory`], and additionally checks that the two
-//! backends agree on the program's result (`r0`) when both halt.
+//! **The oracle rule** (how a tier joins the harness — the baseline
+//! JIT entered exactly this way, as [`JitTier`]): for any program
+//! every tier accepts, a tier must produce the *bit-identical*
+//! [`RunStats`] and register file of the legacy [`Machine`]; for any
+//! program that fails at runtime, the *byte-identical* error string.
+//! Implement [`ExecTier`] and append the tier to [`tiers`] — the
+//! harness compares every tier against the legacy baseline on both
+//! [`DirectMemory`] and [`EmulatedChannelMemory`], and additionally
+//! checks that the two backends agree on the program's result (`r0`)
+//! when both halt. Every 16th case also runs the snapshot-slice
+//! oracle, which pauses under one decoded-pc tier and resumes under
+//! the other (jit→fast and fast→jit, direction drawn from the slice
+//! seed) through the binary snapshot format — so cross-tier
+//! checkpoint migration is fuzzed, not just unit-tested. A fourth
+//! tier would register the same way: implement [`ExecTier`], append
+//! to [`tiers`] (gated on its own availability predicate), and — if
+//! it pauses at op boundaries — add its [`Tier`] tag to the
+//! snapshot-slice direction draw.
 //!
 //! On a divergence the greedy AST [`shrink`]er minimises the case —
 //! dropping statements, unrolling loops to straight line, narrowing
@@ -47,12 +56,14 @@ use crate::cc::ast::{BinOp, Expr, Function, GlobalDecl, Program, Stmt};
 use crate::cc::{compile, Backend};
 use crate::coordinator::point_seed;
 use crate::emulation::{EmulationSetup, SequentialMachine, TopologyKind};
+use crate::isa::jit;
 use crate::isa::snapshot::{
-    fnv1a64, program_fingerprint, rebuild_memory, run_fast_slice, BackendSnap, Snapshot, Tier,
+    convert_tier, fnv1a64, program_fingerprint, rebuild_memory, run_fast_slice, run_jit_slice,
+    BackendSnap, Snapshot, Tier,
 };
 use crate::isa::{
-    predecode, DirectMemory, EmulatedChannelMemory, ExecCursor, FastMachine, Inst, Machine,
-    MemorySystem, RunOutcome, RunStats,
+    predecode, DirectMemory, EmulatedChannelMemory, ExecCursor, FastMachine, Inst, JitMachine,
+    Machine, MemorySystem, RunOutcome, RunStats,
 };
 use crate::util::rng::Rng;
 
@@ -470,7 +481,7 @@ pub fn case_digest(seed: u64, index: u64) -> u64 {
 pub type TierOutcome = Result<(RunStats, [i64; 16]), String>;
 
 /// One execution tier in the differential harness. See the module docs
-/// for the oracle rule a new tier (the future JIT) must satisfy.
+/// for the oracle rule a new tier must satisfy to register here.
 pub trait ExecTier {
     /// Display name (used in divergence reports).
     fn name(&self) -> &'static str;
@@ -535,10 +546,45 @@ impl ExecTier for FastTier {
     }
 }
 
-/// The registered tiers, baseline first. A future JIT appends itself
+/// The baseline JIT: predecode, compile to native code, run. Compile
+/// errors surface as tier errors (and therefore as divergences — the
+/// generator only emits programs every tier must accept).
+pub struct JitTier;
+
+impl ExecTier for JitTier {
+    fn name(&self) -> &'static str {
+        "jit"
+    }
+
+    fn run(
+        &self,
+        program: &[Inst],
+        mem: &mut dyn MemorySystem,
+        local_words: usize,
+        max_steps: u64,
+    ) -> TierOutcome {
+        let decoded = predecode(program).map_err(|e| format!("predecode: {e}"))?;
+        let compiled = jit::compile(&decoded).map_err(|e| format!("jit compile: {e}"))?;
+        let mut mem = mem;
+        let mut m = JitMachine::new(&mut mem, local_words);
+        m.max_steps = max_steps;
+        match m.run(&compiled) {
+            Ok(stats) => Ok((stats, *m.regs())),
+            Err(e) => Err(e.to_string()),
+        }
+    }
+}
+
+/// The registered tiers, baseline first. The JIT registers only where
+/// it can actually run ([`jit::available`]); on other hosts the
+/// lattice is legacy/fast, never a panic. A new tier appends itself
 /// here and inherits the whole differential surface.
 pub fn tiers() -> Vec<Box<dyn ExecTier>> {
-    vec![Box::new(LegacyTier), Box::new(FastTier)]
+    let mut tiers: Vec<Box<dyn ExecTier>> = vec![Box::new(LegacyTier), Box::new(FastTier)];
+    if jit::available() {
+        tiers.push(Box::new(JitTier));
+    }
+    tiers
 }
 
 /// One observed divergence (or generator-side failure).
@@ -677,16 +723,42 @@ impl DiffHarness {
     /// cycle with the full state serialised through the
     /// [`Snapshot`] binary format and a rebuilt memory — both runs
     /// must agree bit-for-bit (stats, registers, error strings).
+    ///
+    /// When the JIT is available the slice *crosses tiers*: the seed
+    /// also draws a direction (jit→fast or fast→jit), the snapshot is
+    /// tagged with the pausing tier, converted with [`convert_tier`]
+    /// (a pure retag between the decoded-pc tiers), and resumed under
+    /// the other tier — so checkpoint migration between interpreter
+    /// and native code is fuzzed with the same bit-identity bar. On
+    /// hosts without the JIT the slice degrades to fast→fast. The
+    /// direction draw is consumed unconditionally so the pause cycle
+    /// is host-independent.
     pub fn check_snapshot_slice(&self, src: &str, slice_seed: u64) -> Result<(), Divergence> {
+        let mut r = Rng::new(slice_seed);
+        let jit_pauses = r.below(2) == 0;
+        let jit_on = jit::available();
+        let (pause_tier, resume_tier) = if jit_on && jit_pauses {
+            (Tier::Jit, Tier::Fast)
+        } else if jit_on {
+            (Tier::Fast, Tier::Jit)
+        } else {
+            (Tier::Fast, Tier::Fast)
+        };
+        let tier_label = format!("{}->{}", pause_tier.label(), resume_tier.label());
         let snap_div = |detail: String| Divergence {
             backend: "snapshot",
-            tier: "fast".into(),
+            tier: tier_label.clone(),
             detail,
         };
         let emulated = compile(src, Backend::Emulated)
             .map_err(|e| snap_div(format!("compile failed: {e}")))?;
         let decoded =
             predecode(&emulated.code).map_err(|e| snap_div(format!("predecode: {e}")))?;
+        let jit_prog = if jit_on {
+            Some(jit::compile(&decoded).map_err(|e| snap_div(format!("jit compile: {e}")))?)
+        } else {
+            None
+        };
 
         // Uninterrupted reference run.
         let mut ref_mem = EmulatedChannelMemory::new(self.setup.clone());
@@ -700,73 +772,99 @@ impl DiffHarness {
             Ok((stats, _)) => stats.cycles,
             Err(_) => 2_000,
         };
-        let mut r = Rng::new(slice_seed);
         let limit = 1 + r.below(total_cycles.max(2));
 
-        // Sliced run: pause at `limit`, freeze through the binary
-        // format, rebuild, resume to completion.
+        // Sliced run: pause under `pause_tier` at `limit`, freeze
+        // through the binary format, convert the cursor tag, rebuild,
+        // resume under `resume_tier` to completion.
         let mut mem = EmulatedChannelMemory::new(self.setup.clone());
-        let sliced: TierOutcome = {
-            let mut paused: Option<Snapshot> = None;
-            let first = {
-                let mut m = FastMachine::new(&mut mem, self.local_words);
-                m.max_steps = self.max_steps;
-                let mut cursor = ExecCursor::default();
-                match m.run_until(&decoded, &mut cursor, Some(limit)) {
-                    Ok(RunOutcome::Halted) => Some(Ok((cursor.stats, *m.regs()))),
-                    Ok(RunOutcome::Paused) => {
-                        let state = m.export_state(&cursor);
-                        paused = Some(Snapshot {
-                            tier: Tier::Fast,
-                            backend: BackendSnap::Emulated {
-                                topo: TopologyKind::Clos,
-                                tiles: self.setup.map.tiles as u64,
-                                mem_kb: self.setup.mem_kb,
-                                k: self.setup.map.k as u64,
-                                shift: self.setup.map.log2_words_per_tile,
-                                rank_cycles: Vec::new(), // filled below
-                            },
-                            space_words: self.direct_space,
-                            max_steps: self.max_steps,
-                            program: "fuzz".into(),
-                            program_fnv: program_fingerprint(&emulated.code),
-                            state,
-                            pages: Vec::new(), // filled below
-                        });
-                        None
-                    }
-                    Err(e) => Some(Err(e.to_string())),
+        let paused_state;
+        let first = if pause_tier == Tier::Jit {
+            let jp = jit_prog.as_ref().expect("jit pause implies a compiled program");
+            let mut m = JitMachine::new(&mut mem, self.local_words);
+            m.max_steps = self.max_steps;
+            let mut cursor = ExecCursor::default();
+            match m.run_until(jp, &mut cursor, Some(limit)) {
+                Ok(RunOutcome::Halted) => {
+                    paused_state = None;
+                    Some(Ok((cursor.stats, *m.regs())))
                 }
-            };
-            match first {
-                Some(done) => done,
-                None => {
-                    let mut snap = paused.expect("paused path sets the snapshot");
-                    snap.backend = BackendSnap::of_emulated(&mem);
-                    snap.pages = Snapshot::pages_of(mem.store());
-                    let bytes = snap.to_bytes();
-                    let snap = Snapshot::from_bytes(&bytes)
-                        .map_err(|e| snap_div(format!("snapshot round-trip: {e}")))?;
-                    snap.check_tier(Tier::Fast)
-                        .map_err(|e| snap_div(e.to_string()))?;
-                    snap.check_program(&emulated.code)
-                        .map_err(|e| snap_div(e.to_string()))?;
-                    let mut rebuilt = rebuild_memory(&snap)
-                        .map_err(|e| snap_div(format!("rebuild: {e}")))?;
-                    let slice = run_fast_slice(
+                Ok(RunOutcome::Paused) => {
+                    paused_state = Some(m.export_state(&cursor));
+                    None
+                }
+                Err(e) => {
+                    paused_state = None;
+                    Some(Err(e.to_string()))
+                }
+            }
+        } else {
+            let mut m = FastMachine::new(&mut mem, self.local_words);
+            m.max_steps = self.max_steps;
+            let mut cursor = ExecCursor::default();
+            match m.run_until(&decoded, &mut cursor, Some(limit)) {
+                Ok(RunOutcome::Halted) => {
+                    paused_state = None;
+                    Some(Ok((cursor.stats, *m.regs())))
+                }
+                Ok(RunOutcome::Paused) => {
+                    paused_state = Some(m.export_state(&cursor));
+                    None
+                }
+                Err(e) => {
+                    paused_state = None;
+                    Some(Err(e.to_string()))
+                }
+            }
+        };
+        let sliced: TierOutcome = match first {
+            Some(done) => done,
+            None => {
+                let state = paused_state.expect("paused path sets the state");
+                let snap = Snapshot {
+                    tier: pause_tier,
+                    backend: BackendSnap::of_emulated(&mem),
+                    space_words: self.direct_space,
+                    max_steps: self.max_steps,
+                    program: "fuzz".into(),
+                    program_fnv: program_fingerprint(&emulated.code),
+                    state,
+                    pages: Snapshot::pages_of(mem.store()),
+                };
+                let bytes = snap.to_bytes();
+                let snap = Snapshot::from_bytes(&bytes)
+                    .map_err(|e| snap_div(format!("snapshot round-trip: {e}")))?;
+                snap.check_tier(pause_tier)
+                    .map_err(|e| snap_div(e.to_string()))?;
+                snap.check_program(&emulated.code)
+                    .map_err(|e| snap_div(e.to_string()))?;
+                let snap = convert_tier(&snap, resume_tier, &decoded)
+                    .map_err(|e| snap_div(format!("tier conversion: {e}")))?;
+                let mut rebuilt = rebuild_memory(&snap)
+                    .map_err(|e| snap_div(format!("rebuild: {e}")))?;
+                let slice = if resume_tier == Tier::Jit {
+                    run_jit_slice(
+                        jit_prog.as_ref().expect("jit resume implies a compiled program"),
+                        rebuilt.as_dyn(),
+                        &snap.state,
+                        snap.max_steps,
+                        None,
+                    )
+                } else {
+                    run_fast_slice(
                         &decoded,
                         rebuilt.as_dyn(),
                         &snap.state,
                         snap.max_steps,
                         None,
-                    );
-                    match slice.outcome {
-                        Ok(true) => Ok((slice.state.stats, slice.state.regs)),
-                        Ok(false) => {
-                            return Err(snap_div("unbounded resume paused".into()))
-                        }
-                        Err(e) => Err(e),
+                    )
+                };
+                match slice.outcome {
+                    Ok(true) => Ok((slice.state.stats, slice.state.regs)),
+                    Ok(false) => {
+                        return Err(snap_div("unbounded resume paused".into()))
                     }
+                    Err(e) => Err(e),
                 }
             }
         };

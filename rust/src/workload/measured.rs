@@ -22,6 +22,7 @@ use crate::emulation::{EmulationSetup, SequentialMachine};
 use crate::isa::decode::{predecode, DecodedProgram, FastMachine};
 use crate::isa::inst::Inst;
 use crate::isa::interp::{DirectMemory, EmulatedChannelMemory, RunStats};
+use crate::isa::jit::{self, JitMachine};
 
 /// Words of DRAM address space given to every direct (sequential) run.
 pub const DIRECT_SPACE_WORDS: u64 = 1 << 20;
@@ -154,6 +155,105 @@ impl CompiledCorpus {
     }
 }
 
+/// One corpus program lowered to native code by the baseline JIT,
+/// for both backends.
+pub struct JitCorpusProgram {
+    /// Program name (from the corpus).
+    pub name: &'static str,
+    /// Expected `main` return value, when the corpus pins one.
+    pub expected: Option<i64>,
+    /// JIT-compiled direct-backend program.
+    pub direct: jit::CompiledProgram,
+    /// JIT-compiled emulated-backend program.
+    pub emulated: jit::CompiledProgram,
+}
+
+/// The corpus compiled once by the baseline JIT ([`crate::isa::jit`]),
+/// reusable across design points exactly like [`CompiledCorpus`].
+/// Construction fails with the typed [`jit::JitError::Unsupported`] on
+/// hosts the compiler does not target — check [`jit::available`]
+/// first when falling back is the right answer.
+pub struct JitCorpus {
+    /// The programs, in corpus order.
+    pub programs: Vec<JitCorpusProgram>,
+}
+
+impl JitCorpus {
+    /// Lower an already-predecoded corpus to native code.
+    pub fn compile(corpus: &CompiledCorpus) -> Result<Self> {
+        let mut programs = Vec::new();
+        for p in &corpus.programs {
+            let direct = jit::compile(&p.direct)
+                .with_context(|| format!("jit-compiling {} (direct)", p.name))?;
+            let emulated = jit::compile(&p.emulated)
+                .with_context(|| format!("jit-compiling {} (emulated)", p.name))?;
+            programs.push(JitCorpusProgram {
+                name: p.name,
+                expected: p.expected,
+                direct,
+                emulated,
+            });
+        }
+        Ok(Self { programs })
+    }
+
+    /// [`CompiledCorpus::measure_one`], on the JIT tier: same fresh
+    /// memories, same result checks, same [`MeasuredRun`] — so a
+    /// caller can compare the two tiers' measurements field for field.
+    pub fn measure_one(
+        &self,
+        index: usize,
+        setup: &EmulationSetup,
+        seq: SequentialMachine,
+    ) -> Result<MeasuredRun> {
+        let p = &self.programs[index];
+        let mut dmem = DirectMemory::new(seq, DIRECT_SPACE_WORDS);
+        let mut dm = JitMachine::new(&mut dmem, LOCAL_WORDS);
+        let direct =
+            dm.run(&p.direct).with_context(|| format!("jit-running {} (direct)", p.name))?;
+        let direct_result = dm.reg(0);
+
+        let mut emem = EmulatedChannelMemory::new(setup.clone());
+        let mut em = JitMachine::new(&mut emem, LOCAL_WORDS);
+        let emulated =
+            em.run(&p.emulated).with_context(|| format!("jit-running {} (emulated)", p.name))?;
+        let emulated_result = em.reg(0);
+
+        ensure!(
+            direct_result == emulated_result,
+            "{}: machines disagree ({direct_result} vs {emulated_result})",
+            p.name
+        );
+        if let Some(want) = p.expected {
+            ensure!(
+                direct_result == want,
+                "{}: wrong result {direct_result} (expected {want})",
+                p.name
+            );
+        }
+        Ok(MeasuredRun {
+            name: p.name,
+            expected: p.expected,
+            direct_result,
+            emulated_result,
+            direct,
+            emulated,
+        })
+    }
+
+    /// Run the whole corpus on the JIT tier for one design point.
+    pub fn measure(
+        &self,
+        setup: &EmulationSetup,
+        seq: SequentialMachine,
+    ) -> Result<CorpusMeasurement> {
+        let runs: Vec<MeasuredRun> = (0..self.programs.len())
+            .map(|i| self.measure_one(i, setup, seq))
+            .collect::<Result<_>>()?;
+        Ok(CorpusMeasurement::from_runs(runs))
+    }
+}
+
 /// One program's measured execution on both machines.
 #[derive(Clone, Copy, Debug)]
 pub struct MeasuredRun {
@@ -230,6 +330,28 @@ mod tests {
         }
         let sd = m.slowdown();
         assert!(sd > 0.5 && sd < 6.0, "aggregate slowdown {sd}");
+    }
+
+    #[test]
+    fn jit_corpus_measurement_is_bit_identical_to_the_fast_tier() {
+        if !jit::available() {
+            eprintln!("skipping: JIT tier unavailable on this host");
+            return;
+        }
+        let corpus = CompiledCorpus::compile().unwrap();
+        let jitted = JitCorpus::compile(&corpus).unwrap();
+        let setup = EmulationSetup::default_tech(TopologyKind::Clos, 1024, 128, 255).unwrap();
+        let seq = SequentialMachine::paper_figures(false);
+        let fast = corpus.measure(&setup, seq).unwrap();
+        let native = jitted.measure(&setup, seq).unwrap();
+        assert_eq!(fast.direct_cycles, native.direct_cycles);
+        assert_eq!(fast.emulated_cycles, native.emulated_cycles);
+        for (a, b) in fast.runs.iter().zip(&native.runs) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.direct, b.direct, "{}", a.name);
+            assert_eq!(a.emulated, b.emulated, "{}", a.name);
+            assert_eq!(a.direct_result, b.direct_result, "{}", a.name);
+        }
     }
 
     #[test]

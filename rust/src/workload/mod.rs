@@ -26,7 +26,7 @@ pub mod synthetic;
 pub mod trace;
 
 pub use fuzzgen::{run_fuzz, DiffHarness, FuzzConfig, FuzzSummary};
-pub use measured::{CompiledCorpus, CorpusMeasurement, MeasuredRun};
+pub use measured::{CompiledCorpus, CorpusMeasurement, JitCorpus, MeasuredRun};
 pub use mixes::{InstructionMix, COMPILER_MIX, DHRYSTONE_MIX};
 pub use synthetic::{predict_slowdown, SyntheticProgram};
 pub use trace::{capture_corpus_program, RecordingMemory, Trace, TracePattern};

@@ -57,6 +57,8 @@ fn misuse_matrix_is_typed_with_exit_code_2() {
         ("snapshot save --program nosuch --at 100", "unknown program `nosuch`"),
         ("snapshot save --program sieve --at 100 --backend weird", "--backend"),
         ("snapshot resume", "needs --in"),
+        ("run sieve --tier warp", "flag --tier"),
+        ("run sieve --legacy --tier jit", "conflicts with --tier"),
     ] {
         let err = usage_err(line);
         let msg = format!("{err:#}");
@@ -104,6 +106,24 @@ fn valid_commands_still_succeed() {
     run("tables --which 3").expect("tables");
     run("area --topo clos --tiles 256").expect("area");
     run("latency --mode exact --tiles 256 --k 63 --json").expect("latency");
+}
+
+#[test]
+fn explicit_jit_tier_is_honest_about_the_host() {
+    // `--tier jit` is an explicit request, so it must either run (on
+    // hosts the baseline compiler targets) or fail as a typed RUNTIME
+    // error (exit 1) naming the tier — never a silent fallback, and
+    // never command-line misuse.
+    if memclos::isa::jit::available() {
+        run("run sum_squares --tier jit").expect("jit tier runs on a supported host");
+        run("run sum_squares --tier auto").expect("auto tier");
+    } else {
+        let err = run("run sum_squares --tier jit").expect_err("jit tier must refuse");
+        assert_eq!(exit_code(&err), 1, "unsupported host is runtime, not misuse: {err:#}");
+        assert!(format!("{err:#}").contains("JIT tier unsupported"), "{err:#}");
+        // `auto` degrades to the fast tier instead of failing.
+        run("run sum_squares --tier auto").expect("auto tier falls back");
+    }
 }
 
 #[test]

@@ -3,7 +3,12 @@
 //! snapshot format, rebuilding the memory from the recorded identity,
 //! and resuming must reproduce the uninterrupted run exactly — same
 //! `RunStats`, same register file, same error string on failure — on
-//! both interpreter tiers and both memory backends.
+//! every execution tier (legacy, fast, and — where the host supports
+//! it — the baseline JIT) and both memory backends. Cross-tier
+//! migration is a property too: a checkpoint exported from any tier
+//! converts ([`convert_tier`]) and resumes under any other tier with
+//! identical results, while an *unconverted* wrong-tier tag keeps
+//! failing with the typed [`SnapshotError::WrongTier`].
 
 use memclos::cc::{compile, corpus, Backend};
 use memclos::cli::driver;
@@ -12,9 +17,10 @@ use memclos::isa::decode::{predecode, DecodedProgram};
 use memclos::isa::interp::{
     DirectMemory, EmulatedChannelMemory, MachineState, MemorySystem,
 };
+use memclos::isa::jit;
 use memclos::isa::snapshot::{
-    program_fingerprint, rebuild_memory, run_fast_slice, run_legacy_slice, BackendSnap,
-    SliceRun, Snapshot, Tier,
+    convert_tier, program_fingerprint, rebuild_memory, run_fast_slice, run_jit_slice,
+    run_legacy_slice, BackendSnap, SliceRun, Snapshot, SnapshotError, Tier,
 };
 use memclos::isa::Inst;
 use memclos::util::rng::Rng;
@@ -77,6 +83,16 @@ impl Backing {
     }
 }
 
+/// Every tier this host can run (the JIT registers itself only where
+/// [`jit::available`] holds — elsewhere the lattice is legacy/fast).
+fn available_tiers() -> Vec<Tier> {
+    let mut tiers = vec![Tier::Legacy, Tier::Fast];
+    if jit::available() {
+        tiers.push(Tier::Jit);
+    }
+    tiers
+}
+
 fn run_slice(
     tier: Tier,
     code: &[Inst],
@@ -87,6 +103,10 @@ fn run_slice(
 ) -> SliceRun {
     match tier {
         Tier::Fast => run_fast_slice(decoded, mem, state, MAX_STEPS, limit),
+        Tier::Jit => {
+            let native = jit::compile(decoded).expect("jit tier only runs where available");
+            run_jit_slice(&native, mem, state, MAX_STEPS, limit)
+        }
         Tier::Legacy => run_legacy_slice(code, mem, state, MAX_STEPS, limit),
     }
 }
@@ -145,7 +165,7 @@ fn random_checkpoints_resume_bit_identically_across_tiers_and_backends() {
         {
             let code = compile(prog.source, cc_backend).unwrap().code;
             let decoded = predecode(&code).unwrap();
-            for tier in [Tier::Legacy, Tier::Fast] {
+            for tier in available_tiers() {
                 // Uninterrupted reference run.
                 let mut backing = Backing::new(mem_kind);
                 let reference =
@@ -186,6 +206,120 @@ fn random_checkpoints_resume_bit_identically_across_tiers_and_backends() {
 }
 
 #[test]
+fn cross_tier_checkpoints_migrate_bit_identically() {
+    // The migration property: a checkpoint exported from tier A,
+    // serialised through the binary format, *converted* with
+    // `convert_tier`, and resumed under tier B finishes with the
+    // identical RunStats and register file. Fast ↔ jit share the
+    // decoded cursor space (a pure retag, must never refuse); legacy
+    // checkpoints can land inside a fused channel sequence or
+    // mid-transaction, where conversion refuses with a typed,
+    // field-named error instead of guessing.
+    let programs = ["sum_squares", "sieve"];
+    let mut r = Rng::new(0x5EED_0003);
+    let tiers = available_tiers();
+    for name in programs {
+        let prog = corpus::all().into_iter().find(|p| p.name == name).unwrap();
+        for (mem_kind, cc_backend) in
+            [(Mem::Direct, Backend::Direct), (Mem::Emulated, Backend::Emulated)]
+        {
+            let code = compile(prog.source, cc_backend).unwrap().code;
+            let decoded = predecode(&code).unwrap();
+            // All tiers are bit-identical, so one reference serves.
+            let mut backing = Backing::new(mem_kind);
+            let reference = run_slice(Tier::Fast, &code, &decoded, backing.as_dyn(), &blank(), None);
+            assert_eq!(reference.outcome, Ok(true), "{name}: reference must halt");
+            let total = reference.state.stats.cycles;
+            for &from in &tiers {
+                for &to in &tiers {
+                    if from == to {
+                        continue;
+                    }
+                    let ctx = || format!("{name}/{}->{}", from.label(), to.label());
+                    // Legacy checkpoints on the emulated backend often
+                    // land mid-transaction or inside a fused channel
+                    // sequence, where conversion (correctly) refuses —
+                    // give those pairs more draws to find convertible
+                    // pause points.
+                    let attempts =
+                        if from == Tier::Legacy || to == Tier::Legacy { 12 } else { 4 };
+                    let mut migrated = 0usize;
+                    for _ in 0..attempts {
+                        if migrated >= 2 {
+                            break;
+                        }
+                        let checkpoint = 1 + r.below(total - 1);
+                        let mut b = Backing::new(mem_kind);
+                        let part1 = run_slice(
+                            from, &code, &decoded, b.as_dyn(), &blank(), Some(checkpoint),
+                        );
+                        match &part1.outcome {
+                            Ok(false) => {} // paused at the budget
+                            Ok(true) => continue, // the last op crossed the finish line
+                            Err(e) => {
+                                panic!("{}: first slice errored before the checkpoint: {e}", ctx())
+                            }
+                        }
+                        let (backend, space_words, pages) = b.capture();
+                        let snap = Snapshot {
+                            tier: from,
+                            backend,
+                            space_words,
+                            max_steps: MAX_STEPS,
+                            program: name.to_string(),
+                            program_fnv: program_fingerprint(&code),
+                            state: part1.state,
+                            pages,
+                        };
+                        let reparsed = Snapshot::from_bytes(&snap.to_bytes()).unwrap();
+                        // The UNCONVERTED tag still refuses the other
+                        // tier, typed — conversion is explicit, never
+                        // implied by the importer.
+                        match reparsed.check_tier(to) {
+                            Err(SnapshotError::WrongTier { found, want }) => {
+                                assert_eq!(found, from.label(), "{}", ctx());
+                                assert_eq!(want, to.label(), "{}", ctx());
+                            }
+                            other => panic!("{}: check_tier must refuse: {other:?}", ctx()),
+                        }
+                        let converted = match convert_tier(&reparsed, to, &decoded) {
+                            Ok(c) => c,
+                            Err(SnapshotError::Field { field, .. }) => {
+                                assert!(
+                                    from == Tier::Legacy || to == Tier::Legacy,
+                                    "{}: decoded-pc tiers must always retag, refused on `{field}`",
+                                    ctx()
+                                );
+                                continue;
+                            }
+                            Err(e) => panic!("{}: unexpected conversion error: {e}", ctx()),
+                        };
+                        converted.check_tier(to).unwrap();
+                        let mut rebuilt = rebuild_memory(&converted).unwrap();
+                        let resumed = run_slice(
+                            to, &code, &decoded, rebuilt.as_dyn(), &converted.state, None,
+                        );
+                        assert_eq!(resumed.outcome, Ok(true), "{}: resume did not halt", ctx());
+                        assert_eq!(
+                            resumed.state.stats, reference.state.stats,
+                            "{}: stats diverge after migration",
+                            ctx()
+                        );
+                        assert_eq!(
+                            resumed.state.regs, reference.state.regs,
+                            "{}: registers diverge after migration",
+                            ctx()
+                        );
+                        migrated += 1;
+                    }
+                    assert!(migrated > 0, "{}: no checkpoint migrated", ctx());
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn resuming_a_failing_run_reproduces_the_error_string_exactly() {
     // A program that trips the step limit: pausing and resuming must
     // reproduce the uninterrupted error string byte for byte (the step
@@ -198,26 +332,29 @@ fn resuming_a_failing_run_reproduces_the_error_string_exactly() {
     {
         let code = compile(src, cc_backend).unwrap().code;
         let decoded = predecode(&code).unwrap();
-        for tier in [Tier::Legacy, Tier::Fast] {
-            let mut backing = Backing::new(mem_kind);
-            let reference = match tier {
-                Tier::Fast => run_fast_slice(&decoded, backing.as_dyn(), &blank(), max_steps, None),
-                Tier::Legacy => run_legacy_slice(&code, backing.as_dyn(), &blank(), max_steps, None),
+        for tier in available_tiers() {
+            let slice = |mem: &mut dyn MemorySystem,
+                         state: &MachineState,
+                         limit: Option<u64>|
+             -> SliceRun {
+                match tier {
+                    Tier::Fast => run_fast_slice(&decoded, mem, state, max_steps, limit),
+                    Tier::Jit => {
+                        let native = jit::compile(&decoded).unwrap();
+                        run_jit_slice(&native, mem, state, max_steps, limit)
+                    }
+                    Tier::Legacy => run_legacy_slice(&code, mem, state, max_steps, limit),
+                }
             };
+            let mut backing = Backing::new(mem_kind);
+            let reference = slice(backing.as_dyn(), &blank(), None);
             let want = reference.outcome.clone().expect_err("must hit the step limit");
             assert_eq!(want, format!("step limit exceeded ({max_steps})"));
 
             // Pause somewhere before the limit, snapshot, resume.
             let checkpoint = 1 + r.below(max_steps / 2);
             let mut b2 = Backing::new(mem_kind);
-            let part1 = match tier {
-                Tier::Fast => {
-                    run_fast_slice(&decoded, b2.as_dyn(), &blank(), max_steps, Some(checkpoint))
-                }
-                Tier::Legacy => {
-                    run_legacy_slice(&code, b2.as_dyn(), &blank(), max_steps, Some(checkpoint))
-                }
-            };
+            let part1 = slice(b2.as_dyn(), &blank(), Some(checkpoint));
             assert_eq!(part1.outcome, Ok(false), "must pause before the step limit");
             let (backend, space_words, pages) = b2.capture();
             let snap = Snapshot {
@@ -232,22 +369,7 @@ fn resuming_a_failing_run_reproduces_the_error_string_exactly() {
             };
             let reparsed = Snapshot::from_bytes(&snap.to_bytes()).unwrap();
             let mut rebuilt = rebuild_memory(&reparsed).unwrap();
-            let resumed = match tier {
-                Tier::Fast => run_fast_slice(
-                    &decoded,
-                    rebuilt.as_dyn(),
-                    &reparsed.state,
-                    reparsed.max_steps,
-                    None,
-                ),
-                Tier::Legacy => run_legacy_slice(
-                    &code,
-                    rebuilt.as_dyn(),
-                    &reparsed.state,
-                    reparsed.max_steps,
-                    None,
-                ),
-            };
+            let resumed = slice(rebuilt.as_dyn(), &reparsed.state, None);
             let got = resumed.outcome.expect_err("resumed run must fail the same way");
             assert_eq!(got, want, "{}: error strings must be bit-identical", tier.label());
         }
